@@ -1,0 +1,70 @@
+//! Disaggregated two-node cluster demo (paper §III.C / Fig 3): runs the
+//! live Unique-node/Shared-node split over a batch sweep and prints the
+//! per-node traffic profile — the measured counterpart of Fig 5.
+//!
+//! ```bash
+//! cargo run --release --example disaggregated_cluster -- --batches 1,4,16,32
+//! ```
+
+use std::sync::Arc;
+
+use moska::disagg::DisaggCluster;
+use moska::kvcache::shared_store::SharedStore;
+use moska::model::Weights;
+use moska::runtime::{artifact::default_artifacts_dir, Backend, Manifest,
+                     NativeBackend};
+use moska::util::bench::{fmt_bytes, fmt_si, Table};
+use moska::util::cli::Cli;
+
+fn main() -> moska::Result<()> {
+    moska::util::logging::init();
+    let args = Cli::new("disaggregated_cluster", "two-node live sim")
+        .opt("batches", "1,4,16,32", "comma-separated batch sizes")
+        .opt("steps", "8", "decode steps per point")
+        .opt("domain", "legal", "shared domain")
+        .opt("top-k", "16", "router top-k (0 = dense)")
+        .parse()?;
+
+    let dir = default_artifacts_dir();
+    let man = Manifest::load(&dir)?;
+    let shared = Arc::new(SharedStore::load_from_manifest(&man)?);
+    let top_k = match args.usize("top-k")? {
+        0 => None,
+        k => Some(k),
+    };
+    let domain = args.str("domain")?;
+    let steps = args.usize("steps")?;
+
+    let mut t = Table::new(&[
+        "batch", "step_mean", "shared_bytes", "unique_bytes",
+        "shared_flops", "gemm_N", "shared_busy",
+    ]);
+    for b in args.str("batches")?.split(',') {
+        let b: usize = b.trim().parse()?;
+        let backend: Arc<dyn Backend> =
+            Arc::new(NativeBackend::new(man.model.clone(), man.chunk));
+        let weights = Weights::load(
+            man.weights_path().to_str().unwrap(), man.model.clone(),
+        )?;
+        let mut cluster = DisaggCluster::new(
+            backend, weights, Arc::clone(&shared), top_k, 32,
+        );
+        let p = cluster.run_point(b, &domain, 96, steps)?;
+        t.row(vec![
+            b.to_string(),
+            format!("{:?}", p.mean_step),
+            fmt_bytes(p.shared_bytes_per_step),
+            fmt_bytes(p.unique_bytes_per_step),
+            fmt_si(p.shared_flops_per_step),
+            format!("{:.2}", p.batching_factor),
+            format!("{:.0}%", p.shared_busy_frac * 100.0),
+        ]);
+    }
+    t.print("Disaggregated cluster — per-node profile per decode step");
+    println!(
+        "\nreading: shared bytes/step ~flat (cache read once per batch), \
+         unique bytes/step ~linear in B, gemm_N → B as sharing increases \
+         — the live Fig 5 behaviour."
+    );
+    Ok(())
+}

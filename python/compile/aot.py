@@ -1,0 +1,300 @@
+"""AOT compile path: lower every L2/L1 graph to HLO *text* artifacts.
+
+Run once by `make artifacts` (python is never on the request path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits (DESIGN.md §3):
+    artifacts/hlo/<name>.hlo.txt      one per (op, batch-bucket)
+    artifacts/manifest.json           artifact registry (shapes, dtypes)
+    artifacts/weights/tiny.bin(+json) moska-tiny weights (runtime inputs)
+    artifacts/shared/<domain>.bin     precomputed Domain Shared KV stores
+    artifacts/golden/*.json           reference vectors for rust tests
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the rust `xla` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import binio, model, weights as weights_mod
+from .configs import ARTIFACTS, DOMAINS, TINY
+from .corpus import domain_tokens
+from .kernels import chunk_attn, merge2, ref, router_score
+from .sharedkv import build_domain
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_specs():
+    """Yield (name, fn, [(arg_name, shape, dtype)...]) for every artifact."""
+    cfg, a = TINY, ARTIFACTS
+    d, h, hkv, dh, v, f = (
+        cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+        cfg.vocab, cfg.ffn_dim,
+    )
+    c = a.chunk
+    out = []
+    for b in a.batch_buckets:
+        out.append((
+            f"embed_b{b}", model.embed_fn,
+            [("tokens", (b,), I32), ("emb", (v, d), F32)],
+        ))
+        out.append((
+            f"qkv_b{b}", functools.partial(model.qkv_fn, cfg),
+            [
+                ("x", (b, d), F32), ("attn_norm", (d,), F32),
+                ("wq", (d, h * dh), F32), ("wk", (d, hkv * dh), F32),
+                ("wv", (d, hkv * dh), F32), ("pos", (b,), I32),
+            ],
+        ))
+        for ct in a.attn_token_buckets:
+            out.append((
+                f"chunk_attn_b{b}_c{ct}", model.chunk_attn_fn,
+                [
+                    ("q", (b, h, dh), F32), ("k", (ct, hkv, dh), F32),
+                    ("v", (ct, hkv, dh), F32), ("q_pos", (b,), I32),
+                    ("k_base", (1,), I32), ("valid", (1,), I32),
+                ],
+            ))
+        out.append((
+            f"post_b{b}", functools.partial(model.post_fn, cfg),
+            [
+                ("attn_o", (b, h, dh), F32), ("x", (b, d), F32),
+                ("wo", (h * dh, d), F32), ("ffn_norm", (d,), F32),
+                ("w1", (d, f), F32), ("w3", (d, f), F32),
+                ("w2", (f, d), F32),
+            ],
+        ))
+        out.append((
+            f"lm_head_b{b}", functools.partial(model.lm_head_fn, cfg),
+            [
+                ("x", (b, d), F32), ("final_norm", (d,), F32),
+                ("w_lm", (d, v), F32),
+            ],
+        ))
+        out.append((
+            f"merge2_b{b}",
+            lambda o1, m1, l1, o2, m2, l2: tuple(
+                merge2(o1, m1, l1, o2, m2, l2, interpret=True)
+            ),
+            [
+                ("o1", (b, h, dh), F32), ("m1", (b, h), F32),
+                ("l1", (b, h), F32), ("o2", (b, h, dh), F32),
+                ("m2", (b, h), F32), ("l2", (b, h), F32),
+            ],
+        ))
+        for nc in a.router_chunk_buckets:
+            out.append((
+                f"router_b{b}_c{nc}",
+                lambda q, embs: (router_score(q, embs, interpret=True),),
+                [("q", (b, h, dh), F32), ("embs", (nc, hkv, dh), F32)],
+            ))
+    return out
+
+
+def lower_all(out_dir: str) -> list:
+    """Lower every artifact; return manifest entries."""
+    hlo_dir = os.path.join(out_dir, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    entries = []
+    for name, fn, args in artifact_specs():
+        t0 = time.time()
+        in_specs = [spec(s, dt) for (_, s, dt) in args]
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"hlo/{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *in_specs)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {
+                        "name": an,
+                        "dtype": "i32" if dt == I32 else "f32",
+                        "shape": list(s),
+                    }
+                    for (an, s, dt) in args
+                ],
+                "outputs": [
+                    {
+                        "dtype": "i32" if o.dtype == np.int32 else "f32",
+                        "shape": list(o.shape),
+                    }
+                    for o in outs
+                ],
+            }
+        )
+        print(f"  lowered {name:<22} {len(text)/1024:8.1f} KiB "
+              f"({time.time() - t0:.2f}s)")
+    return entries
+
+
+def write_goldens(out_dir: str, w: dict) -> None:
+    """Reference vectors for the rust test suite (DESIGN.md §3 goldens)."""
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    cfg, a = TINY, ARTIFACTS
+    rng = np.random.default_rng(a.golden_seed)
+
+    # -- kernel-level golden: chunk_attn + router + merge on random inputs.
+    b, c = 4, a.chunk
+    q = rng.standard_normal((b, cfg.n_heads, cfg.head_dim)).astype(np.float32)
+    k = rng.standard_normal((c, cfg.n_kv_heads, cfg.head_dim)).astype(np.float32)
+    v = rng.standard_normal((c, cfg.n_kv_heads, cfg.head_dim)).astype(np.float32)
+    q_pos = np.array([100, 130, 64, -1], dtype=np.int32)
+    k_base = np.array([64], dtype=np.int32)
+    valid = np.array([c], dtype=np.int32)
+    o, m, l = ref.chunk_attn_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        jnp.asarray(q_pos), jnp.asarray(k_base), jnp.asarray(valid),
+    )
+    embs = rng.standard_normal(
+        (16, cfg.n_kv_heads, cfg.head_dim)
+    ).astype(np.float32)
+    scores = ref.router_score_ref(jnp.asarray(q), jnp.asarray(embs))
+
+    def flat(x):
+        arr = np.asarray(x, dtype=np.float32)
+        # JSON has no -inf literal; the rust loader maps this sentinel back.
+        arr = np.where(np.isneginf(arr), -3.0e38, arr)
+        return [float(t) for t in arr.reshape(-1)]
+
+    with open(os.path.join(gdir, "kernels.json"), "w") as f:
+        json.dump(
+            {
+                "chunk_attn": {
+                    "q": flat(q), "k": flat(k), "v": flat(v),
+                    "q_pos": [int(t) for t in q_pos],
+                    "k_base": int(k_base[0]), "valid": int(valid[0]),
+                    "o": flat(o), "m": flat(m), "l": flat(l),
+                },
+                "router": {
+                    "q": flat(q), "embs": flat(embs), "scores": flat(scores),
+                },
+            },
+            f,
+        )
+
+    # -- engine-level golden: greedy decode, prompt only.
+    prompt = [int(t) for t in rng.integers(0, cfg.vocab, size=12)]
+    toks, logits = model.decode_greedy_ref(cfg, w, prompt, 4)
+    with open(os.path.join(gdir, "decode_prompt.json"), "w") as f:
+        json.dump(
+            {
+                "prompt": prompt,
+                "tokens": toks,
+                "logits": [flat(x) for x in logits],
+            },
+            f,
+        )
+
+    # -- engine-level golden: greedy decode over a shared domain context.
+    dom = next(d for d in DOMAINS if d.name == "code")
+    shared = [int(t) for t in domain_tokens(dom, cfg.vocab)]
+    prompt2 = [int(t) for t in rng.integers(0, cfg.vocab, size=9)]
+    toks2, logits2 = model.decode_greedy_ref(cfg, w, shared + prompt2, 4)
+    with open(os.path.join(gdir, "decode_shared.json"), "w") as f:
+        json.dump(
+            {
+                "domain": dom.name,
+                "shared_tokens": dom.tokens,
+                "prompt": prompt2,
+                "tokens": toks2,
+                "logits": [flat(x) for x in logits2],
+            },
+            f,
+        )
+    print(f"  goldens: kernels.json decode_prompt.json decode_shared.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-shared", action="store_true",
+                    help="skip domain KV precompute (fast iteration)")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    print("== weights ==")
+    w = weights_mod.generate(TINY, ARTIFACTS.weight_seed)
+    binio.save_store(os.path.join(out, "weights", "tiny.bin"), w)
+    wj = {k: list(v.shape) for k, v in w.items()}
+    n_params = sum(int(np.prod(s)) for s in wj.values())
+    print(f"  {len(w)} tensors, {n_params} params")
+
+    print("== HLO artifacts ==")
+    entries = lower_all(out)
+
+    print("== shared domain KV stores ==")
+    domains_meta = []
+    if not args.skip_shared:
+        for spec_ in DOMAINS:
+            store = build_domain(TINY, w, spec_)
+            binio.save_store(
+                os.path.join(out, "shared", f"{spec_.name}.bin"), store
+            )
+            nc = spec_.tokens // ARTIFACTS.chunk
+            domains_meta.append(
+                {"name": spec_.name, "tokens": spec_.tokens, "chunks": nc,
+                 "file": f"shared/{spec_.name}.bin"}
+            )
+            print(f"  {spec_.name}: {spec_.tokens} tokens, {nc} chunks")
+
+    print("== goldens ==")
+    if not args.skip_golden:
+        write_goldens(out, w)
+
+    manifest = {
+        "model": {
+            "vocab": TINY.vocab, "d_model": TINY.d_model,
+            "n_layers": TINY.n_layers, "n_heads": TINY.n_heads,
+            "n_kv_heads": TINY.n_kv_heads, "head_dim": TINY.head_dim,
+            "ffn_dim": TINY.ffn_dim, "rope_theta": TINY.rope_theta,
+            "rms_eps": TINY.rms_eps,
+        },
+        "chunk": ARTIFACTS.chunk,
+        "batch_buckets": list(ARTIFACTS.batch_buckets),
+        "router_chunk_buckets": list(ARTIFACTS.router_chunk_buckets),
+        "attn_token_buckets": list(ARTIFACTS.attn_token_buckets),
+        "weights": "weights/tiny.bin",
+        "domains": domains_meta,
+        "artifacts": entries,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"== manifest: {len(entries)} artifacts ==")
+
+
+if __name__ == "__main__":
+    main()

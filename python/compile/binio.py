@@ -1,0 +1,59 @@
+"""Binary tensor container shared with the rust side (`util/bin.rs`).
+
+Layout: one raw little-endian `.bin` blob + a sibling `.json` manifest:
+
+    {"tensors": [{"name": str, "dtype": "f32"|"i32",
+                  "shape": [int...], "offset": int_bytes}]}
+
+Tensors are stored back-to-back in manifest order, row-major, no padding.
+"""
+
+import json
+import os
+
+import numpy as np
+
+_DTYPES = {"f32": np.float32, "i32": np.int32}
+_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32"}
+
+
+def save_store(path_bin: str, tensors: dict) -> None:
+    """Write `{name: ndarray}` to `path_bin` + `path_bin[:-4] + '.json'`."""
+    assert path_bin.endswith(".bin"), path_bin
+    os.makedirs(os.path.dirname(path_bin), exist_ok=True)
+    manifest = []
+    offset = 0
+    with open(path_bin, "wb") as f:
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _NAMES:
+                raise ValueError(f"unsupported dtype {arr.dtype} for {name}")
+            data = arr.tobytes()
+            manifest.append(
+                {
+                    "name": name,
+                    "dtype": _NAMES[arr.dtype],
+                    "shape": list(arr.shape),
+                    "offset": offset,
+                }
+            )
+            f.write(data)
+            offset += len(data)
+    with open(path_bin[:-4] + ".json", "w") as f:
+        json.dump({"tensors": manifest}, f, indent=1)
+
+
+def load_store(path_bin: str) -> dict:
+    """Read a store written by `save_store` back into `{name: ndarray}`."""
+    with open(path_bin[:-4] + ".json") as f:
+        manifest = json.load(f)["tensors"]
+    out = {}
+    with open(path_bin, "rb") as f:
+        blob = f.read()
+    for ent in manifest:
+        dt = _DTYPES[ent["dtype"]]
+        n = int(np.prod(ent["shape"])) if ent["shape"] else 1
+        start = ent["offset"]
+        arr = np.frombuffer(blob, dtype=dt, count=n, offset=start)
+        out[ent["name"]] = arr.reshape(ent["shape"]).copy()
+    return out

@@ -1,0 +1,71 @@
+"""Model + artifact configuration shared across the compile path.
+
+`moska-tiny` is the laptop-scale Llama-style substrate (DESIGN.md §3): the
+live serving system runs this model through AOT-compiled XLA artifacts. The
+paper's Llama-3.1-8B shapes live in the rust analytical model, not here.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    """moska-tiny architecture (GQA + RoPE + SwiGLU, f32)."""
+
+    vocab: int = 256          # byte-level tokenizer
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4          # query heads
+    n_kv_heads: int = 2       # GQA key/value heads
+    head_dim: int = 16
+    ffn_dim: int = 192
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+@dataclass(frozen=True)
+class ArtifactConfig:
+    """Static-shape bucketing for the AOT artifacts (DESIGN.md §3)."""
+
+    chunk: int = 64                                   # tokens per KV chunk
+    batch_buckets: tuple = (1, 2, 4, 8, 16, 32)       # live-batch buckets
+    router_chunk_buckets: tuple = (16, 64, 256)       # routed chunk counts
+    # chunk_attn token buckets: the coordinator coalesces runs of
+    # consecutive chunks into one kernel call (§Perf opt 2) — these are
+    # the compiled K/V lengths it can target.
+    attn_token_buckets: tuple = (64, 256, 1024)
+    weight_seed: int = 42
+    golden_seed: int = 1234
+
+
+@dataclass(frozen=True)
+class DomainSpec:
+    """A synthetic shared-context domain (DESIGN.md §6 substitutions)."""
+
+    name: str
+    tokens: int            # total shared context length (multiple of chunk)
+    seed: int
+
+
+TINY = TinyConfig()
+ARTIFACTS = ArtifactConfig()
+
+# Shared domain corpora: deterministic synthetic token streams standing in
+# for the paper's "laws / medical cases / boilerplate code" KV libraries.
+DOMAINS = (
+    DomainSpec("legal", 4096, 101),
+    DomainSpec("medical", 2048, 202),
+    DomainSpec("code", 1024, 303),
+)

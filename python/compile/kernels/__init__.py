@@ -1,0 +1,8 @@
+"""L1 Pallas kernels + pure-jnp oracles (see each module's docstring)."""
+
+from .chunk_attn import chunk_attn
+from .merge import merge2
+from .router import router_score
+from . import ref
+
+__all__ = ["chunk_attn", "merge2", "router_score", "ref"]

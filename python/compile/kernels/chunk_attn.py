@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: Shared-KV chunk attention (the paper's §III.A hot spot).
+
+One call computes the attention partials of B concurrent queries against ONE
+shared KV chunk. B is the paper's batching dimension: instead of B
+memory-bound GEMVs (one per request), the chunk's K/V tile is loaded once
+and all B queries stream through a single GEMM — arithmetic intensity grows
+linearly with B, which is exactly the Fig 1(b)/Fig 4 bandwidth argument.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): BlockSpec keeps the chunk's
+K/V resident (one HBM→VMEM load per grid row) while the grid walks query
+tiles; the two einsums lower to `dot_general`, i.e. MXU work on real
+hardware. On this image the kernel must run `interpret=True` (CPU PJRT
+cannot execute Mosaic custom-calls), so correctness is validated here and
+structure (VMEM footprint / reuse factor) is analyzed statically in
+EXPERIMENTS.md §Perf.
+
+Masking unifies every attention call in the system:
+  * `valid`  — number of real tokens in the chunk (tail chunks).
+  * `q_pos`/`k_base` — absolute positions; key j is visible iff
+    `k_base + j <= q_pos[b]` (causality, incl. chunked prefill).
+  * `q_pos[b] < 0` — padding row (batch-bucket padding): fully masked,
+    produces (o=0, m=-inf, l=0) which is the LSE-merge identity.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+# Query-tile height. 8 rows keeps the padded-lane waste bounded for the
+# small buckets while still tiling the big ones; see §Perf for the sweep.
+Q_TILE = 8
+
+
+def _kernel(q_ref, qpos_ref, k_ref, v_ref, kbase_ref, valid_ref,
+            o_ref, m_ref, l_ref, *, group: int):
+    """One grid step: a (Q_TILE, H, dh) query tile vs the whole chunk."""
+    q = q_ref[...]                      # [T, H, dh]
+    k = k_ref[...]                      # [C, Hkv, dh]
+    v = v_ref[...]
+    q_pos = qpos_ref[...]               # [T] i32
+    k_base = kbase_ref[0]
+    valid = valid_ref[0]
+
+    t, h, dh = q.shape
+    c, hkv, _ = k.shape
+    qg = q.reshape(t, hkv, group, dh)
+    scale = (1.0 / jnp.sqrt(jnp.float32(dh))).astype(jnp.float32)
+
+    # The Shared-KV GEMM (MXU dot on real TPU): K loaded once for all rows.
+    scores = jnp.einsum(
+        "bkgd,ckd->bkgc", qg, k, preferred_element_type=jnp.float32
+    ) * scale                           # [T, Hkv, group, C]
+
+    j = jax.lax.broadcasted_iota(jnp.int32, (t, c), 1)
+    allowed = (j < valid) & (k_base + j <= q_pos[:, None]) & (
+        q_pos[:, None] >= 0
+    )
+    scores = jnp.where(allowed[:, None, None, :], scores, NEG_INF)
+
+    m = jnp.max(scores, axis=-1)        # [T, Hkv, group]
+    p = jnp.where(jnp.isfinite(scores), jnp.exp(scores - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum(
+        "bkgc,ckd->bkgd", p, v, preferred_element_type=jnp.float32
+    )
+
+    o_ref[...] = o.reshape(t, h, dh).astype(jnp.float32)
+    m_ref[...] = m.reshape(t, h).astype(jnp.float32)
+    l_ref[...] = l.reshape(t, h).astype(jnp.float32)
+
+
+def chunk_attn(q, k, v, q_pos, k_base, valid, *, interpret=True):
+    """Pallas Shared-KV chunk attention; signature mirrors `ref.chunk_attn_ref`.
+
+    q f32[B,H,dh], k/v f32[C,Hkv,dh], q_pos i32[B], k_base i32[1],
+    valid i32[1] → (o f32[B,H,dh], m f32[B,H], l f32[B,H]).
+    """
+    b, h, dh = q.shape
+    c, hkv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    t = min(b, Q_TILE)
+    assert b % t == 0, f"batch {b} not divisible by query tile {t}"
+    grid = (b // t,)
+
+    kern = functools.partial(_kernel, group=group)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, h, dh), lambda i: (i, 0, 0)),       # q tile
+            pl.BlockSpec((t,), lambda i: (i,)),                  # q_pos tile
+            pl.BlockSpec((c, hkv, dh), lambda i: (0, 0, 0)),     # K: resident
+            pl.BlockSpec((c, hkv, dh), lambda i: (0, 0, 0)),     # V: resident
+            pl.BlockSpec((1,), lambda i: (0,)),                  # k_base
+            pl.BlockSpec((1,), lambda i: (0,)),                  # valid
+        ],
+        out_specs=[
+            pl.BlockSpec((t, h, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t, h), lambda i: (i, 0)),
+            pl.BlockSpec((t, h), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, q_pos, k, v, k_base, valid)

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: pairwise LSE merge of attention partials.
+
+Combines two unnormalized chunk partials (o, m, l) into one — the
+flash-attention combine step. The rust coordinator merges arbitrary arity
+natively (`attention/merge.rs`, same algebra); this kernel is the in-graph
+variant used when the merge is fused into an artifact, and the oracle for
+both lives in `ref.merge2_ref`.
+
+The -inf bookkeeping matters: a fully-masked partial has (m=-inf, l=0) and
+must behave as the merge identity — `where(isfinite(m), exp(m-m*), 0)`
+avoids the `exp(-inf - -inf) = nan` trap.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(o1_ref, m1_ref, l1_ref, o2_ref, m2_ref, l2_ref,
+            o_ref, m_ref, l_ref):
+    m1, m2 = m1_ref[...], m2_ref[...]
+    m = jnp.maximum(m1, m2)
+    s1 = jnp.where(jnp.isfinite(m1), jnp.exp(m1 - m), 0.0)
+    s2 = jnp.where(jnp.isfinite(m2), jnp.exp(m2 - m), 0.0)
+    o_ref[...] = o1_ref[...] * s1[..., None] + o2_ref[...] * s2[..., None]
+    l_ref[...] = l1_ref[...] * s1 + l2_ref[...] * s2
+    m_ref[...] = m
+
+
+def merge2(o1, m1, l1, o2, m2, l2, *, interpret=True):
+    """Merge two (o f32[B,H,dh], m f32[B,H], l f32[B,H]) partials."""
+    b, h, dh = o1.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(o1, m1, l1, o2, m2, l2)

@@ -1,0 +1,116 @@
+"""Pure-jnp correctness oracles for every L1 kernel (DESIGN.md §3).
+
+These are the ground truth the Pallas kernels, the AOT artifacts, and the
+rust native fallback are all tested against. The chunked-attention algebra
+(unnormalized partials + log-sum-exp merge) is the flash-attention
+decomposition: attention over a union of chunks equals the LSE-merge of
+per-chunk partials — `test_kernel.py::test_chunked_equals_full` asserts it.
+
+Partial convention (per query row, per head):
+    m = max_j score_j           (-inf if every key is masked)
+    l = sum_j exp(score_j - m)  (0 if every key is masked)
+    o = sum_j exp(score_j - m) * v_j        (UNnormalized)
+Final output after merging all partials: o / l.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def chunk_attn_ref(q, k, v, q_pos, k_base, valid):
+    """Shared-KV chunk attention oracle.
+
+    q:      f32[B, H, dh]   queries (B = batched concurrent requests — the
+                            paper's GEMM batching dimension)
+    k, v:   f32[C, Hkv, dh] one shared chunk (GQA: Hkv <= H)
+    q_pos:  i32[B]          absolute position of each query; -1 = padding row
+    k_base: i32[1]          absolute position of chunk token 0
+    valid:  i32[1]          number of valid tokens in the chunk (<= C)
+    returns (o f32[B,H,dh], m f32[B,H], l f32[B,H]) unnormalized partials.
+    """
+    B, H, dh = q.shape
+    C, Hkv, _ = k.shape
+    group = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    qg = q.reshape(B, Hkv, group, dh)
+    # The Shared-KV GEMM: all B queries hit the same chunk K/V.
+    scores = jnp.einsum("bkgd,ckd->bkgc", qg, k) * scale  # [B,Hkv,group,C]
+
+    j = jnp.arange(C, dtype=jnp.int32)
+    allowed = (j[None, :] < valid[0]) & (k_base[0] + j[None, :] <= q_pos[:, None])
+    allowed &= q_pos[:, None] >= 0  # padding rows: fully masked
+    scores = jnp.where(allowed[:, None, None, :], scores, NEG_INF)
+
+    m = jnp.max(scores, axis=-1)  # [B,Hkv,group]; -inf if all masked
+    p = jnp.where(jnp.isfinite(scores), jnp.exp(scores - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgc,ckd->bkgd", p, v)
+    return (
+        o.reshape(B, H, dh).astype(jnp.float32),
+        m.reshape(B, H).astype(jnp.float32),
+        l.reshape(B, H).astype(jnp.float32),
+    )
+
+
+def merge2_ref(o1, m1, l1, o2, m2, l2):
+    """LSE-merge two partials into one (o, m, l)."""
+    m = jnp.maximum(m1, m2)
+    s1 = jnp.where(jnp.isfinite(m1), jnp.exp(m1 - m), 0.0)
+    s2 = jnp.where(jnp.isfinite(m2), jnp.exp(m2 - m), 0.0)
+    o = o1 * s1[..., None] + o2 * s2[..., None]
+    l = l1 * s1 + l2 * s2
+    return o, m, l
+
+
+def merge_ref(parts):
+    """LSE-merge a list of (o, m, l) partials into one (o, m, l)."""
+    o, m, l = parts[0]
+    for o2, m2, l2 in parts[1:]:
+        o, m, l = merge2_ref(o, m, l, o2, m2, l2)
+    return o, m, l
+
+
+def finalize_ref(o, l):
+    """Normalize merged partials; fully-masked rows produce zeros."""
+    safe = jnp.where(l > 0.0, l, 1.0)
+    return jnp.where((l > 0.0)[..., None], o / safe[..., None], 0.0)
+
+
+def full_attn_ref(q, k, v, q_pos, k_pos):
+    """Direct softmax attention over the *whole* context (no chunking).
+
+    q: f32[B,H,dh]; k, v: f32[T,Hkv,dh]; q_pos i32[B]; k_pos i32[T].
+    Causal: key j visible to query b iff k_pos[j] <= q_pos[b].
+    """
+    B, H, dh = q.shape
+    T, Hkv, _ = k.shape
+    group = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    qg = q.reshape(B, Hkv, group, dh)
+    scores = jnp.einsum("bkgd,tkd->bkgt", qg, k) * scale
+    allowed = (k_pos[None, :] <= q_pos[:, None]) & (q_pos[:, None] >= 0)
+    scores = jnp.where(allowed[:, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(jnp.isfinite(scores), jnp.exp(scores - m), 0.0)
+    l = jnp.sum(p, axis=-1)  # [B,Hkv,group]
+    o = jnp.einsum("bkgt,tkd->bkgd", p, v)
+    safe = jnp.where(l > 0.0, l, 1.0)
+    o = jnp.where((l > 0.0)[..., None], o / safe[..., None], 0.0)
+    return o.reshape(B, H, dh)
+
+
+def router_score_ref(q, embs):
+    """MoE-inspired chunk-router oracle (MoBA/LongHeads scheme).
+
+    q:    f32[B, H, dh]     current queries
+    embs: f32[C, Hkv, dh]   mean-pooled-K chunk embeddings
+    returns f32[B, C]: mean over query heads of q_h . emb_{c, kv(h)}.
+    """
+    B, H, dh = q.shape
+    C, Hkv, _ = embs.shape
+    group = H // Hkv
+    qg = q.reshape(B, Hkv, group, dh)
+    s = jnp.einsum("bkgd,ckd->bkgc", qg, embs)  # [B,Hkv,group,C]
+    return jnp.mean(s.reshape(B, Hkv * group, C), axis=1)

@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: MoE-inspired chunk router (paper §III.B).
+
+Training-free routing exactly as MoBA/LongHeads: relevance of shared chunk c
+to query b is the inner product between the query vectors and the chunk's
+mean-pooled K embedding, averaged over query heads. Top-k selection happens
+on the rust side (`router/topk.rs`) because k is a serving-time knob.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, emb_ref, out_ref, *, group: int):
+    q = q_ref[...]                      # [B, H, dh]
+    embs = emb_ref[...]                 # [C, Hkv, dh]
+    b, h, dh = q.shape
+    c, hkv, _ = embs.shape
+    qg = q.reshape(b, hkv, group, dh)
+    s = jnp.einsum(
+        "bkgd,ckd->bkgc", qg, embs, preferred_element_type=jnp.float32
+    )
+    out_ref[...] = jnp.mean(s.reshape(b, h, c), axis=1).astype(jnp.float32)
+
+
+def router_score(q, embs, *, interpret=True):
+    """q f32[B,H,dh] × embs f32[C,Hkv,dh] → scores f32[B,C]."""
+    b, h, dh = q.shape
+    c, hkv, _ = embs.shape
+    assert h % hkv == 0
+    kern = functools.partial(_kernel, group=h // hkv)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=interpret,
+    )(q, embs)

@@ -1,0 +1,177 @@
+"""L2: the moska-tiny JAX compute graph (DESIGN.md §3).
+
+These functions are the bodies of the AOT artifacts (`aot.py` lowers each at
+every batch bucket) and double as the pure-JAX reference implementation used
+to generate golden vectors and precompute shared domain KV stores. Weights
+are runtime arguments, never baked constants, so one artifact serves every
+layer.
+
+The decode step is deliberately split into embed / qkv / chunk_attn / post /
+lm_head artifacts: the rust coordinator owns the loop between them, which is
+what lets it route queries, form Shared-KV GEMM batches across requests, and
+place unique vs shared work on different nodes (paper §III.C).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import TinyConfig
+from .kernels import chunk_attn, ref
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    """RMSNorm over the last axis."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope(x, pos, theta=10000.0):
+    """Rotary embedding, half-split convention.
+
+    x: f32[B, n_heads, dh], pos: i32[B] (negative = padding row; the
+    rotation is still applied — masking happens in attention).
+    """
+    b, n, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[:, None, None] * freqs[None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# artifact bodies (each lowered per batch bucket by aot.py)
+# --------------------------------------------------------------------------
+
+def embed_fn(tokens, emb):
+    """tokens i32[B], emb f32[V,d] → x f32[B,d]."""
+    return (jnp.take(emb, tokens, axis=0),)
+
+
+def qkv_fn(cfg: TinyConfig, x, attn_norm, wq, wk, wv, pos):
+    """Pre-norm + QKV projection + RoPE.
+
+    x f32[B,d] → q f32[B,H,dh], k f32[B,Hkv,dh], v f32[B,Hkv,dh].
+    """
+    b = x.shape[0]
+    xn = rms_norm(x, attn_norm, cfg.rms_eps)
+    q = (xn @ wq).reshape(b, cfg.n_heads, cfg.head_dim)
+    k = (xn @ wk).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    v = (xn @ wv).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def chunk_attn_fn(q, k, v, q_pos, k_base, valid):
+    """The Pallas Shared-KV GEMM attention kernel, lowered in-graph."""
+    return tuple(chunk_attn(q, k, v, q_pos, k_base, valid, interpret=True))
+
+
+def post_fn(cfg: TinyConfig, attn_o, x, wo, ffn_norm, w1, w3, w2):
+    """Attention out-proj + residual + SwiGLU FFN + residual.
+
+    attn_o f32[B,H,dh] (already normalized), x f32[B,d] → x' f32[B,d].
+    """
+    b = x.shape[0]
+    h = x + attn_o.reshape(b, cfg.q_dim) @ wo
+    hn = rms_norm(h, ffn_norm, cfg.rms_eps)
+    ffn = (jax.nn.silu(hn @ w1) * (hn @ w3)) @ w2
+    return (h + ffn,)
+
+
+def lm_head_fn(cfg: TinyConfig, x, final_norm, w_lm):
+    """Final norm + LM head. x f32[B,d] → logits f32[B,V]."""
+    return (rms_norm(x, final_norm, cfg.rms_eps) @ w_lm,)
+
+
+# --------------------------------------------------------------------------
+# full-model reference (golden generation, shared-KV precompute, tests)
+# --------------------------------------------------------------------------
+
+def layer_weights(weights: dict, i: int):
+    lw = weights
+    return (
+        lw[f"layer{i}.attn_norm"], lw[f"layer{i}.wq"], lw[f"layer{i}.wk"],
+        lw[f"layer{i}.wv"], lw[f"layer{i}.wo"], lw[f"layer{i}.ffn_norm"],
+        lw[f"layer{i}.w1"], lw[f"layer{i}.w3"], lw[f"layer{i}.w2"],
+    )
+
+
+def forward_ref(cfg: TinyConfig, weights: dict, tokens, pos, caches=None,
+                block=256):
+    """Token-parallel forward over `tokens` i32[T] at positions `pos` i32[T].
+
+    `caches`: optional list per layer of (k f32[S,Hkv,dh], v, k_pos i32[S])
+    of already-prefilled context the new tokens attend to (in addition to
+    themselves, causally).
+
+    Returns (logits f32[T,V], new_caches) where new_caches appends the new
+    K/V. Queries are processed in `block`-sized slabs to bound memory on
+    multi-thousand-token prefills.
+    """
+    t = tokens.shape[0]
+    x = embed_fn(tokens, weights["embed"])[0]
+    new_caches = []
+    for i in range(cfg.n_layers):
+        an, wq, wk, wv, wo, fn_, w1, w3, w2 = layer_weights(weights, i)
+        q, k, v = qkv_fn(cfg, x, an, wq, wk, wv, pos)
+        if caches is not None and caches[i] is not None:
+            pk, pv, ppos = caches[i]
+            k_all = jnp.concatenate([pk, k], axis=0)
+            v_all = jnp.concatenate([pv, v], axis=0)
+            kp_all = jnp.concatenate([ppos, pos], axis=0)
+        else:
+            k_all, v_all, kp_all = k, v, pos
+        outs = []
+        for s in range(0, t, block):
+            e = min(s + block, t)
+            outs.append(
+                ref.full_attn_ref(q[s:e], k_all, v_all, pos[s:e], kp_all)
+            )
+        attn_o = jnp.concatenate(outs, axis=0)
+        x = post_fn(cfg, attn_o, x, wo, fn_, w1, w3, w2)[0]
+        new_caches.append((k_all, v_all, kp_all))
+    logits = lm_head_fn(cfg, x, weights["final_norm"], weights["lm_head"])[0]
+    return logits, new_caches
+
+
+def prefill_kv(cfg: TinyConfig, weights: dict, tokens, base_pos=0):
+    """Prefill `tokens` i32[T]; return per-layer (k, v) f32[T,Hkv,dh].
+
+    Used by `sharedkv.py` to build the persistent Domain-Specific Shared KV
+    Caches the rust engine serves from.
+    """
+    pos = jnp.arange(tokens.shape[0], dtype=jnp.int32) + base_pos
+    _, caches = forward_ref(cfg, weights, tokens, pos)
+    return [(k, v) for (k, v, _) in caches]
+
+
+def decode_greedy_ref(cfg: TinyConfig, weights: dict, prompt, n_steps):
+    """Greedy decode reference: returns (tokens_out, per-step logits list).
+
+    The golden vectors for the rust engine integration test come from here.
+    """
+    tokens = jnp.asarray(prompt, dtype=jnp.int32)
+    pos = jnp.arange(tokens.shape[0], dtype=jnp.int32)
+    logits, caches = forward_ref(cfg, weights, tokens, pos)
+    out_tokens = []
+    step_logits = []
+    cur = int(jnp.argmax(logits[-1]))
+    cur_pos = tokens.shape[0]
+    step_logits.append(logits[-1])
+    out_tokens.append(cur)
+    for _ in range(n_steps - 1):
+        tok = jnp.asarray([cur], dtype=jnp.int32)
+        p = jnp.asarray([cur_pos], dtype=jnp.int32)
+        logits, caches = forward_ref(cfg, weights, tok, p, caches)
+        cur = int(jnp.argmax(logits[-1]))
+        cur_pos += 1
+        step_logits.append(logits[-1])
+        out_tokens.append(cur)
+    return out_tokens, step_logits

@@ -1,0 +1,42 @@
+"""Build-time precompute of Domain-Specific Shared KV Caches (paper §III.A).
+
+For each synthetic domain corpus the tiny model is prefilled once and the
+resulting per-layer K/V tensors are chunked (CHUNK tokens each) and dumped,
+together with mean-pooled-K chunk embeddings (the router's 'expert'
+signatures, §III.B). The rust shared chunk store (`kvcache/shared_store.rs`)
+loads these as the persistent, massively-reused shared context.
+
+Store layout per domain (binio container, see `binio.py`):
+    tokens                 i32[T]
+    layer{i}.k             f32[nc, CHUNK, Hkv, dh]
+    layer{i}.v             f32[nc, CHUNK, Hkv, dh]
+    layer{i}.emb           f32[nc, Hkv, dh]     (post-RoPE K mean)
+"""
+
+import numpy as np
+
+from .configs import ARTIFACTS, TinyConfig, DomainSpec
+from .corpus import domain_tokens
+from .model import prefill_kv
+
+
+def build_domain(cfg: TinyConfig, weights: dict, spec: DomainSpec) -> dict:
+    """Prefill one domain corpus; return the binio tensor dict."""
+    chunk = ARTIFACTS.chunk
+    toks = domain_tokens(spec, cfg.vocab)
+    assert toks.shape[0] % chunk == 0, (spec.name, toks.shape)
+    nc = toks.shape[0] // chunk
+
+    import jax.numpy as jnp
+
+    kv = prefill_kv(cfg, weights, jnp.asarray(toks))
+    out = {"tokens": toks.astype(np.int32)}
+    for i, (k, v) in enumerate(kv):
+        k = np.asarray(k, dtype=np.float32)
+        v = np.asarray(v, dtype=np.float32)
+        kc = k.reshape(nc, chunk, cfg.n_kv_heads, cfg.head_dim)
+        vc = v.reshape(nc, chunk, cfg.n_kv_heads, cfg.head_dim)
+        out[f"layer{i}.k"] = kc
+        out[f"layer{i}.v"] = vc
+        out[f"layer{i}.emb"] = kc.mean(axis=1)
+    return out

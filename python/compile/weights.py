@@ -1,0 +1,51 @@
+"""Deterministic weight generation for moska-tiny.
+
+Weights are *runtime inputs* to every HLO artifact (not baked constants), so
+a single artifact per (op, batch-bucket) serves all layers; rust loads the
+same store via `util/bin.rs`. Scaling follows standard fan-in init so the
+synthetic model produces well-conditioned logits (goldens stay in a sane
+numeric range).
+"""
+
+import numpy as np
+
+from .configs import TinyConfig
+
+
+def layer_names(i: int):
+    return [
+        f"layer{i}.attn_norm",
+        f"layer{i}.wq",
+        f"layer{i}.wk",
+        f"layer{i}.wv",
+        f"layer{i}.wo",
+        f"layer{i}.ffn_norm",
+        f"layer{i}.w1",
+        f"layer{i}.w3",
+        f"layer{i}.w2",
+    ]
+
+
+def generate(cfg: TinyConfig, seed: int) -> dict:
+    """Return `{name: ndarray}` for the full model, deterministically."""
+    rng = np.random.default_rng(seed)
+
+    def mat(rows, cols):
+        return (rng.standard_normal((rows, cols)) / np.sqrt(rows)).astype(
+            np.float32
+        )
+
+    w = {"embed": (rng.standard_normal((cfg.vocab, cfg.d_model)) * 0.02).astype(np.float32)}
+    for i in range(cfg.n_layers):
+        w[f"layer{i}.attn_norm"] = np.ones(cfg.d_model, np.float32)
+        w[f"layer{i}.wq"] = mat(cfg.d_model, cfg.q_dim)
+        w[f"layer{i}.wk"] = mat(cfg.d_model, cfg.kv_dim)
+        w[f"layer{i}.wv"] = mat(cfg.d_model, cfg.kv_dim)
+        w[f"layer{i}.wo"] = mat(cfg.q_dim, cfg.d_model)
+        w[f"layer{i}.ffn_norm"] = np.ones(cfg.d_model, np.float32)
+        w[f"layer{i}.w1"] = mat(cfg.d_model, cfg.ffn_dim)
+        w[f"layer{i}.w3"] = mat(cfg.d_model, cfg.ffn_dim)
+        w[f"layer{i}.w2"] = mat(cfg.ffn_dim, cfg.d_model)
+    w["final_norm"] = np.ones(cfg.d_model, np.float32)
+    w["lm_head"] = mat(cfg.d_model, cfg.vocab)
+    return w

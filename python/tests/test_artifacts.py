@@ -1,0 +1,143 @@
+"""Artifact integrity: manifest ⇄ files ⇄ shapes, binio round-trip, domains.
+
+Runs against the `artifacts/` tree produced by `make artifacts`; skips
+cleanly when it has not been built yet (fresh checkout).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import binio, weights as weights_mod
+from compile.configs import ARTIFACTS, DOMAINS, TINY
+from compile.corpus import domain_tokens
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def test_binio_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.standard_normal((3, 4)).astype(np.float32),
+        "b": rng.integers(0, 100, size=(7,)).astype(np.int32),
+        "c.nested/name": rng.standard_normal((2, 2, 2)).astype(np.float32),
+    }
+    path = str(tmp_path / "store.bin")
+    binio.save_store(path, tensors)
+    back = binio.load_store(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_binio_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(ValueError):
+        binio.save_store(
+            str(tmp_path / "bad.bin"), {"x": np.zeros(3, np.float64)}
+        )
+
+
+def test_corpus_deterministic_and_in_vocab():
+    for spec in DOMAINS:
+        t1 = domain_tokens(spec, TINY.vocab)
+        t2 = domain_tokens(spec, TINY.vocab)
+        np.testing.assert_array_equal(t1, t2)
+        assert t1.shape[0] == spec.tokens
+        assert t1.min() >= 0 and t1.max() < TINY.vocab
+        assert t1.shape[0] % ARTIFACTS.chunk == 0
+
+
+def test_corpus_domains_differ():
+    a = domain_tokens(DOMAINS[0], TINY.vocab)
+    b = domain_tokens(DOMAINS[1], TINY.vocab)
+    assert not np.array_equal(a[: DOMAINS[1].tokens], b)
+
+
+@needs_artifacts
+def test_manifest_files_exist():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["chunk"] == ARTIFACTS.chunk
+    assert man["batch_buckets"] == list(ARTIFACTS.batch_buckets)
+    for ent in man["artifacts"]:
+        path = os.path.join(ART, ent["file"])
+        assert os.path.exists(path), ent["name"]
+        assert os.path.getsize(path) > 0
+    # every bucket × op present
+    names = {e["name"] for e in man["artifacts"]}
+    for b in man["batch_buckets"]:
+        for op in ("embed", "qkv", "post", "lm_head", "merge2"):
+            assert f"{op}_b{b}" in names
+        for c in man["router_chunk_buckets"]:
+            assert f"router_b{b}_c{c}" in names
+        for ct in man["attn_token_buckets"]:
+            assert f"chunk_attn_b{b}_c{ct}" in names
+
+
+@needs_artifacts
+def test_weights_store_matches_generator():
+    w_disk = binio.load_store(os.path.join(ART, "weights", "tiny.bin"))
+    w_gen = weights_mod.generate(TINY, ARTIFACTS.weight_seed)
+    assert set(w_disk) == set(w_gen)
+    for k in w_gen:
+        np.testing.assert_array_equal(w_disk[k], w_gen[k])
+
+
+@needs_artifacts
+def test_domain_stores_shapes():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for dom in man["domains"]:
+        store = binio.load_store(os.path.join(ART, dom["file"]))
+        nc = dom["chunks"]
+        assert store["tokens"].shape == (dom["tokens"],)
+        for i in range(TINY.n_layers):
+            assert store[f"layer{i}.k"].shape == (
+                nc, ARTIFACTS.chunk, TINY.n_kv_heads, TINY.head_dim
+            )
+            assert store[f"layer{i}.v"].shape == store[f"layer{i}.k"].shape
+            assert store[f"layer{i}.emb"].shape == (
+                nc, TINY.n_kv_heads, TINY.head_dim
+            )
+            # embeddings really are the chunk K-means
+            np.testing.assert_allclose(
+                store[f"layer{i}.emb"],
+                store[f"layer{i}.k"].mean(axis=1),
+                rtol=1e-5, atol=1e-6,
+            )
+
+
+@needs_artifacts
+def test_goldens_exist_and_finite():
+    gdir = os.path.join(ART, "golden")
+    for name in ("kernels.json", "decode_prompt.json", "decode_shared.json"):
+        with open(os.path.join(gdir, name)) as f:
+            data = json.load(f)
+        assert data
+    with open(os.path.join(gdir, "decode_prompt.json")) as f:
+        g = json.load(f)
+    assert len(g["tokens"]) == len(g["logits"])
+    for row in g["logits"]:
+        assert len(row) == TINY.vocab
+        assert all(abs(x) < 1e30 for x in row)
+
+
+@needs_artifacts
+def test_hlo_text_parses_structurally():
+    """HLO text artifacts look like HLO modules (ENTRY + parameters)."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for ent in man["artifacts"][:8]:
+        with open(os.path.join(ART, ent["file"])) as f:
+            text = f.read()
+        assert "ENTRY" in text
+        for i in range(len(ent["inputs"])):
+            assert f"parameter({i})" in text, (ent["name"], i)

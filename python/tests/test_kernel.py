@@ -1,0 +1,234 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer: the same kernels
+are lowered into the AOT artifacts the rust engine executes, so allclose
+here + the rust golden tests transitively validate the serving hot path.
+
+Hypothesis sweeps shapes (batch buckets × chunk sizes × head geometry) and
+masking regimes, per the session's testing contract.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import chunk_attn, merge2, ref, router_score
+from compile.kernels.chunk_attn import Q_TILE
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _mk(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def assert_partials_close(got, want):
+    """Compare (o, m, l) partials; -inf == -inf counts as equal for m."""
+    o1, m1, l1 = (np.asarray(x) for x in got)
+    o2, m2, l2 = (np.asarray(x) for x in want)
+    np.testing.assert_allclose(o1, o2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(l1, l2, rtol=RTOL, atol=ATOL)
+    both_inf = np.isneginf(m1) & np.isneginf(m2)
+    np.testing.assert_array_equal(np.isneginf(m1), np.isneginf(m2))
+    np.testing.assert_allclose(
+        np.where(both_inf, 0.0, m1), np.where(both_inf, 0.0, m2),
+        rtol=RTOL, atol=ATOL,
+    )
+
+
+# Batch sizes the kernel's query tiling accepts: divisible by min(b, Q_TILE).
+VALID_B = [b for b in range(1, 33) if b % min(b, Q_TILE) == 0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.sampled_from(VALID_B),
+    c=st.sampled_from([16, 32, 64, 128]),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16, 32]),
+    k_base=st.integers(0, 200),
+    valid_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_attn_matches_ref(b, c, hkv, group, dh, k_base, valid_frac, seed):
+    """Pallas Shared-KV attention == oracle across the shape/mask space."""
+    rng = np.random.default_rng(seed)
+    h = hkv * group
+    q = _mk(rng, b, h, dh)
+    k = _mk(rng, c, hkv, dh)
+    v = _mk(rng, c, hkv, dh)
+    # positions span the interesting regimes: before / inside / after chunk,
+    # plus explicit padding rows.
+    q_pos = rng.integers(-1, k_base + c + 50, size=b).astype(np.int32)
+    valid = np.array([max(1, int(c * valid_frac))], np.int32)
+    kb = np.array([k_base], np.int32)
+    got = chunk_attn(q, k, v, jnp.asarray(q_pos), jnp.asarray(kb),
+                     jnp.asarray(valid))
+    want = ref.chunk_attn_ref(q, k, v, jnp.asarray(q_pos), jnp.asarray(kb),
+                              jnp.asarray(valid))
+    assert_partials_close(got, want)
+
+
+def test_chunk_attn_all_masked_rows():
+    """Padding rows (q_pos = -1) must emit the merge identity (0, -inf, 0)."""
+    rng = np.random.default_rng(7)
+    q, k, v = _mk(rng, 4, 4, 16), _mk(rng, 64, 2, 16), _mk(rng, 64, 2, 16)
+    q_pos = jnp.asarray([-1, -1, -1, -1], jnp.int32)
+    o, m, l = chunk_attn(q, k, v, q_pos, jnp.asarray([0], jnp.int32),
+                         jnp.asarray([64], jnp.int32))
+    assert np.all(np.asarray(o) == 0.0)
+    assert np.all(np.isneginf(np.asarray(m)))
+    assert np.all(np.asarray(l) == 0.0)
+
+
+def test_chunk_attn_future_chunk_masked():
+    """A chunk entirely in the future of every query is fully masked."""
+    rng = np.random.default_rng(8)
+    q, k, v = _mk(rng, 2, 4, 16), _mk(rng, 64, 2, 16), _mk(rng, 64, 2, 16)
+    q_pos = jnp.asarray([10, 50], jnp.int32)  # both < k_base
+    o, m, l = chunk_attn(q, k, v, q_pos, jnp.asarray([100], jnp.int32),
+                         jnp.asarray([64], jnp.int32))
+    assert np.all(np.asarray(l) == 0.0)
+    assert np.all(np.isneginf(np.asarray(m)))
+
+
+def test_chunk_attn_decode_vs_softmax():
+    """B=1 decode against one fully-visible chunk == plain softmax attn."""
+    rng = np.random.default_rng(9)
+    q, k, v = _mk(rng, 1, 4, 16), _mk(rng, 64, 2, 16), _mk(rng, 64, 2, 16)
+    q_pos = jnp.asarray([1000], jnp.int32)
+    o, m, l = chunk_attn(q, k, v, q_pos, jnp.asarray([0], jnp.int32),
+                         jnp.asarray([64], jnp.int32))
+    out = np.asarray(ref.finalize_ref(o, l))
+    want = np.asarray(
+        ref.full_attn_ref(q, k, v, q_pos, jnp.arange(64, dtype=jnp.int32))
+    )
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([64, 128, 192, 256]),
+    chunk=st.sampled_from([32, 64]),
+    b=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_equals_full(t, chunk, b, seed):
+    """THE decomposition property: LSE-merged chunk partials == full attn.
+
+    This is what makes the whole MoSKA serving scheme exact (when routing
+    is dense): attention over any context equals the merge of per-chunk
+    Shared-KV attention calls.
+    """
+    rng = np.random.default_rng(seed)
+    hkv, h, dh = 2, 4, 16
+    q = _mk(rng, b, h, dh)
+    k = _mk(rng, t, hkv, dh)
+    v = _mk(rng, t, hkv, dh)
+    q_pos = jnp.asarray(rng.integers(0, t + 10, size=b), jnp.int32)
+    k_pos = jnp.arange(t, dtype=jnp.int32)
+    want = ref.full_attn_ref(q, k, v, q_pos, k_pos)
+    parts = [
+        chunk_attn(q, k[s : s + chunk], v[s : s + chunk], q_pos,
+                   jnp.asarray([s], jnp.int32),
+                   jnp.asarray([min(chunk, t - s)], jnp.int32))
+        for s in range(0, t, chunk)
+    ]
+    o, m, l = ref.merge_ref(parts)
+    got = ref.finalize_ref(o, l)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 4, 8]),
+    h=st.sampled_from([2, 4]),
+    dh=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_merge2_matches_ref(b, h, dh, seed):
+    rng = np.random.default_rng(seed)
+    def part():
+        o = _mk(rng, b, h, dh)
+        m = _mk(rng, b, h)
+        l = jnp.abs(_mk(rng, b, h)) + 0.1
+        return o, m, l
+    p1, p2 = part(), part()
+    got = merge2(*p1, *p2)
+    want = ref.merge2_ref(*p1, *p2)
+    assert_partials_close(got, want)
+
+
+def test_merge2_identity():
+    """Merging with the (0, -inf, 0) identity is a no-op."""
+    rng = np.random.default_rng(11)
+    b, h, dh = 4, 4, 16
+    o, m, l = _mk(rng, b, h, dh), _mk(rng, b, h), jnp.abs(_mk(rng, b, h))
+    zo = jnp.zeros((b, h, dh), jnp.float32)
+    zm = jnp.full((b, h), -jnp.inf, jnp.float32)
+    zl = jnp.zeros((b, h), jnp.float32)
+    got = merge2(o, m, l, zo, zm, zl)
+    assert_partials_close(got, (o, m, l))
+    got = merge2(zo, zm, zl, o, m, l)
+    assert_partials_close(got, (o, m, l))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_merge_order_invariance(n, seed):
+    """Merging partials in any order gives the same normalized output."""
+    rng = np.random.default_rng(seed)
+    b, h, dh = 2, 4, 8
+    parts = []
+    for _ in range(n):
+        o = _mk(rng, b, h, dh)
+        m = _mk(rng, b, h)
+        l = jnp.abs(_mk(rng, b, h)) + 0.1
+        parts.append((o, m, l))
+    o1, _, l1 = ref.merge_ref(parts)
+    perm = list(rng.permutation(n))
+    o2, _, l2 = ref.merge_ref([parts[i] for i in perm])
+    np.testing.assert_allclose(
+        np.asarray(ref.finalize_ref(o1, l1)),
+        np.asarray(ref.finalize_ref(o2, l2)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    c=st.sampled_from([16, 64, 256]),
+    hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_router_matches_ref(b, c, hkv, group, seed):
+    rng = np.random.default_rng(seed)
+    h, dh = hkv * group, 16
+    q = _mk(rng, b, h, dh)
+    embs = _mk(rng, c, hkv, dh)
+    got = router_score(q, embs)
+    want = ref.router_score_ref(q, embs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_router_prefers_aligned_chunk():
+    """A chunk embedding equal to the query direction scores highest."""
+    b, hkv, group, dh = 1, 2, 2, 16
+    h = hkv * group
+    rng = np.random.default_rng(13)
+    q = _mk(rng, b, h, dh)
+    embs = np.asarray(_mk(rng, 8, hkv, dh)) * 0.01
+    # chunk 5 = mean of the query's kv-grouped vectors, scaled up.
+    qk = np.asarray(q).reshape(hkv, group, dh).mean(axis=1)
+    embs[5] = qk * 10.0
+    scores = np.asarray(router_score(q, jnp.asarray(embs)))
+    assert scores[0].argmax() == 5

@@ -1,0 +1,66 @@
+//! Ablation: KV chunk size. Smaller chunks → finer routing granularity
+//! but more merge overhead and more (smaller) GEMMs; larger chunks →
+//! fewer calls but coarser sparsity. Uses the native backend (chunk size
+//! is compile-time-fixed in the artifacts, runtime-free here).
+
+use std::time::Duration;
+
+use moska::config::ModelConfig;
+use moska::runtime::{Backend, NativeBackend};
+use moska::tensor::Tensor;
+use moska::util::bench::{bench, Table};
+use moska::util::rng::Rng;
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let total_ctx = 512usize; // fixed context, varying chunking
+    let b = 8usize;
+    let mut rng = Rng::new(0);
+    let mk = |rng: &mut Rng, shape: &[usize]| {
+        let mut d = vec![0f32; shape.iter().product()];
+        rng.fill_normal_f32(&mut d);
+        Tensor::f32(shape, d)
+    };
+    let q = mk(&mut rng, &[b, cfg.n_heads, cfg.head_dim]);
+    let k = mk(&mut rng, &[total_ctx, cfg.n_kv_heads, cfg.head_dim]);
+    let v = mk(&mut rng, &[total_ctx, cfg.n_kv_heads, cfg.head_dim]);
+    let q_pos = vec![10_000i32; b];
+
+    let budget = Duration::from_millis(300);
+    let mut t = Table::new(&[
+        "chunk", "n_chunks", "attn+merge_mean", "vs_monolithic",
+    ]);
+    let be = NativeBackend::new(cfg.clone(), 64);
+    let mono = bench("monolithic 512", budget, || {
+        be.chunk_attn(&q, &k, &v, &q_pos, 0, total_ctx as i32).unwrap();
+    });
+    for chunk in [16usize, 32, 64, 128, 256] {
+        let n_chunks = total_ctx / chunk;
+        let s = bench(&format!("chunked {chunk}x{n_chunks}"), budget, || {
+            let mut parts = Vec::with_capacity(n_chunks);
+            for c in 0..n_chunks {
+                let s0 = c * chunk;
+                parts.push(
+                    be.chunk_attn(
+                        &q, &k.slice0(s0, s0 + chunk),
+                        &v.slice0(s0, s0 + chunk), &q_pos, s0 as i32,
+                        chunk as i32,
+                    )
+                    .unwrap(),
+                );
+            }
+            moska::attention::merge_many(&parts);
+        });
+        t.row(vec![
+            chunk.to_string(),
+            n_chunks.to_string(),
+            format!("{:?}", s.mean),
+            format!("{:.2}x",
+                    s.mean.as_secs_f64() / mono.mean.as_secs_f64()),
+        ]);
+    }
+    t.row(vec!["512 (mono)".into(), "1".into(),
+               format!("{:?}", mono.mean), "1.00x".into()]);
+    t.print("Ablation — chunk size (fixed 512-token context, B=8, native)");
+    t.write_csv("ablation_chunk").expect("csv");
+}

@@ -1,0 +1,76 @@
+//! Ablation: router top-k sweep (the paper's 75% sparsity operating
+//! point). Measures decode throughput (runtime warmed; compilation
+//! excluded) and a step-0 quality proxy — logits deviation + greedy-token
+//! agreement with dense routing on the SAME state. Later steps are not
+//! comparable across k (trajectories diverge), so only step 0 is scored.
+//!
+//! Caveat recorded in EXPERIMENTS.md: moska-tiny has random (untrained)
+//! weights, so routing scores carry no semantic signal — the deviation
+//! column is an upper bound; the paper's ≥75%-sparsity-with-quality claim
+//! rests on trained models with concentrated attention [6][7].
+
+use moska::config::ServingConfig;
+use moska::engine::build_engine;
+use moska::model::sampling::Sampler;
+use moska::runtime::artifact::default_artifacts_dir;
+use moska::util::bench::Table;
+use std::time::Instant;
+
+fn decode(dir: &str, top_k: Option<usize>, prompt: &[i32], steps: usize)
+          -> (Vec<f32>, f64) {
+    let cfg = ServingConfig { top_k, ..Default::default() };
+    let (mut eng, svc) = build_engine(dir, "xla", cfg).unwrap();
+    if let Some(svc) = &svc {
+        svc.handle().warmup().unwrap();
+    }
+    eng.capture_logits = true;
+    eng.submit(Some("legal"), prompt.to_vec(), steps, Sampler::Greedy)
+        .unwrap();
+    let t0 = Instant::now();
+    let mut results = eng.run_to_completion().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    let step0 = results.pop().unwrap().logits_trace.swap_remove(0);
+    (step0, steps as f64 / dt)
+}
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return;
+    }
+    let prompt: Vec<i32> = (0..12).map(|i| (i * 23 + 7) % 256).collect();
+    let steps = 8;
+    let (dense0, dense_tput) = decode(&dir, None, &prompt, steps);
+    let dense_argmax = argmax(&dense0);
+
+    // legal domain has 64 chunks → k=16 is the paper's 75% sparsity point
+    let mut t = Table::new(&[
+        "top_k", "sparsity", "tok_per_s", "speedup", "step0_logit_dev",
+        "step0_greedy_agrees",
+    ]);
+    for k in [1usize, 4, 8, 16, 32, 48, 64] {
+        let (l0, tput) = decode(&dir, Some(k), &prompt, steps);
+        let dev = l0.iter().zip(&dense0)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        t.row(vec![
+            k.to_string(),
+            format!("{:.0}%", (1.0 - k as f64 / 64.0) * 100.0),
+            format!("{tput:.1}"),
+            format!("{:.2}x", tput / dense_tput),
+            format!("{dev:.4}"),
+            (argmax(&l0) == dense_argmax).to_string(),
+        ]);
+    }
+    t.row(vec!["dense".into(), "0%".into(), format!("{dense_tput:.1}"),
+               "1.00x".into(), "0.0000".into(), "true".into()]);
+    t.print("Ablation — router sparsity (legal domain, 64 chunks, B=1)");
+    t.write_csv("ablation_sparsity").expect("csv");
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter().enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap().0
+}

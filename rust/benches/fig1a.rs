@@ -1,0 +1,9 @@
+//! Paper Fig 1(a): normalized KV cache size vs sequence length × batch
+//! under stacked optimizations — shows capacity still scales with B·S.
+//! Regenerates the figure's series from the analytical model.
+
+fn main() {
+    let t = moska::analytical::figures::fig1a();
+    t.print("Fig 1(a) — normalized KV cache size (MHA/FP16 @128K = 1.0)");
+    t.write_csv("fig1a").expect("csv");
+}

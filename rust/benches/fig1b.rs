@@ -1,0 +1,9 @@
+//! Paper Fig 1(b): memory capacity vs bandwidth requirement scaling with
+//! batch size. Sharing fixes capacity; only Shared-KV-Attention's batched
+//! GEMM read fixes bandwidth — the motivation for the whole paper.
+
+fn main() {
+    let t = moska::analytical::figures::fig1b();
+    t.print("Fig 1(b) — capacity & bandwidth requirements vs batch (16M shared ctx)");
+    t.write_csv("fig1b").expect("csv");
+}

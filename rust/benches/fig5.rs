@@ -1,0 +1,54 @@
+//! Paper Fig 5: MFU + memory/bandwidth utilization of the Unique-KV node
+//! vs the Shared-KV node as batch grows (analytical disaggregated model),
+//! plus the *live* measured analogue on the tiny system when artifacts
+//! are present (shared traffic flat, unique traffic linear).
+
+use std::sync::Arc;
+
+use moska::disagg::DisaggCluster;
+use moska::kvcache::shared_store::SharedStore;
+use moska::model::Weights;
+use moska::runtime::{artifact::default_artifacts_dir, Backend, Manifest,
+                     NativeBackend};
+use moska::util::bench::{fmt_bytes, fmt_si, Table};
+
+fn main() {
+    let t = moska::analytical::figures::fig5();
+    t.print("Fig 5 — per-node utilization (analytical, H200 ×8 per node)");
+    t.write_csv("fig5").expect("csv");
+
+    // live measured analogue (tiny model, native backend)
+    let dir = default_artifacts_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("(artifacts not built — skipping live fig5 analogue)");
+        return;
+    }
+    let man = Manifest::load(&dir).expect("manifest");
+    let shared = Arc::new(SharedStore::load_from_manifest(&man).unwrap());
+    let mut live = Table::new(&[
+        "batch", "sh_bytes/step", "uq_bytes/step", "sh_flops/step",
+        "gemm_N", "mean_step",
+    ]);
+    for b in [1usize, 2, 4, 8, 16] {
+        let backend: Arc<dyn Backend> =
+            Arc::new(NativeBackend::new(man.model.clone(), man.chunk));
+        let weights = Weights::load(
+            man.weights_path().to_str().unwrap(), man.model.clone(),
+        )
+        .unwrap();
+        let mut cluster = DisaggCluster::new(
+            backend, weights, Arc::clone(&shared), None, 32,
+        );
+        let p = cluster.run_point(b, "legal", 64, 4).expect("run");
+        live.row(vec![
+            b.to_string(),
+            fmt_bytes(p.shared_bytes_per_step),
+            fmt_bytes(p.unique_bytes_per_step),
+            fmt_si(p.shared_flops_per_step),
+            format!("{:.2}", p.batching_factor),
+            format!("{:?}", p.mean_step),
+        ]);
+    }
+    live.print("Fig 5 live analogue — measured two-node sim (tiny model, dense routing)");
+    live.write_csv("fig5_live").expect("csv");
+}

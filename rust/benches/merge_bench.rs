@@ -1,0 +1,58 @@
+//! LSE-merge cost vs arity and batch — the coordinator-side overhead that
+//! chunked attention adds over monolithic attention. Must stay a small
+//! fraction of the chunk-attention call itself.
+
+use std::time::Duration;
+
+use moska::attention::merge_many;
+use moska::config::ModelConfig;
+use moska::runtime::{Backend, NativeBackend};
+use moska::tensor::Tensor;
+use moska::util::bench::{bench, Table};
+use moska::util::rng::Rng;
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let be = NativeBackend::new(cfg.clone(), 64);
+    let mut rng = Rng::new(0);
+    let budget = Duration::from_millis(200);
+
+    let mut t = Table::new(&["batch", "arity", "merge_mean", "attn_mean",
+                             "merge/attn"]);
+    for &b in &[1usize, 8, 32] {
+        let mk = |rng: &mut Rng, shape: &[usize]| {
+            let mut d = vec![0f32; shape.iter().product()];
+            rng.fill_normal_f32(&mut d);
+            Tensor::f32(shape, d)
+        };
+        let q = mk(&mut rng, &[b, cfg.n_heads, cfg.head_dim]);
+        let k = mk(&mut rng, &[64, cfg.n_kv_heads, cfg.head_dim]);
+        let v = mk(&mut rng, &[64, cfg.n_kv_heads, cfg.head_dim]);
+        let q_pos = vec![10_000i32; b];
+        let attn = bench(&format!("chunk_attn b={b}"), budget, || {
+            be.chunk_attn(&q, &k, &v, &q_pos, 0, 64).unwrap();
+        });
+        for &arity in &[2usize, 8, 32] {
+            let parts: Vec<_> = (0..arity)
+                .map(|i| {
+                    be.chunk_attn(&q, &k, &v, &q_pos, (i * 64) as i32, 64)
+                        .unwrap()
+                })
+                .collect();
+            let m = bench(&format!("merge b={b} n={arity}"), budget, || {
+                merge_many(&parts);
+            });
+            t.row(vec![
+                b.to_string(),
+                arity.to_string(),
+                format!("{:?}", m.mean),
+                format!("{:?}", attn.mean),
+                format!("{:.3}",
+                        m.mean.as_secs_f64()
+                            / (attn.mean.as_secs_f64() * arity as f64)),
+            ]);
+        }
+    }
+    t.print("LSE merge cost vs chunk attention cost (native)");
+    t.write_csv("merge_bench").expect("csv");
+}

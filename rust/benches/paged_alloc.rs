@@ -1,0 +1,75 @@
+//! Paged KV allocator microbenchmark: alloc/free cycles, append
+//! throughput, and fragmentation behaviour under churn.
+
+use std::time::Duration;
+
+use moska::kvcache::paged::{PagePool, RequestKv};
+use moska::tensor::Tensor;
+use moska::util::bench::{bench, Table};
+use moska::util::rng::Rng;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let mut t = Table::new(&["op", "mean", "p99"]);
+
+    // raw alloc/free cycle
+    let mut pool = PagePool::new(4096, 64, 2, 16);
+    let s = bench("alloc+free x64", budget, || {
+        let ids: Vec<_> = (0..64).map(|_| pool.alloc().unwrap()).collect();
+        for id in ids {
+            pool.free(id);
+        }
+    });
+    t.row(vec!["alloc+free x64".into(), format!("{:?}", s.mean),
+               format!("{:?}", s.p99)]);
+
+    // token append path (the decode hot loop)
+    let mut pool = PagePool::new(4096, 64, 2, 16);
+    let mut rng = Rng::new(0);
+    let mut kdata = vec![0f32; 2 * 16];
+    rng.fill_normal_f32(&mut kdata);
+    let k = Tensor::f32(&[1, 2, 16], kdata.clone());
+    let v = Tensor::f32(&[1, 2, 16], kdata);
+    let mut kv = RequestKv::new(2, 0);
+    let s = bench("append 1 token (2 layers)", budget, || {
+        kv.append(&mut pool, &[(k.clone(), v.clone()), (k.clone(), v.clone())])
+            .unwrap();
+        if kv.len > 4000 * 64 / 2 {
+            kv.release(&mut pool);
+        }
+    });
+    t.row(vec!["append 1 tok".into(), format!("{:?}", s.mean),
+               format!("{:?}", s.p99)]);
+
+    // churn: random-sized requests coming and going
+    let mut pool = PagePool::new(4096, 64, 2, 16);
+    let mut rng = Rng::new(1);
+    let mut live: Vec<RequestKv> = Vec::new();
+    let s = bench("churn step", budget, || {
+        if live.len() < 32 || rng.f64() < 0.5 {
+            let n = rng.range(1, 200);
+            let mut kv = RequestKv::new(2, 0);
+            let shape = [n, 2, 16];
+            let mut kd = vec![0f32; n * 32];
+            rng.fill_normal_f32(&mut kd);
+            let kt = Tensor::f32(&shape, kd.clone());
+            let vt = Tensor::f32(&shape, kd);
+            kv.append(&mut pool, &[(kt.clone(), vt.clone()), (kt, vt)])
+                .unwrap();
+            live.push(kv);
+        } else {
+            let i = rng.range(0, live.len());
+            let mut kv = live.swap_remove(i);
+            kv.release(&mut pool);
+        }
+    });
+    t.row(vec!["churn step".into(), format!("{:?}", s.mean),
+               format!("{:?}", s.p99)]);
+    for mut kv in live {
+        kv.release(&mut pool);
+    }
+    assert_eq!(pool.allocated(), 0);
+
+    t.print("Paged KV allocator microbenchmarks");
+    t.write_csv("paged_alloc").expect("csv");
+}

@@ -1,0 +1,60 @@
+//! Router cost: scoring+top-k latency vs chunk count and batch, on both
+//! backends. Shows routing overhead is negligible next to the attention
+//! it prunes (the paper's "lightweight, training-free" claim).
+
+use std::time::Duration;
+
+use moska::config::ModelConfig;
+use moska::router::Router;
+use moska::runtime::{artifact::default_artifacts_dir, NativeBackend,
+                     RuntimeService, XlaBackend};
+use moska::tensor::Tensor;
+use moska::util::bench::{bench, Table};
+use moska::util::rng::Rng;
+
+fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let mut d = vec![0f32; shape.iter().product()];
+    rng.fill_normal_f32(&mut d);
+    Tensor::f32(shape, d)
+}
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let mut rng = Rng::new(0);
+    let nat = NativeBackend::new(cfg.clone(), 64);
+
+    let dir = default_artifacts_dir();
+    let xla = if std::path::Path::new(&dir).join("manifest.json").exists() {
+        let svc = RuntimeService::spawn(&dir).expect("runtime");
+        svc.handle().warmup().ok();
+        Some((XlaBackend::new(svc.handle()), svc))
+    } else {
+        None
+    };
+
+    let budget = Duration::from_millis(200);
+    let mut t = Table::new(&["batch", "chunks", "backend", "route_mean"]);
+    for &b in &[1usize, 8, 32] {
+        for &c in &[16usize, 64, 256] {
+            let q = rand_t(&mut rng, &[b, cfg.n_heads, cfg.head_dim]);
+            let embs =
+                rand_t(&mut rng, &[c, cfg.n_kv_heads, cfg.head_dim]);
+            let mut router = Router::new(Some(4));
+            let s = bench(&format!("native b={b} c={c}"), budget, || {
+                router.route(&nat, &q, &embs).unwrap();
+            });
+            t.row(vec![b.to_string(), c.to_string(), "native".into(),
+                       format!("{:?}", s.mean)]);
+            if let Some((be, _)) = &xla {
+                let mut router = Router::new(Some(4));
+                let s = bench(&format!("xla    b={b} c={c}"), budget, || {
+                    router.route(be, &q, &embs).unwrap();
+                });
+                t.row(vec![b.to_string(), c.to_string(), "xla".into(),
+                           format!("{:?}", s.mean)]);
+            }
+        }
+    }
+    t.print("Router scoring + top-k latency");
+    t.write_csv("router_bench").expect("csv");
+}

@@ -1,0 +1,7 @@
+//! Paper Table I: qualitative feature matrix of related works vs MoSKA.
+
+fn main() {
+    let t = moska::analytical::figures::table1();
+    t.print("Table I — feature comparison");
+    t.write_csv("table1").expect("csv");
+}

@@ -1,0 +1,130 @@
+//! Analytical model of the disaggregated infrastructure (paper §III.C,
+//! Fig 3, Fig 5): one DGX as the *Unique KV node* (FFN + per-request
+//! attention, memory-bound), one as the *Shared KV node* (batched
+//! Shared-KV GEMM, compute-bound).
+//!
+//! Both nodes advance in lock-step per decode step, so each node's
+//! utilization is its own work divided by the *global* step time — that
+//! asymmetry is exactly Fig 5: the shared node's MFU climbs with batch
+//! while the unique node stays memory-bound at near-zero MFU.
+
+use super::hardware::NodeSpec;
+use super::methods::Scenario;
+
+/// Per-node utilization at one batch point (Fig 5 series).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeUtil {
+    pub mfu: f64,
+    pub bw_util: f64,
+    pub capacity_util: f64,
+}
+
+/// Both nodes + the synchronized step time.
+#[derive(Debug, Clone, Copy)]
+pub struct DisaggPoint {
+    pub batch: usize,
+    pub unique: NodeUtil,
+    pub shared: NodeUtil,
+    pub step_time: f64,
+}
+
+/// Work placed on one node for a single decode step.
+#[derive(Debug, Clone, Copy)]
+struct NodeWork {
+    bytes: f64,
+    flops: f64,
+    resident: f64,
+}
+
+/// Achievable fraction of peak FLOPS for large GEMMs (cuBLAS-class
+/// kernels sustain 80–90% of tensor-core peak; we model 85%). This is why
+/// a fully compute-bound node tops out near ~85% MFU rather than 100% —
+/// matching the paper's "over 80%" reading of Fig 5.
+pub const GEMM_EFFICIENCY: f64 = 0.85;
+
+impl NodeWork {
+    fn time(&self, node: &NodeSpec) -> f64 {
+        (self.bytes / node.mem_bw())
+            .max(self.flops / (node.flops() * GEMM_EFFICIENCY))
+    }
+
+    fn util(&self, node: &NodeSpec, step: f64) -> NodeUtil {
+        NodeUtil {
+            mfu: self.flops / (node.flops() * step),
+            bw_util: self.bytes / (node.mem_bw() * step),
+            capacity_util: self.resident / node.mem_bytes(),
+        }
+    }
+}
+
+/// Evaluate the MoSKA disaggregated split at batch `b`.
+///
+/// Unique node: weights + FFN/linear compute + per-request unique-KV
+/// attention (the GEMV side). Shared node: routed shared-KV GEMM,
+/// shared cache resident once.
+pub fn evaluate_disagg(sc: &Scenario, b: usize) -> DisaggPoint {
+    let m = &sc.model;
+    let kv = m.kv_bytes_per_token();
+    let bf = b as f64;
+    let node = sc.cluster.node;
+
+    let unique = NodeWork {
+        bytes: m.weight_bytes() + bf * sc.s_unique * kv,
+        flops: bf
+            * (m.linear_flops_per_token()
+                + m.attn_flops_per_token(sc.s_unique)),
+        resident: m.weight_bytes() + bf * sc.s_unique * kv,
+    };
+    let shared = NodeWork {
+        // the entire point: one sparse shared read per STEP, not per request
+        bytes: sc.keep_frac * sc.s_shared * kv,
+        flops: bf * m.attn_flops_per_token(sc.keep_frac * sc.s_shared),
+        resident: sc.s_shared * kv,
+    };
+
+    let step_time = unique.time(&node).max(shared.time(&node));
+    DisaggPoint {
+        batch: b,
+        unique: unique.util(&node, step_time),
+        shared: shared.util(&node, step_time),
+        step_time,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_holds() {
+        // Paper Fig 5 at 16M shared context: shared-node MFU scales ~
+        // linearly with batch, exceeding 80% by B=256; its memory/BW stay
+        // flat. Unique node: capacity/BW grow with batch, MFU stays tiny.
+        let sc = Scenario::paper(16.0e6);
+        let p1 = evaluate_disagg(&sc, 1);
+        let p256 = evaluate_disagg(&sc, 256);
+
+        assert!(p256.shared.mfu > 0.8, "shared MFU {}", p256.shared.mfu);
+        assert!(p256.shared.mfu > 30.0 * p1.shared.mfu,
+                "{} vs {}", p256.shared.mfu, p1.shared.mfu);
+        // shared cache resident once → capacity flat in batch
+        assert!((p256.shared.capacity_util - p1.shared.capacity_util).abs()
+                < 1e-9);
+        // unique node memory-bound: MFU low, capacity grows with B
+        assert!(p256.unique.mfu < 0.10, "unique MFU {}", p256.unique.mfu);
+        assert!(p256.unique.capacity_util > 10.0 * p1.unique.capacity_util);
+        assert!(p256.unique.bw_util > p1.unique.bw_util);
+    }
+
+    #[test]
+    fn utilizations_bounded() {
+        let sc = Scenario::paper(4.0e6);
+        for b in [1usize, 8, 64, 256] {
+            let p = evaluate_disagg(&sc, b);
+            for u in [p.unique, p.shared] {
+                assert!(u.mfu >= 0.0 && u.mfu <= 1.0 + 1e-9);
+                assert!(u.bw_util >= 0.0 && u.bw_util <= 1.0 + 1e-9);
+            }
+        }
+    }
+}

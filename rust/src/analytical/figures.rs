@@ -1,0 +1,205 @@
+//! Figure/table generators: every evaluation artifact in the paper.
+//!
+//! Each function returns a [`Table`] with the same rows/series the paper
+//! plots; the benches print them and drop CSVs under `bench_out/`. See
+//! EXPERIMENTS.md for paper-vs-ours readings.
+
+use crate::util::bench::{fmt_bytes, fmt_si, Table};
+
+use super::disagg_model::evaluate_disagg;
+use super::methods::{evaluate, Method, Scenario};
+
+/// Fig 1(a): normalized KV cache size vs sequence length × batch under
+/// stacked optimizations (GQA ×4, sparsity shrinking the *attended* set —
+/// shown for context — and FP8 quantization ×2). Normalization: MHA/FP16
+/// at 128K/batch 1 = 1.0.
+pub fn fig1a() -> Table {
+    let mut t = Table::new(&[
+        "seq_len", "batch", "MHA_FP16", "+GQA", "+GQA+FP8", "+GQA+FP8+sparse",
+    ]);
+    // Llama-8B-class shape: 32 layers, 32 heads → GQA-8 gives ×4.
+    let layers = 32.0;
+    let heads = 32.0;
+    let kv_heads = 8.0;
+    let dh = 128.0;
+    let kv_fp16_mha = 2.0 * layers * heads * dh * 2.0; // bytes/token
+    let base = 131072.0 * kv_fp16_mha; // 128K, batch 1
+    for &s in &[131072.0f64, 1.0e6, 4.0e6, 16.0e6] {
+        for &b in &[1.0f64, 16.0, 64.0, 256.0] {
+            let mha = b * s * kv_fp16_mha / base;
+            let gqa = mha * (kv_heads / heads);
+            let fp8 = gqa * 0.5;
+            // sparse attention prunes reads, not residency; stored size is
+            // unchanged — the paper's point that optimizations don't stop
+            // the B×S scaling. Shown as the effective *attended* footprint.
+            let sparse = fp8 * 0.25;
+            t.row(vec![
+                fmt_si(s), format!("{b:.0}"),
+                format!("{mha:.2}"), format!("{gqa:.2}"),
+                format!("{fp8:.2}"), format!("{sparse:.2}"),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 1(b): memory capacity and bandwidth *requirements* vs batch size,
+/// with and without KV sharing, for the §IV workload at 16M shared
+/// tokens. Sharing flattens capacity; bandwidth still scales with B until
+/// Shared KV Attention batches the read.
+pub fn fig1b() -> Table {
+    let sc = Scenario::paper(16.0e6);
+    let m = &sc.model;
+    let kv = m.kv_bytes_per_token();
+    let mut t = Table::new(&[
+        "batch",
+        "capacity_noshare", "capacity_shared",
+        "bw_noshare", "bw_shared_gemv", "bw_shared_gemm",
+    ]);
+    for &b in &[1.0f64, 4.0, 16.0, 64.0, 256.0] {
+        let cap_no = b * (sc.s_shared + sc.s_unique) * kv;
+        let cap_sh = (sc.s_shared + b * sc.s_unique) * kv;
+        let bw_no = b * (sc.s_shared + sc.s_unique) * kv;
+        // shared once in memory but each request's GEMV re-reads it:
+        let bw_sh_gemv = (b * sc.s_shared + b * sc.s_unique) * kv;
+        // Shared KV Attention: one batched read:
+        let bw_sh_gemm = (sc.s_shared + b * sc.s_unique) * kv;
+        t.row(vec![
+            format!("{b:.0}"),
+            fmt_bytes(cap_no), fmt_bytes(cap_sh),
+            fmt_bytes(bw_no), fmt_bytes(bw_sh_gemv), fmt_bytes(bw_sh_gemm),
+        ]);
+    }
+    t
+}
+
+/// Table I: qualitative feature matrix.
+pub fn table1() -> Table {
+    let mut t = Table::new(&[
+        "method", "KV Reuse", "Shared KV Attn", "KV Routing",
+        "Disagg Infra", "Composable Ctx",
+    ]);
+    let mark = |b: bool| if b { "V".to_string() } else { "X".to_string() };
+    let mut methods: Vec<Method> = Method::ALL.to_vec();
+    methods.push(Method::UniversalMoSKA);
+    for m in methods {
+        let f = m.features();
+        t.row(vec![
+            m.name().to_string(),
+            mark(f.kv_reuse),
+            mark(f.shared_kv_attention),
+            mark(f.kv_routing),
+            mark(f.disaggregated),
+            mark(f.composable_context),
+        ]);
+    }
+    t
+}
+
+/// Fig 4: max batch + normalized throughput for every method at shared
+/// contexts 1M / 4M / 16M. Throughput normalized to FlashAttention at the
+/// same context (the paper's "gain over baselines", headline 538.7×).
+pub fn fig4() -> Table {
+    let mut t = Table::new(&[
+        "shared_ctx", "method", "max_batch_mem", "max_batch_slo",
+        "throughput_tok_s", "norm_vs_flash", "bound",
+    ]);
+    for &s in &[1.0e6f64, 4.0e6, 16.0e6] {
+        let sc = Scenario::paper(s);
+        let flash = evaluate(Method::FlashAttention, &sc).throughput.max(1e-9);
+        for m in Method::ALL {
+            let o = evaluate(m, &sc);
+            t.row(vec![
+                fmt_si(s),
+                m.name().to_string(),
+                o.max_batch_capacity.to_string(),
+                o.max_batch.to_string(),
+                format!("{:.1}", o.throughput),
+                format!("{:.1}x", o.throughput / flash),
+                if o.step.compute_bound() { "compute".into() }
+                else { "memory".into() },
+            ]);
+        }
+    }
+    t
+}
+
+/// The headline number: MoSKA gain over the weakest baseline across the
+/// Fig 4 sweep (paper: up to 538.7×).
+pub fn headline_gain() -> (f64, f64) {
+    let mut best = 0.0f64;
+    let mut at_ctx = 0.0;
+    for &s in &[1.0e6f64, 2.0e6, 4.0e6, 8.0e6, 16.0e6] {
+        let sc = Scenario::paper(s);
+        let moska = evaluate(Method::MoSKA, &sc).throughput;
+        let worst = Method::ALL
+            .iter()
+            .filter(|&&m| m != Method::MoSKA)
+            .map(|&m| evaluate(m, &sc).throughput)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-9);
+        let gain = moska / worst;
+        if gain > best {
+            best = gain;
+            at_ctx = s;
+        }
+    }
+    (best, at_ctx)
+}
+
+/// Fig 5: MFU + memory capacity/bandwidth utilization per node vs batch,
+/// for the disaggregated MoSKA deployment at 4M and 16M shared tokens.
+pub fn fig5() -> Table {
+    let mut t = Table::new(&[
+        "shared_ctx", "batch",
+        "uniq_MFU", "uniq_BW", "uniq_mem",
+        "shared_MFU", "shared_BW", "shared_mem",
+    ]);
+    for &s in &[4.0e6f64, 16.0e6] {
+        let sc = Scenario::paper(s);
+        for &b in &[1usize, 4, 16, 64, 128, 256] {
+            let p = evaluate_disagg(&sc, b);
+            let pct = |x: f64| format!("{:.1}%", x * 100.0);
+            t.row(vec![
+                fmt_si(s),
+                b.to_string(),
+                pct(p.unique.mfu), pct(p.unique.bw_util),
+                pct(p.unique.capacity_util),
+                pct(p.shared.mfu), pct(p.shared.bw_util),
+                pct(p.shared.capacity_util),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figures_build() {
+        for (t, rows) in [
+            (fig1a(), 16),
+            (fig1b(), 5),
+            (table1(), 6),
+            (fig4(), 15),
+            (fig5(), 12),
+        ] {
+            let csvish = {
+                // smoke: every row renders
+                t.print("test");
+                rows
+            };
+            let _ = csvish;
+        }
+    }
+
+    #[test]
+    fn headline_gain_is_large() {
+        let (gain, ctx) = headline_gain();
+        // paper: up to 538.7×; our re-derived model should land in the
+        // same order of magnitude (see EXPERIMENTS.md for the comparison)
+        assert!(gain > 50.0, "gain {gain} at ctx {ctx}");
+    }
+}

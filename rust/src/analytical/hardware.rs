@@ -1,0 +1,100 @@
+//! Hardware specifications for the analytical model (paper §IV).
+//!
+//! The paper evaluates on two DGX H200 nodes; per H200 GPU: 141 GB HBM3e,
+//! 4.8 TB/s memory bandwidth, 1979 TFLOPS FP8 (with sparsity off). Other
+//! parts are provided for ablations.
+
+/// One accelerator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub mem_bytes: f64,
+    pub mem_bw: f64,
+    pub flops_fp8: f64,
+}
+
+pub const H200: GpuSpec = GpuSpec {
+    name: "H200",
+    mem_bytes: 141.0e9,
+    mem_bw: 4.8e12,
+    flops_fp8: 1979.0e12,
+};
+
+pub const H100: GpuSpec = GpuSpec {
+    name: "H100",
+    mem_bytes: 80.0e9,
+    mem_bw: 3.35e12,
+    flops_fp8: 1979.0e12,
+};
+
+pub const A100: GpuSpec = GpuSpec {
+    name: "A100",
+    mem_bytes: 80.0e9,
+    mem_bw: 2.0e12,
+    // A100 has no FP8; INT8 tensor ops ≈ 624 TOPS as the stand-in
+    flops_fp8: 624.0e12,
+};
+
+/// A node (DGX: 8 GPUs).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub gpus: usize,
+}
+
+impl NodeSpec {
+    pub const fn dgx(gpu: GpuSpec) -> NodeSpec {
+        NodeSpec { gpu, gpus: 8 }
+    }
+
+    pub fn mem_bytes(&self) -> f64 {
+        self.gpu.mem_bytes * self.gpus as f64
+    }
+
+    pub fn mem_bw(&self) -> f64 {
+        self.gpu.mem_bw * self.gpus as f64
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.gpu.flops_fp8 * self.gpus as f64
+    }
+}
+
+/// The evaluated cluster (paper: 2 × DGX H200).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    pub node: NodeSpec,
+    pub nodes: usize,
+}
+
+impl ClusterSpec {
+    pub const fn paper() -> ClusterSpec {
+        ClusterSpec { node: NodeSpec::dgx(H200), nodes: 2 }
+    }
+
+    pub fn mem_bytes(&self) -> f64 {
+        self.node.mem_bytes() * self.nodes as f64
+    }
+
+    pub fn mem_bw(&self) -> f64 {
+        self.node.mem_bw() * self.nodes as f64
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.node.flops() * self.nodes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_budgets() {
+        let c = ClusterSpec::paper();
+        assert_eq!(c.node.gpus, 8);
+        assert!((c.mem_bytes() - 2.256e12).abs() / 2.256e12 < 1e-9);
+        assert!((c.mem_bw() - 76.8e12).abs() / 76.8e12 < 1e-9);
+        assert!((c.flops() - 31.664e15).abs() / 31.664e15 < 1e-9);
+    }
+}

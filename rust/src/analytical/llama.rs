@@ -1,0 +1,100 @@
+//! Llama 3.1 8B op census for the analytical model (paper §IV workload).
+//!
+//! FLOP and byte counts per decode step follow the standard transformer
+//! accounting (the same first-principles inventory LIFE [13] builds its
+//! validated performance model from): linear layers dominate FLOPs per
+//! token; the KV read dominates bytes at long context.
+
+/// Transformer shape + precision for cost accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct LlmSpec {
+    pub name: &'static str,
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    /// bytes per weight parameter (FP8 = 1).
+    pub bytes_per_param: f64,
+    /// bytes per KV-cache element (FP8 = 1).
+    pub bytes_per_kv: f64,
+}
+
+/// Llama 3.1 8B at FP8 (weights and KV), the paper's model.
+pub const LLAMA31_8B_FP8: LlmSpec = LlmSpec {
+    name: "llama-3.1-8b-fp8",
+    layers: 32,
+    d_model: 4096,
+    heads: 32,
+    kv_heads: 8,
+    head_dim: 128,
+    ffn: 14336,
+    vocab: 128256,
+    bytes_per_param: 1.0,
+    bytes_per_kv: 1.0,
+};
+
+impl LlmSpec {
+    /// Total parameter count (attention + FFN + embeddings).
+    pub fn params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let attn = d * (self.heads * self.head_dim) as f64       // wq
+            + 2.0 * d * (self.kv_heads * self.head_dim) as f64   // wk, wv
+            + (self.heads * self.head_dim) as f64 * d;           // wo
+        let ffn = 3.0 * d * self.ffn as f64;                     // w1,w3,w2
+        let norms = 2.0 * d;
+        let per_layer = attn + ffn + norms;
+        let emb = (self.vocab as f64) * d;                       // tied-ish
+        self.layers as f64 * per_layer + 2.0 * emb + d
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.params() * self.bytes_per_param
+    }
+
+    /// KV-cache bytes per token (all layers, K+V).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.layers * self.kv_heads * self.head_dim) as f64
+            * self.bytes_per_kv
+    }
+
+    /// Linear-layer FLOPs to decode one token (2 × params rule, minus the
+    /// input embedding gather which is not a matmul).
+    pub fn linear_flops_per_token(&self) -> f64 {
+        2.0 * (self.params() - (self.vocab * self.d_model) as f64)
+    }
+
+    /// Attention FLOPs to decode one token against `ctx` context tokens
+    /// (QKᵀ + PV, all layers, all query heads).
+    pub fn attn_flops_per_token(&self, ctx: f64) -> f64 {
+        4.0 * (self.layers * self.heads * self.head_dim) as f64 * ctx
+    }
+
+    /// Activation working-set bytes per request (coarse; decode-time
+    /// activations are tiny next to KV, kept for completeness).
+    pub fn activation_bytes(&self) -> f64 {
+        (self.d_model * 8) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama31_8b_shapes() {
+        let m = LLAMA31_8B_FP8;
+        // ~8B params
+        let p = m.params();
+        assert!((7.5e9..8.6e9).contains(&p), "params {p}");
+        // the well-known 64 KiB KV per token at GQA-8, dh=128, FP8... the
+        // canonical figure: 2*32*8*128 = 65536 bytes
+        assert_eq!(m.kv_bytes_per_token(), 65536.0);
+        // linear flops ≈ 2×params
+        assert!(m.linear_flops_per_token() > 1.4e10);
+        // attention flops: 0.5 MFLOP per ctx token
+        assert_eq!(m.attn_flops_per_token(1.0), 524288.0);
+    }
+}

@@ -1,0 +1,352 @@
+//! Cost models for MoSKA and the four baselines (paper §IV, Table I, Fig 4).
+//!
+//! Each method is a roofline decode-step model over the §IV workload: B
+//! concurrent requests, shared context `s_sh` (1M–16M tokens), unique
+//! context `s_u` (64K) per request, SLO 35 tok/s. Step time is
+//! `max(bytes/BW, flops/peak)` (LIFE-style); max batch is the largest B
+//! that fits memory AND meets the SLO. The decisive differences:
+//!
+//! | method          | shared KV stored | shared KV read/step | shared attn |
+//! |-----------------|------------------|---------------------|-------------|
+//! | FlashAttention  | B ×              | B ×                 | GEMV        |
+//! | LongHeads       | B ×              | B × sparse          | GEMV        |
+//! | SGLang          | 1 ×              | B ×  ← Fig 1(b) wall| GEMV        |
+//! | ChunkAttention  | 1 ×              | 1 ×                 | GEMM        |
+//! | MoSKA           | 1 ×              | 1 × sparse          | GEMM        |
+
+use super::hardware::ClusterSpec;
+use super::llama::LlmSpec;
+
+/// Qualitative feature flags (Table I).
+#[derive(Debug, Clone, Copy)]
+pub struct Features {
+    pub kv_reuse: bool,
+    pub shared_kv_attention: bool,
+    pub kv_routing: bool,
+    pub disaggregated: bool,
+    pub composable_context: bool,
+}
+
+/// Which of the five §IV methods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    FlashAttention,
+    SGLang,
+    LongHeads,
+    ChunkAttention,
+    MoSKA,
+    /// §III.D vision: MoSKA + position-independent composable chunks.
+    UniversalMoSKA,
+}
+
+impl Method {
+    pub const ALL: [Method; 5] = [
+        Method::FlashAttention,
+        Method::SGLang,
+        Method::LongHeads,
+        Method::ChunkAttention,
+        Method::MoSKA,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FlashAttention => "FlashAttention",
+            Method::SGLang => "SGLang",
+            Method::LongHeads => "LongHeads",
+            Method::ChunkAttention => "ChunkAttention",
+            Method::MoSKA => "MoSKA",
+            Method::UniversalMoSKA => "Universal MoSKA",
+        }
+    }
+
+    pub fn features(&self) -> Features {
+        match self {
+            Method::FlashAttention => Features {
+                kv_reuse: false,
+                shared_kv_attention: false,
+                kv_routing: false,
+                disaggregated: false,
+                composable_context: false,
+            },
+            Method::SGLang => Features {
+                kv_reuse: true,
+                shared_kv_attention: false,
+                kv_routing: false,
+                disaggregated: false,
+                composable_context: false,
+            },
+            Method::LongHeads => Features {
+                kv_reuse: false,
+                shared_kv_attention: false,
+                kv_routing: true,
+                disaggregated: false,
+                composable_context: false,
+            },
+            Method::ChunkAttention => Features {
+                kv_reuse: true,
+                shared_kv_attention: true,
+                kv_routing: false,
+                disaggregated: false,
+                composable_context: false,
+            },
+            Method::MoSKA => Features {
+                kv_reuse: true,
+                shared_kv_attention: true,
+                kv_routing: true,
+                disaggregated: true,
+                composable_context: false,
+            },
+            Method::UniversalMoSKA => Features {
+                kv_reuse: true,
+                shared_kv_attention: true,
+                kv_routing: true,
+                disaggregated: true,
+                composable_context: true,
+            },
+        }
+    }
+}
+
+/// Evaluation scenario (paper §IV defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub model: LlmSpec,
+    pub cluster: ClusterSpec,
+    /// Shared context tokens (1M–16M in Fig 4).
+    pub s_shared: f64,
+    /// Unique context tokens per request (64K).
+    pub s_unique: f64,
+    /// Router keep fraction (paper: 25% kept = 75% sparsity).
+    pub keep_frac: f64,
+    /// Target per-request generation speed (35 tok/s).
+    pub slo_tokens_per_sec: f64,
+    /// Search cap for max batch.
+    pub max_batch_cap: usize,
+}
+
+impl Scenario {
+    pub fn paper(s_shared: f64) -> Scenario {
+        Scenario {
+            model: super::llama::LLAMA31_8B_FP8,
+            cluster: ClusterSpec::paper(),
+            s_shared,
+            s_unique: 65536.0,
+            keep_frac: 0.25,
+            slo_tokens_per_sec: 35.0,
+            max_batch_cap: 65536,
+        }
+    }
+
+    pub fn slo_budget_secs(&self) -> f64 {
+        1.0 / self.slo_tokens_per_sec
+    }
+}
+
+/// Per-step cost breakdown for one method at batch B.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCost {
+    pub bytes: f64,
+    pub flops: f64,
+    pub capacity_bytes: f64,
+    pub mem_time: f64,
+    pub compute_time: f64,
+}
+
+impl StepCost {
+    pub fn step_time(&self) -> f64 {
+        self.mem_time.max(self.compute_time)
+    }
+
+    pub fn compute_bound(&self) -> bool {
+        self.compute_time > self.mem_time
+    }
+}
+
+/// Evaluate `method` at batch size `b` under `sc`.
+pub fn step_cost(method: Method, sc: &Scenario, b: f64) -> StepCost {
+    let m = &sc.model;
+    let kv = m.kv_bytes_per_token();
+    let weights = m.weight_bytes();
+    let f = method.features();
+
+    // --- capacity: weights + shared KV (×B if not reused) + unique KV ---
+    let shared_copies = if f.kv_reuse { 1.0 } else { b };
+    let capacity = weights
+        + shared_copies * sc.s_shared * kv
+        + b * sc.s_unique * kv
+        + b * m.activation_bytes();
+
+    // --- bytes per step ---
+    // Weights stream once per step (batched linear layers).
+    // Shared KV: read once for the whole batch only when the method
+    // batches identical-chunk attention into a GEMM (Shared KV Attention);
+    // otherwise every request's GEMV walks it again — Fig 1(b)'s wall.
+    let shared_reads = if f.shared_kv_attention { 1.0 } else { b };
+    // Routing prunes the shared read/compute to keep_frac.
+    let shared_frac = if f.kv_routing { sc.keep_frac } else { 1.0 };
+    let bytes = weights
+        + shared_reads * shared_frac * sc.s_shared * kv
+        + b * sc.s_unique * kv;
+
+    // --- flops per step ---
+    // Same attention math runs either way (GEMV vs GEMM changes *where*
+    // the roofline binds, not the flop count); routing prunes shared work.
+    let flops = b
+        * (m.linear_flops_per_token()
+            + m.attn_flops_per_token(shared_frac * sc.s_shared + sc.s_unique));
+
+    StepCost {
+        bytes,
+        flops,
+        capacity_bytes: capacity,
+        mem_time: bytes / sc.cluster.mem_bw(),
+        compute_time: flops / sc.cluster.flops(),
+    }
+}
+
+/// Outcome of the §IV batch-scaling analysis for one method.
+#[derive(Debug, Clone, Copy)]
+pub struct Outcome {
+    pub method: Method,
+    /// Largest batch that fits memory (ignoring the SLO).
+    pub max_batch_capacity: usize,
+    /// Largest batch that fits memory AND meets the SLO.
+    pub max_batch: usize,
+    /// Aggregate throughput at `max_batch` (tokens/sec).
+    pub throughput: f64,
+    pub step: StepCost,
+}
+
+/// Max batch + throughput under capacity and SLO constraints.
+pub fn evaluate(method: Method, sc: &Scenario) -> Outcome {
+    let fits_mem =
+        |b: usize| step_cost(method, sc, b as f64).capacity_bytes
+            <= sc.cluster.mem_bytes();
+    let meets_slo = |b: usize| {
+        step_cost(method, sc, b as f64).step_time() <= sc.slo_budget_secs()
+    };
+
+    let max_batch_capacity = largest(sc.max_batch_cap, &fits_mem);
+    let max_batch = largest(sc.max_batch_cap, &|b| fits_mem(b) && meets_slo(b));
+    let step = step_cost(method, sc, max_batch.max(1) as f64);
+    // Each live request emits one token per step; at max_batch under the
+    // SLO the system generates B tokens per step.
+    let throughput = if max_batch == 0 {
+        // can't meet the SLO even at B=1: report best-effort rate
+        let c = step_cost(method, sc, 1.0);
+        if max_batch_capacity == 0 { 0.0 } else { 1.0 / c.step_time() }
+    } else {
+        max_batch as f64 / step.step_time().max(1e-12)
+    };
+    Outcome { method, max_batch_capacity, max_batch, throughput, step }
+}
+
+/// Largest `b` in [0, cap] with `ok(b)` (monotone predicate; binary search).
+fn largest(cap: usize, ok: &dyn Fn(usize) -> bool) -> usize {
+    if !ok(1) {
+        return 0;
+    }
+    let mut hi = 1usize;
+    while hi < cap && ok(hi * 2) {
+        hi *= 2;
+    }
+    let mut upper = (hi * 2).min(cap);
+    if ok(upper) {
+        return upper;
+    }
+    let mut lo = hi;
+    while lo + 1 < upper {
+        let mid = (lo + upper) / 2;
+        if ok(mid) {
+            lo = mid;
+        } else {
+            upper = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sc16m() -> Scenario {
+        Scenario::paper(16.0e6)
+    }
+
+    #[test]
+    fn ordering_matches_paper() {
+        // Fig 4's qualitative result: MoSKA ≥ ChunkAttention >> SGLang ≥
+        // {FlashAttention, LongHeads} at large shared context.
+        let sc = sc16m();
+        let t = |m| evaluate(m, &sc).throughput;
+        let moska = t(Method::MoSKA);
+        let chunk = t(Method::ChunkAttention);
+        let sglang = t(Method::SGLang);
+        let flash = t(Method::FlashAttention);
+        assert!(moska >= chunk, "{moska} vs {chunk}");
+        assert!(chunk > sglang, "{chunk} vs {sglang}");
+        assert!(sglang >= flash * 0.9, "{sglang} vs {flash}");
+        // the headline: orders of magnitude over the non-sharing baseline
+        assert!(moska / flash > 50.0, "gain {}", moska / flash);
+    }
+
+    #[test]
+    fn capacity_wall_without_reuse() {
+        // At 16M shared tokens one request's KV is ~1.05 TB; a 2.256 TB
+        // cluster fits at most 2 copies → Flash max batch ≤ 2.
+        let sc = sc16m();
+        let o = evaluate(Method::FlashAttention, &sc);
+        assert!(o.max_batch_capacity <= 2, "{}", o.max_batch_capacity);
+        // sharing methods scale way past that
+        let s = evaluate(Method::MoSKA, &sc);
+        assert!(s.max_batch_capacity > 100, "{}", s.max_batch_capacity);
+    }
+
+    #[test]
+    fn moska_raises_arithmetic_intensity_over_sglang() {
+        // the paper's core claim: Shared KV Attention turns the shared
+        // read from per-request to per-batch, multiplying arithmetic
+        // intensity by ~B on the shared component. At the whole-cluster
+        // level the unique-KV reads still contribute bytes, so compare
+        // intensities and the shared-read traffic directly (the per-node
+        // compute-bound result is asserted in `disagg_model`).
+        let sc = sc16m();
+        let b = 256.0;
+        let moska = step_cost(Method::MoSKA, &sc, b);
+        let sglang = step_cost(Method::SGLang, &sc, b);
+        let ai_moska = moska.flops / moska.bytes;
+        let ai_sglang = sglang.flops / sglang.bytes;
+        assert!(ai_moska > 50.0 * ai_sglang,
+                "intensity {ai_moska} vs {ai_sglang}");
+        assert!(sglang.bytes > 100.0 * moska.bytes,
+                "shared-read wall: {} vs {}", sglang.bytes, moska.bytes);
+        assert!(!sglang.compute_bound(), "sglang must stay memory bound");
+        // MoSKA's compute and memory times are balanced (within 2×) at
+        // B=256 — the roofline knee — while SGLang is >100× memory-skewed.
+        assert!(moska.compute_time > 0.5 * moska.mem_time);
+        assert!(sglang.mem_time > 20.0 * sglang.compute_time,
+                "{} vs {}", sglang.mem_time, sglang.compute_time);
+    }
+
+    #[test]
+    fn monotone_search_helper() {
+        assert_eq!(largest(100, &|b| b <= 37), 37);
+        assert_eq!(largest(100, &|b| b <= 1000), 100);
+        assert_eq!(largest(100, &|_| false), 0);
+        assert_eq!(largest(100, &|b| b <= 1), 1);
+    }
+
+    #[test]
+    fn table1_features() {
+        assert!(!Method::FlashAttention.features().kv_reuse);
+        assert!(Method::SGLang.features().kv_reuse);
+        assert!(!Method::SGLang.features().shared_kv_attention);
+        assert!(Method::ChunkAttention.features().shared_kv_attention);
+        assert!(!Method::ChunkAttention.features().kv_routing);
+        let m = Method::MoSKA.features();
+        assert!(m.kv_reuse && m.shared_kv_attention && m.kv_routing
+                && m.disaggregated && !m.composable_context);
+        assert!(Method::UniversalMoSKA.features().composable_context);
+    }
+}

@@ -1,0 +1,153 @@
+//! Shared-KV batch forming — the L3 half of the paper's core contribution.
+//!
+//! Per decode step, every live query routed to shared chunk `c` is gathered
+//! into ONE `chunk_attn` call: the kernel then computes a `[N, dh] × [dh,
+//! C]` GEMM instead of N independent GEMVs, which is precisely the
+//! Fig 2(a) transformation. The batcher builds that inverted index
+//! (chunk → query rows), splits oversize groups at the largest compiled
+//! bucket, and reports the achieved batching factor (the paper's N).
+//!
+//! Invariants (property-tested in `prop_coordinator.rs`):
+//! * conservation — every (query, routed-chunk) pair appears in exactly
+//!   one batch;
+//! * bucket bound — no batch exceeds `max_batch`;
+//! * determinism — identical inputs form identical batches.
+
+use crate::router::ChunkSet;
+
+/// One formed GEMM batch: all rows attending `chunk`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkBatch {
+    /// Chunk index within the domain.
+    pub chunk: usize,
+    /// Query slots (row indices into the step's query tensor).
+    pub rows: Vec<usize>,
+}
+
+/// Batch-forming statistics for one step.
+#[derive(Debug, Default, Clone)]
+pub struct BatchStats {
+    /// Total (query, chunk) attention pairs.
+    pub pairs: usize,
+    /// Logical per-chunk batches formed.
+    pub calls: usize,
+    /// Largest single batch.
+    pub max_rows: usize,
+    /// Kernel calls actually executed after run coalescing (§Perf opt 2);
+    /// 0 until `shared_attention` fills it.
+    pub exec_calls: usize,
+    /// Distinct chunk loads executed (each shared chunk read once per
+    /// batch — the paper's bandwidth amortization denominator).
+    pub chunk_reads: usize,
+}
+
+impl BatchStats {
+    /// Mean queries per shared-chunk read — the realized bandwidth
+    /// amortization factor N. 1.0 means pure GEMV (no sharing).
+    pub fn batching_factor(&self) -> f64 {
+        let denom = if self.chunk_reads > 0 {
+            self.chunk_reads
+        } else {
+            self.calls
+        };
+        if denom == 0 {
+            0.0
+        } else {
+            self.pairs as f64 / denom as f64
+        }
+    }
+}
+
+/// Form per-chunk batches from per-query routing decisions.
+///
+/// `sets[slot]` lists the chunks query `slot` attends. `max_batch` caps
+/// rows per call (the largest compiled bucket). Batches are emitted in
+/// ascending chunk order; rows within a batch ascend too.
+pub fn form_batches(sets: &[ChunkSet], max_batch: usize)
+                    -> (Vec<ChunkBatch>, BatchStats) {
+    assert!(max_batch > 0);
+    // inverted index: chunk → rows (BTreeMap for deterministic order)
+    let mut index: std::collections::BTreeMap<usize, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    let mut pairs = 0;
+    for (slot, set) in sets.iter().enumerate() {
+        for &c in set {
+            index.entry(c).or_default().push(slot);
+            pairs += 1;
+        }
+    }
+    let mut out = Vec::new();
+    let mut stats = BatchStats {
+        pairs,
+        calls: 0,
+        max_rows: 0,
+        exec_calls: 0,
+        chunk_reads: 0,
+    };
+    for (chunk, rows) in index {
+        for piece in rows.chunks(max_batch) {
+            stats.calls += 1;
+            stats.max_rows = stats.max_rows.max(piece.len());
+            out.push(ChunkBatch { chunk, rows: piece.to_vec() });
+        }
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_by_chunk() {
+        let sets = vec![vec![0, 2], vec![0], vec![2, 5]];
+        let (batches, stats) = form_batches(&sets, 32);
+        assert_eq!(batches, vec![
+            ChunkBatch { chunk: 0, rows: vec![0, 1] },
+            ChunkBatch { chunk: 2, rows: vec![0, 2] },
+            ChunkBatch { chunk: 5, rows: vec![2] },
+        ]);
+        assert_eq!(stats.pairs, 5);
+        assert_eq!(stats.calls, 3);
+        assert!((stats.batching_factor() - 5.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_routing_gives_full_batch() {
+        // the paper's headline case: everyone attends the same shared data
+        let sets = vec![vec![7]; 16];
+        let (batches, stats) = form_batches(&sets, 32);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].rows.len(), 16);
+        assert_eq!(stats.batching_factor(), 16.0);
+    }
+
+    #[test]
+    fn splits_at_max_batch() {
+        let sets = vec![vec![3]; 70];
+        let (batches, stats) = form_batches(&sets, 32);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].rows.len(), 32);
+        assert_eq!(batches[2].rows.len(), 6);
+        assert_eq!(stats.max_rows, 32);
+        // conservation
+        let total: usize = batches.iter().map(|b| b.rows.len()).sum();
+        assert_eq!(total, 70);
+    }
+
+    #[test]
+    fn empty_sets_no_batches() {
+        let (batches, stats) = form_batches(&[vec![], vec![]], 8);
+        assert!(batches.is_empty());
+        assert_eq!(stats.pairs, 0);
+        assert_eq!(stats.batching_factor(), 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let sets = vec![vec![1, 9, 4], vec![9, 1], vec![4]];
+        let a = form_batches(&sets, 2);
+        let b = form_batches(&sets, 2);
+        assert_eq!(a.0, b.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! JSON config-file loading for the launcher (`--config serve.json`).
+//!
+//! Every CLI knob can instead live in a config file; explicit CLI flags
+//! win over file values, which win over defaults — the usual layering a
+//! deployable launcher needs.
+//!
+//! ```json
+//! {
+//!   "serving":  {"top_k": 16, "max_batch": 32, "slo_tokens_per_sec": 35,
+//!                "route_every_layer": false, "position_independent": false},
+//!   "backend":  "xla",
+//!   "artifacts": "artifacts",
+//!   "addr":     "127.0.0.1:8080",
+//!   "workload": {"rate": 8.0, "domain_skew": 1.1, "unique_only_frac": 0.1}
+//! }
+//! ```
+
+use anyhow::{Context, Result};
+
+use crate::config::ServingConfig;
+use crate::util::json::Json;
+use crate::workload::WorkloadConfig;
+
+/// Parsed launcher configuration (all sections optional).
+#[derive(Debug, Clone, Default)]
+pub struct FileConfig {
+    pub serving: Option<ServingConfig>,
+    pub workload: Option<WorkloadConfig>,
+    pub backend: Option<String>,
+    pub artifacts: Option<String>,
+    pub addr: Option<String>,
+}
+
+impl FileConfig {
+    pub fn load(path: &str) -> Result<FileConfig> {
+        let j = Json::read_file(path)
+            .with_context(|| format!("loading config {path}"))?;
+        FileConfig::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<FileConfig> {
+        let mut out = FileConfig::default();
+        if let Some(s) = j.opt("serving") {
+            out.serving = Some(serving_from_json(s)?);
+        }
+        if let Some(w) = j.opt("workload") {
+            out.workload = Some(workload_from_json(w)?);
+        }
+        if let Some(b) = j.opt("backend") {
+            out.backend = Some(b.as_str()?.to_string());
+        }
+        if let Some(a) = j.opt("artifacts") {
+            out.artifacts = Some(a.as_str()?.to_string());
+        }
+        if let Some(a) = j.opt("addr") {
+            out.addr = Some(a.as_str()?.to_string());
+        }
+        Ok(out)
+    }
+}
+
+fn serving_from_json(j: &Json) -> Result<ServingConfig> {
+    let mut c = ServingConfig::default();
+    if let Some(v) = j.opt("top_k") {
+        c.top_k = match v.as_usize()? {
+            0 => None,
+            k => Some(k),
+        };
+    }
+    if let Some(v) = j.opt("max_batch") {
+        c.max_batch = v.as_usize()?;
+    }
+    if let Some(v) = j.opt("slo_tokens_per_sec") {
+        c.slo_tokens_per_sec = v.as_f64()?;
+    }
+    if let Some(v) = j.opt("max_unique_pages") {
+        c.max_unique_pages = v.as_usize()?;
+    }
+    if let Some(v) = j.opt("route_every_layer") {
+        c.route_every_layer = v.as_bool()?;
+    }
+    if let Some(v) = j.opt("position_independent") {
+        c.position_independent = v.as_bool()?;
+    }
+    Ok(c)
+}
+
+fn workload_from_json(j: &Json) -> Result<WorkloadConfig> {
+    let mut c = WorkloadConfig::default();
+    if let Some(v) = j.opt("rate") {
+        c.rate = v.as_f64()?;
+    }
+    if let Some(v) = j.opt("domain_skew") {
+        c.domain_skew = v.as_f64()?;
+    }
+    if let Some(v) = j.opt("unique_only_frac") {
+        c.unique_only_frac = v.as_f64()?;
+    }
+    if let Some(v) = j.opt("domains") {
+        c.domains = v
+            .as_arr()?
+            .iter()
+            .map(|d| Ok(d.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(v) = j.opt("prompt_len") {
+        let r = v.as_usize_vec()?;
+        anyhow::ensure!(r.len() == 2, "prompt_len wants [lo, hi]");
+        c.prompt_len = (r[0], r[1]);
+    }
+    if let Some(v) = j.opt("max_new") {
+        let r = v.as_usize_vec()?;
+        anyhow::ensure!(r.len() == 2, "max_new wants [lo, hi]");
+        c.max_new = (r[0], r[1]);
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_parses() {
+        let j = Json::parse(
+            r#"{"serving": {"top_k": 8, "max_batch": 16,
+                            "position_independent": true},
+                "backend": "native", "addr": "0.0.0.0:9090",
+                "workload": {"rate": 3.5, "domains": ["legal"],
+                             "prompt_len": [4, 9]}}"#,
+        )
+        .unwrap();
+        let c = FileConfig::from_json(&j).unwrap();
+        let s = c.serving.unwrap();
+        assert_eq!(s.top_k, Some(8));
+        assert_eq!(s.max_batch, 16);
+        assert!(s.position_independent);
+        assert_eq!(c.backend.as_deref(), Some("native"));
+        let w = c.workload.unwrap();
+        assert_eq!(w.rate, 3.5);
+        assert_eq!(w.domains, vec!["legal"]);
+        assert_eq!(w.prompt_len, (4, 9));
+    }
+
+    #[test]
+    fn empty_config_is_default() {
+        let c = FileConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(c.serving.is_none());
+        assert!(c.backend.is_none());
+    }
+
+    #[test]
+    fn top_k_zero_means_dense() {
+        let j = Json::parse(r#"{"serving": {"top_k": 0}}"#).unwrap();
+        let c = FileConfig::from_json(&j).unwrap();
+        assert_eq!(c.serving.unwrap().top_k, None);
+    }
+
+    #[test]
+    fn bad_shapes_error() {
+        let j = Json::parse(r#"{"serving": {"max_batch": "lots"}}"#).unwrap();
+        assert!(FileConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"workload": {"prompt_len": [1]}}"#).unwrap();
+        assert!(FileConfig::from_json(&j).is_err());
+    }
+}

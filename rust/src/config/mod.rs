@@ -1,0 +1,132 @@
+//! Configuration: model architecture, serving knobs, hardware specs.
+//!
+//! [`ModelConfig`] is read from `artifacts/manifest.json` (the python
+//! compile path is the source of truth for shapes). [`ServingConfig`] and
+//! [`workload`][crate::workload] knobs are CLI/JSON-settable. Hardware
+//! specs for the analytical model live in
+//! [`analytical::hardware`][crate::analytical::hardware].
+
+pub mod file;
+
+pub use file::FileConfig;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// moska-tiny architecture, mirrored from the artifact manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            vocab: j.get("vocab")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            n_kv_heads: j.get("n_kv_heads")?.as_usize()?,
+            head_dim: j.get("head_dim")?.as_usize()?,
+            ffn_dim: j.get("ffn_dim")?.as_usize()?,
+            rope_theta: j.get("rope_theta")?.as_f64()?,
+            rms_eps: j.get("rms_eps")?.as_f64()?,
+        })
+    }
+
+    /// Query heads per KV head (GQA group size).
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// The moska-tiny defaults (kept in sync with python/compile/configs.py;
+    /// tests cross-check against the manifest).
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            ffn_dim: 192,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+}
+
+/// Serving-engine knobs (paper §III.B routing + §IV workload SLO).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Top-k shared chunks per query; `None` = dense (exact) attention.
+    pub top_k: Option<usize>,
+    /// Max live decode batch the scheduler admits.
+    pub max_batch: usize,
+    /// Target per-request generation speed (paper: 35 tok/s).
+    pub slo_tokens_per_sec: f64,
+    /// Unique-KV pages per request cap (admission control).
+    pub max_unique_pages: usize,
+    /// Route once per decode step using layer-0 queries (paper's
+    /// lightweight router); chunk set is reused across layers.
+    pub route_every_layer: bool,
+    /// Position-independent chunk composition (Universal MoSKA §III.D):
+    /// shared chunks are attended with their *local* positions, allowing
+    /// arbitrary chunk libraries at the cost of exactness vs a monolithic
+    /// prefix (documented approximation, default off).
+    pub position_independent: bool,
+}
+
+impl Default for ServingConfig {
+    fn default() -> ServingConfig {
+        ServingConfig {
+            top_k: None,
+            max_batch: 32,
+            slo_tokens_per_sec: 35.0,
+            max_unique_pages: 64,
+            route_every_layer: false,
+            position_independent: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_consistency() {
+        let c = ModelConfig::tiny();
+        assert_eq!(c.group(), 2);
+        assert_eq!(c.q_dim(), 64);
+        assert_eq!(c.kv_dim(), 32);
+    }
+
+    #[test]
+    fn from_json() {
+        let j = Json::parse(
+            r#"{"vocab":256,"d_model":64,"n_layers":2,"n_heads":4,
+                "n_kv_heads":2,"head_dim":16,"ffn_dim":192,
+                "rope_theta":10000.0,"rms_eps":1e-5}"#,
+        )
+        .unwrap();
+        assert_eq!(ModelConfig::from_json(&j).unwrap(), ModelConfig::tiny());
+    }
+}

@@ -1,0 +1,448 @@
+//! Live disaggregated two-node simulation (paper §III.C, Fig 3).
+//!
+//! Splits the decode loop across two "nodes" joined by a message fabric
+//! (threads + channels standing in for the inter-node interconnect):
+//!
+//! * **Unique KV node** — embed, QKV projection, FFN, LM head, and the
+//!   per-request unique-KV attention (memory-bound GEMVs).
+//! * **Shared KV node** — holds the Domain Shared KV store resident and
+//!   serves batched Shared-KV GEMM attention for routed chunk sets.
+//!
+//! Each node tracks the bytes it touches and the FLOPs it executes (tiny-
+//! model op census), so `moska disagg` prints the measured analogue of
+//! Fig 5: shared-node traffic flat in batch size, unique-node traffic
+//! linear, GEMM batching factor rising with batch.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::attention::{shared_attention, unique_attention, RowAccumulator};
+use crate::config::ModelConfig;
+use crate::kvcache::paged::{PagePool, RequestKv};
+use crate::kvcache::shared_store::SharedStore;
+use crate::metrics::UtilizationEstimator;
+use crate::model::Weights;
+use crate::router::{ChunkSet, Router};
+use crate::runtime::native::Partials;
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+/// Request to the shared node: one layer's routed shared attention.
+struct SharedReq {
+    layer: usize,
+    domain: String,
+    q: Tensor,
+    q_pos: Vec<i32>,
+    sets: Vec<ChunkSet>,
+    reply: Sender<Result<Vec<Partials>>>,
+}
+
+/// Handle to the shared node thread.
+pub struct SharedNode {
+    tx: Sender<SharedReq>,
+    pub util: Arc<UtilizationEstimator>,
+    pub busy: Arc<std::sync::atomic::AtomicU64>, // ns
+    /// (query, chunk) pairs served / GEMM calls issued — the realized
+    /// batching factor is pairs / calls.
+    pub pairs: Arc<std::sync::atomic::AtomicU64>,
+    pub calls: Arc<std::sync::atomic::AtomicU64>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SharedNode {
+    /// Spawn the node owning `store` and executing on `backend`.
+    pub fn spawn(backend: Arc<dyn Backend>, store: Arc<SharedStore>,
+                 max_batch: usize) -> SharedNode {
+        let (tx, rx) = channel::<SharedReq>();
+        let util = Arc::new(UtilizationEstimator::default());
+        let busy = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let pairs = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let calls = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let u = Arc::clone(&util);
+        let b = Arc::clone(&busy);
+        let (pa, ca) = (Arc::clone(&pairs), Arc::clone(&calls));
+        let cfg = backend.model().clone();
+        let join = std::thread::Builder::new()
+            .name("moska-shared-node".into())
+            .spawn(move || {
+                u.set_bytes_resident(store.resident_bytes() as u64);
+                while let Ok(req) = rx.recv() {
+                    let t0 = Instant::now();
+                    let result = serve_shared(
+                        backend.as_ref(), &store, &cfg, &req, max_batch, &u,
+                        &pa, &ca,
+                    );
+                    b.fetch_add(t0.elapsed().as_nanos() as u64,
+                                Ordering::Relaxed);
+                    let _ = req.reply.send(result);
+                }
+            })
+            .expect("spawn shared node");
+        SharedNode { tx, util, busy, pairs, calls, join: Some(join) }
+    }
+
+    /// Synchronous shared-attention RPC (the fabric round trip).
+    pub fn attend(&self, layer: usize, domain: &str, q: Tensor,
+                  q_pos: Vec<i32>, sets: Vec<ChunkSet>)
+                  -> Result<Vec<Partials>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(SharedReq {
+                layer,
+                domain: domain.to_string(),
+                q,
+                q_pos,
+                sets,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("shared node gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("shared node dropped"))?
+    }
+}
+
+impl Drop for SharedNode {
+    fn drop(&mut self) {
+        // closing the channel stops the thread
+        let (dummy_tx, _) = channel();
+        let _ = std::mem::replace(&mut self.tx, dummy_tx);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_shared(backend: &dyn Backend, store: &SharedStore,
+                cfg: &ModelConfig, req: &SharedReq, max_batch: usize,
+                util: &UtilizationEstimator,
+                pairs: &std::sync::atomic::AtomicU64,
+                calls: &std::sync::atomic::AtomicU64)
+                -> Result<Vec<Partials>> {
+    let dom = store.domain(&req.domain)?;
+    let b = req.q.shape()[0];
+    let mut acc = RowAccumulator::identity(b, cfg.n_heads, cfg.head_dim);
+    let stats = shared_attention(
+        backend, dom, req.layer, &req.q, &req.q_pos, &req.sets, &mut acc,
+        false, max_batch,
+    )?;
+    // op census: each GEMM call reads one chunk of K+V once (that's the
+    // whole point) and runs 2·2·H·dh·chunk flops per routed query row.
+    let chunk = store.chunk;
+    let kv_bytes_per_chunk =
+        2 * chunk * cfg.n_kv_heads * cfg.head_dim * 4;
+    util.add_bytes_read((stats.calls * kv_bytes_per_chunk) as u64);
+    let flops_per_pair = 4 * cfg.n_heads * cfg.head_dim * chunk;
+    util.add_flops((stats.pairs * flops_per_pair) as u64);
+    pairs.fetch_add(stats.pairs as u64, Ordering::Relaxed);
+    calls.fetch_add(stats.calls as u64, Ordering::Relaxed);
+    Ok(acc.into_rows())
+}
+
+/// The unique node + driver: owns weights, unique KV, sampling.
+pub struct DisaggCluster {
+    pub backend: Arc<dyn Backend>,
+    pub weights: Weights,
+    pub shared: Arc<SharedStore>,
+    pub shared_node: SharedNode,
+    pub unique_util: Arc<UtilizationEstimator>,
+    pub pool: PagePool,
+    pub router: Router,
+    pub max_batch: usize,
+}
+
+/// One simulated live request (decode-only; state seeded synthetically).
+pub struct SimRequest {
+    pub kv: RequestKv,
+    pub cur: i32,
+    pub pos: i32,
+    pub domain: String,
+    pub routed: ChunkSet,
+}
+
+/// Per-batch-point measurements (the Fig 5 live analogue).
+#[derive(Debug, Clone)]
+pub struct SimPoint {
+    pub batch: usize,
+    pub steps: usize,
+    pub mean_step: Duration,
+    pub shared_bytes_per_step: f64,
+    pub unique_bytes_per_step: f64,
+    pub shared_flops_per_step: f64,
+    pub unique_flops_per_step: f64,
+    pub batching_factor: f64,
+    pub shared_busy_frac: f64,
+}
+
+impl DisaggCluster {
+    pub fn new(backend: Arc<dyn Backend>, weights: Weights,
+               shared: Arc<SharedStore>, top_k: Option<usize>,
+               max_batch: usize) -> DisaggCluster {
+        let cfg = backend.model().clone();
+        let chunk = backend.chunk_size();
+        let shared_node =
+            SharedNode::spawn(Arc::clone(&backend), Arc::clone(&shared),
+                              max_batch);
+        DisaggCluster {
+            backend,
+            weights,
+            shared,
+            shared_node,
+            unique_util: Arc::new(UtilizationEstimator::default()),
+            pool: PagePool::new(8192, chunk, cfg.n_kv_heads, cfg.head_dim),
+            router: Router::new(top_k),
+            max_batch,
+        }
+    }
+
+    /// Seed `b` decode-ready requests over `domain` with `unique_tokens`
+    /// of synthetic (random) unique KV each.
+    pub fn seed_requests(&mut self, b: usize, domain: &str,
+                         unique_tokens: usize, seed: u64)
+                         -> Result<Vec<SimRequest>> {
+        let cfg = self.backend.model().clone();
+        let shared_len = self.shared.domain(domain)?.token_len();
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(b);
+        for _ in 0..b {
+            let mut kv = RequestKv::new(cfg.n_layers, shared_len);
+            let mut per_layer = Vec::new();
+            for _ in 0..cfg.n_layers {
+                let n = unique_tokens * cfg.n_kv_heads * cfg.head_dim;
+                let mut k = vec![0f32; n];
+                let mut v = vec![0f32; n];
+                rng.fill_normal_f32(&mut k);
+                rng.fill_normal_f32(&mut v);
+                let shape = [unique_tokens, cfg.n_kv_heads, cfg.head_dim];
+                per_layer.push((Tensor::f32(&shape, k),
+                                Tensor::f32(&shape, v)));
+            }
+            kv.append(&mut self.pool, &per_layer)?;
+            out.push(SimRequest {
+                kv,
+                cur: rng.below(cfg.vocab as u64) as i32,
+                pos: (shared_len + unique_tokens) as i32,
+                domain: domain.to_string(),
+                routed: ChunkSet::new(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// One synchronized decode step across both nodes.
+    pub fn step(&mut self, reqs: &mut [SimRequest]) -> Result<()> {
+        let cfg = self.backend.model().clone();
+        let b = reqs.len();
+        let tokens = Tensor::i32(&[b], reqs.iter().map(|r| r.cur).collect());
+        let pos: Vec<i32> = reqs.iter().map(|r| r.pos).collect();
+
+        // ---- unique node: embed + weights census
+        let mut x = self.backend.embed(&tokens, self.weights.embed())?;
+        self.unique_util.add_bytes_read(
+            (self.weights.param_count() * 4) as u64,
+        );
+        self.unique_util.add_flops(
+            (2 * self.weights.param_count() * b) as u64,
+        );
+
+        for layer in 0..cfg.n_layers {
+            let lw = self.weights.layer(layer);
+            let (q, k, v) = self.backend.qkv(
+                &x, lw.attn_norm, lw.wq, lw.wk, lw.wv, &pos,
+            )?;
+            for (i, r) in reqs.iter_mut().enumerate() {
+                let kr = Tensor::f32(
+                    &[1, cfg.n_kv_heads, cfg.head_dim],
+                    k.index0(i).to_vec(),
+                );
+                let vr = Tensor::f32(
+                    &[1, cfg.n_kv_heads, cfg.head_dim],
+                    v.index0(i).to_vec(),
+                );
+                r.kv.append_layer(&mut self.pool, layer, &kr, &vr)?;
+            }
+
+            // ---- route (unique node does the lightweight scoring)
+            let dom_name = reqs[0].domain.clone();
+            let dom = self.shared.domain(&dom_name)?;
+            let sets: Vec<ChunkSet> = if layer == 0 {
+                let s = self.router.route(
+                    self.backend.as_ref(), &q, dom.embeddings(layer),
+                )?;
+                for (r, set) in reqs.iter_mut().zip(&s) {
+                    r.routed = set.clone();
+                }
+                s
+            } else {
+                reqs.iter().map(|r| r.routed.clone()).collect()
+            };
+
+            // ---- fabric RPC to the shared node (GEMM side)
+            let shared_parts = self.shared_node.attend(
+                layer, &dom_name, q.clone(), pos.clone(), sets,
+            )?;
+
+            // ---- unique node: per-request GEMV attention meanwhile
+            let mut acc =
+                RowAccumulator::identity(b, cfg.n_heads, cfg.head_dim);
+            for (i, r) in reqs.iter().enumerate() {
+                let qr = Tensor::f32(
+                    &[1, cfg.n_heads, cfg.head_dim],
+                    q.index0(i).to_vec(),
+                );
+                let part = unique_attention(
+                    self.backend.as_ref(), &self.pool, &r.kv, layer, &qr,
+                    &[pos[i]],
+                )?;
+                acc.merge_row(i, &part);
+                // census: reads its own pages once per request (GEMV)
+                let page_bytes = self.pool.page_bytes();
+                self.unique_util.add_bytes_read(
+                    (r.kv.page_count_layer(layer) * page_bytes) as u64,
+                );
+                self.unique_util.add_flops(
+                    (4 * cfg.n_heads * cfg.head_dim * r.kv.layer_len(layer))
+                        as u64,
+                );
+            }
+            for (i, p) in shared_parts.iter().enumerate() {
+                acc.merge_row(i, p);
+            }
+            let attn_o = acc.finalize();
+            x = self.backend.post(
+                &attn_o, &x, lw.wo, lw.ffn_norm, lw.w1, lw.w3, lw.w2,
+            )?;
+        }
+        let logits = self.backend.lm_head(
+            &x, self.weights.final_norm(), self.weights.lm_head(),
+        )?;
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.kv.commit(1); // one token's K/V appended across all layers
+            r.cur = crate::model::sampling::argmax(logits.row(i));
+            r.pos += 1;
+        }
+        self.unique_util.set_bytes_resident(
+            (self.pool.allocated() * self.pool.page_bytes()) as u64,
+        );
+        Ok(())
+    }
+
+    /// Drive `steps` decode steps at batch `b`; return the measurements.
+    pub fn run_point(&mut self, b: usize, domain: &str, unique_tokens: usize,
+                     steps: usize) -> Result<SimPoint> {
+        let mut reqs = self.seed_requests(b, domain, unique_tokens, b as u64)?;
+        // deltas against counters at point start
+        let shared0 = snapshot(&self.shared_node.util);
+        let unique0 = snapshot(&self.unique_util);
+        let busy0 = self.shared_node.busy.load(Ordering::Relaxed);
+        let pairs0 = self.shared_node.pairs.load(Ordering::Relaxed);
+        let calls0 = self.shared_node.calls.load(Ordering::Relaxed);
+
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            self.step(&mut reqs)?;
+        }
+        let wall = t0.elapsed();
+
+        let shared1 = snapshot(&self.shared_node.util);
+        let unique1 = snapshot(&self.unique_util);
+        let busy1 = self.shared_node.busy.load(Ordering::Relaxed);
+        let pairs =
+            (self.shared_node.pairs.load(Ordering::Relaxed) - pairs0) as f64;
+        let calls =
+            (self.shared_node.calls.load(Ordering::Relaxed) - calls0) as f64;
+        for r in reqs.iter_mut() {
+            r.kv.release(&mut self.pool);
+        }
+        Ok(SimPoint {
+            batch: b,
+            steps,
+            mean_step: wall / steps as u32,
+            shared_bytes_per_step: (shared1.1 - shared0.1) as f64
+                / steps as f64,
+            unique_bytes_per_step: (unique1.1 - unique0.1) as f64
+                / steps as f64,
+            shared_flops_per_step: (shared1.0 - shared0.0) as f64
+                / steps as f64,
+            unique_flops_per_step: (unique1.0 - unique0.0) as f64
+                / steps as f64,
+            batching_factor: if calls > 0.0 { pairs / calls } else { 0.0 },
+            shared_busy_frac: (busy1 - busy0) as f64
+                / wall.as_nanos() as f64,
+        })
+    }
+}
+
+fn snapshot(u: &UtilizationEstimator) -> (u64, u64) {
+    (u.flops.load(Ordering::Relaxed), u.bytes_read.load(Ordering::Relaxed))
+}
+
+/// `moska disagg`: sweep batch sizes and print the per-node profile.
+pub fn run_sim(args: &Args) -> Result<()> {
+    let dir = match args.get("artifacts") {
+        Some("") | None => crate::runtime::artifact::default_artifacts_dir(),
+        Some(d) => d.to_string(),
+    };
+    let batches: Vec<usize> = args
+        .str("batches")?
+        .split(',')
+        .map(|s| s.trim().parse().context("bad batch list"))
+        .collect::<Result<_>>()?;
+    let steps = args.usize("steps")?;
+    let backend_name = args.str("backend")?;
+
+    let man = crate::runtime::Manifest::load(&dir)?;
+    let weights = Weights::load(
+        man.weights_path().to_str().context("utf8")?, man.model.clone(),
+    )?;
+    let shared = Arc::new(SharedStore::load_from_manifest(&man)?);
+    let backend: Arc<dyn Backend> = match backend_name.as_str() {
+        "native" => Arc::new(crate::runtime::NativeBackend::new(
+            man.model.clone(), man.chunk,
+        )),
+        "xla" => {
+            let svc = crate::runtime::RuntimeService::spawn(&dir)?;
+            let be = crate::runtime::XlaBackend::new(svc.handle());
+            // keep the service alive for the process lifetime
+            std::mem::forget(svc);
+            Arc::new(be)
+        }
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+
+    let mut table = Table::new(&[
+        "batch", "mean_step", "sh_bytes/step", "uq_bytes/step",
+        "sh_flops/step", "uq_flops/step", "gemm_N", "sh_busy",
+    ]);
+    for &b in &batches {
+        let mut cluster = DisaggCluster::new(
+            Arc::clone(&backend),
+            Weights::load(man.weights_path().to_str().unwrap(),
+                          man.model.clone())?,
+            Arc::clone(&shared),
+            Some(4),
+            32,
+        );
+        let p = cluster.run_point(b, "legal", 96, steps)?;
+        table.row(vec![
+            b.to_string(),
+            format!("{:?}", p.mean_step),
+            crate::util::bench::fmt_bytes(p.shared_bytes_per_step),
+            crate::util::bench::fmt_bytes(p.unique_bytes_per_step),
+            crate::util::bench::fmt_si(p.shared_flops_per_step),
+            crate::util::bench::fmt_si(p.unique_flops_per_step),
+            format!("{:.2}", p.batching_factor),
+            format!("{:.1}%", p.shared_busy_frac * 100.0),
+        ]);
+    }
+    table.print("disaggregated two-node simulation (live, tiny model)");
+    table.write_csv("disagg_sim")?;
+    let _ = weights;
+    Ok(())
+}

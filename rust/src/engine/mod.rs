@@ -1,0 +1,696 @@
+//! The MoSKA serving engine: request lifecycle, prefill, batched decode.
+//!
+//! One decode step for B live requests (Fig 2(b), end to end):
+//!
+//! 1. embed the B current tokens (`embed` artifact);
+//! 2. per layer: `qkv` (+RoPE), append new K/V to each request's paged
+//!    unique cache, **route** each query to top-k shared chunks (§III.B),
+//!    **form Shared-KV GEMM batches** across requests ([`batcher`]),
+//!    execute the Pallas chunk-attention artifact per batch, run the
+//!    per-request unique-KV attention, LSE-merge everything, `post`;
+//! 3. `lm_head` + sampling, continuous-batching refill.
+//!
+//! With dense routing the output is bit-comparable (≤1e-4) to the
+//! monolithic JAX reference — `integration_engine.rs` replays the golden
+//! decode traces to prove all three layers compose.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::attention::{shared_attention, unique_attention, RowAccumulator};
+use crate::config::{ModelConfig, ServingConfig};
+use crate::kvcache::paged::{PagePool, RequestKv};
+use crate::kvcache::shared_store::SharedStore;
+use crate::metrics::Metrics;
+use crate::model::sampling::Sampler;
+use crate::model::Weights;
+use crate::router::{ChunkSet, Router};
+use crate::runtime::Backend;
+use crate::scheduler::{Admit, AdmissionController, Demand, SloTracker,
+                       StepScheduler};
+use crate::tensor::Tensor;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+pub mod register;
+pub mod replay;
+pub mod sessions;
+
+/// A submitted generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    /// Shared-context domain (persistent KV library) or None.
+    pub domain: Option<String>,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub sampler: Sampler,
+    /// Multi-turn conversation this request continues (paper §II.A prefix
+    /// reuse); the session's unique KV survives across turns.
+    pub session: Option<u64>,
+}
+
+/// Completed request output.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: usize,
+    pub tokens: Vec<i32>,
+    /// Per-step logits (only when capture is on — golden tests).
+    pub logits_trace: Vec<Vec<f32>>,
+    /// Time spent queued before prefill started (continuous batching).
+    pub queue_secs: f64,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+}
+
+/// In-flight request state.
+struct Live {
+    req: Request,
+    kv: RequestKv,
+    /// Shared-prefix length (kept for observability/debug dumps).
+    #[allow(dead_code)]
+    shared_len: usize,
+    cur: i32,
+    pos: i32,
+    generated: Vec<i32>,
+    logits_trace: Vec<Vec<f32>>,
+    queue_secs: f64,
+    prefill_secs: f64,
+    decode_t0: Option<Instant>,
+    /// Chunk set from the last routing decision (refreshed at layer 0, or
+    /// every layer when `route_every_layer`).
+    routed: ChunkSet,
+}
+
+/// The serving engine (single-node; [`disagg`][crate::disagg] splits it).
+pub struct Engine {
+    pub backend: Box<dyn Backend>,
+    pub weights: Weights,
+    pub shared: SharedStore,
+    pub pool: PagePool,
+    pub router: Router,
+    pub sched: StepScheduler,
+    pub admission: AdmissionController,
+    pub slo: SloTracker,
+    pub cfg: ServingConfig,
+    pub metrics: Metrics,
+    pub capture_logits: bool,
+    live: HashMap<usize, Live>,
+    pending: HashMap<usize, (Request, Instant)>,
+    results: Vec<RequestResult>,
+    rng: Rng,
+    next_id: usize,
+    /// Running sum/count for the realized GEMM batching factor.
+    batch_pairs: u64,
+    batch_calls: u64,
+    /// Multi-turn session states (see [`sessions`]).
+    pub(crate) sessions: HashMap<u64, sessions::SessionState>,
+    pub(crate) next_session: u64,
+}
+
+impl Engine {
+    pub fn new(backend: Box<dyn Backend>, weights: Weights,
+               shared: SharedStore, cfg: ServingConfig,
+               pool_pages: usize) -> Engine {
+        let model = backend.model().clone();
+        let chunk = backend.chunk_size();
+        let pool = PagePool::new(pool_pages, chunk, model.n_kv_heads,
+                                 model.head_dim);
+        Engine {
+            router: Router::new(cfg.top_k),
+            sched: StepScheduler::new(cfg.max_batch),
+            admission: AdmissionController::new(1024),
+            slo: SloTracker::new(cfg.slo_tokens_per_sec),
+            backend,
+            weights,
+            shared,
+            pool,
+            cfg,
+            metrics: Metrics::new(),
+            capture_logits: false,
+            live: HashMap::new(),
+            pending: HashMap::new(),
+            results: Vec::new(),
+            rng: Rng::new(0xDEC0DE),
+            next_id: 0,
+            batch_pairs: 0,
+            batch_calls: 0,
+            sessions: HashMap::new(),
+            next_session: 0,
+        }
+    }
+
+    pub fn model(&self) -> &ModelConfig {
+        self.backend.model()
+    }
+
+    /// Submit a request; returns its id or an admission error.
+    pub fn submit(&mut self, domain: Option<&str>, prompt: Vec<i32>,
+                  max_new: usize, sampler: Sampler) -> Result<usize> {
+        if let Some(d) = domain {
+            self.shared.domain(d)?; // validate early
+        }
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let model = self.backend.model();
+        let chunk = self.backend.chunk_size();
+        let demand = Demand {
+            pages: model.n_layers
+                * (prompt.len() + max_new).div_ceil(chunk),
+        };
+        match self.admission.check(&demand, self.pool.available(),
+                                   self.sched.queued()) {
+            Admit::Ok => {}
+            Admit::NoPages { need, available } => {
+                bail!("admission rejected: need {need} KV pages, {available} available")
+            }
+            Admit::QueueFull => bail!("admission rejected: queue full"),
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request {
+            id,
+            domain: domain.map(str::to_string),
+            prompt,
+            max_new,
+            sampler,
+            session: None,
+        };
+        self.pending.insert(id, (req, Instant::now()));
+        self.sched.enqueue(id);
+        self.metrics.count("requests_submitted", 1);
+        Ok(id)
+    }
+
+    /// Internal submit used by [`sessions`] (skips re-validation the
+    /// caller already did and carries the session id).
+    pub(crate) fn submit_request(&mut self, req: Request) -> usize {
+        let id = req.id;
+        self.pending.insert(id, (req, Instant::now()));
+        self.sched.enqueue(id);
+        self.metrics.count("requests_submitted", 1);
+        id
+    }
+
+    /// Whether any request is queued or in flight.
+    pub fn has_work(&self) -> bool {
+        !self.sched.is_idle() || !self.live.is_empty()
+    }
+
+    /// Take completed results accumulated so far.
+    pub fn take_results(&mut self) -> Vec<RequestResult> {
+        std::mem::take(&mut self.results)
+    }
+
+    /// Realized Shared-KV GEMM batching factor since start.
+    pub fn batching_factor(&self) -> f64 {
+        if self.batch_calls == 0 {
+            0.0
+        } else {
+            self.batch_pairs as f64 / self.batch_calls as f64
+        }
+    }
+
+    /// Per-phase decode-step time breakdown: (phase, total_secs, share).
+    pub fn phase_report(&self) -> Vec<(String, f64, f64)> {
+        let names = [
+            "phase_embed_ns", "phase_qkv_ns", "phase_append_ns",
+            "phase_shared_ns", "phase_unique_ns", "phase_post_ns",
+            "phase_lm_head_ns",
+        ];
+        let totals: Vec<(String, f64)> = names
+            .iter()
+            .map(|n| {
+                let t = self
+                    .metrics
+                    .histogram(n)
+                    .map(|h| h.mean_ns() * h.count() as f64 / 1e9)
+                    .unwrap_or(0.0);
+                (n.trim_end_matches("_ns").to_string(), t)
+            })
+            .collect();
+        let sum: f64 = totals.iter().map(|(_, t)| t).sum::<f64>().max(1e-12);
+        totals
+            .into_iter()
+            .map(|(n, t)| (n, t, t / sum))
+            .collect()
+    }
+
+    /// Advance the engine by one step (prefill newly admitted requests,
+    /// then one decode step for the live batch). Returns true if any work
+    /// remains afterwards.
+    pub fn step(&mut self) -> Result<bool> {
+        let newly = self.sched.refill();
+        for id in newly {
+            let (req, submitted) =
+                self.pending.remove(&id).context("pending missing")?;
+            let t0 = Instant::now();
+            let queue_secs = (t0 - submitted).as_secs_f64();
+            let live = self.prefill(req)?;
+            let mut live = live;
+            live.queue_secs = queue_secs;
+            live.prefill_secs = t0.elapsed().as_secs_f64();
+            self.metrics
+                .observe_ns("prefill_ns", t0.elapsed().as_nanos() as u64);
+            self.live.insert(id, live);
+        }
+        if self.live.is_empty() {
+            return Ok(self.has_work());
+        }
+        let t0 = Instant::now();
+        self.decode_step()?;
+        let dt = t0.elapsed();
+        self.slo.record_step(dt);
+        self.metrics.observe_ns("decode_step_ns", dt.as_nanos() as u64);
+        self.metrics.count("decode_steps", 1);
+        Ok(self.has_work())
+    }
+
+    /// Run until every request completes; returns all results.
+    pub fn run_to_completion(&mut self) -> Result<Vec<RequestResult>> {
+        while self.step()? {}
+        Ok(self.take_results())
+    }
+
+    // ------------------------------------------------------------ prefill
+
+    /// Prefill one request: process prompt tokens in bucket-sized slabs.
+    fn prefill(&mut self, req: Request) -> Result<Live> {
+        let model = self.backend.model().clone();
+        let chunk = self.backend.chunk_size();
+        let shared_len = match &req.domain {
+            Some(d) => self.shared.domain(d)?.token_len(),
+            None => 0,
+        };
+        // session continuation: resume the conversation's unique KV
+        // (prefix reuse, §II.A) instead of starting fresh
+        let mut kv = match req.session {
+            Some(sid) => self
+                .sessions
+                .get_mut(&sid)
+                .context("unknown session")?
+                .take_kv()?,
+            None => RequestKv::new(model.n_layers, shared_len),
+        };
+        let slab = self.cfg.max_batch.min(32);
+        let mut last_logits: Option<Vec<f32>> = None;
+
+        let n = req.prompt.len();
+        let base = shared_len + kv.len; // continue after any prior turns
+        let mut s = 0;
+        while s < n {
+            let e = (s + slab).min(n);
+            let toks = Tensor::i32(&[e - s], req.prompt[s..e].to_vec());
+            let pos: Vec<i32> =
+                (s..e).map(|i| (base + i) as i32).collect();
+            let logits = self.forward_slab(
+                &req, &mut kv, &toks, &pos, e == n,
+            )?;
+            if e == n {
+                last_logits = logits;
+            }
+            s = e;
+        }
+        let logits = last_logits.context("prefill produced no logits")?;
+        let first = self.sample_row(&req.sampler, &logits);
+        let mut live = Live {
+            pos: (base + n) as i32,
+            kv,
+            shared_len,
+            cur: first,
+            generated: vec![first],
+            logits_trace: Vec::new(),
+            queue_secs: 0.0,
+            prefill_secs: 0.0,
+            decode_t0: None,
+            routed: ChunkSet::new(),
+            req,
+        };
+        if self.capture_logits {
+            live.logits_trace.push(logits);
+        }
+        self.metrics.count("tokens_prefilled", n as u64);
+        self.metrics.count("tokens_generated", 1);
+        // chunk is unused only when every request lacks a domain
+        let _ = chunk;
+        Ok(live)
+    }
+
+    /// Forward a slab of tokens for one request (prefill path).
+    /// Returns final logits for the slab's last row when `want_logits`.
+    fn forward_slab(&mut self, req: &Request, kv: &mut RequestKv,
+                    tokens: &Tensor, pos: &[i32], want_logits: bool)
+                    -> Result<Option<Vec<f32>>> {
+        let model = self.backend.model().clone();
+        let b = tokens.shape()[0];
+        let mut x = self.backend.embed(tokens, self.weights.embed())?;
+        let mut routed: Option<Vec<ChunkSet>> = None;
+        for layer in 0..model.n_layers {
+            let lw = self.weights.layer(layer);
+            let (q, k, v) = self.backend.qkv(
+                &x, lw.attn_norm, lw.wq, lw.wk, lw.wv, pos,
+            )?;
+            kv.append_layer(&mut self.pool, layer, &k, &v)?;
+
+            let mut acc = RowAccumulator::identity(
+                b, model.n_heads, model.head_dim,
+            );
+            // shared context
+            if let Some(d) = &req.domain {
+                let dom = self.shared.domains.get(d).context("domain")?;
+                let sets = if self.cfg.route_every_layer || routed.is_none() {
+                    let s = self.router.route(
+                        self.backend.as_ref(), &q, dom.embeddings(layer),
+                    )?;
+                    routed = Some(s.clone());
+                    s
+                } else {
+                    routed.clone().unwrap()
+                };
+                let stats = shared_attention(
+                    self.backend.as_ref(), dom, layer, &q, pos, &sets,
+                    &mut acc, self.cfg.position_independent,
+                    self.cfg.max_batch,
+                )?;
+                self.batch_pairs += stats.pairs as u64;
+                self.batch_calls += stats.chunk_reads.max(stats.calls) as u64;
+            }
+            // unique context (includes the slab's own tokens, causally)
+            let uniq = unique_attention(
+                self.backend.as_ref(), &self.pool, kv, layer, &q, pos,
+            )?;
+            let mut uacc = RowAccumulator::identity(
+                b, model.n_heads, model.head_dim,
+            );
+            uacc.scatter(&(0..b).collect::<Vec<_>>(), &uniq);
+            acc.merge_from(&uacc);
+
+            let attn_o = acc.finalize();
+            x = self.backend.post(
+                &attn_o, &x, lw.wo, lw.ffn_norm, lw.w1, lw.w3, lw.w2,
+            )?;
+        }
+        kv.commit(b);
+        if want_logits {
+            let logits = self.backend.lm_head(
+                &x, self.weights.final_norm(), self.weights.lm_head(),
+            )?;
+            Ok(Some(logits.row(b - 1).to_vec()))
+        } else {
+            Ok(None)
+        }
+    }
+
+    // ------------------------------------------------------------- decode
+
+    /// One decode step for the whole live batch. This is the hot path.
+    fn decode_step(&mut self) -> Result<()> {
+        let model = self.backend.model().clone();
+        let order: Vec<usize> = self.sched.live().to_vec();
+        let b = order.len();
+        if b == 0 {
+            return Ok(());
+        }
+        for id in &order {
+            let l = self.live.get_mut(id).unwrap();
+            if l.decode_t0.is_none() {
+                l.decode_t0 = Some(Instant::now());
+            }
+        }
+        let tokens = Tensor::i32(
+            &[b],
+            order.iter().map(|id| self.live[id].cur).collect(),
+        );
+        let pos: Vec<i32> = order.iter().map(|id| self.live[id].pos).collect();
+
+        // phase timers: where does the decode step go? (§Perf)
+        let mut t_phase = Instant::now();
+        let mut phase = |m: &Metrics, name: &str| {
+            let now = Instant::now();
+            m.observe_ns(name, (now - t_phase).as_nanos() as u64);
+            t_phase = now;
+        };
+
+        let mut x = self.backend.embed(&tokens, self.weights.embed())?;
+        phase(&self.metrics, "phase_embed_ns");
+        // per-row routing decisions, refreshed at layer 0
+        for layer in 0..model.n_layers {
+            let lw = self.weights.layer(layer);
+            let (q, k, v) = self.backend.qkv(
+                &x, lw.attn_norm, lw.wq, lw.wk, lw.wv, &pos,
+            )?;
+            phase(&self.metrics, "phase_qkv_ns");
+            // append each row's new K/V to its unique cache
+            for (i, id) in order.iter().enumerate() {
+                let l = self.live.get_mut(id).unwrap();
+                let kr = Tensor::f32(
+                    &[1, model.n_kv_heads, model.head_dim],
+                    k.index0(i).to_vec(),
+                );
+                let vr = Tensor::f32(
+                    &[1, model.n_kv_heads, model.head_dim],
+                    v.index0(i).to_vec(),
+                );
+                l.kv.append_layer(&mut self.pool, layer, &kr, &vr)?;
+            }
+            phase(&self.metrics, "phase_append_ns");
+
+            let mut acc = RowAccumulator::identity(
+                b, model.n_heads, model.head_dim,
+            );
+            // ---- shared path: group rows by domain, route, batch, GEMM
+            let mut by_domain: HashMap<String, Vec<usize>> = HashMap::new();
+            for (i, id) in order.iter().enumerate() {
+                if let Some(d) = &self.live[id].req.domain {
+                    by_domain.entry(d.clone()).or_default().push(i);
+                }
+            }
+            let mut domains: Vec<_> = by_domain.into_iter().collect();
+            domains.sort(); // deterministic execution order
+            for (dname, rows) in domains {
+                let dom = self.shared.domains.get(&dname).unwrap();
+                // gather subset q/pos
+                let nh = model.n_heads * model.head_dim;
+                let mut qs = Vec::with_capacity(rows.len() * nh);
+                let mut ps = Vec::with_capacity(rows.len());
+                for &i in &rows {
+                    qs.extend_from_slice(q.index0(i));
+                    ps.push(pos[i]);
+                }
+                let qs = Tensor::f32(
+                    &[rows.len(), model.n_heads, model.head_dim], qs,
+                );
+                // routing: fresh at layer 0 (or every layer if configured)
+                let need_route = layer == 0 || self.cfg.route_every_layer;
+                let sets: Vec<ChunkSet> = if need_route {
+                    let s = self.router.route(
+                        self.backend.as_ref(), &qs, dom.embeddings(layer),
+                    )?;
+                    for (j, &i) in rows.iter().enumerate() {
+                        let l = self.live.get_mut(&order[i]).unwrap();
+                        l.routed = s[j].clone();
+                    }
+                    s
+                } else {
+                    rows.iter()
+                        .map(|&i| self.live[&order[i]].routed.clone())
+                        .collect()
+                };
+                let mut sub_acc = RowAccumulator::identity(
+                    rows.len(), model.n_heads, model.head_dim,
+                );
+                let stats = shared_attention(
+                    self.backend.as_ref(), dom, layer, &qs, &ps, &sets,
+                    &mut sub_acc, self.cfg.position_independent,
+                    self.cfg.max_batch,
+                )?;
+                self.batch_pairs += stats.pairs as u64;
+                self.batch_calls += stats.chunk_reads.max(stats.calls) as u64;
+                // scatter sub-rows back to global rows (in place)
+                for (j, &i) in rows.iter().enumerate() {
+                    acc.merge_row_from(i, sub_acc.partials(), j);
+                }
+            }
+            phase(&self.metrics, "phase_shared_ns");
+            // ---- unique path: per request (B=1 — the paper's GEMV side)
+            for (i, id) in order.iter().enumerate() {
+                let l = &self.live[id];
+                let qr = Tensor::f32(
+                    &[1, model.n_heads, model.head_dim],
+                    q.index0(i).to_vec(),
+                );
+                let part = unique_attention(
+                    self.backend.as_ref(), &self.pool, &l.kv, layer, &qr,
+                    &[pos[i]],
+                )?;
+                acc.merge_row(i, &part);
+            }
+            phase(&self.metrics, "phase_unique_ns");
+
+            let attn_o = acc.finalize();
+            x = self.backend.post(
+                &attn_o, &x, lw.wo, lw.ffn_norm, lw.w1, lw.w3, lw.w2,
+            )?;
+            phase(&self.metrics, "phase_post_ns");
+        }
+        // each live request appended exactly one token's K/V this step
+        for id in &order {
+            self.live.get_mut(id).unwrap().kv.commit(1);
+        }
+        let logits = self.backend.lm_head(
+            &x, self.weights.final_norm(), self.weights.lm_head(),
+        )?;
+        phase(&self.metrics, "phase_lm_head_ns");
+
+        // sample + bookkeeping
+        let mut done_ids = Vec::new();
+        for (i, id) in order.iter().enumerate() {
+            let row = logits.row(i).to_vec();
+            let l = self.live.get_mut(id).unwrap();
+            let tok = match &l.req.sampler {
+                Sampler::Greedy => crate::model::sampling::argmax(&row),
+                s => s.sample(&row, &mut self.rng),
+            };
+            if self.capture_logits {
+                l.logits_trace.push(row);
+            }
+            l.cur = tok;
+            l.pos += 1;
+            l.generated.push(tok);
+            self.metrics.count("tokens_generated", 1);
+            if l.generated.len() >= l.req.max_new {
+                done_ids.push(*id);
+            }
+        }
+        for id in done_ids.iter() {
+            let mut l = self.live.remove(id).unwrap();
+            match l.req.session {
+                // session requests park their KV for the next turn; the
+                // last generated token's KV is still pending (it was
+                // never an input) — the next turn prepends it.
+                Some(sid) => {
+                    if let Some(s) = self.sessions.get_mut(&sid) {
+                        s.park(l.kv, l.cur, l.pos);
+                    } else {
+                        l.kv.release(&mut self.pool);
+                    }
+                }
+                None => l.kv.release(&mut self.pool),
+            }
+            let decode_secs = l
+                .decode_t0
+                .map(|t| t.elapsed().as_secs_f64())
+                .unwrap_or(0.0);
+            self.results.push(RequestResult {
+                id: *id,
+                tokens: l.generated,
+                logits_trace: l.logits_trace,
+                queue_secs: l.queue_secs,
+                prefill_secs: l.prefill_secs,
+                decode_secs,
+            });
+            self.metrics.count("requests_completed", 1);
+        }
+        self.sched.retire(&done_ids);
+        self.metrics.gauge("live_batch", self.sched.live().len() as f64);
+        self.metrics.gauge("kv_pages_allocated",
+                           self.pool.allocated() as f64);
+        Ok(())
+    }
+
+    fn sample_row(&mut self, sampler: &Sampler, logits: &[f32]) -> i32 {
+        match sampler {
+            Sampler::Greedy => crate::model::sampling::argmax(logits),
+            s => s.sample(logits, &mut self.rng),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- demo
+
+/// `moska demo`: N concurrent requests over a shared domain.
+pub fn run_demo(args: &Args) -> Result<()> {
+    let (mut engine, _svc) = build_engine_from_args(args)?;
+    let n: usize = args.usize("requests")?;
+    let steps: usize = args.usize("steps")?;
+    let domain_arg = args.str("domain")?;
+    let domain = if domain_arg == "none" { None } else { Some(domain_arg.as_str()) };
+
+    let mut rng = Rng::new(7);
+    for i in 0..n {
+        let prompt: Vec<i32> =
+            (0..8 + rng.below(8)).map(|_| rng.below(256) as i32).collect();
+        let id = engine.submit(domain, prompt, steps, Sampler::Greedy)?;
+        crate::info!("demo", "submitted request {id} ({i}/{n})");
+    }
+    let t0 = Instant::now();
+    let results = engine.run_to_completion()?;
+    let dt = t0.elapsed().as_secs_f64();
+    let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+    println!("== demo summary ==");
+    println!("requests          : {n}");
+    println!("decode steps/req  : {steps}");
+    println!("total new tokens  : {total_tokens}");
+    println!("wall time         : {dt:.3}s");
+    println!("throughput        : {:.1} tok/s", total_tokens as f64 / dt);
+    println!("gemm batching N   : {:.2}", engine.batching_factor());
+    println!("router sparsity   : {:.1}%",
+             engine.router.stats.sparsity() * 100.0);
+    println!("kv pages peak     : {}", engine.pool.peak_allocated());
+    if let Some(tps) = engine.slo.tokens_per_sec() {
+        println!("per-req decode    : {:.1} tok/s (SLO {} → {})",
+                 tps, engine.slo.target_tokens_per_sec,
+                 if engine.slo.meets_slo().unwrap() { "MET" } else { "MISSED" });
+    }
+    println!("decode-step phase breakdown:");
+    for (name, total, share) in engine.phase_report() {
+        println!("  {:<14} {:>8.3}s  {:>5.1}%", name, total, share * 100.0);
+    }
+    Ok(())
+}
+
+/// Shared constructor for demo/server/benches: builds an engine per the
+/// `--backend`, `--artifacts`, `--top-k`, `--max-batch` options.
+pub fn build_engine_from_args(args: &Args)
+    -> Result<(Engine, Option<crate::runtime::RuntimeService>)> {
+    let dir = match args.get("artifacts") {
+        Some("") | None => crate::runtime::artifact::default_artifacts_dir(),
+        Some(d) => d.to_string(),
+    };
+    let top_k = match args.usize("top-k")? {
+        0 => None,
+        k => Some(k),
+    };
+    let max_batch = args.usize("max-batch").unwrap_or(32);
+    let cfg = ServingConfig { top_k, max_batch, ..Default::default() };
+    build_engine(&dir, args.get("backend").unwrap_or("xla"), cfg)
+}
+
+/// Build an engine on the given backend (`"xla"` or `"native"`).
+pub fn build_engine(artifacts_dir: &str, backend: &str, cfg: ServingConfig)
+    -> Result<(Engine, Option<crate::runtime::RuntimeService>)> {
+    let man = crate::runtime::Manifest::load(artifacts_dir)?;
+    let weights = Weights::load(
+        man.weights_path().to_str().context("utf8")?,
+        man.model.clone(),
+    )?;
+    let shared = SharedStore::load_from_manifest(&man)?;
+    let pool_pages = 4096;
+    match backend {
+        "native" => {
+            let be = Box::new(crate::runtime::NativeBackend::new(
+                man.model.clone(), man.chunk,
+            ));
+            Ok((Engine::new(be, weights, shared, cfg, pool_pages), None))
+        }
+        "xla" => {
+            let svc = crate::runtime::RuntimeService::spawn(artifacts_dir)?;
+            let be = Box::new(crate::runtime::XlaBackend::new(svc.handle()));
+            Ok((Engine::new(be, weights, shared, cfg, pool_pages), Some(svc)))
+        }
+        other => bail!("unknown backend '{other}' (xla|native)"),
+    }
+}

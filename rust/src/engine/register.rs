@@ -1,0 +1,141 @@
+//! Runtime domain registration: build a persistent Domain-Specific Shared
+//! KV Cache *online*, through the same AOT kernels the request path uses
+//! (paper §II.A: "pre-computing and maintaining the KV states of entire
+//! domain-specific documents as persistent, shareable assets").
+//!
+//! This is the rust twin of `python/compile/sharedkv.py`; the
+//! `registered_domain_matches_precomputed` integration test asserts both
+//! produce the same K/V chunks and router embeddings to ≤1e-4, which
+//! cross-validates the *prefill* path against the JAX reference.
+
+use anyhow::{bail, Context, Result};
+
+use crate::attention::{unique_attention, RowAccumulator};
+use crate::kvcache::paged::RequestKv;
+use crate::kvcache::shared_store::{DomainCache, LayerChunks};
+use crate::tensor::Tensor;
+
+use super::Engine;
+
+impl Engine {
+    /// Prefill `tokens` into a new shared domain named `name`.
+    ///
+    /// `tokens.len()` must be a multiple of the chunk size (the shared
+    /// store's granule). The domain becomes immediately routable.
+    pub fn register_domain(&mut self, name: &str, tokens: &[i32])
+                           -> Result<()> {
+        let chunk = self.backend.chunk_size();
+        if self.shared.domains.contains_key(name) {
+            bail!("domain '{name}' already registered");
+        }
+        if tokens.is_empty() || tokens.len() % chunk != 0 {
+            bail!("domain token count {} must be a non-zero multiple of \
+                   the chunk size {chunk}", tokens.len());
+        }
+        let model = self.backend.model().clone();
+        let n = tokens.len();
+        let mut kv = RequestKv::new(model.n_layers, 0);
+
+        // chunked causal prefill through the artifact kernels (no shared
+        // context, no LM head — we only need the K/V states)
+        let slab = self.cfg.max_batch.min(32);
+        let mut s = 0;
+        while s < n {
+            let e = (s + slab).min(n);
+            let toks = Tensor::i32(&[e - s], tokens[s..e].to_vec());
+            let pos: Vec<i32> = (s..e).map(|i| i as i32).collect();
+            let mut x = self.backend.embed(&toks, self.weights.embed())?;
+            for layer in 0..model.n_layers {
+                let lw = self.weights.layer(layer);
+                let (q, k, v) = self.backend.qkv(
+                    &x, lw.attn_norm, lw.wq, lw.wk, lw.wv, &pos,
+                )?;
+                kv.append_layer(&mut self.pool, layer, &k, &v)?;
+                let part = unique_attention(
+                    self.backend.as_ref(), &self.pool, &kv, layer, &q, &pos,
+                )?;
+                let mut acc = RowAccumulator::identity(
+                    e - s, model.n_heads, model.head_dim,
+                );
+                acc.scatter(&(0..e - s).collect::<Vec<_>>(), &part);
+                let attn_o = acc.finalize();
+                x = self.backend.post(
+                    &attn_o, &x, lw.wo, lw.ffn_norm, lw.w1, lw.w3, lw.w2,
+                )?;
+            }
+            kv.commit(e - s);
+            s = e;
+        }
+
+        // materialize the DomainCache from the prefilled pages
+        let n_chunks = n / chunk;
+        let mut layers = Vec::with_capacity(model.n_layers);
+        for layer in 0..model.n_layers {
+            let mut chunks = Vec::with_capacity(n_chunks);
+            let mut embs =
+                Vec::with_capacity(n_chunks * model.n_kv_heads * model.head_dim);
+            for c in 0..n_chunks {
+                let page = self.pool.get(kv.pages[layer][c]);
+                anyhow::ensure!(page.used == chunk, "partial page in prefill");
+                let k = page.k.clone();
+                let v = page.v.clone();
+                // router embedding: mean of post-RoPE K over the chunk
+                let row = model.n_kv_heads * model.head_dim;
+                let ks = k.as_f32();
+                for j in 0..row {
+                    let mut acc = 0f32;
+                    for t in 0..chunk {
+                        acc += ks[t * row + j];
+                    }
+                    embs.push(acc / chunk as f32);
+                }
+                chunks.push((k, v));
+            }
+            layers.push(LayerChunks {
+                chunks,
+                embs: Tensor::f32(
+                    &[n_chunks, model.n_kv_heads, model.head_dim], embs,
+                ),
+            });
+        }
+        let mut chunk_ids = Vec::with_capacity(n_chunks);
+        for c in 0..n_chunks {
+            let (k, v) = &layers[0].chunks[c];
+            chunk_ids.push(self.shared.registry.intern(k, v));
+        }
+        let dom = DomainCache {
+            name: name.to_string(),
+            tokens: tokens.to_vec(),
+            n_chunks,
+            chunk,
+            layers,
+            chunk_ids,
+            chunk_bases: (0..n_chunks).map(|c| (c * chunk) as i32).collect(),
+        };
+        kv.release(&mut self.pool);
+        self.shared.domains.insert(name.to_string(), dom);
+        self.metrics.count("domains_registered", 1);
+        crate::info!("engine", "registered domain '{name}': {n} tokens, \
+                      {n_chunks} chunks");
+        Ok(())
+    }
+
+    /// Register a composed context (Universal MoSKA §III.D) as a servable
+    /// domain. `spec` syntax: `"legal:0-7,code:2,medical:4-5"`.
+    pub fn register_composed(&mut self, name: &str, spec: &str)
+                             -> Result<()> {
+        if self.shared.domains.contains_key(name) {
+            bail!("domain '{name}' already registered");
+        }
+        let refs = crate::kvcache::compose::parse_spec(spec)?;
+        let dom = crate::kvcache::compose::compose(&self.shared, name, &refs)
+            .context("composing context")?;
+        // account the composition's chunk reuse in the registry
+        for &id in &dom.chunk_ids {
+            self.shared.registry.mark_used(id);
+        }
+        self.shared.domains.insert(name.to_string(), dom);
+        self.metrics.count("domains_composed", 1);
+        Ok(())
+    }
+}

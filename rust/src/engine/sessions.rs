@@ -1,0 +1,137 @@
+//! Multi-turn conversation sessions: prefix reuse across turns
+//! (paper §II.A — "the KV cache from a previous turn ... is reused for
+//! the subsequent turn, avoiding redundant computation").
+//!
+//! A session owns a persistent [`RequestKv`]; each turn's prompt is
+//! prefilled on top of it, and the generated tokens' KV accumulates. The
+//! final generated token of a turn never became an *input*, so its KV is
+//! missing — the session parks it as `pending_token` and the next turn
+//! prepends it to the prompt (standard incremental-decode bookkeeping).
+//!
+//! Correctness pin: `integration_engine.rs::session_matches_fresh_request`
+//! asserts a two-turn conversation produces exactly the tokens a fresh
+//! request with the concatenated history would.
+
+use anyhow::{bail, Result};
+
+use crate::kvcache::paged::RequestKv;
+use crate::model::sampling::Sampler;
+
+use super::{Engine, Request};
+
+/// Per-session persistent state between turns.
+pub struct SessionState {
+    /// None while a turn is in flight (KV travels with the request).
+    kv: Option<RequestKv>,
+    /// Last generated token awaiting KV materialization.
+    pending_token: Option<i32>,
+    /// True from `submit_turn` until the turn's result is parked.
+    busy: bool,
+    pub domain: Option<String>,
+    pub turns: usize,
+    pub total_tokens: usize,
+}
+
+impl SessionState {
+    pub(crate) fn take_kv(&mut self) -> Result<RequestKv> {
+        self.kv.take().ok_or_else(|| {
+            anyhow::anyhow!("session busy: a turn is already in flight")
+        })
+    }
+
+    pub(crate) fn park(&mut self, kv: RequestKv, last_token: i32,
+                       _next_pos: i32) {
+        self.total_tokens = kv.len;
+        self.kv = Some(kv);
+        self.pending_token = Some(last_token);
+        self.busy = false;
+        self.turns += 1;
+    }
+
+    pub fn context_tokens(&self) -> usize {
+        self.total_tokens
+    }
+}
+
+impl Engine {
+    /// Open a conversation session over an optional shared domain.
+    pub fn open_session(&mut self, domain: Option<&str>) -> Result<u64> {
+        let shared_len = match domain {
+            Some(d) => self.shared.domain(d)?.token_len(),
+            None => 0,
+        };
+        let sid = self.next_session;
+        self.next_session += 1;
+        let n_layers = self.backend.model().n_layers;
+        self.sessions.insert(
+            sid,
+            SessionState {
+                kv: Some(RequestKv::new(n_layers, shared_len)),
+                pending_token: None,
+                busy: false,
+                domain: domain.map(str::to_string),
+                turns: 0,
+                total_tokens: 0,
+            },
+        );
+        self.metrics.count("sessions_opened", 1);
+        Ok(sid)
+    }
+
+    /// Submit the next turn of a session. The request flows through the
+    /// normal continuous-batching path; the session's KV is reused.
+    pub fn submit_turn(&mut self, sid: u64, prompt: Vec<i32>,
+                       max_new: usize, sampler: Sampler) -> Result<usize> {
+        let Some(state) = self.sessions.get(&sid) else {
+            bail!("unknown session {sid}");
+        };
+        if state.busy || state.kv.is_none() {
+            bail!("session {sid} busy: a turn is already in flight");
+        }
+        if prompt.is_empty() && state.pending_token.is_none() {
+            bail!("empty prompt on first turn");
+        }
+        let domain = state.domain.clone();
+        // prepend the pending token so its KV gets materialized
+        let mut full_prompt = Vec::with_capacity(prompt.len() + 1);
+        {
+            let state = self.sessions.get_mut(&sid).unwrap();
+            state.busy = true;
+            if let Some(t) = state.pending_token.take() {
+                full_prompt.push(t);
+            }
+        }
+        full_prompt.extend_from_slice(&prompt);
+
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request {
+            id,
+            domain,
+            prompt: full_prompt,
+            max_new,
+            sampler,
+            session: Some(sid),
+        };
+        Ok(self.submit_request(req))
+    }
+
+    /// Close a session, releasing its KV pages.
+    pub fn close_session(&mut self, sid: u64) -> Result<()> {
+        if self.sessions.get(&sid).map(|s| s.busy).unwrap_or(false) {
+            bail!("session {sid} busy: cannot close mid-turn");
+        }
+        let Some(mut state) = self.sessions.remove(&sid) else {
+            bail!("unknown session {sid}");
+        };
+        if let Some(mut kv) = state.kv.take() {
+            kv.release(&mut self.pool);
+        }
+        self.metrics.count("sessions_closed", 1);
+        Ok(())
+    }
+
+    pub fn session(&self, sid: u64) -> Option<&SessionState> {
+        self.sessions.get(&sid)
+    }
+}

@@ -1,0 +1,153 @@
+//! Universal MoSKA: composable contexts (paper §III.D).
+//!
+//! The paper's long-term vision: once KV chunks are untethered from their
+//! original context they become "modular, composable blocks of knowledge"
+//! that can be pulled from multiple domain libraries on demand. This
+//! module materializes such a composition as a first-class [`DomainCache`]
+//! the engine can serve from, in two modes:
+//!
+//! * **position-preserving** — each chunk keeps its origin base position
+//!   (`chunk_bases`); composing a domain's own chunks in any subset/order
+//!   is *exact* (same attention output as the native domain, since LSE
+//!   merging is order-invariant). Cross-domain position collisions are
+//!   allowed but keys from different origins may then alias positions.
+//! * **position-independent** — pair with
+//!   [`ServingConfig::position_independent`][crate::config::ServingConfig]
+//!   to attend every chunk at local positions (the EPIC-style [10]
+//!   approximation the paper's vision is predicated on).
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::shared_store::{DomainCache, LayerChunks, SharedStore};
+
+/// One chunk reference inside a composition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkRef {
+    pub domain: String,
+    pub chunk: usize,
+}
+
+/// Parse a composition spec like `"legal:0-7,code:2,medical:4-5"`.
+pub fn parse_spec(spec: &str) -> Result<Vec<ChunkRef>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (domain, range) = part
+            .split_once(':')
+            .with_context(|| format!("bad chunk ref '{part}' (want domain:a-b)"))?;
+        let (lo, hi) = match range.split_once('-') {
+            Some((a, b)) => (a.parse()?, b.parse()?),
+            None => {
+                let c: usize = range.parse()?;
+                (c, c)
+            }
+        };
+        if hi < lo {
+            bail!("empty range in '{part}'");
+        }
+        for chunk in lo..=hi {
+            out.push(ChunkRef { domain: domain.to_string(), chunk });
+        }
+    }
+    if out.is_empty() {
+        bail!("composition spec selected no chunks");
+    }
+    Ok(out)
+}
+
+/// Materialize a composed context from chunk references across domains.
+///
+/// The composed cache borrows (clones) chunk K/V + embeddings from the
+/// origin domains and records origin base positions in `chunk_bases`.
+pub fn compose(store: &SharedStore, name: &str, refs: &[ChunkRef])
+               -> Result<DomainCache> {
+    if refs.is_empty() {
+        bail!("cannot compose an empty context");
+    }
+    let first = store.domain(&refs[0].domain)?;
+    let n_layers = first.layers.len();
+    let chunk = first.chunk;
+    let (hkv, dh) = {
+        let e = first.embeddings(0);
+        (e.shape()[1], e.shape()[2])
+    };
+
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let mut chunks = Vec::with_capacity(refs.len());
+        let mut embs = Vec::with_capacity(refs.len() * hkv * dh);
+        for r in refs {
+            let dom = store.domain(&r.domain)?;
+            if r.chunk >= dom.n_chunks {
+                bail!("domain '{}' has {} chunks, ref asks for {}",
+                      r.domain, dom.n_chunks, r.chunk);
+            }
+            let (k, v) = dom.chunk_kv(l, r.chunk);
+            chunks.push((k.clone(), v.clone()));
+            embs.extend_from_slice(dom.embeddings(l).index0(r.chunk));
+        }
+        layers.push(LayerChunks {
+            chunks,
+            embs: Tensor::f32(&[refs.len(), hkv, dh], embs),
+        });
+    }
+
+    let mut tokens = Vec::with_capacity(refs.len() * chunk);
+    let mut chunk_bases = Vec::with_capacity(refs.len());
+    let mut chunk_ids = Vec::with_capacity(refs.len());
+    let mut max_end = 0i32;
+    for r in refs {
+        let dom = store.domain(&r.domain)?;
+        tokens.extend_from_slice(
+            &dom.tokens[r.chunk * chunk..(r.chunk + 1) * chunk],
+        );
+        let base = dom.chunk_base(r.chunk);
+        chunk_bases.push(base);
+        chunk_ids.push(dom.chunk_ids[r.chunk]);
+        max_end = max_end.max(base + chunk as i32);
+    }
+
+    Ok(DomainCache {
+        name: name.to_string(),
+        // `tokens` retains the composed text; token_len() drives where the
+        // request's unique context starts — place it after the highest
+        // origin position so causality sees every composed chunk.
+        tokens: {
+            let mut t = tokens;
+            t.resize(max_end as usize, 0);
+            t
+        },
+        n_chunks: refs.len(),
+        chunk,
+        layers,
+        chunk_ids,
+        chunk_bases,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spec_forms() {
+        let refs = parse_spec("legal:0-2,code:5,medical:1-1").unwrap();
+        assert_eq!(refs.len(), 5);
+        assert_eq!(refs[0], ChunkRef { domain: "legal".into(), chunk: 0 });
+        assert_eq!(refs[3], ChunkRef { domain: "code".into(), chunk: 5 });
+        assert_eq!(refs[4], ChunkRef { domain: "medical".into(), chunk: 1 });
+    }
+
+    #[test]
+    fn parse_spec_rejects_garbage() {
+        assert!(parse_spec("").is_err());
+        assert!(parse_spec("legal").is_err());
+        assert!(parse_spec("legal:5-2").is_err());
+        assert!(parse_spec("legal:x").is_err());
+    }
+}

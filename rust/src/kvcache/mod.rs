@@ -1,0 +1,18 @@
+//! KV-cache management: the heart of the paper's data heterogeneity.
+//!
+//! * [`paged`] — per-request *unique* KV in fixed-size pages (one page =
+//!   one attention chunk), with a global pool for admission control.
+//!   This is the memory whose **per-request** growth drives Fig 1's
+//!   capacity wall.
+//! * [`shared_store`] — persistent, massively-reused *shared* KV: the
+//!   precomputed Domain-Specific caches (paper §III.A), chunk-content
+//!   deduplication (the "identical chunk regardless of position" claim),
+//!   refcounts and LRU eviction.
+
+pub mod compose;
+pub mod paged;
+pub mod shared_store;
+
+pub use compose::{compose, parse_spec, ChunkRef};
+pub use paged::{PageId, PagePool, RequestKv};
+pub use shared_store::{ChunkRegistry, DomainCache, SharedStore};

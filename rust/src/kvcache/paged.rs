@@ -1,0 +1,377 @@
+//! Paged unique-KV cache (vLLM-style block allocator, one page = one chunk).
+//!
+//! Every page holds `chunk` tokens of K and V for one layer
+//! (`[chunk, Hkv, dh]` each, f32). Pages come from a bounded [`PagePool`];
+//! the scheduler admits a request only if its worst-case page demand fits,
+//! and everything is returned on request completion — the property tests
+//! assert no leak and no double-free across random admit/complete traces.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Handle to a page in the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PageId(pub u32);
+
+/// One KV page: `chunk` token slots for one layer.
+#[derive(Debug)]
+pub struct Page {
+    pub k: Tensor, // [chunk, Hkv, dh]
+    pub v: Tensor, // [chunk, Hkv, dh]
+    pub used: usize,
+}
+
+/// Bounded pool of KV pages (the "GPU memory" of the unique node).
+pub struct PagePool {
+    chunk: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    pages: Vec<Option<Page>>,
+    free: Vec<PageId>,
+    capacity: usize,
+    allocated: usize,
+    /// high-water mark, for utilization reporting
+    peak_allocated: usize,
+}
+
+impl PagePool {
+    pub fn new(capacity_pages: usize, chunk: usize, kv_heads: usize,
+               head_dim: usize) -> PagePool {
+        PagePool {
+            chunk,
+            kv_heads,
+            head_dim,
+            pages: Vec::new(),
+            free: Vec::new(),
+            capacity: capacity_pages,
+            allocated: 0,
+            peak_allocated: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn allocated(&self) -> usize {
+        self.allocated
+    }
+
+    pub fn available(&self) -> usize {
+        self.capacity - self.allocated
+    }
+
+    pub fn peak_allocated(&self) -> usize {
+        self.peak_allocated
+    }
+
+    /// Bytes held by one page (K + V, f32).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.chunk * self.kv_heads * self.head_dim * 4
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn alloc(&mut self) -> Result<PageId> {
+        if self.allocated >= self.capacity {
+            bail!("KV page pool exhausted ({} pages)", self.capacity);
+        }
+        self.allocated += 1;
+        self.peak_allocated = self.peak_allocated.max(self.allocated);
+        let shape = [self.chunk, self.kv_heads, self.head_dim];
+        let page = Page {
+            k: Tensor::zeros_f32(&shape),
+            v: Tensor::zeros_f32(&shape),
+            used: 0,
+        };
+        if let Some(id) = self.free.pop() {
+            self.pages[id.0 as usize] = Some(page);
+            Ok(id)
+        } else {
+            self.pages.push(Some(page));
+            Ok(PageId(self.pages.len() as u32 - 1))
+        }
+    }
+
+    pub fn free(&mut self, id: PageId) {
+        let slot = &mut self.pages[id.0 as usize];
+        assert!(slot.is_some(), "double free of page {id:?}");
+        *slot = None;
+        self.free.push(id);
+        self.allocated -= 1;
+    }
+
+    pub fn get(&self, id: PageId) -> &Page {
+        self.pages[id.0 as usize].as_ref().expect("freed page")
+    }
+
+    pub fn get_mut(&mut self, id: PageId) -> &mut Page {
+        self.pages[id.0 as usize].as_mut().expect("freed page")
+    }
+}
+
+/// One request's unique KV: per-layer page lists + absolute positions.
+///
+/// Token `i` of this cache lives at absolute position `start_pos + i`
+/// (unique context follows the shared prefix), in page `i / chunk` at
+/// row `i % chunk` — so a page's `k_base` is derivable and the chunk
+/// attention kernel's causal masking works unchanged.
+pub struct RequestKv {
+    pub start_pos: usize,
+    pub len: usize,
+    /// pages[layer][page_idx]
+    pub pages: Vec<Vec<PageId>>,
+    /// per-layer written-token cursors (equal to `len` between steps; they
+    /// run ahead of it inside a step while layers append one by one)
+    lens: Vec<usize>,
+}
+
+impl RequestKv {
+    pub fn new(n_layers: usize, start_pos: usize) -> RequestKv {
+        RequestKv {
+            start_pos,
+            len: 0,
+            pages: vec![Vec::new(); n_layers],
+            lens: vec![0; n_layers],
+        }
+    }
+
+    /// Append `n` tokens of K/V (`[n,Hkv,dh]`) for ONE layer. Call for
+    /// every layer (any order), then [`Self::commit`] with the token count.
+    pub fn append_layer(&mut self, pool: &mut PagePool, layer: usize,
+                        k_new: &Tensor, v_new: &Tensor) -> Result<()> {
+        let n = k_new.shape()[0];
+        assert_eq!(v_new.shape()[0], n);
+        let chunk = pool.chunk;
+        let row = pool.kv_heads * pool.head_dim;
+        let mut written = 0;
+        while written < n {
+            let off = (self.lens[layer] + written) % chunk;
+            let need_page = off == 0
+                && (self.lens[layer] + written) / chunk
+                    >= self.pages[layer].len();
+            if need_page {
+                let id = pool.alloc()?;
+                self.pages[layer].push(id);
+            }
+            let page_idx = (self.lens[layer] + written) / chunk;
+            let page_id = self.pages[layer][page_idx];
+            let take = (chunk - off).min(n - written);
+            let page = pool.get_mut(page_id);
+            let dst_k = page.k.as_f32_mut();
+            let src_k = k_new.as_f32();
+            dst_k[off * row..(off + take) * row]
+                .copy_from_slice(&src_k[written * row..(written + take) * row]);
+            let dst_v = page.v.as_f32_mut();
+            let src_v = v_new.as_f32();
+            dst_v[off * row..(off + take) * row]
+                .copy_from_slice(&src_v[written * row..(written + take) * row]);
+            page.used = off + take;
+            written += take;
+        }
+        self.lens[layer] += n;
+        Ok(())
+    }
+
+    /// Commit `n` appended tokens after all layers appended them.
+    pub fn commit(&mut self, n: usize) {
+        self.len += n;
+        debug_assert!(
+            self.lens.iter().all(|&l| l == self.len),
+            "commit({n}): layer cursors {:?} != len {}", self.lens, self.len
+        );
+    }
+
+    /// Pages needed to store `extra` more tokens (admission math).
+    pub fn pages_needed(&self, extra: usize, chunk: usize,
+                        n_layers: usize) -> usize {
+        let have = if self.pages[0].is_empty() {
+            0
+        } else {
+            self.pages[0].len() * chunk - self.len
+        };
+        if extra <= have {
+            return 0;
+        }
+        n_layers * (extra - have).div_ceil(chunk)
+    }
+
+    /// Append `n` tokens of K/V (`[n, Hkv, dh]` each) for every layer.
+    /// `per_layer` holds (k, v) in layer order. Allocates pages on demand.
+    pub fn append(&mut self, pool: &mut PagePool,
+                  per_layer: &[(Tensor, Tensor)]) -> Result<()> {
+        assert_eq!(per_layer.len(), self.pages.len());
+        let n = per_layer[0].0.shape()[0];
+        for (layer, (k_new, v_new)) in per_layer.iter().enumerate() {
+            self.append_layer(pool, layer, k_new, v_new)?;
+        }
+        self.commit(n);
+        Ok(())
+    }
+
+    /// Absolute base position of page `p`.
+    pub fn page_base(&self, p: usize, chunk: usize) -> i32 {
+        (self.start_pos + p * chunk) as i32
+    }
+
+    /// Number of pages per layer.
+    pub fn page_count(&self) -> usize {
+        self.pages[0].len()
+    }
+
+    /// Pages currently holding data for `layer` (tracks in-flight appends).
+    pub fn page_count_layer(&self, layer: usize) -> usize {
+        self.pages[layer].len()
+    }
+
+    /// Written tokens for `layer` (== `len` between steps; runs ahead of it
+    /// inside a step, which is exactly what attention must see: the token
+    /// being decoded attends to its own freshly appended K/V).
+    pub fn layer_len(&self, layer: usize) -> usize {
+        self.lens[layer]
+    }
+
+    /// Valid rows in page `p` (committed view).
+    pub fn page_valid(&self, p: usize, chunk: usize) -> i32 {
+        Self::valid_at(self.len, p, chunk)
+    }
+
+    /// Valid rows in page `p` of `layer` (in-flight view).
+    pub fn page_valid_layer(&self, layer: usize, p: usize,
+                            chunk: usize) -> i32 {
+        Self::valid_at(self.lens[layer], p, chunk)
+    }
+
+    fn valid_at(len: usize, p: usize, chunk: usize) -> i32 {
+        let full = len / chunk;
+        if p < full {
+            chunk as i32
+        } else if p == full {
+            (len % chunk) as i32
+        } else {
+            0
+        }
+    }
+
+    /// Release every page back to the pool.
+    pub fn release(&mut self, pool: &mut PagePool) {
+        for layer in &mut self.pages {
+            for id in layer.drain(..) {
+                pool.free(id);
+            }
+        }
+        self.len = 0;
+        for l in &mut self.lens {
+            *l = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn pool() -> PagePool {
+        PagePool::new(64, 8, 2, 4) // chunk=8 tokens, Hkv=2, dh=4
+    }
+
+    fn kv_rows(rng: &mut Rng, n: usize) -> (Tensor, Tensor) {
+        let mut k = vec![0f32; n * 2 * 4];
+        let mut v = vec![0f32; n * 2 * 4];
+        rng.fill_normal_f32(&mut k);
+        rng.fill_normal_f32(&mut v);
+        (Tensor::f32(&[n, 2, 4], k), Tensor::f32(&[n, 2, 4], v))
+    }
+
+    #[test]
+    fn append_spans_pages() {
+        let mut pool = pool();
+        let mut rng = Rng::new(0);
+        let mut kv = RequestKv::new(2, 100);
+        // 13 tokens with chunk=8 → 2 pages per layer
+        let rows: Vec<_> = (0..2).map(|_| kv_rows(&mut rng, 13)).collect();
+        kv.append(&mut pool, &rows).unwrap();
+        assert_eq!(kv.len, 13);
+        assert_eq!(kv.page_count(), 2);
+        assert_eq!(pool.allocated(), 4);
+        assert_eq!(kv.page_valid(0, 8), 8);
+        assert_eq!(kv.page_valid(1, 8), 5);
+        assert_eq!(kv.page_base(1, 8), 108);
+
+        // appending 3 more stays in page 1
+        let rows: Vec<_> = (0..2).map(|_| kv_rows(&mut rng, 3)).collect();
+        kv.append(&mut pool, &rows).unwrap();
+        assert_eq!(kv.len, 16);
+        assert_eq!(kv.page_count(), 2);
+        assert_eq!(kv.page_valid(1, 8), 8);
+    }
+
+    #[test]
+    fn append_preserves_content() {
+        let mut pool = pool();
+        let mut rng = Rng::new(1);
+        let mut kv = RequestKv::new(1, 0);
+        let (k1, v1) = kv_rows(&mut rng, 5);
+        kv.append(&mut pool, &[(k1.clone(), v1.clone())]).unwrap();
+        let (k2, v2) = kv_rows(&mut rng, 6);
+        kv.append(&mut pool, &[(k2.clone(), v2.clone())]).unwrap();
+        // page 0 rows 0..5 = k1, rows 5..8 = k2[..3]; page 1 rows 0..3 = k2[3..]
+        let p0 = pool.get(kv.pages[0][0]);
+        assert_eq!(&p0.k.as_f32()[..5 * 8], k1.as_f32());
+        assert_eq!(&p0.k.as_f32()[5 * 8..8 * 8], &k2.as_f32()[..3 * 8]);
+        let p1 = pool.get(kv.pages[0][1]);
+        assert_eq!(&p1.v.as_f32()[..3 * 8], &v2.as_f32()[3 * 8..]);
+        assert_eq!(p1.used, 3);
+    }
+
+    #[test]
+    fn release_returns_pages() {
+        let mut pool = pool();
+        let mut rng = Rng::new(2);
+        let mut kv = RequestKv::new(2, 0);
+        let rows: Vec<_> = (0..2).map(|_| kv_rows(&mut rng, 20)).collect();
+        kv.append(&mut pool, &rows).unwrap();
+        assert!(pool.allocated() > 0);
+        kv.release(&mut pool);
+        assert_eq!(pool.allocated(), 0);
+        assert_eq!(pool.available(), pool.capacity());
+    }
+
+    #[test]
+    fn pool_exhaustion_errors() {
+        let mut pool = PagePool::new(2, 8, 2, 4);
+        let mut rng = Rng::new(3);
+        let mut kv = RequestKv::new(1, 0);
+        let (k, v) = kv_rows(&mut rng, 17); // needs 3 pages
+        assert!(kv.append(&mut pool, &[(k, v)]).is_err());
+    }
+
+    #[test]
+    fn pages_needed_math() {
+        let kv = RequestKv::new(2, 0);
+        assert_eq!(kv.pages_needed(1, 8, 2), 2);
+        assert_eq!(kv.pages_needed(8, 8, 2), 2);
+        assert_eq!(kv.pages_needed(9, 8, 2), 4);
+
+        let mut pool = pool();
+        let mut rng = Rng::new(4);
+        let mut kv = RequestKv::new(2, 0);
+        let rows: Vec<_> = (0..2).map(|_| kv_rows(&mut rng, 5)).collect();
+        kv.append(&mut pool, &rows).unwrap();
+        assert_eq!(kv.pages_needed(3, 8, 2), 0); // fits in current page
+        assert_eq!(kv.pages_needed(4, 8, 2), 2); // one more page per layer
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut pool = pool();
+        let id = pool.alloc().unwrap();
+        pool.free(id);
+        pool.free(id);
+    }
+}

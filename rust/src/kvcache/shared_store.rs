@@ -1,0 +1,320 @@
+//! Persistent shared-KV store: Domain-Specific caches + chunk dedup.
+//!
+//! The paper's key data-management idea (§II.A, §III.A): precomputed KV
+//! for entire domain corpora is a *persistent, shareable asset*, loaded
+//! once and attended by every concurrent request. This module provides:
+//!
+//! * [`DomainCache`] — one domain's per-layer chunked K/V + the router's
+//!   chunk embeddings, loaded from the binio store `aot.py` produced.
+//! * [`ChunkRegistry`] — content-hash interning of chunks with refcounts
+//!   and LRU eviction. Identical chunks (e.g. a boilerplate clause
+//!   appearing in two domains) map to one resident copy *regardless of
+//!   position* — MoSKA's generalization beyond prefix matching.
+//! * [`SharedStore`] — the engine-facing registry of domains.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::Manifest;
+use crate::tensor::Tensor;
+use crate::util::bin::Store;
+
+/// One layer of a domain: per-chunk K/V tensors + chunk embeddings.
+pub struct LayerChunks {
+    /// Per chunk: (k `[chunk,Hkv,dh]`, v `[chunk,Hkv,dh]`).
+    pub chunks: Vec<(Tensor, Tensor)>,
+    /// Router embeddings `[nc, Hkv, dh]` (mean-pooled post-RoPE K).
+    pub embs: Tensor,
+}
+
+/// A fully loaded shared domain.
+pub struct DomainCache {
+    pub name: String,
+    pub tokens: Vec<i32>,
+    pub n_chunks: usize,
+    pub chunk: usize,
+    pub layers: Vec<LayerChunks>,
+    /// Registry ids, one per chunk (dedup accounting).
+    pub chunk_ids: Vec<u64>,
+    /// Absolute base position of each chunk's first token. For a native
+    /// domain this is `c * chunk`; for a *composed* context (Universal
+    /// MoSKA, §III.D) each chunk keeps the base position it had in its
+    /// origin domain, so position-preserving composition stays exact.
+    pub chunk_bases: Vec<i32>,
+}
+
+impl DomainCache {
+    /// Load from a binio store (layout in `python/compile/sharedkv.py`).
+    pub fn load(name: &str, path_bin: &str, n_layers: usize, chunk: usize,
+                registry: &mut ChunkRegistry) -> Result<DomainCache> {
+        let store = Store::load(path_bin)
+            .with_context(|| format!("domain '{name}' from {path_bin}"))?;
+        let tokens = store.get("tokens")?.as_i32().to_vec();
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut n_chunks = 0;
+        for l in 0..n_layers {
+            let k_all = store.get(&format!("layer{l}.k"))?;
+            let v_all = store.get(&format!("layer{l}.v"))?;
+            let embs = store.get(&format!("layer{l}.emb"))?.clone();
+            let shape = k_all.shape(); // [nc, chunk, Hkv, dh]
+            if shape.len() != 4 || shape[1] != chunk {
+                bail!("domain '{name}' layer {l}: bad K shape {shape:?}");
+            }
+            n_chunks = shape[0];
+            let tail = [shape[1], shape[2], shape[3]];
+            let mut chunks = Vec::with_capacity(n_chunks);
+            for c in 0..n_chunks {
+                let k = Tensor::f32(&tail, k_all.index0(c).to_vec());
+                let v = Tensor::f32(&tail, v_all.index0(c).to_vec());
+                chunks.push((k, v));
+            }
+            layers.push(LayerChunks { chunks, embs });
+        }
+        // register layer-0 chunk contents for dedup accounting
+        let mut chunk_ids = Vec::with_capacity(n_chunks);
+        for c in 0..n_chunks {
+            let (k, v) = &layers[0].chunks[c];
+            chunk_ids.push(registry.intern(k, v));
+        }
+        let chunk_bases =
+            (0..n_chunks).map(|c| (c * chunk) as i32).collect();
+        Ok(DomainCache {
+            name: name.to_string(),
+            tokens,
+            n_chunks,
+            chunk,
+            layers,
+            chunk_ids,
+            chunk_bases,
+        })
+    }
+
+    /// Shared context length in tokens.
+    pub fn token_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Absolute base position of chunk `c`.
+    pub fn chunk_base(&self, c: usize) -> i32 {
+        self.chunk_bases[c]
+    }
+
+    /// K/V for chunk `c` at `layer`.
+    pub fn chunk_kv(&self, layer: usize, c: usize) -> (&Tensor, &Tensor) {
+        let (k, v) = &self.layers[layer].chunks[c];
+        (k, v)
+    }
+
+    /// Router embeddings for `layer`.
+    pub fn embeddings(&self, layer: usize) -> &Tensor {
+        &self.layers[layer].embs
+    }
+
+    /// Resident bytes of this domain's K/V (all layers).
+    pub fn resident_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.chunks.iter())
+            .map(|(k, v)| (k.len() + v.len()) * 4)
+            .sum()
+    }
+}
+
+/// Content-addressed chunk interning with refcounts + LRU eviction order.
+#[derive(Default)]
+pub struct ChunkRegistry {
+    by_hash: HashMap<u64, u64>, // content hash → chunk id
+    refcount: BTreeMap<u64, usize>,
+    lru: Vec<u64>, // least-recently-used first
+    next_id: u64,
+    pub interned: u64,
+    pub dedup_hits: u64,
+}
+
+impl ChunkRegistry {
+    pub fn new() -> ChunkRegistry {
+        ChunkRegistry::default()
+    }
+
+    fn fnv1a(bytes: impl Iterator<Item = u8>) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    fn content_hash(k: &Tensor, v: &Tensor) -> u64 {
+        let kb = k.as_f32().iter().flat_map(|f| f.to_le_bytes());
+        let vb = v.as_f32().iter().flat_map(|f| f.to_le_bytes());
+        Self::fnv1a(kb.chain(vb))
+    }
+
+    /// Intern a chunk: identical content → same id, bumped refcount.
+    pub fn intern(&mut self, k: &Tensor, v: &Tensor) -> u64 {
+        let h = Self::content_hash(k, v);
+        self.interned += 1;
+        if let Some(&id) = self.by_hash.get(&h) {
+            *self.refcount.get_mut(&id).unwrap() += 1;
+            self.dedup_hits += 1;
+            self.touch(id);
+            return id;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.by_hash.insert(h, id);
+        self.refcount.insert(id, 1);
+        self.lru.push(id);
+        id
+    }
+
+    pub fn release(&mut self, id: u64) {
+        if let Some(rc) = self.refcount.get_mut(&id) {
+            *rc = rc.saturating_sub(1);
+        }
+    }
+
+    fn touch(&mut self, id: u64) {
+        if let Some(pos) = self.lru.iter().position(|&x| x == id) {
+            self.lru.remove(pos);
+            self.lru.push(id);
+        }
+    }
+
+    /// Mark a chunk as used (router hit) for LRU ordering.
+    pub fn mark_used(&mut self, id: u64) {
+        self.touch(id);
+    }
+
+    /// Evict up to `n` zero-ref chunks, LRU first; returns evicted ids.
+    pub fn evict(&mut self, n: usize) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.lru.len() && out.len() < n {
+            let id = self.lru[i];
+            if self.refcount.get(&id).copied().unwrap_or(0) == 0 {
+                self.lru.remove(i);
+                self.refcount.remove(&id);
+                self.by_hash.retain(|_, v| *v != id);
+                out.push(id);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn resident(&self) -> usize {
+        self.refcount.len()
+    }
+
+    pub fn refcount_of(&self, id: u64) -> usize {
+        self.refcount.get(&id).copied().unwrap_or(0)
+    }
+}
+
+/// Engine-facing registry of loaded domains.
+pub struct SharedStore {
+    pub domains: BTreeMap<String, DomainCache>,
+    pub registry: ChunkRegistry,
+    pub chunk: usize,
+}
+
+impl SharedStore {
+    /// Load every domain declared in the manifest.
+    pub fn load_from_manifest(man: &Manifest) -> Result<SharedStore> {
+        let mut registry = ChunkRegistry::new();
+        let mut domains = BTreeMap::new();
+        for d in &man.domains {
+            let path = man.domain_path(d);
+            let dc = DomainCache::load(
+                &d.name,
+                path.to_str().context("utf8")?,
+                man.model.n_layers,
+                man.chunk,
+                &mut registry,
+            )?;
+            anyhow::ensure!(dc.n_chunks == d.chunks,
+                            "domain {}: {} chunks vs manifest {}",
+                            d.name, dc.n_chunks, d.chunks);
+            domains.insert(d.name.clone(), dc);
+        }
+        Ok(SharedStore { domains, registry, chunk: man.chunk })
+    }
+
+    /// Empty store (engine without shared context).
+    pub fn empty(chunk: usize) -> SharedStore {
+        SharedStore {
+            domains: BTreeMap::new(),
+            registry: ChunkRegistry::new(),
+            chunk,
+        }
+    }
+
+    pub fn domain(&self, name: &str) -> Result<&DomainCache> {
+        self.domains
+            .get(name)
+            .with_context(|| format!("unknown domain '{name}'"))
+    }
+
+    /// Total resident shared bytes — loaded ONCE no matter the batch size
+    /// (the capacity half of Fig 1b).
+    pub fn resident_bytes(&self) -> usize {
+        self.domains.values().map(|d| d.resident_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn chunk_t(rng: &mut Rng) -> (Tensor, Tensor) {
+        let mut k = vec![0f32; 8 * 2 * 4];
+        let mut v = vec![0f32; 8 * 2 * 4];
+        rng.fill_normal_f32(&mut k);
+        rng.fill_normal_f32(&mut v);
+        (Tensor::f32(&[8, 2, 4], k), Tensor::f32(&[8, 2, 4], v))
+    }
+
+    #[test]
+    fn intern_dedups_identical_content() {
+        let mut reg = ChunkRegistry::new();
+        let mut rng = Rng::new(0);
+        let (k1, v1) = chunk_t(&mut rng);
+        let (k2, v2) = chunk_t(&mut rng);
+        let a = reg.intern(&k1, &v1);
+        let b = reg.intern(&k2, &v2);
+        let c = reg.intern(&k1, &v1); // same content, different "position"
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+        assert_eq!(reg.refcount_of(a), 2);
+        assert_eq!(reg.dedup_hits, 1);
+        assert_eq!(reg.resident(), 2);
+    }
+
+    #[test]
+    fn evict_respects_refcounts_and_lru() {
+        let mut reg = ChunkRegistry::new();
+        let mut rng = Rng::new(1);
+        let (k1, v1) = chunk_t(&mut rng);
+        let (k2, v2) = chunk_t(&mut rng);
+        let (k3, v3) = chunk_t(&mut rng);
+        let a = reg.intern(&k1, &v1);
+        let b = reg.intern(&k2, &v2);
+        let c = reg.intern(&k3, &v3);
+        reg.release(b);
+        reg.release(c);
+        reg.mark_used(b); // b now more recent than c
+        let evicted = reg.evict(1);
+        assert_eq!(evicted, vec![c]);
+        let evicted = reg.evict(5);
+        assert_eq!(evicted, vec![b]);
+        // a still referenced → never evicted
+        assert_eq!(reg.evict(5), Vec::<u64>::new());
+        assert_eq!(reg.resident(), 1);
+        assert_eq!(reg.refcount_of(a), 1);
+    }
+}

@@ -1,0 +1,39 @@
+//! # MoSKA — Mixture of Shared KV Attention
+//!
+//! Full-system reproduction of *"MoSKA: Mixture of Shared KV Attention for
+//! Efficient Long-Sequence LLM Inference"* (Rhee et al., IEEE CAL 2025) as a
+//! three-layer rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: MoE-inspired chunk
+//!   routing ([`router`]), Shared-KV GEMM batch forming ([`batcher`]), paged
+//!   unique KV cache + persistent shared chunk store ([`kvcache`]),
+//!   SLO-aware scheduling ([`scheduler`]), the request engine ([`engine`]),
+//!   a disaggregated two-node runtime ([`disagg`]), and the paper's
+//!   analytical evaluation model ([`analytical`]).
+//! * **L2/L1 (build time)** — `python/compile/` lowers the moska-tiny JAX
+//!   graph and the Pallas Shared-KV attention kernel to HLO-text artifacts;
+//!   [`runtime`] loads and executes them through the PJRT C API (`xla`
+//!   crate). Python is never on the request path.
+//!
+//! Start at [`engine::Engine`] for the serving system or
+//! [`analytical::figures`] for the paper's figures.
+
+pub mod analytical;
+pub mod attention;
+pub mod batcher;
+pub mod config;
+pub mod disagg;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod router;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias (anyhow is the only error dependency).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,164 @@
+//! `moska` launcher — subcommand dispatch for the serving system, the
+//! disaggregated simulation, and the paper's analytical figures.
+//!
+//! ```text
+//! moska serve      [--addr 127.0.0.1:8080] [--top-k 4] [--backend xla]
+//! moska demo       [--requests 8] [--steps 16] [--domain legal]
+//! moska figures    [--out bench_out]
+//! moska disagg     [--batches 1,8,64,256]
+//! moska artifacts-info
+//! ```
+
+use moska::util::cli::Cli;
+
+fn main() {
+    moska::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) if !c.starts_with('-') => (c.clone(), r.to_vec()),
+        _ => {
+            eprint!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&rest),
+        "demo" => cmd_demo(&rest),
+        "figures" => cmd_figures(&rest),
+        "disagg" => cmd_disagg(&rest),
+        "replay" => cmd_replay(&rest),
+        "trace" => cmd_trace(&rest),
+        "artifacts-info" => cmd_artifacts_info(&rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            return;
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "moska — Mixture of Shared KV Attention serving system\n\n\
+     Commands:\n\
+     \x20 serve            run the HTTP serving endpoint\n\
+     \x20 demo             run a batched-decode demo on the tiny model\n\
+     \x20 figures          regenerate the paper's figures (analytical model)\n\
+     \x20 disagg           run the disaggregated two-node simulation\n\
+     \x20 replay           open-loop Poisson workload replay\n\
+     \x20 artifacts-info   list compiled artifacts + manifest summary\n\
+     \x20 help             this text\n\n\
+     Run `moska <command> --help` for command options.\n"
+        .to_string()
+}
+
+fn cmd_serve(argv: &[String]) -> moska::Result<()> {
+    let args = Cli::new("moska serve", "HTTP serving endpoint")
+        .opt("addr", "127.0.0.1:8080", "listen address")
+        .opt("artifacts", "", "artifacts dir (default: auto-discover)")
+        .opt("top-k", "0", "router top-k (0 = dense/exact)")
+        .opt("backend", "xla", "xla | native")
+        .opt("max-batch", "32", "max decode batch")
+        .opt("config", "", "JSON config file (flags override it)")
+        .parse_from(argv)?;
+    moska::server::run_server(&args)
+}
+
+fn cmd_demo(argv: &[String]) -> moska::Result<()> {
+    let args = Cli::new("moska demo", "batched decode demo")
+        .opt("artifacts", "", "artifacts dir (default: auto-discover)")
+        .opt("requests", "8", "concurrent requests")
+        .opt("steps", "16", "decode steps per request")
+        .opt("domain", "legal", "shared domain (legal|medical|code|none)")
+        .opt("top-k", "0", "router top-k (0 = dense/exact)")
+        .opt("backend", "xla", "xla | native")
+        .parse_from(argv)?;
+    moska::engine::run_demo(&args)
+}
+
+fn cmd_figures(argv: &[String]) -> moska::Result<()> {
+    let args = Cli::new("moska figures", "paper figure regeneration")
+        .opt("out", "bench_out", "output directory for CSVs")
+        .parse_from(argv)?;
+    moska::analytical::run_all_figures(&args)
+}
+
+fn cmd_disagg(argv: &[String]) -> moska::Result<()> {
+    let args = Cli::new("moska disagg", "disaggregated two-node simulation")
+        .opt("artifacts", "", "artifacts dir (default: auto-discover)")
+        .opt("batches", "1,4,16,64", "comma-separated batch sizes")
+        .opt("steps", "8", "decode steps per batch point")
+        .opt("backend", "native", "xla | native")
+        .parse_from(argv)?;
+    moska::disagg::run_sim(&args)
+}
+
+fn cmd_replay(argv: &[String]) -> moska::Result<()> {
+    let args = Cli::new("moska replay", "open-loop workload replay")
+        .opt("artifacts", "", "artifacts dir (default: auto-discover)")
+        .opt("requests", "24", "number of requests")
+        .opt("rate", "8.0", "offered load (requests/sec)")
+        .opt("top-k", "16", "router top-k (0 = dense)")
+        .opt("backend", "xla", "xla | native")
+        .opt("max-batch", "32", "max decode batch")
+        .opt("trace", "", "replay a recorded trace file instead")
+        .parse_from(argv)?;
+    moska::engine::replay::run_replay(&args)
+}
+
+fn cmd_trace(argv: &[String]) -> moska::Result<()> {
+    let args = Cli::new("moska trace", "record a workload trace to JSON")
+        .opt("out", "trace.json", "output path")
+        .opt("requests", "50", "number of requests")
+        .opt("rate", "8.0", "offered load (requests/sec)")
+        .opt("seed", "7", "generator seed")
+        .opt("skew", "1.1", "domain Zipf skew")
+        .parse_from(argv)?;
+    let cfg = moska::workload::WorkloadConfig {
+        rate: args.f64("rate")?,
+        domain_skew: args.f64("skew")?,
+        ..Default::default()
+    };
+    let mut gen = moska::workload::Generator::new(
+        cfg, args.usize("seed")? as u64,
+    );
+    let items = gen.take(args.usize("requests")?);
+    let out = args.str("out")?;
+    std::fs::write(&out, moska::workload::trace_to_json(&items).to_string())?;
+    println!("wrote {} requests to {out} (rate {:.1}/s, span {:.2}s)",
+             items.len(), args.f64("rate")?,
+             items.last().map(|i| i.arrival).unwrap_or(0.0));
+    Ok(())
+}
+
+fn cmd_artifacts_info(argv: &[String]) -> moska::Result<()> {
+    let args = Cli::new("moska artifacts-info", "manifest summary")
+        .opt("artifacts", "", "artifacts dir (default: auto-discover)")
+        .parse_from(argv)?;
+    let dir = match args.get("artifacts") {
+        Some("") | None => moska::runtime::artifact::default_artifacts_dir(),
+        Some(d) => d.to_string(),
+    };
+    let man = moska::runtime::Manifest::load(&dir)?;
+    println!("artifacts dir : {dir}");
+    println!("model         : {:?}", man.model);
+    println!("chunk tokens  : {}", man.chunk);
+    println!("batch buckets : {:?}", man.batch_buckets);
+    println!("router buckets: {:?}", man.router_chunk_buckets);
+    println!("domains       :");
+    for d in &man.domains {
+        println!("  {:<10} {:>6} tokens  {:>4} chunks  ({})",
+                 d.name, d.tokens, d.chunks, d.file);
+    }
+    println!("artifacts     : {}", man.artifact_count());
+    for n in man.artifact_names() {
+        println!("  {n}");
+    }
+    Ok(())
+}

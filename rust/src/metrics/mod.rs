@@ -1,0 +1,236 @@
+//! Runtime metrics: counters, gauges, nanosecond histograms, MFU/BW
+//! utilization estimators for the disaggregated nodes (paper Fig 5).
+//!
+//! Lock-free-ish (one mutex per registry; hot-path increments are cheap
+//! relative to PJRT calls). The HTTP server exposes a JSON snapshot at
+//! `/stats`; the disagg sim samples per-node instances every step.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Log-bucketed latency histogram (ns), 64 power-of-two buckets.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; 64],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe_ns(&self, ns: u64) {
+        let b = (64 - ns.max(1).leading_zeros() as usize).min(63);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket edge).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Named counters + gauges + histograms.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn count(&self, name: &str, delta: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) +=
+            delta;
+    }
+
+    pub fn gauge(&self, name: &str, v: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    pub fn observe_ns(&self, name: &str, ns: u64) {
+        let h = {
+            let mut hs = self.histograms.lock().unwrap();
+            hs.entry(name.to_string())
+                .or_insert_with(|| std::sync::Arc::new(Histogram::default()))
+                .clone()
+        };
+        h.observe_ns(ns);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<std::sync::Arc<Histogram>> {
+        self.histograms.lock().unwrap().get(name).cloned()
+    }
+
+    /// JSON snapshot for `/stats` and test assertions.
+    pub fn snapshot(&self) -> Json {
+        let counters = self.counters.lock().unwrap();
+        let gauges = self.gauges.lock().unwrap();
+        let hs = self.histograms.lock().unwrap();
+        let mut obj = BTreeMap::new();
+        let mut cs = BTreeMap::new();
+        for (k, v) in counters.iter() {
+            cs.insert(k.clone(), Json::num(*v as f64));
+        }
+        obj.insert("counters".to_string(), Json::Obj(cs));
+        let mut gs = BTreeMap::new();
+        for (k, v) in gauges.iter() {
+            gs.insert(k.clone(), Json::num(*v));
+        }
+        obj.insert("gauges".to_string(), Json::Obj(gs));
+        let mut hj = BTreeMap::new();
+        for (k, h) in hs.iter() {
+            hj.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("mean_ns", Json::num(h.mean_ns())),
+                    ("p50_ns", Json::num(h.quantile_ns(0.5) as f64)),
+                    ("p99_ns", Json::num(h.quantile_ns(0.99) as f64)),
+                ]),
+            );
+        }
+        obj.insert("histograms".to_string(), Json::Obj(hj));
+        Json::Obj(obj)
+    }
+}
+
+/// Hardware-utilization estimator for one simulated node (Fig 5 series).
+///
+/// The live system runs on CPU, so "MFU" here is *model FLOPs utilization
+/// of the analytical H200 budget*: flops the node's work would cost on the
+/// paper's hardware divided by (elapsed × peak). The same accounting code
+/// is reused by the analytical model, so measured series and analytical
+/// series are directly comparable.
+#[derive(Debug, Default)]
+pub struct UtilizationEstimator {
+    pub flops: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub bytes_resident: AtomicU64,
+}
+
+impl UtilizationEstimator {
+    pub fn add_flops(&self, f: u64) {
+        self.flops.fetch_add(f, Ordering::Relaxed);
+    }
+
+    pub fn add_bytes_read(&self, b: u64) {
+        self.bytes_read.fetch_add(b, Ordering::Relaxed);
+    }
+
+    pub fn set_bytes_resident(&self, b: u64) {
+        self.bytes_resident.store(b, Ordering::Relaxed);
+    }
+
+    /// (MFU, BW-util, capacity-util) against peak budgets over `secs`.
+    pub fn utilization(&self, peak_flops: f64, peak_bw: f64,
+                       capacity: f64, secs: f64) -> (f64, f64, f64) {
+        let f = self.flops.load(Ordering::Relaxed) as f64;
+        let r = self.bytes_read.load(Ordering::Relaxed) as f64;
+        let c = self.bytes_resident.load(Ordering::Relaxed) as f64;
+        if secs <= 0.0 {
+            return (0.0, 0.0, c / capacity);
+        }
+        (f / (peak_flops * secs), r / (peak_bw * secs), c / capacity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.count("x", 2);
+        m.count("x", 3);
+        m.gauge("g", 1.5);
+        assert_eq!(m.counter("x"), 5);
+        assert_eq!(m.gauge_value("g"), Some(1.5));
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::default();
+        for i in 0..1000u64 {
+            h.observe_ns(i + 1);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.mean_ns() > 400.0 && h.mean_ns() < 600.0);
+        let p50 = h.quantile_ns(0.5);
+        assert!(p50 >= 256 && p50 <= 1024, "p50 {p50}");
+    }
+
+    #[test]
+    fn snapshot_json() {
+        let m = Metrics::new();
+        m.count("a", 1);
+        m.observe_ns("lat", 1000);
+        let s = m.snapshot();
+        assert_eq!(s.get("counters").unwrap().get("a").unwrap().as_i64().unwrap(), 1);
+        assert!(s.get("histograms").unwrap().get("lat").is_ok());
+    }
+
+    #[test]
+    fn utilization_math() {
+        let u = UtilizationEstimator::default();
+        u.add_flops(1_000_000);
+        u.add_bytes_read(500);
+        u.set_bytes_resident(50);
+        let (mfu, bw, cap) = u.utilization(1e6, 1e3, 100.0, 1.0);
+        assert!((mfu - 1.0).abs() < 1e-9);
+        assert!((bw - 0.5).abs() < 1e-9);
+        assert!((cap - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,107 @@
+//! Token sampling: greedy argmax and top-k/temperature.
+//!
+//! Greedy is the default (and what the golden decode traces use); top-k
+//! sampling exercises the stochastic path in the demo and server.
+
+use crate::util::rng::Rng;
+
+/// Sampling policy.
+#[derive(Debug, Clone)]
+pub enum Sampler {
+    Greedy,
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampler {
+    /// Pick a token id from a logits row.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> i32 {
+        match self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::TopK { k, temperature } => {
+                top_k_sample(logits, *k, *temperature, rng)
+            }
+        }
+    }
+}
+
+/// Index of the max logit (first on ties — matches jnp.argmax).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Softmax-sample from the k highest logits at the given temperature.
+pub fn top_k_sample(logits: &[f32], k: usize, temperature: f32,
+                    rng: &mut Rng) -> i32 {
+    assert!(k >= 1 && temperature > 0.0);
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    let k = k.min(logits.len());
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap()
+    });
+    let top = &idx[..k];
+    let mx = top.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> = top
+        .iter()
+        .map(|&i| ((logits[i] - mx) / temperature).exp())
+        .collect();
+    let total: f32 = weights.iter().sum();
+    let mut u = rng.f32() * total;
+    for (j, w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return top[j] as i32;
+        }
+    }
+    top[k - 1] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_tie() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+
+    #[test]
+    fn topk_only_picks_top() {
+        let mut rng = Rng::new(0);
+        let mut logits = vec![0.0f32; 100];
+        logits[7] = 10.0;
+        logits[13] = 9.0;
+        for _ in 0..50 {
+            let t = top_k_sample(&logits, 2, 1.0, &mut rng);
+            assert!(t == 7 || t == 13);
+        }
+    }
+
+    #[test]
+    fn topk_1_is_greedy() {
+        let mut rng = Rng::new(1);
+        let logits = vec![0.1, 3.0, -2.0, 2.9];
+        for _ in 0..10 {
+            assert_eq!(top_k_sample(&logits, 1, 0.7, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Rng::new(2);
+        let logits = vec![1.0, 1.2, 0.8];
+        let mut counts = [0; 3];
+        for _ in 0..500 {
+            counts[top_k_sample(&logits, 3, 0.05, &mut rng) as usize] += 1;
+        }
+        assert!(counts[1] > 480, "{counts:?}");
+    }
+}

@@ -1,0 +1,44 @@
+//! Byte-level tokenizer: vocab 256, token = byte.
+//!
+//! moska-tiny is trained on nothing (fixed random weights), so a byte
+//! tokenizer is the honest choice: every possible string round-trips, and
+//! the serving pipeline (prompt → tokens → decode → text) is fully
+//! exercised without a vocabulary asset.
+
+/// Encode a string to byte tokens.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+/// Decode tokens back to a string (lossy on invalid UTF-8).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .map(|&t| (t.clamp(0, 255)) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "hello MoSKA";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo — 世界";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        for t in encode("any text at all…") {
+            assert!((0..256).contains(&t));
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! MoE-inspired chunk router (paper §III.B).
+//!
+//! The shared KV space is partitioned into chunks ('experts'); for each
+//! query the router scores every chunk via the inner product against its
+//! mean-pooled-K embedding (computed by the backend — the Pallas
+//! `router_score` kernel or its native twin) and keeps the top-k. Dense
+//! mode (`top_k = None`) selects everything, making the chunked attention
+//! *exact* — that's what the golden tests pin down; sparse mode is the
+//! paper's ≥75 % pruning.
+
+use anyhow::Result;
+
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+
+/// Routing decision for one query row: chunk indices, ascending.
+pub type ChunkSet = Vec<usize>;
+
+/// Router statistics (exposed via `/stats` and the demo summary).
+#[derive(Debug, Default, Clone)]
+pub struct RouterStats {
+    pub queries: u64,
+    pub chunks_scored: u64,
+    pub chunks_selected: u64,
+}
+
+impl RouterStats {
+    /// Fraction of the shared context pruned (paper's sparsity knob).
+    pub fn sparsity(&self) -> f64 {
+        if self.chunks_scored == 0 {
+            0.0
+        } else {
+            1.0 - self.chunks_selected as f64 / self.chunks_scored as f64
+        }
+    }
+}
+
+/// Training-free top-k chunk router.
+pub struct Router {
+    pub top_k: Option<usize>,
+    pub stats: RouterStats,
+}
+
+impl Router {
+    pub fn new(top_k: Option<usize>) -> Router {
+        Router { top_k, stats: RouterStats::default() }
+    }
+
+    /// Route `B` queries against a domain's chunk embeddings.
+    ///
+    /// `q`: `[B, H, dh]`, `embs`: `[C, Hkv, dh]` → per-query [`ChunkSet`].
+    pub fn route(&mut self, backend: &dyn Backend, q: &Tensor,
+                 embs: &Tensor) -> Result<Vec<ChunkSet>> {
+        let b = q.shape()[0];
+        let c = embs.shape()[0];
+        self.stats.queries += b as u64;
+        self.stats.chunks_scored += (b * c) as u64;
+        let k = match self.top_k {
+            None => {
+                // dense: all chunks for every query, no scoring needed
+                self.stats.chunks_selected += (b * c) as u64;
+                return Ok(vec![(0..c).collect(); b]);
+            }
+            Some(k) => k.min(c),
+        };
+        let scores = backend.router(q, embs)?;
+        let mut out = Vec::with_capacity(b);
+        for bi in 0..b {
+            let row = scores.row(bi);
+            out.push(top_k_indices(row, k));
+            self.stats.chunks_selected += k as u64;
+        }
+        Ok(out)
+    }
+}
+
+/// Indices of the k largest values, returned ascending (cache-friendly
+/// chunk iteration order; attention is order-invariant by LSE merge).
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    if k < scores.len() {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap()
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+    idx
+}
+
+/// Union of per-query chunk sets (which chunks does this *batch* need?).
+pub fn union_chunks(sets: &[ChunkSet]) -> Vec<usize> {
+    let mut all: Vec<usize> = sets.iter().flatten().copied().collect();
+    all.sort_unstable();
+    all.dedup();
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::runtime::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let mut d = vec![0f32; shape.iter().product()];
+        rng.fill_normal_f32(&mut d);
+        Tensor::f32(shape, d)
+    }
+
+    #[test]
+    fn top_k_indices_correct() {
+        let s = [0.1, 5.0, -2.0, 3.0, 3.5];
+        assert_eq!(top_k_indices(&s, 2), vec![1, 4]);
+        assert_eq!(top_k_indices(&s, 1), vec![1]);
+        assert_eq!(top_k_indices(&s, 10), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn dense_routing_selects_all() {
+        let be = NativeBackend::new(ModelConfig::tiny(), 64);
+        let mut rng = Rng::new(0);
+        let q = rand_t(&mut rng, &[3, 4, 16]);
+        let embs = rand_t(&mut rng, &[10, 2, 16]);
+        let mut r = Router::new(None);
+        let sets = r.route(&be, &q, &embs).unwrap();
+        assert_eq!(sets.len(), 3);
+        for s in sets {
+            assert_eq!(s, (0..10).collect::<Vec<_>>());
+        }
+        assert_eq!(r.stats.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn sparse_routing_prunes() {
+        let be = NativeBackend::new(ModelConfig::tiny(), 64);
+        let mut rng = Rng::new(1);
+        let q = rand_t(&mut rng, &[4, 4, 16]);
+        let embs = rand_t(&mut rng, &[16, 2, 16]);
+        let mut r = Router::new(Some(4));
+        let sets = r.route(&be, &q, &embs).unwrap();
+        for s in &sets {
+            assert_eq!(s.len(), 4);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            assert_eq!(&sorted, s, "sets are ascending");
+        }
+        // 4/16 selected → 75% sparsity, the paper's operating point
+        assert!((r.stats.sparsity() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn router_picks_aligned_embedding() {
+        let be = NativeBackend::new(ModelConfig::tiny(), 64);
+        let mut rng = Rng::new(2);
+        let q = rand_t(&mut rng, &[1, 4, 16]);
+        // embeddings: mostly noise ×0.01, chunk 5 = scaled kv-mean of q
+        let mut embs = rand_t(&mut rng, &[8, 2, 16]);
+        for x in embs.as_f32_mut() {
+            *x *= 0.01;
+        }
+        let qv = q.as_f32();
+        // kv head k mean over its group of q heads (group=2)
+        let e = embs.as_f32_mut();
+        for kv in 0..2 {
+            for d in 0..16 {
+                let m = (qv[(kv * 2) * 16 + d] + qv[(kv * 2 + 1) * 16 + d]) / 2.0;
+                e[(5 * 2 + kv) * 16 + d] = m * 10.0;
+            }
+        }
+        let mut r = Router::new(Some(1));
+        let sets = r.route(&be, &q, &embs).unwrap();
+        assert_eq!(sets[0], vec![5]);
+    }
+
+    #[test]
+    fn union_chunks_dedups() {
+        let sets = vec![vec![1, 3, 5], vec![3, 4], vec![]];
+        assert_eq!(union_chunks(&sets), vec![1, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Artifact manifest: registry of AOT-compiled HLO artifacts.
+//!
+//! `artifacts/manifest.json` is written by `python/compile/aot.py` and
+//! enumerates every lowered (op, batch-bucket) with its input/output
+//! shapes. The runtime validates call shapes against it, and the bucket
+//! picker uses it to find the smallest compiled batch ≥ the live batch.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::{DType, Tensor};
+use crate::util::json::Json;
+
+/// One declared tensor port (input or output) of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Port {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+/// Metadata for one compiled artifact (one HLO file).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Path relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<Port>,
+    pub outputs: Vec<Port>,
+}
+
+impl ArtifactMeta {
+    /// Validate concrete tensors against the declared input ports.
+    pub fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.inputs.len() {
+            bail!("{}: expected {} inputs, got {}",
+                  self.name, self.inputs.len(), inputs.len());
+        }
+        for (t, p) in inputs.iter().zip(&self.inputs) {
+            if t.dtype() != p.dtype || t.shape() != p.shape.as_slice() {
+                bail!(
+                    "{}: input '{}' expects {}{:?}, got {}{:?}",
+                    self.name, p.name, p.dtype, p.shape, t.dtype(), t.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A shared-domain KV store declared in the manifest.
+#[derive(Debug, Clone)]
+pub struct DomainMeta {
+    pub name: String,
+    pub tokens: usize,
+    pub chunks: usize,
+    pub file: String,
+}
+
+/// The parsed artifact registry.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    /// Tokens per KV chunk (the Shared-KV Attention granule).
+    pub chunk: usize,
+    pub batch_buckets: Vec<usize>,
+    pub router_chunk_buckets: Vec<usize>,
+    /// Compiled chunk_attn K/V token lengths (run coalescing targets).
+    pub attn_token_buckets: Vec<usize>,
+    pub weights_file: String,
+    pub domains: Vec<DomainMeta>,
+    artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = Path::new(dir).join("manifest.json");
+        let j = Json::read_file(path.to_str().context("utf8 path")?)
+            .with_context(|| format!("loading manifest from {dir} — did you run `make artifacts`?"))?;
+        let model = ModelConfig::from_json(j.get("model")?)?;
+        let chunk = j.get("chunk")?.as_usize()?;
+        let batch_buckets = j.get("batch_buckets")?.as_usize_vec()?;
+        let router_chunk_buckets =
+            j.get("router_chunk_buckets")?.as_usize_vec()?;
+        // older manifests (pre §Perf opt 2) lack attn buckets
+        let attn_token_buckets = match j.opt("attn_token_buckets") {
+            Some(v) => v.as_usize_vec()?,
+            None => vec![chunk],
+        };
+        let weights_file = j.get("weights")?.as_str()?.to_string();
+
+        let mut domains = Vec::new();
+        for d in j.get("domains")?.as_arr()? {
+            domains.push(DomainMeta {
+                name: d.get("name")?.as_str()?.to_string(),
+                tokens: d.get("tokens")?.as_usize()?,
+                chunks: d.get("chunks")?.as_usize()?,
+                file: d.get("file")?.as_str()?.to_string(),
+            });
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts")?.as_arr()? {
+            let name = a.get("name")?.as_str()?.to_string();
+            let parse_ports = |key: &str| -> Result<Vec<Port>> {
+                a.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|p| {
+                        Ok(Port {
+                            name: p
+                                .opt("name")
+                                .map(|n| n.as_str().map(str::to_string))
+                                .transpose()?
+                                .unwrap_or_default(),
+                            dtype: DType::from_str(p.get("dtype")?.as_str()?)
+                                .context("bad dtype")?,
+                            shape: p.get("shape")?.as_usize_vec()?,
+                        })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs: parse_ports("inputs")?,
+                    outputs: parse_ports("outputs")?,
+                },
+            );
+        }
+
+        // sanity: buckets sorted ascending (bucket picking relies on it)
+        let mut sorted = batch_buckets.clone();
+        sorted.sort_unstable();
+        if sorted != batch_buckets || batch_buckets.is_empty() {
+            bail!("batch_buckets must be non-empty ascending: {batch_buckets:?}");
+        }
+
+        Ok(Manifest {
+            dir: PathBuf::from(dir),
+            model,
+            chunk,
+            batch_buckets,
+            router_chunk_buckets,
+            attn_token_buckets,
+            weights_file,
+            domains,
+            artifacts,
+        })
+    }
+
+    /// Smallest compiled chunk_attn token bucket ≥ `t`.
+    pub fn pick_attn_bucket(&self, t: usize) -> Result<usize> {
+        self.attn_token_buckets
+            .iter()
+            .copied()
+            .find(|&x| x >= t)
+            .with_context(|| {
+                format!("K/V length {t} exceeds largest attn bucket {:?}",
+                        self.attn_token_buckets.last())
+            })
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn artifact_names(&self) -> impl Iterator<Item = &String> {
+        self.artifacts.keys()
+    }
+
+    pub fn artifact_count(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    /// Smallest compiled batch bucket ≥ `b`.
+    pub fn pick_batch_bucket(&self, b: usize) -> Result<usize> {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .find(|&x| x >= b)
+            .with_context(|| {
+                format!("batch {b} exceeds largest bucket {:?}",
+                        self.batch_buckets.last())
+            })
+    }
+
+    /// Smallest compiled router chunk-count bucket ≥ `c`.
+    pub fn pick_router_bucket(&self, c: usize) -> Result<usize> {
+        self.router_chunk_buckets
+            .iter()
+            .copied()
+            .find(|&x| x >= c)
+            .with_context(|| {
+                format!("chunk count {c} exceeds largest router bucket {:?}",
+                        self.router_chunk_buckets.last())
+            })
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights_file)
+    }
+
+    pub fn domain_path(&self, d: &DomainMeta) -> PathBuf {
+        self.dir.join(&d.file)
+    }
+}
+
+/// Default artifacts directory (repo root), overridable via env.
+pub fn default_artifacts_dir() -> String {
+    std::env::var("MOSKA_ARTIFACTS").unwrap_or_else(|_| {
+        // examples/tests run from the repo root; benches sometimes from
+        // target/ — walk up until we find a manifest.
+        for base in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(base).join("manifest.json").exists() {
+                return base.to_string();
+            }
+        }
+        "artifacts".to_string()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_picking() {
+        let man = Manifest {
+            dir: PathBuf::from("x"),
+            model: ModelConfig::tiny(),
+            chunk: 64,
+            batch_buckets: vec![1, 2, 4, 8, 16, 32],
+            router_chunk_buckets: vec![16, 64, 256],
+            attn_token_buckets: vec![64, 256, 1024],
+            weights_file: String::new(),
+            domains: vec![],
+            artifacts: BTreeMap::new(),
+        };
+        assert_eq!(man.pick_batch_bucket(1).unwrap(), 1);
+        assert_eq!(man.pick_batch_bucket(3).unwrap(), 4);
+        assert_eq!(man.pick_batch_bucket(32).unwrap(), 32);
+        assert!(man.pick_batch_bucket(33).is_err());
+        assert_eq!(man.pick_router_bucket(17).unwrap(), 64);
+    }
+
+    #[test]
+    fn check_inputs_validates() {
+        let meta = ArtifactMeta {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            inputs: vec![Port {
+                name: "x".into(),
+                dtype: DType::F32,
+                shape: vec![2, 3],
+            }],
+            outputs: vec![],
+        };
+        assert!(meta
+            .check_inputs(&[Tensor::zeros_f32(&[2, 3])])
+            .is_ok());
+        assert!(meta
+            .check_inputs(&[Tensor::zeros_f32(&[3, 2])])
+            .is_err());
+        assert!(meta.check_inputs(&[Tensor::zeros_i32(&[2, 3])]).is_err());
+        assert!(meta.check_inputs(&[]).is_err());
+    }
+}

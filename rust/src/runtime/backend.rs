@@ -1,0 +1,423 @@
+//! The [`Backend`] trait: model ops at any live batch size.
+//!
+//! The engine calls ops with whatever batch the scheduler formed; the
+//! backend maps that onto the fixed shapes the substrate offers:
+//!
+//! * [`XlaBackend`] — picks the smallest compiled batch bucket ≥ B, pads
+//!   (padding query rows carry `q_pos = -1`, which the kernels mask into
+//!   LSE-merge identities), executes the PJRT artifact, slices back.
+//! * [`NativeBackend`] — executes the pure-rust ops directly (no padding).
+//!
+//! Both produce identical numerics (asserted by integration tests), so the
+//! rest of the coordinator is backend-agnostic.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::runtime::client::RuntimeHandle;
+use crate::runtime::native::{self, Partials};
+use crate::tensor::Tensor;
+
+/// Model ops at live batch size (see module docs).
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn model(&self) -> &ModelConfig;
+
+    /// Tokens per KV chunk.
+    fn chunk_size(&self) -> usize;
+
+    /// Largest K/V length one `chunk_attn` call can take (run coalescing
+    /// target, §Perf opt 2). The coordinator may pass any `C ≤` this.
+    fn max_attn_tokens(&self) -> usize {
+        self.chunk_size()
+    }
+
+    /// tokens i32`[B]` × emb `[V,d]` → x `[B,d]`.
+    fn embed(&self, tokens: &Tensor, emb: &Tensor) -> Result<Tensor>;
+
+    /// x `[B,d]` → (q `[B,H,dh]`, k `[B,Hkv,dh]`, v `[B,Hkv,dh]`).
+    fn qkv(&self, x: &Tensor, attn_norm: &Tensor, wq: &Tensor, wk: &Tensor,
+           wv: &Tensor, pos: &[i32]) -> Result<(Tensor, Tensor, Tensor)>;
+
+    /// Shared-KV chunk attention → unnormalized partials.
+    fn chunk_attn(&self, q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
+                  k_base: i32, valid: i32) -> Result<Partials>;
+
+    /// Dispatch-aware chunk attention for *small* calls (§Perf opt 3).
+    ///
+    /// Decode-time unique-KV attention is a B=1 GEMV over a few dozen
+    /// tokens — microseconds of math behind ~10²µs of PJRT dispatch on
+    /// CPU. Below `SMALL_ATTN_UNITS` of work the native twin runs instead
+    /// (same algorithm, equality asserted by the runtime tests); the
+    /// Shared-KV GEMM path always stays on the compiled kernels.
+    fn chunk_attn_auto(&self, q: &Tensor, k: &Tensor, v: &Tensor,
+                       q_pos: &[i32], k_base: i32, valid: i32)
+                       -> Result<Partials> {
+        self.chunk_attn(q, k, v, q_pos, k_base, valid)
+    }
+
+    /// Out-proj + residual + FFN.
+    fn post(&self, attn_o: &Tensor, x: &Tensor, wo: &Tensor,
+            ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor)
+            -> Result<Tensor>;
+
+    /// Final norm + LM head → logits `[B,V]`.
+    fn lm_head(&self, x: &Tensor, final_norm: &Tensor, w_lm: &Tensor)
+               -> Result<Tensor>;
+
+    /// Router scores `[B,C]` for C chunk embeddings `[C,Hkv,dh]`.
+    fn router(&self, q: &Tensor, embs: &Tensor) -> Result<Tensor>;
+
+    /// Pairwise LSE merge of partials.
+    fn merge2(&self, a: &Partials, b: &Partials) -> Result<Partials>;
+}
+
+// ---------------------------------------------------------------- helpers
+
+/// Pad a tensor along axis 0 to `n` rows with a fill value.
+fn pad0_f32(t: &Tensor, n: usize, fill: f32) -> Tensor {
+    let shape = t.shape();
+    let b = shape[0];
+    if b == n {
+        return t.clone();
+    }
+    let w: usize = shape[1..].iter().product();
+    let mut data = Vec::with_capacity(n * w);
+    data.extend_from_slice(t.as_f32());
+    data.resize(n * w, fill);
+    let mut s = shape.to_vec();
+    s[0] = n;
+    Tensor::f32(&s, data)
+}
+
+fn pad0_i32(t: &Tensor, n: usize, fill: i32) -> Tensor {
+    let shape = t.shape();
+    if shape[0] == n {
+        return t.clone();
+    }
+    let w: usize = shape[1..].iter().product();
+    let mut data = Vec::with_capacity(n * w);
+    data.extend_from_slice(t.as_i32());
+    data.resize(n * w, fill);
+    let mut s = shape.to_vec();
+    s[0] = n;
+    Tensor::i32(&s, data)
+}
+
+fn pad_pos(pos: &[i32], n: usize) -> Tensor {
+    let mut v = pos.to_vec();
+    v.resize(n, -1); // padding rows are masked everywhere
+    Tensor::i32(&[n], v)
+}
+
+/// Work threshold (query-rows × context-tokens) below which a chunk-
+/// attention call runs natively instead of through PJRT (§Perf opt 3).
+/// At tiny-model dims, 4096 units ≈ 1 query × 4 pages or 32 queries × 2
+/// chunks — comfortably under the ~150µs PJRT dispatch floor measured in
+/// `gemm_vs_gemv`.
+pub const SMALL_ATTN_UNITS: usize = 4096;
+
+// ------------------------------------------------------------ XlaBackend
+
+/// Executes AOT artifacts through PJRT, bucket-padding each call.
+pub struct XlaBackend {
+    pub rt: RuntimeHandle,
+    model: ModelConfig,
+    chunk: usize,
+}
+
+impl XlaBackend {
+    pub fn new(rt: RuntimeHandle) -> XlaBackend {
+        let model = rt.manifest.model.clone();
+        let chunk = rt.manifest.chunk;
+        XlaBackend { rt, model, chunk }
+    }
+
+    fn bucket(&self, b: usize) -> Result<usize> {
+        self.rt.manifest.pick_batch_bucket(b)
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn model(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+
+    fn embed(&self, tokens: &Tensor, emb: &Tensor) -> Result<Tensor> {
+        let b = tokens.shape()[0];
+        let bb = self.bucket(b)?;
+        let out = self.rt.execute(
+            &format!("embed_b{bb}"),
+            vec![pad0_i32(tokens, bb, 0), emb.clone()],
+        )?;
+        Ok(out.into_iter().next().unwrap().slice0(0, b))
+    }
+
+    fn qkv(&self, x: &Tensor, attn_norm: &Tensor, wq: &Tensor, wk: &Tensor,
+           wv: &Tensor, pos: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
+        let b = x.shape()[0];
+        let bb = self.bucket(b)?;
+        let mut out = self.rt.execute(
+            &format!("qkv_b{bb}"),
+            vec![
+                pad0_f32(x, bb, 0.0),
+                attn_norm.clone(),
+                wq.clone(),
+                wk.clone(),
+                wv.clone(),
+                pad_pos(pos, bb),
+            ],
+        )?;
+        let v = out.pop().unwrap().slice0(0, b);
+        let k = out.pop().unwrap().slice0(0, b);
+        let q = out.pop().unwrap().slice0(0, b);
+        Ok((q, k, v))
+    }
+
+    fn max_attn_tokens(&self) -> usize {
+        *self.rt.manifest.attn_token_buckets.last().unwrap()
+    }
+
+    fn chunk_attn_auto(&self, q: &Tensor, k: &Tensor, v: &Tensor,
+                       q_pos: &[i32], k_base: i32, valid: i32)
+                       -> Result<Partials> {
+        let work = q.shape()[0] * valid.max(0) as usize;
+        if work <= SMALL_ATTN_UNITS {
+            return Ok(native::chunk_attn(q, k, v, q_pos, k_base, valid));
+        }
+        self.chunk_attn(q, k, v, q_pos, k_base, valid)
+    }
+
+    fn chunk_attn(&self, q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
+                  k_base: i32, valid: i32) -> Result<Partials> {
+        let b = q.shape()[0];
+        let bb = self.bucket(b)?;
+        // K/V length buckets: pad rows beyond `valid` are masked anyway
+        let c = k.shape()[0];
+        let cc = self.rt.manifest.pick_attn_bucket(c)?;
+        let mut out = self.rt.execute(
+            &format!("chunk_attn_b{bb}_c{cc}"),
+            vec![
+                pad0_f32(q, bb, 0.0),
+                pad0_f32(k, cc, 0.0),
+                pad0_f32(v, cc, 0.0),
+                pad_pos(q_pos, bb),
+                Tensor::scalar_i32(k_base),
+                Tensor::scalar_i32(valid.min(c as i32)),
+            ],
+        )?;
+        let l = out.pop().unwrap().slice0(0, b);
+        let m = out.pop().unwrap().slice0(0, b);
+        let o = out.pop().unwrap().slice0(0, b);
+        Ok(Partials { o, m, l })
+    }
+
+    fn post(&self, attn_o: &Tensor, x: &Tensor, wo: &Tensor,
+            ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor)
+            -> Result<Tensor> {
+        let b = x.shape()[0];
+        let bb = self.bucket(b)?;
+        let out = self.rt.execute(
+            &format!("post_b{bb}"),
+            vec![
+                pad0_f32(attn_o, bb, 0.0),
+                pad0_f32(x, bb, 0.0),
+                wo.clone(),
+                ffn_norm.clone(),
+                w1.clone(),
+                w3.clone(),
+                w2.clone(),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap().slice0(0, b))
+    }
+
+    fn lm_head(&self, x: &Tensor, final_norm: &Tensor, w_lm: &Tensor)
+               -> Result<Tensor> {
+        let b = x.shape()[0];
+        let bb = self.bucket(b)?;
+        let out = self.rt.execute(
+            &format!("lm_head_b{bb}"),
+            vec![pad0_f32(x, bb, 0.0), final_norm.clone(), w_lm.clone()],
+        )?;
+        Ok(out.into_iter().next().unwrap().slice0(0, b))
+    }
+
+    fn router(&self, q: &Tensor, embs: &Tensor) -> Result<Tensor> {
+        let b = q.shape()[0];
+        let bb = self.bucket(b)?;
+        let c = embs.shape()[0];
+        let max_c = *self.rt.manifest.router_chunk_buckets.last().unwrap();
+        // Split oversize chunk sets across multiple router calls.
+        let mut pieces: Vec<Tensor> = Vec::new();
+        let mut start = 0;
+        while start < c {
+            let end = (start + max_c).min(c);
+            let cc = self.rt.manifest.pick_router_bucket(end - start)?;
+            let embs_pad = pad0_f32(&embs.slice0(start, end), cc, 0.0);
+            let out = self.rt.execute(
+                &format!("router_b{bb}_c{cc}"),
+                vec![pad0_f32(q, bb, 0.0), embs_pad],
+            )?;
+            let scores = out.into_iter().next().unwrap(); // [bb, cc]
+            // slice rows to b, cols to (end-start)
+            let mut piece = vec![0f32; b * (end - start)];
+            let s = scores.as_f32();
+            for bi in 0..b {
+                for ci in 0..(end - start) {
+                    piece[bi * (end - start) + ci] = s[bi * cc + ci];
+                }
+            }
+            pieces.push(Tensor::f32(&[b, end - start], piece));
+            start = end;
+        }
+        if pieces.len() == 1 {
+            return Ok(pieces.pop().unwrap());
+        }
+        // concat along axis 1
+        let total: usize = pieces.iter().map(|p| p.shape()[1]).sum();
+        let mut data = vec![0f32; b * total];
+        let mut off = 0;
+        for p in &pieces {
+            let w = p.shape()[1];
+            for bi in 0..b {
+                data[bi * total + off..bi * total + off + w]
+                    .copy_from_slice(&p.as_f32()[bi * w..(bi + 1) * w]);
+            }
+            off += w;
+        }
+        Ok(Tensor::f32(&[b, total], data))
+    }
+
+    fn merge2(&self, a: &Partials, b: &Partials) -> Result<Partials> {
+        let bsz = a.batch();
+        let bb = self.bucket(bsz)?;
+        let neg_inf = f32::NEG_INFINITY;
+        let mut out = self.rt.execute(
+            &format!("merge2_b{bb}"),
+            vec![
+                pad0_f32(&a.o, bb, 0.0),
+                pad0_f32(&a.m, bb, neg_inf),
+                pad0_f32(&a.l, bb, 0.0),
+                pad0_f32(&b.o, bb, 0.0),
+                pad0_f32(&b.m, bb, neg_inf),
+                pad0_f32(&b.l, bb, 0.0),
+            ],
+        )?;
+        let l = out.pop().unwrap().slice0(0, bsz);
+        let m = out.pop().unwrap().slice0(0, bsz);
+        let o = out.pop().unwrap().slice0(0, bsz);
+        Ok(Partials { o, m, l })
+    }
+}
+
+// ---------------------------------------------------------- NativeBackend
+
+/// Pure-rust execution (fallback + oracle).
+pub struct NativeBackend {
+    model: ModelConfig,
+    chunk: usize,
+}
+
+impl NativeBackend {
+    pub fn new(model: ModelConfig, chunk: usize) -> NativeBackend {
+        NativeBackend { model, chunk }
+    }
+
+    pub fn tiny() -> NativeBackend {
+        NativeBackend::new(ModelConfig::tiny(), 64)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn model(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+
+    fn max_attn_tokens(&self) -> usize {
+        // native math takes any length; cap for parity with the compiled
+        // buckets so coalescing behaves identically across backends
+        1024
+    }
+
+    fn embed(&self, tokens: &Tensor, emb: &Tensor) -> Result<Tensor> {
+        Ok(native::embed(tokens, emb))
+    }
+
+    fn qkv(&self, x: &Tensor, attn_norm: &Tensor, wq: &Tensor, wk: &Tensor,
+           wv: &Tensor, pos: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
+        Ok(native::qkv(&self.model, x, attn_norm, wq, wk, wv, pos))
+    }
+
+    fn chunk_attn(&self, q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
+                  k_base: i32, valid: i32) -> Result<Partials> {
+        Ok(native::chunk_attn(q, k, v, q_pos, k_base, valid))
+    }
+
+    fn post(&self, attn_o: &Tensor, x: &Tensor, wo: &Tensor,
+            ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor)
+            -> Result<Tensor> {
+        Ok(native::post(&self.model, attn_o, x, wo, ffn_norm, w1, w3, w2))
+    }
+
+    fn lm_head(&self, x: &Tensor, final_norm: &Tensor, w_lm: &Tensor)
+               -> Result<Tensor> {
+        Ok(native::lm_head(&self.model, x, final_norm, w_lm))
+    }
+
+    fn router(&self, q: &Tensor, embs: &Tensor) -> Result<Tensor> {
+        Ok(native::router_score(q, embs))
+    }
+
+    fn merge2(&self, a: &Partials, b: &Partials) -> Result<Partials> {
+        Ok(native::merge2(a, b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_helpers() {
+        let t = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let p = pad0_f32(&t, 4, 9.0);
+        assert_eq!(p.shape(), &[4, 3]);
+        assert_eq!(p.as_f32()[6..], [9.0; 6]);
+        let i = Tensor::i32(&[2], vec![5, 6]);
+        let pi = pad0_i32(&i, 3, 0);
+        assert_eq!(pi.as_i32(), &[5, 6, 0]);
+        let pp = pad_pos(&[7], 3);
+        assert_eq!(pp.as_i32(), &[7, -1, -1]);
+    }
+
+    #[test]
+    fn native_backend_smoke() {
+        let be = NativeBackend::tiny();
+        let cfg = be.model().clone();
+        let mut rng = crate::util::rng::Rng::new(0);
+        let mut emb = vec![0f32; cfg.vocab * cfg.d_model];
+        rng.fill_normal_f32(&mut emb);
+        let emb = Tensor::f32(&[cfg.vocab, cfg.d_model], emb);
+        let tokens = Tensor::i32(&[3], vec![1, 2, 3]);
+        let x = be.embed(&tokens, &emb).unwrap();
+        assert_eq!(x.shape(), &[3, cfg.d_model]);
+    }
+}

@@ -1,0 +1,239 @@
+//! PJRT client wrapper with a compiled-executable cache.
+//!
+//! `XlaRuntime` owns the CPU PJRT client and lazily compiles each HLO
+//! artifact on first use; serving steady state always hits the cache.
+//! PJRT handles are `Rc`-based (not `Send`), so a process gets one
+//! [`RuntimeService`] thread per simulated device that owns the runtime,
+//! and the rest of the coordinator talks to it through the cloneable,
+//! thread-safe [`RuntimeHandle`] — the same shape as a real GPU executor
+//! thread fed by a submission queue.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::Metrics;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::literal::{from_literal, to_literal};
+use crate::tensor::Tensor;
+
+/// Single-thread PJRT runtime (not `Send`; see [`RuntimeService`]).
+pub struct XlaRuntime {
+    pub manifest: Arc<Manifest>,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl XlaRuntime {
+    /// Open the artifacts dir and start a CPU PJRT client.
+    pub fn load(artifacts_dir: &str) -> Result<XlaRuntime> {
+        let manifest = Arc::new(Manifest::load(artifacts_dir)?);
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        crate::info!(
+            "runtime",
+            "PJRT platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifact_count()
+        );
+        Ok(XlaRuntime {
+            manifest,
+            client,
+            executables: HashMap::new(),
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) executable for `name`.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let meta = self.manifest.meta(name)?;
+            let path = self.manifest.hlo_path(meta);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            crate::debug!("runtime", "compiled {name} in {:?}", t0.elapsed());
+            self.metrics.count("artifact_compiles", 1);
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Eagerly compile every artifact (avoids first-request latency).
+    pub fn warmup(&mut self) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.artifact_names().cloned().collect();
+        let t0 = Instant::now();
+        for n in &names {
+            self.executable(n)?;
+        }
+        crate::info!("runtime", "warmed {} artifacts in {:?}",
+                     names.len(), t0.elapsed());
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `inputs`; returns the output tensors.
+    ///
+    /// Inputs must match the manifest shapes exactly (bucket padding is the
+    /// caller's job — see [`backend::XlaBackend`][super::backend::XlaBackend]).
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor])
+                   -> Result<Vec<Tensor>> {
+        let manifest = Arc::clone(&self.manifest);
+        let meta = manifest.meta(name)?;
+        meta.check_inputs(inputs)
+            .with_context(|| format!("executing '{name}'"))?;
+        let metrics = Arc::clone(&self.metrics);
+        let exe = self.executable(name)?;
+
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("PJRT execute '{name}'"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        metrics.count("pjrt_executions", 1);
+        metrics.observe_ns("pjrt_execute_ns", t0.elapsed().as_nanos() as u64);
+
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let parts = root.to_tuple().context("decompose result tuple")?;
+        if parts.len() != meta.outputs.len() {
+            anyhow::bail!("'{name}': {} outputs, manifest says {}",
+                          parts.len(), meta.outputs.len());
+        }
+        parts
+            .iter()
+            .zip(&meta.outputs)
+            .map(|(lit, port)| from_literal(lit, &port.shape, port.dtype))
+            .collect()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.executables.len()
+    }
+}
+
+// ------------------------------------------------------------- service
+
+enum Req {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: Sender<Result<Vec<Tensor>>>,
+    },
+    Warmup {
+        reply: Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Owns an [`XlaRuntime`] on a dedicated thread; dropped = thread joins.
+pub struct RuntimeService {
+    handle: RuntimeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable, `Send + Sync` submission handle to a [`RuntimeService`].
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<Sender<Req>>>,
+    pub manifest: Arc<Manifest>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl RuntimeService {
+    /// Load artifacts and spin up the executor thread.
+    pub fn spawn(artifacts_dir: &str) -> Result<RuntimeService> {
+        let (tx, rx) = channel::<Req>();
+        let (init_tx, init_rx) =
+            channel::<Result<(Arc<Manifest>, Arc<Metrics>)>>();
+        let dir = artifacts_dir.to_string();
+        let join = std::thread::Builder::new()
+            .name("moska-pjrt".into())
+            .spawn(move || {
+                let mut rt = match XlaRuntime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok((
+                            Arc::clone(&rt.manifest),
+                            Arc::clone(&rt.metrics),
+                        )));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Execute { name, inputs, reply } => {
+                            let _ = reply.send(rt.execute(&name, &inputs));
+                        }
+                        Req::Warmup { reply } => {
+                            let _ = reply.send(rt.warmup());
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawn pjrt thread")?;
+        let (manifest, metrics) = init_rx
+            .recv()
+            .context("pjrt thread died during init")??;
+        Ok(RuntimeService {
+            handle: RuntimeHandle { tx: Arc::new(Mutex::new(tx)), manifest, metrics },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.lock().unwrap().send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    /// Execute an artifact on the runtime thread; blocks for the result.
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>)
+                   -> Result<Vec<Tensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Req::Execute { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow::anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime thread dropped reply"))?
+    }
+
+    /// Compile every artifact now.
+    pub fn warmup(&self) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Req::Warmup { reply })
+            .map_err(|_| anyhow::anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime thread dropped reply"))?
+    }
+}

@@ -1,0 +1,68 @@
+//! [`Tensor`] ⇄ `xla::Literal` conversion.
+//!
+//! Literals are host-side XLA values; the PJRT CPU client copies them into
+//! device buffers at execute time. The hot path reuses the conversion
+//! helpers here; padding for batch buckets happens one level up in
+//! [`backend`][super::backend].
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Tensor → Literal (copies).
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+        Tensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+    };
+    lit.reshape(&dims).context("literal reshape")
+}
+
+/// Literal → Tensor (copies). `shape` comes from the artifact manifest —
+/// the literal's own shape is cross-checked.
+pub fn from_literal(lit: &xla::Literal, shape: &[usize],
+                    dtype: crate::tensor::DType) -> Result<Tensor> {
+    let n: usize = shape.iter().product();
+    if lit.element_count() != n {
+        bail!("literal has {} elements, manifest says {:?}",
+              lit.element_count(), shape);
+    }
+    Ok(match dtype {
+        crate::tensor::DType::F32 => {
+            Tensor::f32(shape, lit.to_vec::<f32>().context("literal f32")?)
+        }
+        crate::tensor::DType::I32 => {
+            Tensor::i32(shape, lit.to_vec::<i32>().context("literal i32")?)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(&lit, &[2, 3], DType::F32).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = Tensor::i32(&[4], vec![1, -2, 3, 4]);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(&lit, &[4], DType::I32).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let t = Tensor::f32(&[4], vec![0.0; 4]);
+        let lit = to_literal(&t).unwrap();
+        assert!(from_literal(&lit, &[5], DType::F32).is_err());
+    }
+}

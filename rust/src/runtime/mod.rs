@@ -1,0 +1,25 @@
+//! L3 ⇄ L2/L1 bridge: load and execute the AOT-compiled XLA artifacts.
+//!
+//! `make artifacts` (python, build-time only) lowers the moska-tiny graph
+//! and the Pallas Shared-KV attention kernel to HLO *text*; this module
+//! loads those files through the PJRT C API (`xla` crate), compiles them
+//! once per (op, batch-bucket), and executes them from the serving hot
+//! path. See `/opt/xla-example/README.md` for why text (not serialized
+//! protos) is the interchange format.
+//!
+//! * [`artifact`] — manifest parsing + artifact metadata.
+//! * [`literal`] — [`Tensor`][crate::tensor::Tensor] ⇄ `xla::Literal`.
+//! * [`client`] — PJRT client wrapper with a compiled-executable cache.
+//! * [`backend`] — the [`Backend`] trait (model ops at any live batch size,
+//!   bucket-padded internally) with [`XlaBackend`] and [`NativeBackend`].
+//! * [`native`] — pure-rust op implementations (fallback + test oracle).
+
+pub mod artifact;
+pub mod backend;
+pub mod client;
+pub mod literal;
+pub mod native;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use backend::{Backend, NativeBackend, XlaBackend};
+pub use client::{RuntimeHandle, RuntimeService, XlaRuntime};

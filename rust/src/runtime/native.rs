@@ -1,0 +1,475 @@
+//! Pure-rust implementations of every model op.
+//!
+//! Mirrors `python/compile/model.py` + the Pallas kernels exactly (same
+//! math, same conventions). Three roles:
+//!
+//! 1. **Fallback backend** — the engine runs end-to-end without artifacts
+//!    (e.g. fresh checkout, analytical-only usage).
+//! 2. **Test oracle** — integration tests compare XLA artifact outputs to
+//!    these on random inputs, independent of the python goldens.
+//! 3. **Baseline** — the `gemm_vs_gemv` bench uses the scalar loops here
+//!    as the unbatched reference point.
+//!
+//! Layouts match the artifacts: row-major `[B, H, dh]` queries,
+//! `[C, Hkv, dh]` chunk K/V, GQA head `h` reads KV head `h / group`.
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+
+/// Attention partials (unnormalized): o `[B,H,dh]`, m `[B,H]`, l `[B,H]`.
+#[derive(Debug, Clone)]
+pub struct Partials {
+    pub o: Tensor,
+    pub m: Tensor,
+    pub l: Tensor,
+}
+
+impl Partials {
+    /// The LSE-merge identity: (0, -inf, 0) — what fully-masked rows emit.
+    pub fn identity(b: usize, h: usize, dh: usize) -> Partials {
+        Partials {
+            o: Tensor::zeros_f32(&[b, h, dh]),
+            m: Tensor::f32(&[b, h], vec![f32::NEG_INFINITY; b * h]),
+            l: Tensor::zeros_f32(&[b, h]),
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.o.shape()[0]
+    }
+}
+
+/// `x[B,d] @ w[d,n] → [B,n]` (naive but cache-friendly k-inner loop).
+pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    let (b, d) = (x.shape()[0], x.shape()[1]);
+    let (wd, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(d, wd, "matmul inner dim: {d} vs {wd}");
+    let xs = x.as_f32();
+    let ws = w.as_f32();
+    let mut out = vec![0f32; b * n];
+    for i in 0..b {
+        let xrow = &xs[i * d..(i + 1) * d];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &ws[kk * n..(kk + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    Tensor::f32(&[b, n], out)
+}
+
+/// RMSNorm over the last axis of a rank-2 tensor.
+pub fn rms_norm(x: &Tensor, w: &Tensor, eps: f64) -> Tensor {
+    let (b, d) = (x.shape()[0], x.shape()[1]);
+    assert_eq!(w.shape(), &[d]);
+    let xs = x.as_f32();
+    let ws = w.as_f32();
+    let mut out = vec![0f32; b * d];
+    for i in 0..b {
+        let row = &xs[i * d..(i + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let scale = 1.0 / (ms + eps as f32).sqrt();
+        for j in 0..d {
+            out[i * d + j] = row[j] * scale * ws[j];
+        }
+    }
+    Tensor::f32(&[b, d], out)
+}
+
+/// RoPE (half-split), matching `model.rope`: x `[B, n, dh]`, pos `[B]`.
+pub fn rope(x: &mut Tensor, pos: &[i32], theta: f64) {
+    let shape = x.shape().to_vec();
+    let (b, n, dh) = (shape[0], shape[1], shape[2]);
+    assert_eq!(pos.len(), b);
+    let half = dh / 2;
+    let xs = x.as_f32_mut();
+    for i in 0..b {
+        let p = pos[i] as f64;
+        for h in 0..n {
+            let base = (i * n + h) * dh;
+            for j in 0..half {
+                let freq = theta.powf(-(j as f64) / half as f64);
+                let ang = p * freq;
+                let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+                let x1 = xs[base + j];
+                let x2 = xs[base + half + j];
+                xs[base + j] = x1 * cos - x2 * sin;
+                xs[base + half + j] = x2 * cos + x1 * sin;
+            }
+        }
+    }
+}
+
+/// Token embedding: tokens i32`[B]` × emb `[V,d]` → `[B,d]`.
+pub fn embed(tokens: &Tensor, emb: &Tensor) -> Tensor {
+    let b = tokens.shape()[0];
+    let (v, d) = (emb.shape()[0], emb.shape()[1]);
+    let es = emb.as_f32();
+    let mut out = vec![0f32; b * d];
+    for (i, &t) in tokens.as_i32().iter().enumerate() {
+        let t = t as usize;
+        assert!(t < v, "token {t} out of vocab {v}");
+        out[i * d..(i + 1) * d].copy_from_slice(&es[t * d..(t + 1) * d]);
+    }
+    Tensor::f32(&[b, d], out)
+}
+
+/// Pre-norm + QKV projection + RoPE (artifact `qkv_b*`).
+pub fn qkv(cfg: &ModelConfig, x: &Tensor, attn_norm: &Tensor, wq: &Tensor,
+           wk: &Tensor, wv: &Tensor, pos: &[i32])
+           -> (Tensor, Tensor, Tensor) {
+    let b = x.shape()[0];
+    let xn = rms_norm(x, attn_norm, cfg.rms_eps);
+    let mut q = matmul(&xn, wq).reshaped(&[b, cfg.n_heads, cfg.head_dim]);
+    let mut k = matmul(&xn, wk).reshaped(&[b, cfg.n_kv_heads, cfg.head_dim]);
+    let v = matmul(&xn, wv).reshaped(&[b, cfg.n_kv_heads, cfg.head_dim]);
+    rope(&mut q, pos, cfg.rope_theta);
+    rope(&mut k, pos, cfg.rope_theta);
+    (q, k, v)
+}
+
+/// Shared-KV chunk attention (mirrors the Pallas kernel bit-for-bit in
+/// convention): q `[B,H,dh]`, k/v `[C,Hkv,dh]`, per-query positions,
+/// chunk base position, valid length. Returns unnormalized partials.
+pub fn chunk_attn(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
+                  k_base: i32, valid: i32) -> Partials {
+    let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let (c, hkv, _) = (k.shape()[0], k.shape()[1], k.shape()[2]);
+    let group = h / hkv;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let qs = q.as_f32();
+    let ks = k.as_f32();
+    let vs = v.as_f32();
+
+    let mut o = vec![0f32; b * h * dh];
+    let mut m = vec![f32::NEG_INFINITY; b * h];
+    let mut l = vec![0f32; b * h];
+    let mut scores = vec![0f32; c];
+
+    for bi in 0..b {
+        let qp = q_pos[bi];
+        if qp < 0 {
+            continue; // padding row: identity partial
+        }
+        // visible key range within the chunk (keys are positionally
+        // contiguous: key j has absolute position k_base + j)
+        let vis = ((qp - k_base + 1).clamp(0, valid)) as usize;
+        if vis == 0 {
+            continue;
+        }
+        for hi in 0..h {
+            let kv = hi / group;
+            let qrow = &qs[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..vis {
+                let krow = &ks[(j * hkv + kv) * dh..(j * hkv + kv + 1) * dh];
+                let dot: f32 =
+                    qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                let s = dot * scale;
+                scores[j] = s;
+                mx = mx.max(s);
+            }
+            let mut li = 0f32;
+            let orow = &mut o[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
+            for j in 0..vis {
+                let p = (scores[j] - mx).exp();
+                li += p;
+                let vrow = &vs[(j * hkv + kv) * dh..(j * hkv + kv + 1) * dh];
+                for (oo, &vv) in orow.iter_mut().zip(vrow) {
+                    *oo += p * vv;
+                }
+            }
+            m[bi * h + hi] = mx;
+            l[bi * h + hi] = li;
+        }
+    }
+    Partials {
+        o: Tensor::f32(&[b, h, dh], o),
+        m: Tensor::f32(&[b, h], m),
+        l: Tensor::f32(&[b, h], l),
+    }
+}
+
+/// Attention out-proj + residual + SwiGLU FFN (artifact `post_b*`).
+/// `attn_o` must already be normalized (merged partials / l).
+pub fn post(cfg: &ModelConfig, attn_o: &Tensor, x: &Tensor, wo: &Tensor,
+            ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor)
+            -> Tensor {
+    let b = x.shape()[0];
+    let flat = attn_o.clone().reshaped(&[b, cfg.q_dim()]);
+    let proj = matmul(&flat, wo);
+    let mut h = vec![0f32; b * cfg.d_model];
+    for (i, (xv, pv)) in x.as_f32().iter().zip(proj.as_f32()).enumerate() {
+        h[i] = xv + pv;
+    }
+    let h = Tensor::f32(&[b, cfg.d_model], h);
+    let hn = rms_norm(&h, ffn_norm, cfg.rms_eps);
+    let a = matmul(&hn, w1);
+    let g = matmul(&hn, w3);
+    let mut act = vec![0f32; b * cfg.ffn_dim];
+    for (i, (&av, &gv)) in a.as_f32().iter().zip(g.as_f32()).enumerate() {
+        // silu(a) * g
+        let s = av / (1.0 + (-av).exp());
+        act[i] = s * gv;
+    }
+    let ffn = matmul(&Tensor::f32(&[b, cfg.ffn_dim], act), w2);
+    let mut out = vec![0f32; b * cfg.d_model];
+    for (i, (hv, fv)) in h.as_f32().iter().zip(ffn.as_f32()).enumerate() {
+        out[i] = hv + fv;
+    }
+    Tensor::f32(&[b, cfg.d_model], out)
+}
+
+/// Final norm + LM head (artifact `lm_head_b*`).
+pub fn lm_head(cfg: &ModelConfig, x: &Tensor, final_norm: &Tensor,
+               w_lm: &Tensor) -> Tensor {
+    matmul(&rms_norm(x, final_norm, cfg.rms_eps), w_lm)
+}
+
+/// Router scoring (artifact `router_b*_c*`): mean over query heads of
+/// `q_h · emb_{c, kv(h)}`.
+pub fn router_score(q: &Tensor, embs: &Tensor) -> Tensor {
+    let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let (c, hkv, _) = (embs.shape()[0], embs.shape()[1], embs.shape()[2]);
+    let group = h / hkv;
+    let qs = q.as_f32();
+    let es = embs.as_f32();
+    let mut out = vec![0f32; b * c];
+    for bi in 0..b {
+        for ci in 0..c {
+            let mut acc = 0f32;
+            for hi in 0..h {
+                let kv = hi / group;
+                let qrow = &qs[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
+                let erow = &es[(ci * hkv + kv) * dh..(ci * hkv + kv + 1) * dh];
+                acc += qrow.iter().zip(erow).map(|(a, b)| a * b).sum::<f32>();
+            }
+            out[bi * c + ci] = acc / h as f32;
+        }
+    }
+    Tensor::f32(&[b, c], out)
+}
+
+/// Pairwise LSE merge (mirrors `merge2` kernel; safe under -inf).
+pub fn merge2(a: &Partials, b: &Partials) -> Partials {
+    let shape_o = a.o.shape().to_vec();
+    let (bb, h, dh) = (shape_o[0], shape_o[1], shape_o[2]);
+    let mut o = vec![0f32; bb * h * dh];
+    let mut m = vec![0f32; bb * h];
+    let mut l = vec![0f32; bb * h];
+    let (ao, am, al) = (a.o.as_f32(), a.m.as_f32(), a.l.as_f32());
+    let (bo, bm, bl) = (b.o.as_f32(), b.m.as_f32(), b.l.as_f32());
+    for i in 0..bb * h {
+        let mn = am[i].max(bm[i]);
+        let s1 = if am[i].is_finite() { (am[i] - mn).exp() } else { 0.0 };
+        let s2 = if bm[i].is_finite() { (bm[i] - mn).exp() } else { 0.0 };
+        m[i] = mn;
+        l[i] = al[i] * s1 + bl[i] * s2;
+        for j in 0..dh {
+            o[i * dh + j] = ao[i * dh + j] * s1 + bo[i * dh + j] * s2;
+        }
+    }
+    Partials {
+        o: Tensor::f32(&[bb, h, dh], o),
+        m: Tensor::f32(&[bb, h], m),
+        l: Tensor::f32(&[bb, h], l),
+    }
+}
+
+/// In-place LSE merge of one row: `dst[dst_row] ⊕= src[src_row]`.
+///
+/// The scatter path of the Shared-KV batcher runs this once per (query,
+/// chunk-batch) pair per layer per step — it is allocation-free by
+/// design (§Perf opt 1).
+pub fn merge2_row_into(dst: &mut Partials, dst_row: usize, src: &Partials,
+                       src_row: usize) {
+    let shape = dst.o.shape();
+    let (h, dh) = (shape[1], shape[2]);
+    let dm = dst.m.as_f32_mut();
+    let dl = dst.l.as_f32_mut();
+    let d0 = dst_row * h;
+    let s0 = src_row * h;
+    let sm = src.m.as_f32();
+    let sl = src.l.as_f32();
+    // first pass: scales per head
+    let mut scales = [0f32; 64]; // h*2 scratch; tiny-model h ≤ 32
+    assert!(h * 2 <= scales.len(), "head count too large for scratch");
+    for i in 0..h {
+        let (m1, m2) = (dm[d0 + i], sm[s0 + i]);
+        let mn = m1.max(m2);
+        let s1 = if m1.is_finite() { (m1 - mn).exp() } else { 0.0 };
+        let s2 = if m2.is_finite() { (m2 - mn).exp() } else { 0.0 };
+        dm[d0 + i] = mn;
+        dl[d0 + i] = dl[d0 + i] * s1 + sl[s0 + i] * s2;
+        scales[i * 2] = s1;
+        scales[i * 2 + 1] = s2;
+    }
+    let do_ = dst.o.as_f32_mut();
+    let so = src.o.as_f32();
+    for i in 0..h {
+        let (s1, s2) = (scales[i * 2], scales[i * 2 + 1]);
+        let db = (d0 + i) * dh;
+        let sb = (s0 + i) * dh;
+        for j in 0..dh {
+            do_[db + j] = do_[db + j] * s1 + so[sb + j] * s2;
+        }
+    }
+}
+
+/// Normalize merged partials into the final attention output `[B,H,dh]`.
+pub fn finalize(p: &Partials) -> Tensor {
+    let shape = p.o.shape().to_vec();
+    let (b, h, dh) = (shape[0], shape[1], shape[2]);
+    let mut out = vec![0f32; b * h * dh];
+    let (o, l) = (p.o.as_f32(), p.l.as_f32());
+    for i in 0..b * h {
+        if l[i] > 0.0 {
+            for j in 0..dh {
+                out[i * dh + j] = o[i * dh + j] / l[i];
+            }
+        }
+    }
+    Tensor::f32(&[b, h, dh], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let mut data = vec![0f32; shape.iter().product()];
+        rng.fill_normal_f32(&mut data);
+        Tensor::f32(shape, data)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let x = Tensor::f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let eye = Tensor::f32(&[2, 2], vec![1., 0., 0., 1.]);
+        assert_eq!(matmul(&x, &eye), x);
+    }
+
+    #[test]
+    fn rms_norm_unit_output_scale() {
+        let mut rng = Rng::new(0);
+        let x = rand_t(&mut rng, &[3, 64]);
+        let w = Tensor::f32(&[64], vec![1.0; 64]);
+        let y = rms_norm(&x, &w, 1e-5);
+        for i in 0..3 {
+            let row = y.row(i);
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / 64.0;
+            assert!((ms - 1.0).abs() < 0.01, "row {i} ms {ms}");
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::new(1);
+        let mut x = rand_t(&mut rng, &[2, 4, 16]);
+        let orig = x.clone();
+        rope(&mut x, &[5, 9], 10000.0);
+        for i in 0..2 {
+            for h in 0..4 {
+                let a = &orig.as_f32()[(i * 4 + h) * 16..(i * 4 + h + 1) * 16];
+                let b = &x.as_f32()[(i * 4 + h) * 16..(i * 4 + h + 1) * 16];
+                let na: f32 = a.iter().map(|v| v * v).sum();
+                let nb: f32 = b.iter().map(|v| v * v).sum();
+                assert!((na - nb).abs() / na.max(1e-6) < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn rope_zero_pos_is_identity() {
+        let mut rng = Rng::new(2);
+        let mut x = rand_t(&mut rng, &[1, 2, 8]);
+        let orig = x.clone();
+        rope(&mut x, &[0], 10000.0);
+        assert!(x.max_abs_diff(&orig) < 1e-6);
+    }
+
+    #[test]
+    fn chunk_attn_identity_padding() {
+        let mut rng = Rng::new(3);
+        let q = rand_t(&mut rng, &[2, 4, 16]);
+        let k = rand_t(&mut rng, &[64, 2, 16]);
+        let v = rand_t(&mut rng, &[64, 2, 16]);
+        let p = chunk_attn(&q, &k, &v, &[-1, -1], 0, 64);
+        assert!(p.o.as_f32().iter().all(|&x| x == 0.0));
+        assert!(p.m.as_f32().iter().all(|&x| x == f32::NEG_INFINITY));
+        assert!(p.l.as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn chunk_attn_causal_visibility() {
+        let mut rng = Rng::new(4);
+        let q = rand_t(&mut rng, &[1, 4, 16]);
+        let k = rand_t(&mut rng, &[64, 2, 16]);
+        let v = rand_t(&mut rng, &[64, 2, 16]);
+        // query at pos k_base+9 sees exactly 10 keys; equal to truncating
+        // the chunk to valid=10 with a far-future query.
+        let a = chunk_attn(&q, &k, &v, &[109], 100, 64);
+        let b = chunk_attn(&q, &k, &v, &[10_000], 100, 10);
+        assert!(a.o.max_abs_diff(&b.o) < 1e-5);
+        assert!(a.l.max_abs_diff(&b.l) < 1e-5);
+    }
+
+    #[test]
+    fn merge_identity_is_noop() {
+        let mut rng = Rng::new(5);
+        let q = rand_t(&mut rng, &[2, 4, 16]);
+        let k = rand_t(&mut rng, &[64, 2, 16]);
+        let v = rand_t(&mut rng, &[64, 2, 16]);
+        let p = chunk_attn(&q, &k, &v, &[100, 200], 0, 64);
+        let id = Partials::identity(2, 4, 16);
+        let m1 = merge2(&p, &id);
+        let m2 = merge2(&id, &p);
+        assert!(m1.o.max_abs_diff(&p.o) < 1e-6);
+        assert!(m2.o.max_abs_diff(&p.o) < 1e-6);
+        assert!(m1.l.max_abs_diff(&p.l) < 1e-6);
+    }
+
+    #[test]
+    fn chunked_equals_monolithic() {
+        // the flash decomposition property, natively: two 32-token halves
+        // merged == one 64-token chunk.
+        let mut rng = Rng::new(6);
+        let q = rand_t(&mut rng, &[4, 4, 16]);
+        let k = rand_t(&mut rng, &[64, 2, 16]);
+        let v = rand_t(&mut rng, &[64, 2, 16]);
+        let q_pos = [63, 40, 10, 1000];
+        let whole = chunk_attn(&q, &k, &v, &q_pos, 0, 64);
+        let lo = chunk_attn(&q, &k.slice0(0, 32), &v.slice0(0, 32), &q_pos, 0, 32);
+        let hi = chunk_attn(&q, &k.slice0(32, 64), &v.slice0(32, 64), &q_pos, 32, 32);
+        let merged = merge2(&lo, &hi);
+        let fa = finalize(&whole);
+        let fb = finalize(&merged);
+        assert!(fa.max_abs_diff(&fb) < 1e-5, "{}", fa.max_abs_diff(&fb));
+    }
+
+    #[test]
+    fn router_scores_mean_over_heads() {
+        let mut rng = Rng::new(7);
+        let q = rand_t(&mut rng, &[2, 4, 16]);
+        let embs = rand_t(&mut rng, &[8, 2, 16]);
+        let s = router_score(&q, &embs);
+        assert_eq!(s.shape(), &[2, 8]);
+        // manual check of one cell
+        let (b, c) = (1usize, 3usize);
+        let mut want = 0f32;
+        for h in 0..4 {
+            let kv = h / 2;
+            let qrow = &q.as_f32()[(b * 4 + h) * 16..(b * 4 + h + 1) * 16];
+            let erow = &embs.as_f32()[(c * 2 + kv) * 16..(c * 2 + kv + 1) * 16];
+            want += qrow.iter().zip(erow).map(|(a, b)| a * b).sum::<f32>();
+        }
+        want /= 4.0;
+        assert!((s.as_f32()[b * 8 + c] - want).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,194 @@
+//! Scheduling: admission control, continuous batching, SLO tracking.
+//!
+//! The paper's workload (§IV) targets 35 tok/s per request; the scheduler
+//! admits requests while KV pages and the batch bucket allow it, keeps the
+//! decode batch full via continuous batching (finished requests release
+//! slots mid-flight), and tracks whether the realized step time still
+//! meets the SLO — the same admission logic the analytical model uses to
+//! derive max batch, so measured and modeled batch limits are comparable.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Admission decision inputs for one request.
+#[derive(Debug, Clone)]
+pub struct Demand {
+    /// Worst-case unique-KV pages (all layers, prompt + max generation).
+    pub pages: usize,
+}
+
+/// Why a request was (not) admitted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Admit {
+    Ok,
+    NoPages { need: usize, available: usize },
+    QueueFull,
+}
+
+/// Admission controller: KV-page budget + wait-queue bound.
+pub struct AdmissionController {
+    pub max_queue: usize,
+}
+
+impl AdmissionController {
+    pub fn new(max_queue: usize) -> AdmissionController {
+        AdmissionController { max_queue }
+    }
+
+    pub fn check(&self, demand: &Demand, pages_available: usize,
+                 queued: usize) -> Admit {
+        if queued >= self.max_queue {
+            return Admit::QueueFull;
+        }
+        if demand.pages > pages_available {
+            return Admit::NoPages {
+                need: demand.pages,
+                available: pages_available,
+            };
+        }
+        Admit::Ok
+    }
+}
+
+/// Continuous-batching scheduler over opaque request ids.
+pub struct StepScheduler {
+    pub max_batch: usize,
+    queue: VecDeque<usize>,
+    live: Vec<usize>,
+}
+
+impl StepScheduler {
+    pub fn new(max_batch: usize) -> StepScheduler {
+        StepScheduler { max_batch, queue: VecDeque::new(), live: Vec::new() }
+    }
+
+    pub fn enqueue(&mut self, id: usize) {
+        self.queue.push_back(id);
+    }
+
+    /// Fill free batch slots from the queue; returns newly activated ids.
+    pub fn refill(&mut self) -> Vec<usize> {
+        let mut newly = Vec::new();
+        while self.live.len() < self.max_batch {
+            match self.queue.pop_front() {
+                Some(id) => {
+                    self.live.push(id);
+                    newly.push(id);
+                }
+                None => break,
+            }
+        }
+        newly
+    }
+
+    /// Remove finished requests from the live set.
+    pub fn retire(&mut self, done: &[usize]) {
+        self.live.retain(|id| !done.contains(id));
+    }
+
+    pub fn live(&self) -> &[usize] {
+        &self.live
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.live.is_empty() && self.queue.is_empty()
+    }
+}
+
+/// Sliding-window SLO tracker over decode-step durations.
+pub struct SloTracker {
+    window: VecDeque<Duration>,
+    cap: usize,
+    pub target_tokens_per_sec: f64,
+}
+
+impl SloTracker {
+    pub fn new(target_tokens_per_sec: f64) -> SloTracker {
+        SloTracker {
+            window: VecDeque::new(),
+            cap: 64,
+            target_tokens_per_sec,
+        }
+    }
+
+    pub fn record_step(&mut self, d: Duration) {
+        if self.window.len() == self.cap {
+            self.window.pop_front();
+        }
+        self.window.push_back(d);
+    }
+
+    /// Mean step time over the window.
+    pub fn mean_step(&self) -> Option<Duration> {
+        if self.window.is_empty() {
+            return None;
+        }
+        let total: Duration = self.window.iter().sum();
+        Some(total / self.window.len() as u32)
+    }
+
+    /// Per-request generation speed implied by the step time (each live
+    /// request gains one token per step).
+    pub fn tokens_per_sec(&self) -> Option<f64> {
+        self.mean_step().map(|d| 1.0 / d.as_secs_f64())
+    }
+
+    pub fn meets_slo(&self) -> Option<bool> {
+        self.tokens_per_sec().map(|t| t >= self.target_tokens_per_sec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_checks_pages_and_queue() {
+        let ac = AdmissionController::new(2);
+        let d = Demand { pages: 10 };
+        assert_eq!(ac.check(&d, 20, 0), Admit::Ok);
+        assert_eq!(
+            ac.check(&d, 5, 0),
+            Admit::NoPages { need: 10, available: 5 }
+        );
+        assert_eq!(ac.check(&d, 20, 2), Admit::QueueFull);
+    }
+
+    #[test]
+    fn continuous_batching_refill_and_retire() {
+        let mut s = StepScheduler::new(2);
+        for id in 0..5 {
+            s.enqueue(id);
+        }
+        assert_eq!(s.refill(), vec![0, 1]);
+        assert_eq!(s.live(), &[0, 1]);
+        assert_eq!(s.queued(), 3);
+        s.retire(&[0]);
+        assert_eq!(s.refill(), vec![2]);
+        assert_eq!(s.live(), &[1, 2]);
+        s.retire(&[1, 2]);
+        assert_eq!(s.refill(), vec![3, 4]);
+        s.retire(&[3, 4]);
+        assert!(s.refill().is_empty());
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn slo_tracker_math() {
+        let mut t = SloTracker::new(35.0);
+        assert!(t.meets_slo().is_none());
+        for _ in 0..10 {
+            t.record_step(Duration::from_millis(10)); // 100 tok/s
+        }
+        assert!(t.meets_slo().unwrap());
+        for _ in 0..64 {
+            t.record_step(Duration::from_millis(50)); // 20 tok/s
+        }
+        assert!(!t.meets_slo().unwrap());
+        assert!((t.tokens_per_sec().unwrap() - 20.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,363 @@
+//! Minimal HTTP/1.1 serving endpoint (std::net, no framework).
+//!
+//! ```text
+//! POST /generate   {"prompt": "...", "domain": "legal", "max_tokens": 16,
+//!                   "top_k_sampling": 0}
+//!              →   {"id": 3, "text": "...", "tokens": [...],
+//!                   "prefill_secs": ..., "decode_secs": ...}
+//! GET  /stats      engine + runtime metrics snapshot (JSON)
+//! GET  /healthz    "ok"
+//! ```
+//!
+//! Architecture: acceptor threads parse HTTP and push requests into the
+//! engine loop's queue via a channel; the engine thread runs continuous
+//! batching (one decode step per loop over all live requests — new
+//! arrivals join between steps) and posts results back through per-request
+//! channels. Python is nowhere in the path.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::engine::{build_engine_from_args, Engine};
+use crate::model::sampling::Sampler;
+use crate::model::tokenizer;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// A parsed HTTP request (the subset we serve).
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Parse one HTTP/1.1 request from a stream.
+pub fn parse_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("no method")?.to_string();
+    let path = parts.next().context("no path")?.to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+/// Write an HTTP response.
+pub fn respond(stream: &mut TcpStream, status: u16, content_type: &str,
+               body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        500 => "Internal Server Error",
+        _ => "",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    Ok(())
+}
+
+/// A generation job travelling from HTTP thread to engine loop.
+struct Job {
+    domain: Option<String>,
+    prompt: Vec<i32>,
+    max_new: usize,
+    sampler: Sampler,
+    reply: Sender<Result<Json>>,
+}
+
+/// Engine loop: continuous batching over jobs from the channel.
+fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
+               stats: Arc<Mutex<Json>>) {
+    let mut waiting: HashMap<usize, Sender<Result<Json>>> = HashMap::new();
+    loop {
+        // drain new jobs (non-blocking if busy; blocking when idle)
+        let drain = |engine: &mut Engine,
+                     waiting: &mut HashMap<usize, Sender<Result<Json>>>,
+                     job: Job| {
+            match engine.submit(job.domain.as_deref(), job.prompt,
+                                job.max_new, job.sampler) {
+                Ok(id) => {
+                    waiting.insert(id, job.reply);
+                }
+                Err(e) => {
+                    let _ = job.reply.send(Err(e));
+                }
+            }
+        };
+        if engine.has_work() {
+            while let Ok(job) = jobs.try_recv() {
+                drain(&mut engine, &mut waiting, job);
+            }
+        } else {
+            match jobs.recv() {
+                Ok(job) => drain(&mut engine, &mut waiting, job),
+                Err(_) => return, // server shut down
+            }
+        }
+
+        if let Err(e) = engine.step() {
+            crate::errorlog!("server", "engine step failed: {e:#}");
+            for (_, tx) in waiting.drain() {
+                let _ = tx.send(Err(anyhow::anyhow!("engine failed")));
+            }
+            continue;
+        }
+        for r in engine.take_results() {
+            if let Some(tx) = waiting.remove(&r.id) {
+                let body = Json::obj(vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("tokens", Json::arr(
+                        r.tokens.iter().map(|&t| Json::num(t as f64)).collect(),
+                    )),
+                    ("text", Json::str(tokenizer::decode(&r.tokens))),
+                    ("prefill_secs", Json::num(r.prefill_secs)),
+                    ("decode_secs", Json::num(r.decode_secs)),
+                ]);
+                let _ = tx.send(Ok(body));
+            }
+        }
+        // refresh the stats snapshot
+        let snap = Json::obj(vec![
+            ("engine", engine.metrics.snapshot()),
+            ("gemm_batching_factor", Json::num(engine.batching_factor())),
+            ("router_sparsity", Json::num(engine.router.stats.sparsity())),
+            ("kv_pages_allocated", Json::num(engine.pool.allocated() as f64)),
+            ("kv_pages_capacity", Json::num(engine.pool.capacity() as f64)),
+            ("live", Json::num(engine.sched.live().len() as f64)),
+            ("queued", Json::num(engine.sched.queued() as f64)),
+        ]);
+        *stats.lock().unwrap() = snap;
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
+               stats: Arc<Mutex<Json>>) {
+    let req = match parse_request(&mut stream) {
+        Ok(r) => r,
+        Err(_) => {
+            let _ = respond(&mut stream, 400, "text/plain", "bad request");
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = respond(&mut stream, 200, "text/plain", "ok");
+        }
+        ("GET", "/stats") => {
+            let body = stats.lock().unwrap().to_string();
+            let _ = respond(&mut stream, 200, "application/json", &body);
+        }
+        ("POST", "/generate") => {
+            let parsed = Json::parse(&req.body).and_then(|j| {
+                let prompt_text = j.get("prompt")?.as_str()?.to_string();
+                let domain = match j.opt("domain") {
+                    Some(Json::Null) | None => None,
+                    Some(d) => Some(d.as_str()?.to_string()),
+                };
+                let max_new = match j.opt("max_tokens") {
+                    Some(v) => v.as_usize()?,
+                    None => 16,
+                };
+                let sampler = match j.opt("top_k_sampling") {
+                    Some(v) if v.as_usize()? > 0 => Sampler::TopK {
+                        k: v.as_usize()?,
+                        temperature: 0.8,
+                    },
+                    _ => Sampler::Greedy,
+                };
+                Ok((prompt_text, domain, max_new, sampler))
+            });
+            let (prompt_text, domain, max_new, sampler) = match parsed {
+                Ok(p) => p,
+                Err(e) => {
+                    let _ = respond(&mut stream, 400, "text/plain",
+                                    &format!("bad body: {e}"));
+                    return;
+                }
+            };
+            let (reply, rx) = channel();
+            let job = Job {
+                domain,
+                prompt: tokenizer::encode(&prompt_text),
+                max_new,
+                sampler,
+                reply,
+            };
+            if jobs.send(job).is_err() {
+                let _ = respond(&mut stream, 500, "text/plain",
+                                "engine gone");
+                return;
+            }
+            match rx.recv() {
+                Ok(Ok(body)) => {
+                    let _ = respond(&mut stream, 200, "application/json",
+                                    &body.to_string());
+                }
+                Ok(Err(e)) => {
+                    let _ = respond(&mut stream, 400, "text/plain",
+                                    &format!("{e:#}"));
+                }
+                Err(_) => {
+                    let _ = respond(&mut stream, 500, "text/plain",
+                                    "engine dropped request");
+                }
+            }
+        }
+        _ => {
+            let _ = respond(&mut stream, 404, "text/plain", "not found");
+        }
+    }
+}
+
+/// `moska serve`: spin the engine loop + accept connections forever.
+/// Layering: CLI flags > `--config` file values > defaults.
+pub fn run_server(args: &Args) -> Result<()> {
+    let file_cfg = match args.get("config") {
+        Some(path) if !path.is_empty() => {
+            crate::config::FileConfig::load(path)?
+        }
+        _ => crate::config::FileConfig::default(),
+    };
+    let addr = match args.get("addr") {
+        // CLI default sentinel: fall back to the file's addr if the user
+        // did not override it
+        Some("127.0.0.1:8080") | None => file_cfg
+            .addr
+            .clone()
+            .unwrap_or_else(|| "127.0.0.1:8080".to_string()),
+        Some(a) => a.to_string(),
+    };
+    let (engine, _svc) = if let Some(serving) = file_cfg.serving.clone() {
+        let dir = match args.get("artifacts") {
+            Some("") | None => file_cfg.artifacts.clone().unwrap_or_else(
+                crate::runtime::artifact::default_artifacts_dir,
+            ),
+            Some(d) => d.to_string(),
+        };
+        let backend = match args.get("backend") {
+            Some("xla") | None => file_cfg
+                .backend
+                .clone()
+                .unwrap_or_else(|| "xla".to_string()),
+            Some(b) => b.to_string(),
+        };
+        crate::engine::build_engine(&dir, &backend, serving)?
+    } else {
+        build_engine_from_args(args)?
+    };
+    serve_on(addr.parse::<std::net::SocketAddr>()?, engine, None)
+}
+
+/// Core server loop; `ready` (if given) receives the bound address once
+/// listening — used by tests to serve on an ephemeral port.
+pub fn serve_on(addr: std::net::SocketAddr, engine: Engine,
+                ready: Option<Sender<std::net::SocketAddr>>) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    crate::info!("server", "listening on http://{local}");
+    if let Some(tx) = ready {
+        let _ = tx.send(local);
+    }
+
+    let (jobs_tx, jobs_rx) = channel::<Job>();
+    let stats = Arc::new(Mutex::new(Json::obj(vec![])));
+    let stats_loop = Arc::clone(&stats);
+    std::thread::Builder::new()
+        .name("moska-engine-loop".into())
+        .spawn(move || engine_loop(engine, jobs_rx, stats_loop))
+        .context("spawn engine loop")?;
+
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let jobs = jobs_tx.clone();
+                let stats = Arc::clone(&stats);
+                std::thread::spawn(move || handle_conn(s, jobs, stats));
+            }
+            Err(e) => crate::warnlog!("server", "accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respond_formats_http() {
+        // format check via a connected pair
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /x HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            buf
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let req = parse_request(&mut stream).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/x");
+        respond(&mut stream, 200, "text/plain", "hi").unwrap();
+        drop(stream);
+        let got = client.join().unwrap();
+        assert!(got.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(got.ends_with("hi"));
+        assert!(got.contains("Content-Length: 2"));
+    }
+
+    #[test]
+    fn parse_request_with_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                b"POST /generate HTTP/1.1\r\nContent-Length: 13\r\n\r\n\
+                  {\"prompt\":\"\"}",
+            )
+            .unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let req = parse_request(&mut stream).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, "{\"prompt\":\"\"}");
+    }
+}

@@ -1,0 +1,235 @@
+//! Minimal dense tensor used across the coordinator.
+//!
+//! The engine moves small activation tensors (`B ≤ 32`, `d = 64`) between
+//! PJRT calls; this type is deliberately simple — contiguous row-major
+//! storage, shape arithmetic, and the handful of ops the native fallback
+//! backend and the merge path need. It is *not* a general ndarray.
+
+use std::fmt;
+
+/// Element type tag (mirrors the artifact manifest's dtype strings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Dense row-major tensor; payload is either f32 or i32.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} vs len {}", shape, data.len());
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} vs len {}", shape, data.len());
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> Tensor {
+        Tensor::i32(shape, vec![0; shape.iter().product()])
+    }
+
+    /// Scalar-ish [1] i32 tensor (artifact scalar-argument convention).
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(&[1], vec![v])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            Tensor::I32 { .. } => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            Tensor::I32 { .. } => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Tensor::I32 { data, .. } => data,
+            Tensor::F32 { .. } => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.len(), "reshape {:?} -> {:?}", self.shape(), shape);
+        match &mut self {
+            Tensor::F32 { shape: s, .. } | Tensor::I32 { shape: s, .. } => {
+                *s = shape.to_vec();
+            }
+        }
+        self
+    }
+
+    /// Row `i` of a rank-2 f32 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let shape = self.shape();
+        assert_eq!(shape.len(), 2, "row() needs rank-2, got {:?}", shape);
+        let w = shape[1];
+        &self.as_f32()[i * w..(i + 1) * w]
+    }
+
+    /// Slice of the flat f32 payload covering leading-index `i` of a
+    /// rank-N tensor (i.e. one "super-row" of size `prod(shape[1..])`).
+    pub fn index0(&self, i: usize) -> &[f32] {
+        let shape = self.shape();
+        let w: usize = shape[1..].iter().product();
+        &self.as_f32()[i * w..(i + 1) * w]
+    }
+
+    /// Concatenate rank-compatible f32 tensors along axis 0.
+    pub fn concat0(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let tail = &parts[0].shape()[1..];
+        let mut rows = 0;
+        let mut data = Vec::new();
+        for p in parts {
+            assert_eq!(&p.shape()[1..], tail, "concat0 tail mismatch");
+            rows += p.shape()[0];
+            data.extend_from_slice(p.as_f32());
+        }
+        let mut shape = vec![rows];
+        shape.extend_from_slice(tail);
+        Tensor::f32(&shape, data)
+    }
+
+    /// Take rows [start, end) along axis 0 (f32).
+    pub fn slice0(&self, start: usize, end: usize) -> Tensor {
+        let shape = self.shape();
+        let w: usize = shape[1..].iter().product();
+        let mut s = shape.to_vec();
+        s[0] = end - start;
+        Tensor::f32(&s, self.as_f32()[start * w..end * w].to_vec())
+    }
+
+    /// Max absolute difference against another f32 tensor (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.as_f32()
+            .iter()
+            .zip(other.as_f32())
+            .map(|(a, b)| {
+                if a.is_infinite() && b.is_infinite() && a == b {
+                    0.0
+                } else {
+                    (a - b).abs()
+                }
+            })
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_access() {
+        let t = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        let _ = Tensor::f32(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn reshape_concat_slice() {
+        let a = Tensor::f32(&[1, 4], vec![1., 2., 3., 4.]);
+        let b = Tensor::f32(&[2, 4], vec![5., 6., 7., 8., 9., 10., 11., 12.]);
+        let c = Tensor::concat0(&[&a, &b]);
+        assert_eq!(c.shape(), &[3, 4]);
+        let s = c.slice0(1, 3);
+        assert_eq!(s.shape(), &[2, 4]);
+        assert_eq!(s.as_f32()[0], 5.0);
+        let r = s.reshaped(&[4, 2]);
+        assert_eq!(r.shape(), &[4, 2]);
+    }
+
+    #[test]
+    fn index0_super_rows() {
+        let t = Tensor::f32(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        assert_eq!(t.index0(1), &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn max_abs_diff_handles_inf() {
+        let a = Tensor::f32(&[2], vec![f32::NEG_INFINITY, 1.0]);
+        let b = Tensor::f32(&[2], vec![f32::NEG_INFINITY, 1.5]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+    }
+}

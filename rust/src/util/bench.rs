@@ -1,0 +1,191 @@
+//! Micro-benchmark harness (criterion substitute).
+//!
+//! `cargo bench` runs `harness = false` binaries built on this module. It
+//! provides warmup, adaptive iteration counts, and p50/p90/p99 latency
+//! stats, plus a tiny table/CSV emitter so every paper figure bench prints
+//! the series it regenerates and drops a CSV under `bench_out/`.
+
+use std::time::{Duration, Instant};
+
+/// Latency statistics over a set of timed iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        // nearest-rank quantile: the ceil(q·n)-th smallest sample
+        let pick = |q: f64| {
+            let rank = ((n as f64) * q).ceil().max(1.0) as usize;
+            samples[rank.min(n) - 1]
+        };
+        Stats {
+            iters: n,
+            mean: total / n as u32,
+            p50: pick(0.50),
+            p90: pick(0.90),
+            p99: pick(0.99),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` with warmup; adaptively picks iterations to fill ~`budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Stats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(50));
+    let target_iters = (budget.as_secs_f64() / one.as_secs_f64())
+        .clamp(5.0, 10_000.0) as usize;
+    let mut samples = Vec::with_capacity(target_iters);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    let s = Stats::from_samples(samples);
+    println!(
+        "{:<40} {:>10} iters  mean {:>12?}  p50 {:>12?}  p99 {:>12?}",
+        name, s.iters, s.mean, s.p50, s.p99
+    );
+    s
+}
+
+/// Plain ASCII table used by the figure benches (paper-style rows).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {title} ==");
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{s}");
+        };
+        line(&self.header);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+
+    /// Write the table as CSV under `bench_out/<name>.csv`.
+    pub fn write_csv(&self, name: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all("bench_out")?;
+        let path = format!("bench_out/{name}.csv");
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        std::fs::write(&path, s)?;
+        println!("[csv] {path}");
+        Ok(path)
+    }
+}
+
+/// Human formatting helpers shared by the figure benches.
+pub fn fmt_si(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e12 {
+        format!("{:.2}T", v / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}K", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+pub fn fmt_bytes(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e12 {
+        format!("{:.2}TB", v / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2}GB", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}MB", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}KB", v / 1e3)
+    } else {
+        format!("{v:.0}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_quantiles() {
+        let samples: Vec<Duration> =
+            (1..=100).map(Duration::from_micros).collect();
+        let s = Stats::from_samples(samples);
+        assert_eq!(s.min, Duration::from_micros(1));
+        assert_eq!(s.max, Duration::from_micros(100));
+        assert_eq!(s.p50, Duration::from_micros(50));
+        assert_eq!(s.p99, Duration::from_micros(99));
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut x = 0u64;
+        let s = bench("noop", Duration::from_millis(5), || {
+            x = x.wrapping_add(1);
+        });
+        assert!(s.iters >= 5);
+        assert!(x > 0);
+    }
+
+    #[test]
+    fn si_format() {
+        assert_eq!(fmt_si(1500.0), "1.50K");
+        assert_eq!(fmt_si(2.5e9), "2.50G");
+        assert_eq!(fmt_bytes(141e9), "141.00GB");
+    }
+}

@@ -1,0 +1,160 @@
+//! Binary tensor store reader — rust half of `python/compile/binio.py`.
+//!
+//! Layout: a raw little-endian `.bin` blob plus a sibling `.json` manifest
+//! (`{"tensors": [{name, dtype, shape, offset}]}`), tensors back-to-back in
+//! manifest order. Weights and the Domain Shared KV stores arrive this way.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{DType, Tensor};
+use crate::util::json::Json;
+
+/// An in-memory tensor store (name → tensor).
+#[derive(Debug, Default)]
+pub struct Store {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl Store {
+    /// Load `<dir>/<name>.bin` + `<dir>/<name>.json`.
+    pub fn load(path_bin: &str) -> Result<Store> {
+        let path = Path::new(path_bin);
+        if path.extension().and_then(|e| e.to_str()) != Some("bin") {
+            bail!("store path must end in .bin: {path_bin}");
+        }
+        let manifest_path = path.with_extension("json");
+        let manifest = Json::read_file(
+            manifest_path.to_str().context("non-utf8 path")?,
+        )?;
+        let blob = std::fs::read(path_bin)
+            .with_context(|| format!("reading {path_bin}"))?;
+
+        let mut tensors = BTreeMap::new();
+        for ent in manifest.get("tensors")?.as_arr()? {
+            let name = ent.get("name")?.as_str()?.to_string();
+            let dtype = DType::from_str(ent.get("dtype")?.as_str()?)
+                .context("bad dtype")?;
+            let shape = ent.get("shape")?.as_usize_vec()?;
+            let offset = ent.get("offset")?.as_usize()?;
+            let n: usize = shape.iter().product();
+            let bytes = n * dtype.size_bytes();
+            if offset + bytes > blob.len() {
+                bail!("tensor '{name}' overruns blob ({} > {})",
+                      offset + bytes, blob.len());
+            }
+            let raw = &blob[offset..offset + bytes];
+            let t = match dtype {
+                DType::F32 => {
+                    let mut data = vec![0f32; n];
+                    for (i, c) in raw.chunks_exact(4).enumerate() {
+                        data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    }
+                    Tensor::f32(&shape, data)
+                }
+                DType::I32 => {
+                    let mut data = vec![0i32; n];
+                    for (i, c) in raw.chunks_exact(4).enumerate() {
+                        data[i] = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    }
+                    Tensor::i32(&shape, data)
+                }
+            };
+            tensors.insert(name, t);
+        }
+        Ok(Store { tensors })
+    }
+
+    /// Save this store in the same format (used by tests + trace capture).
+    pub fn save(&self, path_bin: &str) -> Result<()> {
+        if let Some(dir) = Path::new(path_bin).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut blob: Vec<u8> = Vec::new();
+        let mut entries = Vec::new();
+        for (name, t) in &self.tensors {
+            let offset = blob.len();
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for v in data {
+                        blob.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for v in data {
+                        blob.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            entries.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("dtype", Json::str(t.dtype().as_str())),
+                ("shape", Json::from_usizes(t.shape())),
+                ("offset", Json::num(offset as f64)),
+            ]));
+        }
+        std::fs::write(path_bin, &blob)?;
+        let manifest = Json::obj(vec![("tensors", Json::arr(entries))]);
+        std::fs::write(
+            Path::new(path_bin).with_extension("json"),
+            manifest.to_string(),
+        )?;
+        Ok(())
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("store missing tensor '{name}'"))
+    }
+
+    pub fn take(&mut self, name: &str) -> Result<Tensor> {
+        self.tensors
+            .remove(name)
+            .with_context(|| format!("store missing tensor '{name}'"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("moska_bin_test");
+        let path = dir.join("s.bin");
+        let path = path.to_str().unwrap();
+        let mut s = Store::default();
+        s.insert("w.a", Tensor::f32(&[2, 3], vec![1., -2., 3., 4., 5.5, 6.]));
+        s.insert("idx", Tensor::i32(&[4], vec![7, -8, 9, 2147483647]));
+        s.save(path).unwrap();
+        let back = Store::load(path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get("w.a").unwrap(), s.get("w.a").unwrap());
+        assert_eq!(back.get("idx").unwrap(), s.get("idx").unwrap());
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let s = Store::default();
+        assert!(s.get("nope").is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Tiny CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generated `--help`. Each binary declares its options up front so help
+//! text and unknown-flag errors are uniform across the launcher, examples,
+//! and benches.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declarative option spec.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declare + parse in one step; prints help and exits on `--help`.
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<Opt>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Cli {
+        Cli { name, about, opts: Vec::new() }
+    }
+
+    /// `--key <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &'static str,
+               help: &'static str) -> Cli {
+        self.opts.push(Opt { name, default: Some(default), help,
+                             is_flag: false });
+        self
+    }
+
+    /// `--key <value>` option that may be absent.
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Cli {
+        self.opts.push(Opt { name, default: None, help, is_flag: false });
+        self
+    }
+
+    /// Boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Cli {
+        self.opts.push(Opt { name, default: None, help, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let arg = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let def = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            s.push_str(&format!("  {:<24} {}{}\n", arg, o.help, def));
+        }
+        s.push_str("  --help                   show this help\n");
+        s
+    }
+
+    /// Parse `std::env::args` (skipping argv[0]).
+    pub fn parse(self) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&argv)
+    }
+
+    pub fn parse_from(self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key);
+                let Some(opt) = opt else {
+                    bail!("unknown option --{key}\n{}", self.help_text());
+                };
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    args.flags.push(key.to_string());
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            if i >= argv.len() {
+                                bail!("option --{key} needs a value");
+                            }
+                            argv[i].clone()
+                        }
+                    };
+                    args.values.insert(key.to_string(), v);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> Result<String> {
+        match self.values.get(key) {
+            Some(v) => Ok(v.clone()),
+            None => bail!("missing required option --{key}"),
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        let v = self.str(key)?;
+        v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad integer '{v}'"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        let v = self.str(key)?;
+        v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad float '{v}'"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let args = Cli::new("t", "test")
+            .opt("steps", "100", "steps")
+            .opt("rate", "1.5", "rate")
+            .flag("verbose", "chatty")
+            .parse_from(&argv(&["--steps", "7", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(args.usize("steps").unwrap(), 7);
+        assert_eq!(args.f64("rate").unwrap(), 1.5);
+        assert!(args.flag("verbose"));
+        assert_eq!(args.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let args = Cli::new("t", "test")
+            .opt("out", "x", "path")
+            .parse_from(&argv(&["--out=/tmp/y"]))
+            .unwrap();
+        assert_eq!(args.str("out").unwrap(), "/tmp/y");
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let r = Cli::new("t", "test").parse_from(&argv(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Cli::new("t", "t").opt("k", "1", "k")
+            .parse_from(&argv(&["--k"]));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Leveled stderr logging (log-crate substitute).
+//!
+//! `MOSKA_LOG=debug|info|warn|error` selects the level (default `info`).
+//! Timestamps are milliseconds since process start — enough to correlate
+//! scheduler decisions with node activity in the disaggregated sim.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Initialize from `MOSKA_LOG`; idempotent.
+pub fn init() {
+    START.get_or_init(Instant::now);
+    if let Ok(v) = std::env::var("MOSKA_LOG") {
+        let lvl = match v.to_ascii_lowercase().as_str() {
+            "debug" => Level::Debug,
+            "info" => Level::Info,
+            "warn" => Level::Warn,
+            "error" => Level::Error,
+            _ => Level::Info,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    }
+}
+
+pub fn set_level(lvl: Level) {
+    START.get_or_init(Instant::now);
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(lvl: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    let tag = match lvl {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), tag, target, msg);
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! errorlog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        init();
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

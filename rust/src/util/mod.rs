@@ -1,0 +1,17 @@
+//! In-crate substrates (DESIGN.md §4).
+//!
+//! The build environment is offline with only the `xla` crate closure
+//! vendored, so the usual ecosystem pieces are implemented here from
+//! scratch: JSON ([`json`]), binary tensor stores ([`bin`]), a PRNG
+//! ([`rng`]), CLI parsing ([`cli`]), a micro-benchmark harness ([`bench`]),
+//! a property-testing mini-framework ([`prop`]), a thread pool
+//! ([`threadpool`]), and leveled logging ([`logging`]).
+
+pub mod bench;
+pub mod bin;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

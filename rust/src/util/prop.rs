@@ -1,0 +1,157 @@
+//! Property-testing mini-framework (proptest substitute).
+//!
+//! Seeded case generation with linear input shrinking: on failure the
+//! framework retries with each "simplified" variant the generator offers
+//! and reports the smallest failing case plus its seed for reproduction.
+//! Used by `rust/tests/prop_coordinator.rs` for the coordinator invariants
+//! (routing determinism, batch-forming conservation, allocator safety).
+
+use crate::util::rng::Rng;
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// A generated case that knows how to shrink itself.
+pub trait Case: Clone + std::fmt::Debug {
+    /// Candidate simplifications, most aggressive first. Default: none.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Case for usize {
+    fn shrink(&self) -> Vec<usize> {
+        let mut v = Vec::new();
+        if *self > 0 {
+            v.push(self / 2);
+            v.push(self - 1);
+        }
+        v
+    }
+}
+
+impl Case for Vec<usize> {
+    fn shrink(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            let mut halved = self.clone();
+            for x in &mut halved {
+                *x /= 2;
+            }
+            out.push(halved);
+        }
+        out
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        // MOSKA_PROP_SEED overrides for reproduction.
+        let seed = std::env::var("MOSKA_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 64, seed, max_shrink_steps: 200 }
+    }
+}
+
+/// Check `prop` over `cfg.cases` cases drawn by `gen`; panic with the
+/// minimal failing case otherwise.
+pub fn check<C, G, P>(name: &str, cfg: Config, mut gen: G, prop: P)
+where
+    C: Case,
+    G: FnMut(&mut Rng) -> C,
+    P: Fn(&C) -> PropResult,
+{
+    for case_idx in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed ^ (case_idx as u64).wrapping_mul(0x9E37));
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // shrink
+            let mut best = case.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in best.shrink() {
+                    steps += 1;
+                    if steps > cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case #{case_idx}, seed {:#x}):\n\
+                 minimal case: {:?}\nerror: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// Convenience: assert with a formatted message inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", Config::default(),
+              |r| (r.below(1000) as usize, r.below(1000) as usize),
+              |&(a, b)| {
+                  if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+              });
+    }
+
+    impl Case for (usize, usize) {
+        fn shrink(&self) -> Vec<(usize, usize)> {
+            let mut v = Vec::new();
+            if self.0 > 0 {
+                v.push((self.0 / 2, self.1));
+            }
+            if self.1 > 0 {
+                v.push((self.0, self.1 / 2));
+            }
+            v
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal case")]
+    fn failing_property_shrinks() {
+        check("always-small", Config { cases: 50, ..Default::default() },
+              |r| r.below(10_000) as usize,
+              |&x| if x < 100 { Ok(()) } else { Err(format!("{x} too big")) });
+    }
+
+    #[test]
+    fn shrink_usize_monotone() {
+        let c: usize = 10;
+        for s in c.shrink() {
+            assert!(s < c);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Fixed-size thread pool (rayon/tokio substitute).
+//!
+//! Powers the disaggregated node simulation (each node = a worker with its
+//! own mailbox) and the HTTP server's connection handling. Supports both
+//! fire-and-forget `spawn` and fork-join `scope`-style `map` execution.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming a shared queue.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    shared_rx: Arc<Mutex<Receiver<Msg>>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Msg>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = Arc::clone(&shared_rx);
+            let fly = Arc::clone(&in_flight);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("moska-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                let (m, cv) = &*fly;
+                                let mut n = m.lock().unwrap();
+                                *n -= 1;
+                                if *n == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx, shared_rx, workers, in_flight }
+    }
+
+    /// Pool sized to the machine (minus a margin), at least 2.
+    pub fn default_size() -> ThreadPool {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        ThreadPool::new(n.saturating_sub(2).max(2))
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (m, _) = &*self.in_flight;
+        *m.lock().unwrap() += 1;
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Block until every spawned job has finished.
+    pub fn wait_idle(&self) {
+        let (m, cv) = &*self.in_flight;
+        let mut n = m.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// Fork-join map: runs `f` over `items` on the pool, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let results = Arc::new(Mutex::new(Vec::<(usize, R)>::with_capacity(n)));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.spawn(move || {
+                let r = f(item);
+                results.lock().unwrap().push((i, r));
+            });
+        }
+        self.wait_idle();
+        let mut got = Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("map results still shared"))
+            .into_inner()
+            .unwrap();
+        got.sort_by_key(|(i, _)| *i);
+        got.into_iter().map(|(_, r)| r).collect()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // Wake any worker stuck on recv() after the queue drained.
+        drop(self.shared_rx.lock());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Global counter handy for unique request/trace ids across threads.
+pub static GLOBAL_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+pub fn next_id() -> usize {
+    GLOBAL_SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<usize>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ids_unique() {
+        let a = next_id();
+        let b = next_id();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,193 @@
+//! Synthetic serving workloads (paper §IV setup, laptop scale).
+//!
+//! The paper's workload: a large shared context per request plus a smaller
+//! unique context, with a target SLO per request. The generator produces
+//! request streams with Zipf-skewed domain popularity (context *sharing* is
+//! the controlled variable), Poisson arrivals, and configurable
+//! prompt/generation lengths. Traces are deterministic given a seed and
+//! can be recorded/replayed as JSON.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One generated request (engine-agnostic description).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkItem {
+    /// Arrival time offset (seconds from trace start).
+    pub arrival: f64,
+    /// Shared domain name, or None for a no-sharing request.
+    pub domain: Option<String>,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// Workload shape knobs.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub domains: Vec<String>,
+    /// Zipf exponent for domain popularity (0 = uniform).
+    pub domain_skew: f64,
+    /// Fraction of requests with no shared context.
+    pub unique_only_frac: f64,
+    pub prompt_len: (usize, usize),
+    pub max_new: (usize, usize),
+    /// Mean arrival rate (requests/sec) for the Poisson process.
+    pub rate: f64,
+    pub vocab: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> WorkloadConfig {
+        WorkloadConfig {
+            domains: vec!["legal".into(), "medical".into(), "code".into()],
+            domain_skew: 1.1,
+            unique_only_frac: 0.1,
+            prompt_len: (8, 24),
+            max_new: (8, 32),
+            rate: 50.0,
+            vocab: 256,
+        }
+    }
+}
+
+/// Deterministic request-stream generator.
+pub struct Generator {
+    cfg: WorkloadConfig,
+    rng: Rng,
+    clock: f64,
+}
+
+impl Generator {
+    pub fn new(cfg: WorkloadConfig, seed: u64) -> Generator {
+        Generator { cfg, rng: Rng::new(seed), clock: 0.0 }
+    }
+
+    pub fn next_item(&mut self) -> WorkItem {
+        let c = &self.cfg;
+        self.clock += self.rng.exponential(c.rate);
+        let domain = if self.rng.f64() < c.unique_only_frac
+            || c.domains.is_empty()
+        {
+            None
+        } else if c.domain_skew <= 0.0 {
+            Some(c.domains[self.rng.range(0, c.domains.len())].clone())
+        } else {
+            Some(c.domains[self.rng.zipf(c.domains.len(), c.domain_skew)]
+                 .clone())
+        };
+        let plen = self.rng.range(c.prompt_len.0, c.prompt_len.1 + 1);
+        let prompt =
+            (0..plen).map(|_| self.rng.below(c.vocab as u64) as i32).collect();
+        let max_new = self.rng.range(c.max_new.0, c.max_new.1 + 1);
+        WorkItem { arrival: self.clock, domain, prompt, max_new }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<WorkItem> {
+        (0..n).map(|_| self.next_item()).collect()
+    }
+}
+
+/// Serialize a trace to JSON (record) / parse it back (replay).
+pub fn trace_to_json(items: &[WorkItem]) -> Json {
+    Json::arr(
+        items
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("arrival", Json::num(w.arrival)),
+                    ("domain", match &w.domain {
+                        Some(d) => Json::str(d.clone()),
+                        None => Json::Null,
+                    }),
+                    ("prompt", Json::arr(
+                        w.prompt.iter().map(|&t| Json::num(t as f64)).collect(),
+                    )),
+                    ("max_new", Json::num(w.max_new as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn trace_from_json(j: &Json) -> Result<Vec<WorkItem>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(WorkItem {
+                arrival: e.get("arrival")?.as_f64()?,
+                domain: match e.get("domain")? {
+                    Json::Null => None,
+                    d => Some(d.as_str()?.to_string()),
+                },
+                prompt: e.get("prompt")?.as_i32_vec()?,
+                max_new: e.get("max_new")?.as_usize()?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Generator::new(WorkloadConfig::default(), 9);
+        let mut b = Generator::new(WorkloadConfig::default(), 9);
+        assert_eq!(a.take(20), b.take(20));
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_sane() {
+        let mut g = Generator::new(
+            WorkloadConfig { rate: 100.0, ..Default::default() }, 1,
+        );
+        let items = g.take(500);
+        for w in items.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let span = items.last().unwrap().arrival;
+        let rate = 500.0 / span;
+        assert!((rate - 100.0).abs() < 20.0, "rate {rate}");
+    }
+
+    #[test]
+    fn zipf_skews_domains() {
+        let mut g = Generator::new(
+            WorkloadConfig {
+                domain_skew: 1.5,
+                unique_only_frac: 0.0,
+                ..Default::default()
+            },
+            2,
+        );
+        let mut counts = std::collections::HashMap::new();
+        for w in g.take(1000) {
+            *counts.entry(w.domain.unwrap()).or_insert(0usize) += 1;
+        }
+        assert!(counts["legal"] > counts["code"], "{counts:?}");
+    }
+
+    #[test]
+    fn prompt_lengths_in_range() {
+        let mut g = Generator::new(WorkloadConfig::default(), 3);
+        for w in g.take(100) {
+            assert!((8..=24).contains(&w.prompt.len()));
+            assert!((8..=32).contains(&w.max_new));
+            for &t in &w.prompt {
+                assert!((0..256).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let mut g = Generator::new(WorkloadConfig::default(), 4);
+        let items = g.take(10);
+        let j = trace_to_json(&items);
+        let back = trace_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(items, back);
+    }
+}

@@ -1,0 +1,231 @@
+//! Engine integration: the "all layers compose" proof.
+//!
+//! Replays the golden decode traces produced by the pure-JAX reference
+//! (`python/compile/aot.py write_goldens`) through the full rust engine —
+//! router (dense) → Shared-KV batcher → PJRT Pallas artifacts → LSE merge
+//! → sampling — and asserts the logits agree to ≤ 1e-3 and the greedy
+//! token choices match exactly. Also covers batched decode consistency,
+//! sparse-routing behaviour, admission control, and page accounting.
+
+use moska::config::ServingConfig;
+use moska::engine::{build_engine, Engine};
+use moska::model::sampling::Sampler;
+use moska::runtime::artifact::default_artifacts_dir;
+use moska::util::json::Json;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = default_artifacts_dir();
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn golden(dir: &str, name: &str) -> Json {
+    Json::read_file(&format!("{dir}/golden/{name}")).unwrap()
+}
+
+fn dense_engine(dir: &str, backend: &str)
+    -> (Engine, Option<moska::runtime::RuntimeService>) {
+    let cfg = ServingConfig { top_k: None, ..Default::default() };
+    build_engine(dir, backend, cfg).unwrap()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Golden decode without shared context, on both backends.
+fn check_prompt_golden(backend: &str) {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = golden(&dir, "decode_prompt.json");
+    let prompt = g.get("prompt").unwrap().as_i32_vec().unwrap();
+    let want_tokens = g.get("tokens").unwrap().as_i32_vec().unwrap();
+    let want_logits: Vec<Vec<f32>> = g
+        .get("logits").unwrap().as_arr().unwrap()
+        .iter().map(|r| r.as_f32_vec().unwrap()).collect();
+
+    let (mut eng, _svc) = dense_engine(&dir, backend);
+    eng.capture_logits = true;
+    let id = eng
+        .submit(None, prompt, want_tokens.len(), Sampler::Greedy)
+        .unwrap();
+    let results = eng.run_to_completion().unwrap();
+    assert_eq!(results.len(), 1);
+    let r = &results[0];
+    assert_eq!(r.id, id);
+    assert_eq!(r.tokens, want_tokens, "greedy tokens diverged ({backend})");
+    assert_eq!(r.logits_trace.len(), want_logits.len());
+    for (step, (got, want)) in
+        r.logits_trace.iter().zip(&want_logits).enumerate()
+    {
+        let d = max_abs_diff(got, want);
+        assert!(d < 1e-3, "step {step} logits diff {d} ({backend})");
+    }
+}
+
+#[test]
+fn golden_decode_prompt_xla() {
+    check_prompt_golden("xla");
+}
+
+#[test]
+fn golden_decode_prompt_native() {
+    check_prompt_golden("native");
+}
+
+/// Golden decode over the 'code' shared domain (1024 shared tokens):
+/// engine serves from the precomputed shared KV store; reference did a
+/// monolithic prefill. Dense routing → must agree.
+fn check_shared_golden(backend: &str) {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = golden(&dir, "decode_shared.json");
+    let domain = g.get("domain").unwrap().as_str().unwrap().to_string();
+    let prompt = g.get("prompt").unwrap().as_i32_vec().unwrap();
+    let want_tokens = g.get("tokens").unwrap().as_i32_vec().unwrap();
+    let want_logits: Vec<Vec<f32>> = g
+        .get("logits").unwrap().as_arr().unwrap()
+        .iter().map(|r| r.as_f32_vec().unwrap()).collect();
+
+    let (mut eng, _svc) = dense_engine(&dir, backend);
+    eng.capture_logits = true;
+    eng.submit(Some(&domain), prompt, want_tokens.len(), Sampler::Greedy)
+        .unwrap();
+    let results = eng.run_to_completion().unwrap();
+    let r = &results[0];
+    assert_eq!(r.tokens, want_tokens,
+               "greedy tokens over shared domain diverged ({backend})");
+    for (step, (got, want)) in
+        r.logits_trace.iter().zip(&want_logits).enumerate()
+    {
+        let d = max_abs_diff(got, want);
+        assert!(d < 1e-3, "step {step} logits diff {d} ({backend})");
+    }
+}
+
+#[test]
+fn golden_decode_shared_domain_xla() {
+    check_shared_golden("xla");
+}
+
+#[test]
+fn golden_decode_shared_domain_native() {
+    check_shared_golden("native");
+}
+
+/// A request decoded alone must produce the same tokens as the same
+/// request decoded inside a 6-way batch (batching must not change math).
+#[test]
+fn batched_decode_matches_solo() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt: Vec<i32> = vec![10, 20, 30, 40, 50, 60, 70];
+    let steps = 6;
+
+    let (mut solo, _s1) = dense_engine(&dir, "xla");
+    solo.submit(Some("legal"), prompt.clone(), steps, Sampler::Greedy)
+        .unwrap();
+    let solo_tokens = solo.run_to_completion().unwrap()[0].tokens.clone();
+
+    let (mut batch, _s2) = dense_engine(&dir, "xla");
+    // surround the probe request with different traffic
+    for i in 0..3i32 {
+        let p: Vec<i32> = (0..9).map(|j| (i * 31 + j * 7) % 256).collect();
+        batch.submit(Some("legal"), p, steps, Sampler::Greedy).unwrap();
+    }
+    let probe = batch
+        .submit(Some("legal"), prompt, steps, Sampler::Greedy)
+        .unwrap();
+    for i in 0..2i32 {
+        let p: Vec<i32> = (0..11).map(|j| (i * 13 + j * 5 + 3) % 256).collect();
+        batch.submit(Some("medical"), p, steps, Sampler::Greedy).unwrap();
+    }
+    let results = batch.run_to_completion().unwrap();
+    let probe_tokens = &results.iter().find(|r| r.id == probe).unwrap().tokens;
+    assert_eq!(probe_tokens, &solo_tokens);
+    // batching actually happened: shared GEMM factor must exceed 1
+    assert!(batch.batching_factor() > 1.5,
+            "batching factor {}", batch.batching_factor());
+}
+
+/// Sparse routing (top-k) runs, prunes work, and stays plausible.
+#[test]
+fn sparse_routing_prunes_and_decodes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt: Vec<i32> = (0..12).map(|i| (i * 17 + 5) % 256).collect();
+
+    let cfg = ServingConfig { top_k: Some(4), ..Default::default() };
+    let (mut eng, _svc) = build_engine(&dir, "xla", cfg).unwrap();
+    eng.submit(Some("code"), prompt, 4, Sampler::Greedy).unwrap();
+    let results = eng.run_to_completion().unwrap();
+    assert_eq!(results[0].tokens.len(), 4);
+    // code domain has 16 chunks; top-4 → 75% sparsity
+    let s = eng.router.stats.sparsity();
+    assert!((s - 0.75).abs() < 0.01, "sparsity {s}");
+}
+
+/// Admission control rejects what cannot fit and pages never leak.
+#[test]
+fn admission_and_page_accounting() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServingConfig::default();
+    let (mut eng, _svc) = build_engine(&dir, "native", cfg).unwrap();
+
+    // gigantic request: 4096-page pool can't hold 200k tokens × 2 layers
+    let huge = vec![1i32; 64];
+    assert!(eng.submit(None, huge, 200_000, Sampler::Greedy).is_err());
+
+    // normal requests: pages must return to zero after completion
+    for i in 0..4i32 {
+        let p: Vec<i32> = (0..10).map(|j| (i * 3 + j) % 256).collect();
+        eng.submit(Some("code"), p, 5, Sampler::Greedy).unwrap();
+    }
+    let results = eng.run_to_completion().unwrap();
+    assert_eq!(results.len(), 4);
+    assert_eq!(eng.pool.allocated(), 0, "pages leaked");
+    assert!(eng.pool.peak_allocated() > 0);
+}
+
+/// Position-independent (Universal MoSKA) mode runs end-to-end; it is an
+/// approximation, so we only require sane outputs and full pipeline
+/// execution, not golden equality.
+#[test]
+fn position_independent_mode_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServingConfig {
+        position_independent: true,
+        top_k: Some(4),
+        ..Default::default()
+    };
+    let (mut eng, _svc) = build_engine(&dir, "native", cfg).unwrap();
+    let prompt: Vec<i32> = (0..8).map(|i| (i * 29 + 1) % 256).collect();
+    eng.submit(Some("legal"), prompt, 4, Sampler::Greedy).unwrap();
+    let results = eng.run_to_completion().unwrap();
+    assert_eq!(results[0].tokens.len(), 4);
+    for &t in &results[0].tokens {
+        assert!((0..256).contains(&t));
+    }
+}
+
+/// Continuous batching: more requests than max_batch complete correctly.
+#[test]
+fn continuous_batching_overflow() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServingConfig { max_batch: 2, ..Default::default() };
+    let (mut eng, _svc) = build_engine(&dir, "native", cfg).unwrap();
+    let mut expected = Vec::new();
+    for i in 0..5i32 {
+        let p: Vec<i32> = (0..8).map(|j| (i * 41 + j * 3) % 256).collect();
+        // solo reference for each
+        let (mut solo, _s) = dense_engine(&dir, "native");
+        solo.submit(Some("code"), p.clone(), 3, Sampler::Greedy).unwrap();
+        expected.push(solo.run_to_completion().unwrap()[0].tokens.clone());
+        eng.submit(Some("code"), p, 3, Sampler::Greedy).unwrap();
+    }
+    let mut results = eng.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    for (r, want) in results.iter().zip(&expected) {
+        assert_eq!(&r.tokens, want);
+    }
+}

@@ -1,0 +1,277 @@
+//! Feature integration: runtime domain registration (rust prefill vs
+//! python-precomputed stores), multi-turn sessions (prefix reuse), and
+//! composable contexts (Universal MoSKA).
+
+use moska::config::ServingConfig;
+use moska::engine::{build_engine, Engine};
+use moska::model::sampling::Sampler;
+use moska::runtime::artifact::default_artifacts_dir;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = default_artifacts_dir();
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn dense_engine(dir: &str, backend: &str)
+    -> (Engine, Option<moska::runtime::RuntimeService>) {
+    build_engine(dir, backend,
+                 ServingConfig { top_k: None, ..Default::default() })
+        .unwrap()
+}
+
+/// Rust online prefill == python build-time prefill, chunk for chunk.
+/// This cross-validates the whole prefill path (embed/qkv/RoPE/attention/
+/// FFN through the artifacts) against the JAX reference numerics.
+#[test]
+fn registered_domain_matches_precomputed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (mut eng, _svc) = dense_engine(&dir, "xla");
+    // re-prefill the 'code' domain's corpus under a new name
+    let tokens = eng.shared.domain("code").unwrap().tokens.clone();
+    eng.register_domain("code2", &tokens).unwrap();
+
+    let orig = eng.shared.domain("code").unwrap();
+    let redo = eng.shared.domain("code2").unwrap();
+    assert_eq!(orig.n_chunks, redo.n_chunks);
+    for l in 0..orig.layers.len() {
+        for c in 0..orig.n_chunks {
+            let (k1, v1) = orig.chunk_kv(l, c);
+            let (k2, v2) = redo.chunk_kv(l, c);
+            let kd = k1.max_abs_diff(k2);
+            let vd = v1.max_abs_diff(v2);
+            assert!(kd < 1e-3, "layer {l} chunk {c} K diff {kd}");
+            assert!(vd < 1e-3, "layer {l} chunk {c} V diff {vd}");
+        }
+        let ed = orig.embeddings(l).max_abs_diff(redo.embeddings(l));
+        assert!(ed < 1e-3, "layer {l} embeddings diff {ed}");
+    }
+    // Note: rust-prefilled K/V is numerically close but not bit-identical
+    // to the python store (fp reassociation), so content-hash dedup can't
+    // trigger across the two pipelines. Registering the same corpus AGAIN
+    // through rust is deterministic → every chunk dedups.
+    let n_chunks = orig.n_chunks as u64;
+    let hits_before = eng.shared.registry.dedup_hits;
+    eng.register_domain("code3", &tokens).unwrap();
+    assert!(
+        eng.shared.registry.dedup_hits - hits_before >= n_chunks,
+        "dedup hits {}", eng.shared.registry.dedup_hits
+    );
+
+    // and serving from the re-registered domain gives identical tokens
+    let prompt: Vec<i32> = (0..9).map(|i| (i * 31 + 2) % 256).collect();
+    eng.capture_logits = false;
+    let a = eng.submit(Some("code"), prompt.clone(), 4, Sampler::Greedy)
+        .unwrap();
+    let b = eng.submit(Some("code2"), prompt, 4, Sampler::Greedy).unwrap();
+    let results = eng.run_to_completion().unwrap();
+    let ta = &results.iter().find(|r| r.id == a).unwrap().tokens;
+    let tb = &results.iter().find(|r| r.id == b).unwrap().tokens;
+    assert_eq!(ta, tb);
+}
+
+#[test]
+fn register_domain_validates_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (mut eng, _svc) = dense_engine(&dir, "native");
+    assert!(eng.register_domain("bad", &[1, 2, 3]).is_err()); // not ×chunk
+    assert!(eng.register_domain("bad", &[]).is_err());
+    let chunk = eng.backend.chunk_size();
+    assert!(eng.register_domain("legal", &vec![0; chunk]).is_err()); // dup
+    // valid registration works and is immediately servable
+    eng.register_domain("mini", &vec![7; chunk]).unwrap();
+    eng.submit(Some("mini"), vec![1, 2, 3], 2, Sampler::Greedy).unwrap();
+    let r = eng.run_to_completion().unwrap();
+    assert_eq!(r[0].tokens.len(), 2);
+    assert_eq!(eng.pool.allocated(), 0, "prefill pages leaked");
+}
+
+/// Two session turns == one fresh request over the concatenated history.
+#[test]
+fn session_matches_fresh_request() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (mut eng, _svc) = dense_engine(&dir, "xla");
+
+    let p1: Vec<i32> = vec![11, 22, 33, 44, 55, 66];
+    let p2: Vec<i32> = vec![77, 88, 99];
+    let (n1, n2) = (3usize, 4usize);
+
+    // conversation: turn 1 then turn 2
+    let sid = eng.open_session(Some("code")).unwrap();
+    eng.submit_turn(sid, p1.clone(), n1, Sampler::Greedy).unwrap();
+    let gen1 = eng.run_to_completion().unwrap().pop().unwrap().tokens;
+    assert_eq!(gen1.len(), n1);
+    eng.submit_turn(sid, p2.clone(), n2, Sampler::Greedy).unwrap();
+    let gen2 = eng.run_to_completion().unwrap().pop().unwrap().tokens;
+    assert_eq!(gen2.len(), n2);
+    let sess = eng.session(sid).unwrap();
+    assert_eq!(sess.turns, 2);
+
+    // fresh request: prompt = p1 ++ gen1 ++ p2  (same visible history)
+    let mut full = p1;
+    full.extend_from_slice(&gen1);
+    full.extend_from_slice(&p2);
+    let (mut fresh, _svc2) = dense_engine(&dir, "xla");
+    fresh.submit(Some("code"), full, n2, Sampler::Greedy).unwrap();
+    let want = fresh.run_to_completion().unwrap().pop().unwrap().tokens;
+    assert_eq!(gen2, want, "session turn-2 diverged from fresh request");
+
+    // closing releases the pages
+    let before = eng.pool.allocated();
+    assert!(before > 0);
+    eng.close_session(sid).unwrap();
+    assert_eq!(eng.pool.allocated(), 0);
+}
+
+#[test]
+fn session_busy_and_unknown_errors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (mut eng, _svc) = dense_engine(&dir, "native");
+    assert!(eng.submit_turn(999, vec![1], 1, Sampler::Greedy).is_err());
+    let sid = eng.open_session(None).unwrap();
+    eng.submit_turn(sid, vec![1, 2], 2, Sampler::Greedy).unwrap();
+    // turn in flight → busy
+    assert!(eng.submit_turn(sid, vec![3], 1, Sampler::Greedy).is_err());
+    assert!(eng.close_session(sid).is_err());
+    eng.run_to_completion().unwrap();
+    // now idle again
+    eng.submit_turn(sid, vec![3], 1, Sampler::Greedy).unwrap();
+    eng.run_to_completion().unwrap();
+    eng.close_session(sid).unwrap();
+}
+
+/// Position-preserving composition of a domain's own chunks (in order)
+/// must serve *identical* results to the native domain — LSE merging is
+/// order/partition-invariant.
+#[test]
+fn full_composition_equals_native_domain() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (mut eng, _svc) = dense_engine(&dir, "xla");
+    let nc = eng.shared.domain("code").unwrap().n_chunks;
+    eng.register_composed("code_composed", &format!("code:0-{}", nc - 1))
+        .unwrap();
+
+    let prompt: Vec<i32> = (0..8).map(|i| (i * 13 + 5) % 256).collect();
+    let a = eng.submit(Some("code"), prompt.clone(), 4, Sampler::Greedy)
+        .unwrap();
+    let b = eng
+        .submit(Some("code_composed"), prompt, 4, Sampler::Greedy)
+        .unwrap();
+    let results = eng.run_to_completion().unwrap();
+    let ta = &results.iter().find(|r| r.id == a).unwrap().tokens;
+    let tb = &results.iter().find(|r| r.id == b).unwrap().tokens;
+    assert_eq!(ta, tb, "composed(all chunks) != native domain");
+}
+
+/// Cross-domain composition serves correctly in position-independent
+/// mode (the §III.D approximation) and routes over the composed library.
+#[test]
+fn cross_domain_composition_serves() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServingConfig {
+        top_k: Some(4),
+        position_independent: true,
+        ..Default::default()
+    };
+    let (mut eng, _svc) = build_engine(&dir, "native", cfg).unwrap();
+    eng.register_composed("mix", "legal:0-3,code:0-3,medical:0-3")
+        .unwrap();
+    let dom = eng.shared.domain("mix").unwrap();
+    assert_eq!(dom.n_chunks, 12);
+
+    eng.submit(Some("mix"), vec![5, 6, 7, 8], 3, Sampler::Greedy).unwrap();
+    let r = eng.run_to_completion().unwrap();
+    assert_eq!(r[0].tokens.len(), 3);
+    // router saw the composed chunk space
+    assert!(eng.router.stats.chunks_scored > 0);
+}
+
+// ------------------------------------------------------- failure injection
+
+/// A corrupted HLO artifact must fail loudly at compile time, not crash
+/// or silently produce wrong numerics.
+#[test]
+fn corrupt_artifact_fails_cleanly() {
+    let Some(dir) = artifacts_dir() else { return };
+    // clone the artifacts tree shallowly into a temp dir
+    let tmp = std::env::temp_dir().join("moska_corrupt_test");
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(tmp.join("hlo")).unwrap();
+    for sub in ["manifest.json"] {
+        std::fs::copy(format!("{dir}/{sub}"), tmp.join(sub)).unwrap();
+    }
+    for entry in std::fs::read_dir(format!("{dir}/hlo")).unwrap() {
+        let p = entry.unwrap().path();
+        std::fs::copy(&p, tmp.join("hlo").join(p.file_name().unwrap()))
+            .unwrap();
+    }
+    // corrupt one artifact
+    std::fs::write(tmp.join("hlo/embed_b1.hlo.txt"), "HloModule broken(((")
+        .unwrap();
+    let svc = moska::runtime::RuntimeService::spawn(tmp.to_str().unwrap())
+        .unwrap();
+    let h = svc.handle();
+    let emb = moska::tensor::Tensor::zeros_f32(&[256, 64]);
+    let tok = moska::tensor::Tensor::zeros_i32(&[1]);
+    let r = h.execute("embed_b1", vec![tok, emb]);
+    assert!(r.is_err(), "corrupt HLO should fail to compile");
+    // other artifacts still work
+    let q = moska::tensor::Tensor::zeros_f32(&[1, 4, 16]);
+    let k = moska::tensor::Tensor::zeros_f32(&[64, 2, 16]);
+    let v = moska::tensor::Tensor::zeros_f32(&[64, 2, 16]);
+    let qp = moska::tensor::Tensor::zeros_i32(&[1]);
+    let r = h.execute(
+        "chunk_attn_b1_c64",
+        vec![q, k, v, qp, moska::tensor::Tensor::scalar_i32(0),
+             moska::tensor::Tensor::scalar_i32(64)],
+    );
+    assert!(r.is_ok(), "{r:?}");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+/// Missing artifacts dir → actionable error, not a panic.
+#[test]
+fn missing_artifacts_actionable_error() {
+    let e = moska::runtime::Manifest::load("/nonexistent/nowhere")
+        .unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+/// Engine with a starved page pool rejects at admission and never leaks.
+#[test]
+fn starved_pool_admission() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = moska::runtime::Manifest::load(&dir).unwrap();
+    let weights = moska::model::Weights::load(
+        man.weights_path().to_str().unwrap(), man.model.clone(),
+    )
+    .unwrap();
+    let shared = moska::kvcache::SharedStore::empty(man.chunk);
+    let be = Box::new(moska::runtime::NativeBackend::new(
+        man.model.clone(), man.chunk,
+    ));
+    // 3 pages total: a 64-token prompt + generation needs ≥ 2 per layer
+    let mut eng = Engine::new(be, weights, shared,
+                              ServingConfig::default(), 3);
+    let big: Vec<i32> = vec![1; 128];
+    assert!(eng.submit(None, big, 64, Sampler::Greedy).is_err());
+    // small request still fits
+    eng.submit(None, vec![1, 2], 2, Sampler::Greedy).unwrap();
+    let r = eng.run_to_completion().unwrap();
+    assert_eq!(r[0].tokens.len(), 2);
+    assert_eq!(eng.pool.allocated(), 0);
+}
+
+#[test]
+fn composition_rejects_bad_refs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (mut eng, _svc) = dense_engine(&dir, "native");
+    assert!(eng.register_composed("x", "nope:0-1").is_err());
+    assert!(eng.register_composed("x", "code:900").is_err());
+    assert!(eng.register_composed("legal", "code:0").is_err()); // dup name
+}

@@ -1,0 +1,265 @@
+//! Runtime integration: AOT artifacts (PJRT) ⇄ python goldens ⇄ native ops.
+//!
+//! Requires `make artifacts`; every test skips cleanly when the artifacts
+//! tree is absent so `cargo test` stays green on a fresh checkout.
+
+use moska::runtime::native::Partials;
+use moska::runtime::{artifact, Backend, NativeBackend, RuntimeService, XlaBackend};
+use moska::tensor::Tensor;
+use moska::util::json::Json;
+use moska::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = artifact::default_artifacts_dir();
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn xla_backend(dir: &str) -> (RuntimeService, XlaBackend) {
+    let svc = RuntimeService::spawn(dir).expect("runtime service");
+    let be = XlaBackend::new(svc.handle());
+    (svc, be)
+}
+
+/// JSON goldens store -inf as -3.0e38 (no inf literal in JSON).
+fn decode_golden_f32(v: &Json) -> Vec<f32> {
+    v.as_f32_vec()
+        .unwrap()
+        .into_iter()
+        .map(|x| if x <= -3.0e38 { f32::NEG_INFINITY } else { x })
+        .collect()
+}
+
+fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let mut data = vec![0f32; shape.iter().product()];
+    rng.fill_normal_f32(&mut data);
+    Tensor::f32(shape, data)
+}
+
+#[test]
+fn chunk_attn_artifact_matches_python_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = Json::read_file(&format!("{dir}/golden/kernels.json")).unwrap();
+    let g = g.get("chunk_attn").unwrap();
+
+    let q = Tensor::f32(&[4, 4, 16], decode_golden_f32(g.get("q").unwrap()));
+    let k = Tensor::f32(&[64, 2, 16], decode_golden_f32(g.get("k").unwrap()));
+    let v = Tensor::f32(&[64, 2, 16], decode_golden_f32(g.get("v").unwrap()));
+    let q_pos = g.get("q_pos").unwrap().as_i32_vec().unwrap();
+    let k_base = g.get("k_base").unwrap().as_i64().unwrap() as i32;
+    let valid = g.get("valid").unwrap().as_i64().unwrap() as i32;
+
+    let want_o = Tensor::f32(&[4, 4, 16], decode_golden_f32(g.get("o").unwrap()));
+    let want_m = Tensor::f32(&[4, 4], decode_golden_f32(g.get("m").unwrap()));
+    let want_l = Tensor::f32(&[4, 4], decode_golden_f32(g.get("l").unwrap()));
+
+    let (_svc, be) = xla_backend(&dir);
+    let got = be.chunk_attn(&q, &k, &v, &q_pos, k_base, valid).unwrap();
+    assert!(got.o.max_abs_diff(&want_o) < 1e-4, "o diff {}", got.o.max_abs_diff(&want_o));
+    assert!(got.m.max_abs_diff(&want_m) < 1e-4);
+    assert!(got.l.max_abs_diff(&want_l) < 1e-4);
+
+    // and the native oracle agrees with both
+    let nat = NativeBackend::tiny();
+    let got_n = nat.chunk_attn(&q, &k, &v, &q_pos, k_base, valid).unwrap();
+    assert!(got_n.o.max_abs_diff(&want_o) < 1e-4);
+    assert!(got_n.m.max_abs_diff(&want_m) < 1e-4);
+    assert!(got_n.l.max_abs_diff(&want_l) < 1e-4);
+}
+
+#[test]
+fn router_artifact_matches_python_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = Json::read_file(&format!("{dir}/golden/kernels.json")).unwrap();
+    let g = g.get("router").unwrap();
+    let q = Tensor::f32(&[4, 4, 16], decode_golden_f32(g.get("q").unwrap()));
+    let embs = Tensor::f32(&[16, 2, 16], decode_golden_f32(g.get("embs").unwrap()));
+    let want = Tensor::f32(&[4, 16], decode_golden_f32(g.get("scores").unwrap()));
+
+    let (_svc, be) = xla_backend(&dir);
+    let got = be.router(&q, &embs).unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-4, "{}", got.max_abs_diff(&want));
+
+    let nat = NativeBackend::tiny();
+    let got_n = nat.router(&q, &embs).unwrap();
+    assert!(got_n.max_abs_diff(&want) < 1e-4);
+}
+
+#[test]
+fn xla_and_native_agree_on_random_inputs_all_buckets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_svc, be) = xla_backend(&dir);
+    let nat = NativeBackend::tiny();
+    let mut rng = Rng::new(42);
+    let chunk = be.chunk_size();
+
+    for &b in &[1usize, 3, 5, 8, 17, 32] {
+        let q = rand_t(&mut rng, &[b, 4, 16]);
+        let k = rand_t(&mut rng, &[chunk, 2, 16]);
+        let v = rand_t(&mut rng, &[chunk, 2, 16]);
+        let q_pos: Vec<i32> = (0..b)
+            .map(|i| if i % 5 == 4 { -1 } else { (rng.below(200)) as i32 })
+            .collect();
+        let a = be.chunk_attn(&q, &k, &v, &q_pos, 30, chunk as i32).unwrap();
+        let n = nat.chunk_attn(&q, &k, &v, &q_pos, 30, chunk as i32).unwrap();
+        assert!(a.o.max_abs_diff(&n.o) < 1e-4, "b={b} o {}", a.o.max_abs_diff(&n.o));
+        assert!(a.m.max_abs_diff(&n.m) < 1e-4, "b={b}");
+        assert!(a.l.max_abs_diff(&n.l) < 1e-4, "b={b}");
+    }
+}
+
+#[test]
+fn qkv_post_lmhead_agree_with_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (svc, be) = xla_backend(&dir);
+    let nat = NativeBackend::tiny();
+    let man = svc.handle().manifest;
+    let weights = moska::util::bin::Store::load(
+        man.weights_path().to_str().unwrap(),
+    )
+    .unwrap();
+    let mut rng = Rng::new(7);
+    let cfg = be.model().clone();
+
+    for &b in &[1usize, 2, 6, 16] {
+        let tokens = Tensor::i32(&[b], (0..b).map(|i| (i * 37 % 256) as i32).collect());
+        let emb = weights.get("embed").unwrap();
+        let xa = be.embed(&tokens, emb).unwrap();
+        let xn = nat.embed(&tokens, emb).unwrap();
+        assert!(xa.max_abs_diff(&xn) < 1e-5, "embed b={b}");
+
+        let pos: Vec<i32> = (0..b as i32).map(|i| i * 3).collect();
+        let (qa, ka, va) = be
+            .qkv(&xa, weights.get("layer0.attn_norm").unwrap(),
+                 weights.get("layer0.wq").unwrap(),
+                 weights.get("layer0.wk").unwrap(),
+                 weights.get("layer0.wv").unwrap(), &pos)
+            .unwrap();
+        let (qn, kn, vn) = nat
+            .qkv(&xn, weights.get("layer0.attn_norm").unwrap(),
+                 weights.get("layer0.wq").unwrap(),
+                 weights.get("layer0.wk").unwrap(),
+                 weights.get("layer0.wv").unwrap(), &pos)
+            .unwrap();
+        assert!(qa.max_abs_diff(&qn) < 1e-4, "q b={b} {}", qa.max_abs_diff(&qn));
+        assert!(ka.max_abs_diff(&kn) < 1e-4);
+        assert!(va.max_abs_diff(&vn) < 1e-4);
+
+        let attn_o = rand_t(&mut rng, &[b, cfg.n_heads, cfg.head_dim]);
+        let x = rand_t(&mut rng, &[b, cfg.d_model]);
+        let pa = be
+            .post(&attn_o, &x, weights.get("layer0.wo").unwrap(),
+                  weights.get("layer0.ffn_norm").unwrap(),
+                  weights.get("layer0.w1").unwrap(),
+                  weights.get("layer0.w3").unwrap(),
+                  weights.get("layer0.w2").unwrap())
+            .unwrap();
+        let pn = nat
+            .post(&attn_o, &x, weights.get("layer0.wo").unwrap(),
+                  weights.get("layer0.ffn_norm").unwrap(),
+                  weights.get("layer0.w1").unwrap(),
+                  weights.get("layer0.w3").unwrap(),
+                  weights.get("layer0.w2").unwrap())
+            .unwrap();
+        assert!(pa.max_abs_diff(&pn) < 1e-3, "post b={b} {}", pa.max_abs_diff(&pn));
+
+        let la = be
+            .lm_head(&x, weights.get("final_norm").unwrap(),
+                     weights.get("lm_head").unwrap())
+            .unwrap();
+        let ln = nat
+            .lm_head(&x, weights.get("final_norm").unwrap(),
+                     weights.get("lm_head").unwrap())
+            .unwrap();
+        assert!(la.max_abs_diff(&ln) < 1e-3, "lm_head b={b}");
+    }
+}
+
+#[test]
+fn merge2_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_svc, be) = xla_backend(&dir);
+    let nat = NativeBackend::tiny();
+    let mut rng = Rng::new(3);
+    let chunk = be.chunk_size();
+    let q = rand_t(&mut rng, &[8, 4, 16]);
+    let k1 = rand_t(&mut rng, &[chunk, 2, 16]);
+    let v1 = rand_t(&mut rng, &[chunk, 2, 16]);
+    let k2 = rand_t(&mut rng, &[chunk, 2, 16]);
+    let v2 = rand_t(&mut rng, &[chunk, 2, 16]);
+    let q_pos: Vec<i32> = vec![500; 8];
+    let p1 = nat.chunk_attn(&q, &k1, &v1, &q_pos, 0, chunk as i32).unwrap();
+    let p2 = nat.chunk_attn(&q, &k2, &v2, &q_pos, chunk as i32, chunk as i32).unwrap();
+    let ma = be.merge2(&p1, &p2).unwrap();
+    let mn = nat.merge2(&p1, &p2).unwrap();
+    assert!(ma.o.max_abs_diff(&mn.o) < 1e-4);
+    assert!(ma.m.max_abs_diff(&mn.m) < 1e-4);
+    assert!(ma.l.max_abs_diff(&mn.l) < 1e-4);
+}
+
+#[test]
+fn merge_identity_through_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_svc, be) = xla_backend(&dir);
+    let nat = NativeBackend::tiny();
+    let mut rng = Rng::new(4);
+    let chunk = be.chunk_size();
+    let q = rand_t(&mut rng, &[2, 4, 16]);
+    let k = rand_t(&mut rng, &[chunk, 2, 16]);
+    let v = rand_t(&mut rng, &[chunk, 2, 16]);
+    let p = nat.chunk_attn(&q, &k, &v, &[100, 300], 0, chunk as i32).unwrap();
+    let id = Partials::identity(2, 4, 16);
+    let merged = be.merge2(&p, &id).unwrap();
+    assert!(merged.o.max_abs_diff(&p.o) < 1e-5);
+    assert!(merged.l.max_abs_diff(&p.l) < 1e-5);
+}
+
+#[test]
+fn manifest_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = RuntimeService::spawn(&dir).unwrap();
+    let h = svc.handle();
+    // wrong rank
+    let r = h.execute("embed_b1", vec![Tensor::zeros_i32(&[2])]);
+    assert!(r.is_err());
+    // wrong dtype
+    let man = &h.manifest;
+    let emb_shape = vec![man.model.vocab, man.model.d_model];
+    let r = h.execute(
+        "embed_b1",
+        vec![Tensor::zeros_f32(&[1]), Tensor::zeros_f32(&emb_shape)],
+    );
+    assert!(r.is_err());
+    // unknown artifact
+    let r = h.execute("nope_b1", vec![]);
+    assert!(r.is_err());
+}
+
+#[test]
+fn handle_is_shareable_across_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = RuntimeService::spawn(&dir).unwrap();
+    let h = svc.handle();
+    let man = h.manifest.clone();
+    let emb = Tensor::zeros_f32(&[man.model.vocab, man.model.d_model]);
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let h = h.clone();
+        let emb = emb.clone();
+        let d_model = man.model.d_model;
+        joins.push(std::thread::spawn(move || {
+            for i in 0..5 {
+                let tokens = Tensor::i32(&[1], vec![((t * 7 + i) % 256) as i32]);
+                let out = h.execute("embed_b1", vec![tokens, emb.clone()]).unwrap();
+                assert_eq!(out[0].shape(), &[1, d_model]);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}

@@ -1,0 +1,383 @@
+//! Property tests over coordinator invariants (in-crate proptest-lite,
+//! `moska::util::prop`): batch forming, routing, paging, LSE algebra,
+//! JSON round-trips. Pure rust — no artifacts needed.
+
+use moska::batcher::form_batches;
+use moska::config::ModelConfig;
+use moska::kvcache::paged::{PagePool, RequestKv};
+use moska::prop_assert;
+use moska::router::top_k_indices;
+use moska::runtime::native;
+use moska::runtime::{Backend, NativeBackend};
+use moska::tensor::Tensor;
+use moska::util::prop::{check, Case, Config};
+use moska::util::rng::Rng;
+
+// ---------------------------------------------------------------- cases
+
+#[derive(Debug, Clone)]
+struct RoutingCase {
+    sets: Vec<Vec<usize>>,
+    max_batch: usize,
+}
+
+impl Case for RoutingCase {
+    fn shrink(&self) -> Vec<RoutingCase> {
+        let mut out = Vec::new();
+        if self.sets.len() > 1 {
+            out.push(RoutingCase {
+                sets: self.sets[..self.sets.len() / 2].to_vec(),
+                max_batch: self.max_batch,
+            });
+        }
+        if self.sets.iter().any(|s| s.len() > 1) {
+            out.push(RoutingCase {
+                sets: self
+                    .sets
+                    .iter()
+                    .map(|s| s[..s.len() / 2].to_vec())
+                    .collect(),
+                max_batch: self.max_batch,
+            });
+        }
+        out
+    }
+}
+
+fn gen_routing(rng: &mut Rng) -> RoutingCase {
+    let b = rng.range(1, 40);
+    let n_chunks = rng.range(1, 64);
+    let sets = (0..b)
+        .map(|_| {
+            let k = rng.range(0, n_chunks.min(12) + 1);
+            let mut set: Vec<usize> =
+                (0..k).map(|_| rng.range(0, n_chunks)).collect();
+            set.sort_unstable();
+            set.dedup();
+            set
+        })
+        .collect();
+    RoutingCase { sets, max_batch: rng.range(1, 33) }
+}
+
+#[test]
+fn prop_batcher_conservation_and_bounds() {
+    check("batcher-conservation", Config::default(), gen_routing, |case| {
+        let (batches, stats) = form_batches(&case.sets, case.max_batch);
+        // bucket bound
+        for b in &batches {
+            prop_assert!(b.rows.len() <= case.max_batch,
+                         "batch over bound: {} > {}", b.rows.len(),
+                         case.max_batch);
+        }
+        // conservation: every (row, chunk) pair appears exactly once
+        let mut seen = std::collections::HashSet::new();
+        for b in &batches {
+            for &r in &b.rows {
+                prop_assert!(seen.insert((r, b.chunk)),
+                             "duplicate pair ({r},{})", b.chunk);
+            }
+        }
+        let want: usize = case.sets.iter().map(|s| s.len()).sum();
+        prop_assert!(seen.len() == want, "{} pairs vs {} expected",
+                     seen.len(), want);
+        prop_assert!(stats.pairs == want, "stats.pairs mismatch");
+        // determinism
+        let (again, _) = form_batches(&case.sets, case.max_batch);
+        prop_assert!(again == batches, "non-deterministic batching");
+        Ok(())
+    });
+}
+
+#[derive(Debug, Clone)]
+struct TopKCase {
+    scores: Vec<f32>,
+    k: usize,
+}
+
+impl Case for TopKCase {
+    fn shrink(&self) -> Vec<TopKCase> {
+        if self.scores.len() > 1 {
+            vec![TopKCase {
+                scores: self.scores[..self.scores.len() / 2].to_vec(),
+                k: self.k.min(self.scores.len() / 2).max(1),
+            }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[test]
+fn prop_top_k_matches_sort() {
+    check(
+        "topk-vs-sort",
+        Config::default(),
+        |rng| {
+            let n = rng.range(1, 300);
+            let scores =
+                (0..n).map(|_| rng.normal() as f32).collect::<Vec<_>>();
+            TopKCase { k: rng.range(1, n + 1), scores }
+        },
+        |case| {
+            let got = top_k_indices(&case.scores, case.k);
+            // reference: full sort
+            let mut idx: Vec<usize> = (0..case.scores.len()).collect();
+            idx.sort_by(|&a, &b| {
+                case.scores[b].partial_cmp(&case.scores[a]).unwrap()
+            });
+            let mut want = idx[..case.k.min(idx.len())].to_vec();
+            want.sort_unstable();
+            // ties can make membership differ; compare score multisets
+            let sum_got: f32 = got.iter().map(|&i| case.scores[i]).sum();
+            let sum_want: f32 = want.iter().map(|&i| case.scores[i]).sum();
+            prop_assert!(got.len() == want.len(), "size mismatch");
+            prop_assert!((sum_got - sum_want).abs() < 1e-3,
+                         "top-k scores differ: {sum_got} vs {sum_want}");
+            // ascending + unique
+            for w in got.windows(2) {
+                prop_assert!(w[0] < w[1], "not ascending/unique");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug, Clone)]
+struct AllocTrace {
+    ops: Vec<(bool, usize)>, // (append?, tokens) else release request idx
+}
+
+impl Case for AllocTrace {
+    fn shrink(&self) -> Vec<AllocTrace> {
+        if self.ops.len() > 1 {
+            vec![
+                AllocTrace { ops: self.ops[..self.ops.len() / 2].to_vec() },
+                AllocTrace { ops: self.ops[1..].to_vec() },
+            ]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[test]
+fn prop_page_pool_never_leaks() {
+    check(
+        "pagepool-no-leak",
+        Config { cases: 40, ..Default::default() },
+        |rng| {
+            let n = rng.range(1, 60);
+            AllocTrace {
+                ops: (0..n)
+                    .map(|_| (rng.f64() < 0.7, rng.range(1, 30)))
+                    .collect(),
+            }
+        },
+        |case| {
+            let chunk = 8;
+            let mut pool = PagePool::new(10_000, chunk, 2, 4);
+            let mut rng = Rng::new(1);
+            let mut reqs: Vec<RequestKv> = Vec::new();
+            let mut expected_tokens: Vec<usize> = Vec::new();
+            for &(is_append, n) in &case.ops {
+                if is_append || reqs.is_empty() {
+                    let mut kv = RequestKv::new(2, 0);
+                    let shape = [n, 2, 4];
+                    let mut k = vec![0f32; n * 8];
+                    let mut v = vec![0f32; n * 8];
+                    rng.fill_normal_f32(&mut k);
+                    rng.fill_normal_f32(&mut v);
+                    kv.append(
+                        &mut pool,
+                        &[
+                            (Tensor::f32(&shape, k.clone()),
+                             Tensor::f32(&shape, v.clone())),
+                            (Tensor::f32(&shape, k), Tensor::f32(&shape, v)),
+                        ],
+                    )
+                    .map_err(|e| e.to_string())?;
+                    reqs.push(kv);
+                    expected_tokens.push(n);
+                } else {
+                    let i = n % reqs.len();
+                    let mut kv = reqs.swap_remove(i);
+                    expected_tokens.swap_remove(i);
+                    kv.release(&mut pool);
+                }
+            }
+            // accounting: allocated pages == sum of live requests' pages
+            let want: usize = expected_tokens
+                .iter()
+                .map(|&t| 2 * t.div_ceil(chunk))
+                .sum();
+            prop_assert!(pool.allocated() == want,
+                         "allocated {} vs expected {}", pool.allocated(),
+                         want);
+            for mut kv in reqs {
+                kv.release(&mut pool);
+            }
+            prop_assert!(pool.allocated() == 0, "leak after release");
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug, Clone)]
+struct MergeCase {
+    n_parts: usize,
+    seed: u64,
+}
+
+impl Case for MergeCase {
+    fn shrink(&self) -> Vec<MergeCase> {
+        if self.n_parts > 2 {
+            vec![MergeCase { n_parts: self.n_parts / 2, seed: self.seed }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[test]
+fn prop_lse_merge_equals_monolithic() {
+    // Attention over one T-token context == merge of its chunk partials,
+    // for random chunkings — the exactness core of the whole system.
+    check(
+        "merge-exactness",
+        Config { cases: 30, ..Default::default() },
+        |rng| MergeCase { n_parts: rng.range(1, 9), seed: rng.next_u64() },
+        |case| {
+            let be = NativeBackend::new(ModelConfig::tiny(), 64);
+            let mut rng = Rng::new(case.seed);
+            let t = case.n_parts * 16;
+            let mk = |rng: &mut Rng, shape: &[usize]| {
+                let mut d = vec![0f32; shape.iter().product()];
+                rng.fill_normal_f32(&mut d);
+                Tensor::f32(shape, d)
+            };
+            let q = mk(&mut rng, &[2, 4, 16]);
+            let k = mk(&mut rng, &[t, 2, 16]);
+            let v = mk(&mut rng, &[t, 2, 16]);
+            let q_pos = [rng.range(0, t + 5) as i32, (t as i32) + 100];
+            let whole = be
+                .chunk_attn(&q, &k, &v, &q_pos, 0, t as i32)
+                .map_err(|e| e.to_string())?;
+            let mut parts = Vec::new();
+            for p in 0..case.n_parts {
+                let s = p * 16;
+                parts.push(
+                    be.chunk_attn(
+                        &q, &k.slice0(s, s + 16), &v.slice0(s, s + 16),
+                        &q_pos, s as i32, 16,
+                    )
+                    .map_err(|e| e.to_string())?,
+                );
+            }
+            let merged = moska::attention::merge_many(&parts);
+            let a = native::finalize(&whole);
+            let b = native::finalize(&merged);
+            let d = a.max_abs_diff(&b);
+            prop_assert!(d < 1e-4, "chunked != monolithic: diff {d}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use moska::util::json::Json;
+
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.normal() * 1e3).round()),
+            3 => {
+                let n = rng.range(0, 12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            char::from_u32(rng.range(32, 1000) as u32)
+                                .unwrap_or('x')
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.range(0, 5))
+                    .map(|_| gen_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.range(0, 5))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    check(
+        "json-roundtrip",
+        Config { cases: 200, ..Default::default() },
+        |rng| rng.next_u64() as usize,
+        |&seed| {
+            let mut rng = Rng::new(seed as u64);
+            let v = gen_json(&mut rng, 3);
+            let s = v.to_string();
+            let back = Json::parse(&s).map_err(|e| format!("{e} in {s}"))?;
+            prop_assert!(back == v, "roundtrip mismatch: {s}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_conserves_requests() {
+    use moska::scheduler::StepScheduler;
+
+    check(
+        "scheduler-conservation",
+        Config { cases: 50, ..Default::default() },
+        |rng| Pair(rng.range(1, 50), rng.range(1, 8)),
+        |&Pair(n, max_batch)| {
+            let mut s = StepScheduler::new(max_batch);
+            for id in 0..n {
+                s.enqueue(id);
+            }
+            let mut completed = std::collections::HashSet::new();
+            let mut guard = 0;
+            while !s.is_idle() {
+                guard += 1;
+                prop_assert!(guard < 10_000, "scheduler livelock");
+                s.refill();
+                prop_assert!(s.live().len() <= max_batch, "batch overflow");
+                // complete the first live request each "step"
+                if let Some(&id) = s.live().first() {
+                    completed.insert(id);
+                    s.retire(&[id]);
+                }
+            }
+            prop_assert!(completed.len() == n,
+                         "{} completed vs {n}", completed.len());
+            Ok(())
+        },
+    );
+}
+
+/// Local pair wrapper (orphan rule: can't impl moska's trait on a tuple).
+#[derive(Debug, Clone, Copy)]
+struct Pair(usize, usize);
+
+impl Case for Pair {
+    fn shrink(&self) -> Vec<Pair> {
+        let mut v = Vec::new();
+        if self.0 > 1 {
+            v.push(Pair(self.0 / 2, self.1));
+        }
+        if self.1 > 1 {
+            v.push(Pair(self.0, self.1 / 2));
+        }
+        v
+    }
+}
