@@ -1,15 +1,129 @@
 //! End-to-end serving throughput: the measured Fig 4 analogue on the full
-//! engine. Like-for-like comparison of per-request serving (max_batch=1,
-//! the GEMV regime) against MoSKA batched serving (Shared-KV GEMM), at
-//! dense (exact) and 75%-sparse routing. Runtime artifacts are warmed
-//! before timing so compilation never pollutes the numbers.
+//! engine.
+//!
+//! Two sections:
+//!
+//! 1. **Native parallel decode trajectory** — always runs (synthetic
+//!    weights + an online-registered domain, no artifacts needed).
+//!    Measures decode tokens/sec with the parallel execution layer off
+//!    (`threads=1`, the serial baseline) and on (auto-sized pool),
+//!    asserts the generated tokens are identical (the determinism
+//!    contract), and emits `bench_out/BENCH_decode.json` so successive
+//!    PRs have a comparable perf trajectory.
+//! 2. **XLA engine comparison** — like-for-like per-request serving
+//!    (max_batch=1, the GEMV regime) against MoSKA batched serving
+//!    (Shared-KV GEMM), dense and 75%-sparse; needs `make artifacts`.
 
-use moska::config::ServingConfig;
-use moska::engine::build_engine;
+use moska::config::{ModelConfig, ServingConfig};
+use moska::engine::{build_engine, Engine};
+use moska::kvcache::SharedStore;
 use moska::model::sampling::Sampler;
+use moska::model::Weights;
 use moska::runtime::artifact::default_artifacts_dir;
+use moska::runtime::NativeBackend;
 use moska::util::bench::Table;
+use moska::util::json::Json;
+use moska::util::threadpool::ThreadPool;
 use std::time::Instant;
+
+// ------------------------------------------------- native decode section
+
+/// Big enough that a decode step is real compute (not loop overhead),
+/// small enough that the serial baseline finishes in seconds.
+fn bench_model() -> ModelConfig {
+    ModelConfig {
+        vocab: 512,
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        n_kv_heads: 4,
+        head_dim: 32,
+        ffn_dim: 768,
+        rope_theta: 10000.0,
+        rms_eps: 1e-5,
+    }
+}
+
+const CHUNK: usize = 64;
+const SHARED_CHUNKS: usize = 16;
+
+fn native_engine(threads: usize) -> Engine {
+    let cfg = ServingConfig {
+        top_k: None,
+        max_batch: 32,
+        exec_threads: threads,
+        ..Default::default()
+    };
+    let model = bench_model();
+    let be = NativeBackend::with_threads(model.clone(), CHUNK, threads);
+    let weights = Weights::synthetic(model, 0xBE11C);
+    let mut eng = Engine::new(
+        Box::new(be), weights, SharedStore::empty(CHUNK), cfg, 4096,
+    );
+    // shared context: SHARED_CHUNKS chunks prefilled through the kernels
+    let tokens: Vec<i32> = (0..SHARED_CHUNKS * CHUNK)
+        .map(|i| (i % 509) as i32)
+        .collect();
+    eng.register_domain("bench", &tokens).expect("register domain");
+    eng
+}
+
+/// Run the decode workload; returns (tokens/sec, gemm batching factor,
+/// per-request token streams ordered by request id).
+fn run_native(threads: usize, n_req: usize, steps: usize)
+              -> (f64, f64, Vec<Vec<i32>>) {
+    let mut eng = native_engine(threads);
+    for i in 0..n_req {
+        let p: Vec<i32> = (0..8)
+            .map(|j| ((i * 37 + j * 11) % 512) as i32)
+            .collect();
+        eng.submit(Some("bench"), p, steps, Sampler::Greedy).unwrap();
+    }
+    let t0 = Instant::now();
+    let mut results = eng.run_to_completion().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    let toks: usize = results.iter().map(|r| r.tokens.len()).sum();
+    results.sort_by_key(|r| r.id);
+    let streams = results.into_iter().map(|r| r.tokens).collect();
+    (toks as f64 / dt, eng.batching_factor(), streams)
+}
+
+fn native_bench() {
+    let (n, steps) = (16usize, 16usize);
+    let auto = ThreadPool::resolve_threads(0);
+    println!("== native parallel decode (synthetic {}-layer model, \
+              {} shared chunks) ==",
+             bench_model().n_layers, SHARED_CHUNKS);
+    let (base_tps, _, base_streams) = run_native(1, n, steps);
+    println!("threads=1        : {base_tps:.1} tok/s");
+    let (par_tps, par_bn, par_streams) = run_native(auto, n, steps);
+    println!("threads={auto:<8} : {par_tps:.1} tok/s  \
+              ({:.2}x, gemm N {par_bn:.2})",
+             par_tps / base_tps);
+    assert_eq!(base_streams, par_streams,
+               "parallel decode diverged from the serial baseline");
+    println!("outputs           : bit-identical across thread counts");
+
+    std::fs::create_dir_all("bench_out").expect("bench_out dir");
+    let j = Json::obj(vec![
+        ("bench", Json::str("e2e_native_decode")),
+        ("requests", Json::num(n as f64)),
+        ("decode_steps", Json::num(steps as f64)),
+        ("shared_chunks", Json::num(SHARED_CHUNKS as f64)),
+        ("threads_baseline", Json::num(1.0)),
+        ("threads_parallel", Json::num(auto as f64)),
+        ("tok_per_s_baseline", Json::num(base_tps)),
+        ("tok_per_s_parallel", Json::num(par_tps)),
+        ("speedup", Json::num(par_tps / base_tps)),
+        ("gemm_batch_factor", Json::num(par_bn)),
+        ("outputs_bit_identical", Json::num(1.0)),
+    ]);
+    let path = "bench_out/BENCH_decode.json";
+    std::fs::write(path, j.to_string()).expect("write BENCH_decode.json");
+    println!("[json] {path}");
+}
+
+// ---------------------------------------------------- xla engine section
 
 fn run(dir: &str, n_req: usize, steps: usize, top_k: Option<usize>,
        max_batch: usize) -> (f64, f64) {
@@ -31,9 +145,12 @@ fn run(dir: &str, n_req: usize, steps: usize, top_k: Option<usize>,
 }
 
 fn main() {
+    native_bench();
+
     let dir = default_artifacts_dir();
     if !std::path::Path::new(&dir).join("manifest.json").exists() {
-        eprintln!("artifacts not built — run `make artifacts`");
+        eprintln!("artifacts not built — skipping the XLA e2e section \
+                   (run `make artifacts`)");
         return;
     }
     let steps = 8;

@@ -314,6 +314,101 @@ mod tests {
         }
     }
 
+    /// Delegating backend with a configurable `max_attn_tokens`, to force
+    /// specific run-coalescing splits in `unique_attention`.
+    struct CappedBackend {
+        inner: NativeBackend,
+        cap: usize,
+    }
+
+    impl Backend for CappedBackend {
+        fn name(&self) -> &'static str {
+            "capped-native"
+        }
+        fn model(&self) -> &ModelConfig {
+            self.inner.model()
+        }
+        fn chunk_size(&self) -> usize {
+            self.inner.chunk_size()
+        }
+        fn max_attn_tokens(&self) -> usize {
+            self.cap
+        }
+        fn embed(&self, tokens: &Tensor, emb: &Tensor) -> Result<Tensor> {
+            self.inner.embed(tokens, emb)
+        }
+        fn qkv(&self, x: &Tensor, attn_norm: &Tensor, wq: &Tensor,
+               wk: &Tensor, wv: &Tensor, pos: &[i32])
+               -> Result<(Tensor, Tensor, Tensor)> {
+            self.inner.qkv(x, attn_norm, wq, wk, wv, pos)
+        }
+        fn chunk_attn(&self, q: &Tensor, k: &Tensor, v: &Tensor,
+                      q_pos: &[i32], k_base: i32, valid: i32)
+                      -> Result<Partials> {
+            self.inner.chunk_attn(q, k, v, q_pos, k_base, valid)
+        }
+        fn post(&self, attn_o: &Tensor, x: &Tensor, wo: &Tensor,
+                ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor)
+                -> Result<Tensor> {
+            self.inner.post(attn_o, x, wo, ffn_norm, w1, w3, w2)
+        }
+        fn lm_head(&self, x: &Tensor, final_norm: &Tensor, w_lm: &Tensor)
+                   -> Result<Tensor> {
+            self.inner.lm_head(x, final_norm, w_lm)
+        }
+        fn router(&self, q: &Tensor, embs: &Tensor) -> Result<Tensor> {
+            self.inner.router(q, embs)
+        }
+        fn merge2(&self, a: &Partials, b: &Partials) -> Result<Partials> {
+            self.inner.merge2(a, b)
+        }
+    }
+
+    /// Run coalescing across paged unique KV must be exact for every run
+    /// length, including a partially-filled last page mid-run.
+    #[test]
+    fn unique_attention_coalescing_partial_last_page() {
+        let chunk = 8;
+        let (hkv, dh, h) = (2, 16, 4);
+        let mut rng = Rng::new(21);
+        let mut pool = crate::kvcache::paged::PagePool::new(
+            16, chunk, hkv, dh,
+        );
+        // 20 tokens → pages of 8, 8, and a partially-filled 4
+        let n = 20;
+        let k_all = rand_t(&mut rng, &[n, hkv, dh]);
+        let v_all = rand_t(&mut rng, &[n, hkv, dh]);
+        let mut kv = crate::kvcache::paged::RequestKv::new(1, 0);
+        kv.append(&mut pool, &[(k_all.clone(), v_all.clone())]).unwrap();
+        assert_eq!(kv.page_valid(2, chunk), 4, "last page partially filled");
+
+        let q = rand_t(&mut rng, &[1, h, dh]);
+        for q_pos in [1000, 18, 10, 3] {
+            // reference: one monolithic call over the full 20 tokens
+            let whole = crate::runtime::native::chunk_attn(
+                &q, &k_all, &v_all, &[q_pos], 0, n as i32,
+            );
+            let want = native::finalize(&whole);
+            // cap 16 → runs of (page0+page1) then (partial page2);
+            // cap 8 → three single-page runs; cap 1024 → one run
+            for cap in [8usize, 16, 1024] {
+                // threads=1: no pool spawn per iteration; the kernel work
+                // here is below the parallel floor anyway
+                let be = CappedBackend {
+                    inner: NativeBackend::with_threads(
+                        ModelConfig::tiny(), chunk, 1,
+                    ),
+                    cap,
+                };
+                let got = unique_attention(&be, &pool, &kv, 0, &q, &[q_pos])
+                    .unwrap();
+                let got = native::finalize(&got);
+                let d = got.max_abs_diff(&want);
+                assert!(d < 1e-5, "cap={cap} q_pos={q_pos} diff={d}");
+            }
+        }
+    }
+
     #[test]
     fn merge_many_matches_pairwise() {
         let be = NativeBackend::new(ModelConfig::tiny(), 64);

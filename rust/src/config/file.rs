@@ -82,6 +82,9 @@ fn serving_from_json(j: &Json) -> Result<ServingConfig> {
     if let Some(v) = j.opt("position_independent") {
         c.position_independent = v.as_bool()?;
     }
+    if let Some(v) = j.opt("exec_threads") {
+        c.exec_threads = v.as_usize()?;
+    }
     Ok(c)
 }
 
@@ -124,7 +127,8 @@ mod tests {
     fn full_config_parses() {
         let j = Json::parse(
             r#"{"serving": {"top_k": 8, "max_batch": 16,
-                            "position_independent": true},
+                            "position_independent": true,
+                            "exec_threads": 4},
                 "backend": "native", "addr": "0.0.0.0:9090",
                 "workload": {"rate": 3.5, "domains": ["legal"],
                              "prompt_len": [4, 9]}}"#,
@@ -135,6 +139,7 @@ mod tests {
         assert_eq!(s.top_k, Some(8));
         assert_eq!(s.max_batch, 16);
         assert!(s.position_independent);
+        assert_eq!(s.exec_threads, 4);
         assert_eq!(c.backend.as_deref(), Some("native"));
         let w = c.workload.unwrap();
         assert_eq!(w.rate, 3.5);

@@ -92,6 +92,10 @@ pub struct ServingConfig {
     /// arbitrary chunk libraries at the cost of exactness vs a monolithic
     /// prefix (documented approximation, default off).
     pub position_independent: bool,
+    /// Native-backend execution threads: `0` = auto (`MOSKA_THREADS` env
+    /// or machine size), `1` = serial (bit-identical either way — see
+    /// the determinism contract in `runtime::native`).
+    pub exec_threads: usize,
 }
 
 impl Default for ServingConfig {
@@ -103,6 +107,7 @@ impl Default for ServingConfig {
             max_unique_pages: 64,
             route_every_layer: false,
             position_independent: false,
+            exec_threads: 0,
         }
     }
 }

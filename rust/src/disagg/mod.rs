@@ -396,6 +396,8 @@ pub fn run_sim(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let steps = args.usize("steps")?;
     let backend_name = args.str("backend")?;
+    // native exec threads: 0 = auto, 1 = serial
+    let threads = args.usize("threads")?;
 
     let man = crate::runtime::Manifest::load(&dir)?;
     let weights = Weights::load(
@@ -403,8 +405,8 @@ pub fn run_sim(args: &Args) -> Result<()> {
     )?;
     let shared = Arc::new(SharedStore::load_from_manifest(&man)?);
     let backend: Arc<dyn Backend> = match backend_name.as_str() {
-        "native" => Arc::new(crate::runtime::NativeBackend::new(
-            man.model.clone(), man.chunk,
+        "native" => Arc::new(crate::runtime::NativeBackend::with_threads(
+            man.model.clone(), man.chunk, threads,
         )),
         "xla" => {
             let svc = crate::runtime::RuntimeService::spawn(&dir)?;

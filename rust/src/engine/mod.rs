@@ -27,6 +27,7 @@ use crate::metrics::Metrics;
 use crate::model::sampling::Sampler;
 use crate::model::Weights;
 use crate::router::{ChunkSet, Router};
+use crate::runtime::native::Partials;
 use crate::runtime::Backend;
 use crate::scheduler::{Admit, AdmissionController, Demand, SloTracker,
                        StepScheduler};
@@ -434,6 +435,19 @@ impl Engine {
             t_phase = now;
         };
 
+        // group rows by shared domain ONCE per step: the grouping is
+        // invariant across layers, and rebuilding the map (with cloned
+        // String keys) per layer was pure decode-path overhead
+        let mut by_domain: HashMap<String, Vec<usize>> = HashMap::new();
+        for (i, id) in order.iter().enumerate() {
+            if let Some(d) = &self.live[id].req.domain {
+                by_domain.entry(d.clone()).or_default().push(i);
+            }
+        }
+        let mut domains: Vec<(String, Vec<usize>)> =
+            by_domain.into_iter().collect();
+        domains.sort(); // deterministic execution order
+
         let mut x = self.backend.embed(&tokens, self.weights.embed())?;
         phase(&self.metrics, "phase_embed_ns");
         // per-row routing decisions, refreshed at layer 0
@@ -461,22 +475,14 @@ impl Engine {
             let mut acc = RowAccumulator::identity(
                 b, model.n_heads, model.head_dim,
             );
-            // ---- shared path: group rows by domain, route, batch, GEMM
-            let mut by_domain: HashMap<String, Vec<usize>> = HashMap::new();
-            for (i, id) in order.iter().enumerate() {
-                if let Some(d) = &self.live[id].req.domain {
-                    by_domain.entry(d.clone()).or_default().push(i);
-                }
-            }
-            let mut domains: Vec<_> = by_domain.into_iter().collect();
-            domains.sort(); // deterministic execution order
-            for (dname, rows) in domains {
-                let dom = self.shared.domains.get(&dname).unwrap();
+            // ---- shared path: per domain group, route, batch, GEMM
+            for (dname, rows) in &domains {
+                let dom = self.shared.domains.get(dname).unwrap();
                 // gather subset q/pos
                 let nh = model.n_heads * model.head_dim;
                 let mut qs = Vec::with_capacity(rows.len() * nh);
                 let mut ps = Vec::with_capacity(rows.len());
-                for &i in &rows {
+                for &i in rows {
                     qs.extend_from_slice(q.index0(i));
                     ps.push(pos[i]);
                 }
@@ -515,18 +521,50 @@ impl Engine {
                 }
             }
             phase(&self.metrics, "phase_shared_ns");
-            // ---- unique path: per request (B=1 — the paper's GEMV side)
-            for (i, id) in order.iter().enumerate() {
-                let l = &self.live[id];
+            // ---- unique path: per request (B=1 — the paper's GEMV side).
+            // The B GEMVs are independent, so they fan out across the
+            // backend's execution pool; results merge below in fixed row
+            // order, keeping the step bit-identical to serial execution.
+            let backend = self.backend.as_ref();
+            let page_pool = &self.pool;
+            let kvs: Vec<&RequestKv> =
+                order.iter().map(|id| &self.live[id].kv).collect();
+            // same work floor as the kernels: short unique contexts are
+            // cheaper to walk serially than to fan out
+            let unique_work: usize = kvs.iter().map(|kv| kv.len).sum::<usize>()
+                * model.n_heads
+                * model.head_dim;
+            let pool_for_fanout = backend.exec_pool().filter(|tp| {
+                tp.threads() > 1
+                    && b > 1
+                    && unique_work >= crate::runtime::native::PAR_MIN_WORK
+            });
+            let mut slots: Vec<Option<Result<Partials>>> =
+                (0..b).map(|_| None).collect();
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(b);
+            for (i, (slot, &kv)) in slots.iter_mut().zip(&kvs).enumerate() {
                 let qr = Tensor::f32(
                     &[1, model.n_heads, model.head_dim],
                     q.index0(i).to_vec(),
                 );
-                let part = unique_attention(
-                    self.backend.as_ref(), &self.pool, &l.kv, layer, &qr,
-                    &[pos[i]],
-                )?;
-                acc.merge_row(i, &part);
+                let pi = pos[i];
+                jobs.push(Box::new(move || {
+                    *slot = Some(unique_attention(
+                        backend, page_pool, kv, layer, &qr, &[pi],
+                    ));
+                }));
+            }
+            match pool_for_fanout {
+                Some(tp) => tp.scoped_run(jobs),
+                None => {
+                    for job in jobs {
+                        job();
+                    }
+                }
+            }
+            for (i, slot) in slots.into_iter().enumerate() {
+                acc.merge_row(i, &slot.expect("job ran")?);
             }
             phase(&self.metrics, "phase_unique_ns");
 
@@ -637,6 +675,8 @@ pub fn run_demo(args: &Args) -> Result<()> {
     println!("wall time         : {dt:.3}s");
     println!("throughput        : {:.1} tok/s", total_tokens as f64 / dt);
     println!("gemm batching N   : {:.2}", engine.batching_factor());
+    println!("exec threads      : {}",
+             engine.backend.exec_pool().map(|p| p.threads()).unwrap_or(1));
     println!("router sparsity   : {:.1}%",
              engine.router.stats.sparsity() * 100.0);
     println!("kv pages peak     : {}", engine.pool.peak_allocated());
@@ -665,7 +705,15 @@ pub fn build_engine_from_args(args: &Args)
         k => Some(k),
     };
     let max_batch = args.usize("max-batch").unwrap_or(32);
-    let cfg = ServingConfig { top_k, max_batch, ..Default::default() };
+    // native execution threads: 0 = auto (MOSKA_THREADS env / machine);
+    // the option is declared (with default "0") by every engine-building
+    // command, so None only means "caller has no --threads at all"
+    let exec_threads = match args.get("threads") {
+        Some(_) => args.usize("threads")?,
+        None => 0,
+    };
+    let cfg =
+        ServingConfig { top_k, max_batch, exec_threads, ..Default::default() };
     build_engine(&dir, args.get("backend").unwrap_or("xla"), cfg)
 }
 
@@ -681,8 +729,8 @@ pub fn build_engine(artifacts_dir: &str, backend: &str, cfg: ServingConfig)
     let pool_pages = 4096;
     match backend {
         "native" => {
-            let be = Box::new(crate::runtime::NativeBackend::new(
-                man.model.clone(), man.chunk,
+            let be = Box::new(crate::runtime::NativeBackend::with_threads(
+                man.model.clone(), man.chunk, cfg.exec_threads,
             ));
             Ok((Engine::new(be, weights, shared, cfg, pool_pages), None))
         }

@@ -122,11 +122,20 @@ impl DomainCache {
 }
 
 /// Content-addressed chunk interning with refcounts + LRU eviction order.
+///
+/// Recency is a generation counter per chunk plus an ordered
+/// generation→id map, so `mark_used`/`intern` are O(log n) — the previous
+/// `Vec`-based LRU did an O(n) scan plus `Vec::remove` shift on every
+/// router hit, which put a linear walk in the decode hot path.
 #[derive(Default)]
 pub struct ChunkRegistry {
     by_hash: HashMap<u64, u64>, // content hash → chunk id
+    hash_of: HashMap<u64, u64>, // chunk id → content hash (evict cleanup)
     refcount: BTreeMap<u64, usize>,
-    lru: Vec<u64>, // least-recently-used first
+    /// generation → id; ascending order = least-recently-used first.
+    lru: BTreeMap<u64, u64>,
+    gen_of: HashMap<u64, u64>, // chunk id → its current generation
+    next_gen: u64,
     next_id: u64,
     pub interned: u64,
     pub dedup_hits: u64,
@@ -165,8 +174,12 @@ impl ChunkRegistry {
         let id = self.next_id;
         self.next_id += 1;
         self.by_hash.insert(h, id);
+        self.hash_of.insert(id, h);
         self.refcount.insert(id, 1);
-        self.lru.push(id);
+        let g = self.next_gen;
+        self.next_gen += 1;
+        self.lru.insert(g, id);
+        self.gen_of.insert(id, g);
         id
     }
 
@@ -176,11 +189,17 @@ impl ChunkRegistry {
         }
     }
 
+    /// Move `id` to most-recently-used: retire its old generation and
+    /// stamp a fresh one (O(log n); no-op for unknown/evicted ids).
     fn touch(&mut self, id: u64) {
-        if let Some(pos) = self.lru.iter().position(|&x| x == id) {
-            self.lru.remove(pos);
-            self.lru.push(id);
-        }
+        let Some(&old) = self.gen_of.get(&id) else {
+            return;
+        };
+        self.lru.remove(&old);
+        let g = self.next_gen;
+        self.next_gen += 1;
+        self.lru.insert(g, id);
+        self.gen_of.insert(id, g);
     }
 
     /// Mark a chunk as used (router hit) for LRU ordering.
@@ -190,18 +209,24 @@ impl ChunkRegistry {
 
     /// Evict up to `n` zero-ref chunks, LRU first; returns evicted ids.
     pub fn evict(&mut self, n: usize) -> Vec<u64> {
-        let mut out = Vec::new();
-        let mut i = 0;
-        while i < self.lru.len() && out.len() < n {
-            let id = self.lru[i];
-            if self.refcount.get(&id).copied().unwrap_or(0) == 0 {
-                self.lru.remove(i);
-                self.refcount.remove(&id);
-                self.by_hash.retain(|_, v| *v != id);
-                out.push(id);
-            } else {
-                i += 1;
+        let mut victims: Vec<(u64, u64)> = Vec::new();
+        for (&g, &id) in &self.lru {
+            if victims.len() >= n {
+                break;
             }
+            if self.refcount.get(&id).copied().unwrap_or(0) == 0 {
+                victims.push((g, id));
+            }
+        }
+        let mut out = Vec::with_capacity(victims.len());
+        for (g, id) in victims {
+            self.lru.remove(&g);
+            self.gen_of.remove(&id);
+            self.refcount.remove(&id);
+            if let Some(h) = self.hash_of.remove(&id) {
+                self.by_hash.remove(&h);
+            }
+            out.push(id);
         }
         out
     }
@@ -293,6 +318,34 @@ mod tests {
         assert_eq!(reg.refcount_of(a), 2);
         assert_eq!(reg.dedup_hits, 1);
         assert_eq!(reg.resident(), 2);
+    }
+
+    #[test]
+    fn lru_generation_order_under_heavy_touching() {
+        let mut reg = ChunkRegistry::new();
+        let mut rng = Rng::new(9);
+        let chunks: Vec<_> = (0..6).map(|_| chunk_t(&mut rng)).collect();
+        let ids: Vec<u64> =
+            chunks.iter().map(|(k, v)| reg.intern(k, v)).collect();
+        for &id in &ids {
+            reg.release(id);
+        }
+        // touch in a scrambled order; eviction must follow it exactly
+        let order = [3usize, 0, 5, 1, 4, 2];
+        for &i in &order {
+            reg.mark_used(ids[i]);
+        }
+        let evicted = reg.evict(6);
+        let want: Vec<u64> = order.iter().map(|&i| ids[i]).collect();
+        assert_eq!(evicted, want);
+        // mark_used on an evicted id is a no-op, not a resurrection
+        reg.mark_used(ids[0]);
+        assert_eq!(reg.evict(6), Vec::<u64>::new());
+        assert_eq!(reg.resident(), 0);
+        // an evicted chunk re-interns under a fresh id
+        let again = reg.intern(&chunks[0].0, &chunks[0].1);
+        assert!(!ids.contains(&again));
+        assert_eq!(reg.resident(), 1);
     }
 
     #[test]

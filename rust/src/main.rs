@@ -64,6 +64,7 @@ fn cmd_serve(argv: &[String]) -> moska::Result<()> {
         .opt("artifacts", "", "artifacts dir (default: auto-discover)")
         .opt("top-k", "0", "router top-k (0 = dense/exact)")
         .opt("backend", "xla", "xla | native")
+        .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
         .opt("max-batch", "32", "max decode batch")
         .opt("config", "", "JSON config file (flags override it)")
         .parse_from(argv)?;
@@ -78,6 +79,7 @@ fn cmd_demo(argv: &[String]) -> moska::Result<()> {
         .opt("domain", "legal", "shared domain (legal|medical|code|none)")
         .opt("top-k", "0", "router top-k (0 = dense/exact)")
         .opt("backend", "xla", "xla | native")
+        .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
         .parse_from(argv)?;
     moska::engine::run_demo(&args)
 }
@@ -95,6 +97,7 @@ fn cmd_disagg(argv: &[String]) -> moska::Result<()> {
         .opt("batches", "1,4,16,64", "comma-separated batch sizes")
         .opt("steps", "8", "decode steps per batch point")
         .opt("backend", "native", "xla | native")
+        .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
         .parse_from(argv)?;
     moska::disagg::run_sim(&args)
 }
@@ -106,6 +109,7 @@ fn cmd_replay(argv: &[String]) -> moska::Result<()> {
         .opt("rate", "8.0", "offered load (requests/sec)")
         .opt("top-k", "16", "router top-k (0 = dense)")
         .opt("backend", "xla", "xla | native")
+        .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
         .opt("max-batch", "32", "max decode batch")
         .opt("trace", "", "replay a recorded trace file instead")
         .parse_from(argv)?;

@@ -11,12 +11,15 @@
 //! Both produce identical numerics (asserted by integration tests), so the
 //! rest of the coordinator is backend-agnostic.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::ModelConfig;
 use crate::runtime::client::RuntimeHandle;
 use crate::runtime::native::{self, Partials};
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 /// Model ops at live batch size (see module docs).
 pub trait Backend: Send + Sync {
@@ -71,6 +74,13 @@ pub trait Backend: Send + Sync {
 
     /// Pairwise LSE merge of partials.
     fn merge2(&self, a: &Partials, b: &Partials) -> Result<Partials>;
+
+    /// Execution pool for coordinator-level fan-out (the engine's
+    /// per-request unique-attention jobs in `decode_step`). `None` means
+    /// the backend is serial or manages its own parallelism (PJRT).
+    fn exec_pool(&self) -> Option<&Arc<ThreadPool>> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------- helpers
@@ -322,19 +332,62 @@ impl Backend for XlaBackend {
 
 // ---------------------------------------------------------- NativeBackend
 
-/// Pure-rust execution (fallback + oracle).
+/// Pure-rust execution (fallback + oracle), parallel by default.
+///
+/// Owns the execution [`ThreadPool`] the tiled kernels fan out over and
+/// the precomputed RoPE inverse-frequency table. Thread count resolves
+/// via [`ThreadPool::resolve_threads`] (explicit > `MOSKA_THREADS` env >
+/// machine size); `threads == 1` keeps everything on the calling thread —
+/// no pool is created and every kernel takes the serial reference path —
+/// and parallel execution is bit-identical to that in any case.
 pub struct NativeBackend {
     model: ModelConfig,
     chunk: usize,
+    pool: Option<Arc<ThreadPool>>,
+    rope_freqs: Vec<f64>,
 }
 
 impl NativeBackend {
+    /// Auto-sized pool (see [`ThreadPool::resolve_threads`]).
     pub fn new(model: ModelConfig, chunk: usize) -> NativeBackend {
-        NativeBackend { model, chunk }
+        NativeBackend::with_threads(model, chunk, 0)
+    }
+
+    /// Explicit thread count; `0` = auto, `1` = serial (no pool).
+    pub fn with_threads(model: ModelConfig, chunk: usize, threads: usize)
+                        -> NativeBackend {
+        let n = ThreadPool::resolve_threads(threads);
+        let pool = if n <= 1 {
+            None
+        } else {
+            Some(Arc::new(ThreadPool::new(n)))
+        };
+        let rope_freqs =
+            native::rope_inv_freq(model.head_dim, model.rope_theta);
+        NativeBackend { model, chunk, pool, rope_freqs }
+    }
+
+    /// Share an existing pool (e.g. one pool across disagg node twins).
+    pub fn with_pool(model: ModelConfig, chunk: usize,
+                     pool: Arc<ThreadPool>) -> NativeBackend {
+        let rope_freqs =
+            native::rope_inv_freq(model.head_dim, model.rope_theta);
+        let pool = if pool.threads() <= 1 { None } else { Some(pool) };
+        NativeBackend { model, chunk, pool, rope_freqs }
     }
 
     pub fn tiny() -> NativeBackend {
         NativeBackend::new(ModelConfig::tiny(), 64)
+    }
+
+    /// Kernel-level pool handle (None ⇒ serial).
+    fn exec(&self) -> Option<&ThreadPool> {
+        self.pool.as_deref()
+    }
+
+    /// Worker threads backing this backend (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.threads()).unwrap_or(1)
     }
 }
 
@@ -363,31 +416,39 @@ impl Backend for NativeBackend {
 
     fn qkv(&self, x: &Tensor, attn_norm: &Tensor, wq: &Tensor, wk: &Tensor,
            wv: &Tensor, pos: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
-        Ok(native::qkv(&self.model, x, attn_norm, wq, wk, wv, pos))
+        Ok(native::qkv_exec(&self.model, x, attn_norm, wq, wk, wv, pos,
+                            Some(&self.rope_freqs), self.exec()))
     }
 
     fn chunk_attn(&self, q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
                   k_base: i32, valid: i32) -> Result<Partials> {
-        Ok(native::chunk_attn(q, k, v, q_pos, k_base, valid))
+        Ok(native::chunk_attn_exec(q, k, v, q_pos, k_base, valid,
+                                   self.exec()))
     }
 
     fn post(&self, attn_o: &Tensor, x: &Tensor, wo: &Tensor,
             ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor)
             -> Result<Tensor> {
-        Ok(native::post(&self.model, attn_o, x, wo, ffn_norm, w1, w3, w2))
+        Ok(native::post_exec(&self.model, attn_o, x, wo, ffn_norm, w1, w3,
+                             w2, self.exec()))
     }
 
     fn lm_head(&self, x: &Tensor, final_norm: &Tensor, w_lm: &Tensor)
                -> Result<Tensor> {
-        Ok(native::lm_head(&self.model, x, final_norm, w_lm))
+        Ok(native::lm_head_exec(&self.model, x, final_norm, w_lm,
+                                self.exec()))
     }
 
     fn router(&self, q: &Tensor, embs: &Tensor) -> Result<Tensor> {
-        Ok(native::router_score(q, embs))
+        Ok(native::router_score_exec(q, embs, self.exec()))
     }
 
     fn merge2(&self, a: &Partials, b: &Partials) -> Result<Partials> {
         Ok(native::merge2(a, b))
+    }
+
+    fn exec_pool(&self) -> Option<&Arc<ThreadPool>> {
+        self.pool.as_ref()
     }
 }
 

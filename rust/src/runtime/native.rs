@@ -12,9 +12,54 @@
 //!
 //! Layouts match the artifacts: row-major `[B, H, dh]` queries,
 //! `[C, Hkv, dh]` chunk K/V, GQA head `h` reads KV head `h / group`.
+//!
+//! ## Parallel execution layer
+//!
+//! Every hot kernel comes in two forms: the plain function (serial, the
+//! reference) and an `*_exec` twin taking `Option<&ThreadPool>`.
+//! [`NativeBackend`][crate::runtime::NativeBackend] passes its pool so the
+//! decode hot path fans out over tiles:
+//!
+//! * [`matmul_exec`] — row blocks when the batch is deep, column blocks
+//!   when it is shallow, each over a cache-tiled dense microkernel;
+//! * [`chunk_attn_exec`] — contiguous `(query-row, head)` tile spans;
+//! * [`router_score_exec`] — contiguous `(row, chunk)` cell spans.
+//!
+//! **Determinism contract:** a tile owns a disjoint `&mut` slice of the
+//! output and runs the *same* per-element floating-point reduction order
+//! as the serial loop — there are no cross-thread reductions — so the
+//! parallel result is bit-identical to the scalar reference for every
+//! shape and thread count (asserted by `parallel_kernels_bit_identical`).
+//! Per-worker scratch (attention score rows) lives in thread-local
+//! buffers, so the steady-state decode step allocates near-zero beyond
+//! the output tensors themselves.
+
+use std::cell::RefCell;
 
 use crate::config::ModelConfig;
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
+
+/// Below this much work (inner-loop MAC count) a kernel stays serial:
+/// fork-join dispatch costs a few µs per tile and would swamp tiny calls.
+/// Public so coordinator-level fan-outs (the engine's per-request
+/// unique-attention jobs) can apply the same floor.
+pub const PAR_MIN_WORK: usize = 1 << 14;
+
+/// Fork-join tiles per worker — enough slack for load balancing without
+/// descending into dispatch-bound tile sizes.
+const TILES_PER_WORKER: usize = 4;
+
+/// `w` rows per microkernel tile: bounds the live slab of `w` a tile
+/// streams (`MM_K_TILE × n` floats) so it stays cache-resident across the
+/// row loop. Accumulation order per output element is still strictly
+/// ascending in `k`, preserving bit-exactness.
+const MM_K_TILE: usize = 64;
+
+thread_local! {
+    /// Per-worker attention score scratch, reused across kernel calls.
+    static ATTN_SCORES: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Attention partials (unnormalized): o `[B,H,dh]`, m `[B,H]`, l `[B,H]`.
 #[derive(Debug, Clone)]
@@ -39,26 +84,111 @@ impl Partials {
     }
 }
 
-/// `x[B,d] @ w[d,n] → [B,n]` (naive but cache-friendly k-inner loop).
+/// `x[B,d] @ w[d,n] → [B,n]` (serial reference; see [`matmul_exec`]).
 pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    matmul_exec(x, w, None)
+}
+
+/// Dense cache-tiled microkernel: rows `[r0, r0+rows)` of `x @ w` into
+/// `orows` (row-local indexing). `k` ascends per output element, so any
+/// row partitioning reproduces the serial result bit-for-bit.
+fn mm_rows(xs: &[f32], ws: &[f32], orows: &mut [f32], r0: usize, d: usize,
+           n: usize) {
+    let rows = orows.len() / n;
+    let mut k0 = 0;
+    while k0 < d {
+        let k1 = (k0 + MM_K_TILE).min(d);
+        for i in 0..rows {
+            let xrow = &xs[(r0 + i) * d..(r0 + i + 1) * d];
+            let orow = &mut orows[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let xv = xrow[kk];
+                let wrow = &ws[kk * n..(kk + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// Column-block microkernel for shallow batches: columns `[c0, c0+width)`
+/// of every row into `oblock` (`[b, width]`, block-local indexing).
+fn mm_cols(xs: &[f32], ws: &[f32], oblock: &mut [f32], b: usize, d: usize,
+           n: usize, c0: usize) {
+    let width = oblock.len() / b;
+    for i in 0..b {
+        let xrow = &xs[i * d..(i + 1) * d];
+        let orow = &mut oblock[i * width..(i + 1) * width];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            let wrow = &ws[kk * n + c0..kk * n + c0 + width];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// `x[B,d] @ w[d,n] → [B,n]`, fanned out over the pool when one is given
+/// and the call is big enough to amortize dispatch. Deep batches split
+/// into row blocks (zero-copy scatter via `chunks_mut`); shallow ones
+/// split into column blocks assembled after the join. Both keep the
+/// serial per-element reduction order → bit-identical output.
+pub fn matmul_exec(x: &Tensor, w: &Tensor, pool: Option<&ThreadPool>)
+                   -> Tensor {
     let (b, d) = (x.shape()[0], x.shape()[1]);
     let (wd, n) = (w.shape()[0], w.shape()[1]);
     assert_eq!(d, wd, "matmul inner dim: {d} vs {wd}");
     let xs = x.as_f32();
     let ws = w.as_f32();
     let mut out = vec![0f32; b * n];
-    for i in 0..b {
-        let xrow = &xs[i * d..(i + 1) * d];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
+    let pool = pool.filter(|p| {
+        p.threads() > 1 && b * d * n >= PAR_MIN_WORK
+            && !ThreadPool::on_worker_thread()
+    });
+    match pool {
+        Some(p) if b >= p.threads() => {
+            // deep batch: contiguous row blocks
+            let pieces = (p.threads() * TILES_PER_WORKER).min(b);
+            let span = b.div_ceil(pieces);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(b.div_ceil(span));
+            for (ti, orows) in out.chunks_mut(span * n).enumerate() {
+                jobs.push(Box::new(move || {
+                    mm_rows(xs, ws, orows, ti * span, d, n);
+                }));
             }
-            let wrow = &ws[kk * n..(kk + 1) * n];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
+            p.scoped_run(jobs);
+        }
+        Some(p) => {
+            // shallow batch: column blocks into per-tile buffers
+            let pieces = (p.threads() * TILES_PER_WORKER).min(n);
+            let span = n.div_ceil(pieces);
+            let nblocks = n.div_ceil(span);
+            let mut blocks: Vec<Vec<f32>> = (0..nblocks)
+                .map(|ti| {
+                    let width = span.min(n - ti * span);
+                    vec![0f32; b * width]
+                })
+                .collect();
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(nblocks);
+            for (ti, oblock) in blocks.iter_mut().enumerate() {
+                jobs.push(Box::new(move || {
+                    mm_cols(xs, ws, oblock, b, d, n, ti * span);
+                }));
+            }
+            p.scoped_run(jobs);
+            for (ti, oblock) in blocks.iter().enumerate() {
+                let (c0, width) = (ti * span, oblock.len() / b);
+                for i in 0..b {
+                    out[i * n + c0..i * n + c0 + width]
+                        .copy_from_slice(&oblock[i * width..(i + 1) * width]);
+                }
             }
         }
+        None => mm_rows(xs, ws, &mut out, 0, d, n),
     }
     Tensor::f32(&[b, n], out)
 }
@@ -81,19 +211,30 @@ pub fn rms_norm(x: &Tensor, w: &Tensor, eps: f64) -> Tensor {
     Tensor::f32(&[b, d], out)
 }
 
-/// RoPE (half-split), matching `model.rope`: x `[B, n, dh]`, pos `[B]`.
-pub fn rope(x: &mut Tensor, pos: &[i32], theta: f64) {
+/// RoPE inverse-frequency table: `freq[j] = theta^(-j/half)` for
+/// `j < half = dh/2`. Compute once per model (it only depends on the
+/// architecture) and reuse via [`rope_with`] — the old per-element
+/// `powf` was ~30 transcendental ops per rotated pair.
+pub fn rope_inv_freq(dh: usize, theta: f64) -> Vec<f64> {
+    let half = dh / 2;
+    (0..half)
+        .map(|j| theta.powf(-(j as f64) / half as f64))
+        .collect()
+}
+
+/// RoPE (half-split) with a precomputed [`rope_inv_freq`] table.
+pub fn rope_with(x: &mut Tensor, pos: &[i32], freqs: &[f64]) {
     let shape = x.shape().to_vec();
     let (b, n, dh) = (shape[0], shape[1], shape[2]);
     assert_eq!(pos.len(), b);
     let half = dh / 2;
+    assert_eq!(freqs.len(), half, "rope freq table length");
     let xs = x.as_f32_mut();
     for i in 0..b {
         let p = pos[i] as f64;
         for h in 0..n {
             let base = (i * n + h) * dh;
-            for j in 0..half {
-                let freq = theta.powf(-(j as f64) / half as f64);
+            for (j, &freq) in freqs.iter().enumerate() {
                 let ang = p * freq;
                 let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
                 let x1 = xs[base + j];
@@ -103,6 +244,12 @@ pub fn rope(x: &mut Tensor, pos: &[i32], theta: f64) {
             }
         }
     }
+}
+
+/// RoPE (half-split), matching `model.rope`: x `[B, n, dh]`, pos `[B]`.
+pub fn rope(x: &mut Tensor, pos: &[i32], theta: f64) {
+    let freqs = rope_inv_freq(x.shape()[2], theta);
+    rope_with(x, pos, &freqs);
 }
 
 /// Token embedding: tokens i32`[B]` × emb `[V,d]` → `[B,d]`.
@@ -123,13 +270,34 @@ pub fn embed(tokens: &Tensor, emb: &Tensor) -> Tensor {
 pub fn qkv(cfg: &ModelConfig, x: &Tensor, attn_norm: &Tensor, wq: &Tensor,
            wk: &Tensor, wv: &Tensor, pos: &[i32])
            -> (Tensor, Tensor, Tensor) {
+    qkv_exec(cfg, x, attn_norm, wq, wk, wv, pos, None, None)
+}
+
+/// [`qkv`] with an optional execution pool and precomputed RoPE table.
+#[allow(clippy::too_many_arguments)]
+pub fn qkv_exec(cfg: &ModelConfig, x: &Tensor, attn_norm: &Tensor,
+                wq: &Tensor, wk: &Tensor, wv: &Tensor, pos: &[i32],
+                freqs: Option<&[f64]>, pool: Option<&ThreadPool>)
+                -> (Tensor, Tensor, Tensor) {
     let b = x.shape()[0];
     let xn = rms_norm(x, attn_norm, cfg.rms_eps);
-    let mut q = matmul(&xn, wq).reshaped(&[b, cfg.n_heads, cfg.head_dim]);
-    let mut k = matmul(&xn, wk).reshaped(&[b, cfg.n_kv_heads, cfg.head_dim]);
-    let v = matmul(&xn, wv).reshaped(&[b, cfg.n_kv_heads, cfg.head_dim]);
-    rope(&mut q, pos, cfg.rope_theta);
-    rope(&mut k, pos, cfg.rope_theta);
+    let mut q =
+        matmul_exec(&xn, wq, pool).reshaped(&[b, cfg.n_heads, cfg.head_dim]);
+    let mut k = matmul_exec(&xn, wk, pool)
+        .reshaped(&[b, cfg.n_kv_heads, cfg.head_dim]);
+    let v = matmul_exec(&xn, wv, pool)
+        .reshaped(&[b, cfg.n_kv_heads, cfg.head_dim]);
+    match freqs {
+        Some(f) => {
+            rope_with(&mut q, pos, f);
+            rope_with(&mut k, pos, f);
+        }
+        None => {
+            let f = rope_inv_freq(cfg.head_dim, cfg.rope_theta);
+            rope_with(&mut q, pos, &f);
+            rope_with(&mut k, pos, &f);
+        }
+    }
     (q, k, v)
 }
 
@@ -138,31 +306,37 @@ pub fn qkv(cfg: &ModelConfig, x: &Tensor, attn_norm: &Tensor, wq: &Tensor,
 /// chunk base position, valid length. Returns unnormalized partials.
 pub fn chunk_attn(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
                   k_base: i32, valid: i32) -> Partials {
-    let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
-    let (c, hkv, _) = (k.shape()[0], k.shape()[1], k.shape()[2]);
+    chunk_attn_exec(q, k, v, q_pos, k_base, valid, None)
+}
+
+/// Worker for one contiguous span of flattened `(query-row, head)` rows
+/// `[r0, r0+rows)`: `o`/`m`/`l` are the span's disjoint output slices
+/// (span-local indexing), pre-filled with the LSE identity. Score rows
+/// use the per-worker thread-local scratch; the per-row reduction order
+/// is exactly the serial kernel's.
+#[allow(clippy::too_many_arguments)]
+fn chunk_attn_rows(qs: &[f32], ks: &[f32], vs: &[f32], q_pos: &[i32],
+                   k_base: i32, valid: i32, h: usize, dh: usize,
+                   hkv: usize, c: usize, r0: usize, o: &mut [f32],
+                   m: &mut [f32], l: &mut [f32]) {
     let group = h / hkv;
     let scale = 1.0 / (dh as f32).sqrt();
-    let qs = q.as_f32();
-    let ks = k.as_f32();
-    let vs = v.as_f32();
-
-    let mut o = vec![0f32; b * h * dh];
-    let mut m = vec![f32::NEG_INFINITY; b * h];
-    let mut l = vec![0f32; b * h];
-    let mut scores = vec![0f32; c];
-
-    for bi in 0..b {
-        let qp = q_pos[bi];
-        if qp < 0 {
-            continue; // padding row: identity partial
-        }
-        // visible key range within the chunk (keys are positionally
-        // contiguous: key j has absolute position k_base + j)
-        let vis = ((qp - k_base + 1).clamp(0, valid)) as usize;
-        if vis == 0 {
-            continue;
-        }
-        for hi in 0..h {
+    let rows = m.len();
+    ATTN_SCORES.with(|cell| {
+        let mut scores = cell.borrow_mut();
+        scores.resize(c, 0.0);
+        for r in 0..rows {
+            let (bi, hi) = ((r0 + r) / h, (r0 + r) % h);
+            let qp = q_pos[bi];
+            if qp < 0 {
+                continue; // padding row: identity partial
+            }
+            // visible key range within the chunk (keys are positionally
+            // contiguous: key j has absolute position k_base + j)
+            let vis = ((qp - k_base + 1).clamp(0, valid)) as usize;
+            if vis == 0 {
+                continue;
+            }
             let kv = hi / group;
             let qrow = &qs[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
             let mut mx = f32::NEG_INFINITY;
@@ -175,7 +349,7 @@ pub fn chunk_attn(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
                 mx = mx.max(s);
             }
             let mut li = 0f32;
-            let orow = &mut o[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
+            let orow = &mut o[r * dh..(r + 1) * dh];
             for j in 0..vis {
                 let p = (scores[j] - mx).exp();
                 li += p;
@@ -184,9 +358,53 @@ pub fn chunk_attn(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
                     *oo += p * vv;
                 }
             }
-            m[bi * h + hi] = mx;
-            l[bi * h + hi] = li;
+            m[r] = mx;
+            l[r] = li;
         }
+    });
+}
+
+/// [`chunk_attn`] fanned out over `(query-row, head)` tile spans when a
+/// pool is given and the call is big enough. Bit-identical to serial.
+pub fn chunk_attn_exec(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
+                       k_base: i32, valid: i32, pool: Option<&ThreadPool>)
+                       -> Partials {
+    let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let (c, hkv, _) = (k.shape()[0], k.shape()[1], k.shape()[2]);
+    let qs = q.as_f32();
+    let ks = k.as_f32();
+    let vs = v.as_f32();
+
+    let mut o = vec![0f32; b * h * dh];
+    let mut m = vec![f32::NEG_INFINITY; b * h];
+    let mut l = vec![0f32; b * h];
+
+    let rows = b * h;
+    let work = rows * valid.max(0) as usize * dh;
+    let pool = pool.filter(|p| {
+        p.threads() > 1 && rows > 1 && work >= PAR_MIN_WORK
+            && !ThreadPool::on_worker_thread()
+    });
+    match pool {
+        Some(p) => {
+            let pieces = (p.threads() * TILES_PER_WORKER).min(rows);
+            let span = rows.div_ceil(pieces);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(rows.div_ceil(span));
+            for ((ti, oc), (mc, lc)) in o
+                .chunks_mut(span * dh)
+                .enumerate()
+                .zip(m.chunks_mut(span).zip(l.chunks_mut(span)))
+            {
+                jobs.push(Box::new(move || {
+                    chunk_attn_rows(qs, ks, vs, q_pos, k_base, valid, h, dh,
+                                    hkv, c, ti * span, oc, mc, lc);
+                }));
+            }
+            p.scoped_run(jobs);
+        }
+        None => chunk_attn_rows(qs, ks, vs, q_pos, k_base, valid, h, dh,
+                                hkv, c, 0, &mut o, &mut m, &mut l),
     }
     Partials {
         o: Tensor::f32(&[b, h, dh], o),
@@ -200,24 +418,32 @@ pub fn chunk_attn(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
 pub fn post(cfg: &ModelConfig, attn_o: &Tensor, x: &Tensor, wo: &Tensor,
             ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor)
             -> Tensor {
+    post_exec(cfg, attn_o, x, wo, ffn_norm, w1, w3, w2, None)
+}
+
+/// [`post`] with the projection/FFN matmuls on the pool.
+#[allow(clippy::too_many_arguments)]
+pub fn post_exec(cfg: &ModelConfig, attn_o: &Tensor, x: &Tensor,
+                 wo: &Tensor, ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor,
+                 w2: &Tensor, pool: Option<&ThreadPool>) -> Tensor {
     let b = x.shape()[0];
     let flat = attn_o.clone().reshaped(&[b, cfg.q_dim()]);
-    let proj = matmul(&flat, wo);
+    let proj = matmul_exec(&flat, wo, pool);
     let mut h = vec![0f32; b * cfg.d_model];
     for (i, (xv, pv)) in x.as_f32().iter().zip(proj.as_f32()).enumerate() {
         h[i] = xv + pv;
     }
     let h = Tensor::f32(&[b, cfg.d_model], h);
     let hn = rms_norm(&h, ffn_norm, cfg.rms_eps);
-    let a = matmul(&hn, w1);
-    let g = matmul(&hn, w3);
+    let a = matmul_exec(&hn, w1, pool);
+    let g = matmul_exec(&hn, w3, pool);
     let mut act = vec![0f32; b * cfg.ffn_dim];
     for (i, (&av, &gv)) in a.as_f32().iter().zip(g.as_f32()).enumerate() {
         // silu(a) * g
         let s = av / (1.0 + (-av).exp());
         act[i] = s * gv;
     }
-    let ffn = matmul(&Tensor::f32(&[b, cfg.ffn_dim], act), w2);
+    let ffn = matmul_exec(&Tensor::f32(&[b, cfg.ffn_dim], act), w2, pool);
     let mut out = vec![0f32; b * cfg.d_model];
     for (i, (hv, fv)) in h.as_f32().iter().zip(ffn.as_f32()).enumerate() {
         out[i] = hv + fv;
@@ -228,29 +454,67 @@ pub fn post(cfg: &ModelConfig, attn_o: &Tensor, x: &Tensor, wo: &Tensor,
 /// Final norm + LM head (artifact `lm_head_b*`).
 pub fn lm_head(cfg: &ModelConfig, x: &Tensor, final_norm: &Tensor,
                w_lm: &Tensor) -> Tensor {
-    matmul(&rms_norm(x, final_norm, cfg.rms_eps), w_lm)
+    lm_head_exec(cfg, x, final_norm, w_lm, None)
+}
+
+/// [`lm_head`] with the vocab projection on the pool.
+pub fn lm_head_exec(cfg: &ModelConfig, x: &Tensor, final_norm: &Tensor,
+                    w_lm: &Tensor, pool: Option<&ThreadPool>) -> Tensor {
+    matmul_exec(&rms_norm(x, final_norm, cfg.rms_eps), w_lm, pool)
 }
 
 /// Router scoring (artifact `router_b*_c*`): mean over query heads of
 /// `q_h · emb_{c, kv(h)}`.
 pub fn router_score(q: &Tensor, embs: &Tensor) -> Tensor {
+    router_score_exec(q, embs, None)
+}
+
+/// Worker for one contiguous span of flattened `(row, chunk)` score
+/// cells `[r0, r0+out.len())` (span-local indexing in `out`).
+fn router_cells(qs: &[f32], es: &[f32], h: usize, dh: usize, hkv: usize,
+                c: usize, r0: usize, out: &mut [f32]) {
+    let group = h / hkv;
+    for (idx, slot) in out.iter_mut().enumerate() {
+        let (bi, ci) = ((r0 + idx) / c, (r0 + idx) % c);
+        let mut acc = 0f32;
+        for hi in 0..h {
+            let kv = hi / group;
+            let qrow = &qs[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
+            let erow = &es[(ci * hkv + kv) * dh..(ci * hkv + kv + 1) * dh];
+            acc += qrow.iter().zip(erow).map(|(a, b)| a * b).sum::<f32>();
+        }
+        *slot = acc / h as f32;
+    }
+}
+
+/// [`router_score`] fanned out over `(row, chunk)` cell spans when a pool
+/// is given and the score matrix is big enough. Bit-identical to serial.
+pub fn router_score_exec(q: &Tensor, embs: &Tensor,
+                         pool: Option<&ThreadPool>) -> Tensor {
     let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
     let (c, hkv, _) = (embs.shape()[0], embs.shape()[1], embs.shape()[2]);
-    let group = h / hkv;
     let qs = q.as_f32();
     let es = embs.as_f32();
     let mut out = vec![0f32; b * c];
-    for bi in 0..b {
-        for ci in 0..c {
-            let mut acc = 0f32;
-            for hi in 0..h {
-                let kv = hi / group;
-                let qrow = &qs[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
-                let erow = &es[(ci * hkv + kv) * dh..(ci * hkv + kv + 1) * dh];
-                acc += qrow.iter().zip(erow).map(|(a, b)| a * b).sum::<f32>();
+    let cells = b * c;
+    let pool = pool.filter(|p| {
+        p.threads() > 1 && cells > 1 && cells * h * dh >= PAR_MIN_WORK
+            && !ThreadPool::on_worker_thread()
+    });
+    match pool {
+        Some(p) => {
+            let pieces = (p.threads() * TILES_PER_WORKER).min(cells);
+            let span = cells.div_ceil(pieces);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(cells.div_ceil(span));
+            for (ti, oc) in out.chunks_mut(span).enumerate() {
+                jobs.push(Box::new(move || {
+                    router_cells(qs, es, h, dh, hkv, c, ti * span, oc);
+                }));
             }
-            out[bi * c + ci] = acc / h as f32;
+            p.scoped_run(jobs);
         }
+        None => router_cells(qs, es, h, dh, hkv, c, 0, &mut out),
     }
     Tensor::f32(&[b, c], out)
 }
@@ -296,9 +560,17 @@ pub fn merge2_row_into(dst: &mut Partials, dst_row: usize, src: &Partials,
     let s0 = src_row * h;
     let sm = src.m.as_f32();
     let sl = src.l.as_f32();
-    // first pass: scales per head
-    let mut scales = [0f32; 64]; // h*2 scratch; tiny-model h ≤ 32
-    assert!(h * 2 <= scales.len(), "head count too large for scratch");
+    // first pass: scales per head. Stack scratch covers h ≤ 32; larger
+    // models (e.g. 70B-class configs with 64 query heads) fall back to a
+    // heap buffer instead of aborting.
+    let mut stack = [0f32; 64];
+    let mut heap: Vec<f32>;
+    let scales: &mut [f32] = if h * 2 <= stack.len() {
+        &mut stack[..h * 2]
+    } else {
+        heap = vec![0f32; h * 2];
+        &mut heap
+    };
     for i in 0..h {
         let (m1, m2) = (dm[d0 + i], sm[s0 + i]);
         let mn = m1.max(m2);
@@ -451,6 +723,97 @@ mod tests {
         let fa = finalize(&whole);
         let fb = finalize(&merged);
         assert!(fa.max_abs_diff(&fb) < 1e-5, "{}", fa.max_abs_diff(&fb));
+    }
+
+    #[test]
+    fn merge2_row_into_many_heads_uses_heap_scratch() {
+        // regression: h > 32 used to abort on the fixed [f32; 64] scratch
+        let mut rng = Rng::new(40);
+        let (b, h, dh) = (2, 40, 8);
+        let q = rand_t(&mut rng, &[b, h, dh]);
+        let k = rand_t(&mut rng, &[16, 8, dh]);
+        let v = rand_t(&mut rng, &[16, 8, dh]);
+        let p1 = chunk_attn(&q, &k, &v, &[100, 200], 0, 16);
+        let k2 = rand_t(&mut rng, &[16, 8, dh]);
+        let v2 = rand_t(&mut rng, &[16, 8, dh]);
+        let p2 = chunk_attn(&q, &k2, &v2, &[100, 200], 16, 16);
+        // row-wise in-place merge must equal the full merge2
+        let mut acc = p1.clone();
+        for row in 0..b {
+            merge2_row_into(&mut acc, row, &p2, row);
+        }
+        let want = merge2(&p1, &p2);
+        assert!(acc.o.max_abs_diff(&want.o) < 1e-6);
+        assert!(acc.m.max_abs_diff(&want.m) < 1e-6);
+        assert!(acc.l.max_abs_diff(&want.l) < 1e-6);
+    }
+
+    /// The determinism contract: parallel tiled kernels are bit-identical
+    /// to the scalar reference across random shapes and thread counts.
+    #[test]
+    fn parallel_kernels_bit_identical() {
+        use crate::util::threadpool::ThreadPool;
+        let mut rng = Rng::new(0xBEEF);
+        for &threads in &[2usize, 3, 5, 8] {
+            let pool = ThreadPool::new(threads);
+            for _round in 0..4 {
+                // shapes chosen to cross the parallel work threshold AND
+                // to leave ragged tails (non-divisible spans)
+                let b = 1 + rng.below(7) as usize;
+                let hkv = [1usize, 2, 4][rng.below(3) as usize];
+                let group = 1 + rng.below(3) as usize;
+                let h = hkv * group;
+                let dh = [8usize, 16][rng.below(2) as usize];
+                let c = 48 + rng.below(80) as usize;
+
+                // matmul (deep + shallow paths)
+                let d = 64 + rng.below(64) as usize;
+                let n = 96 + rng.below(96) as usize;
+                let x = rand_t(&mut rng, &[b, d]);
+                let w = rand_t(&mut rng, &[d, n]);
+                let serial = matmul(&x, &w);
+                let par = matmul_exec(&x, &w, Some(&pool));
+                assert_eq!(serial, par, "matmul b={b} d={d} n={n}");
+                let x1 = rand_t(&mut rng, &[1, d]);
+                assert_eq!(matmul(&x1, &w),
+                           matmul_exec(&x1, &w, Some(&pool)),
+                           "matmul col-split d={d} n={n}");
+
+                // chunk_attn (with padding + partially visible rows)
+                let q = rand_t(&mut rng, &[b, h, dh]);
+                let k = rand_t(&mut rng, &[c, hkv, dh]);
+                let v = rand_t(&mut rng, &[c, hkv, dh]);
+                let mut q_pos: Vec<i32> = (0..b)
+                    .map(|_| rng.below(2 * c as u64) as i32 - 4)
+                    .collect();
+                if b > 1 {
+                    q_pos[0] = -1; // padding row
+                }
+                let serial = chunk_attn(&q, &k, &v, &q_pos, 0, c as i32);
+                let par = chunk_attn_exec(&q, &k, &v, &q_pos, 0, c as i32,
+                                          Some(&pool));
+                assert_eq!(serial.o, par.o, "chunk_attn o b={b} h={h} c={c}");
+                assert_eq!(serial.m, par.m, "chunk_attn m b={b} h={h} c={c}");
+                assert_eq!(serial.l, par.l, "chunk_attn l b={b} h={h} c={c}");
+
+                // router_score
+                let embs = rand_t(&mut rng, &[c, hkv, dh]);
+                assert_eq!(router_score(&q, &embs),
+                           router_score_exec(&q, &embs, Some(&pool)),
+                           "router b={b} h={h} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn rope_with_table_matches_rope() {
+        let mut rng = Rng::new(41);
+        let mut a = rand_t(&mut rng, &[2, 4, 16]);
+        let mut b = a.clone();
+        rope(&mut a, &[7, 123], 10000.0);
+        let freqs = rope_inv_freq(16, 10000.0);
+        rope_with(&mut b, &[7, 123], &freqs);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -262,6 +262,7 @@ pub fn run_server(args: &Args) -> Result<()> {
         Some(a) => a.to_string(),
     };
     let (engine, _svc) = if let Some(serving) = file_cfg.serving.clone() {
+        let mut serving = serving;
         let dir = match args.get("artifacts") {
             Some("") | None => file_cfg.artifacts.clone().unwrap_or_else(
                 crate::runtime::artifact::default_artifacts_dir,
@@ -275,6 +276,12 @@ pub fn run_server(args: &Args) -> Result<()> {
                 .unwrap_or_else(|| "xla".to_string()),
             Some(b) => b.to_string(),
         };
+        // CLI --threads overrides the file value (0/auto is the CLI
+        // default sentinel, so only an explicit non-zero count wins)
+        let threads = args.usize("threads")?;
+        if threads > 0 {
+            serving.exec_threads = threads;
+        }
         crate::engine::build_engine(&dir, &backend, serving)?
     } else {
         build_engine_from_args(args)?

@@ -1,9 +1,21 @@
 //! Fixed-size thread pool (rayon/tokio substitute).
 //!
 //! Powers the disaggregated node simulation (each node = a worker with its
-//! own mailbox) and the HTTP server's connection handling. Supports both
-//! fire-and-forget `spawn` and fork-join `scope`-style `map` execution.
+//! own mailbox), the HTTP server's connection handling, and — via
+//! [`ThreadPool::scoped_run`] — the parallel native execution layer (the
+//! tiled kernels in [`runtime::native`][crate::runtime::native] and the
+//! engine's per-request decode fan-out). Supports fire-and-forget `spawn`,
+//! fork-join `map`, and borrow-friendly `scoped_run` execution.
+//!
+//! ## Determinism contract
+//!
+//! `scoped_run` never reorders *writes within a job*: callers hand each
+//! job a disjoint `&mut` output region and keep all floating-point
+//! reduction order inside a job identical to the scalar reference, so
+//! parallel output is bit-identical to serial output regardless of thread
+//! count or scheduling.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -14,6 +26,27 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 enum Msg {
     Run(Job),
     Shutdown,
+}
+
+thread_local! {
+    /// Set on pool worker threads; `scoped_run` uses it to run nested
+    /// fork-joins inline instead of deadlocking on its own pool.
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Decrements the in-flight count when dropped — panic-safe, so a job
+/// that unwinds can never wedge `wait_idle`.
+struct FlightGuard<'a>(&'a (Mutex<usize>, Condvar));
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        let (m, cv) = self.0;
+        let mut n = m.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            cv.notify_all();
+        }
+    }
 }
 
 /// A fixed pool of worker threads consuming a shared queue.
@@ -37,22 +70,29 @@ impl ThreadPool {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("moska-worker-{i}"))
-                    .spawn(move || loop {
-                        let msg = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match msg {
-                            Ok(Msg::Run(job)) => {
-                                job();
-                                let (m, cv) = &*fly;
-                                let mut n = m.lock().unwrap();
-                                *n -= 1;
-                                if *n == 0 {
-                                    cv.notify_all();
+                    .spawn(move || {
+                        IS_POOL_WORKER.with(|f| f.set(true));
+                        loop {
+                            let msg = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match msg {
+                                Ok(Msg::Run(job)) => {
+                                    let _guard = FlightGuard(&*fly);
+                                    // keep the worker alive across job
+                                    // panics: a dead worker would leave
+                                    // the queue draining slower (or not
+                                    // at all) for later fork-joins. The
+                                    // default hook still reports the
+                                    // panic; scoped_run re-raises its
+                                    // own jobs' panics on the caller.
+                                    let _ = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(job),
+                                    );
                                 }
+                                Ok(Msg::Shutdown) | Err(_) => break,
                             }
-                            Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
                     .expect("spawn worker"),
@@ -81,6 +121,100 @@ impl ThreadPool {
         let mut n = m.lock().unwrap();
         while *n > 0 {
             n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// True when the current thread is one of this process's pool workers.
+    pub fn on_worker_thread() -> bool {
+        IS_POOL_WORKER.with(|f| f.get())
+    }
+
+    /// Resolve a configured thread count: explicit value > `MOSKA_THREADS`
+    /// env > machine size minus a margin. `0` means "auto"; the result is
+    /// always ≥ 1, and `1` means "serial" to every consumer.
+    pub fn resolve_threads(configured: usize) -> usize {
+        if configured > 0 {
+            return configured;
+        }
+        if let Ok(s) = std::env::var("MOSKA_THREADS") {
+            if let Ok(n) = s.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .saturating_sub(2)
+            .max(2)
+    }
+
+    /// Fork-join over borrowed data: run every job on the pool and return
+    /// once all have finished. Jobs may borrow from the caller's stack
+    /// (each typically owns a disjoint `&mut` output region obtained via
+    /// `split_at_mut`/`chunks_mut`), which is what the tiled kernels in
+    /// [`runtime::native`][crate::runtime::native] need.
+    ///
+    /// Runs inline (serially, in order) when called from a pool worker —
+    /// nested fork-join would otherwise deadlock — or when there is
+    /// nothing to parallelize. The barrier counts only *this call's*
+    /// jobs, so concurrent `scoped_run`s sharing one pool don't block on
+    /// each other's work. A panicking job is re-raised here on the
+    /// caller's thread after the barrier, never on a worker.
+    pub fn scoped_run<'scope>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+    ) {
+        if jobs.len() <= 1 || self.threads() == 1 || Self::on_worker_thread()
+        {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        type Panic = Box<dyn std::any::Any + Send>;
+        struct ScopeSync {
+            left: Mutex<usize>,
+            done: Condvar,
+            panicked: Mutex<Option<Panic>>,
+        }
+        let sync = Arc::new(ScopeSync {
+            left: Mutex::new(jobs.len()),
+            done: Condvar::new(),
+            panicked: Mutex::new(None),
+        });
+        for job in jobs {
+            // SAFETY: the barrier below blocks until every job queued by
+            // THIS call has run to completion, so no job (nor anything it
+            // borrows) outlives `'scope`. The per-call counter is
+            // decremented after `catch_unwind`, which cannot be skipped
+            // by a panicking job.
+            let job: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(job) };
+            let sync = Arc::clone(&sync);
+            self.spawn(move || {
+                let r = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(job),
+                );
+                if let Err(p) = r {
+                    *sync.panicked.lock().unwrap() = Some(p);
+                }
+                let mut left = sync.left.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    sync.done.notify_all();
+                }
+            });
+        }
+        let mut left = sync.left.lock().unwrap();
+        while *left > 0 {
+            left = sync.done.wait(left).unwrap();
+        }
+        drop(left);
+        let p = sync.panicked.lock().unwrap().take();
+        if let Some(p) = p {
+            std::panic::resume_unwind(p);
         }
     }
 
@@ -167,5 +301,85 @@ mod tests {
         let a = next_id();
         let b = next_id();
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn scoped_run_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let input: Vec<u64> = (0..64).collect();
+        let mut out = vec![0u64; 64];
+        {
+            let input = &input;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(16)
+                .enumerate()
+                .map(|(ti, chunk)| {
+                    let job: Box<dyn FnOnce() + Send + '_> =
+                        Box::new(move || {
+                            for (i, o) in chunk.iter_mut().enumerate() {
+                                *o = input[ti * 16 + i] * 3;
+                            }
+                        });
+                    job
+                })
+                .collect();
+            pool.scoped_run(jobs);
+        }
+        assert_eq!(out, (0..64).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_run_nested_runs_inline() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let counter = Arc::new(AtomicU64::new(0));
+        let (p, c) = (Arc::clone(&pool), Arc::clone(&counter));
+        // outer job on the pool spawns an inner scoped_run — must not
+        // deadlock (inner runs inline on the worker)
+        pool.spawn(move || {
+            let cc = Arc::clone(&c);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|_| {
+                    let cc = Arc::clone(&cc);
+                    let job: Box<dyn FnOnce() + Send + '_> =
+                        Box::new(move || {
+                            cc.fetch_add(1, Ordering::Relaxed);
+                        });
+                    job
+                })
+                .collect();
+            p.scoped_run(jobs);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn scoped_run_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    let job: Box<dyn FnOnce() + Send + '_> =
+                        Box::new(move || {
+                            if i == 2 {
+                                panic!("boom");
+                            }
+                        });
+                    job
+                })
+                .collect();
+            pool.scoped_run(jobs);
+        }));
+        assert!(r.is_err(), "worker panic must surface on the caller");
+        // the pool must still be usable afterwards
+        let out = pool.map(vec![1usize, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn resolve_threads_explicit_wins() {
+        assert_eq!(ThreadPool::resolve_threads(3), 3);
+        assert_eq!(ThreadPool::resolve_threads(1), 1);
+        assert!(ThreadPool::resolve_threads(0) >= 1);
     }
 }

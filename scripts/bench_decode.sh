@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# Decode-throughput perf gate: runs the e2e_serving bench (native
+# parallel-decode section needs no artifacts) and drops the perf
+# trajectory at BENCH_decode.json in the repo root, so successive PRs
+# can compare tokens/sec and the serial→parallel speedup.
+#
+# Also runs `cargo fmt --check` and `cargo clippy -- -D warnings` when
+# those components are installed. Lint failures are reported and, with
+# --strict, fatal; the bench result is always the exit-status gate.
+#
+# Usage: scripts/bench_decode.sh [--strict]
+
+set -u
+cd "$(dirname "$0")/.."
+
+STRICT=0
+[ "${1:-}" = "--strict" ] && STRICT=1
+
+# the cargo workspace lives under rust/ (fall back to repo root)
+WORKDIR=.
+if [ -f rust/Cargo.toml ]; then
+    WORKDIR=rust
+elif [ ! -f Cargo.toml ] && [ -d rust ]; then
+    WORKDIR=rust
+fi
+cd "$WORKDIR"
+
+LINT_RC=0
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check || LINT_RC=1
+else
+    echo "cargo fmt not installed — skipping format check"
+fi
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings =="
+    cargo clippy --all-targets -- -D warnings || LINT_RC=1
+else
+    echo "cargo clippy not installed — skipping lint"
+fi
+if [ $LINT_RC -ne 0 ]; then
+    echo "lint problems found$( [ $STRICT -eq 1 ] && echo ' (strict: failing)' )"
+    [ $STRICT -eq 1 ] && exit 1
+fi
+
+echo "== e2e_serving bench (native decode section) =="
+cargo bench --bench e2e_serving || exit 1
+
+OUT=bench_out/BENCH_decode.json
+if [ -f "$OUT" ]; then
+    cp "$OUT" ../BENCH_decode.json 2>/dev/null || cp "$OUT" BENCH_decode.json
+    echo "perf trajectory:"
+    cat "$OUT"
+    echo
+else
+    echo "error: $OUT was not produced" >&2
+    exit 1
+fi
