@@ -68,10 +68,22 @@ fn native_engine(threads: usize) -> Engine {
     eng
 }
 
-/// Run the decode workload; returns (tokens/sec, gemm batching factor,
-/// per-request token streams ordered by request id).
-fn run_native(threads: usize, n_req: usize, steps: usize)
-              -> (f64, f64, Vec<Vec<i32>>) {
+/// One decode run's measurements.
+struct NativeRun {
+    tok_per_s: f64,
+    gemm_n: f64,
+    streams: Vec<Vec<i32>>,
+    /// Step-arena peak bytes (gather/partial/merge staging).
+    arena_high_water: usize,
+    /// Fresh arena allocations across the whole run (flat ⇒ steady-state
+    /// decode allocates nothing on arena-managed paths).
+    arena_fresh_allocs: u64,
+    /// Mean StepPlan build time per decode step (ns).
+    plan_build_mean_ns: f64,
+}
+
+/// Run the decode workload at a thread count.
+fn run_native(threads: usize, n_req: usize, steps: usize) -> NativeRun {
     let mut eng = native_engine(threads);
     for i in 0..n_req {
         let p: Vec<i32> = (0..8)
@@ -85,7 +97,18 @@ fn run_native(threads: usize, n_req: usize, steps: usize)
     let toks: usize = results.iter().map(|r| r.tokens.len()).sum();
     results.sort_by_key(|r| r.id);
     let streams = results.into_iter().map(|r| r.tokens).collect();
-    (toks as f64 / dt, eng.batching_factor(), streams)
+    NativeRun {
+        tok_per_s: toks as f64 / dt,
+        gemm_n: eng.batching_factor(),
+        streams,
+        arena_high_water: eng.arena_stats().high_water_bytes,
+        arena_fresh_allocs: eng.arena_stats().fresh_allocs,
+        plan_build_mean_ns: eng
+            .metrics
+            .histogram("plan_build_ns")
+            .map(|h| h.mean_ns())
+            .unwrap_or(0.0),
+    }
 }
 
 fn native_bench() {
@@ -94,15 +117,18 @@ fn native_bench() {
     println!("== native parallel decode (synthetic {}-layer model, \
               {} shared chunks) ==",
              bench_model().n_layers, SHARED_CHUNKS);
-    let (base_tps, _, base_streams) = run_native(1, n, steps);
-    println!("threads=1        : {base_tps:.1} tok/s");
-    let (par_tps, par_bn, par_streams) = run_native(auto, n, steps);
-    println!("threads={auto:<8} : {par_tps:.1} tok/s  \
-              ({:.2}x, gemm N {par_bn:.2})",
-             par_tps / base_tps);
-    assert_eq!(base_streams, par_streams,
+    let base = run_native(1, n, steps);
+    println!("threads=1        : {:.1} tok/s", base.tok_per_s);
+    let par = run_native(auto, n, steps);
+    println!("threads={auto:<8} : {:.1} tok/s  ({:.2}x, gemm N {:.2})",
+             par.tok_per_s, par.tok_per_s / base.tok_per_s, par.gemm_n);
+    assert_eq!(base.streams, par.streams,
                "parallel decode diverged from the serial baseline");
     println!("outputs           : bit-identical across thread counts");
+    println!("plan build        : {:.1}µs/step mean",
+             par.plan_build_mean_ns / 1e3);
+    println!("arena high-water  : {} bytes ({} fresh allocs total)",
+             par.arena_high_water, par.arena_fresh_allocs);
 
     std::fs::create_dir_all("bench_out").expect("bench_out dir");
     let j = Json::obj(vec![
@@ -112,11 +138,14 @@ fn native_bench() {
         ("shared_chunks", Json::num(SHARED_CHUNKS as f64)),
         ("threads_baseline", Json::num(1.0)),
         ("threads_parallel", Json::num(auto as f64)),
-        ("tok_per_s_baseline", Json::num(base_tps)),
-        ("tok_per_s_parallel", Json::num(par_tps)),
-        ("speedup", Json::num(par_tps / base_tps)),
-        ("gemm_batch_factor", Json::num(par_bn)),
+        ("tok_per_s_baseline", Json::num(base.tok_per_s)),
+        ("tok_per_s_parallel", Json::num(par.tok_per_s)),
+        ("speedup", Json::num(par.tok_per_s / base.tok_per_s)),
+        ("gemm_batch_factor", Json::num(par.gemm_n)),
         ("outputs_bit_identical", Json::num(1.0)),
+        ("arena_high_water_bytes", Json::num(par.arena_high_water as f64)),
+        ("arena_fresh_allocs", Json::num(par.arena_fresh_allocs as f64)),
+        ("plan_build_mean_ns", Json::num(par.plan_build_mean_ns)),
     ]);
     let path = "bench_out/BENCH_decode.json";
     std::fs::write(path, j.to_string()).expect("write BENCH_decode.json");

@@ -9,10 +9,13 @@
 
 use anyhow::Result;
 
-use crate::batcher::{form_batches, BatchStats};
+use crate::batcher::BatchStats;
 use crate::kvcache::paged::{PagePool, RequestKv};
 use crate::kvcache::shared_store::DomainCache;
+use crate::plan::{exec_gemm_calls, exec_unique_spans, plan_gemm_calls,
+                  plan_unique_spans};
 use crate::router::ChunkSet;
+use crate::runtime::arena::TensorArena;
 use crate::runtime::native::{self, Partials};
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
@@ -52,6 +55,26 @@ impl RowAccumulator {
         RowAccumulator { acc: Partials::identity(b, h, dh) }
     }
 
+    /// Accumulator whose identity partials come from the step arena
+    /// (decode plan-executor path) — same contents, recycled storage.
+    pub fn from_arena(arena: &mut TensorArena, b: usize, h: usize,
+                      dh: usize) -> RowAccumulator {
+        RowAccumulator { acc: arena.take_partials(b, h, dh) }
+    }
+
+    /// Return the accumulator's storage to the arena.
+    pub fn recycle_into(self, arena: &mut TensorArena) {
+        arena.recycle_partials(self.acc);
+    }
+
+    /// [`Self::finalize`] into an arena-owned output tensor.
+    pub fn finalize_with(&self, arena: &mut TensorArena) -> Tensor {
+        let shape = self.acc.o.shape().to_vec();
+        let mut out = arena.take_tensor(&shape);
+        native::finalize_into(&self.acc, out.as_f32_mut());
+        out
+    }
+
     /// Merge batch partials back into their owning rows.
     pub fn scatter(&mut self, batch_rows: &[usize], p: &Partials) {
         for (i, &slot) in batch_rows.iter().enumerate() {
@@ -62,12 +85,6 @@ impl RowAccumulator {
     /// The accumulated partials (read access).
     pub fn partials(&self) -> &Partials {
         &self.acc
-    }
-
-    /// Extract per-row partials (fabric boundaries, e.g. disagg RPC).
-    pub fn into_rows(self) -> Vec<Partials> {
-        let b = self.acc.batch();
-        (0..b).map(|i| self.acc.slice_rows(i, i + 1)).collect()
     }
 
     /// Merge row 0 of a single-row partial into row `i`.
@@ -115,76 +132,14 @@ pub fn shared_attention(
     position_independent: bool,
     max_batch: usize,
 ) -> Result<BatchStats> {
-    let chunk = domain.chunk;
-    let (batches, mut stats) = form_batches(sets, max_batch);
-    stats.chunk_reads = batches.len();
-
-    // §Perf opt 2 — run coalescing: consecutive chunks attended by the
-    // SAME query rows with contiguous base positions are concatenated
-    // into one kernel call (dense routing turns 64 calls into 4).
-    // Position-independent mode attends each chunk at local positions,
-    // so runs there would change semantics — skip coalescing.
-    let max_tokens = backend.max_attn_tokens();
-    let max_run = if position_independent { 1 } else { max_tokens / chunk };
-
-    let mut i = 0;
-    while i < batches.len() {
-        let mut j = i + 1;
-        while j < batches.len()
-            && j - i < max_run
-            && batches[j].chunk == batches[j - 1].chunk + 1
-            && batches[j].rows == batches[i].rows
-            && domain.chunk_base(batches[j].chunk)
-                == domain.chunk_base(batches[j - 1].chunk) + chunk as i32
-        {
-            j += 1;
-        }
-        let run = &batches[i..j];
-        let rows = &run[0].rows;
-        let n = rows.len();
-        let (_, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
-
-        // gather query rows once per run
-        let mut qb = Vec::with_capacity(n * h * dh);
-        let mut pb = Vec::with_capacity(n);
-        for &slot in rows {
-            qb.extend_from_slice(q.index0(slot));
-            pb.push(q_pos[slot]);
-        }
-        let qb = Tensor::f32(&[n, h, dh], qb);
-
-        // K/V for the run: zero-copy for single chunks, concat for runs
-        let run_tokens = run.len() * chunk;
-        let (p, k_base_used) = if run.len() == 1 {
-            let (k, v) = domain.chunk_kv(layer, run[0].chunk);
-            let (k_base, pos_override): (i32, Option<Vec<i32>>) =
-                if position_independent {
-                    (0, Some(vec![chunk as i32; n]))
-                } else {
-                    (domain.chunk_base(run[0].chunk), None)
-                };
-            let pos_ref = pos_override.as_deref().unwrap_or(&pb);
-            // auto-dispatch: a 1-2 row sparse batch is GEMV-sized work
-            // below the PJRT dispatch floor; real GEMM batches (the
-            // paper's regime) exceed the threshold and stay compiled
-            (backend.chunk_attn_auto(&qb, k, v, pos_ref, k_base,
-                                     chunk as i32)?, k_base)
-        } else {
-            let ks: Vec<&Tensor> =
-                run.iter().map(|b| domain.chunk_kv(layer, b.chunk).0).collect();
-            let vs: Vec<&Tensor> =
-                run.iter().map(|b| domain.chunk_kv(layer, b.chunk).1).collect();
-            let k = Tensor::concat0(&ks);
-            let v = Tensor::concat0(&vs);
-            let k_base = domain.chunk_base(run[0].chunk);
-            (backend.chunk_attn_auto(&qb, &k, &v, &pb, k_base,
-                                     run_tokens as i32)?, k_base)
-        };
-        let _ = k_base_used;
-        acc.scatter(rows, &p);
-        stats.exec_calls += 1;
-        i = j;
-    }
+    // plan (batch forming + §Perf-opt-2 run coalescing) then execute —
+    // the same two primitives the decode StepPlan uses, so prefill and
+    // decode share one batching implementation
+    let (calls, stats) = plan_gemm_calls(
+        sets, max_batch, domain.chunk, &domain.chunk_bases,
+        backend.max_attn_tokens(), position_independent,
+    );
+    exec_gemm_calls(backend, domain, layer, q, q_pos, &calls, acc, None)?;
     Ok(stats)
 }
 
@@ -199,51 +154,12 @@ pub fn unique_attention(
     q: &Tensor,
     q_pos: &[i32],
 ) -> Result<Partials> {
-    let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
-    let chunk = pool.chunk();
-    let mut acc = Partials::identity(b, h, dh);
-    // coalesce consecutive pages into one call, up to the kernel's max
-    // K/V length (pages are positionally contiguous by construction)
-    let max_run = (backend.max_attn_tokens() / chunk).max(1);
-    let n_pages = kv.page_count_layer(layer);
-    let mut p = 0;
-    while p < n_pages {
-        let run_end = (p + max_run).min(n_pages);
-        let mut valid_total = 0i32;
-        let mut last = p;
-        for pp in p..run_end {
-            let v = kv.page_valid_layer(layer, pp, chunk);
-            if v == 0 {
-                break;
-            }
-            valid_total += v;
-            last = pp + 1;
-        }
-        if valid_total == 0 {
-            break;
-        }
-        let k_base = kv.page_base(p, chunk);
-        // `chunk_attn_auto`: decode-time unique attention is tiny GEMV
-        // work and dispatches natively below the PJRT-overhead floor
-        let part = if last - p == 1 {
-            let page = pool.get(kv.pages[layer][p]);
-            backend.chunk_attn_auto(q, &page.k, &page.v, q_pos, k_base,
-                                    valid_total)?
-        } else {
-            let ks: Vec<&Tensor> = (p..last)
-                .map(|pp| &pool.get(kv.pages[layer][pp]).k)
-                .collect();
-            let vs: Vec<&Tensor> = (p..last)
-                .map(|pp| &pool.get(kv.pages[layer][pp]).v)
-                .collect();
-            let k = Tensor::concat0(&ks);
-            let v = Tensor::concat0(&vs);
-            backend.chunk_attn_auto(q, &k, &v, q_pos, k_base, valid_total)?
-        };
-        acc = native::merge2(&acc, &part);
-        p = last;
-    }
-    Ok(acc)
+    // plan the page spans (coalesced up to the kernel's max K/V length)
+    // from the layer's in-flight written length, then execute — the
+    // decode StepPlan precomputes the same spans once per step
+    let spans = plan_unique_spans(kv.layer_len(layer), kv.start_pos,
+                                  pool.chunk(), backend.max_attn_tokens());
+    exec_unique_spans(backend, pool, kv, layer, q, q_pos, &spans, None)
 }
 
 #[cfg(test)]
@@ -361,6 +277,11 @@ mod tests {
         }
         fn merge2(&self, a: &Partials, b: &Partials) -> Result<Partials> {
             self.inner.merge2(a, b)
+        }
+        fn exec_plan(&self, plan: &crate::plan::StepPlan, x: Tensor,
+                     ctx: &mut crate::plan::PlanExecCtx<'_>)
+                     -> Result<crate::plan::PlanExecOut> {
+            crate::plan::exec::execute_plan(self, plan, x, ctx)
         }
     }
 

@@ -33,8 +33,8 @@ pub struct BatchStats {
     pub calls: usize,
     /// Largest single batch.
     pub max_rows: usize,
-    /// Kernel calls actually executed after run coalescing (§Perf opt 2);
-    /// 0 until `shared_attention` fills it.
+    /// Kernel calls after run coalescing (§Perf opt 2); 0 until the
+    /// planner (`plan::plan_gemm_calls`) fills it.
     pub exec_calls: usize,
     /// Distinct chunk loads executed (each shared chunk read once per
     /// batch — the paper's bandwidth amortization denominator).

@@ -11,6 +11,7 @@
 //!   "backend":  "xla",
 //!   "artifacts": "artifacts",
 //!   "addr":     "127.0.0.1:8080",
+//!   "server":   {"max_body_bytes": 1048576, "read_timeout_ms": 10000},
 //!   "workload": {"rate": 8.0, "domain_skew": 1.1, "unique_only_frac": 0.1}
 //! }
 //! ```
@@ -29,6 +30,12 @@ pub struct FileConfig {
     pub backend: Option<String>,
     pub artifacts: Option<String>,
     pub addr: Option<String>,
+    /// HTTP acceptor body-size cap (`server.max_body_bytes`); requests
+    /// declaring more get a 413 without the payload being read.
+    pub http_max_body_bytes: Option<usize>,
+    /// HTTP acceptor read timeout in ms (`server.read_timeout_ms`);
+    /// `0` disables the timeout, stalled clients otherwise get a 408.
+    pub http_read_timeout_ms: Option<u64>,
 }
 
 impl FileConfig {
@@ -54,6 +61,14 @@ impl FileConfig {
         }
         if let Some(a) = j.opt("addr") {
             out.addr = Some(a.as_str()?.to_string());
+        }
+        if let Some(s) = j.opt("server") {
+            if let Some(v) = s.opt("max_body_bytes") {
+                out.http_max_body_bytes = Some(v.as_usize()?);
+            }
+            if let Some(v) = s.opt("read_timeout_ms") {
+                out.http_read_timeout_ms = Some(v.as_usize()? as u64);
+            }
         }
         Ok(out)
     }
@@ -152,6 +167,19 @@ mod tests {
         let c = FileConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert!(c.serving.is_none());
         assert!(c.backend.is_none());
+        assert!(c.http_max_body_bytes.is_none());
+        assert!(c.http_read_timeout_ms.is_none());
+    }
+
+    #[test]
+    fn server_limits_parse() {
+        let j = Json::parse(
+            r#"{"server": {"max_body_bytes": 65536, "read_timeout_ms": 0}}"#,
+        )
+        .unwrap();
+        let c = FileConfig::from_json(&j).unwrap();
+        assert_eq!(c.http_max_body_bytes, Some(65536));
+        assert_eq!(c.http_read_timeout_ms, Some(0));
     }
 
     #[test]

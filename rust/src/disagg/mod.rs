@@ -4,9 +4,19 @@
 //! (threads + channels standing in for the inter-node interconnect):
 //!
 //! * **Unique KV node** — embed, QKV projection, FFN, LM head, and the
-//!   per-request unique-KV attention (memory-bound GEMVs).
+//!   per-request unique-KV attention (memory-bound GEMVs). It also runs
+//!   the planner: routing + batch forming happen here, once per step.
 //! * **Shared KV node** — holds the Domain Shared KV store resident and
-//!   serves batched Shared-KV GEMM attention for routed chunk sets.
+//!   executes the [`SharedGroupPlan`]s shipped to it — **the plan is the
+//!   unit of work crossing the fabric**, so the shared node does pure
+//!   plan execution (no routing, no batch forming of its own).
+//!
+//! Each node owns its own execution resources: its own
+//! [`Backend`] (for native execution, its own `ThreadPool` via
+//! [`NativeBackend::with_pool`][crate::runtime::NativeBackend::with_pool]
+//! — the seam where the shared/unique split maps onto separate sockets /
+//! NUMA domains) and its own per-step
+//! [`TensorArena`][crate::runtime::arena::TensorArena].
 //!
 //! Each node tracks the bytes it touches and the FLOPs it executes (tiny-
 //! model op census), so `moska disagg` prints the measured analogue of
@@ -20,27 +30,32 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::attention::{shared_attention, unique_attention, RowAccumulator};
+use crate::attention::RowAccumulator;
 use crate::config::ModelConfig;
 use crate::kvcache::paged::{PagePool, RequestKv};
 use crate::kvcache::shared_store::SharedStore;
 use crate::metrics::UtilizationEstimator;
 use crate::model::Weights;
-use crate::router::{ChunkSet, Router};
+use crate::plan::{exec_gemm_calls, exec_unique_spans, plan_gemm_calls,
+                  plan_unique_spans, PageSpan, SharedGroupPlan};
+use crate::router::Router;
+use crate::runtime::arena::TensorArena;
 use crate::runtime::native::Partials;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
 use crate::util::bench::Table;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
-/// Request to the shared node: one layer's routed shared attention.
+/// Fabric message: one layer's shared-attention work, fully planned by
+/// the unique node. `q` is the step's query tensor; everything else the
+/// shared node needs (rows, positions, routed sets, formed GEMM calls)
+/// travels inside the plan.
 struct SharedReq {
     layer: usize,
-    domain: String,
     q: Tensor,
-    q_pos: Vec<i32>,
-    sets: Vec<ChunkSet>,
+    plan: SharedGroupPlan,
     reply: Sender<Result<Vec<Partials>>>,
 }
 
@@ -57,9 +72,10 @@ pub struct SharedNode {
 }
 
 impl SharedNode {
-    /// Spawn the node owning `store` and executing on `backend`.
-    pub fn spawn(backend: Arc<dyn Backend>, store: Arc<SharedStore>,
-                 max_batch: usize) -> SharedNode {
+    /// Spawn the node owning `store` and executing shipped plans on
+    /// `backend` (its own pool when native — see module docs).
+    pub fn spawn(backend: Arc<dyn Backend>, store: Arc<SharedStore>)
+                 -> SharedNode {
         let (tx, rx) = channel::<SharedReq>();
         let util = Arc::new(UtilizationEstimator::default());
         let busy = Arc::new(std::sync::atomic::AtomicU64::new(0));
@@ -73,11 +89,14 @@ impl SharedNode {
             .name("moska-shared-node".into())
             .spawn(move || {
                 u.set_bytes_resident(store.resident_bytes() as u64);
+                // node-local step arena: plan execution staging never
+                // leaves this thread
+                let mut arena = TensorArena::new();
                 while let Ok(req) = rx.recv() {
                     let t0 = Instant::now();
                     let result = serve_shared(
-                        backend.as_ref(), &store, &cfg, &req, max_batch, &u,
-                        &pa, &ca,
+                        backend.as_ref(), &store, &cfg, &req, &mut arena,
+                        &u, &pa, &ca,
                     );
                     b.fetch_add(t0.elapsed().as_nanos() as u64,
                                 Ordering::Relaxed);
@@ -88,20 +107,12 @@ impl SharedNode {
         SharedNode { tx, util, busy, pairs, calls, join: Some(join) }
     }
 
-    /// Synchronous shared-attention RPC (the fabric round trip).
-    pub fn attend(&self, layer: usize, domain: &str, q: Tensor,
-                  q_pos: Vec<i32>, sets: Vec<ChunkSet>)
+    /// Synchronous plan-execution RPC (the fabric round trip).
+    pub fn attend(&self, layer: usize, q: Tensor, plan: SharedGroupPlan)
                   -> Result<Vec<Partials>> {
         let (reply, rx) = channel();
         self.tx
-            .send(SharedReq {
-                layer,
-                domain: domain.to_string(),
-                q,
-                q_pos,
-                sets,
-                reply,
-            })
+            .send(SharedReq { layer, q, plan, reply })
             .map_err(|_| anyhow::anyhow!("shared node gone"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("shared node dropped"))?
     }
@@ -118,35 +129,39 @@ impl Drop for SharedNode {
     }
 }
 
+/// Execute a shipped [`SharedGroupPlan`] on the shared node's backend.
 #[allow(clippy::too_many_arguments)]
 fn serve_shared(backend: &dyn Backend, store: &SharedStore,
-                cfg: &ModelConfig, req: &SharedReq, max_batch: usize,
-                util: &UtilizationEstimator,
+                cfg: &ModelConfig, req: &SharedReq,
+                arena: &mut TensorArena, util: &UtilizationEstimator,
                 pairs: &std::sync::atomic::AtomicU64,
                 calls: &std::sync::atomic::AtomicU64)
                 -> Result<Vec<Partials>> {
-    let dom = store.domain(&req.domain)?;
+    let dom = store.domain(&req.plan.domain)?;
     let b = req.q.shape()[0];
-    let mut acc = RowAccumulator::identity(b, cfg.n_heads, cfg.head_dim);
-    let stats = shared_attention(
-        backend, dom, req.layer, &req.q, &req.q_pos, &req.sets, &mut acc,
-        false, max_batch,
-    )?;
+    let mut acc =
+        RowAccumulator::from_arena(arena, b, cfg.n_heads, cfg.head_dim);
+    exec_gemm_calls(backend, dom, req.layer, &req.q, &req.plan.q_pos,
+                    &req.plan.calls, &mut acc, Some(arena))?;
     // op census: each GEMM call reads one chunk of K+V once (that's the
     // whole point) and runs 2·2·H·dh·chunk flops per routed query row.
     let chunk = store.chunk;
-    let kv_bytes_per_chunk =
-        2 * chunk * cfg.n_kv_heads * cfg.head_dim * 4;
-    util.add_bytes_read((stats.calls * kv_bytes_per_chunk) as u64);
+    let kv_bytes_per_chunk = 2 * chunk * cfg.n_kv_heads * cfg.head_dim * 4;
+    util.add_bytes_read((req.plan.reads * kv_bytes_per_chunk) as u64);
     let flops_per_pair = 4 * cfg.n_heads * cfg.head_dim * chunk;
-    util.add_flops((stats.pairs * flops_per_pair) as u64);
-    pairs.fetch_add(stats.pairs as u64, Ordering::Relaxed);
-    calls.fetch_add(stats.calls as u64, Ordering::Relaxed);
-    Ok(acc.into_rows())
+    util.add_flops((req.plan.pairs * flops_per_pair) as u64);
+    pairs.fetch_add(req.plan.pairs as u64, Ordering::Relaxed);
+    calls.fetch_add(req.plan.reads as u64, Ordering::Relaxed);
+    // per-row partials cross the fabric back (copy boundary)
+    let rows = (0..b).map(|i| acc.partials().slice_rows(i, i + 1)).collect();
+    acc.recycle_into(arena);
+    Ok(rows)
 }
 
-/// The unique node + driver: owns weights, unique KV, sampling.
+/// The unique node + driver: owns weights, unique KV, sampling, and the
+/// step planner.
 pub struct DisaggCluster {
+    /// Unique node's backend (its own pool for native execution).
     pub backend: Arc<dyn Backend>,
     pub weights: Weights,
     pub shared: Arc<SharedStore>,
@@ -155,15 +170,18 @@ pub struct DisaggCluster {
     pub pool: PagePool,
     pub router: Router,
     pub max_batch: usize,
+    /// Unique node's step arena.
+    arena: TensorArena,
 }
 
 /// One simulated live request (decode-only; state seeded synthetically).
+/// The per-step routing decision lives in the shipped
+/// [`SharedGroupPlan`], not on the request.
 pub struct SimRequest {
     pub kv: RequestKv,
     pub cur: i32,
     pub pos: i32,
     pub domain: String,
-    pub routed: ChunkSet,
 }
 
 /// Per-batch-point measurements (the Fig 5 live analogue).
@@ -181,16 +199,30 @@ pub struct SimPoint {
 }
 
 impl DisaggCluster {
+    /// Both nodes on one backend (tests / smallest setup). Prefer
+    /// [`DisaggCluster::with_backends`] to give each node its own pool.
     pub fn new(backend: Arc<dyn Backend>, weights: Weights,
                shared: Arc<SharedStore>, top_k: Option<usize>,
                max_batch: usize) -> DisaggCluster {
-        let cfg = backend.model().clone();
-        let chunk = backend.chunk_size();
-        let shared_node =
-            SharedNode::spawn(Arc::clone(&backend), Arc::clone(&shared),
-                              max_batch);
+        let shared_exec = Arc::clone(&backend);
+        DisaggCluster::with_backends(backend, shared_exec, weights, shared,
+                                     top_k, max_batch)
+    }
+
+    /// Per-node execution: `unique` runs the driver/unique side, `shared
+    /// exec` is moved into the shared node thread. With native backends
+    /// built via `NativeBackend::with_pool`, each node fans out over its
+    /// own worker pool — the shared/unique split maps onto separate
+    /// sockets once pools are NUMA-pinned.
+    pub fn with_backends(unique: Arc<dyn Backend>,
+                         shared_exec: Arc<dyn Backend>, weights: Weights,
+                         shared: Arc<SharedStore>, top_k: Option<usize>,
+                         max_batch: usize) -> DisaggCluster {
+        let cfg = unique.model().clone();
+        let chunk = unique.chunk_size();
+        let shared_node = SharedNode::spawn(shared_exec, Arc::clone(&shared));
         DisaggCluster {
-            backend,
+            backend: unique,
             weights,
             shared,
             shared_node,
@@ -198,6 +230,7 @@ impl DisaggCluster {
             pool: PagePool::new(8192, chunk, cfg.n_kv_heads, cfg.head_dim),
             router: Router::new(top_k),
             max_batch,
+            arena: TensorArena::new(),
         }
     }
 
@@ -229,18 +262,21 @@ impl DisaggCluster {
                 cur: rng.below(cfg.vocab as u64) as i32,
                 pos: (shared_len + unique_tokens) as i32,
                 domain: domain.to_string(),
-                routed: ChunkSet::new(),
             });
         }
         Ok(out)
     }
 
-    /// One synchronized decode step across both nodes.
+    /// One synchronized decode step across both nodes: the unique node
+    /// plans (route + batch-form once at layer 0), ships the shared
+    /// group plan per layer, and executes its own unique-KV spans.
     pub fn step(&mut self, reqs: &mut [SimRequest]) -> Result<()> {
         let cfg = self.backend.model().clone();
         let b = reqs.len();
         let tokens = Tensor::i32(&[b], reqs.iter().map(|r| r.cur).collect());
         let pos: Vec<i32> = reqs.iter().map(|r| r.pos).collect();
+        let chunk = self.backend.chunk_size();
+        let max_tok = self.backend.max_attn_tokens();
 
         // ---- unique node: embed + weights census
         let mut x = self.backend.embed(&tokens, self.weights.embed())?;
@@ -251,56 +287,69 @@ impl DisaggCluster {
             (2 * self.weights.param_count() * b) as u64,
         );
 
+        // unique-KV page spans planned once per step (attention sees the
+        // appended token: len + 1)
+        let row_spans: Vec<Vec<PageSpan>> = reqs
+            .iter()
+            .map(|r| plan_unique_spans(r.kv.len + 1, r.kv.start_pos, chunk,
+                                       max_tok))
+            .collect();
+        let mut shared_plan: Option<SharedGroupPlan> = None;
+
         for layer in 0..cfg.n_layers {
             let lw = self.weights.layer(layer);
             let (q, k, v) = self.backend.qkv(
                 &x, lw.attn_norm, lw.wq, lw.wk, lw.wv, &pos,
             )?;
             for (i, r) in reqs.iter_mut().enumerate() {
-                let kr = Tensor::f32(
-                    &[1, cfg.n_kv_heads, cfg.head_dim],
-                    k.index0(i).to_vec(),
-                );
-                let vr = Tensor::f32(
-                    &[1, cfg.n_kv_heads, cfg.head_dim],
-                    v.index0(i).to_vec(),
-                );
-                r.kv.append_layer(&mut self.pool, layer, &kr, &vr)?;
+                r.kv.append_row_layer(&mut self.pool, layer, k.index0(i),
+                                      v.index0(i))?;
             }
 
-            // ---- route (unique node does the lightweight scoring)
-            let dom_name = reqs[0].domain.clone();
-            let dom = self.shared.domain(&dom_name)?;
-            let sets: Vec<ChunkSet> = if layer == 0 {
-                let s = self.router.route(
+            // ---- plan (unique node does the lightweight scoring, once)
+            if layer == 0 {
+                let dom_name = reqs[0].domain.clone();
+                let dom = self.shared.domain(&dom_name)?;
+                let sets = self.router.route(
                     self.backend.as_ref(), &q, dom.embeddings(layer),
                 )?;
-                for (r, set) in reqs.iter_mut().zip(&s) {
-                    r.routed = set.clone();
-                }
-                s
-            } else {
-                reqs.iter().map(|r| r.routed.clone()).collect()
-            };
-
-            // ---- fabric RPC to the shared node (GEMM side)
-            let shared_parts = self.shared_node.attend(
-                layer, &dom_name, q.clone(), pos.clone(), sets,
-            )?;
-
-            // ---- unique node: per-request GEMV attention meanwhile
-            let mut acc =
-                RowAccumulator::identity(b, cfg.n_heads, cfg.head_dim);
-            for (i, r) in reqs.iter().enumerate() {
-                let qr = Tensor::f32(
-                    &[1, cfg.n_heads, cfg.head_dim],
-                    q.index0(i).to_vec(),
+                let (calls, stats) = plan_gemm_calls(
+                    &sets, self.max_batch, dom.chunk, &dom.chunk_bases,
+                    max_tok, false,
                 );
-                let part = unique_attention(
+                shared_plan = Some(SharedGroupPlan {
+                    domain: dom_name,
+                    rows: (0..b).collect(),
+                    q_pos: pos.clone(),
+                    sets,
+                    calls,
+                    pairs: stats.pairs,
+                    reads: stats.chunk_reads.max(stats.calls),
+                });
+            }
+            let plan = shared_plan.clone().expect("planned at layer 0");
+
+            // ---- fabric RPC: ship the plan to the shared node
+            let shared_parts = self.shared_node.attend(layer, q.clone(),
+                                                       plan)?;
+
+            // ---- unique node: per-request GEMV attention from its spans
+            let mut acc = RowAccumulator::from_arena(
+                &mut self.arena, b, cfg.n_heads, cfg.head_dim,
+            );
+            let nh = cfg.n_heads * cfg.head_dim;
+            for (i, r) in reqs.iter().enumerate() {
+                let mut qbuf = self.arena.take_buf(nh);
+                qbuf.extend_from_slice(q.index0(i));
+                let qr = Tensor::f32(&[1, cfg.n_heads, cfg.head_dim], qbuf);
+                let qp = [pos[i]];
+                let part = exec_unique_spans(
                     self.backend.as_ref(), &self.pool, &r.kv, layer, &qr,
-                    &[pos[i]],
+                    &qp, &row_spans[i], Some(&mut self.arena),
                 )?;
                 acc.merge_row(i, &part);
+                self.arena.recycle_partials(part);
+                self.arena.recycle(qr);
                 // census: reads its own pages once per request (GEMV)
                 let page_bytes = self.pool.page_bytes();
                 self.unique_util.add_bytes_read(
@@ -314,10 +363,12 @@ impl DisaggCluster {
             for (i, p) in shared_parts.iter().enumerate() {
                 acc.merge_row(i, p);
             }
-            let attn_o = acc.finalize();
+            let attn_o = acc.finalize_with(&mut self.arena);
+            acc.recycle_into(&mut self.arena);
             x = self.backend.post(
                 &attn_o, &x, lw.wo, lw.ffn_norm, lw.w1, lw.w3, lw.w2,
             )?;
+            self.arena.recycle(attn_o);
         }
         let logits = self.backend.lm_head(
             &x, self.weights.final_norm(), self.weights.lm_head(),
@@ -396,7 +447,7 @@ pub fn run_sim(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let steps = args.usize("steps")?;
     let backend_name = args.str("backend")?;
-    // native exec threads: 0 = auto, 1 = serial
+    // native exec threads PER NODE: 0 = auto, 1 = serial
     let threads = args.usize("threads")?;
 
     let man = crate::runtime::Manifest::load(&dir)?;
@@ -404,27 +455,46 @@ pub fn run_sim(args: &Args) -> Result<()> {
         man.weights_path().to_str().context("utf8")?, man.model.clone(),
     )?;
     let shared = Arc::new(SharedStore::load_from_manifest(&man)?);
-    let backend: Arc<dyn Backend> = match backend_name.as_str() {
-        "native" => Arc::new(crate::runtime::NativeBackend::with_threads(
-            man.model.clone(), man.chunk, threads,
-        )),
-        "xla" => {
-            let svc = crate::runtime::RuntimeService::spawn(&dir)?;
-            let be = crate::runtime::XlaBackend::new(svc.handle());
-            // keep the service alive for the process lifetime
-            std::mem::forget(svc);
-            Arc::new(be)
-        }
-        other => anyhow::bail!("unknown backend '{other}'"),
-    };
+    // one backend per node: for native execution each node gets its own
+    // worker pool (the NUMA seam — pin each pool to a socket and the
+    // shared/unique split maps onto real memory domains)
+    let (unique_be, shared_be): (Arc<dyn Backend>, Arc<dyn Backend>) =
+        match backend_name.as_str() {
+            "native" => {
+                let n = ThreadPool::resolve_threads(threads);
+                let mk = || -> Arc<dyn Backend> {
+                    if n <= 1 {
+                        Arc::new(crate::runtime::NativeBackend::with_threads(
+                            man.model.clone(), man.chunk, 1,
+                        ))
+                    } else {
+                        Arc::new(crate::runtime::NativeBackend::with_pool(
+                            man.model.clone(), man.chunk,
+                            Arc::new(ThreadPool::new(n)),
+                        ))
+                    }
+                };
+                (mk(), mk())
+            }
+            "xla" => {
+                let svc = crate::runtime::RuntimeService::spawn(&dir)?;
+                let be = crate::runtime::XlaBackend::new(svc.handle());
+                // keep the service alive for the process lifetime
+                std::mem::forget(svc);
+                let be: Arc<dyn Backend> = Arc::new(be);
+                (Arc::clone(&be), be)
+            }
+            other => anyhow::bail!("unknown backend '{other}'"),
+        };
 
     let mut table = Table::new(&[
         "batch", "mean_step", "sh_bytes/step", "uq_bytes/step",
         "sh_flops/step", "uq_flops/step", "gemm_N", "sh_busy",
     ]);
     for &b in &batches {
-        let mut cluster = DisaggCluster::new(
-            Arc::clone(&backend),
+        let mut cluster = DisaggCluster::with_backends(
+            Arc::clone(&unique_be),
+            Arc::clone(&shared_be),
             Weights::load(man.weights_path().to_str().unwrap(),
                           man.model.clone())?,
             Arc::clone(&shared),

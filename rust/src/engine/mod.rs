@@ -1,18 +1,31 @@
-//! The MoSKA serving engine: request lifecycle, prefill, batched decode.
+//! The MoSKA serving engine: request lifecycle, prefill, and the
+//! plan/execute decode pipeline.
 //!
-//! One decode step for B live requests (Fig 2(b), end to end):
+//! One decode step for B live requests (Fig 2(b)) runs in **two phases**:
 //!
-//! 1. embed the B current tokens (`embed` artifact);
-//! 2. per layer: `qkv` (+RoPE), append new K/V to each request's paged
-//!    unique cache, **route** each query to top-k shared chunks (§III.B),
-//!    **form Shared-KV GEMM batches** across requests ([`batcher`]),
-//!    execute the Pallas chunk-attention artifact per batch, run the
-//!    per-request unique-KV attention, LSE-merge everything, `post`;
-//! 3. `lm_head` + sampling, continuous-batching refill.
+//! 1. **Plan** — embed the B current tokens, project layer-0 QKV, and
+//!    **route** each query to its top-k shared chunks (§III.B, the
+//!    explicit sparse-routing decision). A pure planning pass
+//!    ([`plan::plan_step`][crate::plan::plan_step]) then emits the step's
+//!    [`StepPlan`][crate::plan::StepPlan] IR: per-domain Shared-KV GEMM
+//!    batch groups with their gather index tables ([`batcher`] + run
+//!    coalescing), and per-request unique-KV page spans.
+//! 2. **Execute** —
+//!    [`Backend::exec_plan`][crate::runtime::Backend::exec_plan] consumes
+//!    the plan for every layer: append new K/V to each request's paged
+//!    unique cache, execute the planned chunk-attention GEMM calls, fan
+//!    the per-request unique-KV GEMVs across the execution pool,
+//!    LSE-merge in fixed row order, `post`. All gather staging,
+//!    accumulators, and merge scratch live in the engine's per-step
+//!    [`TensorArena`][crate::runtime::arena::TensorArena], so
+//!    steady-state decode makes zero heap allocations on those paths.
 //!
-//! With dense routing the output is bit-comparable (≤1e-4) to the
-//! monolithic JAX reference — `integration_engine.rs` replays the golden
-//! decode traces to prove all three layers compose.
+//! Then `lm_head` + sampling and the continuous-batching refill. With
+//! dense routing the output is bit-comparable (≤1e-4) to the monolithic
+//! JAX reference — `integration_engine.rs` replays the golden decode
+//! traces to prove all three layers (and both phases) compose. The plan
+//! is also the unit of work the disaggregated runtime
+//! ([`disagg`][crate::disagg]) ships between nodes.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -27,7 +40,7 @@ use crate::metrics::Metrics;
 use crate::model::sampling::Sampler;
 use crate::model::Weights;
 use crate::router::{ChunkSet, Router};
-use crate::runtime::native::Partials;
+use crate::runtime::arena::{ArenaStats, TensorArena};
 use crate::runtime::Backend;
 use crate::scheduler::{Admit, AdmissionController, Demand, SloTracker,
                        StepScheduler};
@@ -80,9 +93,6 @@ struct Live {
     queue_secs: f64,
     prefill_secs: f64,
     decode_t0: Option<Instant>,
-    /// Chunk set from the last routing decision (refreshed at layer 0, or
-    /// every layer when `route_every_layer`).
-    routed: ChunkSet,
 }
 
 /// The serving engine (single-node; [`disagg`][crate::disagg] splits it).
@@ -98,6 +108,9 @@ pub struct Engine {
     pub cfg: ServingConfig,
     pub metrics: Metrics,
     pub capture_logits: bool,
+    /// Per-step scratch arena for the plan executor (gathers, partials,
+    /// merge accumulators); persists across steps so buffers recycle.
+    arena: TensorArena,
     live: HashMap<usize, Live>,
     pending: HashMap<usize, (Request, Instant)>,
     results: Vec<RequestResult>,
@@ -131,6 +144,7 @@ impl Engine {
             cfg,
             metrics: Metrics::new(),
             capture_logits: false,
+            arena: TensorArena::new(),
             live: HashMap::new(),
             pending: HashMap::new(),
             results: Vec::new(),
@@ -215,12 +229,18 @@ impl Engine {
         }
     }
 
+    /// Step-arena allocation statistics (the zero-alloc steady-state
+    /// proof surface; see `runtime/README.md`).
+    pub fn arena_stats(&self) -> &ArenaStats {
+        self.arena.stats()
+    }
+
     /// Per-phase decode-step time breakdown: (phase, total_secs, share).
     pub fn phase_report(&self) -> Vec<(String, f64, f64)> {
         let names = [
-            "phase_embed_ns", "phase_qkv_ns", "phase_append_ns",
-            "phase_shared_ns", "phase_unique_ns", "phase_post_ns",
-            "phase_lm_head_ns",
+            "phase_embed_ns", "phase_qkv_ns", "phase_route_ns",
+            "plan_build_ns", "phase_append_ns", "phase_shared_ns",
+            "phase_unique_ns", "phase_post_ns", "phase_lm_head_ns",
         ];
         let totals: Vec<(String, f64)> = names
             .iter()
@@ -327,7 +347,6 @@ impl Engine {
             queue_secs: 0.0,
             prefill_secs: 0.0,
             decode_t0: None,
-            routed: ChunkSet::new(),
             req,
         };
         if self.capture_logits {
@@ -407,7 +426,8 @@ impl Engine {
 
     // ------------------------------------------------------------- decode
 
-    /// One decode step for the whole live batch. This is the hot path.
+    /// One decode step for the whole live batch: **plan**, then
+    /// **execute**. This is the hot path (see the module docs).
     fn decode_step(&mut self) -> Result<()> {
         let model = self.backend.model().clone();
         let order: Vec<usize> = self.sched.live().to_vec();
@@ -436,8 +456,7 @@ impl Engine {
         };
 
         // group rows by shared domain ONCE per step: the grouping is
-        // invariant across layers, and rebuilding the map (with cloned
-        // String keys) per layer was pure decode-path overhead
+        // invariant across layers (sorted for deterministic order)
         let mut by_domain: HashMap<String, Vec<usize>> = HashMap::new();
         for (i, id) in order.iter().enumerate() {
             if let Some(d) = &self.live[id].req.domain {
@@ -446,140 +465,91 @@ impl Engine {
         }
         let mut domains: Vec<(String, Vec<usize>)> =
             by_domain.into_iter().collect();
-        domains.sort(); // deterministic execution order
+        domains.sort();
 
-        let mut x = self.backend.embed(&tokens, self.weights.embed())?;
+        let x = self.backend.embed(&tokens, self.weights.embed())?;
         phase(&self.metrics, "phase_embed_ns");
-        // per-row routing decisions, refreshed at layer 0
-        for layer in 0..model.n_layers {
-            let lw = self.weights.layer(layer);
-            let (q, k, v) = self.backend.qkv(
-                &x, lw.attn_norm, lw.wq, lw.wk, lw.wv, &pos,
-            )?;
-            phase(&self.metrics, "phase_qkv_ns");
-            // append each row's new K/V to its unique cache
-            for (i, id) in order.iter().enumerate() {
-                let l = self.live.get_mut(id).unwrap();
-                let kr = Tensor::f32(
-                    &[1, model.n_kv_heads, model.head_dim],
-                    k.index0(i).to_vec(),
-                );
-                let vr = Tensor::f32(
-                    &[1, model.n_kv_heads, model.head_dim],
-                    v.index0(i).to_vec(),
-                );
-                l.kv.append_layer(&mut self.pool, layer, &kr, &vr)?;
-            }
-            phase(&self.metrics, "phase_append_ns");
 
-            let mut acc = RowAccumulator::identity(
-                b, model.n_heads, model.head_dim,
+        // ---- routing pass: layer-0 projections drive the step's chunk
+        // sets (the executor consumes them, no recompute)
+        let (q0, k0, v0) = {
+            let lw = self.weights.layer(0);
+            self.backend.qkv(&x, lw.attn_norm, lw.wq, lw.wk, lw.wv, &pos)?
+        };
+        phase(&self.metrics, "phase_qkv_ns");
+        let nh = model.n_heads * model.head_dim;
+        let mut group_sets: Vec<Vec<ChunkSet>> =
+            Vec::with_capacity(domains.len());
+        for (dname, rows) in &domains {
+            let dom = self.shared.domains.get(dname).unwrap();
+            let mut qbuf = self.arena.take_buf(rows.len() * nh);
+            for &i in rows {
+                qbuf.extend_from_slice(q0.index0(i));
+            }
+            let qs = Tensor::f32(
+                &[rows.len(), model.n_heads, model.head_dim], qbuf,
             );
-            // ---- shared path: per domain group, route, batch, GEMM
-            for (dname, rows) in &domains {
-                let dom = self.shared.domains.get(dname).unwrap();
-                // gather subset q/pos
-                let nh = model.n_heads * model.head_dim;
-                let mut qs = Vec::with_capacity(rows.len() * nh);
-                let mut ps = Vec::with_capacity(rows.len());
-                for &i in rows {
-                    qs.extend_from_slice(q.index0(i));
-                    ps.push(pos[i]);
-                }
-                let qs = Tensor::f32(
-                    &[rows.len(), model.n_heads, model.head_dim], qs,
-                );
-                // routing: fresh at layer 0 (or every layer if configured)
-                let need_route = layer == 0 || self.cfg.route_every_layer;
-                let sets: Vec<ChunkSet> = if need_route {
-                    let s = self.router.route(
-                        self.backend.as_ref(), &qs, dom.embeddings(layer),
-                    )?;
-                    for (j, &i) in rows.iter().enumerate() {
-                        let l = self.live.get_mut(&order[i]).unwrap();
-                        l.routed = s[j].clone();
-                    }
-                    s
-                } else {
-                    rows.iter()
-                        .map(|&i| self.live[&order[i]].routed.clone())
-                        .collect()
-                };
-                let mut sub_acc = RowAccumulator::identity(
-                    rows.len(), model.n_heads, model.head_dim,
-                );
-                let stats = shared_attention(
-                    self.backend.as_ref(), dom, layer, &qs, &ps, &sets,
-                    &mut sub_acc, self.cfg.position_independent,
-                    self.cfg.max_batch,
-                )?;
-                self.batch_pairs += stats.pairs as u64;
-                self.batch_calls += stats.chunk_reads.max(stats.calls) as u64;
-                // scatter sub-rows back to global rows (in place)
-                for (j, &i) in rows.iter().enumerate() {
-                    acc.merge_row_from(i, sub_acc.partials(), j);
-                }
-            }
-            phase(&self.metrics, "phase_shared_ns");
-            // ---- unique path: per request (B=1 — the paper's GEMV side).
-            // The B GEMVs are independent, so they fan out across the
-            // backend's execution pool; results merge below in fixed row
-            // order, keeping the step bit-identical to serial execution.
-            let backend = self.backend.as_ref();
-            let page_pool = &self.pool;
-            let kvs: Vec<&RequestKv> =
-                order.iter().map(|id| &self.live[id].kv).collect();
-            // same work floor as the kernels: short unique contexts are
-            // cheaper to walk serially than to fan out
-            let unique_work: usize = kvs.iter().map(|kv| kv.len).sum::<usize>()
-                * model.n_heads
-                * model.head_dim;
-            let pool_for_fanout = backend.exec_pool().filter(|tp| {
-                tp.threads() > 1
-                    && b > 1
-                    && unique_work >= crate::runtime::native::PAR_MIN_WORK
-            });
-            let mut slots: Vec<Option<Result<Partials>>> =
-                (0..b).map(|_| None).collect();
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                Vec::with_capacity(b);
-            for (i, (slot, &kv)) in slots.iter_mut().zip(&kvs).enumerate() {
-                let qr = Tensor::f32(
-                    &[1, model.n_heads, model.head_dim],
-                    q.index0(i).to_vec(),
-                );
-                let pi = pos[i];
-                jobs.push(Box::new(move || {
-                    *slot = Some(unique_attention(
-                        backend, page_pool, kv, layer, &qr, &[pi],
-                    ));
-                }));
-            }
-            match pool_for_fanout {
-                Some(tp) => tp.scoped_run(jobs),
-                None => {
-                    for job in jobs {
-                        job();
-                    }
-                }
-            }
-            for (i, slot) in slots.into_iter().enumerate() {
-                acc.merge_row(i, &slot.expect("job ran")?);
-            }
-            phase(&self.metrics, "phase_unique_ns");
-
-            let attn_o = acc.finalize();
-            x = self.backend.post(
-                &attn_o, &x, lw.wo, lw.ffn_norm, lw.w1, lw.w3, lw.w2,
+            let sets = self.router.route(
+                self.backend.as_ref(), &qs, dom.embeddings(0),
             )?;
-            phase(&self.metrics, "phase_post_ns");
+            self.arena.recycle(qs);
+            // the routing decision lives on in the plan (inspectable as
+            // `SharedGroupPlan::sets`) — no per-request copy needed
+            group_sets.push(sets);
         }
+        phase(&self.metrics, "phase_route_ns");
+
+        // ---- pure planning pass → the step's IR
+        let kv_dims: Vec<(usize, usize)> = order
+            .iter()
+            .map(|id| {
+                let kv = &self.live[id].kv;
+                (kv.start_pos, kv.len)
+            })
+            .collect();
+        let plan = crate::plan::plan_step(
+            &model, &self.cfg, &self.shared, &domains, group_sets,
+            &kv_dims, self.backend.chunk_size(),
+            self.backend.max_attn_tokens(), &pos,
+        )?;
+        phase(&self.metrics, "plan_build_ns");
+
+        // ---- execution pass: all layers, arena-staged
+        let exec_out = {
+            let mut by_id: HashMap<usize, &mut Live> = self
+                .live
+                .iter_mut()
+                .map(|(id, l)| (*id, l))
+                .collect();
+            let mut kvs: Vec<&mut RequestKv> = Vec::with_capacity(b);
+            for id in &order {
+                let l: &mut Live = by_id.remove(id).expect("live entry");
+                kvs.push(&mut l.kv);
+            }
+            let mut ctx = crate::plan::PlanExecCtx {
+                weights: &self.weights,
+                shared: &self.shared,
+                pool: &mut self.pool,
+                kvs,
+                arena: &mut self.arena,
+                router: &mut self.router,
+                metrics: Some(&self.metrics),
+                layer0_qkv: Some((q0, k0, v0)),
+            };
+            self.backend.exec_plan(&plan, x, &mut ctx)?
+        };
+        self.batch_pairs += exec_out.pairs;
+        self.batch_calls += exec_out.calls;
+        // per-layer phases were recorded inside exec_plan; this resets
+        // the engine-side timer so lm_head is measured alone
+        phase(&self.metrics, "phase_exec_total_ns");
+
         // each live request appended exactly one token's K/V this step
         for id in &order {
             self.live.get_mut(id).unwrap().kv.commit(1);
         }
         let logits = self.backend.lm_head(
-            &x, self.weights.final_norm(), self.weights.lm_head(),
+            &exec_out.x, self.weights.final_norm(), self.weights.lm_head(),
         )?;
         phase(&self.metrics, "phase_lm_head_ns");
 
@@ -636,6 +606,10 @@ impl Engine {
         self.metrics.gauge("live_batch", self.sched.live().len() as f64);
         self.metrics.gauge("kv_pages_allocated",
                            self.pool.allocated() as f64);
+        self.metrics.gauge("arena_high_water_bytes",
+                           self.arena.stats().high_water_bytes as f64);
+        self.metrics.gauge("arena_fresh_allocs",
+                           self.arena.stats().fresh_allocs as f64);
         Ok(())
     }
 

@@ -176,6 +176,32 @@ impl RequestKv {
         Ok(())
     }
 
+    /// Append ONE token's K/V rows (`[Hkv*dh]` flat) for one layer —
+    /// the decode hot path. Identical storage effect to
+    /// [`Self::append_layer`] with `n = 1`, without materializing the
+    /// `[1, Hkv, dh]` tensors (the plan executor stages nothing here).
+    pub fn append_row_layer(&mut self, pool: &mut PagePool, layer: usize,
+                            k_row: &[f32], v_row: &[f32]) -> Result<()> {
+        let chunk = pool.chunk;
+        let row = pool.kv_heads * pool.head_dim;
+        debug_assert_eq!(k_row.len(), row);
+        debug_assert_eq!(v_row.len(), row);
+        let off = self.lens[layer] % chunk;
+        if off == 0 && self.lens[layer] / chunk >= self.pages[layer].len() {
+            let id = pool.alloc()?;
+            self.pages[layer].push(id);
+        }
+        let page_idx = self.lens[layer] / chunk;
+        let page = pool.get_mut(self.pages[layer][page_idx]);
+        page.k.as_f32_mut()[off * row..(off + 1) * row]
+            .copy_from_slice(k_row);
+        page.v.as_f32_mut()[off * row..(off + 1) * row]
+            .copy_from_slice(v_row);
+        page.used = off + 1;
+        self.lens[layer] += 1;
+        Ok(())
+    }
+
     /// Commit `n` appended tokens after all layers appended them.
     pub fn commit(&mut self, n: usize) {
         self.len += n;
@@ -246,14 +272,7 @@ impl RequestKv {
     }
 
     fn valid_at(len: usize, p: usize, chunk: usize) -> i32 {
-        let full = len / chunk;
-        if p < full {
-            chunk as i32
-        } else if p == full {
-            (len % chunk) as i32
-        } else {
-            0
-        }
+        page_valid_rows(len, p, chunk)
     }
 
     /// Release every page back to the pool.
@@ -267,6 +286,20 @@ impl RequestKv {
         for l in &mut self.lens {
             *l = 0;
         }
+    }
+}
+
+/// Valid K/V rows in page `p` of a cache holding `len` tokens — pure
+/// page arithmetic, shared with the step planner ([`crate::plan`]) so
+/// planned unique-KV spans match the live cache walk exactly.
+pub fn page_valid_rows(len: usize, p: usize, chunk: usize) -> i32 {
+    let full = len / chunk;
+    if p < full {
+        chunk as i32
+    } else if p == full {
+        (len % chunk) as i32
+    } else {
+        0
     }
 }
 
@@ -364,6 +397,48 @@ mod tests {
         kv.append(&mut pool, &rows).unwrap();
         assert_eq!(kv.pages_needed(3, 8, 2), 0); // fits in current page
         assert_eq!(kv.pages_needed(4, 8, 2), 2); // one more page per layer
+    }
+
+    #[test]
+    fn append_row_layer_matches_tensor_append() {
+        // the decode-path single-token append must leave pages bit-equal
+        // to the tensor-based append
+        let mut pa = pool();
+        let mut pb = pool();
+        let mut rng = Rng::new(5);
+        let mut ka = RequestKv::new(2, 10);
+        let mut kb = RequestKv::new(2, 10);
+        for _ in 0..19 {
+            // one token per layer, both APIs
+            let rows: Vec<_> = (0..2).map(|_| kv_rows(&mut rng, 1)).collect();
+            for (layer, (k, v)) in rows.iter().enumerate() {
+                ka.append_layer(&mut pa, layer, k, v).unwrap();
+                kb.append_row_layer(&mut pb, layer, k.as_f32(), v.as_f32())
+                    .unwrap();
+            }
+            ka.commit(1);
+            kb.commit(1);
+        }
+        assert_eq!(ka.len, kb.len);
+        assert_eq!(ka.page_count(), kb.page_count());
+        for layer in 0..2 {
+            for p in 0..ka.pages[layer].len() {
+                let a = pa.get(ka.pages[layer][p]);
+                let b = pb.get(kb.pages[layer][p]);
+                assert_eq!(a.k, b.k, "layer {layer} page {p} K");
+                assert_eq!(a.v, b.v, "layer {layer} page {p} V");
+                assert_eq!(a.used, b.used);
+            }
+        }
+    }
+
+    #[test]
+    fn page_valid_rows_arithmetic() {
+        assert_eq!(page_valid_rows(0, 0, 8), 0);
+        assert_eq!(page_valid_rows(8, 0, 8), 8);
+        assert_eq!(page_valid_rows(9, 0, 8), 8);
+        assert_eq!(page_valid_rows(9, 1, 8), 1);
+        assert_eq!(page_valid_rows(9, 2, 8), 0);
     }
 
     #[test]

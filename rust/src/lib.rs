@@ -27,6 +27,7 @@ pub mod engine;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod plan;
 pub mod router;
 pub mod runtime;
 pub mod scheduler;

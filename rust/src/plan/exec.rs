@@ -1,0 +1,477 @@
+//! The execution pass: run a [`StepPlan`] on a [`Backend`].
+//!
+//! [`execute_plan`] is the decode hot path. It owns no policy — batching,
+//! coalescing, and routing decisions arrived in the plan — and stages
+//! every gather buffer, accumulator, and intermediate partial in the
+//! caller's [`TensorArena`], so steady-state decode performs zero heap
+//! allocations in these paths (see `runtime/README.md` for the ownership
+//! rules). Kernel call order and LSE-merge order are exactly the
+//! pre-plan interleaved loop's, keeping golden decode replay
+//! bit-comparable.
+//!
+//! [`exec_gemm_calls`] and [`exec_unique_spans`] are also used directly
+//! by the prefill wrappers in [`crate::attention`] and by the disagg
+//! nodes — each node executes its half of the plan on its own backend
+//! (and thread pool) with its own arena.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{plan_gemm_calls, GemmCall, PageSpan, StepPlan};
+use crate::attention::RowAccumulator;
+use crate::kvcache::paged::{PagePool, RequestKv};
+use crate::kvcache::shared_store::{DomainCache, SharedStore};
+use crate::metrics::Metrics;
+use crate::model::Weights;
+use crate::router::Router;
+use crate::runtime::arena::TensorArena;
+use crate::runtime::native::{self, Partials, PAR_MIN_WORK};
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+
+/// Everything the executor borrows from the engine for one step. All
+/// fields are disjoint engine state; the arena and page pool are mutable
+/// (appends + staging), the rest read-only.
+pub struct PlanExecCtx<'a> {
+    pub weights: &'a Weights,
+    pub shared: &'a SharedStore,
+    pub pool: &'a mut PagePool,
+    /// Per-row unique caches, batch order.
+    pub kvs: Vec<&'a mut RequestKv>,
+    pub arena: &'a mut TensorArena,
+    /// Only consulted when the plan defers routing (`route_live`).
+    pub router: &'a mut Router,
+    pub metrics: Option<&'a Metrics>,
+    /// Layer-0 projections already computed by the planner's routing
+    /// pass; the executor consumes them instead of recomputing.
+    pub layer0_qkv: Option<(Tensor, Tensor, Tensor)>,
+}
+
+/// Execution result: the post-attention hidden state plus the realized
+/// Shared-KV batching counters.
+pub struct PlanExecOut {
+    pub x: Tensor,
+    /// (query, chunk) pairs served across all layers.
+    pub pairs: u64,
+    /// Distinct chunk reads across all layers.
+    pub calls: u64,
+}
+
+/// Execute `plan` end-to-end (all layers). See module docs.
+pub fn execute_plan(backend: &dyn Backend, plan: &StepPlan, x: Tensor,
+                    ctx: &mut PlanExecCtx<'_>) -> Result<PlanExecOut> {
+    let model = backend.model().clone();
+    let b = plan.b;
+    let (h, dh) = (model.n_heads, model.head_dim);
+    let mut x = x;
+    let mut pairs = 0u64;
+    let mut calls = 0u64;
+
+    let metrics = ctx.metrics;
+    let mut t_phase = Instant::now();
+    let mut phase = |name: &str| {
+        let now = Instant::now();
+        if let Some(m) = metrics {
+            m.observe_ns(name, (now - t_phase).as_nanos() as u64);
+        }
+        t_phase = now;
+    };
+
+    let mut layer0 = ctx.layer0_qkv.take();
+    for layer in 0..model.n_layers {
+        let lw = ctx.weights.layer(layer);
+        let (q, k, v) = match layer0.take() {
+            Some(qkv) if layer == 0 => qkv,
+            _ => backend.qkv(&x, lw.attn_norm, lw.wq, lw.wk, lw.wv,
+                             &plan.pos)?,
+        };
+        phase("phase_qkv_ns");
+
+        // append each row's new K/V to its unique cache (no staging)
+        for (i, kv) in ctx.kvs.iter_mut().enumerate() {
+            kv.append_row_layer(&mut *ctx.pool, layer, k.index0(i),
+                                v.index0(i))?;
+        }
+        phase("phase_append_ns");
+
+        let mut acc = RowAccumulator::from_arena(&mut *ctx.arena, b, h, dh);
+
+        // ---- shared path: planned GEMM groups (re-routed live per layer
+        // only when the plan says so)
+        for group in &plan.shared_groups {
+            let dom = ctx.shared.domain(&group.domain)?;
+            let n = group.rows.len();
+            let mut qbuf = ctx.arena.take_buf(n * h * dh);
+            for &i in &group.rows {
+                qbuf.extend_from_slice(q.index0(i));
+            }
+            let qs = Tensor::f32(&[n, h, dh], qbuf);
+            let mut sub =
+                RowAccumulator::from_arena(&mut *ctx.arena, n, h, dh);
+            if plan.route_live && layer > 0 {
+                let sets =
+                    ctx.router.route(backend, &qs, dom.embeddings(layer))?;
+                let (live_calls, stats) = plan_gemm_calls(
+                    &sets, plan.max_batch, dom.chunk, &dom.chunk_bases,
+                    backend.max_attn_tokens(), plan.position_independent,
+                );
+                exec_gemm_calls(backend, dom, layer, &qs, &group.q_pos,
+                                &live_calls, &mut sub,
+                                Some(&mut *ctx.arena))?;
+                pairs += stats.pairs as u64;
+                calls += stats.chunk_reads.max(stats.calls) as u64;
+            } else {
+                exec_gemm_calls(backend, dom, layer, &qs, &group.q_pos,
+                                &group.calls, &mut sub,
+                                Some(&mut *ctx.arena))?;
+                pairs += group.pairs as u64;
+                calls += group.reads as u64;
+            }
+            // scatter sub-rows back to global rows (in place)
+            for (j, &i) in group.rows.iter().enumerate() {
+                acc.merge_row_from(i, sub.partials(), j);
+            }
+            sub.recycle_into(&mut *ctx.arena);
+            ctx.arena.recycle(qs);
+        }
+        phase("phase_shared_ns");
+
+        // ---- unique path: per request (B=1 — the paper's GEMV side).
+        // Query rows are arena-gathered up front; the independent jobs
+        // then fan out across the backend's pool and merge in fixed row
+        // order, keeping the step bit-identical to serial execution.
+        let mut qrs: Vec<Tensor> = Vec::with_capacity(b);
+        for i in 0..b {
+            let mut buf = ctx.arena.take_buf(h * dh);
+            buf.extend_from_slice(q.index0(i));
+            qrs.push(Tensor::f32(&[1, h, dh], buf));
+        }
+        let fanout = backend.exec_pool().filter(|tp| {
+            tp.threads() > 1 && b > 1 && plan.unique_work >= PAR_MIN_WORK
+        });
+        match fanout {
+            Some(tp) => {
+                let pool_ref: &PagePool = &*ctx.pool;
+                let kv_refs: Vec<&RequestKv> =
+                    ctx.kvs.iter().map(|kv| &**kv).collect();
+                let mut slots: Vec<Option<Result<Partials>>> =
+                    (0..b).map(|_| None).collect();
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(b);
+                for (i, (slot, &kv)) in
+                    slots.iter_mut().zip(&kv_refs).enumerate()
+                {
+                    let qr = &qrs[i];
+                    let spans = &plan.unique[i].spans;
+                    let pi = plan.pos[i];
+                    jobs.push(Box::new(move || {
+                        let qp = [pi];
+                        *slot = Some(exec_unique_spans(
+                            backend, pool_ref, kv, layer, qr, &qp, spans,
+                            None,
+                        ));
+                    }));
+                }
+                tp.scoped_run(jobs);
+                for (i, slot) in slots.into_iter().enumerate() {
+                    acc.merge_row(i, &slot.expect("job ran")?);
+                }
+            }
+            None => {
+                for i in 0..b {
+                    let qp = [plan.pos[i]];
+                    let part = exec_unique_spans(
+                        backend, &*ctx.pool, &*ctx.kvs[i], layer, &qrs[i],
+                        &qp, &plan.unique[i].spans,
+                        Some(&mut *ctx.arena),
+                    )?;
+                    acc.merge_row(i, &part);
+                    ctx.arena.recycle_partials(part);
+                }
+            }
+        }
+        for t in qrs {
+            ctx.arena.recycle(t);
+        }
+        phase("phase_unique_ns");
+
+        let attn_o = acc.finalize_with(&mut *ctx.arena);
+        acc.recycle_into(&mut *ctx.arena);
+        x = backend.post(&attn_o, &x, lw.wo, lw.ffn_norm, lw.w1, lw.w3,
+                         lw.w2)?;
+        ctx.arena.recycle(attn_o);
+        phase("phase_post_ns");
+    }
+    Ok(PlanExecOut { x, pairs, calls })
+}
+
+/// Execute one group's [`GemmCall`]s against a domain at `layer`,
+/// scattering partials into `acc` (sub-row indexing). `arena = None`
+/// falls back to plain allocation (prefill, parallel fan-out jobs).
+#[allow(clippy::too_many_arguments)]
+pub fn exec_gemm_calls(backend: &dyn Backend, dom: &DomainCache,
+                       layer: usize, qs: &Tensor, q_pos: &[i32],
+                       calls: &[GemmCall], acc: &mut RowAccumulator,
+                       mut arena: Option<&mut TensorArena>) -> Result<()> {
+    let (h, dh) = (qs.shape()[1], qs.shape()[2]);
+    let nh = h * dh;
+    let chunk = dom.chunk;
+    for call in calls {
+        let n = call.rows.len();
+        // gather query rows + positions for this call (index tables)
+        let mut qb = match arena.as_deref_mut() {
+            Some(a) => a.take_buf(n * nh),
+            None => Vec::with_capacity(n * nh),
+        };
+        for &slot in &call.rows {
+            qb.extend_from_slice(qs.index0(slot));
+        }
+        let qb = Tensor::f32(&[n, h, dh], qb);
+        let mut pb = match arena.as_deref_mut() {
+            Some(a) => a.take_i32_buf(n),
+            None => Vec::with_capacity(n),
+        };
+        match call.pos_override {
+            Some(p) => pb.resize(n, p),
+            None => pb.extend(call.rows.iter().map(|&slot| q_pos[slot])),
+        }
+
+        let p = if call.run_len == 1 {
+            // zero-copy single chunk
+            let (kc, vc) = dom.chunk_kv(layer, call.chunk_start);
+            match arena.as_deref_mut() {
+                Some(a) => backend.chunk_attn_arena(
+                    &qb, kc, vc, &pb, call.k_base, call.valid, a,
+                )?,
+                None => backend.chunk_attn_auto(
+                    &qb, kc, vc, &pb, call.k_base, call.valid,
+                )?,
+            }
+        } else {
+            // concatenate the run's chunks into staged K/V
+            let shape = dom.chunk_kv(layer, call.chunk_start).0.shape();
+            let (hkv, dhkv) = (shape[1], shape[2]);
+            let total = call.run_len * chunk;
+            let (mut kb, mut vb) = match arena.as_deref_mut() {
+                Some(a) => (a.take_buf(total * hkv * dhkv),
+                            a.take_buf(total * hkv * dhkv)),
+                None => (Vec::with_capacity(total * hkv * dhkv),
+                         Vec::with_capacity(total * hkv * dhkv)),
+            };
+            for r in 0..call.run_len {
+                let (kc, vc) = dom.chunk_kv(layer, call.chunk_start + r);
+                kb.extend_from_slice(kc.as_f32());
+                vb.extend_from_slice(vc.as_f32());
+            }
+            let kb = Tensor::f32(&[total, hkv, dhkv], kb);
+            let vb = Tensor::f32(&[total, hkv, dhkv], vb);
+            let p = match arena.as_deref_mut() {
+                Some(a) => backend.chunk_attn_arena(
+                    &qb, &kb, &vb, &pb, call.k_base, call.valid, a,
+                )?,
+                None => backend.chunk_attn_auto(
+                    &qb, &kb, &vb, &pb, call.k_base, call.valid,
+                )?,
+            };
+            if let Some(a) = arena.as_deref_mut() {
+                a.recycle(kb);
+                a.recycle(vb);
+            }
+            p
+        };
+        acc.scatter(&call.rows, &p);
+        if let Some(a) = arena.as_deref_mut() {
+            a.recycle_partials(p);
+            a.recycle(qb);
+            a.recycle_vec_i32(pb);
+        }
+    }
+    Ok(())
+}
+
+/// Execute one row's (or one prefill slab's) unique-KV [`PageSpan`]s at
+/// `layer`, LSE-merging span partials into one result. Merging is
+/// in-place (`merge2_row_into`) and allocation-free; with an arena even
+/// the staging and output partials are recycled.
+#[allow(clippy::too_many_arguments)]
+pub fn exec_unique_spans(backend: &dyn Backend, pool: &PagePool,
+                         kv: &RequestKv, layer: usize, q: &Tensor,
+                         q_pos: &[i32], spans: &[PageSpan],
+                         mut arena: Option<&mut TensorArena>)
+                         -> Result<Partials> {
+    let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let mut acc = match arena.as_deref_mut() {
+        Some(a) => a.take_partials(b, h, dh),
+        None => Partials::identity(b, h, dh),
+    };
+    let chunk = pool.chunk();
+    for span in spans {
+        let part = if span.pages == 1 {
+            let page = pool.get(kv.pages[layer][span.page_start]);
+            match arena.as_deref_mut() {
+                Some(a) => backend.chunk_attn_arena(
+                    q, &page.k, &page.v, q_pos, span.k_base, span.valid, a,
+                )?,
+                None => backend.chunk_attn_auto(
+                    q, &page.k, &page.v, q_pos, span.k_base, span.valid,
+                )?,
+            }
+        } else {
+            let shape = pool.get(kv.pages[layer][span.page_start]).k.shape();
+            let (hkv, dhkv) = (shape[1], shape[2]);
+            let total = span.pages * chunk;
+            let (mut kb, mut vb) = match arena.as_deref_mut() {
+                Some(a) => (a.take_buf(total * hkv * dhkv),
+                            a.take_buf(total * hkv * dhkv)),
+                None => (Vec::with_capacity(total * hkv * dhkv),
+                         Vec::with_capacity(total * hkv * dhkv)),
+            };
+            for r in 0..span.pages {
+                let page =
+                    pool.get(kv.pages[layer][span.page_start + r]);
+                kb.extend_from_slice(page.k.as_f32());
+                vb.extend_from_slice(page.v.as_f32());
+            }
+            let kb = Tensor::f32(&[total, hkv, dhkv], kb);
+            let vb = Tensor::f32(&[total, hkv, dhkv], vb);
+            let p = match arena.as_deref_mut() {
+                Some(a) => backend.chunk_attn_arena(
+                    q, &kb, &vb, q_pos, span.k_base, span.valid, a,
+                )?,
+                None => backend.chunk_attn_auto(
+                    q, &kb, &vb, q_pos, span.k_base, span.valid,
+                )?,
+            };
+            if let Some(a) = arena.as_deref_mut() {
+                a.recycle(kb);
+                a.recycle(vb);
+            }
+            p
+        };
+        for row in 0..b {
+            native::merge2_row_into(&mut acc, row, &part, row);
+        }
+        if let Some(a) = arena.as_deref_mut() {
+            a.recycle_partials(part);
+        }
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::router::ChunkSet;
+    use crate::runtime::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let mut d = vec![0f32; shape.iter().product()];
+        rng.fill_normal_f32(&mut d);
+        Tensor::f32(shape, d)
+    }
+
+    fn fake_domain(rng: &mut Rng, n_chunks: usize, chunk: usize)
+                   -> DomainCache {
+        let layers = (0..2)
+            .map(|_| crate::kvcache::shared_store::LayerChunks {
+                chunks: (0..n_chunks)
+                    .map(|_| (rand_t(rng, &[chunk, 2, 16]),
+                              rand_t(rng, &[chunk, 2, 16])))
+                    .collect(),
+                embs: rand_t(rng, &[n_chunks, 2, 16]),
+            })
+            .collect();
+        DomainCache {
+            name: "test".into(),
+            tokens: vec![0; n_chunks * chunk],
+            n_chunks,
+            chunk,
+            layers,
+            chunk_ids: (0..n_chunks as u64).collect(),
+            chunk_bases: (0..n_chunks).map(|c| (c * chunk) as i32).collect(),
+        }
+    }
+
+    /// Arena staging must not change a single bit of the shared path:
+    /// exec with a recycled arena equals exec with plain allocation,
+    /// across repeated (buffer-reusing) executions.
+    #[test]
+    fn gemm_exec_arena_bit_identical_to_alloc() {
+        let be = NativeBackend::with_threads(ModelConfig::tiny(), 64, 1);
+        let mut rng = Rng::new(0xA11);
+        let dom = fake_domain(&mut rng, 6, 64);
+        let sets: Vec<ChunkSet> =
+            vec![vec![0, 1, 2], vec![2, 4], vec![0, 1, 2, 3, 5]];
+        let q = rand_t(&mut rng, &[3, 4, 16]);
+        let q_pos = vec![1000, 450, 700];
+        let (calls, _) = plan_gemm_calls(&sets, 32, 64, &dom.chunk_bases,
+                                         be.max_attn_tokens(), false);
+        assert!(calls.iter().any(|c| c.run_len > 1), "want a real run");
+
+        let mut plain = RowAccumulator::identity(3, 4, 16);
+        exec_gemm_calls(&be, &dom, 0, &q, &q_pos, &calls, &mut plain, None)
+            .unwrap();
+        let want = plain.finalize();
+
+        let mut arena = TensorArena::new();
+        for round in 0..3 {
+            let mut acc = RowAccumulator::from_arena(&mut arena, 3, 4, 16);
+            exec_gemm_calls(&be, &dom, 0, &q, &q_pos, &calls, &mut acc,
+                            Some(&mut arena))
+                .unwrap();
+            let got = acc.finalize();
+            acc.recycle_into(&mut arena);
+            assert_eq!(got, want, "round {round}");
+        }
+        // second and third rounds reused every buffer
+        let after_one = {
+            let mut arena2 = TensorArena::new();
+            let mut acc = RowAccumulator::from_arena(&mut arena2, 3, 4, 16);
+            exec_gemm_calls(&be, &dom, 0, &q, &q_pos, &calls, &mut acc,
+                            Some(&mut arena2))
+                .unwrap();
+            acc.recycle_into(&mut arena2);
+            arena2.stats().fresh_allocs
+        };
+        assert_eq!(arena.stats().fresh_allocs, after_one,
+                   "steady-state rounds must not allocate");
+    }
+
+    /// Same property on the unique-KV span path, with a partial page and
+    /// multiple spans.
+    #[test]
+    fn unique_exec_arena_bit_identical_to_alloc() {
+        let chunk = 8;
+        let be = NativeBackend::with_threads(ModelConfig::tiny(), chunk, 1);
+        let mut rng = Rng::new(0xB22);
+        let mut pool =
+            crate::kvcache::paged::PagePool::new(16, chunk, 2, 16);
+        let n = 20; // pages of 8, 8, 4
+        let k_all = rand_t(&mut rng, &[n, 2, 16]);
+        let v_all = rand_t(&mut rng, &[n, 2, 16]);
+        let mut kv = crate::kvcache::paged::RequestKv::new(1, 0);
+        kv.append(&mut pool, &[(k_all, v_all)]).unwrap();
+        let q = rand_t(&mut rng, &[1, 4, 16]);
+        let q_pos = [1000];
+
+        for cap in [8usize, 16, 1024] {
+            let spans = super::super::plan_unique_spans(n, 0, chunk, cap);
+            let plain = exec_unique_spans(&be, &pool, &kv, 0, &q, &q_pos,
+                                          &spans, None)
+                .unwrap();
+            let want = native::finalize(&plain);
+            let mut arena = TensorArena::new();
+            for round in 0..2 {
+                let got = exec_unique_spans(&be, &pool, &kv, 0, &q, &q_pos,
+                                            &spans, Some(&mut arena))
+                    .unwrap();
+                let got_f = native::finalize(&got);
+                arena.recycle_partials(got);
+                assert_eq!(got_f, want, "cap {cap} round {round}");
+            }
+        }
+    }
+}

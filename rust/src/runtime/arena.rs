@@ -1,0 +1,277 @@
+//! Per-step tensor arena: recycled scratch for the decode hot path.
+//!
+//! The plan executor ([`crate::plan`]) needs short-lived staging buffers
+//! every layer of every decode step: gathered query rows, concatenated
+//! run K/V, attention [`Partials`], LSE-merge accumulators. Allocating
+//! those from the global heap put `malloc`/`free` pairs on the hot path;
+//! the arena instead keeps every returned buffer on a free list and hands
+//! it back out on the next `take` of a compatible size, so **steady-state
+//! decode performs zero heap allocations in arena-managed paths** — after
+//! warm-up every shape the step needs has been seen and
+//! [`ArenaStats::fresh_allocs`] stops moving (asserted by
+//! `integration_plan.rs`).
+//!
+//! Ownership rules (see also `runtime/README.md`):
+//!
+//! * `take*` transfers ownership of a buffer to the caller; the caller
+//!   must hand it back with the matching `recycle*` once the consuming
+//!   kernel call has returned. Dropping a taken buffer is safe (it just
+//!   leaves the arena's outstanding-bytes gauge high).
+//! * Buffers are plain `Vec`s wrapped in [`Tensor`]s — nothing borrows
+//!   the arena, so taken tensors can cross into kernel calls that also
+//!   receive `&mut TensorArena`.
+//! * The arena is **not** thread-safe by design: each executor (engine
+//!   step loop, each disagg node) owns exactly one. Parallel fan-out
+//!   paths pre-gather their inputs from the arena before forking and
+//!   allocate transient kernel outputs normally.
+
+use crate::runtime::native::Partials;
+use crate::tensor::Tensor;
+
+/// Allocation statistics (the zero-alloc steady-state proof surface).
+#[derive(Debug, Default, Clone)]
+pub struct ArenaStats {
+    /// `take*` calls that had to create or grow a backing buffer. Flat in
+    /// steady state — every increment is a real heap allocation.
+    pub fresh_allocs: u64,
+    /// Total `take*` calls served.
+    pub takes: u64,
+    /// Peak bytes checked out at once (high-water mark).
+    pub high_water_bytes: usize,
+}
+
+/// Recycling scratch allocator (see module docs).
+#[derive(Debug, Default)]
+pub struct TensorArena {
+    free_f32: Vec<Vec<f32>>,
+    free_i32: Vec<Vec<i32>>,
+    outstanding_bytes: usize,
+    stats: ArenaStats,
+}
+
+impl TensorArena {
+    pub fn new() -> TensorArena {
+        TensorArena::default()
+    }
+
+    pub fn stats(&self) -> &ArenaStats {
+        &self.stats
+    }
+
+    /// Bytes currently checked out (taken and not yet recycled).
+    pub fn outstanding_bytes(&self) -> usize {
+        self.outstanding_bytes
+    }
+
+    fn account_take(&mut self, bytes: usize) {
+        self.stats.takes += 1;
+        self.outstanding_bytes += bytes;
+        self.stats.high_water_bytes =
+            self.stats.high_water_bytes.max(self.outstanding_bytes);
+    }
+
+    /// A zero-filled f32 buffer of exactly `len` elements (accumulator /
+    /// partials use). Reuses the smallest free buffer whose capacity
+    /// fits; only a miss allocates.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.take_buf(len);
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// An **empty** f32 buffer with capacity ≥ `len` (gather/concat
+    /// staging use): callers fill it with `extend_from_slice`, so there
+    /// is no redundant zero-fill on the hot path.
+    pub fn take_buf(&mut self, len: usize) -> Vec<f32> {
+        self.account_take(len * 4);
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free_f32.iter().enumerate() {
+            if b.capacity() < len {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(j) => b.capacity() < self.free_f32[j].capacity(),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let mut buf = match best {
+            Some(i) => self.free_f32.swap_remove(i),
+            None => {
+                self.stats.fresh_allocs += 1;
+                Vec::with_capacity(len)
+            }
+        };
+        buf.clear();
+        buf
+    }
+
+    /// An **empty** i32 buffer with capacity ≥ `len` (gathered positions,
+    /// index tables); callers push/extend/resize it themselves.
+    pub fn take_i32_buf(&mut self, len: usize) -> Vec<i32> {
+        self.account_take(len * 4);
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free_i32.iter().enumerate() {
+            if b.capacity() < len {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(j) => b.capacity() < self.free_i32[j].capacity(),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let mut buf = match best {
+            Some(i) => self.free_i32.swap_remove(i),
+            None => {
+                self.stats.fresh_allocs += 1;
+                Vec::with_capacity(len)
+            }
+        };
+        buf.clear();
+        buf
+    }
+
+    /// A zero-filled f32 tensor of the given shape.
+    pub fn take_tensor(&mut self, shape: &[usize]) -> Tensor {
+        let len: usize = shape.iter().product();
+        Tensor::f32(shape, self.take(len))
+    }
+
+    /// Identity-filled partials (`o = 0`, `m = -inf`, `l = 0`) — what
+    /// fully-masked rows emit, and the neutral element of the LSE merge.
+    pub fn take_partials(&mut self, b: usize, h: usize, dh: usize)
+                         -> Partials {
+        let o = self.take_tensor(&[b, h, dh]);
+        let mut m = self.take_tensor(&[b, h]);
+        m.as_f32_mut().fill(f32::NEG_INFINITY);
+        let l = self.take_tensor(&[b, h]);
+        Partials { o, m, l }
+    }
+
+    pub fn recycle_vec(&mut self, v: Vec<f32>) {
+        self.outstanding_bytes =
+            self.outstanding_bytes.saturating_sub(v.len() * 4);
+        self.free_f32.push(v);
+    }
+
+    pub fn recycle_vec_i32(&mut self, v: Vec<i32>) {
+        self.outstanding_bytes =
+            self.outstanding_bytes.saturating_sub(v.len() * 4);
+        self.free_i32.push(v);
+    }
+
+    /// Recycle an f32 tensor's storage (i32 tensors are not arena-managed).
+    pub fn recycle(&mut self, t: Tensor) {
+        self.recycle_vec(t.into_f32());
+    }
+
+    pub fn recycle_partials(&mut self, p: Partials) {
+        self.recycle(p.o);
+        self.recycle(p.m);
+        self.recycle(p.l);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycle_reuses_capacity() {
+        let mut a = TensorArena::new();
+        let b1 = a.take(128);
+        assert_eq!(a.stats().fresh_allocs, 1);
+        assert!(b1.iter().all(|&x| x == 0.0));
+        a.recycle_vec(b1);
+        // same size: served from the free list, no fresh allocation
+        let b2 = a.take(128);
+        assert_eq!(a.stats().fresh_allocs, 1);
+        a.recycle_vec(b2);
+        // smaller size: reuses the larger buffer's capacity
+        let b3 = a.take(64);
+        assert_eq!(a.stats().fresh_allocs, 1);
+        assert_eq!(b3.len(), 64);
+        a.recycle_vec(b3);
+        // larger size: a genuine miss
+        let b4 = a.take(256);
+        assert_eq!(a.stats().fresh_allocs, 2);
+        a.recycle_vec(b4);
+        assert_eq!(a.stats().takes, 4);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let mut a = TensorArena::new();
+        let big = a.take(1024);
+        let small = a.take(16);
+        a.recycle_vec(big);
+        a.recycle_vec(small);
+        // a 16-element take must NOT consume the 1024 buffer
+        let b = a.take(16);
+        assert!(b.capacity() < 1024, "best-fit picked the big buffer");
+        a.recycle_vec(b);
+        let c = a.take(512);
+        assert_eq!(a.stats().fresh_allocs, 2, "512 fits the 1024 buffer");
+        a.recycle_vec(c);
+    }
+
+    #[test]
+    fn high_water_tracks_peak_outstanding() {
+        let mut a = TensorArena::new();
+        let x = a.take(100);
+        let y = a.take(50);
+        assert_eq!(a.stats().high_water_bytes, 600);
+        a.recycle_vec(x);
+        a.recycle_vec(y);
+        assert_eq!(a.outstanding_bytes(), 0);
+        let z = a.take(10);
+        assert_eq!(a.stats().high_water_bytes, 600, "peak is sticky");
+        a.recycle_vec(z);
+    }
+
+    #[test]
+    fn partials_are_identity_filled() {
+        let mut a = TensorArena::new();
+        // dirty a buffer first so reuse must re-fill correctly
+        let mut d = a.take(2 * 3 * 4);
+        d.fill(7.0);
+        a.recycle_vec(d);
+        let p = a.take_partials(2, 3, 4);
+        assert!(p.o.as_f32().iter().all(|&v| v == 0.0));
+        assert!(p.m.as_f32().iter().all(|&v| v == f32::NEG_INFINITY));
+        assert!(p.l.as_f32().iter().all(|&v| v == 0.0));
+        a.recycle_partials(p);
+    }
+
+    #[test]
+    fn i32_buffers_recycle_independently() {
+        let mut a = TensorArena::new();
+        let mut p = a.take_i32_buf(8);
+        assert_eq!(a.stats().fresh_allocs, 1);
+        p.resize(8, 0);
+        a.recycle_vec_i32(p);
+        let p = a.take_i32_buf(4);
+        assert_eq!(a.stats().fresh_allocs, 1);
+        assert!(p.is_empty() && p.capacity() >= 4);
+        a.recycle_vec_i32(p);
+    }
+
+    #[test]
+    fn take_buf_is_empty_with_capacity() {
+        let mut a = TensorArena::new();
+        let mut b = a.take_buf(32);
+        assert!(b.is_empty() && b.capacity() >= 32);
+        b.extend_from_slice(&[1.0; 32]);
+        a.recycle_vec(b);
+        // reuse keeps capacity, arrives cleared
+        let b = a.take_buf(16);
+        assert!(b.is_empty() && b.capacity() >= 32);
+        assert_eq!(a.stats().fresh_allocs, 1);
+        a.recycle_vec(b);
+    }
+}

@@ -16,6 +16,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::ModelConfig;
+use crate::plan::{PlanExecCtx, PlanExecOut, StepPlan};
+use crate::runtime::arena::TensorArena;
 use crate::runtime::client::RuntimeHandle;
 use crate::runtime::native::{self, Partials};
 use crate::tensor::Tensor;
@@ -75,12 +77,33 @@ pub trait Backend: Send + Sync {
     /// Pairwise LSE merge of partials.
     fn merge2(&self, a: &Partials, b: &Partials) -> Result<Partials>;
 
-    /// Execution pool for coordinator-level fan-out (the engine's
-    /// per-request unique-attention jobs in `decode_step`). `None` means
-    /// the backend is serial or manages its own parallelism (PJRT).
+    /// Execution pool for coordinator-level fan-out (the plan executor's
+    /// per-request unique-attention jobs). `None` means the backend is
+    /// serial or manages its own parallelism (PJRT).
     fn exec_pool(&self) -> Option<&Arc<ThreadPool>> {
         None
     }
+
+    /// Dispatch-aware chunk attention whose output partials are staged in
+    /// the step `arena` (decode plan-executor path). The default ignores
+    /// the arena and delegates to [`Backend::chunk_attn_auto`] — correct
+    /// for backends whose outputs are allocated elsewhere (PJRT buffers);
+    /// [`NativeBackend`] overrides it to write into recycled
+    /// identity-filled partials, bit-identical to the allocating kernel.
+    fn chunk_attn_arena(&self, q: &Tensor, k: &Tensor, v: &Tensor,
+                        q_pos: &[i32], k_base: i32, valid: i32,
+                        arena: &mut TensorArena) -> Result<Partials> {
+        let _ = arena;
+        self.chunk_attn_auto(q, k, v, q_pos, k_base, valid)
+    }
+
+    /// Execute a decode [`StepPlan`] (the engine hot path): all layers,
+    /// shared + unique attention, arena-staged. Every concrete backend
+    /// delegates to [`crate::plan::exec::execute_plan`]; the method lives
+    /// on the trait so a backend (e.g. a remote disagg node) can
+    /// substitute its own executor for the same plan IR.
+    fn exec_plan(&self, plan: &StepPlan, x: Tensor,
+                 ctx: &mut PlanExecCtx<'_>) -> Result<PlanExecOut>;
 }
 
 // ---------------------------------------------------------------- helpers
@@ -308,6 +331,11 @@ impl Backend for XlaBackend {
         Ok(Tensor::f32(&[b, total], data))
     }
 
+    fn exec_plan(&self, plan: &StepPlan, x: Tensor,
+                 ctx: &mut PlanExecCtx<'_>) -> Result<PlanExecOut> {
+        crate::plan::exec::execute_plan(self, plan, x, ctx)
+    }
+
     fn merge2(&self, a: &Partials, b: &Partials) -> Result<Partials> {
         let bsz = a.batch();
         let bb = self.bucket(bsz)?;
@@ -449,6 +477,21 @@ impl Backend for NativeBackend {
 
     fn exec_pool(&self) -> Option<&Arc<ThreadPool>> {
         self.pool.as_ref()
+    }
+
+    fn chunk_attn_arena(&self, q: &Tensor, k: &Tensor, v: &Tensor,
+                        q_pos: &[i32], k_base: i32, valid: i32,
+                        arena: &mut TensorArena) -> Result<Partials> {
+        let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+        let mut out = arena.take_partials(b, h, dh);
+        native::chunk_attn_exec_into(q, k, v, q_pos, k_base, valid,
+                                     self.exec(), &mut out);
+        Ok(out)
+    }
+
+    fn exec_plan(&self, plan: &StepPlan, x: Tensor,
+                 ctx: &mut PlanExecCtx<'_>) -> Result<PlanExecOut> {
+        crate::plan::exec::execute_plan(self, plan, x, ctx)
     }
 }
 

@@ -14,12 +14,14 @@
 //!   bucket-padded internally) with [`XlaBackend`] and [`NativeBackend`].
 //! * [`native`] — pure-rust op implementations (fallback + test oracle).
 
+pub mod arena;
 pub mod artifact;
 pub mod backend;
 pub mod client;
 pub mod literal;
 pub mod native;
 
+pub use arena::{ArenaStats, TensorArena};
 pub use artifact::{ArtifactMeta, Manifest};
 pub use backend::{Backend, NativeBackend, XlaBackend};
 pub use client::{RuntimeHandle, RuntimeService, XlaRuntime};

@@ -370,14 +370,43 @@ pub fn chunk_attn_exec(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
                        k_base: i32, valid: i32, pool: Option<&ThreadPool>)
                        -> Partials {
     let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let mut o = vec![0f32; b * h * dh];
+    let mut m = vec![f32::NEG_INFINITY; b * h];
+    let mut l = vec![0f32; b * h];
+    chunk_attn_slices(q, k, v, q_pos, k_base, valid, pool, &mut o, &mut m,
+                      &mut l);
+    Partials {
+        o: Tensor::f32(&[b, h, dh], o),
+        m: Tensor::f32(&[b, h], m),
+        l: Tensor::f32(&[b, h], l),
+    }
+}
+
+/// [`chunk_attn_exec`] into caller-owned (arena) partials. `out` must be
+/// identity-filled (`o = 0`, `m = -inf`, `l = 0`) — masked rows are left
+/// untouched, exactly like the allocating variant's initial fill.
+pub fn chunk_attn_exec_into(q: &Tensor, k: &Tensor, v: &Tensor,
+                            q_pos: &[i32], k_base: i32, valid: i32,
+                            pool: Option<&ThreadPool>, out: &mut Partials) {
+    let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    debug_assert_eq!(out.o.shape(), &[b, h, dh]);
+    chunk_attn_slices(q, k, v, q_pos, k_base, valid, pool,
+                      out.o.as_f32_mut(), out.m.as_f32_mut(),
+                      out.l.as_f32_mut());
+}
+
+/// Shared worker behind both `chunk_attn_exec` variants: `o`/`m`/`l`
+/// must arrive identity-filled; tiling and reduction order are identical
+/// regardless of where the output storage came from.
+#[allow(clippy::too_many_arguments)]
+fn chunk_attn_slices(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
+                     k_base: i32, valid: i32, pool: Option<&ThreadPool>,
+                     o: &mut [f32], m: &mut [f32], l: &mut [f32]) {
+    let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
     let (c, hkv, _) = (k.shape()[0], k.shape()[1], k.shape()[2]);
     let qs = q.as_f32();
     let ks = k.as_f32();
     let vs = v.as_f32();
-
-    let mut o = vec![0f32; b * h * dh];
-    let mut m = vec![f32::NEG_INFINITY; b * h];
-    let mut l = vec![0f32; b * h];
 
     let rows = b * h;
     let work = rows * valid.max(0) as usize * dh;
@@ -404,12 +433,7 @@ pub fn chunk_attn_exec(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
             p.scoped_run(jobs);
         }
         None => chunk_attn_rows(qs, ks, vs, q_pos, k_base, valid, h, dh,
-                                hkv, c, 0, &mut o, &mut m, &mut l),
-    }
-    Partials {
-        o: Tensor::f32(&[b, h, dh], o),
-        m: Tensor::f32(&[b, h], m),
-        l: Tensor::f32(&[b, h], l),
+                                hkv, c, 0, o, m, l),
     }
 }
 
@@ -598,15 +622,27 @@ pub fn finalize(p: &Partials) -> Tensor {
     let shape = p.o.shape().to_vec();
     let (b, h, dh) = (shape[0], shape[1], shape[2]);
     let mut out = vec![0f32; b * h * dh];
+    finalize_into(p, &mut out);
+    Tensor::f32(&[b, h, dh], out)
+}
+
+/// [`finalize`] into a caller-owned (arena) buffer; every element is
+/// written, so the buffer needs no particular prior contents.
+pub fn finalize_into(p: &Partials, out: &mut [f32]) {
+    let shape = p.o.shape();
+    let (bh, dh) = (shape[0] * shape[1], shape[2]);
+    debug_assert_eq!(out.len(), bh * dh);
     let (o, l) = (p.o.as_f32(), p.l.as_f32());
-    for i in 0..b * h {
+    for i in 0..bh {
+        let row = &mut out[i * dh..(i + 1) * dh];
         if l[i] > 0.0 {
-            for j in 0..dh {
-                out[i * dh + j] = o[i * dh + j] / l[i];
+            for (dst, &src) in row.iter_mut().zip(&o[i * dh..(i + 1) * dh]) {
+                *dst = src / l[i];
             }
+        } else {
+            row.fill(0.0);
         }
     }
-    Tensor::f32(&[b, h, dh], out)
 }
 
 #[cfg(test)]
@@ -803,6 +839,52 @@ mod tests {
                            "router b={b} h={h} c={c}");
             }
         }
+    }
+
+    /// The arena-output variant must be bit-identical to the allocating
+    /// kernel, including masked (identity) rows, serial and pooled.
+    #[test]
+    fn chunk_attn_exec_into_bit_identical() {
+        use crate::util::threadpool::ThreadPool;
+        let mut rng = Rng::new(0xA7E4A);
+        let pool = ThreadPool::new(3);
+        for &(b, h, hkv, dh, c) in
+            &[(1usize, 4usize, 2usize, 16usize, 64usize), (5, 4, 2, 16, 96)]
+        {
+            let q = rand_t(&mut rng, &[b, h, dh]);
+            let k = rand_t(&mut rng, &[c, hkv, dh]);
+            let v = rand_t(&mut rng, &[c, hkv, dh]);
+            let mut q_pos: Vec<i32> =
+                (0..b).map(|i| (i * 37) as i32).collect();
+            if b > 1 {
+                q_pos[1] = -1; // padding row stays identity
+            }
+            for exec_pool in [None, Some(&pool)] {
+                let want = chunk_attn_exec(&q, &k, &v, &q_pos, 0, c as i32,
+                                           exec_pool);
+                let mut got = Partials::identity(b, h, dh);
+                chunk_attn_exec_into(&q, &k, &v, &q_pos, 0, c as i32,
+                                     exec_pool, &mut got);
+                assert_eq!(want.o, got.o);
+                assert_eq!(want.m, got.m);
+                assert_eq!(want.l, got.l);
+            }
+        }
+    }
+
+    #[test]
+    fn finalize_into_overwrites_dirty_buffer() {
+        let mut rng = Rng::new(0xF1A);
+        let q = rand_t(&mut rng, &[2, 4, 8]);
+        let k = rand_t(&mut rng, &[16, 2, 8]);
+        let v = rand_t(&mut rng, &[16, 2, 8]);
+        // row 1 masked → identity partial → finalize must zero it even
+        // when the output buffer arrives dirty
+        let p = chunk_attn(&q, &k, &v, &[100, -1], 0, 16);
+        let want = finalize(&p);
+        let mut out = vec![7.0f32; 2 * 4 * 8];
+        finalize_into(&p, &mut out);
+        assert_eq!(out, want.as_f32());
     }
 
     #[test]

@@ -16,10 +16,11 @@
 //! channels. Python is nowhere in the path.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -37,32 +38,168 @@ pub struct HttpRequest {
     pub body: String,
 }
 
-/// Parse one HTTP/1.1 request from a stream.
-pub fn parse_request(stream: &mut TcpStream) -> Result<HttpRequest> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().context("no method")?.to_string();
-    let path = parts.next().context("no path")?.to_string();
+/// Largest accepted request body. Beyond this the acceptor answers 413
+/// without reading the payload, so an attacker cannot make it buffer
+/// unbounded bytes.
+pub const MAX_BODY_BYTES: usize = 1 << 20; // 1 MiB
 
-    let mut content_length = 0usize;
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
+/// Largest accepted header block (request line + headers). Bounds the
+/// acceptor's buffering for clients that never send the blank line.
+pub const MAX_HEADER_BYTES: usize = 16 << 10; // 16 KiB
+
+/// Socket idle-read timeout. A stalled client (no bytes arriving) gets a
+/// 408 and its acceptor thread back, instead of pinning the thread
+/// forever.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Whole-request deadline as a multiple of the idle timeout: a slowloris
+/// client dripping one byte per idle window stays under the per-read
+/// timeout, so the parser also enforces `timeout × DEADLINE_FACTOR` of
+/// total wall time per request (checked after every read).
+pub const DEADLINE_FACTOR: u32 = 6;
+
+/// Acceptor-side protection limits (file-configurable: `server` section,
+/// keys `max_body_bytes` / `read_timeout_ms`; `read_timeout_ms = 0`
+/// disables the timeout).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerLimits {
+    pub max_body_bytes: usize,
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for ServerLimits {
+    fn default() -> ServerLimits {
+        ServerLimits {
+            max_body_bytes: MAX_BODY_BYTES,
+            read_timeout: Some(READ_TIMEOUT),
         }
+    }
+}
+
+/// Why a request could not be parsed, as the HTTP status to answer with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParseError {
+    /// 400 — malformed request line / headers / connection error.
+    Bad,
+    /// 408 — the client stalled past the read timeout.
+    Timeout,
+    /// 413 — declared Content-Length exceeds the body cap.
+    TooLarge,
+}
+
+impl ParseError {
+    pub fn status(self) -> u16 {
+        match self {
+            ParseError::Bad => 400,
+            ParseError::Timeout => 408,
+            ParseError::TooLarge => 413,
+        }
+    }
+
+    fn from_io(e: &std::io::Error) -> ParseError {
+        match e.kind() {
+            // platform-dependent: timeouts surface as either kind
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+                ParseError::Timeout
+            }
+            _ => ParseError::Bad,
+        }
+    }
+}
+
+/// Parse one HTTP/1.1 request from a stream (default limits).
+pub fn parse_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    parse_request_limited(stream, MAX_BODY_BYTES, Some(READ_TIMEOUT))
+        .map_err(|e| anyhow::anyhow!("bad request ({})", e.status()))
+}
+
+/// End of the header block in `buf` → offset of the first body byte.
+fn header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4).or_else(
+        || buf.windows(2).position(|w| w == b"\n\n").map(|p| p + 2),
+    )
+}
+
+/// Parse one HTTP/1.1 request with explicit limits; errors carry the
+/// HTTP status the caller should answer with.
+///
+/// Reads the socket in bounded chunks (never `read_line`), so every
+/// protection holds unconditionally: headers are capped at
+/// [`MAX_HEADER_BYTES`] (413), the declared body at `max_body` (413,
+/// without reading the payload), each read at `timeout` idle time (408),
+/// and the whole request at `timeout ×` [`DEADLINE_FACTOR`] wall time
+/// (408) — the last closes the slowloris hole a per-read timeout alone
+/// leaves open.
+pub fn parse_request_limited(stream: &mut TcpStream, max_body: usize,
+                             timeout: Option<Duration>)
+                             -> std::result::Result<HttpRequest, ParseError> {
+    // best effort: a socket that cannot take a timeout still serves
+    let _ = stream.set_read_timeout(timeout);
+    let deadline = timeout
+        .map(|t| std::time::Instant::now() + t.saturating_mul(DEADLINE_FACTOR));
+    let over_deadline = |d: &Option<std::time::Instant>| match d {
+        Some(d) => std::time::Instant::now() > *d,
+        None => false,
+    };
+
+    // ---- header block, chunk by chunk, capped
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 1024];
+    let body_start = loop {
+        if let Some(end) = header_end(&buf) {
+            break end;
+        }
+        if buf.len() >= MAX_HEADER_BYTES {
+            return Err(ParseError::TooLarge);
+        }
+        if over_deadline(&deadline) {
+            return Err(ParseError::Timeout);
+        }
+        let n = match stream.read(&mut tmp) {
+            Ok(n) => n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ParseError::from_io(&e)),
+        };
+        if n == 0 {
+            return Err(ParseError::Bad); // closed mid-headers
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head =
+        std::str::from_utf8(&buf[..body_start]).map_err(|_| ParseError::Bad)?;
+    let mut lines = head.lines();
+    let mut parts = lines.next().ok_or(ParseError::Bad)?.split_whitespace();
+    let method = parts.next().ok_or(ParseError::Bad)?.to_string();
+    let path = parts.next().ok_or(ParseError::Bad)?.to_string();
+    let mut content_length = 0usize;
+    for h in lines {
         if let Some((k, v)) = h.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().unwrap_or(0);
             }
         }
     }
-    let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        reader.read_exact(&mut body)?;
+    if content_length > max_body {
+        return Err(ParseError::TooLarge);
+    }
+
+    // ---- body: the tail already read plus bounded chunked reads
+    let mut body = buf[body_start..].to_vec();
+    body.truncate(content_length);
+    while body.len() < content_length {
+        if over_deadline(&deadline) {
+            return Err(ParseError::Timeout);
+        }
+        let want = (content_length - body.len()).min(tmp.len());
+        let n = match stream.read(&mut tmp[..want]) {
+            Ok(n) => n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ParseError::from_io(&e)),
+        };
+        if n == 0 {
+            return Err(ParseError::Bad); // closed mid-body
+        }
+        body.extend_from_slice(&tmp[..n]);
     }
     Ok(HttpRequest {
         method,
@@ -78,6 +215,8 @@ pub fn respond(stream: &mut TcpStream, status: u16, content_type: &str,
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
         500 => "Internal Server Error",
         _ => "",
     };
@@ -165,11 +304,18 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
 }
 
 fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
-               stats: Arc<Mutex<Json>>) {
-    let req = match parse_request(&mut stream) {
+               stats: Arc<Mutex<Json>>, limits: ServerLimits) {
+    let req = match parse_request_limited(&mut stream,
+                                          limits.max_body_bytes,
+                                          limits.read_timeout) {
         Ok(r) => r,
-        Err(_) => {
-            let _ = respond(&mut stream, 400, "text/plain", "bad request");
+        Err(e) => {
+            let msg = match e {
+                ParseError::Timeout => "request read timed out",
+                ParseError::TooLarge => "request body too large",
+                ParseError::Bad => "bad request",
+            };
+            let _ = respond(&mut stream, e.status(), "text/plain", msg);
             return;
         }
     };
@@ -286,13 +432,33 @@ pub fn run_server(args: &Args) -> Result<()> {
     } else {
         build_engine_from_args(args)?
     };
-    serve_on(addr.parse::<std::net::SocketAddr>()?, engine, None)
+    let mut limits = ServerLimits::default();
+    if let Some(b) = file_cfg.http_max_body_bytes {
+        limits.max_body_bytes = b;
+    }
+    if let Some(ms) = file_cfg.http_read_timeout_ms {
+        limits.read_timeout = if ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(ms))
+        };
+    }
+    serve_on_limited(addr.parse::<std::net::SocketAddr>()?, engine, None,
+                     limits)
 }
 
-/// Core server loop; `ready` (if given) receives the bound address once
-/// listening — used by tests to serve on an ephemeral port.
+/// Core server loop with default acceptor limits; `ready` (if given)
+/// receives the bound address once listening — used by tests to serve on
+/// an ephemeral port.
 pub fn serve_on(addr: std::net::SocketAddr, engine: Engine,
                 ready: Option<Sender<std::net::SocketAddr>>) -> Result<()> {
+    serve_on_limited(addr, engine, ready, ServerLimits::default())
+}
+
+/// [`serve_on`] with explicit acceptor-side limits.
+pub fn serve_on_limited(addr: std::net::SocketAddr, engine: Engine,
+                        ready: Option<Sender<std::net::SocketAddr>>,
+                        limits: ServerLimits) -> Result<()> {
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
@@ -314,7 +480,9 @@ pub fn serve_on(addr: std::net::SocketAddr, engine: Engine,
             Ok(s) => {
                 let jobs = jobs_tx.clone();
                 let stats = Arc::clone(&stats);
-                std::thread::spawn(move || handle_conn(s, jobs, stats));
+                std::thread::spawn(move || {
+                    handle_conn(s, jobs, stats, limits)
+                });
             }
             Err(e) => crate::warnlog!("server", "accept failed: {e}"),
         }
@@ -348,6 +516,140 @@ mod tests {
         assert!(got.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(got.ends_with("hi"));
         assert!(got.contains("Content-Length: 2"));
+    }
+
+    #[test]
+    fn oversize_body_rejected_without_reading_payload() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // declares 10 MiB but sends nothing — the cap must trip on
+            // the header alone, not after buffering the payload
+            write!(
+                s,
+                "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                10 * 1024 * 1024
+            )
+            .unwrap();
+            // hold the connection so the server isn't racing a RST
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let err = parse_request_limited(&mut stream, MAX_BODY_BYTES,
+                                        Some(Duration::from_secs(2)))
+            .unwrap_err();
+        assert_eq!(err, ParseError::TooLarge);
+        assert_eq!(err.status(), 413);
+        respond(&mut stream, err.status(), "text/plain", "too large")
+            .unwrap();
+    }
+
+    #[test]
+    fn stalled_client_times_out_with_408() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // half a request line, then stall
+            s.write_all(b"POST /gen").unwrap();
+            std::thread::sleep(Duration::from_millis(500));
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let t0 = std::time::Instant::now();
+        let err = parse_request_limited(&mut stream, MAX_BODY_BYTES,
+                                        Some(Duration::from_millis(50)))
+            .unwrap_err();
+        assert_eq!(err, ParseError::Timeout);
+        assert_eq!(err.status(), 408);
+        assert!(t0.elapsed() < Duration::from_millis(450),
+                "timeout did not fire early");
+    }
+
+    #[test]
+    fn oversize_header_block_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // one endless request line, no newline ever — must trip the
+            // header cap, not buffer without bound
+            let blob = vec![b'A'; MAX_HEADER_BYTES + 1024];
+            let _ = s.write_all(&blob);
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let err = parse_request_limited(&mut stream, MAX_BODY_BYTES,
+                                        Some(Duration::from_secs(2)))
+            .unwrap_err();
+        assert_eq!(err, ParseError::TooLarge);
+    }
+
+    #[test]
+    fn slow_drip_client_hits_total_deadline() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // slowloris: every byte arrives inside the idle timeout, so
+            // only the whole-request deadline can end this
+            for _ in 0..200 {
+                if s.write_all(b"x").is_err() {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let t0 = std::time::Instant::now();
+        // idle timeout 40ms → deadline = 40ms × DEADLINE_FACTOR = 240ms,
+        // while the drip alone would take ~4s
+        let err = parse_request_limited(&mut stream, MAX_BODY_BYTES,
+                                        Some(Duration::from_millis(40)))
+            .unwrap_err();
+        assert_eq!(err, ParseError::Timeout);
+        assert!(t0.elapsed() < Duration::from_secs(2),
+                "deadline did not bound the slow-drip request");
+    }
+
+    #[test]
+    fn stalled_body_times_out_with_408() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // complete headers, body never arrives
+            s.write_all(b"POST /generate HTTP/1.1\r\nContent-Length: 5\r\n\r\nhi")
+                .unwrap();
+            std::thread::sleep(Duration::from_millis(500));
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let err = parse_request_limited(&mut stream, MAX_BODY_BYTES,
+                                        Some(Duration::from_millis(50)))
+            .unwrap_err();
+        assert_eq!(err, ParseError::Timeout);
+    }
+
+    #[test]
+    fn respond_formats_408_and_413_reasons() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        for (status, reason) in
+            [(408u16, "Request Timeout"), (413, "Payload Too Large")]
+        {
+            let client = std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                let mut buf = String::new();
+                s.read_to_string(&mut buf).unwrap();
+                buf
+            });
+            let (mut stream, _) = listener.accept().unwrap();
+            respond(&mut stream, status, "text/plain", "x").unwrap();
+            drop(stream);
+            let got = client.join().unwrap();
+            assert!(got.starts_with(&format!("HTTP/1.1 {status} {reason}")),
+                    "{got}");
+        }
     }
 
     #[test]

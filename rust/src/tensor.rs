@@ -172,6 +172,14 @@ impl Tensor {
         Tensor::f32(&s, self.as_f32()[start * w..end * w].to_vec())
     }
 
+    /// Take the f32 payload back out (arena recycling path).
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            Tensor::I32 { .. } => panic!("tensor is i32, expected f32"),
+        }
+    }
+
     /// Max absolute difference against another f32 tensor (test helper).
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape(), other.shape());

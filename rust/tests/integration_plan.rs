@@ -1,0 +1,205 @@
+//! Plan/execute decode-pipeline integration (artifact-free: synthetic
+//! weights + online-registered domains, native backend).
+//!
+//! Pins the three properties the StepPlan refactor must preserve:
+//!
+//! 1. **Numerics** — batched plan-driven decode produces exactly the
+//!    tokens each request gets when decoded alone (batch forming,
+//!    gather/scatter index tables, and LSE merge order are invisible);
+//! 2. **Zero-alloc steady state** — after warm-up, the step arena stops
+//!    allocating: every gather/partial/merge buffer recycles;
+//! 3. **Session KV reuse** — multi-turn conversations over the
+//!    plan/execute path match a fresh request with the concatenated
+//!    history.
+
+use moska::config::{ModelConfig, ServingConfig};
+use moska::engine::Engine;
+use moska::kvcache::SharedStore;
+use moska::model::sampling::Sampler;
+use moska::model::Weights;
+use moska::runtime::NativeBackend;
+
+const CHUNK: usize = 64;
+
+fn native_engine(threads: usize, pool_pages: usize) -> Engine {
+    let model = ModelConfig::tiny();
+    let cfg = ServingConfig {
+        top_k: None,
+        exec_threads: threads,
+        ..Default::default()
+    };
+    let be = NativeBackend::with_threads(model.clone(), CHUNK, threads);
+    let weights = Weights::synthetic(model, 0x5EED);
+    let mut eng = Engine::new(
+        Box::new(be), weights, SharedStore::empty(CHUNK), cfg, pool_pages,
+    );
+    // two registered domains (2 and 3 chunks) exercise multi-group plans
+    let alpha: Vec<i32> = (0..2 * CHUNK).map(|i| (i % 251) as i32).collect();
+    let beta: Vec<i32> =
+        (0..3 * CHUNK).map(|i| ((i * 7 + 3) % 251) as i32).collect();
+    eng.register_domain("alpha", &alpha).expect("register alpha");
+    eng.register_domain("beta", &beta).expect("register beta");
+    eng
+}
+
+fn prompt(seed: i32) -> Vec<i32> {
+    (0..8).map(|j| (seed * 37 + j * 11).rem_euclid(251)).collect()
+}
+
+/// Requests decoded inside a mixed batch (two domains + one
+/// domain-less request) must produce exactly their solo tokens.
+#[test]
+fn batched_plan_decode_matches_solo() {
+    let steps = 6;
+    let specs: Vec<(Option<&str>, i32)> = vec![
+        (Some("alpha"), 1),
+        (Some("beta"), 2),
+        (Some("alpha"), 3),
+        (None, 4),
+        (Some("beta"), 5),
+    ];
+    // solo references
+    let mut want = Vec::new();
+    for (dom, seed) in &specs {
+        let mut solo = native_engine(1, 4096);
+        solo.submit(*dom, prompt(*seed), steps, Sampler::Greedy).unwrap();
+        want.push(solo.run_to_completion().unwrap().pop().unwrap().tokens);
+    }
+    // one batched engine
+    let mut eng = native_engine(1, 4096);
+    let mut ids = Vec::new();
+    for (dom, seed) in &specs {
+        ids.push(
+            eng.submit(*dom, prompt(*seed), steps, Sampler::Greedy)
+                .unwrap(),
+        );
+    }
+    let results = eng.run_to_completion().unwrap();
+    for (id, want) in ids.iter().zip(&want) {
+        let got = &results.iter().find(|r| r.id == *id).unwrap().tokens;
+        assert_eq!(got, want, "request {id} diverged in the batch");
+    }
+    // the shared path actually batched across requests
+    assert!(eng.batching_factor() > 1.5,
+            "batching factor {}", eng.batching_factor());
+    assert_eq!(eng.pool.allocated(), 0, "pages leaked");
+}
+
+/// Steady-state decode performs zero heap allocations in arena-managed
+/// paths: after warm-up steps, `fresh_allocs` must not move.
+#[test]
+fn steady_state_decode_is_arena_allocation_free() {
+    let mut eng = native_engine(1, 4096);
+    for i in 0..4i32 {
+        // max_new keeps every request inside one unique-KV page, so the
+        // step's buffer shapes are stable after warm-up
+        eng.submit(Some("alpha"), prompt(10 + i), 40, Sampler::Greedy)
+            .unwrap();
+    }
+    for _ in 0..10 {
+        assert!(eng.step().unwrap(), "work ended during warm-up");
+    }
+    let stats = eng.arena_stats().clone();
+    assert!(stats.high_water_bytes > 0, "arena unused by decode");
+    assert!(stats.fresh_allocs > 0);
+    for _ in 0..20 {
+        assert!(eng.step().unwrap(), "work ended during measurement");
+    }
+    let after = eng.arena_stats();
+    assert_eq!(
+        after.fresh_allocs, stats.fresh_allocs,
+        "steady-state decode allocated {} fresh arena buffers",
+        after.fresh_allocs - stats.fresh_allocs
+    );
+    let results = eng.run_to_completion().unwrap();
+    assert_eq!(results.len(), 4);
+    assert!(results.iter().all(|r| r.tokens.len() == 40));
+}
+
+/// Two session turns over the plan/execute decode path == one fresh
+/// request over the concatenated history (prefix KV reuse preserved).
+#[test]
+fn session_reuse_matches_fresh_request_native() {
+    let mut eng = native_engine(1, 4096);
+    let p1: Vec<i32> = vec![11, 22, 33, 44, 55, 66];
+    let p2: Vec<i32> = vec![77, 88, 99];
+    let (n1, n2) = (3usize, 4usize);
+
+    let sid = eng.open_session(Some("beta")).unwrap();
+    eng.submit_turn(sid, p1.clone(), n1, Sampler::Greedy).unwrap();
+    let gen1 = eng.run_to_completion().unwrap().pop().unwrap().tokens;
+    assert_eq!(gen1.len(), n1);
+    eng.submit_turn(sid, p2.clone(), n2, Sampler::Greedy).unwrap();
+    let gen2 = eng.run_to_completion().unwrap().pop().unwrap().tokens;
+    assert_eq!(gen2.len(), n2);
+    assert_eq!(eng.session(sid).unwrap().turns, 2);
+
+    // fresh request: prompt = p1 ++ gen1 ++ p2 (same visible history)
+    let mut full = p1;
+    full.extend_from_slice(&gen1);
+    full.extend_from_slice(&p2);
+    let mut fresh = native_engine(1, 4096);
+    fresh.submit(Some("beta"), full, n2, Sampler::Greedy).unwrap();
+    let want = fresh.run_to_completion().unwrap().pop().unwrap().tokens;
+    assert_eq!(gen2, want, "session turn-2 diverged from fresh request");
+
+    let before = eng.pool.allocated();
+    assert!(before > 0, "session parked no KV");
+    eng.close_session(sid).unwrap();
+    assert_eq!(eng.pool.allocated(), 0);
+}
+
+/// Admission: a request whose worst-case demand exactly equals the free
+/// pool is admitted and completes; one page less is rejected up front.
+#[test]
+fn admission_exact_page_fit_engine_level() {
+    // tiny model: 2 layers; prompt 4 + max_new 4 → 1 page per layer
+    let model = ModelConfig::tiny();
+    let mk = |pages: usize| {
+        let be = NativeBackend::with_threads(model.clone(), CHUNK, 1);
+        let weights = Weights::synthetic(model.clone(), 0xF17);
+        Engine::new(Box::new(be), weights, SharedStore::empty(CHUNK),
+                    ServingConfig::default(), pages)
+    };
+    let mut exact = mk(2);
+    exact
+        .submit(None, vec![1, 2, 3, 4], 4, Sampler::Greedy)
+        .expect("exact fit must admit");
+    let r = exact.run_to_completion().unwrap();
+    assert_eq!(r[0].tokens.len(), 4);
+    assert_eq!(exact.pool.allocated(), 0);
+
+    let mut starved = mk(1);
+    let err = starved
+        .submit(None, vec![1, 2, 3, 4], 4, Sampler::Greedy)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("KV pages"), "{err:#}");
+}
+
+/// The route-live plan branch (`route_every_layer`) still decodes and
+/// routes per layer.
+#[test]
+fn route_every_layer_plan_branch_decodes() {
+    let model = ModelConfig::tiny();
+    let cfg = ServingConfig {
+        top_k: Some(1),
+        route_every_layer: true,
+        exec_threads: 1,
+        ..Default::default()
+    };
+    let be = NativeBackend::with_threads(model.clone(), CHUNK, 1);
+    let weights = Weights::synthetic(model, 0x0DD);
+    let mut eng = Engine::new(
+        Box::new(be), weights, SharedStore::empty(CHUNK), cfg, 4096,
+    );
+    let dom: Vec<i32> = (0..4 * CHUNK).map(|i| (i % 199) as i32).collect();
+    eng.register_domain("d", &dom).unwrap();
+    let queries_before = eng.router.stats.queries;
+    eng.submit(Some("d"), prompt(9), 5, Sampler::Greedy).unwrap();
+    let r = eng.run_to_completion().unwrap();
+    assert_eq!(r[0].tokens.len(), 5);
+    // per-layer routing: every decode step scores 2 layers' queries
+    // (tiny model), so the counter grows faster than once per step
+    let routed = eng.router.stats.queries - queries_before;
+    assert!(routed >= 10, "expected per-layer routing, saw {routed}");
+}
