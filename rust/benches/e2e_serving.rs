@@ -15,15 +15,19 @@
 //!    (Shared-KV GEMM), dense and 75%-sparse; needs `make artifacts`.
 
 use moska::config::{ModelConfig, ServingConfig};
+use moska::disagg::{synthetic_store, synthetic_weights, DisaggCluster,
+                    SYNTH_CHUNK, SYNTH_DOMAIN};
 use moska::engine::{build_engine, Engine};
 use moska::kvcache::SharedStore;
 use moska::model::sampling::Sampler;
 use moska::model::Weights;
+use moska::remote::{spawn_shared_node, RemoteFabric, TransportCfg};
 use moska::runtime::artifact::default_artifacts_dir;
-use moska::runtime::NativeBackend;
+use moska::runtime::{Backend, NativeBackend};
 use moska::util::bench::Table;
 use moska::util::json::Json;
 use moska::util::threadpool::ThreadPool;
+use std::sync::Arc;
 use std::time::Instant;
 
 // ------------------------------------------------- native decode section
@@ -111,6 +115,66 @@ fn run_native(threads: usize, n_req: usize, steps: usize) -> NativeRun {
     }
 }
 
+/// Loopback remote-fabric measurements for BENCH_decode.json: spawn a
+/// `shared-node` server in-process on an ephemeral port, run the same
+/// disagg decode locally and over the socket, assert bit-identical
+/// tokens, and report the wire counters.
+fn fabric_bench() -> Vec<(&'static str, Json)> {
+    let (b, steps) = (4usize, 8usize);
+    let shared = Arc::new(synthetic_store().expect("synthetic store"));
+    let mk_be = || -> Arc<dyn Backend> {
+        Arc::new(NativeBackend::with_threads(ModelConfig::tiny(),
+                                             SYNTH_CHUNK, 1))
+    };
+    let addr = spawn_shared_node(mk_be(), Arc::clone(&shared))
+        .expect("spawn shared node");
+
+    let mut local = DisaggCluster::with_backends(
+        mk_be(), mk_be(), synthetic_weights(), Arc::clone(&shared),
+        Some(4), 32,
+    );
+    let pl = local.run_point(b, SYNTH_DOMAIN, 32, steps).expect("local");
+
+    let fabric = RemoteFabric::connect(&addr.to_string(),
+                                       TransportCfg::default())
+        .expect("connect fabric");
+    let mut remote = DisaggCluster::with_fabric(
+        mk_be(), Box::new(fabric), synthetic_weights(),
+        Arc::clone(&shared), Some(4), 32,
+    );
+    let t0 = Instant::now();
+    let pr = remote.run_point(b, SYNTH_DOMAIN, 32, steps).expect("remote");
+    let remote_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(pl.tokens, pr.tokens,
+               "loopback remote decode diverged from in-process decode");
+    println!("== remote fabric loopback (shared node at {addr}) ==");
+    // read through the cluster's Metrics registry (run_point publishes
+    // the FabricStats counters there as fabric_* gauges) — this is the
+    // exported observability surface, so the bench consumes it
+    let g = |name: &str| -> f64 {
+        remote.metrics.gauge_value(name).unwrap_or(0.0)
+    };
+    let (sent, recv) = (g("fabric_bytes_sent"), g("fabric_bytes_recv"));
+    let frames = g("fabric_frames_sent");
+    let retries = g("fabric_retries");
+    let ser_ns = g("fabric_serialize_ns");
+    assert!(sent > 0.0 && frames > 0.0,
+            "fabric gauges missing from cluster metrics");
+    println!("tokens            : bit-identical local vs remote");
+    println!("wire              : {sent:.0} B sent / {recv:.0} B recv \
+              in {frames:.0} frames ({retries:.0} retries)");
+    println!("serialize         : {:.1}µs total", ser_ns / 1e3);
+    vec![
+        ("fabric_bytes_sent", Json::num(sent)),
+        ("fabric_bytes_recv", Json::num(recv)),
+        ("fabric_frames_sent", Json::num(frames)),
+        ("fabric_retries", Json::num(retries)),
+        ("fabric_serialize_ns", Json::num(ser_ns)),
+        ("fabric_remote_wall_s", Json::num(remote_wall)),
+        ("fabric_loopback_identical", Json::num(1.0)),
+    ]
+}
+
 fn native_bench() {
     let (n, steps) = (16usize, 16usize);
     let auto = ThreadPool::resolve_threads(0);
@@ -130,8 +194,12 @@ fn native_bench() {
     println!("arena high-water  : {} bytes ({} fresh allocs total)",
              par.arena_high_water, par.arena_fresh_allocs);
 
+    // remote-fabric loopback section: wire counters ride along in the
+    // same perf-trajectory JSON, next to the arena high-water stats
+    let fabric_entries = fabric_bench();
+
     std::fs::create_dir_all("bench_out").expect("bench_out dir");
-    let j = Json::obj(vec![
+    let mut entries = vec![
         ("bench", Json::str("e2e_native_decode")),
         ("requests", Json::num(n as f64)),
         ("decode_steps", Json::num(steps as f64)),
@@ -146,7 +214,9 @@ fn native_bench() {
         ("arena_high_water_bytes", Json::num(par.arena_high_water as f64)),
         ("arena_fresh_allocs", Json::num(par.arena_fresh_allocs as f64)),
         ("plan_build_mean_ns", Json::num(par.plan_build_mean_ns)),
-    ]);
+    ];
+    entries.extend(fabric_entries);
+    let j = Json::obj(entries);
     let path = "bench_out/BENCH_decode.json";
     std::fs::write(path, j.to_string()).expect("write BENCH_decode.json");
     println!("[json] {path}");

@@ -120,6 +120,9 @@ impl RowAccumulator {
 /// `position_independent` is set the chunk is attended at its *local*
 /// positions (Universal MoSKA composition mode, approximate); otherwise
 /// `k_base = chunk_index * chunk_tokens` (exact prefix semantics).
+/// `arena` stages the gather/concat buffers and kernel partials —
+/// prefill passes the engine's step arena, closing the last
+/// plain-allocation path; `None` falls back to heap allocation.
 #[allow(clippy::too_many_arguments)]
 pub fn shared_attention(
     backend: &dyn Backend,
@@ -131,6 +134,7 @@ pub fn shared_attention(
     acc: &mut RowAccumulator,
     position_independent: bool,
     max_batch: usize,
+    arena: Option<&mut TensorArena>,
 ) -> Result<BatchStats> {
     // plan (batch forming + §Perf-opt-2 run coalescing) then execute —
     // the same two primitives the decode StepPlan uses, so prefill and
@@ -139,13 +143,15 @@ pub fn shared_attention(
         sets, max_batch, domain.chunk, &domain.chunk_bases,
         backend.max_attn_tokens(), position_independent,
     );
-    exec_gemm_calls(backend, domain, layer, q, q_pos, &calls, acc, None)?;
+    exec_gemm_calls(backend, domain, layer, q, q_pos, &calls, acc, arena)?;
     Ok(stats)
 }
 
 /// Unique-KV attention for one request's query rows (one layer): iterate
 /// its pages — on real hardware these are the memory-bound GEMV ops the
-/// paper leaves on the Unique node.
+/// paper leaves on the Unique node. `arena` as in [`shared_attention`];
+/// the returned [`Partials`] are arena-owned when one is passed, so the
+/// caller recycles them after merging.
 pub fn unique_attention(
     backend: &dyn Backend,
     pool: &PagePool,
@@ -153,13 +159,14 @@ pub fn unique_attention(
     layer: usize,
     q: &Tensor,
     q_pos: &[i32],
+    arena: Option<&mut TensorArena>,
 ) -> Result<Partials> {
     // plan the page spans (coalesced up to the kernel's max K/V length)
     // from the layer's in-flight written length, then execute — the
     // decode StepPlan precomputes the same spans once per step
     let spans = plan_unique_spans(kv.layer_len(layer), kv.start_pos,
                                   pool.chunk(), backend.max_attn_tokens());
-    exec_unique_spans(backend, pool, kv, layer, q, q_pos, &spans, None)
+    exec_unique_spans(backend, pool, kv, layer, q, q_pos, &spans, arena)
 }
 
 #[cfg(test)]
@@ -208,9 +215,19 @@ mod tests {
         let sets: Vec<ChunkSet> = vec![vec![0, 2], vec![1], vec![0, 1, 3]];
 
         let mut acc = RowAccumulator::identity(b, 4, 16);
-        shared_attention(&be, &dom, 0, &q, &q_pos, &sets, &mut acc, false, 32)
+        shared_attention(&be, &dom, 0, &q, &q_pos, &sets, &mut acc, false,
+                         32, None)
             .unwrap();
         let got = acc.finalize();
+
+        // arena-staged prefill path must not change a bit
+        let mut arena = TensorArena::new();
+        let mut acc2 = RowAccumulator::from_arena(&mut arena, b, 4, 16);
+        shared_attention(&be, &dom, 0, &q, &q_pos, &sets, &mut acc2, false,
+                         32, Some(&mut arena))
+            .unwrap();
+        assert_eq!(acc2.finalize(), got);
+        acc2.recycle_into(&mut arena);
 
         // direct per-row computation
         for (row, set) in sets.iter().enumerate() {
@@ -321,11 +338,19 @@ mod tests {
                     ),
                     cap,
                 };
-                let got = unique_attention(&be, &pool, &kv, 0, &q, &[q_pos])
+                let got = unique_attention(&be, &pool, &kv, 0, &q, &[q_pos],
+                                           None)
                     .unwrap();
                 let got = native::finalize(&got);
                 let d = got.max_abs_diff(&want);
                 assert!(d < 1e-5, "cap={cap} q_pos={q_pos} diff={d}");
+                // arena path: bit-identical to the allocating path
+                let mut arena = TensorArena::new();
+                let ga = unique_attention(&be, &pool, &kv, 0, &q, &[q_pos],
+                                          Some(&mut arena))
+                    .unwrap();
+                assert_eq!(native::finalize(&ga), got);
+                arena.recycle_partials(ga);
             }
         }
     }

@@ -1,7 +1,6 @@
-//! Live disaggregated two-node simulation (paper §III.C, Fig 3).
+//! Live disaggregated two-node runtime (paper §III.C, Fig 3).
 //!
-//! Splits the decode loop across two "nodes" joined by a message fabric
-//! (threads + channels standing in for the inter-node interconnect):
+//! Splits the decode loop across two nodes joined by a **fabric**:
 //!
 //! * **Unique KV node** — embed, QKV projection, FFN, LM head, and the
 //!   per-request unique-KV attention (memory-bound GEMVs). It also runs
@@ -11,20 +10,51 @@
 //!   unit of work crossing the fabric**, so the shared node does pure
 //!   plan execution (no routing, no batch forming of its own).
 //!
-//! Each node owns its own execution resources: its own
-//! [`Backend`] (for native execution, its own `ThreadPool` via
-//! [`NativeBackend::with_pool`][crate::runtime::NativeBackend::with_pool]
-//! — the seam where the shared/unique split maps onto separate sockets /
-//! NUMA domains) and its own per-step
-//! [`TensorArena`][crate::runtime::arena::TensorArena].
+//! The fabric itself is the [`SharedFabric`] seam with two
+//! implementations:
 //!
-//! Each node tracks the bytes it touches and the FLOPs it executes (tiny-
-//! model op census), so `moska disagg` prints the measured analogue of
-//! Fig 5: shared-node traffic flat in batch size, unique-node traffic
-//! linear, GEMM batching factor rising with batch.
+//! * [`LocalFabric`] — the in-process shared node ([`SharedNode`]): a
+//!   thread + channels standing in for the interconnect. Each node owns
+//!   its own [`Backend`] (own `ThreadPool` via
+//!   [`NativeBackend::with_pool`][crate::runtime::NativeBackend::with_pool]
+//!   — the NUMA seam) and its own
+//!   [`TensorArena`][crate::runtime::arena::TensorArena].
+//! * [`RemoteFabric`][crate::remote::RemoteFabric] — a framed TCP
+//!   connection to a `moska shared-node` **process** (possibly another
+//!   host), shipping the same plans through the versioned codec in
+//!   [`crate::remote::codec`]. `moska disagg --remote <addr>` runs the
+//!   identical decode loop over the socket, bit-comparable to in-process
+//!   execution.
+//!
+//! ## Wire protocol (remote fabric)
+//!
+//! Frames are length-prefixed and CRC-checked: magic `"MoSK"`, codec
+//! version (u16), message kind (u16), payload length (u32), payload,
+//! CRC32 over everything past the magic. A version mismatch fails typed
+//! and immediately — nothing past the header of a foreign version is
+//! interpreted. Per layer the unique node sends one `ExecShared` frame
+//! (layer, query tensor, [`SharedGroupPlan`] with its gather index
+//! tables and run-coalesced [`GemmCall`][crate::plan::GemmCall]s) and
+//! receives one `Partials` frame (per-row LSE partials + node execution
+//! ns). Requests pipeline one-in-flight-per-layer: the frame is sent
+//! *before* the unique node runs its own attention, so both nodes
+//! compute concurrently. Reply deadlines reuse the HTTP server's
+//! timeout machinery (`READ_TIMEOUT × DEADLINE_FACTOR`); dropped
+//! connections reconnect and resend (plan execution is pure, so resend
+//! is safe). See `runtime/README.md` for the full frame layout.
+//!
+//! In this reproduction the unique node still loads the shared store
+//! locally — the *planner* needs router embeddings and chunk geometry —
+//! while the shared node holds it for execution; shipping embeddings
+//! alone is an open item (ROADMAP).
+//!
+//! Each node tracks the bytes it touches and the FLOPs it executes
+//! (tiny-model op census), so `moska disagg` prints the measured
+//! analogue of Fig 5: shared-node traffic flat in batch size, unique-node
+//! traffic linear, GEMM batching factor rising with batch.
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -34,40 +64,81 @@ use crate::attention::RowAccumulator;
 use crate::config::ModelConfig;
 use crate::kvcache::paged::{PagePool, RequestKv};
 use crate::kvcache::shared_store::SharedStore;
-use crate::metrics::UtilizationEstimator;
+use crate::metrics::{Metrics, UtilizationEstimator};
 use crate::model::Weights;
 use crate::plan::{exec_gemm_calls, exec_unique_spans, plan_gemm_calls,
                   plan_unique_spans, PageSpan, SharedGroupPlan};
+use crate::remote::transport::FabricStats;
 use crate::router::Router;
 use crate::runtime::arena::TensorArena;
 use crate::runtime::native::Partials;
 use crate::runtime::Backend;
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 use crate::util::bench::Table;
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
+// ------------------------------------------------------------- the fabric
+
+/// What comes back across the fabric for one shipped plan.
+#[derive(Debug)]
+pub struct FabricReply {
+    /// Per-batch-row attention partials, row order = plan row order.
+    pub parts: Vec<Partials>,
+    /// Wall time the shared node spent executing (ns), as reported by
+    /// the node (its thread locally, or the remote process).
+    pub exec_ns: u64,
+}
+
+/// The disagg seam: ships one layer's [`SharedGroupPlan`] to wherever
+/// the shared node lives. One request in flight per fabric —
+/// [`SharedFabric::submit`] is non-blocking (the node executes while the
+/// unique node runs its own attention), [`SharedFabric::collect`] joins.
+pub trait SharedFabric: Send {
+    fn submit(&mut self, layer: usize, q: &Tensor,
+              plan: &SharedGroupPlan) -> Result<()>;
+    fn collect(&mut self) -> Result<FabricReply>;
+    /// Wire-level counters (remote fabrics; `None` for in-process
+    /// channels, which move pointers, not bytes).
+    fn stats(&self) -> Option<Arc<FabricStats>> {
+        None
+    }
+}
+
+/// Execute one shipped [`SharedGroupPlan`] layer against a resident
+/// store — the shared node's entire job, used identically by the
+/// in-process node thread and the `moska shared-node` server.
+pub fn execute_shared_plan(backend: &dyn Backend, store: &SharedStore,
+                           layer: usize, q: &Tensor,
+                           plan: &SharedGroupPlan, arena: &mut TensorArena)
+                           -> Result<Vec<Partials>> {
+    let dom = store.domain(&plan.domain)?;
+    let cfg = backend.model();
+    let b = q.shape()[0];
+    let mut acc =
+        RowAccumulator::from_arena(arena, b, cfg.n_heads, cfg.head_dim);
+    exec_gemm_calls(backend, dom, layer, q, &plan.q_pos, &plan.calls,
+                    &mut acc, Some(arena))?;
+    // per-row partials cross the fabric back (copy boundary)
+    let rows = (0..b).map(|i| acc.partials().slice_rows(i, i + 1)).collect();
+    acc.recycle_into(arena);
+    Ok(rows)
+}
+
 /// Fabric message: one layer's shared-attention work, fully planned by
-/// the unique node. `q` is the step's query tensor; everything else the
-/// shared node needs (rows, positions, routed sets, formed GEMM calls)
-/// travels inside the plan.
+/// the unique node.
 struct SharedReq {
     layer: usize,
     q: Tensor,
     plan: SharedGroupPlan,
-    reply: Sender<Result<Vec<Partials>>>,
+    reply: Sender<Result<FabricReply>>,
 }
 
-/// Handle to the shared node thread.
+/// Handle to the in-process shared node thread.
 pub struct SharedNode {
     tx: Sender<SharedReq>,
-    pub util: Arc<UtilizationEstimator>,
-    pub busy: Arc<std::sync::atomic::AtomicU64>, // ns
-    /// (query, chunk) pairs served / GEMM calls issued — the realized
-    /// batching factor is pairs / calls.
-    pub pairs: Arc<std::sync::atomic::AtomicU64>,
-    pub calls: Arc<std::sync::atomic::AtomicU64>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -77,45 +148,39 @@ impl SharedNode {
     pub fn spawn(backend: Arc<dyn Backend>, store: Arc<SharedStore>)
                  -> SharedNode {
         let (tx, rx) = channel::<SharedReq>();
-        let util = Arc::new(UtilizationEstimator::default());
-        let busy = Arc::new(std::sync::atomic::AtomicU64::new(0));
-        let pairs = Arc::new(std::sync::atomic::AtomicU64::new(0));
-        let calls = Arc::new(std::sync::atomic::AtomicU64::new(0));
-        let u = Arc::clone(&util);
-        let b = Arc::clone(&busy);
-        let (pa, ca) = (Arc::clone(&pairs), Arc::clone(&calls));
-        let cfg = backend.model().clone();
         let join = std::thread::Builder::new()
             .name("moska-shared-node".into())
             .spawn(move || {
-                u.set_bytes_resident(store.resident_bytes() as u64);
                 // node-local step arena: plan execution staging never
                 // leaves this thread
                 let mut arena = TensorArena::new();
                 while let Ok(req) = rx.recv() {
                     let t0 = Instant::now();
-                    let result = serve_shared(
-                        backend.as_ref(), &store, &cfg, &req, &mut arena,
-                        &u, &pa, &ca,
-                    );
-                    b.fetch_add(t0.elapsed().as_nanos() as u64,
-                                Ordering::Relaxed);
+                    let result = execute_shared_plan(
+                        backend.as_ref(), &store, req.layer, &req.q,
+                        &req.plan, &mut arena,
+                    )
+                    .map(|parts| FabricReply {
+                        parts,
+                        exec_ns: t0.elapsed().as_nanos() as u64,
+                    });
                     let _ = req.reply.send(result);
                 }
             })
             .expect("spawn shared node");
-        SharedNode { tx, util, busy, pairs, calls, join: Some(join) }
+        SharedNode { tx, join: Some(join) }
     }
 
-    /// Synchronous plan-execution RPC (the fabric round trip).
-    pub fn attend(&self, layer: usize, q: Tensor, plan: SharedGroupPlan)
-                  -> Result<Vec<Partials>> {
+    /// Ship a plan; returns the receiver the reply will arrive on.
+    fn request(&self, layer: usize, q: Tensor, plan: SharedGroupPlan)
+               -> Result<Receiver<Result<FabricReply>>> {
         let (reply, rx) = channel();
         self.tx
             .send(SharedReq { layer, q, plan, reply })
             .map_err(|_| anyhow::anyhow!("shared node gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("shared node dropped"))?
+        Ok(rx)
     }
+
 }
 
 impl Drop for SharedNode {
@@ -129,33 +194,50 @@ impl Drop for SharedNode {
     }
 }
 
-/// Execute a shipped [`SharedGroupPlan`] on the shared node's backend.
-#[allow(clippy::too_many_arguments)]
-fn serve_shared(backend: &dyn Backend, store: &SharedStore,
-                cfg: &ModelConfig, req: &SharedReq,
-                arena: &mut TensorArena, util: &UtilizationEstimator,
-                pairs: &std::sync::atomic::AtomicU64,
-                calls: &std::sync::atomic::AtomicU64)
-                -> Result<Vec<Partials>> {
-    let dom = store.domain(&req.plan.domain)?;
-    let b = req.q.shape()[0];
-    let mut acc =
-        RowAccumulator::from_arena(arena, b, cfg.n_heads, cfg.head_dim);
-    exec_gemm_calls(backend, dom, req.layer, &req.q, &req.plan.q_pos,
-                    &req.plan.calls, &mut acc, Some(arena))?;
-    // op census: each GEMM call reads one chunk of K+V once (that's the
-    // whole point) and runs 2·2·H·dh·chunk flops per routed query row.
-    let chunk = store.chunk;
-    let kv_bytes_per_chunk = 2 * chunk * cfg.n_kv_heads * cfg.head_dim * 4;
-    util.add_bytes_read((req.plan.reads * kv_bytes_per_chunk) as u64);
-    let flops_per_pair = 4 * cfg.n_heads * cfg.head_dim * chunk;
-    util.add_flops((req.plan.pairs * flops_per_pair) as u64);
-    pairs.fetch_add(req.plan.pairs as u64, Ordering::Relaxed);
-    calls.fetch_add(req.plan.reads as u64, Ordering::Relaxed);
-    // per-row partials cross the fabric back (copy boundary)
-    let rows = (0..b).map(|i| acc.partials().slice_rows(i, i + 1)).collect();
-    acc.recycle_into(arena);
-    Ok(rows)
+/// In-process fabric: the [`SharedNode`] thread behind the
+/// [`SharedFabric`] seam.
+pub struct LocalFabric {
+    node: SharedNode,
+    pending: Option<Receiver<Result<FabricReply>>>,
+}
+
+impl LocalFabric {
+    pub fn spawn(backend: Arc<dyn Backend>, store: Arc<SharedStore>)
+                 -> LocalFabric {
+        LocalFabric { node: SharedNode::spawn(backend, store), pending: None }
+    }
+}
+
+impl SharedFabric for LocalFabric {
+    fn submit(&mut self, layer: usize, q: &Tensor,
+              plan: &SharedGroupPlan) -> Result<()> {
+        anyhow::ensure!(self.pending.is_none(),
+                        "fabric already has an in-flight request");
+        self.pending =
+            Some(self.node.request(layer, q.clone(), plan.clone())?);
+        Ok(())
+    }
+
+    fn collect(&mut self) -> Result<FabricReply> {
+        let rx = self
+            .pending
+            .take()
+            .context("fabric collect without a submitted request")?;
+        rx.recv().map_err(|_| anyhow::anyhow!("shared node dropped"))?
+    }
+}
+
+// ------------------------------------------------------------ the cluster
+
+/// Client-side view of the shared node's work this cluster shipped
+/// (identical accounting for local and remote fabrics: bytes/flops are a
+/// pure function of the plan and store geometry; busy time is reported
+/// by the node in each reply).
+#[derive(Debug, Default)]
+struct SharedSideStats {
+    busy_ns: u64,
+    pairs: u64,
+    calls: u64,
 }
 
 /// The unique node + driver: owns weights, unique KV, sampling, and the
@@ -165,11 +247,19 @@ pub struct DisaggCluster {
     pub backend: Arc<dyn Backend>,
     pub weights: Weights,
     pub shared: Arc<SharedStore>,
-    pub shared_node: SharedNode,
+    fabric: Box<dyn SharedFabric>,
+    /// Shared-node op census, accounted client-side from shipped plans.
+    pub shared_util: Arc<UtilizationEstimator>,
     pub unique_util: Arc<UtilizationEstimator>,
     pub pool: PagePool,
     pub router: Router,
     pub max_batch: usize,
+    /// Cluster metrics: [`run_point`][DisaggCluster::run_point] publishes
+    /// the fabric byte/frame counters here as `fabric_*` gauges — the
+    /// exported observability surface (the `e2e_serving` bench reads it
+    /// into `BENCH_decode.json`).
+    pub metrics: Metrics,
+    sstats: SharedSideStats,
     /// Unique node's step arena.
     arena: TensorArena,
 }
@@ -196,6 +286,9 @@ pub struct SimPoint {
     pub unique_flops_per_step: f64,
     pub batching_factor: f64,
     pub shared_busy_frac: f64,
+    /// Per-request greedy token streams (`[batch][steps]`) — the
+    /// bit-comparability surface for local-vs-remote verification.
+    pub tokens: Vec<Vec<i32>>,
 }
 
 impl DisaggCluster {
@@ -210,28 +303,50 @@ impl DisaggCluster {
     }
 
     /// Per-node execution: `unique` runs the driver/unique side, `shared
-    /// exec` is moved into the shared node thread. With native backends
-    /// built via `NativeBackend::with_pool`, each node fans out over its
-    /// own worker pool — the shared/unique split maps onto separate
-    /// sockets once pools are NUMA-pinned.
+    /// exec` is moved into the in-process shared node thread. With native
+    /// backends built via `NativeBackend::with_pool`, each node fans out
+    /// over its own worker pool — the shared/unique split maps onto
+    /// separate sockets once pools are NUMA-pinned.
     pub fn with_backends(unique: Arc<dyn Backend>,
                          shared_exec: Arc<dyn Backend>, weights: Weights,
                          shared: Arc<SharedStore>, top_k: Option<usize>,
                          max_batch: usize) -> DisaggCluster {
+        let fabric =
+            Box::new(LocalFabric::spawn(shared_exec, Arc::clone(&shared)));
+        DisaggCluster::with_fabric(unique, fabric, weights, shared, top_k,
+                                   max_batch)
+    }
+
+    /// The general constructor: any [`SharedFabric`] — the in-process
+    /// node or a [`RemoteFabric`][crate::remote::RemoteFabric] to a
+    /// `moska shared-node` process.
+    pub fn with_fabric(unique: Arc<dyn Backend>,
+                       fabric: Box<dyn SharedFabric>, weights: Weights,
+                       shared: Arc<SharedStore>, top_k: Option<usize>,
+                       max_batch: usize) -> DisaggCluster {
         let cfg = unique.model().clone();
         let chunk = unique.chunk_size();
-        let shared_node = SharedNode::spawn(shared_exec, Arc::clone(&shared));
+        let shared_util = Arc::new(UtilizationEstimator::default());
+        shared_util.set_bytes_resident(shared.resident_bytes() as u64);
         DisaggCluster {
             backend: unique,
             weights,
             shared,
-            shared_node,
+            fabric,
+            shared_util,
             unique_util: Arc::new(UtilizationEstimator::default()),
             pool: PagePool::new(8192, chunk, cfg.n_kv_heads, cfg.head_dim),
             router: Router::new(top_k),
             max_batch,
+            metrics: Metrics::new(),
+            sstats: SharedSideStats::default(),
             arena: TensorArena::new(),
         }
+    }
+
+    /// Wire-level fabric counters (remote fabrics only).
+    pub fn fabric_stats(&self) -> Option<Arc<FabricStats>> {
+        self.fabric.stats()
     }
 
     /// Seed `b` decode-ready requests over `domain` with `unique_tokens`
@@ -269,7 +384,8 @@ impl DisaggCluster {
 
     /// One synchronized decode step across both nodes: the unique node
     /// plans (route + batch-form once at layer 0), ships the shared
-    /// group plan per layer, and executes its own unique-KV spans.
+    /// group plan per layer, and executes its own unique-KV spans while
+    /// the shared node works (one request in flight per layer).
     pub fn step(&mut self, reqs: &mut [SimRequest]) -> Result<()> {
         let cfg = self.backend.model().clone();
         let b = reqs.len();
@@ -327,11 +443,10 @@ impl DisaggCluster {
                     reads: stats.chunk_reads.max(stats.calls),
                 });
             }
-            let plan = shared_plan.clone().expect("planned at layer 0");
+            let plan = shared_plan.as_ref().expect("planned at layer 0");
 
-            // ---- fabric RPC: ship the plan to the shared node
-            let shared_parts = self.shared_node.attend(layer, q.clone(),
-                                                       plan)?;
+            // ---- fabric: ship the plan, then overlap with local work
+            self.fabric.submit(layer, &q, plan)?;
 
             // ---- unique node: per-request GEMV attention from its spans
             let mut acc = RowAccumulator::from_arena(
@@ -360,9 +475,28 @@ impl DisaggCluster {
                         as u64,
                 );
             }
-            for (i, p) in shared_parts.iter().enumerate() {
+
+            // ---- fabric: join the shared node's reply and merge
+            let reply = self.fabric.collect()?;
+            validate_reply(&reply, b, cfg.n_heads, cfg.head_dim)?;
+            for (i, p) in reply.parts.iter().enumerate() {
                 acc.merge_row(i, p);
             }
+            // shared-node op census: each GEMM call reads one chunk of
+            // K+V once (that's the whole point) and runs
+            // 2·2·H·dh·chunk flops per routed query row.
+            let sh_chunk = self.shared.chunk;
+            let kv_bytes_per_chunk =
+                2 * sh_chunk * cfg.n_kv_heads * cfg.head_dim * 4;
+            self.shared_util
+                .add_bytes_read((plan.reads * kv_bytes_per_chunk) as u64);
+            let flops_per_pair = 4 * cfg.n_heads * cfg.head_dim * sh_chunk;
+            self.shared_util
+                .add_flops((plan.pairs * flops_per_pair) as u64);
+            self.sstats.pairs += plan.pairs as u64;
+            self.sstats.calls += plan.reads as u64;
+            self.sstats.busy_ns += reply.exec_ns;
+
             let attn_o = acc.finalize_with(&mut self.arena);
             acc.recycle_into(&mut self.arena);
             x = self.backend.post(
@@ -384,32 +518,38 @@ impl DisaggCluster {
         Ok(())
     }
 
-    /// Drive `steps` decode steps at batch `b`; return the measurements.
+    /// Drive `steps` decode steps at batch `b`; return the measurements
+    /// (including the per-request token streams for bit-comparison).
     pub fn run_point(&mut self, b: usize, domain: &str, unique_tokens: usize,
                      steps: usize) -> Result<SimPoint> {
         let mut reqs = self.seed_requests(b, domain, unique_tokens, b as u64)?;
         // deltas against counters at point start
-        let shared0 = snapshot(&self.shared_node.util);
+        let shared0 = snapshot(&self.shared_util);
         let unique0 = snapshot(&self.unique_util);
-        let busy0 = self.shared_node.busy.load(Ordering::Relaxed);
-        let pairs0 = self.shared_node.pairs.load(Ordering::Relaxed);
-        let calls0 = self.shared_node.calls.load(Ordering::Relaxed);
+        let busy0 = self.sstats.busy_ns;
+        let pairs0 = self.sstats.pairs;
+        let calls0 = self.sstats.calls;
 
+        let mut tokens: Vec<Vec<i32>> = vec![Vec::with_capacity(steps); b];
         let t0 = Instant::now();
         for _ in 0..steps {
             self.step(&mut reqs)?;
+            for (i, r) in reqs.iter().enumerate() {
+                tokens[i].push(r.cur);
+            }
         }
         let wall = t0.elapsed();
 
-        let shared1 = snapshot(&self.shared_node.util);
+        let shared1 = snapshot(&self.shared_util);
         let unique1 = snapshot(&self.unique_util);
-        let busy1 = self.shared_node.busy.load(Ordering::Relaxed);
-        let pairs =
-            (self.shared_node.pairs.load(Ordering::Relaxed) - pairs0) as f64;
-        let calls =
-            (self.shared_node.calls.load(Ordering::Relaxed) - calls0) as f64;
+        let busy1 = self.sstats.busy_ns;
+        let pairs = (self.sstats.pairs - pairs0) as f64;
+        let calls = (self.sstats.calls - calls0) as f64;
         for r in reqs.iter_mut() {
             r.kv.release(&mut self.pool);
+        }
+        if let Some(st) = self.fabric.stats() {
+            st.publish(&self.metrics);
         }
         Ok(SimPoint {
             batch: b,
@@ -426,20 +566,87 @@ impl DisaggCluster {
             batching_factor: if calls > 0.0 { pairs / calls } else { 0.0 },
             shared_busy_frac: (busy1 - busy0) as f64
                 / wall.as_nanos() as f64,
+            tokens,
         })
     }
+}
+
+/// A fabric reply must line up with the step that awaits it — a
+/// mismatched or malicious remote reply answers with an error, not a
+/// panic inside the merge kernels.
+fn validate_reply(reply: &FabricReply, b: usize, h: usize, dh: usize)
+                  -> Result<()> {
+    anyhow::ensure!(reply.parts.len() == b,
+                    "fabric reply has {} rows, step expects {b}",
+                    reply.parts.len());
+    for (i, p) in reply.parts.iter().enumerate() {
+        let ok = p.o.dtype() == DType::F32
+            && p.m.dtype() == DType::F32
+            && p.l.dtype() == DType::F32
+            && p.o.shape() == &[1, h, dh][..]
+            && p.m.shape() == &[1, h][..]
+            && p.l.shape() == &[1, h][..];
+        anyhow::ensure!(ok, "fabric reply row {i} has wrong partial shapes \
+                             (o {:?}, m {:?}, l {:?})",
+                        p.o.shape(), p.m.shape(), p.l.shape());
+    }
+    Ok(())
 }
 
 fn snapshot(u: &UtilizationEstimator) -> (u64, u64) {
     (u.flops.load(Ordering::Relaxed), u.bytes_read.load(Ordering::Relaxed))
 }
 
+// -------------------------------------------------- synthetic store setup
+
+/// Chunk tokens of the synthetic (artifact-free) disagg setup.
+pub const SYNTH_CHUNK: usize = 64;
+/// Shared chunks registered into the synthetic domain.
+pub const SYNTH_CHUNKS: usize = 8;
+/// Domain name served by the synthetic setup.
+pub const SYNTH_DOMAIN: &str = "bench";
+/// Seed for synthetic weights + store; both sides of a remote run must
+/// agree on it so the stores are bit-identical.
+pub const SYNTH_SEED: u64 = 0x5EED_D15A;
+
+/// Deterministic synthetic weights for the artifact-free disagg setup.
+pub fn synthetic_weights() -> Weights {
+    Weights::synthetic(ModelConfig::tiny(), SYNTH_SEED)
+}
+
+/// Build the synthetic shared store by prefilling [`SYNTH_CHUNKS`]
+/// chunks through the native kernels (serial backend → deterministic and
+/// bit-identical in every process that calls this, which is what lets
+/// `moska shared-node --synthetic` and `moska disagg --synthetic
+/// --remote` agree without artifacts).
+pub fn synthetic_store() -> Result<SharedStore> {
+    let model = ModelConfig::tiny();
+    let be = crate::runtime::NativeBackend::with_threads(
+        model.clone(), SYNTH_CHUNK, 1,
+    );
+    let mut eng = crate::engine::Engine::new(
+        Box::new(be),
+        synthetic_weights(),
+        SharedStore::empty(SYNTH_CHUNK),
+        crate::config::ServingConfig::default(),
+        2048,
+    );
+    let tokens: Vec<i32> = (0..SYNTH_CHUNKS * SYNTH_CHUNK)
+        .map(|i| (i % 251) as i32)
+        .collect();
+    eng.register_domain(SYNTH_DOMAIN, &tokens)?;
+    Ok(std::mem::replace(&mut eng.shared,
+                         SharedStore::empty(SYNTH_CHUNK)))
+}
+
+// --------------------------------------------------------------- the CLI
+
 /// `moska disagg`: sweep batch sizes and print the per-node profile.
+/// `--remote <addr>` runs the identical loop against a `moska
+/// shared-node` process; `--synthetic` needs no artifacts;
+/// `--emit-tokens <path>` writes the greedy token streams for
+/// bit-comparison across runs.
 pub fn run_sim(args: &Args) -> Result<()> {
-    let dir = match args.get("artifacts") {
-        Some("") | None => crate::runtime::artifact::default_artifacts_dir(),
-        Some(d) => d.to_string(),
-    };
     let batches: Vec<usize> = args
         .str("batches")?
         .split(',')
@@ -449,40 +656,84 @@ pub fn run_sim(args: &Args) -> Result<()> {
     let backend_name = args.str("backend")?;
     // native exec threads PER NODE: 0 = auto, 1 = serial
     let threads = args.usize("threads")?;
+    let remote = args.get("remote").unwrap_or("").to_string();
+    let synthetic = args.flag("synthetic");
+    let emit_tokens = args.get("emit-tokens").unwrap_or("").to_string();
 
-    let man = crate::runtime::Manifest::load(&dir)?;
-    let weights = Weights::load(
-        man.weights_path().to_str().context("utf8")?, man.model.clone(),
-    )?;
-    let shared = Arc::new(SharedStore::load_from_manifest(&man)?);
+    // model + store + weights source: artifacts or the synthetic setup
+    struct SimSetup {
+        model: ModelConfig,
+        chunk: usize,
+        shared: Arc<SharedStore>,
+        mk_weights: Box<dyn Fn() -> Result<Weights>>,
+        domain: &'static str,
+    }
+    let setup = if synthetic {
+        anyhow::ensure!(backend_name == "native",
+                        "--synthetic requires --backend native");
+        SimSetup {
+            model: ModelConfig::tiny(),
+            chunk: SYNTH_CHUNK,
+            shared: Arc::new(synthetic_store()?),
+            mk_weights: Box::new(|| Ok(synthetic_weights())),
+            domain: SYNTH_DOMAIN,
+        }
+    } else {
+        let dir = crate::runtime::artifact::resolve_artifacts_dir(args);
+        let man = crate::runtime::Manifest::load(&dir)?;
+        let shared = Arc::new(SharedStore::load_from_manifest(&man)?);
+        let wpath = man
+            .weights_path()
+            .to_str()
+            .context("utf8")?
+            .to_string();
+        let wmodel = man.model.clone();
+        SimSetup {
+            model: man.model.clone(),
+            chunk: man.chunk,
+            shared,
+            mk_weights: Box::new(move || {
+                Weights::load(&wpath, wmodel.clone())
+            }),
+            domain: "legal",
+        }
+    };
+    let SimSetup { model, chunk, shared, mk_weights, domain } = setup;
+
     // one backend per node: for native execution each node gets its own
     // worker pool (the NUMA seam — pin each pool to a socket and the
-    // shared/unique split maps onto real memory domains)
-    let (unique_be, shared_be): (Arc<dyn Backend>, Arc<dyn Backend>) =
+    // shared/unique split maps onto real memory domains); with --remote
+    // the shared node's backend lives in the other process, so none is
+    // built here
+    let local_shared = remote.is_empty();
+    let (unique_be, shared_be): (Arc<dyn Backend>, Option<Arc<dyn Backend>>) =
         match backend_name.as_str() {
             "native" => {
                 let n = ThreadPool::resolve_threads(threads);
                 let mk = || -> Arc<dyn Backend> {
                     if n <= 1 {
                         Arc::new(crate::runtime::NativeBackend::with_threads(
-                            man.model.clone(), man.chunk, 1,
+                            model.clone(), chunk, 1,
                         ))
                     } else {
                         Arc::new(crate::runtime::NativeBackend::with_pool(
-                            man.model.clone(), man.chunk,
+                            model.clone(), chunk,
                             Arc::new(ThreadPool::new(n)),
                         ))
                     }
                 };
-                (mk(), mk())
+                (mk(), local_shared.then(mk))
             }
             "xla" => {
+                let dir =
+                    crate::runtime::artifact::resolve_artifacts_dir(args);
                 let svc = crate::runtime::RuntimeService::spawn(&dir)?;
                 let be = crate::runtime::XlaBackend::new(svc.handle());
                 // keep the service alive for the process lifetime
                 std::mem::forget(svc);
                 let be: Arc<dyn Backend> = Arc::new(be);
-                (Arc::clone(&be), be)
+                let shared = local_shared.then(|| Arc::clone(&be));
+                (be, shared)
             }
             other => anyhow::bail!("unknown backend '{other}'"),
         };
@@ -491,17 +742,33 @@ pub fn run_sim(args: &Args) -> Result<()> {
         "batch", "mean_step", "sh_bytes/step", "uq_bytes/step",
         "sh_flops/step", "uq_flops/step", "gemm_N", "sh_busy",
     ]);
+    let mut token_points: Vec<Json> = Vec::new();
+    let mut fabric_totals: Vec<Arc<FabricStats>> = Vec::new();
+    // the store is immutable for the whole sweep — fingerprint it once
+    let store_digest =
+        if local_shared { 0 } else { shared.content_digest() };
     for &b in &batches {
-        let mut cluster = DisaggCluster::with_backends(
+        let fabric: Box<dyn SharedFabric> = if let Some(be) = &shared_be {
+            Box::new(LocalFabric::spawn(Arc::clone(be), Arc::clone(&shared)))
+        } else {
+            let mut f = crate::remote::RemoteFabric::connect(
+                &remote, crate::remote::TransportCfg::default(),
+            )?;
+            f.check_store(chunk, domain, store_digest)?;
+            Box::new(f)
+        };
+        let mut cluster = DisaggCluster::with_fabric(
             Arc::clone(&unique_be),
-            Arc::clone(&shared_be),
-            Weights::load(man.weights_path().to_str().unwrap(),
-                          man.model.clone())?,
+            fabric,
+            mk_weights()?,
             Arc::clone(&shared),
             Some(4),
             32,
         );
-        let p = cluster.run_point(b, "legal", 96, steps)?;
+        let p = cluster.run_point(b, domain, 96, steps)?;
+        if let Some(st) = cluster.fabric_stats() {
+            fabric_totals.push(st);
+        }
         table.row(vec![
             b.to_string(),
             format!("{:?}", p.mean_step),
@@ -512,9 +779,57 @@ pub fn run_sim(args: &Args) -> Result<()> {
             format!("{:.2}", p.batching_factor),
             format!("{:.1}%", p.shared_busy_frac * 100.0),
         ]);
+        token_points.push(Json::obj(vec![
+            ("batch", Json::num(b as f64)),
+            ("tokens", Json::arr(
+                p.tokens
+                    .iter()
+                    .map(|ts| Json::arr(
+                        ts.iter().map(|&t| Json::num(t as f64)).collect(),
+                    ))
+                    .collect(),
+            )),
+        ]));
     }
-    table.print("disaggregated two-node simulation (live, tiny model)");
+    let title = if remote.is_empty() {
+        "disaggregated two-node simulation (live, tiny model)".to_string()
+    } else {
+        format!("disaggregated two-node run (shared node at {remote})")
+    };
+    table.print(&title);
     table.write_csv("disagg_sim")?;
-    let _ = weights;
+
+    if !fabric_totals.is_empty() {
+        let sum = |f: fn(&FabricStats) -> &std::sync::atomic::AtomicU64| {
+            fabric_totals
+                .iter()
+                .map(|s| f(s).load(Ordering::Relaxed))
+                .sum::<u64>()
+        };
+        println!(
+            "fabric: {} sent / {} recv in {} frames, {} retries, \
+             {:.2}ms serializing",
+            crate::util::bench::fmt_bytes(sum(|s| &s.bytes_sent) as f64),
+            crate::util::bench::fmt_bytes(sum(|s| &s.bytes_recv) as f64),
+            sum(|s| &s.frames_sent),
+            sum(|s| &s.retries),
+            sum(|s| &s.serialize_ns) as f64 / 1e6,
+        );
+    }
+
+    if !emit_tokens.is_empty() {
+        let j = Json::obj(vec![
+            ("bench", Json::str("disagg_tokens")),
+            ("steps", Json::num(steps as f64)),
+            ("points", Json::arr(token_points)),
+        ]);
+        if let Some(dir) = std::path::Path::new(&emit_tokens).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&emit_tokens, j.to_string())?;
+        println!("[tokens] wrote {emit_tokens}");
+    }
     Ok(())
 }

@@ -375,8 +375,10 @@ impl Engine {
             )?;
             kv.append_layer(&mut self.pool, layer, &k, &v)?;
 
-            let mut acc = RowAccumulator::identity(
-                b, model.n_heads, model.head_dim,
+            // prefill staging lives in the same step arena the decode
+            // executor recycles — no plain allocation left on this path
+            let mut acc = RowAccumulator::from_arena(
+                &mut self.arena, b, model.n_heads, model.head_dim,
             );
             // shared context
             if let Some(d) = &req.domain {
@@ -393,25 +395,34 @@ impl Engine {
                 let stats = shared_attention(
                     self.backend.as_ref(), dom, layer, &q, pos, &sets,
                     &mut acc, self.cfg.position_independent,
-                    self.cfg.max_batch,
+                    self.cfg.max_batch, Some(&mut self.arena),
                 )?;
                 self.batch_pairs += stats.pairs as u64;
                 self.batch_calls += stats.chunk_reads.max(stats.calls) as u64;
             }
-            // unique context (includes the slab's own tokens, causally)
+            // unique context (includes the slab's own tokens, causally);
+            // merge order matches the pre-arena loop exactly (identity ∪
+            // unique per row, then into the shared accumulator)
             let uniq = unique_attention(
                 self.backend.as_ref(), &self.pool, kv, layer, &q, pos,
+                Some(&mut self.arena),
             )?;
-            let mut uacc = RowAccumulator::identity(
-                b, model.n_heads, model.head_dim,
+            let mut uacc = RowAccumulator::from_arena(
+                &mut self.arena, b, model.n_heads, model.head_dim,
             );
-            uacc.scatter(&(0..b).collect::<Vec<_>>(), &uniq);
+            for i in 0..b {
+                uacc.merge_row_from(i, &uniq, i);
+            }
             acc.merge_from(&uacc);
+            self.arena.recycle_partials(uniq);
 
-            let attn_o = acc.finalize();
+            let attn_o = acc.finalize_with(&mut self.arena);
+            uacc.recycle_into(&mut self.arena);
+            acc.recycle_into(&mut self.arena);
             x = self.backend.post(
                 &attn_o, &x, lw.wo, lw.ffn_norm, lw.w1, lw.w3, lw.w2,
             )?;
+            self.arena.recycle(attn_o);
         }
         kv.commit(b);
         if want_logits {
@@ -670,10 +681,7 @@ pub fn run_demo(args: &Args) -> Result<()> {
 /// `--backend`, `--artifacts`, `--top-k`, `--max-batch` options.
 pub fn build_engine_from_args(args: &Args)
     -> Result<(Engine, Option<crate::runtime::RuntimeService>)> {
-    let dir = match args.get("artifacts") {
-        Some("") | None => crate::runtime::artifact::default_artifacts_dir(),
-        Some(d) => d.to_string(),
-    };
+    let dir = crate::runtime::artifact::resolve_artifacts_dir(args);
     let top_k = match args.usize("top-k")? {
         0 => None,
         k => Some(k),

@@ -51,17 +51,25 @@ impl Engine {
                     &x, lw.attn_norm, lw.wq, lw.wk, lw.wv, &pos,
                 )?;
                 kv.append_layer(&mut self.pool, layer, &k, &v)?;
+                // prefill staging in the engine's step arena (same
+                // recycled buffers the decode executor uses)
                 let part = unique_attention(
                     self.backend.as_ref(), &self.pool, &kv, layer, &q, &pos,
+                    Some(&mut self.arena),
                 )?;
-                let mut acc = RowAccumulator::identity(
-                    e - s, model.n_heads, model.head_dim,
+                let mut acc = RowAccumulator::from_arena(
+                    &mut self.arena, e - s, model.n_heads, model.head_dim,
                 );
-                acc.scatter(&(0..e - s).collect::<Vec<_>>(), &part);
-                let attn_o = acc.finalize();
+                for i in 0..e - s {
+                    acc.merge_row_from(i, &part, i);
+                }
+                let attn_o = acc.finalize_with(&mut self.arena);
+                acc.recycle_into(&mut self.arena);
+                self.arena.recycle_partials(part);
                 x = self.backend.post(
                     &attn_o, &x, lw.wo, lw.ffn_norm, lw.w1, lw.w3, lw.w2,
                 )?;
+                self.arena.recycle(attn_o);
             }
             kv.commit(e - s);
             s = e;

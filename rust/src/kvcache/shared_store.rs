@@ -141,24 +141,29 @@ pub struct ChunkRegistry {
     pub dedup_hits: u64,
 }
 
+/// FNV-1a offset basis (shared by chunk interning and the store digest).
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// One streaming step of FNV-1a — the single hash implementation behind
+/// [`ChunkRegistry`] content interning and
+/// [`SharedStore::content_digest`].
+fn fnv1a_update(mut h: u64, bytes: impl Iterator<Item = u8>) -> u64 {
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 impl ChunkRegistry {
     pub fn new() -> ChunkRegistry {
         ChunkRegistry::default()
     }
 
-    fn fnv1a(bytes: impl Iterator<Item = u8>) -> u64 {
-        let mut h: u64 = 0xcbf29ce484222325;
-        for b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-        h
-    }
-
     fn content_hash(k: &Tensor, v: &Tensor) -> u64 {
         let kb = k.as_f32().iter().flat_map(|f| f.to_le_bytes());
         let vb = v.as_f32().iter().flat_map(|f| f.to_le_bytes());
-        Self::fnv1a(kb.chain(vb))
+        fnv1a_update(FNV_OFFSET, kb.chain(vb))
     }
 
     /// Intern a chunk: identical content → same id, bumped refcount.
@@ -288,6 +293,37 @@ impl SharedStore {
     /// (the capacity half of Fig 1b).
     pub fn resident_bytes(&self) -> usize {
         self.domains.values().map(|d| d.resident_bytes()).sum()
+    }
+
+    /// Content fingerprint of the store: FNV-1a over chunk geometry and
+    /// every domain's layer-0 K/V bit patterns (weights that differ
+    /// change prefill at every layer, so layer 0 identifies the store).
+    /// Deterministic (BTreeMap order) — the remote fabric handshake
+    /// compares client and node digests so mismatched deployments fail
+    /// at connect instead of silently decoding garbage.
+    pub fn content_digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a_update(h, (self.chunk as u64).to_le_bytes().into_iter());
+        for (name, d) in &self.domains {
+            h = fnv1a_update(h, name.bytes());
+            h = fnv1a_update(h,
+                             (d.n_chunks as u64).to_le_bytes().into_iter());
+            h = fnv1a_update(
+                h,
+                d.chunk_bases.iter().flat_map(|b| b.to_le_bytes()),
+            );
+            if let Some(l0) = d.layers.first() {
+                for (k, v) in &l0.chunks {
+                    h = fnv1a_update(
+                        h, k.as_f32().iter().flat_map(|f| f.to_le_bytes()),
+                    );
+                    h = fnv1a_update(
+                        h, v.as_f32().iter().flat_map(|f| f.to_le_bytes()),
+                    );
+                }
+            }
+        }
+        h
     }
 }
 

@@ -28,6 +28,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod model;
 pub mod plan;
+pub mod remote;
 pub mod router;
 pub mod runtime;
 pub mod scheduler;

@@ -2,10 +2,11 @@
 //! disaggregated simulation, and the paper's analytical figures.
 //!
 //! ```text
-//! moska serve      [--addr 127.0.0.1:8080] [--top-k 4] [--backend xla]
-//! moska demo       [--requests 8] [--steps 16] [--domain legal]
-//! moska figures    [--out bench_out]
-//! moska disagg     [--batches 1,8,64,256]
+//! moska serve       [--addr 127.0.0.1:8080] [--top-k 4] [--backend xla]
+//! moska demo        [--requests 8] [--steps 16] [--domain legal]
+//! moska figures     [--out bench_out]
+//! moska disagg      [--batches 1,8,64,256] [--remote 127.0.0.1:7070]
+//! moska shared-node [--addr 127.0.0.1:7070] [--synthetic]
 //! moska artifacts-info
 //! ```
 
@@ -26,6 +27,7 @@ fn main() {
         "demo" => cmd_demo(&rest),
         "figures" => cmd_figures(&rest),
         "disagg" => cmd_disagg(&rest),
+        "shared-node" => cmd_shared_node(&rest),
         "replay" => cmd_replay(&rest),
         "trace" => cmd_trace(&rest),
         "artifacts-info" => cmd_artifacts_info(&rest),
@@ -51,6 +53,7 @@ fn usage() -> String {
      \x20 demo             run a batched-decode demo on the tiny model\n\
      \x20 figures          regenerate the paper's figures (analytical model)\n\
      \x20 disagg           run the disaggregated two-node simulation\n\
+     \x20 shared-node      serve the Shared KV store to remote disagg runs\n\
      \x20 replay           open-loop Poisson workload replay\n\
      \x20 artifacts-info   list compiled artifacts + manifest summary\n\
      \x20 help             this text\n\n\
@@ -98,8 +101,26 @@ fn cmd_disagg(argv: &[String]) -> moska::Result<()> {
         .opt("steps", "8", "decode steps per batch point")
         .opt("backend", "native", "xla | native")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
+        .opt("remote", "",
+             "shared-node address (empty = in-process shared node)")
+        .opt("emit-tokens", "",
+             "write greedy token streams to this JSON (bit-compare runs)")
+        .flag("synthetic",
+              "synthetic weights + online-registered domain (no artifacts)")
         .parse_from(argv)?;
     moska::disagg::run_sim(&args)
+}
+
+fn cmd_shared_node(argv: &[String]) -> moska::Result<()> {
+    let args = Cli::new("moska shared-node",
+                        "standalone Shared KV node (plan execution over TCP)")
+        .opt("addr", "127.0.0.1:7070", "listen address")
+        .opt("artifacts", "", "artifacts dir (default: auto-discover)")
+        .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
+        .flag("synthetic",
+              "serve the synthetic bench store (no artifacts)")
+        .parse_from(argv)?;
+    moska::remote::server::run_shared_node(&args)
 }
 
 fn cmd_replay(argv: &[String]) -> moska::Result<()> {
@@ -145,10 +166,7 @@ fn cmd_artifacts_info(argv: &[String]) -> moska::Result<()> {
     let args = Cli::new("moska artifacts-info", "manifest summary")
         .opt("artifacts", "", "artifacts dir (default: auto-discover)")
         .parse_from(argv)?;
-    let dir = match args.get("artifacts") {
-        Some("") | None => moska::runtime::artifact::default_artifacts_dir(),
-        Some(d) => d.to_string(),
-    };
+    let dir = moska::runtime::artifact::resolve_artifacts_dir(&args);
     let man = moska::runtime::Manifest::load(&dir)?;
     println!("artifacts dir : {dir}");
     println!("model         : {:?}", man.model);

@@ -61,8 +61,10 @@ pub struct GemmCall {
 }
 
 /// All shared-KV work for one domain group of the step — the unit the
-/// disagg fabric ships to the Shared KV node.
-#[derive(Debug, Clone)]
+/// disagg fabric ships to the Shared KV node (over a channel in-process,
+/// or serialized by [`crate::remote::codec`] over TCP — `PartialEq` is
+/// the wire-roundtrip test surface).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SharedGroupPlan {
     pub domain: String,
     /// Global batch-row indices, ascending (scatter index table).
@@ -89,7 +91,7 @@ pub struct PageSpan {
 }
 
 /// Unique-KV attention work for one batch row.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct UniqueRowPlan {
     pub spans: Vec<PageSpan>,
 }
@@ -97,7 +99,7 @@ pub struct UniqueRowPlan {
 /// The decode-step IR (see module docs). Built once per step by
 /// [`plan_step`]; consumed by
 /// [`Backend::exec_plan`][crate::runtime::Backend::exec_plan].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StepPlan {
     /// Live batch size.
     pub b: usize,

@@ -1,0 +1,978 @@
+//! Versioned binary wire codec for the remote shared-KV fabric.
+//!
+//! Extends the `util::bin` conventions (little-endian, raw f32/i32
+//! payloads, explicit shapes) to *messages*: every value that crosses the
+//! fabric — [`StepPlan`]/[`SharedGroupPlan`] IR, gather index tables,
+//! [`GemmCall`]s, query tensors, [`Partials`] replies — has an explicit,
+//! versioned byte layout, framed as:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "MoSK" (0x4B536F4D LE)
+//! 4       2     codec version (CODEC_VERSION, u16 LE)
+//! 6       2     message kind (MsgKind, u16 LE)
+//! 8       4     payload length (u32 LE, ≤ MAX_FRAME_BYTES)
+//! 12      len   payload
+//! 12+len  4     CRC32 (IEEE) over bytes [4, 12+len) — version, kind,
+//!               length, payload
+//! ```
+//!
+//! Versioning rules: the header layout (magic/version position) is
+//! frozen; everything after the version field may change between
+//! versions. A reader that sees a foreign version fails with
+//! [`CodecError::VersionMismatch`] *before* touching the rest of the
+//! frame — it cannot validate a layout it does not speak.
+//!
+//! Every decode failure is a typed [`CodecError`] — corrupted, truncated,
+//! or malicious frames never panic (asserted by `tests/prop_remote.rs`).
+//! f32 payloads travel as raw LE bit patterns, so a roundtrip is
+//! bit-identical (including `-inf` LSE identities and NaN).
+
+use std::io::Read;
+
+use crate::plan::{GemmCall, PageSpan, SharedGroupPlan, StepPlan,
+                  UniqueRowPlan};
+use crate::router::ChunkSet;
+use crate::runtime::native::Partials;
+use crate::tensor::{DType, Tensor};
+
+/// Wire-format version; bump on ANY layout change past the frame header.
+pub const CODEC_VERSION: u16 = 1;
+
+/// Frame magic: `"MoSK"` as a little-endian u32.
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"MoSK");
+
+/// Largest accepted payload. Plans and partials for the tiny model are a
+/// few KiB; the cap bounds what a malicious peer can make us allocate.
+pub const MAX_FRAME_BYTES: usize = 64 << 20; // 64 MiB
+
+/// Cap on eager `Vec::with_capacity` reserves for wire-declared element
+/// counts of multi-word structs: in-memory elements are much larger
+/// than their minimum wire encoding, so reserving the declared count
+/// outright would let a crafted frame amplify its payload bytes into
+/// gigabytes of reservation. Past this cap growth is amortized and
+/// bounded by actual decode progress (a lying count hits `Truncated`).
+const MAX_EAGER_RESERVE: usize = 1024;
+
+/// Why a frame or payload could not be decoded. Typed so transport and
+/// server code can distinguish retryable I/O failures from protocol
+/// errors, and so tests can assert the exact failure mode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// First four bytes are not the frame magic.
+    BadMagic(u32),
+    /// Peer speaks a different codec version; nothing past the header
+    /// can be trusted.
+    VersionMismatch { got: u16, want: u16 },
+    /// Declared payload length exceeds [`MAX_FRAME_BYTES`].
+    FrameTooLarge { len: usize, max: usize },
+    /// CRC over (version, kind, length, payload) did not match.
+    CrcMismatch { want: u32, got: u32 },
+    /// Frame or payload ended before the declared content.
+    Truncated,
+    /// Unknown enum tag (message kind, dtype, option flag, ...).
+    BadTag { what: &'static str, tag: u32 },
+    /// String payload is not UTF-8.
+    BadUtf8,
+    /// Payload decoded but left unconsumed bytes behind.
+    TrailingBytes { extra: usize },
+    /// Structurally impossible value (overflowing shape, bad bool, ...).
+    Malformed(&'static str),
+    /// Underlying stream error while reading a frame (timeouts surface
+    /// as `WouldBlock`/`TimedOut`; a closed peer as `UnexpectedEof` →
+    /// [`CodecError::Truncated`]).
+    Io(std::io::ErrorKind),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:#010x}")
+            }
+            CodecError::VersionMismatch { got, want } => {
+                write!(f, "codec version mismatch: peer v{got}, local v{want}")
+            }
+            CodecError::FrameTooLarge { len, max } => {
+                write!(f, "frame payload {len} bytes exceeds cap {max}")
+            }
+            CodecError::CrcMismatch { want, got } => {
+                write!(f, "frame CRC mismatch (stored {want:#010x}, \
+                           computed {got:#010x})")
+            }
+            CodecError::Truncated => write!(f, "truncated frame"),
+            CodecError::BadTag { what, tag } => {
+                write!(f, "bad {what} tag {tag}")
+            }
+            CodecError::BadUtf8 => write!(f, "non-utf8 string payload"),
+            CodecError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing payload bytes")
+            }
+            CodecError::Malformed(what) => {
+                write!(f, "malformed payload: {what}")
+            }
+            CodecError::Io(kind) => write!(f, "frame read failed: {kind:?}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// True for errors that mean the *connection* died (worth a reconnect),
+/// as opposed to protocol errors that would just recur.
+pub fn is_connection_error(e: &CodecError) -> bool {
+    matches!(
+        e,
+        CodecError::Truncated
+            | CodecError::Io(
+                std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::NotConnected,
+            )
+    )
+}
+
+/// True when the read gave up on a deadline (socket read timeout or the
+/// whole-reply deadline) rather than on data.
+pub fn is_timeout_error(e: &CodecError) -> bool {
+    matches!(
+        e,
+        CodecError::Io(
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut,
+        )
+    )
+}
+
+// ------------------------------------------------------------------ CRC32
+
+const fn crc_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+fn crc32_update(mut crc: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        crc = CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc
+}
+
+/// CRC32 (IEEE) over the concatenation of `parts`.
+pub fn crc32_parts(parts: &[&[u8]]) -> u32 {
+    let mut c = 0xFFFF_FFFF;
+    for p in parts {
+        c = crc32_update(c, p);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ------------------------------------------------------------ message set
+
+/// Frame-level message kind tags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u16)]
+pub enum MsgKind {
+    Hello = 1,
+    HelloAck = 2,
+    ExecShared = 3,
+    Partials = 4,
+    Error = 5,
+    StepPlan = 6,
+}
+
+impl MsgKind {
+    fn from_u16(v: u16) -> Result<MsgKind, CodecError> {
+        Ok(match v {
+            1 => MsgKind::Hello,
+            2 => MsgKind::HelloAck,
+            3 => MsgKind::ExecShared,
+            4 => MsgKind::Partials,
+            5 => MsgKind::Error,
+            6 => MsgKind::StepPlan,
+            t => {
+                return Err(CodecError::BadTag {
+                    what: "message kind",
+                    tag: t as u32,
+                })
+            }
+        })
+    }
+}
+
+/// The shared node's store fingerprint, returned on connect so clients
+/// fail fast on a mismatched deployment instead of mid-decode: chunk
+/// geometry, resident domain names, and the store's content digest
+/// ([`SharedStore::content_digest`][crate::kvcache::shared_store::SharedStore::content_digest]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HelloAck {
+    pub chunk: usize,
+    pub domains: Vec<String>,
+    /// FNV-1a over chunk geometry + layer-0 K/V bit patterns.
+    pub digest: u64,
+}
+
+/// One layer's plan-execution request (the fabric's unit of work).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecSharedReq {
+    pub layer: usize,
+    pub q: Tensor,
+    pub plan: SharedGroupPlan,
+}
+
+/// Every message the fabric speaks.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMsg {
+    /// Client → server on connect (payload-free; the version rides in
+    /// the frame header).
+    Hello,
+    /// Server → client handshake reply.
+    HelloAck(HelloAck),
+    /// Client → server: execute one layer of a [`SharedGroupPlan`].
+    ExecShared(ExecSharedReq),
+    /// Server → client: per-row attention partials + node execution ns.
+    Partials { parts: Vec<Partials>, exec_ns: u64 },
+    /// Server → client: request-level failure (connection stays open)
+    /// or protocol-level failure (connection closes after this).
+    Error(String),
+    /// A full decode-step plan (future whole-step offload; today this
+    /// variant exists so the `StepPlan` IR has a pinned wire layout and
+    /// a roundtrip property test).
+    StepPlan(StepPlan),
+}
+
+impl WireMsg {
+    pub fn kind(&self) -> MsgKind {
+        match self {
+            WireMsg::Hello => MsgKind::Hello,
+            WireMsg::HelloAck(_) => MsgKind::HelloAck,
+            WireMsg::ExecShared(_) => MsgKind::ExecShared,
+            WireMsg::Partials { .. } => MsgKind::Partials,
+            WireMsg::Error(_) => MsgKind::Error,
+            WireMsg::StepPlan(_) => MsgKind::StepPlan,
+        }
+    }
+}
+
+// --------------------------------------------------------------- encoding
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn vec_u32_of_usize(&mut self, v: &[usize]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x as u32);
+        }
+    }
+
+    fn vec_i32(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.i32(x);
+        }
+    }
+
+    fn tensor(&mut self, t: &Tensor) {
+        // one reservation up front — tensor payloads dominate frame
+        // size and this runs on the per-layer serialize path
+        self.buf.reserve(2 + t.shape().len() * 4 + t.len() * 4);
+        self.u8(match t.dtype() {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        });
+        let shape = t.shape();
+        self.u8(shape.len() as u8);
+        for &d in shape {
+            self.u32(d as u32);
+        }
+        match t {
+            Tensor::F32 { data, .. } => {
+                for v in data {
+                    self.buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Tensor::I32 { data, .. } => {
+                for v in data {
+                    self.buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    fn gemm_call(&mut self, c: &GemmCall) {
+        self.u32(c.chunk_start as u32);
+        self.u32(c.run_len as u32);
+        self.vec_u32_of_usize(&c.rows);
+        self.i32(c.k_base);
+        self.i32(c.valid);
+        match c.pos_override {
+            None => self.u8(0),
+            Some(p) => {
+                self.u8(1);
+                self.i32(p);
+            }
+        }
+    }
+
+    fn shared_group_plan(&mut self, p: &SharedGroupPlan) {
+        self.str(&p.domain);
+        self.vec_u32_of_usize(&p.rows);
+        self.vec_i32(&p.q_pos);
+        self.u32(p.sets.len() as u32);
+        for s in &p.sets {
+            self.vec_u32_of_usize(s);
+        }
+        self.u32(p.calls.len() as u32);
+        for c in &p.calls {
+            self.gemm_call(c);
+        }
+        self.u64(p.pairs as u64);
+        self.u64(p.reads as u64);
+    }
+
+    fn page_span(&mut self, s: &PageSpan) {
+        self.u32(s.page_start as u32);
+        self.u32(s.pages as u32);
+        self.i32(s.k_base);
+        self.i32(s.valid);
+    }
+
+    fn step_plan(&mut self, p: &StepPlan) {
+        self.u64(p.b as u64);
+        self.vec_i32(&p.pos);
+        self.u32(p.shared_groups.len() as u32);
+        for g in &p.shared_groups {
+            self.shared_group_plan(g);
+        }
+        self.bool(p.route_live);
+        self.u32(p.unique.len() as u32);
+        for u in &p.unique {
+            self.u32(u.spans.len() as u32);
+            for s in &u.spans {
+                self.page_span(s);
+            }
+        }
+        self.u64(p.unique_work as u64);
+        self.u64(p.max_batch as u64);
+        self.bool(p.position_independent);
+    }
+
+    fn partials(&mut self, p: &Partials) {
+        self.tensor(&p.o);
+        self.tensor(&p.m);
+        self.tensor(&p.l);
+    }
+}
+
+/// Encode one message's payload (no frame header).
+pub fn encode_payload(msg: &WireMsg) -> Vec<u8> {
+    let mut e = Enc::new();
+    match msg {
+        WireMsg::Hello => {}
+        WireMsg::HelloAck(h) => {
+            e.u64(h.chunk as u64);
+            e.u64(h.digest);
+            e.u32(h.domains.len() as u32);
+            for d in &h.domains {
+                e.str(d);
+            }
+        }
+        WireMsg::ExecShared(r) => {
+            exec_shared_payload(&mut e, r.layer, &r.q, &r.plan);
+        }
+        WireMsg::Partials { parts, exec_ns } => {
+            e.u64(*exec_ns);
+            e.u32(parts.len() as u32);
+            for p in parts {
+                e.partials(p);
+            }
+        }
+        WireMsg::Error(s) => e.str(s),
+        WireMsg::StepPlan(p) => e.step_plan(p),
+    }
+    e.buf
+}
+
+/// Encode a complete frame (header + payload + CRC), ready to write.
+pub fn frame_bytes(msg: &WireMsg) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    frame_payload(msg.kind(), &payload)
+}
+
+/// The single definition of the `ExecShared` payload layout, shared by
+/// [`encode_payload`] and [`frame_exec_shared`] so the two encoders
+/// cannot drift.
+fn exec_shared_payload(e: &mut Enc, layer: usize, q: &Tensor,
+                       plan: &SharedGroupPlan) {
+    e.u32(layer as u32);
+    e.tensor(q);
+    e.shared_group_plan(plan);
+}
+
+/// Encode an `ExecShared` frame straight from borrowed parts — the hot
+/// per-layer path, avoiding a clone of the query tensor into a
+/// [`WireMsg`].
+pub fn frame_exec_shared(layer: usize, q: &Tensor, plan: &SharedGroupPlan)
+                         -> Vec<u8> {
+    let mut e = Enc::new();
+    exec_shared_payload(&mut e, layer, q, plan);
+    frame_payload(MsgKind::ExecShared, &e.buf)
+}
+
+/// Frame an already-encoded payload under `kind`.
+///
+/// Panics if the payload exceeds [`MAX_FRAME_BYTES`] — senders fail
+/// loudly with the real cause instead of emitting a frame every
+/// receiver rejects (and, past `u32::MAX`, a corrupt length field).
+pub fn frame_payload(kind: MsgKind, payload: &[u8]) -> Vec<u8> {
+    assert!(
+        payload.len() <= MAX_FRAME_BYTES,
+        "frame payload {} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})",
+        payload.len(),
+    );
+    let mut out = Vec::with_capacity(16 + payload.len());
+    out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    out.extend_from_slice(&CODEC_VERSION.to_le_bytes());
+    out.extend_from_slice(&(kind as u16).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let crc = crc32_parts(&[&out[4..]]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+// --------------------------------------------------------------- decoding
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, off: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        let end = self.off.checked_add(n).ok_or(CodecError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(CodecError::Truncated);
+        }
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn i32(&mut self) -> Result<i32, CodecError> {
+        let b = self.bytes(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn usize64(&mut self) -> Result<usize, CodecError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| CodecError::Malformed("u64 → usize"))
+    }
+
+    fn bool(&mut self) -> Result<bool, CodecError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => Err(CodecError::BadTag { what: "bool", tag: t as u32 }),
+        }
+    }
+
+    fn str(&mut self) -> Result<String, CodecError> {
+        let n = self.u32()? as usize;
+        let b = self.bytes(n)?;
+        std::str::from_utf8(b)
+            .map(str::to_string)
+            .map_err(|_| CodecError::BadUtf8)
+    }
+
+    /// A u32-count, u32-element list decoded into `Vec<usize>`. The count
+    /// is bounded by the remaining payload, so a hostile length cannot
+    /// force a large allocation.
+    fn vec_usize(&mut self) -> Result<Vec<usize>, CodecError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(4) > self.buf.len() - self.off {
+            return Err(CodecError::Truncated);
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()? as usize);
+        }
+        Ok(v)
+    }
+
+    fn vec_i32(&mut self) -> Result<Vec<i32>, CodecError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(4) > self.buf.len() - self.off {
+            return Err(CodecError::Truncated);
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.i32()?);
+        }
+        Ok(v)
+    }
+
+    fn tensor(&mut self) -> Result<Tensor, CodecError> {
+        let dtype = match self.u8()? {
+            0 => DType::F32,
+            1 => DType::I32,
+            t => {
+                return Err(CodecError::BadTag { what: "dtype", tag: t as u32 })
+            }
+        };
+        let rank = self.u8()? as usize;
+        if rank > 8 {
+            return Err(CodecError::Malformed("tensor rank > 8"));
+        }
+        let mut shape = Vec::with_capacity(rank);
+        let mut n: usize = 1;
+        for _ in 0..rank {
+            let d = self.u32()? as usize;
+            n = n
+                .checked_mul(d)
+                .ok_or(CodecError::Malformed("tensor shape overflow"))?;
+            shape.push(d);
+        }
+        let bytes = n
+            .checked_mul(4)
+            .ok_or(CodecError::Malformed("tensor byte size overflow"))?;
+        let raw = self.bytes(bytes)?;
+        Ok(match dtype {
+            DType::F32 => {
+                let mut data = vec![0f32; n];
+                for (i, c) in raw.chunks_exact(4).enumerate() {
+                    data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                Tensor::f32(&shape, data)
+            }
+            DType::I32 => {
+                let mut data = vec![0i32; n];
+                for (i, c) in raw.chunks_exact(4).enumerate() {
+                    data[i] = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                Tensor::i32(&shape, data)
+            }
+        })
+    }
+
+    fn gemm_call(&mut self) -> Result<GemmCall, CodecError> {
+        let chunk_start = self.u32()? as usize;
+        let run_len = self.u32()? as usize;
+        let rows = self.vec_usize()?;
+        let k_base = self.i32()?;
+        let valid = self.i32()?;
+        let pos_override = match self.u8()? {
+            0 => None,
+            1 => Some(self.i32()?),
+            t => {
+                return Err(CodecError::BadTag {
+                    what: "pos_override flag",
+                    tag: t as u32,
+                })
+            }
+        };
+        Ok(GemmCall { chunk_start, run_len, rows, k_base, valid,
+                      pos_override })
+    }
+
+    fn shared_group_plan(&mut self) -> Result<SharedGroupPlan, CodecError> {
+        let domain = self.str()?;
+        let rows = self.vec_usize()?;
+        let q_pos = self.vec_i32()?;
+        let n_sets = self.u32()? as usize;
+        if n_sets.saturating_mul(4) > self.buf.len() - self.off {
+            return Err(CodecError::Truncated);
+        }
+        let mut sets: Vec<ChunkSet> =
+            Vec::with_capacity(n_sets.min(MAX_EAGER_RESERVE));
+        for _ in 0..n_sets {
+            sets.push(self.vec_usize()?);
+        }
+        let n_calls = self.u32()? as usize;
+        if n_calls.saturating_mul(17) > self.buf.len() - self.off {
+            return Err(CodecError::Truncated);
+        }
+        let mut calls = Vec::with_capacity(n_calls.min(MAX_EAGER_RESERVE));
+        for _ in 0..n_calls {
+            calls.push(self.gemm_call()?);
+        }
+        let pairs = self.usize64()?;
+        let reads = self.usize64()?;
+        Ok(SharedGroupPlan { domain, rows, q_pos, sets, calls, pairs, reads })
+    }
+
+    fn page_span(&mut self) -> Result<PageSpan, CodecError> {
+        Ok(PageSpan {
+            page_start: self.u32()? as usize,
+            pages: self.u32()? as usize,
+            k_base: self.i32()?,
+            valid: self.i32()?,
+        })
+    }
+
+    fn step_plan(&mut self) -> Result<StepPlan, CodecError> {
+        let b = self.usize64()?;
+        let pos = self.vec_i32()?;
+        let n_groups = self.u32()? as usize;
+        if n_groups.saturating_mul(4) > self.buf.len() - self.off {
+            return Err(CodecError::Truncated);
+        }
+        let mut shared_groups =
+            Vec::with_capacity(n_groups.min(MAX_EAGER_RESERVE));
+        for _ in 0..n_groups {
+            shared_groups.push(self.shared_group_plan()?);
+        }
+        let route_live = self.bool()?;
+        let n_unique = self.u32()? as usize;
+        if n_unique.saturating_mul(4) > self.buf.len() - self.off {
+            return Err(CodecError::Truncated);
+        }
+        let mut unique = Vec::with_capacity(n_unique.min(MAX_EAGER_RESERVE));
+        for _ in 0..n_unique {
+            let n_spans = self.u32()? as usize;
+            if n_spans.saturating_mul(16) > self.buf.len() - self.off {
+                return Err(CodecError::Truncated);
+            }
+            let mut spans =
+                Vec::with_capacity(n_spans.min(MAX_EAGER_RESERVE));
+            for _ in 0..n_spans {
+                spans.push(self.page_span()?);
+            }
+            unique.push(UniqueRowPlan { spans });
+        }
+        let unique_work = self.usize64()?;
+        let max_batch = self.usize64()?;
+        let position_independent = self.bool()?;
+        Ok(StepPlan {
+            b,
+            pos,
+            shared_groups,
+            route_live,
+            unique,
+            unique_work,
+            max_batch,
+            position_independent,
+        })
+    }
+
+    fn partials(&mut self) -> Result<Partials, CodecError> {
+        Ok(Partials {
+            o: self.tensor()?,
+            m: self.tensor()?,
+            l: self.tensor()?,
+        })
+    }
+
+    fn finish(self) -> Result<(), CodecError> {
+        if self.off != self.buf.len() {
+            return Err(CodecError::TrailingBytes {
+                extra: self.buf.len() - self.off,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Decode one message payload of the given kind.
+pub fn decode_payload(kind: MsgKind, payload: &[u8])
+                      -> Result<WireMsg, CodecError> {
+    let mut d = Dec::new(payload);
+    let msg = match kind {
+        MsgKind::Hello => WireMsg::Hello,
+        MsgKind::HelloAck => {
+            let chunk = d.usize64()?;
+            let digest = d.u64()?;
+            let n = d.u32()? as usize;
+            if n.saturating_mul(4) > payload.len() {
+                return Err(CodecError::Truncated);
+            }
+            let mut domains = Vec::with_capacity(n.min(MAX_EAGER_RESERVE));
+            for _ in 0..n {
+                domains.push(d.str()?);
+            }
+            WireMsg::HelloAck(HelloAck { chunk, domains, digest })
+        }
+        MsgKind::ExecShared => {
+            let layer = d.u32()? as usize;
+            let q = d.tensor()?;
+            let plan = d.shared_group_plan()?;
+            WireMsg::ExecShared(ExecSharedReq { layer, q, plan })
+        }
+        MsgKind::Partials => {
+            let exec_ns = d.u64()?;
+            let n = d.u32()? as usize;
+            if n.saturating_mul(8) > payload.len() {
+                return Err(CodecError::Truncated);
+            }
+            let mut parts = Vec::with_capacity(n.min(MAX_EAGER_RESERVE));
+            for _ in 0..n {
+                parts.push(d.partials()?);
+            }
+            WireMsg::Partials { parts, exec_ns }
+        }
+        MsgKind::Error => WireMsg::Error(d.str()?),
+        MsgKind::StepPlan => WireMsg::StepPlan(d.step_plan()?),
+    };
+    d.finish()?;
+    Ok(msg)
+}
+
+/// Read one frame from `r`. Returns the message plus the total wire
+/// bytes consumed. I/O errors map onto [`CodecError::Io`] (EOF →
+/// [`CodecError::Truncated`]); all protocol failures are typed.
+pub fn read_frame(r: &mut impl Read) -> Result<(WireMsg, usize), CodecError> {
+    let mut head = [0u8; 12];
+    read_exact_codec(r, &mut head)?;
+    let magic = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    if magic != FRAME_MAGIC {
+        return Err(CodecError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes([head[4], head[5]]);
+    if version != CODEC_VERSION {
+        return Err(CodecError::VersionMismatch {
+            got: version,
+            want: CODEC_VERSION,
+        });
+    }
+    let kind_raw = u16::from_le_bytes([head[6], head[7]]);
+    let len = u32::from_le_bytes([head[8], head[9], head[10], head[11]])
+        as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(CodecError::FrameTooLarge { len, max: MAX_FRAME_BYTES });
+    }
+    let mut body = vec![0u8; len + 4];
+    read_exact_codec(r, &mut body)?;
+    let stored = u32::from_le_bytes([
+        body[len],
+        body[len + 1],
+        body[len + 2],
+        body[len + 3],
+    ]);
+    let computed = crc32_parts(&[&head[4..], &body[..len]]);
+    if stored != computed {
+        return Err(CodecError::CrcMismatch { want: stored, got: computed });
+    }
+    let kind = MsgKind::from_u16(kind_raw)?;
+    let msg = decode_payload(kind, &body[..len])?;
+    Ok((msg, 16 + len))
+}
+
+fn read_exact_codec(r: &mut impl Read, buf: &mut [u8])
+                    -> Result<(), CodecError> {
+    r.read_exact(buf).map_err(|e| match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => CodecError::Truncated,
+        kind => CodecError::Io(kind),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plan() -> SharedGroupPlan {
+        SharedGroupPlan {
+            domain: "legal".into(),
+            rows: vec![0, 1, 3],
+            q_pos: vec![100, 250, -1],
+            sets: vec![vec![0, 2], vec![1], vec![0, 1, 2]],
+            calls: vec![
+                GemmCall {
+                    chunk_start: 0,
+                    run_len: 2,
+                    rows: vec![0, 2],
+                    k_base: 0,
+                    valid: 128,
+                    pos_override: None,
+                },
+                GemmCall {
+                    chunk_start: 2,
+                    run_len: 1,
+                    rows: vec![1],
+                    k_base: 0,
+                    valid: 64,
+                    pos_override: Some(64),
+                },
+            ],
+            pairs: 6,
+            reads: 3,
+        }
+    }
+
+    #[test]
+    fn exec_shared_roundtrip_bit_identical() {
+        let q = Tensor::f32(&[3, 4, 2], (0..24).map(|x| x as f32).collect());
+        let msg = WireMsg::ExecShared(ExecSharedReq {
+            layer: 1,
+            q,
+            plan: sample_plan(),
+        });
+        let bytes = frame_bytes(&msg);
+        let (back, n) =
+            read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(n, bytes.len());
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn partials_roundtrip_preserves_neg_inf() {
+        let parts = vec![Partials::identity(1, 2, 4)];
+        let msg = WireMsg::Partials { parts, exec_ns: 1234 };
+        let bytes = frame_bytes(&msg);
+        let (back, _) =
+            read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
+        match back {
+            WireMsg::Partials { parts, exec_ns } => {
+                assert_eq!(exec_ns, 1234);
+                assert!(parts[0]
+                    .m
+                    .as_f32()
+                    .iter()
+                    .all(|&v| v == f32::NEG_INFINITY));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_ack_roundtrip() {
+        let msg = WireMsg::HelloAck(HelloAck {
+            chunk: 64,
+            domains: vec!["legal".into(), "code".into()],
+            digest: 0xDEAD_BEEF_CAFE_F00D,
+        });
+        let bytes = frame_bytes(&msg);
+        let (back, _) =
+            read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn version_mismatch_is_typed() {
+        let mut bytes = frame_bytes(&WireMsg::Hello);
+        bytes[4] ^= 0x02; // flip a version bit
+        let err = read_frame(&mut std::io::Cursor::new(&bytes)).unwrap_err();
+        assert!(matches!(err, CodecError::VersionMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn corrupt_payload_fails_crc() {
+        let msg = WireMsg::Error("boom".into());
+        let mut bytes = frame_bytes(&msg);
+        let payload_at = 12;
+        bytes[payload_at] ^= 0xFF;
+        let err = read_frame(&mut std::io::Cursor::new(&bytes)).unwrap_err();
+        assert!(matches!(err, CodecError::CrcMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_typed() {
+        let bytes = frame_bytes(&WireMsg::Error("hello there".into()));
+        for cut in [0, 3, 11, 13, bytes.len() - 1] {
+            let err = read_frame(&mut std::io::Cursor::new(&bytes[..cut]))
+                .unwrap_err();
+            assert!(
+                matches!(err, CodecError::Truncated),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversize_frame_rejected_before_alloc() {
+        let mut bytes = frame_bytes(&WireMsg::Hello);
+        bytes[8..12].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let err = read_frame(&mut std::io::Cursor::new(&bytes)).unwrap_err();
+        assert!(matches!(err, CodecError::FrameTooLarge { .. }), "{err}");
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let payload = encode_payload(&WireMsg::Hello);
+        let mut padded = payload.clone();
+        padded.push(0);
+        let framed = frame_payload(MsgKind::Hello, &padded);
+        let err = read_frame(&mut std::io::Cursor::new(&framed)).unwrap_err();
+        assert_eq!(err, CodecError::TrailingBytes { extra: 1 });
+    }
+
+    #[test]
+    fn bad_kind_rejected_after_crc() {
+        // rebuild a frame with an unknown kind and a matching CRC
+        let mut bytes = frame_payload(MsgKind::Hello, &[]);
+        bytes[6..8].copy_from_slice(&99u16.to_le_bytes());
+        let crc = crc32_parts(&[&bytes[4..12]]);
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = read_frame(&mut std::io::Cursor::new(&bytes)).unwrap_err();
+        assert!(
+            matches!(err, CodecError::BadTag { what: "message kind", .. }),
+            "{err}"
+        );
+    }
+}

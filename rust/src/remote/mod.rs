@@ -1,0 +1,30 @@
+//! Remote execution subsystem: the shared-KV node over TCP.
+//!
+//! PR 2 made the [`SharedGroupPlan`][crate::plan::SharedGroupPlan] the
+//! unit of work crossing the disagg fabric; this module lets that fabric
+//! cross a real process/host boundary (paper §III.C — specialize
+//! hardware per data class):
+//!
+//! * [`codec`] — versioned, CRC-checked, length-prefixed binary frames
+//!   for every value the fabric ships (plans, gather index tables,
+//!   query tensors, [`Partials`][crate::runtime::native::Partials]
+//!   replies). Typed errors, bit-exact f32 roundtrips.
+//! * [`transport`] — the framed TCP client: connect/retry, a
+//!   version-checked handshake, one-in-flight-per-layer request
+//!   pipelining, and reply deadlines reusing the HTTP server's timeout
+//!   machinery. [`RemoteFabric`] plugs into the
+//!   [`SharedFabric`][crate::disagg::SharedFabric] seam.
+//! * [`server`] — the `moska shared-node` process: loads the Domain
+//!   Shared KV store, owns its own backend/thread pool/arenas, and
+//!   executes shipped plans. `moska disagg --remote <addr>` then runs
+//!   the identical decode loop over a socket, bit-comparable to
+//!   in-process execution (asserted by `tests/integration_remote.rs`
+//!   and the `scripts/ci.sh` loopback smoke stage).
+
+pub mod codec;
+pub mod server;
+pub mod transport;
+
+pub use codec::{CodecError, HelloAck, WireMsg, CODEC_VERSION};
+pub use server::{serve_shared_node, spawn_shared_node};
+pub use transport::{FabricStats, RemoteClient, RemoteFabric, TransportCfg};

@@ -1,0 +1,269 @@
+//! The standalone shared-KV node: `moska shared-node`.
+//!
+//! Owns the Domain Shared KV store resident in its own process (its own
+//! [`Backend`], thread pool, and per-connection [`TensorArena`]) and
+//! serves plan-execution RPCs over the framed TCP protocol in
+//! [`super::codec`]. The node is deliberately dumb: it routes nothing and
+//! forms no batches — it executes the [`SharedGroupPlan`]s the unique
+//! node ships, exactly like the in-process shared node thread, so remote
+//! and local execution are bit-identical.
+//!
+//! Connection lifecycle: one handler thread per connection, each serving
+//! `Hello → HelloAck` then any number of `ExecShared → Partials` round
+//! trips. Request-level failures (unknown domain, malformed plan) answer
+//! with an `Error` frame and keep the connection; protocol-level
+//! failures (bad magic, version mismatch, CRC) answer with an `Error`
+//! frame best-effort and close.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::codec::{self, CodecError, ExecSharedReq, HelloAck, WireMsg};
+use crate::disagg::execute_shared_plan;
+use crate::kvcache::shared_store::SharedStore;
+use crate::runtime::arena::TensorArena;
+use crate::runtime::Backend;
+use crate::tensor::DType;
+use crate::util::cli::Args;
+use crate::util::threadpool::ThreadPool;
+
+/// `moska shared-node`: load the store, own a backend, serve forever.
+pub fn run_shared_node(args: &Args) -> Result<()> {
+    let addr = args.str("addr")?;
+    let threads = args.usize("threads")?;
+    let (model, chunk, store) = if args.flag("synthetic") {
+        let store = crate::disagg::synthetic_store()?;
+        (crate::config::ModelConfig::tiny(), crate::disagg::SYNTH_CHUNK,
+         store)
+    } else {
+        let dir = crate::runtime::artifact::resolve_artifacts_dir(args);
+        let man = crate::runtime::Manifest::load(&dir)?;
+        let store = SharedStore::load_from_manifest(&man)?;
+        (man.model.clone(), man.chunk, store)
+    };
+    let n = ThreadPool::resolve_threads(threads);
+    let backend: Arc<dyn Backend> = if n <= 1 {
+        Arc::new(crate::runtime::NativeBackend::with_threads(model, chunk, 1))
+    } else {
+        Arc::new(crate::runtime::NativeBackend::with_pool(
+            model, chunk, Arc::new(ThreadPool::new(n)),
+        ))
+    };
+    serve_shared_node(addr.parse().context("bad --addr")?, backend,
+                      Arc::new(store), None)
+}
+
+/// Bind and serve plan-execution RPCs; `ready` (if given) receives the
+/// bound address once listening — used by tests and benches to serve on
+/// an ephemeral port.
+pub fn serve_shared_node(addr: SocketAddr, backend: Arc<dyn Backend>,
+                         store: Arc<SharedStore>,
+                         ready: Option<Sender<SocketAddr>>) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding shared node on {addr}"))?;
+    let local = listener.local_addr()?;
+    println!("shared-node listening on {local} \
+              ({} domains, {} resident MB)",
+             store.domains.len(),
+             store.resident_bytes() / (1 << 20));
+    crate::info!("shared-node", "listening on {local}");
+    if let Some(tx) = ready {
+        let _ = tx.send(local);
+    }
+    // the handshake fingerprint is stable for the process lifetime —
+    // hash the store once, not per connection
+    let digest = store.content_digest();
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let backend = Arc::clone(&backend);
+                let store = Arc::clone(&store);
+                std::thread::spawn(move || {
+                    handle_conn(s, backend, store, digest)
+                });
+            }
+            Err(e) => crate::warnlog!("shared-node", "accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Spawn a shared node on an ephemeral loopback port (tests/benches).
+/// The serving thread runs for the process lifetime.
+pub fn spawn_shared_node(backend: Arc<dyn Backend>, store: Arc<SharedStore>)
+                         -> Result<SocketAddr> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::Builder::new()
+        .name("moska-shared-node-srv".into())
+        .spawn(move || {
+            if let Err(e) = serve_shared_node(
+                "127.0.0.1:0".parse().unwrap(), backend, store, Some(tx),
+            ) {
+                crate::errorlog!("shared-node", "server died: {e:#}");
+            }
+        })
+        .context("spawn shared node server")?;
+    rx.recv().context("shared node never became ready")
+}
+
+/// How long an established connection may sit idle before the node
+/// reclaims its handler thread (applied per read, so a slow-dripping
+/// peer is bounded per byte batch, an idle one outright). A legitimate
+/// client that gets cut here reconnects and resends transparently (the
+/// fabric's retry path), so this bounds thread/arena leakage from
+/// wedged peers — the shared-node analogue of the HTTP acceptor's
+/// read timeout.
+const CONN_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
+               store: Arc<SharedStore>, digest: u64) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(CONN_IDLE_TIMEOUT));
+    // a client that stops reading must not pin this thread in write_all
+    let _ = stream.set_write_timeout(Some(CONN_IDLE_TIMEOUT));
+    // per-connection plan-execution arena (never crosses threads)
+    let mut arena = TensorArena::new();
+    loop {
+        let msg = match codec::read_frame(&mut stream) {
+            Ok((msg, _)) => msg,
+            // peer closed, stalled past the idle timeout, or the
+            // transport died — nothing to answer
+            Err(CodecError::Truncated) | Err(CodecError::Io(_)) => return,
+            // protocol failure: answer (best effort) and close — the
+            // stream position is unrecoverable after a bad frame
+            Err(e) => {
+                crate::warnlog!("shared-node", "bad frame: {e}");
+                let reply = WireMsg::Error(format!("bad frame: {e}"));
+                if stream.write_all(&codec::frame_bytes(&reply)).is_ok() {
+                    drain_then_close(stream);
+                }
+                return;
+            }
+        };
+        let reply = match msg {
+            WireMsg::Hello => WireMsg::HelloAck(HelloAck {
+                chunk: store.chunk,
+                domains: store.domains.keys().cloned().collect(),
+                digest,
+            }),
+            WireMsg::ExecShared(req) => {
+                let t0 = Instant::now();
+                let result = validate_req(&req, &store, backend.as_ref())
+                    .and_then(|()| {
+                        execute_shared_plan(backend.as_ref(), &store,
+                                            req.layer, &req.q, &req.plan,
+                                            &mut arena)
+                    });
+                match result {
+                    Ok(parts) => WireMsg::Partials {
+                        parts,
+                        exec_ns: t0.elapsed().as_nanos() as u64,
+                    },
+                    // request-level failure: report, keep serving
+                    Err(e) => WireMsg::Error(format!("{e:#}")),
+                }
+            }
+            other => WireMsg::Error(format!(
+                "unexpected {:?} frame on shared node", other.kind(),
+            )),
+        };
+        if stream.write_all(&codec::frame_bytes(&reply)).is_err() {
+            return; // peer gone mid-reply
+        }
+    }
+}
+
+/// Close a connection whose inbound bytes we gave up parsing without
+/// racing the peer's read of our final Error frame: closing with unread
+/// data queued sends RST on Linux, which can discard the reply from the
+/// peer's socket buffer. Half-close our side, then swallow what the
+/// peer already sent (bounded by a short timeout) before dropping.
+fn drain_then_close(mut stream: TcpStream) {
+    let _ = stream.shutdown(Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut scratch = [0u8; 4096];
+    for _ in 0..256 {
+        match stream.read(&mut scratch) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+/// Largest accepted query batch per request. Far above any real decode
+/// batch (`max_batch` is ~32), and small enough that the per-row
+/// `Partials` reply stays well under the frame cap.
+const MAX_REQ_ROWS: usize = 8192;
+
+/// Structural validation of a shipped request, so a malformed or
+/// mismatched plan answers with a typed error instead of panicking an
+/// executor thread deep in kernel code.
+fn validate_req(req: &ExecSharedReq, store: &SharedStore,
+                backend: &dyn Backend) -> Result<()> {
+    let dom = store.domain(&req.plan.domain)?;
+    let model = backend.model();
+    let qs = req.q.shape();
+    if req.q.dtype() != DType::F32 || qs.len() != 3 {
+        bail!("query must be a rank-3 f32 tensor, got {:?} {:?}",
+              req.q.dtype(), qs);
+    }
+    let (b, h, dh) = (qs[0], qs[1], qs[2]);
+    if h != model.n_heads || dh != model.head_dim {
+        bail!("query heads {h}x{dh} != node model {}x{}",
+              model.n_heads, model.head_dim);
+    }
+    // bounds the Partials reply under the frame cap — without this a
+    // huge (but valid) batch would panic the reply encoder instead of
+    // answering with an error
+    if b == 0 || b > MAX_REQ_ROWS {
+        bail!("batch size {b} out of range (1..={MAX_REQ_ROWS})");
+    }
+    if req.plan.q_pos.len() != b {
+        bail!("q_pos len {} != batch {b}", req.plan.q_pos.len());
+    }
+    // the kernels compute `q_pos - k_base + 1`; keeping positions in
+    // [-1, i32::MAX - 2] (−1 is the padding-mask convention) with
+    // non-negative bases makes that arithmetic overflow-free
+    if let Some(&bad) =
+        req.plan.q_pos.iter().find(|&&p| !(-1..i32::MAX - 1).contains(&p))
+    {
+        bail!("q_pos {bad} out of range");
+    }
+    if req.layer >= dom.layers.len() {
+        bail!("layer {} out of range ({} layers resident)",
+              req.layer, dom.layers.len());
+    }
+    for call in &req.plan.calls {
+        if call.run_len == 0
+            || call.chunk_start + call.run_len > dom.n_chunks
+        {
+            bail!("gemm call chunks [{}, {}) out of range ({} chunks)",
+                  call.chunk_start, call.chunk_start + call.run_len,
+                  dom.n_chunks);
+        }
+        // `valid` masks rows of the gathered K/V — past the gathered
+        // length it would index out of bounds inside the kernel
+        let max_valid = (call.run_len * dom.chunk) as i32;
+        if call.valid < 0 || call.valid > max_valid {
+            bail!("gemm call valid {} out of range (0..={max_valid})",
+                  call.valid);
+        }
+        if call.k_base < 0 {
+            bail!("gemm call k_base {} negative", call.k_base);
+        }
+        if let Some(p) = call.pos_override {
+            if !(0..i32::MAX - 1).contains(&p) {
+                bail!("gemm call pos_override {p} out of range");
+            }
+        }
+        if let Some(&bad) = call.rows.iter().find(|&&r| r >= b) {
+            bail!("gemm call row {bad} out of range (batch {b})");
+        }
+    }
+    Ok(())
+}

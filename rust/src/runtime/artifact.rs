@@ -218,6 +218,16 @@ impl Manifest {
     }
 }
 
+/// Resolve the artifacts directory from a CLI `--artifacts` option:
+/// an explicit non-empty value wins, otherwise [`default_artifacts_dir`]
+/// (one place to change discovery for every launcher subcommand).
+pub fn resolve_artifacts_dir(args: &crate::util::cli::Args) -> String {
+    match args.get("artifacts") {
+        Some("") | None => default_artifacts_dir(),
+        Some(d) => d.to_string(),
+    }
+}
+
 /// Default artifacts directory (repo root), overridable via env.
 pub fn default_artifacts_dir() -> String {
     std::env::var("MOSKA_ARTIFACTS").unwrap_or_else(|_| {

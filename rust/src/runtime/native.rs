@@ -62,7 +62,9 @@ thread_local! {
 }
 
 /// Attention partials (unnormalized): o `[B,H,dh]`, m `[B,H]`, l `[B,H]`.
-#[derive(Debug, Clone)]
+/// `PartialEq` compares raw tensor payloads — the codec-roundtrip
+/// bit-identity surface (note `-inf == -inf` holds; NaN does not).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Partials {
     pub o: Tensor,
     pub m: Tensor,

@@ -1,0 +1,266 @@
+//! Remote shared-KV node integration tests — all loopback, no
+//! artifacts: the synthetic store (`disagg::synthetic_store`) is
+//! deterministic, so client and server build bit-identical state the way
+//! two real processes would.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use moska::config::ModelConfig;
+use moska::disagg::{synthetic_store, synthetic_weights, DisaggCluster,
+                    SharedFabric, SYNTH_CHUNK, SYNTH_DOMAIN};
+use moska::plan::SharedGroupPlan;
+use moska::remote::codec::{self, HelloAck, WireMsg};
+use moska::remote::{spawn_shared_node, RemoteFabric, TransportCfg};
+use moska::runtime::native::Partials;
+use moska::runtime::{Backend, NativeBackend};
+use moska::tensor::Tensor;
+
+fn native_be() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::with_threads(ModelConfig::tiny(), SYNTH_CHUNK,
+                                         1))
+}
+
+fn test_cfg() -> TransportCfg {
+    TransportCfg {
+        connect_attempts: 20,
+        connect_backoff: Duration::from_millis(25),
+        request_retries: 2,
+        read_timeout: Duration::from_secs(2),
+    }
+}
+
+fn trivial_plan(domain: &str) -> SharedGroupPlan {
+    SharedGroupPlan {
+        domain: domain.to_string(),
+        rows: vec![0],
+        q_pos: vec![100],
+        sets: vec![vec![]],
+        calls: vec![],
+        pairs: 0,
+        reads: 0,
+    }
+}
+
+fn trivial_q() -> Tensor {
+    Tensor::f32(&[1, 4, 16], vec![0.25; 64])
+}
+
+/// The acceptance criterion: `--remote` decode must be bit-identical to
+/// the in-process run, over a real socket.
+#[test]
+fn remote_decode_bit_identical_to_local() {
+    let shared = Arc::new(synthetic_store().unwrap());
+    let addr =
+        spawn_shared_node(native_be(), Arc::clone(&shared)).unwrap();
+
+    let mut local = DisaggCluster::with_backends(
+        native_be(), native_be(), synthetic_weights(),
+        Arc::clone(&shared), Some(4), 32,
+    );
+    let pl = local.run_point(3, SYNTH_DOMAIN, 32, 4).unwrap();
+
+    let mut fabric =
+        RemoteFabric::connect(&addr.to_string(), test_cfg()).unwrap();
+    assert!(
+        fabric.check_store(SYNTH_CHUNK, SYNTH_DOMAIN, 0).is_err(),
+        "a content-mismatched store must be refused at connect",
+    );
+    fabric
+        .check_store(SYNTH_CHUNK, SYNTH_DOMAIN, shared.content_digest())
+        .unwrap();
+    let mut remote = DisaggCluster::with_fabric(
+        native_be(), Box::new(fabric), synthetic_weights(),
+        Arc::clone(&shared), Some(4), 32,
+    );
+    let pr = remote.run_point(3, SYNTH_DOMAIN, 32, 4).unwrap();
+
+    assert_eq!(pl.tokens, pr.tokens,
+               "remote decode diverged from in-process decode");
+    assert!(!pl.tokens.is_empty() && pl.tokens[0].len() == 4);
+
+    // the work really crossed the wire
+    let st = remote.fabric_stats().expect("remote fabric has stats");
+    let frames =
+        st.frames_sent.load(std::sync::atomic::Ordering::Relaxed);
+    let layers = ModelConfig::tiny().n_layers;
+    assert!(frames as usize >= 4 * layers,
+            "only {frames} frames for {} layer-steps", 4 * layers);
+    assert!(st.bytes_sent.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    // and the in-process run shipped nothing
+    assert!(local.fabric_stats().is_none());
+}
+
+/// A request-level failure (unknown domain) answers with a clean typed
+/// error and leaves the connection serving.
+#[test]
+fn unknown_domain_is_clean_error_and_connection_survives() {
+    let shared = Arc::new(synthetic_store().unwrap());
+    let addr =
+        spawn_shared_node(native_be(), Arc::clone(&shared)).unwrap();
+    let mut fabric =
+        RemoteFabric::connect(&addr.to_string(), test_cfg()).unwrap();
+
+    fabric.submit(0, &trivial_q(), &trivial_plan("nope")).unwrap();
+    let err = fabric.collect().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown domain"), "{msg}");
+
+    // same connection keeps serving valid requests
+    fabric.submit(0, &trivial_q(), &trivial_plan(SYNTH_DOMAIN)).unwrap();
+    let reply = fabric.collect().unwrap();
+    assert_eq!(reply.parts.len(), 1);
+    let st = fabric.stats().unwrap();
+    assert_eq!(st.retries.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+/// A malformed plan (rows out of range) is rejected by validation, not
+/// by a panic deep in the kernels.
+#[test]
+fn out_of_range_plan_is_rejected() {
+    let shared = Arc::new(synthetic_store().unwrap());
+    let addr =
+        spawn_shared_node(native_be(), Arc::clone(&shared)).unwrap();
+    let mut fabric =
+        RemoteFabric::connect(&addr.to_string(), test_cfg()).unwrap();
+
+    let mut plan = trivial_plan(SYNTH_DOMAIN);
+    plan.calls.push(moska::plan::GemmCall {
+        chunk_start: 9999,
+        run_len: 1,
+        rows: vec![0],
+        k_base: 0,
+        valid: 64,
+        pos_override: None,
+    });
+    fabric.submit(0, &trivial_q(), &plan).unwrap();
+    let msg = format!("{:#}", fabric.collect().unwrap_err());
+    assert!(msg.contains("out of range"), "{msg}");
+}
+
+/// Mini server that serves exactly one ExecShared per connection then
+/// drops it — the client must reconnect + resend transparently.
+fn flaky_one_shot_server() -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut s) = stream else { continue };
+            loop {
+                match codec::read_frame(&mut s) {
+                    Ok((WireMsg::Hello, _)) => {
+                        let ack = WireMsg::HelloAck(HelloAck {
+                            chunk: SYNTH_CHUNK,
+                            domains: vec![SYNTH_DOMAIN.into()],
+                            digest: 7,
+                        });
+                        if s.write_all(&codec::frame_bytes(&ack)).is_err() {
+                            break;
+                        }
+                    }
+                    Ok((WireMsg::ExecShared(_), _)) => {
+                        let reply = WireMsg::Partials {
+                            parts: vec![Partials::identity(1, 4, 16)],
+                            exec_ns: 1,
+                        };
+                        let _ = s.write_all(&codec::frame_bytes(&reply));
+                        break; // drop the connection after one request
+                    }
+                    _ => break,
+                }
+            }
+        }
+    });
+    addr
+}
+
+/// Dropped connections surface as retry + recovery, not as a hang or a
+/// hard error.
+#[test]
+fn dropped_connection_retries_and_recovers() {
+    let addr = flaky_one_shot_server();
+    let mut fabric =
+        RemoteFabric::connect(&addr.to_string(), test_cfg()).unwrap();
+
+    for round in 0..3 {
+        fabric
+            .submit(0, &trivial_q(), &trivial_plan(SYNTH_DOMAIN))
+            .unwrap();
+        let reply = fabric.collect().unwrap_or_else(|e| {
+            panic!("round {round} failed: {e:#}")
+        });
+        assert_eq!(reply.parts.len(), 1, "round {round}");
+    }
+    let st = fabric.stats().unwrap();
+    assert!(st.retries.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+            "rounds 2+ must have hit the reconnect path");
+}
+
+/// A codec-version mismatch answers with a clean Error frame (from the
+/// real server) and a typed client-side error — never a hang.
+#[test]
+fn version_mismatch_is_clean_both_ways() {
+    let shared = Arc::new(synthetic_store().unwrap());
+    let addr =
+        spawn_shared_node(native_be(), Arc::clone(&shared)).unwrap();
+
+    // server side: send a frame stamped v+1; expect an Error frame back
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut frame = codec::frame_bytes(&WireMsg::Hello);
+    frame[4..6].copy_from_slice(
+        &(codec::CODEC_VERSION + 1).to_le_bytes(),
+    );
+    raw.write_all(&frame).unwrap();
+    let (reply, _) = codec::read_frame(&mut raw).unwrap();
+    match reply {
+        WireMsg::Error(e) => {
+            assert!(e.contains("version"), "{e}");
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+
+    // client side: a foreign-version reply decodes to a typed error
+    let bad = {
+        let mut f = codec::frame_bytes(&WireMsg::Error("x".into()));
+        f[4..6].copy_from_slice(&(codec::CODEC_VERSION + 7).to_le_bytes());
+        f
+    };
+    let err =
+        codec::read_frame(&mut std::io::Cursor::new(&bad)).unwrap_err();
+    assert!(matches!(err, codec::CodecError::VersionMismatch { .. }),
+            "{err}");
+}
+
+/// StepPlan frames — the whole-step IR — roundtrip through the wire
+/// format (the future whole-step offload path has a pinned layout).
+#[test]
+fn step_plan_frame_roundtrips() {
+    let msg = WireMsg::StepPlan(moska::plan::StepPlan {
+        b: 2,
+        pos: vec![10, 20],
+        shared_groups: vec![trivial_plan(SYNTH_DOMAIN)],
+        route_live: false,
+        unique: vec![
+            moska::plan::UniqueRowPlan { spans: vec![] },
+            moska::plan::UniqueRowPlan {
+                spans: vec![moska::plan::PageSpan {
+                    page_start: 0,
+                    pages: 2,
+                    k_base: 512,
+                    valid: 100,
+                }],
+            },
+        ],
+        unique_work: 12345,
+        max_batch: 32,
+        position_independent: false,
+    });
+    let bytes = codec::frame_bytes(&msg);
+    let (back, n) =
+        codec::read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
+    assert_eq!(n, bytes.len());
+    assert_eq!(back, msg);
+}

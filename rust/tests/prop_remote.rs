@@ -1,0 +1,243 @@
+//! Codec property tests: the wire roundtrip is bit-identical for
+//! randomized plans/partials, and corrupted or truncated frames fail
+//! with a typed [`CodecError`] instead of panicking.
+
+use moska::plan::{plan_gemm_calls, plan_unique_spans, SharedGroupPlan,
+                  StepPlan, UniqueRowPlan};
+use moska::remote::codec::{frame_bytes, read_frame, CodecError,
+                           ExecSharedReq, WireMsg};
+use moska::router::ChunkSet;
+use moska::runtime::native::Partials;
+use moska::tensor::Tensor;
+use moska::util::prop::{check, Case, Config};
+use moska::util::rng::Rng;
+
+// ------------------------------------------------------------ generators
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let mut d = vec![0f32; shape.iter().product()];
+    rng.fill_normal_f32(&mut d);
+    // sprinkle the special values the fabric actually ships (-inf LSE
+    // identities, exact zeros) — NaN is excluded only because NaN != NaN
+    // would make the equality assertion vacuous
+    if !d.is_empty() {
+        let n = d.len();
+        d[rng.below(n as u64) as usize] = f32::NEG_INFINITY;
+        d[rng.below(n as u64) as usize] = 0.0;
+        d[rng.below(n as u64) as usize] = -0.0;
+        d[rng.below(n as u64) as usize] = f32::MIN_POSITIVE / 2.0; // denormal
+    }
+    Tensor::f32(shape, d)
+}
+
+fn rand_sets(rng: &mut Rng, b: usize, n_chunks: usize) -> Vec<ChunkSet> {
+    (0..b)
+        .map(|_| {
+            let mut set: ChunkSet = (0..n_chunks)
+                .filter(|_| rng.below(2) == 0)
+                .collect();
+            if set.is_empty() && rng.below(2) == 0 {
+                set.push(rng.below(n_chunks as u64) as usize);
+            }
+            set
+        })
+        .collect()
+}
+
+fn rand_group_plan(rng: &mut Rng) -> SharedGroupPlan {
+    let b = 1 + rng.below(6) as usize;
+    let n_chunks = 1 + rng.below(10) as usize;
+    let chunk = 8usize;
+    let bases: Vec<i32> = (0..n_chunks).map(|c| (c * chunk) as i32).collect();
+    let sets = rand_sets(rng, b, n_chunks);
+    let position_independent = rng.below(4) == 0;
+    let (calls, stats) = plan_gemm_calls(&sets, 32, chunk, &bases,
+                                         8 * (1 + rng.below(4) as usize),
+                                         position_independent);
+    SharedGroupPlan {
+        domain: format!("dom{}", rng.below(100)),
+        rows: (0..b).collect(),
+        q_pos: (0..b).map(|_| rng.below(10_000) as i32 - 1).collect(),
+        sets,
+        calls,
+        pairs: stats.pairs,
+        reads: stats.chunk_reads.max(stats.calls),
+    }
+}
+
+fn rand_step_plan(rng: &mut Rng) -> StepPlan {
+    let b = 1 + rng.below(5) as usize;
+    let groups = (0..rng.below(3)).map(|_| rand_group_plan(rng)).collect();
+    let unique = (0..b)
+        .map(|_| UniqueRowPlan {
+            spans: plan_unique_spans(
+                rng.below(100) as usize, rng.below(64) as usize, 8,
+                8 * (1 + rng.below(4) as usize),
+            ),
+        })
+        .collect();
+    StepPlan {
+        b,
+        pos: (0..b).map(|_| rng.below(4096) as i32).collect(),
+        shared_groups: groups,
+        route_live: rng.below(2) == 0,
+        unique,
+        unique_work: rng.below(1 << 20) as usize,
+        max_batch: 1 + rng.below(64) as usize,
+        position_independent: rng.below(2) == 0,
+    }
+}
+
+fn rand_msg(rng: &mut Rng) -> WireMsg {
+    match rng.below(4) {
+        0 => WireMsg::ExecShared(ExecSharedReq {
+            layer: rng.below(8) as usize,
+            q: rand_tensor(rng, &[1 + rng.below(4) as usize, 4, 8]),
+            plan: rand_group_plan(rng),
+        }),
+        1 => WireMsg::StepPlan(rand_step_plan(rng)),
+        2 => {
+            let n = 1 + rng.below(4) as usize;
+            WireMsg::Partials {
+                parts: (0..n)
+                    .map(|_| Partials {
+                        o: rand_tensor(rng, &[1, 4, 8]),
+                        m: rand_tensor(rng, &[1, 4]),
+                        l: rand_tensor(rng, &[1, 4]),
+                    })
+                    .collect(),
+                exec_ns: rng.next_u64(),
+            }
+        }
+        _ => WireMsg::Error(format!("error {}", rng.below(1000))),
+    }
+}
+
+// ----------------------------------------------------------- the wrapper
+
+/// A generated message plus its frame bytes (shrinks by truncation are
+/// handled in the dedicated properties; no structural shrinking here).
+#[derive(Debug, Clone)]
+struct FrameCase {
+    msg: WireMsg,
+    bytes: Vec<u8>,
+}
+
+impl Case for FrameCase {}
+
+fn gen_case(rng: &mut Rng) -> FrameCase {
+    let msg = rand_msg(rng);
+    let bytes = frame_bytes(&msg);
+    FrameCase { msg, bytes }
+}
+
+// ---------------------------------------------------------- the properties
+
+#[test]
+fn roundtrip_is_bit_identical() {
+    check("codec-roundtrip", Config::default(), gen_case, |case| {
+        let (back, n) = read_frame(&mut std::io::Cursor::new(&case.bytes))
+            .map_err(|e| format!("decode failed: {e}"))?;
+        if n != case.bytes.len() {
+            return Err(format!("consumed {n} of {}", case.bytes.len()));
+        }
+        if back != case.msg {
+            return Err("roundtrip changed the message".into());
+        }
+        Ok(())
+    });
+}
+
+/// A frame plus a mutation site (byte offset + bit, or a cut length).
+#[derive(Debug, Clone)]
+struct MutatedCase {
+    case: FrameCase,
+    at: usize,
+    bit: u8,
+}
+
+impl Case for MutatedCase {}
+
+#[test]
+fn corrupted_frames_fail_typed_never_panic() {
+    // flip one byte at a randomized offset: decode must return Err (or,
+    // in the astronomically unlikely CRC-collision case, not equal the
+    // original) — and must never panic
+    check(
+        "codec-corruption",
+        Config { cases: 128, ..Config::default() },
+        |rng| {
+            let case = gen_case(rng);
+            let at = rng.below(case.bytes.len() as u64) as usize;
+            let bit = 1u8 << rng.below(8);
+            MutatedCase { case, at, bit }
+        },
+        |m| {
+            let mut bytes = m.case.bytes.clone();
+            bytes[m.at] ^= m.bit;
+            match read_frame(&mut std::io::Cursor::new(&bytes)) {
+                Err(_) => Ok(()),
+                Ok((back, _)) if back != m.case.msg => Ok(()),
+                Ok(_) => Err(format!(
+                    "flipping byte {} bit {:#04x} went unnoticed",
+                    m.at, m.bit,
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn truncated_frames_fail_typed_never_panic() {
+    check(
+        "codec-truncation",
+        Config { cases: 64, ..Config::default() },
+        |rng| {
+            let case = gen_case(rng);
+            let at = rng.below(case.bytes.len() as u64) as usize;
+            MutatedCase { case, at, bit: 0 }
+        },
+        |m| {
+            let err = match read_frame(
+                &mut std::io::Cursor::new(&m.case.bytes[..m.at]),
+            ) {
+                Err(e) => e,
+                Ok(_) => {
+                    return Err(format!("decoded a {}-byte prefix", m.at))
+                }
+            };
+            match err {
+                CodecError::Truncated => Ok(()),
+                other => Err(format!("unexpected error {other}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn foreign_version_fails_before_payload() {
+    check(
+        "codec-version",
+        Config { cases: 32, ..Config::default() },
+        |rng| {
+            let case = gen_case(rng);
+            let v = 2 + rng.below(60_000) as usize;
+            MutatedCase { case, at: v, bit: 0 }
+        },
+        |m| {
+            let mut bytes = m.case.bytes.clone();
+            bytes[4..6].copy_from_slice(&(m.at as u16).to_le_bytes());
+            match read_frame(&mut std::io::Cursor::new(&bytes)) {
+                Err(CodecError::VersionMismatch { got, want }) => {
+                    if got as usize == m.at && want == 1 {
+                        Ok(())
+                    } else {
+                        Err(format!("wrong fields: got {got} want {want}"))
+                    }
+                }
+                other => Err(format!("expected VersionMismatch, got \
+                                      {other:?}")),
+            }
+        },
+    );
+}

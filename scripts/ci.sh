@@ -67,6 +67,55 @@ if [ "$RUN_BENCH" = "1" ]; then
     fi
 fi
 
+if [ "$RUN_BENCH" = "1" ]; then
+    echo "== remote-node loopback smoke =="
+    # spawn a real `moska shared-node` process on an ephemeral loopback
+    # port, run the same short synthetic disagg decode in-process and
+    # over the socket, and require bit-identical token streams
+    if cargo build --release --bin moska; then
+        BIN=target/release/moska
+        mkdir -p bench_out
+        # ephemeral port: the node prints "listening on <addr>" once bound
+        "$BIN" shared-node --synthetic --addr 127.0.0.1:0 \
+            > bench_out/shared_node.log 2>&1 &
+        NODE_PID=$!
+        trap 'kill "$NODE_PID" 2>/dev/null' EXIT
+        ADDR=""
+        for _ in $(seq 1 100); do
+            ADDR=$(sed -n 's/^shared-node listening on \([0-9.:]*\).*/\1/p' \
+                       bench_out/shared_node.log 2>/dev/null | head -1)
+            [ -n "$ADDR" ] && break
+            sleep 0.1
+        done
+        if [ -z "$ADDR" ]; then
+            echo "error: shared-node never reported its address" >&2
+            cat bench_out/shared_node.log >&2 || true
+            FAIL=1
+        elif "$BIN" disagg --synthetic --batches 2,4 --steps 4 --threads 1 \
+               --remote "$ADDR" \
+               --emit-tokens bench_out/remote_tokens.json \
+           && "$BIN" disagg --synthetic --batches 2,4 --steps 4 --threads 1 \
+               --emit-tokens bench_out/local_tokens.json; then
+            if cmp -s bench_out/remote_tokens.json \
+                      bench_out/local_tokens.json; then
+                echo "remote-node smoke: token streams bit-identical"
+            else
+                echo "error: remote decode diverged from in-process run" >&2
+                FAIL=1
+            fi
+        else
+            echo "error: remote-node smoke run failed" >&2
+            cat bench_out/shared_node.log >&2 || true
+            FAIL=1
+        fi
+        kill "$NODE_PID" 2>/dev/null
+        trap - EXIT
+    else
+        echo "error: release build for the remote smoke failed" >&2
+        FAIL=1
+    fi
+fi
+
 if [ "$FAIL" -ne 0 ]; then
     echo "CI FAILED" >&2
     exit 1
