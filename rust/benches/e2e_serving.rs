@@ -15,8 +15,9 @@
 //!    (Shared-KV GEMM), dense and 75%-sparse; needs `make artifacts`.
 
 use moska::config::{ModelConfig, ServingConfig};
-use moska::disagg::{synthetic_store, synthetic_weights, DisaggCluster,
-                    SYNTH_CHUNK, SYNTH_DOMAIN};
+use moska::disagg::{parse_shard_specs, synthetic_store, synthetic_weights,
+                    DisaggCluster, ShardedFabric, SYNTH_CHUNK,
+                    SYNTH_DOMAIN, SYNTH_DOMAIN_B};
 use moska::engine::{build_engine, Engine};
 use moska::kvcache::SharedStore;
 use moska::model::sampling::Sampler;
@@ -115,64 +116,127 @@ fn run_native(threads: usize, n_req: usize, steps: usize) -> NativeRun {
     }
 }
 
-/// Loopback remote-fabric measurements for BENCH_decode.json: spawn a
-/// `shared-node` server in-process on an ephemeral port, run the same
-/// disagg decode locally and over the socket, assert bit-identical
-/// tokens, and report the wire counters.
-fn fabric_bench() -> Vec<(&'static str, Json)> {
+/// Loopback fabric measurements for BENCH_decode.json: spawn a
+/// full-store `shared-node` AND a two-shard partitioned pair, run the
+/// same multi-domain disagg decode in-process / single-node / sharded
+/// (the remote planners built purely from the `Sync` handshake — no
+/// shared K/V in the unique-node process), assert bit-identical tokens
+/// everywhere, and report the wire counters — aggregate `fabric_*` plus
+/// per-shard `fabric_*_shard<i>` labels.
+fn fabric_bench() -> Vec<(String, Json)> {
     let (b, steps) = (4usize, 8usize);
+    let domains =
+        vec![SYNTH_DOMAIN.to_string(), SYNTH_DOMAIN_B.to_string()];
     let shared = Arc::new(synthetic_store().expect("synthetic store"));
     let mk_be = || -> Arc<dyn Backend> {
         Arc::new(NativeBackend::with_threads(ModelConfig::tiny(),
                                              SYNTH_CHUNK, 1))
     };
-    let addr = spawn_shared_node(mk_be(), Arc::clone(&shared))
-        .expect("spawn shared node");
 
     let mut local = DisaggCluster::with_backends(
         mk_be(), mk_be(), synthetic_weights(), Arc::clone(&shared),
         Some(4), 32,
     );
-    let pl = local.run_point(b, SYNTH_DOMAIN, 32, steps).expect("local");
+    let pl =
+        local.run_point_mixed(b, &domains, 32, steps).expect("local");
 
-    let fabric = RemoteFabric::connect(&addr.to_string(),
-                                       TransportCfg::default())
+    // ---- single remote node: planner view synced over the wire
+    let addr = spawn_shared_node(mk_be(), Arc::clone(&shared))
+        .expect("spawn shared node");
+    let mut fabric = RemoteFabric::connect(&addr.to_string(),
+                                           TransportCfg::default())
         .expect("connect fabric");
+    let sync = fabric.sync().expect("sync planner state");
+    let view = SharedStore::from_planner_states(sync.chunk, sync.domains)
+        .expect("planner view");
+    assert_eq!(view.resident_bytes(), 0,
+               "planner view must hold no shared K/V");
     let mut remote = DisaggCluster::with_fabric(
-        mk_be(), Box::new(fabric), synthetic_weights(),
-        Arc::clone(&shared), Some(4), 32,
+        mk_be(), Box::new(fabric), synthetic_weights(), Arc::new(view),
+        Some(4), 32,
     );
     let t0 = Instant::now();
-    let pr = remote.run_point(b, SYNTH_DOMAIN, 32, steps).expect("remote");
+    let pr =
+        remote.run_point_mixed(b, &domains, 32, steps).expect("remote");
     let remote_wall = t0.elapsed().as_secs_f64();
     assert_eq!(pl.tokens, pr.tokens,
                "loopback remote decode diverged from in-process decode");
-    println!("== remote fabric loopback (shared node at {addr}) ==");
-    // read through the cluster's Metrics registry (run_point publishes
-    // the FabricStats counters there as fabric_* gauges) — this is the
-    // exported observability surface, so the bench consumes it
-    let g = |name: &str| -> f64 {
-        remote.metrics.gauge_value(name).unwrap_or(0.0)
+
+    // ---- two shards over partitioned stores
+    let part = |keep: &str| {
+        let mut s = synthetic_store().expect("synthetic store");
+        s.retain_domains(&[keep.to_string()]).expect("partition");
+        Arc::new(s)
     };
-    let (sent, recv) = (g("fabric_bytes_sent"), g("fabric_bytes_recv"));
-    let frames = g("fabric_frames_sent");
-    let retries = g("fabric_retries");
-    let ser_ns = g("fabric_serialize_ns");
+    let a1 = spawn_shared_node(mk_be(), part(SYNTH_DOMAIN))
+        .expect("spawn shard A");
+    let a2 = spawn_shared_node(mk_be(), part(SYNTH_DOMAIN_B))
+        .expect("spawn shard B");
+    let specs =
+        parse_shard_specs(&format!("{a1},{a2}")).expect("shard specs");
+    let (sharded_fabric, store) =
+        ShardedFabric::connect(&specs, TransportCfg::default())
+            .expect("connect shards");
+    assert_eq!(store.resident_bytes(), 0,
+               "sharded planner view must hold no shared K/V");
+    let mut sharded = DisaggCluster::with_fabric(
+        mk_be(), Box::new(sharded_fabric), synthetic_weights(),
+        Arc::new(store), Some(4), 32,
+    );
+    let t0 = Instant::now();
+    let p2 =
+        sharded.run_point_mixed(b, &domains, 32, steps).expect("sharded");
+    let sharded_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(pl.tokens, p2.tokens,
+               "loopback sharded decode diverged from in-process decode");
+
+    println!("== fabric loopback (node at {addr}; shards at {a1}, {a2}) \
+              ==");
+    // read through the clusters' Metrics registries (run_point publishes
+    // the FabricStats counters as fabric_* / fabric_*_shard<i> gauges) —
+    // this is the exported observability surface, so the bench consumes
+    // it
+    let g = |c: &DisaggCluster, name: &str| -> f64 {
+        c.metrics.gauge_value(name).unwrap_or(0.0)
+    };
+    let (sent, recv) =
+        (g(&remote, "fabric_bytes_sent"), g(&remote, "fabric_bytes_recv"));
+    let frames = g(&remote, "fabric_frames_sent");
+    let retries = g(&remote, "fabric_retries");
+    let ser_ns = g(&remote, "fabric_serialize_ns");
     assert!(sent > 0.0 && frames > 0.0,
             "fabric gauges missing from cluster metrics");
-    println!("tokens            : bit-identical local vs remote");
+    println!("tokens            : bit-identical local vs remote vs \
+              2-shard");
     println!("wire              : {sent:.0} B sent / {recv:.0} B recv \
               in {frames:.0} frames ({retries:.0} retries)");
     println!("serialize         : {:.1}µs total", ser_ns / 1e3);
-    vec![
-        ("fabric_bytes_sent", Json::num(sent)),
-        ("fabric_bytes_recv", Json::num(recv)),
-        ("fabric_frames_sent", Json::num(frames)),
-        ("fabric_retries", Json::num(retries)),
-        ("fabric_serialize_ns", Json::num(ser_ns)),
-        ("fabric_remote_wall_s", Json::num(remote_wall)),
-        ("fabric_loopback_identical", Json::num(1.0)),
-    ]
+    let mut out: Vec<(String, Json)> = vec![
+        ("fabric_bytes_sent".into(), Json::num(sent)),
+        ("fabric_bytes_recv".into(), Json::num(recv)),
+        ("fabric_frames_sent".into(), Json::num(frames)),
+        ("fabric_retries".into(), Json::num(retries)),
+        ("fabric_serialize_ns".into(), Json::num(ser_ns)),
+        ("fabric_remote_wall_s".into(), Json::num(remote_wall)),
+        ("fabric_loopback_identical".into(), Json::num(1.0)),
+        ("fabric_shards".into(), Json::num(2.0)),
+        ("fabric_sharded_wall_s".into(), Json::num(sharded_wall)),
+        ("fabric_sharded_identical".into(), Json::num(1.0)),
+    ];
+    // per-shard labeled counters ride along in the same trajectory JSON
+    for (id, _) in sharded.fabric_shard_stats() {
+        for name in ["bytes_sent", "bytes_recv", "frames_sent", "retries"]
+        {
+            let key = format!("fabric_{name}_shard{id}");
+            let v = g(&sharded, &key);
+            if name == "frames_sent" {
+                assert!(v > 0.0, "shard {id} shipped no frames");
+            }
+            println!("shard {id} {name:<11}: {v:.0}");
+            out.push((key, Json::num(v)));
+        }
+    }
+    out
 }
 
 fn native_bench() {
@@ -194,12 +258,13 @@ fn native_bench() {
     println!("arena high-water  : {} bytes ({} fresh allocs total)",
              par.arena_high_water, par.arena_fresh_allocs);
 
-    // remote-fabric loopback section: wire counters ride along in the
-    // same perf-trajectory JSON, next to the arena high-water stats
+    // fabric loopback section (remote + 2-shard): wire counters ride
+    // along in the same perf-trajectory JSON, next to the arena
+    // high-water stats
     let fabric_entries = fabric_bench();
 
     std::fs::create_dir_all("bench_out").expect("bench_out dir");
-    let mut entries = vec![
+    let static_entries = vec![
         ("bench", Json::str("e2e_native_decode")),
         ("requests", Json::num(n as f64)),
         ("decode_steps", Json::num(steps as f64)),
@@ -215,7 +280,10 @@ fn native_bench() {
         ("arena_fresh_allocs", Json::num(par.arena_fresh_allocs as f64)),
         ("plan_build_mean_ns", Json::num(par.plan_build_mean_ns)),
     ];
-    entries.extend(fabric_entries);
+    let mut entries: Vec<(&str, Json)> = static_entries;
+    entries.extend(
+        fabric_entries.iter().map(|(k, v)| (k.as_str(), v.clone())),
+    );
     let j = Json::obj(entries);
     let path = "bench_out/BENCH_decode.json";
     std::fs::write(path, j.to_string()).expect("write BENCH_decode.json");

@@ -195,6 +195,7 @@ mod tests {
         DomainCache {
             name: "test".into(),
             tokens: vec![0; n_chunks * chunk],
+            n_tokens: n_chunks * chunk,
             n_chunks,
             chunk,
             layers,

@@ -100,6 +100,14 @@ fn serving_from_json(j: &Json) -> Result<ServingConfig> {
     if let Some(v) = j.opt("exec_threads") {
         c.exec_threads = v.as_usize()?;
     }
+    if let Some(v) = j.opt("shards") {
+        let pairs: Vec<String> = v
+            .as_arr()?
+            .iter()
+            .map(|p| Ok(p.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        c.shards = crate::plan::ShardAssignment::parse_pairs(&pairs)?;
+    }
     Ok(c)
 }
 
@@ -180,6 +188,21 @@ mod tests {
         let c = FileConfig::from_json(&j).unwrap();
         assert_eq!(c.http_max_body_bytes, Some(65536));
         assert_eq!(c.http_read_timeout_ms, Some(0));
+    }
+
+    #[test]
+    fn shards_assignment_parses() {
+        let j = Json::parse(
+            r#"{"serving": {"shards": ["legal=0", "code=1"]}}"#,
+        )
+        .unwrap();
+        let s = FileConfig::from_json(&j).unwrap().serving.unwrap();
+        assert_eq!(s.shards.shard_of("legal"), Some(0));
+        assert_eq!(s.shards.shard_of("code"), Some(1));
+        assert_eq!(s.shards.n_shards, 2);
+        let bad =
+            Json::parse(r#"{"serving": {"shards": ["legal"]}}"#).unwrap();
+        assert!(FileConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -96,6 +96,13 @@ pub struct ServingConfig {
     /// or machine size), `1` = serial (bit-identical either way — see
     /// the determinism contract in `runtime::native`).
     pub exec_threads: usize,
+    /// Static domain → shard assignment of a domain-sharded shared
+    /// store (JSON: `serving.shards` as `["legal=0", "code=1"]`; empty
+    /// = unsharded). The planner orders each step's shared-GEMM groups
+    /// shard-contiguously so per-shard batches are single slices — see
+    /// [`ShardAssignment`][crate::plan::ShardAssignment] and
+    /// `docs/ARCHITECTURE.md`.
+    pub shards: crate::plan::ShardAssignment,
 }
 
 impl Default for ServingConfig {
@@ -108,6 +115,7 @@ impl Default for ServingConfig {
             route_every_layer: false,
             position_independent: false,
             exec_threads: 0,
+            shards: crate::plan::ShardAssignment::default(),
         }
     }
 }

@@ -10,7 +10,7 @@
 //!   unit of work crossing the fabric**, so the shared node does pure
 //!   plan execution (no routing, no batch forming of its own).
 //!
-//! The fabric itself is the [`SharedFabric`] seam with two
+//! The fabric itself is the [`SharedFabric`] seam with three
 //! implementations:
 //!
 //! * [`LocalFabric`] — the in-process shared node ([`SharedNode`]): a
@@ -25,34 +25,52 @@
 //!   [`crate::remote::codec`]. `moska disagg --remote <addr>` runs the
 //!   identical decode loop over the socket, bit-comparable to in-process
 //!   execution.
+//! * [`ShardedFabric`] — one `RemoteFabric` per **domain shard** of a
+//!   partitioned store, routing each group plan to its resident shard
+//!   and fanning out concurrently within a layer (`moska disagg
+//!   --shards`; see [`sharded`]).
 //!
 //! ## Wire protocol (remote fabric)
 //!
-//! Frames are length-prefixed and CRC-checked: magic `"MoSK"`, codec
-//! version (u16), message kind (u16), payload length (u32), payload,
-//! CRC32 over everything past the magic. A version mismatch fails typed
-//! and immediately — nothing past the header of a foreign version is
-//! interpreted. Per layer the unique node sends one `ExecShared` frame
-//! (layer, query tensor, [`SharedGroupPlan`] with its gather index
-//! tables and run-coalesced [`GemmCall`][crate::plan::GemmCall]s) and
-//! receives one `Partials` frame (per-row LSE partials + node execution
-//! ns). Requests pipeline one-in-flight-per-layer: the frame is sent
-//! *before* the unique node runs its own attention, so both nodes
-//! compute concurrently. Reply deadlines reuse the HTTP server's
-//! timeout machinery (`READ_TIMEOUT × DEADLINE_FACTOR`); dropped
-//! connections reconnect and resend (plan execution is pure, so resend
-//! is safe). See `runtime/README.md` for the full frame layout.
+//! Frames are length-prefixed and CRC-checked; a version mismatch
+//! fails typed and immediately. Per layer the unique node sends one
+//! `ExecShared` frame per domain group (gathered query rows +
+//! [`SharedGroupPlan`] with its gather index tables and run-coalesced
+//! [`GemmCall`][crate::plan::GemmCall]s), eagerly and back-to-back, and
+//! receives the `Partials` frames (per-row LSE partials + node
+//! execution ns) in order — so the shared node(s) compute while the
+//! unique node runs its own attention. At connect, the `Sync`
+//! handshake ships each node's planner state (router embeddings +
+//! chunk geometry + per-shard digest). Reply deadlines reuse the HTTP
+//! server's timeout machinery (`READ_TIMEOUT × DEADLINE_FACTOR`);
+//! dropped connections reconnect — re-validating chunk, resident
+//! domains, and digest — and resend only unreplied frames (plan
+//! execution is pure, so resend is safe). The authoritative spec is
+//! `docs/WIRE_PROTOCOL.md`.
 //!
-//! In this reproduction the unique node still loads the shared store
-//! locally — the *planner* needs router embeddings and chunk geometry —
-//! while the shared node holds it for execution; shipping embeddings
-//! alone is an open item (ROADMAP).
+//! With a remote fabric the unique node **never loads shared K/V
+//! locally**: the planner's inputs (router embeddings + chunk geometry)
+//! arrive over the wire via the `Sync` handshake, and the unique node
+//! plans against a K/V-less planner-view
+//! [`SharedStore`][crate::kvcache::shared_store::SharedStore]
+//! (`resident_bytes() == 0`). The shared store can further be
+//! **domain-sharded** across several `moska shared-node` processes
+//! ([`ShardedFabric`], `moska disagg --shards a:port,b:port`): each
+//! shard holds a disjoint domain partition, each layer's group plans
+//! fan out to their resident shards concurrently, and the merged
+//! decode is bit-identical to the in-process run. See
+//! `docs/ARCHITECTURE.md`.
 //!
 //! Each node tracks the bytes it touches and the FLOPs it executes
 //! (tiny-model op census), so `moska disagg` prints the measured
 //! analogue of Fig 5: shared-node traffic flat in batch size, unique-node
 //! traffic linear, GEMM batching factor rising with batch.
 
+pub mod sharded;
+
+pub use sharded::{parse_shard_specs, ShardSpec, ShardedFabric};
+
+use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -66,8 +84,9 @@ use crate::kvcache::paged::{PagePool, RequestKv};
 use crate::kvcache::shared_store::SharedStore;
 use crate::metrics::{Metrics, UtilizationEstimator};
 use crate::model::Weights;
-use crate::plan::{exec_gemm_calls, exec_unique_spans, plan_gemm_calls,
-                  plan_unique_spans, PageSpan, SharedGroupPlan};
+use crate::plan::{exec_gemm_calls, exec_unique_spans, gather_rows,
+                  plan_gemm_calls, plan_unique_spans, PageSpan,
+                  SharedGroupPlan};
 use crate::remote::transport::FabricStats;
 use crate::router::Router;
 use crate::runtime::arena::TensorArena;
@@ -92,18 +111,33 @@ pub struct FabricReply {
     pub exec_ns: u64,
 }
 
-/// The disagg seam: ships one layer's [`SharedGroupPlan`] to wherever
-/// the shared node lives. One request in flight per fabric —
-/// [`SharedFabric::submit`] is non-blocking (the node executes while the
-/// unique node runs its own attention), [`SharedFabric::collect`] joins.
+/// The disagg seam: ships one layer's shared-KV work to wherever the
+/// shared node(s) live. A submission is the layer's full list of domain
+/// **groups** — `(gathered query rows, plan)` pairs, one per domain —
+/// and one submission batch is in flight per fabric:
+/// [`SharedFabric::submit`] is non-blocking (the node(s) execute while
+/// the unique node runs its own attention), [`SharedFabric::collect`]
+/// joins and returns one [`FabricReply`] per group, in submission
+/// order. Implementations: [`LocalFabric`] (in-process thread),
+/// [`RemoteFabric`][crate::remote::RemoteFabric] (one TCP node),
+/// [`ShardedFabric`] (one node per domain shard, concurrent fan-out).
 pub trait SharedFabric: Send {
-    fn submit(&mut self, layer: usize, q: &Tensor,
-              plan: &SharedGroupPlan) -> Result<()>;
-    fn collect(&mut self) -> Result<FabricReply>;
-    /// Wire-level counters (remote fabrics; `None` for in-process
-    /// channels, which move pointers, not bytes).
+    fn submit(&mut self, layer: usize,
+              groups: &[(&Tensor, &SharedGroupPlan)]) -> Result<()>;
+    fn collect(&mut self) -> Result<Vec<FabricReply>>;
+    /// Wire-level counters (single-connection remote fabrics; `None`
+    /// for in-process channels, which move pointers, not bytes, and for
+    /// sharded fabrics, which report per shard).
     fn stats(&self) -> Option<Arc<FabricStats>> {
         None
+    }
+    /// Per-shard wire counters `(shard id, stats)`; single-connection
+    /// fabrics report as shard 0.
+    fn shard_stats(&self) -> Vec<(usize, Arc<FabricStats>)> {
+        match self.stats() {
+            Some(s) => vec![(0, s)],
+            None => Vec::new(),
+        }
     }
 }
 
@@ -195,35 +229,47 @@ impl Drop for SharedNode {
 }
 
 /// In-process fabric: the [`SharedNode`] thread behind the
-/// [`SharedFabric`] seam.
+/// [`SharedFabric`] seam. Group requests queue on the node thread's
+/// channel and execute in submission order.
 pub struct LocalFabric {
     node: SharedNode,
-    pending: Option<Receiver<Result<FabricReply>>>,
+    pending: Vec<Receiver<Result<FabricReply>>>,
 }
 
 impl LocalFabric {
     pub fn spawn(backend: Arc<dyn Backend>, store: Arc<SharedStore>)
                  -> LocalFabric {
-        LocalFabric { node: SharedNode::spawn(backend, store), pending: None }
+        LocalFabric {
+            node: SharedNode::spawn(backend, store),
+            pending: Vec::new(),
+        }
     }
 }
 
 impl SharedFabric for LocalFabric {
-    fn submit(&mut self, layer: usize, q: &Tensor,
-              plan: &SharedGroupPlan) -> Result<()> {
-        anyhow::ensure!(self.pending.is_none(),
+    fn submit(&mut self, layer: usize,
+              groups: &[(&Tensor, &SharedGroupPlan)]) -> Result<()> {
+        anyhow::ensure!(self.pending.is_empty(),
                         "fabric already has an in-flight request");
-        self.pending =
-            Some(self.node.request(layer, q.clone(), plan.clone())?);
+        for &(q, plan) in groups {
+            self.pending
+                .push(self.node.request(layer, q.clone(), plan.clone())?);
+        }
         Ok(())
     }
 
-    fn collect(&mut self) -> Result<FabricReply> {
-        let rx = self
-            .pending
-            .take()
-            .context("fabric collect without a submitted request")?;
-        rx.recv().map_err(|_| anyhow::anyhow!("shared node dropped"))?
+    fn collect(&mut self) -> Result<Vec<FabricReply>> {
+        anyhow::ensure!(!self.pending.is_empty(),
+                        "fabric collect without a submitted request");
+        let pending = std::mem::take(&mut self.pending);
+        let mut out = Vec::with_capacity(pending.len());
+        for rx in pending {
+            out.push(
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("shared node dropped"))??,
+            );
+        }
+        Ok(out)
     }
 }
 
@@ -254,6 +300,14 @@ pub struct DisaggCluster {
     pub pool: PagePool,
     pub router: Router,
     pub max_batch: usize,
+    /// Static domain → shard assignment of the fabric (set from
+    /// [`ShardedFabric::assignment`] by `run_sim`): the step planner
+    /// orders each step's shared groups shard-contiguously with it, so
+    /// a shard's submission batch is one contiguous slice of the plan
+    /// list. `None` (unsharded) keeps plain domain order. Group order
+    /// never changes decode output — each batch row belongs to exactly
+    /// one group.
+    pub shard_assignment: Option<crate::plan::ShardAssignment>,
     /// Cluster metrics: [`run_point`][DisaggCluster::run_point] publishes
     /// the fabric byte/frame counters here as `fabric_*` gauges — the
     /// exported observability surface (the `e2e_serving` bench reads it
@@ -318,8 +372,10 @@ impl DisaggCluster {
     }
 
     /// The general constructor: any [`SharedFabric`] — the in-process
-    /// node or a [`RemoteFabric`][crate::remote::RemoteFabric] to a
-    /// `moska shared-node` process.
+    /// node, a [`RemoteFabric`][crate::remote::RemoteFabric] to a
+    /// `moska shared-node` process, or a [`ShardedFabric`] over a
+    /// domain-partitioned fleet. On the remote paths, pass the K/V-less
+    /// planner-view store assembled from the `Sync` handshake.
     pub fn with_fabric(unique: Arc<dyn Backend>,
                        fabric: Box<dyn SharedFabric>, weights: Weights,
                        shared: Arc<SharedStore>, top_k: Option<usize>,
@@ -338,15 +394,23 @@ impl DisaggCluster {
             pool: PagePool::new(8192, chunk, cfg.n_kv_heads, cfg.head_dim),
             router: Router::new(top_k),
             max_batch,
+            shard_assignment: None,
             metrics: Metrics::new(),
             sstats: SharedSideStats::default(),
             arena: TensorArena::new(),
         }
     }
 
-    /// Wire-level fabric counters (remote fabrics only).
+    /// Wire-level fabric counters (single-connection remote fabrics).
     pub fn fabric_stats(&self) -> Option<Arc<FabricStats>> {
         self.fabric.stats()
+    }
+
+    /// Per-shard wire counters `(shard id, stats)` — one entry per
+    /// shard for a [`ShardedFabric`], one entry (shard 0) for a plain
+    /// remote fabric, empty in-process.
+    pub fn fabric_shard_stats(&self) -> Vec<(usize, Arc<FabricStats>)> {
+        self.fabric.shard_stats()
     }
 
     /// Seed `b` decode-ready requests over `domain` with `unique_tokens`
@@ -354,11 +418,25 @@ impl DisaggCluster {
     pub fn seed_requests(&mut self, b: usize, domain: &str,
                          unique_tokens: usize, seed: u64)
                          -> Result<Vec<SimRequest>> {
+        self.seed_requests_mixed(b, &[domain.to_string()], unique_tokens,
+                                 seed)
+    }
+
+    /// Seed `b` decode-ready requests assigned round-robin across
+    /// `domains` — a mixed batch exercising every domain group (and,
+    /// under a [`ShardedFabric`], every shard) in one step. One rng
+    /// stream regardless of the mix, so identical seeds give identical
+    /// request state in every fabric configuration.
+    pub fn seed_requests_mixed(&mut self, b: usize, domains: &[String],
+                               unique_tokens: usize, seed: u64)
+                               -> Result<Vec<SimRequest>> {
+        anyhow::ensure!(!domains.is_empty(), "need at least one domain");
         let cfg = self.backend.model().clone();
-        let shared_len = self.shared.domain(domain)?.token_len();
         let mut rng = Rng::new(seed);
         let mut out = Vec::with_capacity(b);
-        for _ in 0..b {
+        for i in 0..b {
+            let domain = domains[i % domains.len()].as_str();
+            let shared_len = self.shared.domain(domain)?.token_len();
             let mut kv = RequestKv::new(cfg.n_layers, shared_len);
             let mut per_layer = Vec::new();
             for _ in 0..cfg.n_layers {
@@ -382,10 +460,12 @@ impl DisaggCluster {
         Ok(out)
     }
 
-    /// One synchronized decode step across both nodes: the unique node
-    /// plans (route + batch-form once at layer 0), ships the shared
-    /// group plan per layer, and executes its own unique-KV spans while
-    /// the shared node works (one request in flight per layer).
+    /// One synchronized decode step across the nodes: the unique node
+    /// plans (route + batch-form once at layer 0, one group per
+    /// domain), ships every group plan per layer — the fabric fans the
+    /// groups out to their resident shard(s) — and executes its own
+    /// unique-KV spans while the shared side works (one submission
+    /// batch in flight per layer).
     pub fn step(&mut self, reqs: &mut [SimRequest]) -> Result<()> {
         let cfg = self.backend.model().clone();
         let b = reqs.len();
@@ -393,6 +473,21 @@ impl DisaggCluster {
         let pos: Vec<i32> = reqs.iter().map(|r| r.pos).collect();
         let chunk = self.backend.chunk_size();
         let max_tok = self.backend.max_attn_tokens();
+
+        // group rows by shared domain once per step (BTreeMap →
+        // deterministic group order; the grouping is layer-invariant;
+        // keys borrow the requests so only one String clone per DOMAIN
+        // survives into the group list)
+        let domains: Vec<(String, Vec<usize>)> = {
+            let mut by_domain: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+            for (i, r) in reqs.iter().enumerate() {
+                by_domain.entry(r.domain.as_str()).or_default().push(i);
+            }
+            by_domain
+                .into_iter()
+                .map(|(d, rows)| (d.to_string(), rows))
+                .collect()
+        };
 
         // ---- unique node: embed + weights census
         let mut x = self.backend.embed(&tokens, self.weights.embed())?;
@@ -410,7 +505,15 @@ impl DisaggCluster {
             .map(|r| plan_unique_spans(r.kv.len + 1, r.kv.start_pos, chunk,
                                        max_tok))
             .collect();
-        let mut shared_plan: Option<SharedGroupPlan> = None;
+        let mut shared_plans: Option<Vec<SharedGroupPlan>> = None;
+
+        // a group whose rows are exactly 0..b needs no query gather —
+        // the step's q tensor IS the group query (the common
+        // single-domain case ships q by reference, no copy)
+        let full_batch = |rows: &[usize]| {
+            rows.len() == b
+                && rows.iter().enumerate().all(|(i, &r)| i == r)
+        };
 
         for layer in 0..cfg.n_layers {
             let lw = self.weights.layer(layer);
@@ -422,41 +525,92 @@ impl DisaggCluster {
                                       v.index0(i))?;
             }
 
-            // ---- plan (unique node does the lightweight scoring, once)
+            // gathers built for layer-0 routing, reused for the layer-0
+            // shipment below (keyed by domain — group order may change
+            // under the shard assignment)
+            let mut l0_gathers: BTreeMap<String, Tensor> = BTreeMap::new();
+
+            // ---- plan (unique node does the lightweight scoring, once
+            // per step, one group per domain)
             if layer == 0 {
-                let dom_name = reqs[0].domain.clone();
-                let dom = self.shared.domain(&dom_name)?;
-                let sets = self.router.route(
-                    self.backend.as_ref(), &q, dom.embeddings(layer),
-                )?;
-                let (calls, stats) = plan_gemm_calls(
-                    &sets, self.max_batch, dom.chunk, &dom.chunk_bases,
-                    max_tok, false,
-                );
-                shared_plan = Some(SharedGroupPlan {
-                    domain: dom_name,
-                    rows: (0..b).collect(),
-                    q_pos: pos.clone(),
-                    sets,
-                    calls,
-                    pairs: stats.pairs,
-                    reads: stats.chunk_reads.max(stats.calls),
+                let mut plans = Vec::with_capacity(domains.len());
+                for (dname, rows) in &domains {
+                    let dom = self.shared.domain(dname)?;
+                    let sets = if full_batch(rows) {
+                        self.router.route(
+                            self.backend.as_ref(), &q,
+                            dom.embeddings(layer),
+                        )?
+                    } else {
+                        let qg = gather_rows(&mut self.arena, &q, rows,
+                                             cfg.n_heads, cfg.head_dim);
+                        let sets = self.router.route(
+                            self.backend.as_ref(), &qg,
+                            dom.embeddings(layer),
+                        )?;
+                        l0_gathers.insert(dname.clone(), qg);
+                        sets
+                    };
+                    let (calls, stats) = plan_gemm_calls(
+                        &sets, self.max_batch, dom.chunk, &dom.chunk_bases,
+                        max_tok, false,
+                    );
+                    plans.push(SharedGroupPlan {
+                        domain: dname.clone(),
+                        rows: rows.clone(),
+                        q_pos: rows.iter().map(|&r| pos[r]).collect(),
+                        sets,
+                        calls,
+                        pairs: stats.pairs,
+                        reads: stats.chunk_reads.max(stats.calls),
+                    });
+                }
+                // shard-aware ordering: same-shard groups become one
+                // contiguous slice of the submission (the fabric's
+                // per-shard batches), without changing any row's math
+                if let Some(a) = &self.shard_assignment {
+                    a.order_groups(&mut plans);
+                }
+                shared_plans = Some(plans);
+            }
+            let plans = shared_plans.as_ref().expect("planned at layer 0");
+
+            // ---- fabric: ship every group (the fabric fans them out),
+            // then overlap with local work. `None` = the group covers
+            // the whole batch in order, so q itself ships by reference;
+            // gather buffers are arena-staged and recycled right after
+            // the submit serializes/clones them.
+            let mut group_q: Vec<Option<Tensor>> =
+                Vec::with_capacity(plans.len());
+            for p in plans {
+                group_q.push(if full_batch(&p.rows) {
+                    None
+                } else if let Some(qg) = l0_gathers.remove(&p.domain) {
+                    Some(qg) // layer 0: reuse the routing gather
+                } else {
+                    Some(gather_rows(&mut self.arena, &q, &p.rows,
+                                     cfg.n_heads, cfg.head_dim))
                 });
             }
-            let plan = shared_plan.as_ref().expect("planned at layer 0");
-
-            // ---- fabric: ship the plan, then overlap with local work
-            self.fabric.submit(layer, &q, plan)?;
+            {
+                let shipments: Vec<(&Tensor, &SharedGroupPlan)> = group_q
+                    .iter()
+                    .zip(plans.iter())
+                    .map(|(t, p)| (t.as_ref().unwrap_or(&q), p))
+                    .collect();
+                self.fabric.submit(layer, &shipments)?;
+            }
+            for t in group_q.into_iter().flatten() {
+                self.arena.recycle(t);
+            }
 
             // ---- unique node: per-request GEMV attention from its spans
             let mut acc = RowAccumulator::from_arena(
                 &mut self.arena, b, cfg.n_heads, cfg.head_dim,
             );
-            let nh = cfg.n_heads * cfg.head_dim;
             for (i, r) in reqs.iter().enumerate() {
-                let mut qbuf = self.arena.take_buf(nh);
-                qbuf.extend_from_slice(q.index0(i));
-                let qr = Tensor::f32(&[1, cfg.n_heads, cfg.head_dim], qbuf);
+                let qr = gather_rows(&mut self.arena, &q, &[i],
+                                     cfg.n_heads, cfg.head_dim);
                 let qp = [pos[i]];
                 let part = exec_unique_spans(
                     self.backend.as_ref(), &self.pool, &r.kv, layer, &qr,
@@ -476,26 +630,33 @@ impl DisaggCluster {
                 );
             }
 
-            // ---- fabric: join the shared node's reply and merge
-            let reply = self.fabric.collect()?;
-            validate_reply(&reply, b, cfg.n_heads, cfg.head_dim)?;
-            for (i, p) in reply.parts.iter().enumerate() {
-                acc.merge_row(i, p);
+            // ---- fabric: join the shared replies and merge per group
+            // (each batch row belongs to exactly one domain group, so
+            // its partial merges exactly once — group iteration order
+            // does not change any row's floating-point math)
+            let replies = self.fabric.collect()?;
+            validate_replies(&replies, plans, cfg.n_heads, cfg.head_dim)?;
+            for (plan, reply) in plans.iter().zip(&replies) {
+                for (j, &row) in plan.rows.iter().enumerate() {
+                    acc.merge_row(row, &reply.parts[j]);
+                }
+                // shared-node op census: each GEMM call reads one chunk
+                // of K+V once (that's the whole point) and runs
+                // 2·2·H·dh·chunk flops per routed query row.
+                let sh_chunk = self.shared.chunk;
+                let kv_bytes_per_chunk =
+                    2 * sh_chunk * cfg.n_kv_heads * cfg.head_dim * 4;
+                self.shared_util.add_bytes_read(
+                    (plan.reads * kv_bytes_per_chunk) as u64,
+                );
+                let flops_per_pair =
+                    4 * cfg.n_heads * cfg.head_dim * sh_chunk;
+                self.shared_util
+                    .add_flops((plan.pairs * flops_per_pair) as u64);
+                self.sstats.pairs += plan.pairs as u64;
+                self.sstats.calls += plan.reads as u64;
+                self.sstats.busy_ns += reply.exec_ns;
             }
-            // shared-node op census: each GEMM call reads one chunk of
-            // K+V once (that's the whole point) and runs
-            // 2·2·H·dh·chunk flops per routed query row.
-            let sh_chunk = self.shared.chunk;
-            let kv_bytes_per_chunk =
-                2 * sh_chunk * cfg.n_kv_heads * cfg.head_dim * 4;
-            self.shared_util
-                .add_bytes_read((plan.reads * kv_bytes_per_chunk) as u64);
-            let flops_per_pair = 4 * cfg.n_heads * cfg.head_dim * sh_chunk;
-            self.shared_util
-                .add_flops((plan.pairs * flops_per_pair) as u64);
-            self.sstats.pairs += plan.pairs as u64;
-            self.sstats.calls += plan.reads as u64;
-            self.sstats.busy_ns += reply.exec_ns;
 
             let attn_o = acc.finalize_with(&mut self.arena);
             acc.recycle_into(&mut self.arena);
@@ -522,7 +683,16 @@ impl DisaggCluster {
     /// (including the per-request token streams for bit-comparison).
     pub fn run_point(&mut self, b: usize, domain: &str, unique_tokens: usize,
                      steps: usize) -> Result<SimPoint> {
-        let mut reqs = self.seed_requests(b, domain, unique_tokens, b as u64)?;
+        self.run_point_mixed(b, &[domain.to_string()], unique_tokens, steps)
+    }
+
+    /// [`run_point`][DisaggCluster::run_point] over a round-robin
+    /// domain mix — the multi-group (and, sharded, multi-shard) batch.
+    pub fn run_point_mixed(&mut self, b: usize, domains: &[String],
+                           unique_tokens: usize, steps: usize)
+                           -> Result<SimPoint> {
+        let mut reqs =
+            self.seed_requests_mixed(b, domains, unique_tokens, b as u64)?;
         // deltas against counters at point start
         let shared0 = snapshot(&self.shared_util);
         let unique0 = snapshot(&self.unique_util);
@@ -548,8 +718,32 @@ impl DisaggCluster {
         for r in reqs.iter_mut() {
             r.kv.release(&mut self.pool);
         }
-        if let Some(st) = self.fabric.stats() {
-            st.publish(&self.metrics);
+        // export the wire counters: aggregate `fabric_*` gauges plus
+        // per-shard `fabric_*_shard<id>` labels (the sharded fabric's
+        // observability surface; the e2e bench reads both into
+        // BENCH_decode.json)
+        let shard_stats = self.fabric.shard_stats();
+        match shard_stats.as_slice() {
+            [] => {}
+            [(id, st)] => {
+                // single connection: it IS the aggregate
+                st.publish(&self.metrics);
+                st.publish_shard(&self.metrics, *id);
+            }
+            many => {
+                let mut totals: BTreeMap<&'static str, u64> =
+                    BTreeMap::new();
+                for (id, st) in many {
+                    st.publish_shard(&self.metrics, *id);
+                    for (name, v) in st.entries() {
+                        *totals.entry(name).or_insert(0) += v;
+                    }
+                }
+                for (name, v) in &totals {
+                    self.metrics
+                        .gauge(&format!("fabric_{name}"), *v as f64);
+                }
+            }
         }
         Ok(SimPoint {
             batch: b,
@@ -571,24 +765,48 @@ impl DisaggCluster {
     }
 }
 
-/// A fabric reply must line up with the step that awaits it — a
+/// Parse a comma-separated list of hex store digests (optionally
+/// `0x`-prefixed) — the `--expect-digest` pin surface.
+fn parse_digest_list(s: &str) -> Result<Vec<u64>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let hex = t.trim_start_matches("0x").trim_start_matches("0X");
+            u64::from_str_radix(hex, 16)
+                .with_context(|| format!("bad digest '{t}' (want hex)"))
+        })
+        .collect()
+}
+
+/// Fabric replies must line up with the step that awaits them — a
 /// mismatched or malicious remote reply answers with an error, not a
 /// panic inside the merge kernels.
-fn validate_reply(reply: &FabricReply, b: usize, h: usize, dh: usize)
-                  -> Result<()> {
-    anyhow::ensure!(reply.parts.len() == b,
-                    "fabric reply has {} rows, step expects {b}",
-                    reply.parts.len());
-    for (i, p) in reply.parts.iter().enumerate() {
-        let ok = p.o.dtype() == DType::F32
-            && p.m.dtype() == DType::F32
-            && p.l.dtype() == DType::F32
-            && p.o.shape() == &[1, h, dh][..]
-            && p.m.shape() == &[1, h][..]
-            && p.l.shape() == &[1, h][..];
-        anyhow::ensure!(ok, "fabric reply row {i} has wrong partial shapes \
-                             (o {:?}, m {:?}, l {:?})",
-                        p.o.shape(), p.m.shape(), p.l.shape());
+fn validate_replies(replies: &[FabricReply], plans: &[SharedGroupPlan],
+                    h: usize, dh: usize) -> Result<()> {
+    anyhow::ensure!(replies.len() == plans.len(),
+                    "fabric returned {} replies for {} groups",
+                    replies.len(), plans.len());
+    for (g, (plan, reply)) in plans.iter().zip(replies).enumerate() {
+        anyhow::ensure!(
+            reply.parts.len() == plan.rows.len(),
+            "group {g} ('{}') reply has {} rows, plan expects {}",
+            plan.domain, reply.parts.len(), plan.rows.len(),
+        );
+        for (i, p) in reply.parts.iter().enumerate() {
+            let ok = p.o.dtype() == DType::F32
+                && p.m.dtype() == DType::F32
+                && p.l.dtype() == DType::F32
+                && p.o.shape() == &[1, h, dh][..]
+                && p.m.shape() == &[1, h][..]
+                && p.l.shape() == &[1, h][..];
+            anyhow::ensure!(
+                ok,
+                "group {g} reply row {i} has wrong partial shapes \
+                 (o {:?}, m {:?}, l {:?})",
+                p.o.shape(), p.m.shape(), p.l.shape(),
+            );
+        }
     }
     Ok(())
 }
@@ -601,10 +819,17 @@ fn snapshot(u: &UtilizationEstimator) -> (u64, u64) {
 
 /// Chunk tokens of the synthetic (artifact-free) disagg setup.
 pub const SYNTH_CHUNK: usize = 64;
-/// Shared chunks registered into the synthetic domain.
+/// Shared chunks registered into the primary synthetic domain.
 pub const SYNTH_CHUNKS: usize = 8;
-/// Domain name served by the synthetic setup.
+/// Primary domain name served by the synthetic setup.
 pub const SYNTH_DOMAIN: &str = "bench";
+/// Second synthetic domain (different content, fewer chunks) — the
+/// partition surface for domain-sharded runs: shard A serves
+/// [`SYNTH_DOMAIN`], shard B serves [`SYNTH_DOMAIN_B`]
+/// (`moska shared-node --synthetic --domains bench2`).
+pub const SYNTH_DOMAIN_B: &str = "bench2";
+/// Shared chunks registered into [`SYNTH_DOMAIN_B`].
+pub const SYNTH_CHUNKS_B: usize = 4;
 /// Seed for synthetic weights + store; both sides of a remote run must
 /// agree on it so the stores are bit-identical.
 pub const SYNTH_SEED: u64 = 0x5EED_D15A;
@@ -614,11 +839,14 @@ pub fn synthetic_weights() -> Weights {
     Weights::synthetic(ModelConfig::tiny(), SYNTH_SEED)
 }
 
-/// Build the synthetic shared store by prefilling [`SYNTH_CHUNKS`]
-/// chunks through the native kernels (serial backend → deterministic and
-/// bit-identical in every process that calls this, which is what lets
-/// `moska shared-node --synthetic` and `moska disagg --synthetic
-/// --remote` agree without artifacts).
+/// Build the synthetic shared store — [`SYNTH_DOMAIN`] and
+/// [`SYNTH_DOMAIN_B`] — by prefilling through the native kernels
+/// (serial backend → deterministic and bit-identical in every process
+/// that calls this, which is what lets `moska shared-node --synthetic`
+/// and `moska disagg --synthetic --remote`/`--shards` agree without
+/// artifacts). Shards partition it with
+/// [`SharedStore::retain_domains`], each advertising its own per-shard
+/// digest.
 pub fn synthetic_store() -> Result<SharedStore> {
     let model = ModelConfig::tiny();
     let be = crate::runtime::NativeBackend::with_threads(
@@ -635,6 +863,10 @@ pub fn synthetic_store() -> Result<SharedStore> {
         .map(|i| (i % 251) as i32)
         .collect();
     eng.register_domain(SYNTH_DOMAIN, &tokens)?;
+    let tokens_b: Vec<i32> = (0..SYNTH_CHUNKS_B * SYNTH_CHUNK)
+        .map(|i| ((i * 7 + 13) % 251) as i32)
+        .collect();
+    eng.register_domain(SYNTH_DOMAIN_B, &tokens_b)?;
     Ok(std::mem::replace(&mut eng.shared,
                          SharedStore::empty(SYNTH_CHUNK)))
 }
@@ -642,10 +874,19 @@ pub fn synthetic_store() -> Result<SharedStore> {
 // --------------------------------------------------------------- the CLI
 
 /// `moska disagg`: sweep batch sizes and print the per-node profile.
-/// `--remote <addr>` runs the identical loop against a `moska
-/// shared-node` process; `--synthetic` needs no artifacts;
-/// `--emit-tokens <path>` writes the greedy token streams for
-/// bit-comparison across runs.
+///
+/// * `--remote <addr>` runs the identical loop against one `moska
+///   shared-node` process; `--shards addr1,addr2` (entries `addr` or
+///   `domain=addr`) against a domain-sharded fleet. On **both** remote
+///   paths the unique node never loads shared K/V locally: the planner
+///   state (router embeddings + chunk geometry) arrives via the `Sync`
+///   handshake and the planner-view store is K/V-less.
+/// * `--domains a,b` seeds requests round-robin across the named
+///   domains (default: `bench` synthetic / `legal` artifacts) — a
+///   mixed batch exercises one shared-GEMM group per domain and, when
+///   sharded, fans out across every resident shard per layer.
+/// * `--synthetic` needs no artifacts; `--emit-tokens <path>` writes
+///   the greedy token streams for bit-comparison across runs.
 pub fn run_sim(args: &Args) -> Result<()> {
     let batches: Vec<usize> = args
         .str("batches")?
@@ -657,14 +898,31 @@ pub fn run_sim(args: &Args) -> Result<()> {
     // native exec threads PER NODE: 0 = auto, 1 = serial
     let threads = args.usize("threads")?;
     let remote = args.get("remote").unwrap_or("").to_string();
+    let shards_arg = args.get("shards").unwrap_or("").to_string();
     let synthetic = args.flag("synthetic");
     let emit_tokens = args.get("emit-tokens").unwrap_or("").to_string();
+    let domains_arg = args.get("domains").unwrap_or("").to_string();
+    // pinned node digests: the client holds no shared K/V on the remote
+    // paths and so cannot recompute a store digest itself — every run
+    // prints the advertised digests, and an operator pins them here to
+    // refuse a node/shard serving different content under the same
+    // domain names
+    let expect_digests =
+        parse_digest_list(args.get("expect-digest").unwrap_or(""))?;
+    anyhow::ensure!(remote.is_empty() || shards_arg.is_empty(),
+                    "--remote and --shards are mutually exclusive");
+    let local_shared = remote.is_empty() && shards_arg.is_empty();
+    anyhow::ensure!(expect_digests.is_empty() || !local_shared,
+                    "--expect-digest only applies to --remote/--shards");
 
-    // model + store + weights source: artifacts or the synthetic setup
+    // model + weights source (the unique node's own state). The shared
+    // store is built locally ONLY for in-process runs — on the remote
+    // paths the planner state arrives over the wire instead, so no
+    // shared K/V is ever mapped into this process.
     struct SimSetup {
         model: ModelConfig,
         chunk: usize,
-        shared: Arc<SharedStore>,
+        local_store: Option<SharedStore>,
         mk_weights: Box<dyn Fn() -> Result<Weights>>,
         domain: &'static str,
     }
@@ -674,14 +932,22 @@ pub fn run_sim(args: &Args) -> Result<()> {
         SimSetup {
             model: ModelConfig::tiny(),
             chunk: SYNTH_CHUNK,
-            shared: Arc::new(synthetic_store()?),
+            local_store: if local_shared {
+                Some(synthetic_store()?)
+            } else {
+                None
+            },
             mk_weights: Box::new(|| Ok(synthetic_weights())),
             domain: SYNTH_DOMAIN,
         }
     } else {
         let dir = crate::runtime::artifact::resolve_artifacts_dir(args);
         let man = crate::runtime::Manifest::load(&dir)?;
-        let shared = Arc::new(SharedStore::load_from_manifest(&man)?);
+        let local_store = if local_shared {
+            Some(SharedStore::load_from_manifest(&man)?)
+        } else {
+            None
+        };
         let wpath = man
             .weights_path()
             .to_str()
@@ -691,21 +957,20 @@ pub fn run_sim(args: &Args) -> Result<()> {
         SimSetup {
             model: man.model.clone(),
             chunk: man.chunk,
-            shared,
+            local_store,
             mk_weights: Box::new(move || {
                 Weights::load(&wpath, wmodel.clone())
             }),
             domain: "legal",
         }
     };
-    let SimSetup { model, chunk, shared, mk_weights, domain } = setup;
+    let SimSetup { model, chunk, local_store, mk_weights, domain } = setup;
 
     // one backend per node: for native execution each node gets its own
     // worker pool (the NUMA seam — pin each pool to a socket and the
-    // shared/unique split maps onto real memory domains); with --remote
-    // the shared node's backend lives in the other process, so none is
-    // built here
-    let local_shared = remote.is_empty();
+    // shared/unique split maps onto real memory domains); with
+    // --remote/--shards the shared side's backends live in the other
+    // process(es), so none is built here
     let (unique_be, shared_be): (Arc<dyn Backend>, Option<Arc<dyn Backend>>) =
         match backend_name.as_str() {
             "native" => {
@@ -738,37 +1003,127 @@ pub fn run_sim(args: &Args) -> Result<()> {
             other => anyhow::bail!("unknown backend '{other}'"),
         };
 
+    // the fabric + the store the planner sees: a real K/V store held by
+    // the in-process shared node, or the K/V-less planner view synced
+    // from the remote node(s). The sharded fabric's derived assignment
+    // also feeds the step planner (shard-contiguous group ordering) —
+    // one source of truth, from the nodes' own residency.
+    let mut shard_assignment: Option<crate::plan::ShardAssignment> = None;
+    let (fabric, shared): (Box<dyn SharedFabric>, Arc<SharedStore>) =
+        if !shards_arg.is_empty() {
+            let specs = parse_shard_specs(&shards_arg)?;
+            let (f, store) = ShardedFabric::connect(
+                &specs, crate::remote::TransportCfg::default(),
+            )?;
+            anyhow::ensure!(
+                store.chunk == chunk,
+                "fabric chunk {} != local model chunk {chunk}", store.chunk,
+            );
+            let addrs = f.shard_addrs();
+            let digests = f.shard_digests();
+            println!("sharded fabric: {} shards, {} domains \
+                      (planner state synced, 0 shared K/V bytes local)",
+                     addrs.len(), store.domains.len());
+            for (i, d) in digests.iter().enumerate() {
+                println!("  shard {i} ({}) digest {d:#018x}", addrs[i]);
+            }
+            if !expect_digests.is_empty() {
+                anyhow::ensure!(
+                    expect_digests.len() == digests.len(),
+                    "--expect-digest lists {} digests for {} shards",
+                    expect_digests.len(), digests.len(),
+                );
+                for (i, (want, got)) in
+                    expect_digests.iter().zip(&digests).enumerate()
+                {
+                    anyhow::ensure!(
+                        want == got,
+                        "shard {i} ({}) digest {got:#018x} != pinned \
+                         {want:#018x} — refusing a diverged store",
+                        addrs[i],
+                    );
+                }
+            }
+            let mut asn = crate::plan::ShardAssignment::new();
+            for (d, s) in f.assignment() {
+                println!("  domain {d:<12} -> shard {s} ({})", addrs[s]);
+                asn.assign(&d, s)?;
+            }
+            shard_assignment = Some(asn);
+            (Box::new(f), Arc::new(store))
+        } else if !remote.is_empty() {
+            let mut f = crate::remote::RemoteFabric::connect(
+                &remote, crate::remote::TransportCfg::default(),
+            )?;
+            let sync = f.sync()?;
+            anyhow::ensure!(
+                sync.chunk == chunk,
+                "shared node chunk {} != local model chunk {chunk}",
+                sync.chunk,
+            );
+            if let [want] = expect_digests.as_slice() {
+                anyhow::ensure!(
+                    *want == sync.digest,
+                    "shared node digest {:#018x} != pinned {want:#018x} \
+                     — refusing a diverged store",
+                    sync.digest,
+                );
+            } else {
+                anyhow::ensure!(
+                    expect_digests.is_empty(),
+                    "--expect-digest wants exactly one digest with \
+                     --remote",
+                );
+            }
+            let store =
+                SharedStore::from_planner_states(sync.chunk, sync.domains)?;
+            println!("planner state synced from {remote}: {} domains, \
+                      digest {:#018x}, 0 shared K/V bytes local",
+                     store.domains.len(), sync.digest);
+            (Box::new(f), Arc::new(store))
+        } else {
+            let store =
+                Arc::new(local_store.expect("local store loaded above"));
+            let be = Arc::clone(
+                shared_be.as_ref().expect("local shared backend built"),
+            );
+            (Box::new(LocalFabric::spawn(be, Arc::clone(&store))), store)
+        };
+    debug_assert!(local_shared || shared.resident_bytes() == 0,
+                  "remote planner view must hold no shared K/V");
+
+    // request domain mix (validated against the planner store up front)
+    let domains: Vec<String> = if domains_arg.is_empty() {
+        vec![domain.to_string()]
+    } else {
+        domains_arg
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    anyhow::ensure!(!domains.is_empty(), "--domains selected no domains");
+    for d in &domains {
+        shared.domain(d)?;
+    }
+
+    let mut cluster = DisaggCluster::with_fabric(
+        unique_be,
+        fabric,
+        mk_weights()?,
+        Arc::clone(&shared),
+        Some(4),
+        32,
+    );
+    cluster.shard_assignment = shard_assignment;
+
     let mut table = Table::new(&[
         "batch", "mean_step", "sh_bytes/step", "uq_bytes/step",
         "sh_flops/step", "uq_flops/step", "gemm_N", "sh_busy",
     ]);
     let mut token_points: Vec<Json> = Vec::new();
-    let mut fabric_totals: Vec<Arc<FabricStats>> = Vec::new();
-    // the store is immutable for the whole sweep — fingerprint it once
-    let store_digest =
-        if local_shared { 0 } else { shared.content_digest() };
     for &b in &batches {
-        let fabric: Box<dyn SharedFabric> = if let Some(be) = &shared_be {
-            Box::new(LocalFabric::spawn(Arc::clone(be), Arc::clone(&shared)))
-        } else {
-            let mut f = crate::remote::RemoteFabric::connect(
-                &remote, crate::remote::TransportCfg::default(),
-            )?;
-            f.check_store(chunk, domain, store_digest)?;
-            Box::new(f)
-        };
-        let mut cluster = DisaggCluster::with_fabric(
-            Arc::clone(&unique_be),
-            fabric,
-            mk_weights()?,
-            Arc::clone(&shared),
-            Some(4),
-            32,
-        );
-        let p = cluster.run_point(b, domain, 96, steps)?;
-        if let Some(st) = cluster.fabric_stats() {
-            fabric_totals.push(st);
-        }
+        let p = cluster.run_point_mixed(b, &domains, 96, steps)?;
         table.row(vec![
             b.to_string(),
             format!("{:?}", p.mean_step),
@@ -791,30 +1146,32 @@ pub fn run_sim(args: &Args) -> Result<()> {
             )),
         ]));
     }
-    let title = if remote.is_empty() {
-        "disaggregated two-node simulation (live, tiny model)".to_string()
-    } else {
+    let title = if !shards_arg.is_empty() {
+        format!("disaggregated sharded run ({} shards, {} domains)",
+                cluster.fabric_shard_stats().len(), domains.len())
+    } else if !remote.is_empty() {
         format!("disaggregated two-node run (shared node at {remote})")
+    } else {
+        "disaggregated two-node simulation (live, tiny model)".to_string()
     };
     table.print(&title);
     table.write_csv("disagg_sim")?;
 
-    if !fabric_totals.is_empty() {
-        let sum = |f: fn(&FabricStats) -> &std::sync::atomic::AtomicU64| {
-            fabric_totals
-                .iter()
-                .map(|s| f(s).load(Ordering::Relaxed))
-                .sum::<u64>()
-        };
-        println!(
-            "fabric: {} sent / {} recv in {} frames, {} retries, \
-             {:.2}ms serializing",
-            crate::util::bench::fmt_bytes(sum(|s| &s.bytes_sent) as f64),
-            crate::util::bench::fmt_bytes(sum(|s| &s.bytes_recv) as f64),
-            sum(|s| &s.frames_sent),
-            sum(|s| &s.retries),
-            sum(|s| &s.serialize_ns) as f64 / 1e6,
-        );
+    let shard_stats = cluster.fabric_shard_stats();
+    if !shard_stats.is_empty() {
+        for (id, st) in &shard_stats {
+            let e: BTreeMap<&'static str, u64> =
+                st.entries().into_iter().collect();
+            println!(
+                "fabric shard {id}: {} sent / {} recv in {} frames, \
+                 {} retries, {:.2}ms serializing",
+                crate::util::bench::fmt_bytes(e["bytes_sent"] as f64),
+                crate::util::bench::fmt_bytes(e["bytes_recv"] as f64),
+                e["frames_sent"],
+                e["retries"],
+                e["serialize_ns"] as f64 / 1e6,
+            );
+        }
     }
 
     if !emit_tokens.is_empty() {
@@ -832,4 +1189,21 @@ pub fn run_sim(args: &Args) -> Result<()> {
         println!("[tokens] wrote {emit_tokens}");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_list_parses_hex_forms() {
+        assert_eq!(parse_digest_list("").unwrap(), Vec::<u64>::new());
+        assert_eq!(parse_digest_list(" , ").unwrap(), Vec::<u64>::new());
+        assert_eq!(
+            parse_digest_list("0xDEAD, beef,0XA1").unwrap(),
+            vec![0xDEAD, 0xBEEF, 0xA1],
+        );
+        assert!(parse_digest_list("xyz").is_err());
+        assert!(parse_digest_list("0x").is_err());
+    }
 }

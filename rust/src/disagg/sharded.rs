@@ -1,0 +1,383 @@
+//! Domain-sharded remote fabric: horizontal scale-out of the shared-KV
+//! side (paper §III.C carried to its disaggregated conclusion).
+//!
+//! A [`ShardedFabric`] owns one [`RemoteFabric`] per shard — each shard
+//! a `moska shared-node` process holding a **disjoint, domain-partitioned
+//! slice** of the Domain Shared KV store (`moska shared-node --domains
+//! a,b`). Per decode layer, every
+//! [`SharedGroupPlan`][crate::plan::SharedGroupPlan] is routed to the
+//! shard resident for its domain; the per-shard request batches fan out
+//! eagerly (all shards execute their slices concurrently while the
+//! unique node runs its own attention) and
+//! [`collect`][super::SharedFabric::collect] reassembles the replies in
+//! submission order, so execution is bit-identical to a single-node or
+//! in-process run (asserted by `tests/integration_shard.rs` and the
+//! `scripts/ci.sh` two-shard smoke stage).
+//!
+//! The static domain→shard assignment comes from the `--shards` CLI
+//! surface ([`parse_shard_specs`]) and is validated against every node's
+//! `Hello`/`Sync` advertisement: chunk geometry must agree across the
+//! fabric, a pinned domain must be resident on its pinned shard, and an
+//! unpinned domain must be resident on exactly one shard. Each shard's
+//! advertised store (resident-domain set + per-shard digest) becomes
+//! its reconnect expectation, so a shard that restarts with different
+//! content or fewer domains fails the retry handshake. See
+//! `docs/ARCHITECTURE.md` for the data-flow picture and
+//! `docs/WIRE_PROTOCOL.md` for the wire-level handshake.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::kvcache::shared_store::{DomainPlannerState, SharedStore};
+use crate::plan::SharedGroupPlan;
+use crate::remote::transport::{FabricStats, RemoteFabric, TransportCfg};
+use crate::tensor::Tensor;
+
+use super::{FabricReply, SharedFabric};
+
+/// One `--shards` entry: a shard address plus any domains explicitly
+/// pinned to it (`domain=addr` entries naming the same address).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub addr: String,
+    /// Domains explicitly pinned to this shard on the CLI/config.
+    pub pins: Vec<String>,
+}
+
+/// Parse a `--shards` spec: comma-separated entries, each `addr` or
+/// `domain=addr`. Several pins may name the same address (they merge
+/// into one shard); shard order is first appearance.
+///
+/// ```text
+/// --shards 10.0.0.1:7070,10.0.0.2:7070          # assignment from residency
+/// --shards legal=10.0.0.1:7070,code=10.0.0.2:7070
+/// ```
+pub fn parse_shard_specs(spec: &str) -> Result<Vec<ShardSpec>> {
+    let mut shards: Vec<ShardSpec> = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (pin, addr) = match entry.split_once('=') {
+            Some((d, a)) => (Some(d.trim().to_string()), a.trim()),
+            None => (None, entry),
+        };
+        if addr.is_empty() {
+            bail!("empty shard address in '{entry}'");
+        }
+        let idx = match shards.iter().position(|s| s.addr == addr) {
+            Some(i) => i,
+            None => {
+                shards.push(ShardSpec {
+                    addr: addr.to_string(),
+                    pins: Vec::new(),
+                });
+                shards.len() - 1
+            }
+        };
+        if let Some(d) = pin {
+            if d.is_empty() {
+                bail!("empty domain pin in '{entry}'");
+            }
+            if !shards[idx].pins.contains(&d) {
+                shards[idx].pins.push(d);
+            }
+        }
+    }
+    if shards.is_empty() {
+        bail!("--shards selected no shard addresses");
+    }
+    Ok(shards)
+}
+
+/// The domain-sharded implementation of the disagg fabric seam (see the
+/// module docs).
+pub struct ShardedFabric {
+    /// `(addr, connection)` per shard, `--shards` order.
+    shards: Vec<(String, RemoteFabric)>,
+    /// Static domain → shard-index assignment.
+    route: HashMap<String, usize>,
+    /// In-flight submission: for each group, in submission order, which
+    /// shard it went to (its position within that shard's batch is the
+    /// arrival order, so replies pop front-to-front).
+    order: Vec<usize>,
+}
+
+impl ShardedFabric {
+    /// Connect every shard, `Sync` its planner state, derive and
+    /// validate the static domain→shard assignment, and assemble the
+    /// union planner-view [`SharedStore`] (K/V-less:
+    /// `resident_bytes() == 0`) the unique node plans against.
+    pub fn connect(specs: &[ShardSpec], cfg: TransportCfg)
+                   -> Result<(ShardedFabric, SharedStore)> {
+        anyhow::ensure!(!specs.is_empty(),
+                        "sharded fabric needs at least one shard");
+        let mut shards = Vec::with_capacity(specs.len());
+        let mut synced = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let mut f = RemoteFabric::connect(&spec.addr, cfg)
+                .with_context(|| {
+                    format!("connecting shard {}", spec.addr)
+                })?;
+            // sync installs the shard's advertised store as its
+            // reconnect expectation (domain set + per-shard digest)
+            let st = f.sync().with_context(|| {
+                format!("syncing planner state from shard {}", spec.addr)
+            })?;
+            synced.push(st);
+            shards.push((spec.addr.clone(), f));
+        }
+        // chunk geometry must agree across the whole fabric
+        let chunk = synced[0].chunk;
+        for (spec, st) in specs.iter().zip(&synced) {
+            anyhow::ensure!(
+                st.chunk == chunk,
+                "shard {} chunk {} != shard {} chunk {}",
+                spec.addr, st.chunk, specs[0].addr, chunk,
+            );
+        }
+        // residency: which shards hold which domain
+        let mut residency: HashMap<String, Vec<usize>> = HashMap::new();
+        for (i, st) in synced.iter().enumerate() {
+            for d in &st.domains {
+                residency.entry(d.name.clone()).or_default().push(i);
+            }
+        }
+        // a domain advertised by several shards must be advertised
+        // bit-identically by all of them (same embeddings, geometry,
+        // token count) — otherwise the deployments have diverged and
+        // whichever shard the pin selects would silently win
+        for (name, holders) in &residency {
+            if holders.len() < 2 {
+                continue;
+            }
+            let find = |h: usize| {
+                synced[h]
+                    .domains
+                    .iter()
+                    .find(|d| &d.name == name)
+                    .expect("holder advertises the domain")
+            };
+            let reference = find(holders[0]);
+            for &h in &holders[1..] {
+                anyhow::ensure!(
+                    find(h) == reference,
+                    "shards {} and {} advertise domain '{name}' with \
+                     different planner state (diverged deployment — \
+                     refusing to pick one)",
+                    specs[holders[0]].addr, specs[h].addr,
+                );
+            }
+        }
+        // explicit pins win; each must actually be resident there
+        let mut route: HashMap<String, usize> = HashMap::new();
+        for (i, spec) in specs.iter().enumerate() {
+            for pin in &spec.pins {
+                anyhow::ensure!(
+                    residency.get(pin).is_some_and(|r| r.contains(&i)),
+                    "domain '{pin}' pinned to shard {} but not resident \
+                     there (resident: {:?})",
+                    spec.addr,
+                    synced[i]
+                        .domains
+                        .iter()
+                        .map(|d| d.name.as_str())
+                        .collect::<Vec<_>>(),
+                );
+                if let Some(prev) = route.insert(pin.clone(), i) {
+                    if prev != i {
+                        bail!("domain '{pin}' pinned to two shards \
+                               ({} and {})",
+                              specs[prev].addr, spec.addr);
+                    }
+                }
+            }
+        }
+        // unpinned domains: unique residency decides; ambiguity refused
+        for (name, holders) in &residency {
+            if route.contains_key(name) {
+                continue;
+            }
+            match holders.as_slice() {
+                [one] => {
+                    route.insert(name.clone(), *one);
+                }
+                many => bail!(
+                    "domain '{name}' is resident on {} shards ({:?}) — \
+                     pin it with '{name}=<addr>' in --shards",
+                    many.len(),
+                    many.iter()
+                        .map(|&i| specs[i].addr.as_str())
+                        .collect::<Vec<_>>(),
+                ),
+            }
+        }
+        // planner view: each domain's synced state from its assigned
+        // shard (deterministic order via from_planner_states' BTreeMap)
+        let mut states: Vec<DomainPlannerState> = Vec::new();
+        for (i, st) in synced.into_iter().enumerate() {
+            for d in st.domains {
+                if route.get(&d.name) == Some(&i) {
+                    states.push(d);
+                }
+            }
+        }
+        let store = SharedStore::from_planner_states(chunk, states)?;
+        Ok((ShardedFabric { shards, route, order: Vec::new() }, store))
+    }
+
+    /// The static domain→shard assignment (domain, shard index), sorted
+    /// by domain.
+    pub fn assignment(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> =
+            self.route.iter().map(|(d, &s)| (d.clone(), s)).collect();
+        v.sort();
+        v
+    }
+
+    /// Shard addresses, `--shards` order.
+    pub fn shard_addrs(&self) -> Vec<String> {
+        self.shards.iter().map(|(a, _)| a.clone()).collect()
+    }
+
+    /// Per-shard store content digests from the connect-time handshake,
+    /// `--shards` order — printed by `moska disagg` and pinnable with
+    /// `--expect-digest` (the client holds no shared K/V, so it cannot
+    /// recompute these; see the trust model in `docs/WIRE_PROTOCOL.md`).
+    pub fn shard_digests(&self) -> Vec<u64> {
+        self.shards.iter().map(|(_, f)| f.hello().digest).collect()
+    }
+}
+
+impl SharedFabric for ShardedFabric {
+    fn submit(&mut self, layer: usize,
+              groups: &[(&Tensor, &SharedGroupPlan)]) -> Result<()> {
+        anyhow::ensure!(self.order.is_empty(),
+                        "fabric already has an in-flight request");
+        // bucket groups per shard, preserving submission order within
+        // each shard
+        let mut per: Vec<Vec<(&Tensor, &SharedGroupPlan)>> =
+            vec![Vec::new(); self.shards.len()];
+        let mut order = Vec::with_capacity(groups.len());
+        for &(q, plan) in groups {
+            let s = *self.route.get(&plan.domain).with_context(|| {
+                format!("no shard serves domain '{}'", plan.domain)
+            })?;
+            order.push(s);
+            per[s].push((q, plan));
+        }
+        // eager fan-out: every shard starts executing its slice now,
+        // concurrently with the other shards and with the unique node's
+        // own attention
+        for (s, batch) in per.iter().enumerate() {
+            if !batch.is_empty() {
+                self.shards[s].1.submit(layer, batch).with_context(|| {
+                    format!("shard {} ({})", s, self.shards[s].0)
+                })?;
+            }
+        }
+        self.order = order;
+        Ok(())
+    }
+
+    fn collect(&mut self) -> Result<Vec<FabricReply>> {
+        let order = std::mem::take(&mut self.order);
+        anyhow::ensure!(!order.is_empty(),
+                        "fabric collect without a submitted request");
+        // drain EVERY participating shard even if one fails — each
+        // underlying fabric clears its in-flight state in collect, so
+        // none is left dangling — then surface the first failure
+        let mut participating = vec![false; self.shards.len()];
+        for &s in &order {
+            participating[s] = true;
+        }
+        let mut per: Vec<VecDeque<FabricReply>> =
+            (0..self.shards.len()).map(|_| VecDeque::new()).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        for (s, active) in participating.iter().enumerate() {
+            if !active {
+                continue;
+            }
+            match self.shards[s].1.collect() {
+                Ok(replies) => per[s] = replies.into(),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!(
+                            "shard {} ({})", s, self.shards[s].0,
+                        )));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        // reassemble into submission order: each shard answered its
+        // batch in arrival order, so replies pop front-to-front
+        let mut out = Vec::with_capacity(order.len());
+        for s in order {
+            out.push(per[s].pop_front().with_context(|| {
+                format!("shard {} returned too few replies", s)
+            })?);
+        }
+        Ok(out)
+    }
+
+    fn stats(&self) -> Option<Arc<FabricStats>> {
+        None // no single connection; see shard_stats
+    }
+
+    fn shard_stats(&self) -> Vec<(usize, Arc<FabricStats>)> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter_map(|(i, (_, f))| f.stats().map(|s| (i, s)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain_addr_list() {
+        let s = parse_shard_specs("127.0.0.1:7070, 127.0.0.1:7071")
+            .unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].addr, "127.0.0.1:7070");
+        assert!(s[0].pins.is_empty());
+        assert_eq!(s[1].addr, "127.0.0.1:7071");
+    }
+
+    #[test]
+    fn parse_pins_merge_per_address() {
+        let s = parse_shard_specs(
+            "legal=h1:7070,code=h2:7070,medical=h1:7070",
+        )
+        .unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].addr, "h1:7070");
+        assert_eq!(s[0].pins, vec!["legal", "medical"]);
+        assert_eq!(s[1].addr, "h2:7070");
+        assert_eq!(s[1].pins, vec!["code"]);
+    }
+
+    #[test]
+    fn parse_mixed_pin_and_plain_same_addr() {
+        let s = parse_shard_specs("h1:7070,legal=h1:7070").unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].pins, vec!["legal"]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_shard_specs("").is_err());
+        assert!(parse_shard_specs(" , ").is_err());
+        assert!(parse_shard_specs("=h1:7070").is_err());
+        assert!(parse_shard_specs("legal=").is_err());
+    }
+}

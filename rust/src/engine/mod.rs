@@ -488,17 +488,12 @@ impl Engine {
             self.backend.qkv(&x, lw.attn_norm, lw.wq, lw.wk, lw.wv, &pos)?
         };
         phase(&self.metrics, "phase_qkv_ns");
-        let nh = model.n_heads * model.head_dim;
         let mut group_sets: Vec<Vec<ChunkSet>> =
             Vec::with_capacity(domains.len());
         for (dname, rows) in &domains {
             let dom = self.shared.domains.get(dname).unwrap();
-            let mut qbuf = self.arena.take_buf(rows.len() * nh);
-            for &i in rows {
-                qbuf.extend_from_slice(q0.index0(i));
-            }
-            let qs = Tensor::f32(
-                &[rows.len(), model.n_heads, model.head_dim], qbuf,
+            let qs = crate::plan::gather_rows(
+                &mut self.arena, &q0, rows, model.n_heads, model.head_dim,
             );
             let sets = self.router.route(
                 self.backend.as_ref(), &qs, dom.embeddings(0),
@@ -522,6 +517,10 @@ impl Engine {
             &model, &self.cfg, &self.shared, &domains, group_sets,
             &kv_dims, self.backend.chunk_size(),
             self.backend.max_attn_tokens(), &pos,
+            // shard-aware group ordering when the store is sharded
+            // (serving.shards config) — per-shard batches become single
+            // contiguous slices of the plan
+            (!self.cfg.shards.is_empty()).then_some(&self.cfg.shards),
         )?;
         phase(&self.metrics, "plan_build_ns");
 

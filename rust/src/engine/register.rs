@@ -114,6 +114,7 @@ impl Engine {
         let dom = DomainCache {
             name: name.to_string(),
             tokens: tokens.to_vec(),
+            n_tokens: tokens.len(),
             n_chunks,
             chunk,
             layers,

@@ -122,6 +122,7 @@ pub fn compose(store: &SharedStore, name: &str, refs: &[ChunkRef])
             t.resize(max_end as usize, 0);
             t
         },
+        n_tokens: max_end as usize,
         n_chunks: refs.len(),
         chunk,
         layers,

@@ -28,20 +28,46 @@ pub struct LayerChunks {
     pub embs: Tensor,
 }
 
-/// A fully loaded shared domain.
+/// A fully loaded shared domain — or its K/V-less **planner view** (see
+/// [`DomainCache::from_planner_state`]): the unique node of a
+/// disaggregated deployment only needs router embeddings and chunk
+/// geometry to plan, so a planner-view cache has `layers[*].chunks`
+/// empty and `tokens` empty while `n_tokens`/`chunk_bases`/`embs` stay
+/// authoritative. [`DomainCache::chunk_kv`] must not be called on a
+/// planner view (there is no K/V to return).
 pub struct DomainCache {
     pub name: String,
     pub tokens: Vec<i32>,
+    /// Shared context length in tokens. Equals `tokens.len()` for a
+    /// fully loaded domain; a planner view carries only the count.
+    pub n_tokens: usize,
     pub n_chunks: usize,
     pub chunk: usize,
     pub layers: Vec<LayerChunks>,
-    /// Registry ids, one per chunk (dedup accounting).
+    /// Registry ids, one per chunk (dedup accounting; empty for a
+    /// planner view).
     pub chunk_ids: Vec<u64>,
     /// Absolute base position of each chunk's first token. For a native
     /// domain this is `c * chunk`; for a *composed* context (Universal
     /// MoSKA, §III.D) each chunk keeps the base position it had in its
     /// origin domain, so position-preserving composition stays exact.
     pub chunk_bases: Vec<i32>,
+}
+
+/// Everything the step planner needs to know about one domain, with the
+/// K/V itself left out — the payload of the remote fabric's `Sync`
+/// handshake (see `docs/WIRE_PROTOCOL.md`): router embeddings + chunk
+/// geometry travel once at connect, so the unique node never maps the
+/// shared K/V into its own process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DomainPlannerState {
+    pub name: String,
+    /// Shared context length in tokens.
+    pub n_tokens: usize,
+    /// Absolute base position of each chunk (len = chunk count).
+    pub chunk_bases: Vec<i32>,
+    /// Per-layer router embeddings `[nc, Hkv, dh]`.
+    pub embs: Vec<Tensor>,
 }
 
 impl DomainCache {
@@ -81,6 +107,7 @@ impl DomainCache {
             (0..n_chunks).map(|c| (c * chunk) as i32).collect();
         Ok(DomainCache {
             name: name.to_string(),
+            n_tokens: tokens.len(),
             tokens,
             n_chunks,
             chunk,
@@ -92,7 +119,54 @@ impl DomainCache {
 
     /// Shared context length in tokens.
     pub fn token_len(&self) -> usize {
-        self.tokens.len()
+        self.n_tokens
+    }
+
+    /// Extract the K/V-less planner state of this domain (router
+    /// embeddings + chunk geometry) — what the `Sync` handshake ships.
+    pub fn planner_state(&self) -> DomainPlannerState {
+        DomainPlannerState {
+            name: self.name.clone(),
+            n_tokens: self.n_tokens,
+            chunk_bases: self.chunk_bases.clone(),
+            embs: self.layers.iter().map(|l| l.embs.clone()).collect(),
+        }
+    }
+
+    /// Build a planner-view cache from synced state: geometry and
+    /// embeddings are real, the chunk K/V is absent (resident on the
+    /// shard that shipped this state). Routing and plan building work
+    /// unchanged; [`DomainCache::chunk_kv`] must never be called.
+    pub fn from_planner_state(st: DomainPlannerState, chunk: usize)
+                              -> Result<DomainCache> {
+        let n_chunks = st.chunk_bases.len();
+        anyhow::ensure!(!st.embs.is_empty(),
+                        "planner state for '{}' has no layers", st.name);
+        for (l, e) in st.embs.iter().enumerate() {
+            let s = e.shape();
+            anyhow::ensure!(
+                s.len() == 3 && s[0] == n_chunks,
+                "planner state for '{}': layer {l} embeddings {s:?} do \
+                 not match {n_chunks} chunks", st.name,
+            );
+        }
+        // no n_tokens × n_chunks cross-check: composed contexts
+        // (kvcache::compose) legitimately place token_len past the last
+        // chunk, so the count travels as independent truth
+        Ok(DomainCache {
+            name: st.name,
+            tokens: Vec::new(),
+            n_tokens: st.n_tokens,
+            n_chunks,
+            chunk,
+            layers: st
+                .embs
+                .into_iter()
+                .map(|embs| LayerChunks { chunks: Vec::new(), embs })
+                .collect(),
+            chunk_ids: Vec::new(),
+            chunk_bases: st.chunk_bases,
+        })
     }
 
     /// Absolute base position of chunk `c`.
@@ -289,6 +363,51 @@ impl SharedStore {
             .with_context(|| format!("unknown domain '{name}'"))
     }
 
+    /// Partition the store by domain: keep only `keep`, drop the rest.
+    /// This is how a shard of the domain-sharded fabric serves its slice
+    /// of a corpus built as one store (`moska shared-node --domains a,b`).
+    /// Errors if any requested domain is not loaded. Registry interning
+    /// stats keep counting the original load (they describe what was
+    /// interned, not what is retained).
+    pub fn retain_domains(&mut self, keep: &[String]) -> Result<()> {
+        for name in keep {
+            anyhow::ensure!(self.domains.contains_key(name),
+                            "cannot retain unknown domain '{name}'");
+        }
+        self.domains.retain(|name, _| keep.iter().any(|k| k == name));
+        Ok(())
+    }
+
+    /// Planner states for every resident domain, deterministic
+    /// (BTreeMap) order — the `Sync` handshake payload.
+    pub fn planner_states(&self) -> Vec<DomainPlannerState> {
+        self.domains.values().map(|d| d.planner_state()).collect()
+    }
+
+    /// Reassemble a K/V-less planner store from synced states (possibly
+    /// the union of several shards' states). `resident_bytes()` of the
+    /// result is 0 — the whole point: the unique node plans against this
+    /// without ever mapping shared K/V into its process.
+    pub fn from_planner_states(chunk: usize,
+                               states: Vec<DomainPlannerState>)
+                               -> Result<SharedStore> {
+        let mut domains = BTreeMap::new();
+        for st in states {
+            let name = st.name.clone();
+            anyhow::ensure!(
+                !domains.contains_key(&name),
+                "duplicate planner state for domain '{name}'",
+            );
+            domains.insert(name,
+                           DomainCache::from_planner_state(st, chunk)?);
+        }
+        Ok(SharedStore {
+            domains,
+            registry: ChunkRegistry::new(),
+            chunk,
+        })
+    }
+
     /// Total resident shared bytes — loaded ONCE no matter the batch size
     /// (the capacity half of Fig 1b).
     pub fn resident_bytes(&self) -> usize {
@@ -300,7 +419,10 @@ impl SharedStore {
     /// change prefill at every layer, so layer 0 identifies the store).
     /// Deterministic (BTreeMap order) — the remote fabric handshake
     /// compares client and node digests so mismatched deployments fail
-    /// at connect instead of silently decoding garbage.
+    /// at connect instead of silently decoding garbage. A partitioned
+    /// store ([`SharedStore::retain_domains`]) digests only its resident
+    /// slice, so every shard of a sharded deployment advertises its own
+    /// per-shard digest (see `docs/WIRE_PROTOCOL.md`).
     pub fn content_digest(&self) -> u64 {
         let mut h = FNV_OFFSET;
         h = fnv1a_update(h, (self.chunk as u64).to_le_bytes().into_iter());
@@ -382,6 +504,101 @@ mod tests {
         let again = reg.intern(&chunks[0].0, &chunks[0].1);
         assert!(!ids.contains(&again));
         assert_eq!(reg.resident(), 1);
+    }
+
+    fn tiny_domain(name: &str, n_chunks: usize, rng: &mut Rng)
+                   -> DomainCache {
+        let chunk = 8;
+        let layers = (0..2)
+            .map(|_| {
+                let chunks = (0..n_chunks).map(|_| chunk_t(rng)).collect();
+                let mut e = vec![0f32; n_chunks * 2 * 4];
+                rng.fill_normal_f32(&mut e);
+                LayerChunks {
+                    chunks,
+                    embs: Tensor::f32(&[n_chunks, 2, 4], e),
+                }
+            })
+            .collect();
+        DomainCache {
+            name: name.to_string(),
+            tokens: vec![0; n_chunks * chunk],
+            n_tokens: n_chunks * chunk,
+            n_chunks,
+            chunk,
+            layers,
+            chunk_ids: Vec::new(),
+            chunk_bases: (0..n_chunks).map(|c| (c * chunk) as i32).collect(),
+        }
+    }
+
+    fn two_domain_store(rng: &mut Rng) -> SharedStore {
+        let mut store = SharedStore::empty(8);
+        for (name, n) in [("alpha", 3usize), ("beta", 2usize)] {
+            store
+                .domains
+                .insert(name.to_string(), tiny_domain(name, n, rng));
+        }
+        store
+    }
+
+    #[test]
+    fn planner_state_roundtrip_preserves_geometry_and_embeddings() {
+        let mut rng = Rng::new(5);
+        let store = two_domain_store(&mut rng);
+        let view =
+            SharedStore::from_planner_states(8, store.planner_states())
+                .unwrap();
+        assert_eq!(view.resident_bytes(), 0,
+                   "planner view must hold no K/V");
+        for (name, dom) in &store.domains {
+            let v = view.domain(name).unwrap();
+            assert_eq!(v.token_len(), dom.token_len());
+            assert_eq!(v.n_chunks, dom.n_chunks);
+            assert_eq!(v.chunk_bases, dom.chunk_bases);
+            for l in 0..dom.layers.len() {
+                assert_eq!(v.embeddings(l).as_f32(),
+                           dom.embeddings(l).as_f32(),
+                           "embeddings must roundtrip bit-identically");
+            }
+        }
+    }
+
+    #[test]
+    fn from_planner_states_rejects_malformed() {
+        let mut rng = Rng::new(6);
+        let store = two_domain_store(&mut rng);
+        let mut states = store.planner_states();
+        // duplicate domain
+        let dup = states[0].clone();
+        states.push(dup);
+        assert!(SharedStore::from_planner_states(8, states).is_err());
+        // embeddings/chunk-count mismatch
+        let mut states = store.planner_states();
+        states[0].chunk_bases.pop();
+        assert!(SharedStore::from_planner_states(8, states).is_err());
+        // no layers
+        let mut states = store.planner_states();
+        states[0].embs.clear();
+        assert!(SharedStore::from_planner_states(8, states).is_err());
+    }
+
+    #[test]
+    fn retain_domains_partitions_and_changes_digest() {
+        let full = two_domain_store(&mut Rng::new(7));
+        let full_digest = full.content_digest();
+        // identical seed → bit-identical content, like two processes
+        // loading the same corpus
+        let mut part = two_domain_store(&mut Rng::new(7));
+        assert_eq!(part.content_digest(), full_digest);
+        part.retain_domains(&["alpha".to_string()]).unwrap();
+        assert_eq!(part.domains.len(), 1);
+        assert!(part.domain("alpha").is_ok());
+        assert!(part.domain("beta").is_err());
+        assert_ne!(part.content_digest(), full_digest,
+                   "per-shard digest must cover only the resident slice");
+        // unknown domain refused
+        assert!(part.retain_domains(&["nope".to_string()]).is_err());
     }
 
     #[test]

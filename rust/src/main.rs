@@ -6,7 +6,8 @@
 //! moska demo        [--requests 8] [--steps 16] [--domain legal]
 //! moska figures     [--out bench_out]
 //! moska disagg      [--batches 1,8,64,256] [--remote 127.0.0.1:7070]
-//! moska shared-node [--addr 127.0.0.1:7070] [--synthetic]
+//!                   [--shards a:7070,b:7071] [--domains legal,code]
+//! moska shared-node [--addr 127.0.0.1:7070] [--synthetic] [--domains a,b]
 //! moska artifacts-info
 //! ```
 
@@ -103,10 +104,18 @@ fn cmd_disagg(argv: &[String]) -> moska::Result<()> {
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
         .opt("remote", "",
              "shared-node address (empty = in-process shared node)")
+        .opt("shards", "",
+             "domain-sharded shared nodes: addr[,addr...] or \
+              domain=addr pins (mutually exclusive with --remote)")
+        .opt("domains", "",
+             "request domain mix, round-robin (default: one domain)")
+        .opt("expect-digest", "",
+             "pin the remote store digest(s), hex, one per shard \
+              (printed by every remote run; refuses a diverged store)")
         .opt("emit-tokens", "",
              "write greedy token streams to this JSON (bit-compare runs)")
         .flag("synthetic",
-              "synthetic weights + online-registered domain (no artifacts)")
+              "synthetic weights + online-registered domains (no artifacts)")
         .parse_from(argv)?;
     moska::disagg::run_sim(&args)
 }
@@ -117,6 +126,9 @@ fn cmd_shared_node(argv: &[String]) -> moska::Result<()> {
         .opt("addr", "127.0.0.1:7070", "listen address")
         .opt("artifacts", "", "artifacts dir (default: auto-discover)")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
+        .opt("domains", "",
+             "serve only these domains (comma list) — one shard of a \
+              domain-sharded deployment")
         .flag("synthetic",
               "serve the synthetic bench store (no artifacts)")
         .parse_from(argv)?;

@@ -48,6 +48,20 @@ pub struct PlanExecCtx<'a> {
     pub layer0_qkv: Option<(Tensor, Tensor, Tensor)>,
 }
 
+/// Gather `rows` of a `[b, h, dh]` query tensor into an arena-staged
+/// `[rows.len(), h, dh]` tensor (bit-exact row copies) — the per-group
+/// query both the in-process executor and the disagg fabric ship.
+/// Recycle the result after the consuming call returns (the arena
+/// ownership rules in `runtime/README.md`).
+pub fn gather_rows(arena: &mut TensorArena, q: &Tensor, rows: &[usize],
+                   h: usize, dh: usize) -> Tensor {
+    let mut buf = arena.take_buf(rows.len() * h * dh);
+    for &r in rows {
+        buf.extend_from_slice(q.index0(r));
+    }
+    Tensor::f32(&[rows.len(), h, dh], buf)
+}
+
 /// Execution result: the post-attention hidden state plus the realized
 /// Shared-KV batching counters.
 pub struct PlanExecOut {
@@ -102,11 +116,7 @@ pub fn execute_plan(backend: &dyn Backend, plan: &StepPlan, x: Tensor,
         for group in &plan.shared_groups {
             let dom = ctx.shared.domain(&group.domain)?;
             let n = group.rows.len();
-            let mut qbuf = ctx.arena.take_buf(n * h * dh);
-            for &i in &group.rows {
-                qbuf.extend_from_slice(q.index0(i));
-            }
-            let qs = Tensor::f32(&[n, h, dh], qbuf);
+            let qs = gather_rows(&mut *ctx.arena, &q, &group.rows, h, dh);
             let mut sub =
                 RowAccumulator::from_arena(&mut *ctx.arena, n, h, dh);
             if plan.route_live && layer > 0 {
@@ -143,9 +153,7 @@ pub fn execute_plan(backend: &dyn Backend, plan: &StepPlan, x: Tensor,
         // order, keeping the step bit-identical to serial execution.
         let mut qrs: Vec<Tensor> = Vec::with_capacity(b);
         for i in 0..b {
-            let mut buf = ctx.arena.take_buf(h * dh);
-            buf.extend_from_slice(q.index0(i));
-            qrs.push(Tensor::f32(&[1, h, dh], buf));
+            qrs.push(gather_rows(&mut *ctx.arena, &q, &[i], h, dh));
         }
         let fanout = backend.exec_pool().filter(|tp| {
             tp.threads() > 1 && b > 1 && plan.unique_work >= PAR_MIN_WORK
@@ -387,6 +395,7 @@ mod tests {
         DomainCache {
             name: "test".into(),
             tokens: vec![0; n_chunks * chunk],
+            n_tokens: n_chunks * chunk,
             n_chunks,
             chunk,
             layers,

@@ -34,7 +34,7 @@
 pub mod exec;
 
 pub use exec::{exec_gemm_calls, exec_unique_spans, execute_plan,
-               PlanExecCtx, PlanExecOut};
+               gather_rows, PlanExecCtx, PlanExecOut};
 
 use anyhow::Result;
 
@@ -43,6 +43,75 @@ use crate::config::{ModelConfig, ServingConfig};
 use crate::kvcache::paged::page_valid_rows;
 use crate::kvcache::shared_store::SharedStore;
 use crate::router::ChunkSet;
+
+/// Static domain → shard assignment of the domain-sharded fabric, seen
+/// at plan level: shard ids are opaque indices (the fabric maps them to
+/// node addresses). [`plan_step`] uses it to order a step's shared
+/// groups **shard-contiguously**, so each shard's submission batch is
+/// one contiguous slice of the group list — the planner groups
+/// shared-GEMM batches per shard rather than per process. Reordering
+/// whole groups never changes decode output: every batch row belongs to
+/// exactly one group, so no row's floating-point merge order moves.
+#[derive(Debug, Clone, Default)]
+pub struct ShardAssignment {
+    of: std::collections::BTreeMap<String, usize>,
+    /// One past the highest shard index seen.
+    pub n_shards: usize,
+}
+
+impl ShardAssignment {
+    pub fn new() -> ShardAssignment {
+        ShardAssignment::default()
+    }
+
+    /// Record `domain → shard`; a conflicting reassignment errors.
+    pub fn assign(&mut self, domain: &str, shard: usize) -> Result<()> {
+        if let Some(&prev) = self.of.get(domain) {
+            anyhow::ensure!(
+                prev == shard,
+                "domain '{domain}' already assigned to shard {prev}",
+            );
+            return Ok(());
+        }
+        self.of.insert(domain.to_string(), shard);
+        self.n_shards = self.n_shards.max(shard + 1);
+        Ok(())
+    }
+
+    pub fn shard_of(&self, domain: &str) -> Option<usize> {
+        self.of.get(domain).copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.of.is_empty()
+    }
+
+    /// Parse `domain=shard` pairs — the `serving.shards` config surface.
+    pub fn parse_pairs(pairs: &[String]) -> Result<ShardAssignment> {
+        use anyhow::Context;
+        let mut a = ShardAssignment::new();
+        for p in pairs {
+            let (d, s) = p.split_once('=').with_context(|| {
+                format!("bad shard pair '{p}' (want domain=shard)")
+            })?;
+            anyhow::ensure!(!d.trim().is_empty(),
+                            "empty domain in shard pair '{p}'");
+            let shard: usize = s.trim().parse().with_context(|| {
+                format!("bad shard index in '{p}'")
+            })?;
+            a.assign(d.trim(), shard)?;
+        }
+        Ok(a)
+    }
+
+    /// Stable-sort shared groups shard-first (unassigned domains last),
+    /// preserving domain order within each shard.
+    pub fn order_groups(&self, groups: &mut [SharedGroupPlan]) {
+        groups.sort_by_key(
+            |g| self.shard_of(&g.domain).unwrap_or(usize::MAX),
+        );
+    }
+}
 
 /// One coalesced Shared-KV GEMM kernel call: `run_len` consecutive chunks
 /// starting at `chunk_start`, attended by the query rows in `rows` (the
@@ -223,11 +292,15 @@ pub fn plan_unique_spans(len_at_attn: usize, start_pos: usize,
 /// * `group_sets` — per-group routing decisions (aligned with `domains`).
 /// * `kv_dims` — per-row `(start_pos, committed_len)` of the unique KV
 ///   *before* this step's append (attention sees `len + 1`).
+/// * `shards` — when the shared store is domain-sharded, the static
+///   assignment: the emitted groups are ordered shard-contiguously so
+///   each shard's batch is one slice (see [`ShardAssignment`]).
 #[allow(clippy::too_many_arguments)]
 pub fn plan_step(model: &ModelConfig, cfg: &ServingConfig,
                  shared: &SharedStore, domains: &[(String, Vec<usize>)],
                  group_sets: Vec<Vec<ChunkSet>>, kv_dims: &[(usize, usize)],
-                 chunk: usize, max_attn_tokens: usize, pos: &[i32])
+                 chunk: usize, max_attn_tokens: usize, pos: &[i32],
+                 shards: Option<&ShardAssignment>)
                  -> Result<StepPlan> {
     debug_assert_eq!(domains.len(), group_sets.len());
     let b = kv_dims.len();
@@ -247,6 +320,9 @@ pub fn plan_step(model: &ModelConfig, cfg: &ServingConfig,
             pairs: stats.pairs,
             reads: stats.chunk_reads.max(stats.calls),
         });
+    }
+    if let Some(a) = shards {
+        a.order_groups(&mut shared_groups);
     }
     let unique: Vec<UniqueRowPlan> = kv_dims
         .iter()
@@ -355,6 +431,65 @@ mod tests {
         assert_eq!(spans[1].valid, 1);
         // empty cache → no spans
         assert!(plan_unique_spans(0, 0, 8, 1024).is_empty());
+    }
+
+    #[test]
+    fn shard_assignment_orders_groups_contiguously() {
+        let mut a = ShardAssignment::new();
+        a.assign("legal", 1).unwrap();
+        a.assign("code", 0).unwrap();
+        a.assign("medical", 1).unwrap();
+        assert_eq!(a.n_shards, 2);
+        // re-assign same shard is idempotent; conflicting errors
+        a.assign("legal", 1).unwrap();
+        assert!(a.assign("legal", 0).is_err());
+
+        let g = |d: &str| SharedGroupPlan {
+            domain: d.to_string(),
+            rows: vec![0],
+            q_pos: vec![0],
+            sets: vec![vec![]],
+            calls: vec![],
+            pairs: 0,
+            reads: 0,
+        };
+        // domain-sorted input (how planners emit groups)
+        let mut groups =
+            vec![g("code"), g("legal"), g("medical"), g("unassigned")];
+        a.order_groups(&mut groups);
+        let order: Vec<&str> =
+            groups.iter().map(|p| p.domain.as_str()).collect();
+        // shard 0 first, then shard 1 (stable within), unassigned last
+        assert_eq!(order, vec!["code", "legal", "medical", "unassigned"]);
+
+        // shard-contiguity with a scrambled domain order
+        let mut groups = vec![g("legal"), g("code"), g("medical")];
+        a.order_groups(&mut groups);
+        let shards: Vec<usize> = groups
+            .iter()
+            .map(|p| a.shard_of(&p.domain).unwrap())
+            .collect();
+        assert_eq!(shards, vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn shard_assignment_parse_pairs() {
+        let a = ShardAssignment::parse_pairs(&[
+            "legal=1".to_string(),
+            "code=0".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(a.shard_of("legal"), Some(1));
+        assert_eq!(a.shard_of("code"), Some(0));
+        assert_eq!(a.shard_of("nope"), None);
+        assert_eq!(a.n_shards, 2);
+        assert!(ShardAssignment::parse_pairs(&["legal".into()]).is_err());
+        assert!(ShardAssignment::parse_pairs(&["=1".into()]).is_err());
+        assert!(ShardAssignment::parse_pairs(&["legal=x".into()]).is_err());
+        assert!(ShardAssignment::parse_pairs(
+            &["legal=0".into(), "legal=1".into()],
+        )
+        .is_err());
     }
 
     #[test]

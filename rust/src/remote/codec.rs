@@ -30,14 +30,21 @@
 
 use std::io::Read;
 
+use crate::kvcache::shared_store::DomainPlannerState;
 use crate::plan::{GemmCall, PageSpan, SharedGroupPlan, StepPlan,
                   UniqueRowPlan};
 use crate::router::ChunkSet;
 use crate::runtime::native::Partials;
 use crate::tensor::{DType, Tensor};
 
-/// Wire-format version; bump on ANY layout change past the frame header.
-pub const CODEC_VERSION: u16 = 1;
+/// Wire-format version; bump on ANY layout change past the frame header
+/// — including new message kinds (a peer that does not speak a kind
+/// cannot negotiate around it, so kinds are pinned per version).
+/// History and bump rules live in `docs/WIRE_PROTOCOL.md`.
+///
+/// * v1 — Hello/HelloAck/ExecShared/Partials/Error/StepPlan.
+/// * v2 — adds `Sync`/`SyncState` (planner-state sync at connect).
+pub const CODEC_VERSION: u16 = 2;
 
 /// Frame magic: `"MoSK"` as a little-endian u32.
 pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"MoSK");
@@ -193,6 +200,8 @@ pub enum MsgKind {
     Partials = 4,
     Error = 5,
     StepPlan = 6,
+    Sync = 7,
+    SyncState = 8,
 }
 
 impl MsgKind {
@@ -204,6 +213,8 @@ impl MsgKind {
             4 => MsgKind::Partials,
             5 => MsgKind::Error,
             6 => MsgKind::StepPlan,
+            7 => MsgKind::Sync,
+            8 => MsgKind::SyncState,
             t => {
                 return Err(CodecError::BadTag {
                     what: "message kind",
@@ -234,6 +245,20 @@ pub struct ExecSharedReq {
     pub plan: SharedGroupPlan,
 }
 
+/// The shared node's full planner-state snapshot, returned for a
+/// [`Sync`][WireMsg::Sync] request: chunk geometry, store digest, and
+/// per-domain router embeddings + chunk geometry
+/// ([`DomainPlannerState`]). This is what lets the unique node build its
+/// planner view from the wire and never load shared K/V locally.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreSync {
+    pub chunk: usize,
+    /// The node's store content digest (same fingerprint the
+    /// [`HelloAck`] advertises; per-shard for a partitioned store).
+    pub digest: u64,
+    pub domains: Vec<DomainPlannerState>,
+}
+
 /// Every message the fabric speaks.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
@@ -253,6 +278,11 @@ pub enum WireMsg {
     /// variant exists so the `StepPlan` IR has a pinned wire layout and
     /// a roundtrip property test).
     StepPlan(StepPlan),
+    /// Client → server: request the node's planner state (payload-free).
+    Sync,
+    /// Server → client: router embeddings + chunk geometry for every
+    /// resident domain — the planner-state sync at connect.
+    SyncState(StoreSync),
 }
 
 impl WireMsg {
@@ -264,6 +294,8 @@ impl WireMsg {
             WireMsg::Partials { .. } => MsgKind::Partials,
             WireMsg::Error(_) => MsgKind::Error,
             WireMsg::StepPlan(_) => MsgKind::StepPlan,
+            WireMsg::Sync => MsgKind::Sync,
+            WireMsg::SyncState(_) => MsgKind::SyncState,
         }
     }
 }
@@ -408,6 +440,16 @@ impl Enc {
         self.tensor(&p.m);
         self.tensor(&p.l);
     }
+
+    fn domain_planner_state(&mut self, d: &DomainPlannerState) {
+        self.str(&d.name);
+        self.u64(d.n_tokens as u64);
+        self.vec_i32(&d.chunk_bases);
+        self.u32(d.embs.len() as u32);
+        for e in &d.embs {
+            self.tensor(e);
+        }
+    }
 }
 
 /// Encode one message's payload (no frame header).
@@ -435,6 +477,15 @@ pub fn encode_payload(msg: &WireMsg) -> Vec<u8> {
         }
         WireMsg::Error(s) => e.str(s),
         WireMsg::StepPlan(p) => e.step_plan(p),
+        WireMsg::Sync => {}
+        WireMsg::SyncState(s) => {
+            e.u64(s.chunk as u64);
+            e.u64(s.digest);
+            e.u32(s.domains.len() as u32);
+            for d in &s.domains {
+                e.domain_planner_state(d);
+            }
+        }
     }
     e.buf
 }
@@ -729,6 +780,23 @@ impl<'a> Dec<'a> {
         })
     }
 
+    fn domain_planner_state(&mut self)
+                            -> Result<DomainPlannerState, CodecError> {
+        let name = self.str()?;
+        let n_tokens = self.usize64()?;
+        let chunk_bases = self.vec_i32()?;
+        let n_layers = self.u32()? as usize;
+        // each tensor is ≥ 2 bytes on the wire (dtype + rank)
+        if n_layers.saturating_mul(2) > self.buf.len() - self.off {
+            return Err(CodecError::Truncated);
+        }
+        let mut embs = Vec::with_capacity(n_layers.min(MAX_EAGER_RESERVE));
+        for _ in 0..n_layers {
+            embs.push(self.tensor()?);
+        }
+        Ok(DomainPlannerState { name, n_tokens, chunk_bases, embs })
+    }
+
     fn finish(self) -> Result<(), CodecError> {
         if self.off != self.buf.len() {
             return Err(CodecError::TrailingBytes {
@@ -778,6 +846,22 @@ pub fn decode_payload(kind: MsgKind, payload: &[u8])
         }
         MsgKind::Error => WireMsg::Error(d.str()?),
         MsgKind::StepPlan => WireMsg::StepPlan(d.step_plan()?),
+        MsgKind::Sync => WireMsg::Sync,
+        MsgKind::SyncState => {
+            let chunk = d.usize64()?;
+            let digest = d.u64()?;
+            let n = d.u32()? as usize;
+            // each domain payload is ≥ 14 bytes (name len + n_tokens +
+            // bases count + layer count)
+            if n.saturating_mul(14) > payload.len() {
+                return Err(CodecError::Truncated);
+            }
+            let mut domains = Vec::with_capacity(n.min(MAX_EAGER_RESERVE));
+            for _ in 0..n {
+                domains.push(d.domain_planner_state()?);
+            }
+            WireMsg::SyncState(StoreSync { chunk, digest, domains })
+        }
     };
     d.finish()?;
     Ok(msg)
@@ -910,6 +994,38 @@ mod tests {
         let (back, _) =
             read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
         assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn sync_state_roundtrip_bit_identical() {
+        let dom = |name: &str, nc: usize| DomainPlannerState {
+            name: name.into(),
+            n_tokens: nc * 64,
+            chunk_bases: (0..nc).map(|c| (c * 64) as i32).collect(),
+            embs: (0..2)
+                .map(|l| {
+                    Tensor::f32(
+                        &[nc, 2, 4],
+                        (0..nc * 8).map(|i| (i + l) as f32 * 0.5).collect(),
+                    )
+                })
+                .collect(),
+        };
+        let msg = WireMsg::SyncState(StoreSync {
+            chunk: 64,
+            digest: 0x0123_4567_89AB_CDEF,
+            domains: vec![dom("legal", 3), dom("code", 1)],
+        });
+        let bytes = frame_bytes(&msg);
+        let (back, n) =
+            read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(n, bytes.len());
+        assert_eq!(back, msg);
+        // and the payload-free request roundtrips too
+        let req = frame_bytes(&WireMsg::Sync);
+        let (back, _) =
+            read_frame(&mut std::io::Cursor::new(&req)).unwrap();
+        assert_eq!(back, WireMsg::Sync);
     }
 
     #[test]

@@ -8,23 +8,32 @@
 //! * [`codec`] — versioned, CRC-checked, length-prefixed binary frames
 //!   for every value the fabric ships (plans, gather index tables,
 //!   query tensors, [`Partials`][crate::runtime::native::Partials]
-//!   replies). Typed errors, bit-exact f32 roundtrips.
+//!   replies, and the [`StoreSync`][codec::StoreSync] planner state).
+//!   Typed errors, bit-exact f32 roundtrips. The byte-level spec is
+//!   `docs/WIRE_PROTOCOL.md`.
 //! * [`transport`] — the framed TCP client: connect/retry, a
-//!   version-checked handshake, one-in-flight-per-layer request
-//!   pipelining, and reply deadlines reusing the HTTP server's timeout
-//!   machinery. [`RemoteFabric`] plugs into the
-//!   [`SharedFabric`][crate::disagg::SharedFabric] seam.
+//!   version-checked handshake, planner-state `Sync` at connect (the
+//!   unique node builds its planner view from the wire and never loads
+//!   shared K/V locally), pipelined per-group request batches, and
+//!   reply deadlines reusing the HTTP server's timeout machinery.
+//!   [`RemoteFabric`] plugs into the
+//!   [`SharedFabric`][crate::disagg::SharedFabric] seam;
+//!   [`ShardedFabric`][crate::disagg::ShardedFabric] composes one
+//!   `RemoteFabric` per domain shard.
 //! * [`server`] — the `moska shared-node` process: loads the Domain
-//!   Shared KV store, owns its own backend/thread pool/arenas, and
-//!   executes shipped plans. `moska disagg --remote <addr>` then runs
-//!   the identical decode loop over a socket, bit-comparable to
-//!   in-process execution (asserted by `tests/integration_remote.rs`
-//!   and the `scripts/ci.sh` loopback smoke stage).
+//!   Shared KV store (optionally partitioned with `--domains a,b` — one
+//!   shard of the domain-sharded fabric), owns its own backend/thread
+//!   pool/arenas, and executes shipped plans. `moska disagg --remote
+//!   <addr>` (or `--shards addr1,addr2`) then runs the identical decode
+//!   loop over sockets, bit-comparable to in-process execution
+//!   (asserted by `tests/integration_remote.rs`,
+//!   `tests/integration_shard.rs`, and the `scripts/ci.sh` loopback
+//!   smoke stages).
 
 pub mod codec;
 pub mod server;
 pub mod transport;
 
-pub use codec::{CodecError, HelloAck, WireMsg, CODEC_VERSION};
+pub use codec::{CodecError, HelloAck, StoreSync, WireMsg, CODEC_VERSION};
 pub use server::{serve_shared_node, spawn_shared_node};
 pub use transport::{FabricStats, RemoteClient, RemoteFabric, TransportCfg};

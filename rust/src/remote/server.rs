@@ -9,11 +9,13 @@
 //! and local execution are bit-identical.
 //!
 //! Connection lifecycle: one handler thread per connection, each serving
-//! `Hello → HelloAck` then any number of `ExecShared → Partials` round
-//! trips. Request-level failures (unknown domain, malformed plan) answer
-//! with an `Error` frame and keep the connection; protocol-level
+//! `Hello → HelloAck` (and optionally `Sync → SyncState`, the
+//! planner-state handshake) then any number of `ExecShared → Partials`
+//! round trips. Request-level failures (unknown domain, malformed plan)
+//! answer with an `Error` frame and keep the connection; protocol-level
 //! failures (bad magic, version mismatch, CRC) answer with an `Error`
-//! frame best-effort and close.
+//! frame best-effort and close. The full message-by-message spec lives
+//! in `docs/WIRE_PROTOCOL.md`.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -33,10 +35,14 @@ use crate::util::cli::Args;
 use crate::util::threadpool::ThreadPool;
 
 /// `moska shared-node`: load the store, own a backend, serve forever.
+/// `--domains a,b` keeps only the named domains resident — the shard
+/// surface of the domain-sharded fabric (each shard of a deployment
+/// serves a disjoint slice of the corpus and advertises its own
+/// per-shard digest).
 pub fn run_shared_node(args: &Args) -> Result<()> {
     let addr = args.str("addr")?;
     let threads = args.usize("threads")?;
-    let (model, chunk, store) = if args.flag("synthetic") {
+    let (model, chunk, mut store) = if args.flag("synthetic") {
         let store = crate::disagg::synthetic_store()?;
         (crate::config::ModelConfig::tiny(), crate::disagg::SYNTH_CHUNK,
          store)
@@ -46,6 +52,12 @@ pub fn run_shared_node(args: &Args) -> Result<()> {
         let store = SharedStore::load_from_manifest(&man)?;
         (man.model.clone(), man.chunk, store)
     };
+    let domains = args.get("domains").unwrap_or("").to_string();
+    if !domains.is_empty() {
+        let keep: Vec<String> =
+            domains.split(',').map(|s| s.trim().to_string()).collect();
+        store.retain_domains(&keep).context("partitioning store")?;
+    }
     let n = ThreadPool::resolve_threads(threads);
     let backend: Arc<dyn Backend> = if n <= 1 {
         Arc::new(crate::runtime::NativeBackend::with_threads(model, chunk, 1))
@@ -151,6 +163,36 @@ fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
                 domains: store.domains.keys().cloned().collect(),
                 digest,
             }),
+            // planner-state sync: router embeddings + chunk geometry for
+            // every resident domain, so the unique node can plan without
+            // ever loading the shared K/V itself (handshake-time only —
+            // cloning the embeddings here is off the decode path). The
+            // payload is encoded first and size-checked: a store whose
+            // planner state exceeds the frame cap answers with a typed
+            // Error instead of panicking the frame encoder.
+            WireMsg::Sync => {
+                let state = WireMsg::SyncState(codec::StoreSync {
+                    chunk: store.chunk,
+                    digest,
+                    domains: store.planner_states(),
+                });
+                let payload = codec::encode_payload(&state);
+                let frame = if payload.len() <= codec::MAX_FRAME_BYTES {
+                    codec::frame_payload(codec::MsgKind::SyncState,
+                                         &payload)
+                } else {
+                    codec::frame_bytes(&WireMsg::Error(format!(
+                        "planner state is {} bytes, exceeding the {} \
+                         byte frame cap — shard the store (--domains) \
+                         so each node's slice syncs within one frame",
+                        payload.len(), codec::MAX_FRAME_BYTES,
+                    )))
+                };
+                if stream.write_all(&frame).is_err() {
+                    return; // peer gone mid-reply
+                }
+                continue;
+            }
             WireMsg::ExecShared(req) => {
                 let t0 = Instant::now();
                 let result = validate_req(&req, &store, backend.as_ref())

@@ -2,17 +2,20 @@
 //!
 //! [`RemoteClient`] owns one connection to a `moska shared-node` process:
 //! connect-with-retry (the node may still be starting), a version-checked
-//! [`Hello`][super::codec::WireMsg::Hello] handshake, and
-//! deadline-bounded frame reads. [`RemoteFabric`] layers the disagg
-//! fabric contract on top: **one in-flight request per layer** — the
-//! request frame is sent eagerly on
+//! [`Hello`][super::codec::WireMsg::Hello] handshake, a planner-state
+//! [`Sync`][super::codec::WireMsg::Sync] fetch (router embeddings +
+//! chunk geometry, so the unique node never loads shared K/V locally),
+//! and deadline-bounded frame reads. [`RemoteFabric`] layers the disagg
+//! fabric contract on top: **one submission batch in flight per layer**
+//! — every group's request frame is sent eagerly on
 //! [`submit`][crate::disagg::SharedFabric::submit] so the shared node
 //! executes while the unique node runs its own attention, and
 //! [`collect`][crate::disagg::SharedFabric::collect] blocks only for the
-//! reply. Plan execution is pure (a function of the shipped plan and the
-//! node's resident store), so a dropped connection is handled by
-//! reconnect + resend of the stored frame, bounded by
-//! [`TransportCfg::request_retries`].
+//! replies (answered in order). Plan execution is pure (a function of
+//! the shipped plan and the node's resident store), so a dropped
+//! connection is handled by reconnect + resend of the unreplied frames,
+//! bounded by [`TransportCfg::request_retries`]. The full frame-level
+//! spec lives in `docs/WIRE_PROTOCOL.md`.
 //!
 //! Deadline semantics reuse the HTTP server's timeout machinery
 //! ([`server::READ_TIMEOUT`][crate::server::READ_TIMEOUT] ×
@@ -30,7 +33,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::codec::{self, is_connection_error, is_timeout_error, CodecError,
-                   HelloAck, WireMsg};
+                   HelloAck, StoreSync, WireMsg};
 use crate::disagg::{FabricReply, SharedFabric};
 use crate::metrics::Metrics;
 use crate::plan::SharedGroupPlan;
@@ -51,21 +54,33 @@ pub struct FabricStats {
 }
 
 impl FabricStats {
+    /// The counters as `(name, value)` pairs, one load per counter.
+    pub fn entries(&self) -> [(&'static str, u64); 6] {
+        [
+            ("bytes_sent", self.bytes_sent.load(Ordering::Relaxed)),
+            ("bytes_recv", self.bytes_recv.load(Ordering::Relaxed)),
+            ("frames_sent", self.frames_sent.load(Ordering::Relaxed)),
+            ("frames_recv", self.frames_recv.load(Ordering::Relaxed)),
+            ("retries", self.retries.load(Ordering::Relaxed)),
+            ("serialize_ns", self.serialize_ns.load(Ordering::Relaxed)),
+        ]
+    }
+
     /// Export the counters into a [`Metrics`] registry as gauges
     /// (`fabric_*`), alongside the arena/plan stats already there.
     pub fn publish(&self, m: &Metrics) {
-        m.gauge("fabric_bytes_sent",
-                self.bytes_sent.load(Ordering::Relaxed) as f64);
-        m.gauge("fabric_bytes_recv",
-                self.bytes_recv.load(Ordering::Relaxed) as f64);
-        m.gauge("fabric_frames_sent",
-                self.frames_sent.load(Ordering::Relaxed) as f64);
-        m.gauge("fabric_frames_recv",
-                self.frames_recv.load(Ordering::Relaxed) as f64);
-        m.gauge("fabric_retries",
-                self.retries.load(Ordering::Relaxed) as f64);
-        m.gauge("fabric_serialize_ns",
-                self.serialize_ns.load(Ordering::Relaxed) as f64);
+        for (name, v) in self.entries() {
+            m.gauge(&format!("fabric_{name}"), v as f64);
+        }
+    }
+
+    /// Export per-shard gauges (`fabric_*_shard<id>`) — the labeled
+    /// observability surface of the domain-sharded fabric; see the
+    /// "reading the bench output" section of `docs/ARCHITECTURE.md`.
+    pub fn publish_shard(&self, m: &Metrics, shard: usize) {
+        for (name, v) in self.entries() {
+            m.gauge(&format!("fabric_{name}_shard{shard}"), v as f64);
+        }
     }
 }
 
@@ -114,13 +129,18 @@ impl Read for DeadlineReader<'_> {
 }
 
 /// What the client requires the node's store to look like. Checked on
-/// the first handshake via [`RemoteFabric::check_store`] and re-checked
-/// after **every** reconnect — a node restarted mid-run with a
-/// different store must not silently serve the resent plan.
+/// the first handshake via [`RemoteFabric::check_store`] (or installed
+/// automatically by [`RemoteFabric::sync`]) and re-checked after
+/// **every** reconnect — a node restarted mid-run with a different
+/// store, or with a shrunken resident-domain set, must not silently
+/// serve the resent plan.
 #[derive(Debug, Clone)]
 struct StoreExpectation {
     chunk: usize,
-    domain: String,
+    /// Every domain this run depends on from the node. The whole set is
+    /// validated on each (re)connect: a shard that comes back missing
+    /// any of them fails the retry path at handshake, not at plan time.
+    domains: Vec<String>,
     digest: u64,
 }
 
@@ -129,11 +149,13 @@ fn verify_ack(h: &HelloAck, exp: &StoreExpectation) -> Result<()> {
         h.chunk == exp.chunk,
         "shared node chunk size {} != local {}", h.chunk, exp.chunk,
     );
-    anyhow::ensure!(
-        h.domains.iter().any(|d| *d == exp.domain),
-        "shared node does not serve domain '{}' (resident: {:?})",
-        exp.domain, h.domains,
-    );
+    for want in &exp.domains {
+        anyhow::ensure!(
+            h.domains.iter().any(|d| d == want),
+            "shared node does not serve domain '{want}' (resident: {:?})",
+            h.domains,
+        );
+    }
     anyhow::ensure!(
         h.digest == exp.digest,
         "shared node store digest {:#018x} != local {:#018x} \
@@ -273,6 +295,39 @@ impl RemoteClient {
         Ok(())
     }
 
+    /// Fetch the node's planner state ([`StoreSync`]: router embeddings
+    /// + per-domain chunk geometry + store digest) and install the
+    /// node's advertised store as the reconnect expectation — after a
+    /// sync, every reconnect re-validates chunk size, the full
+    /// resident-domain set, and the digest against what was synced.
+    pub fn sync(&mut self) -> Result<StoreSync> {
+        self.ensure_connected()?;
+        let frame = codec::frame_bytes(&WireMsg::Sync);
+        self.send_bytes(&frame)
+            .with_context(|| format!("sync request to {}", self.addr))?;
+        let state = match self.recv_msg() {
+            Ok(WireMsg::SyncState(s)) => s,
+            Ok(WireMsg::Error(e)) => {
+                anyhow::bail!("shared node refused sync: {e}")
+            }
+            Ok(other) => anyhow::bail!(
+                "protocol error: {:?} reply to sync", other.kind(),
+            ),
+            Err(e) => {
+                self.disconnect();
+                return Err(anyhow::Error::new(e)).with_context(|| {
+                    format!("sync with shared node {} failed", self.addr)
+                });
+            }
+        };
+        self.expect = Some(StoreExpectation {
+            chunk: state.chunk,
+            domains: state.domains.iter().map(|d| d.name.clone()).collect(),
+            digest: state.digest,
+        });
+        Ok(state)
+    }
+
     /// Read one reply frame under the deadline.
     fn recv_msg(&mut self) -> std::result::Result<WireMsg, CodecError> {
         let stream = self
@@ -303,20 +358,27 @@ enum HandshakeError {
 
 /// The remote implementation of the disagg fabric seam: ships
 /// [`SharedGroupPlan`]s to a `moska shared-node` process over TCP.
+///
+/// A submission is a *batch* of group requests (one per domain group of
+/// the layer); all frames are written eagerly back-to-back and the
+/// server answers them in order, so a multi-domain step pipelines on a
+/// single connection. Replies already collected stay valid across a
+/// reconnect — plan execution is pure, so only unreplied frames are
+/// resent.
 pub struct RemoteFabric {
     client: RemoteClient,
-    /// The in-flight request's encoded frame (kept for resend-on-retry).
-    pending: Option<Vec<u8>>,
-    /// Whether the in-flight frame reached the socket.
-    sent: bool,
+    /// Encoded request frames awaiting replies (kept for resend).
+    pending: Vec<Vec<u8>>,
+    /// How many of `pending` were written to the *current* connection.
+    sent: usize,
 }
 
 impl RemoteFabric {
     pub fn connect(addr: &str, cfg: TransportCfg) -> Result<RemoteFabric> {
         Ok(RemoteFabric {
             client: RemoteClient::connect(addr, cfg)?,
-            pending: None,
-            sent: false,
+            pending: Vec::new(),
+            sent: 0,
         })
     }
 
@@ -325,19 +387,32 @@ impl RemoteFabric {
         self.client.hello().expect("connected client has a hello")
     }
 
+    /// Fetch the node's planner state (see [`RemoteClient::sync`]): the
+    /// unique node builds its
+    /// [`SharedStore`][crate::kvcache::shared_store::SharedStore]
+    /// planner view from this instead of loading shared K/V locally,
+    /// and the node's advertised store becomes the reconnect
+    /// expectation.
+    pub fn sync(&mut self) -> Result<StoreSync> {
+        self.client.sync()
+    }
+
     /// Fail fast if the node's store cannot serve this cluster: chunk
-    /// geometry must match, the domain must be resident, and the node's
-    /// store content digest must equal `digest` (the client's own
+    /// geometry must match, every domain in `domains` must be resident,
+    /// and the node's store content digest must equal `digest` (either
+    /// the client's own
     /// [`SharedStore::content_digest`][crate::kvcache::shared_store::SharedStore::content_digest]
-    /// — same name + geometry with different K/V bits would otherwise
+    /// or the digest recorded from an earlier [`RemoteFabric::sync`] —
+    /// same name + geometry with different K/V bits would otherwise
     /// silently decode garbage). The expectation is remembered and
-    /// re-verified after every reconnect, so a node restarted mid-run
-    /// with a different store fails the retry path too.
-    pub fn check_store(&mut self, chunk: usize, domain: &str, digest: u64)
-                       -> Result<()> {
+    /// re-verified after **every** reconnect, so a node restarted
+    /// mid-run with a different store — or with any expected domain
+    /// missing — fails the retry path at handshake, not at plan time.
+    pub fn check_store(&mut self, chunk: usize, domains: &[String],
+                       digest: u64) -> Result<()> {
         let exp = StoreExpectation {
             chunk,
-            domain: domain.to_string(),
+            domains: domains.to_vec(),
             digest,
         };
         verify_ack(self.hello(), &exp)?;
@@ -347,85 +422,124 @@ impl RemoteFabric {
 }
 
 impl SharedFabric for RemoteFabric {
-    fn submit(&mut self, layer: usize, q: &Tensor,
-              plan: &SharedGroupPlan) -> Result<()> {
-        anyhow::ensure!(self.pending.is_none(),
+    fn submit(&mut self, layer: usize,
+              groups: &[(&Tensor, &SharedGroupPlan)]) -> Result<()> {
+        anyhow::ensure!(self.pending.is_empty(),
                         "fabric already has an in-flight request");
         let t0 = Instant::now();
-        let frame = codec::frame_exec_shared(layer, q, plan);
+        for &(q, plan) in groups {
+            self.pending.push(codec::frame_exec_shared(layer, q, plan));
+        }
         self.client
             .stats
             .serialize_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         // eager send: the node executes while we run unique attention;
         // failures here are retried (reconnect + resend) in collect
-        self.sent = match self
-            .client
-            .ensure_connected()
-            .and_then(|()| self.client.send_bytes(&frame).map_err(Into::into))
-        {
-            Ok(()) => true,
-            Err(_) => {
-                self.client.disconnect();
-                false
+        self.sent = 0;
+        if self.client.ensure_connected().is_ok() {
+            while self.sent < self.pending.len() {
+                if self.client.send_bytes(&self.pending[self.sent]).is_err()
+                {
+                    self.client.disconnect();
+                    break;
+                }
+                self.sent += 1;
             }
-        };
-        self.pending = Some(frame);
+        }
         Ok(())
     }
 
-    fn collect(&mut self) -> Result<FabricReply> {
-        let frame = self
-            .pending
-            .take()
-            .context("fabric collect without a submitted request")?;
-        let mut sent = std::mem::take(&mut self.sent);
+    fn collect(&mut self) -> Result<Vec<FabricReply>> {
+        let frames = std::mem::take(&mut self.pending);
+        anyhow::ensure!(!frames.is_empty(),
+                        "fabric collect without a submitted request");
+        let n = frames.len();
+        let mut out: Vec<FabricReply> = Vec::with_capacity(n);
+        let mut sent = std::mem::replace(&mut self.sent, 0);
         let retries = self.client.cfg.request_retries;
+        let mut attempts_left = retries;
         let mut last: Option<anyhow::Error> = None;
-        for attempt in 0..=retries {
-            if attempt > 0 {
-                self.client.stats.retries.fetch_add(1, Ordering::Relaxed);
+        // one pass = (re)connect if needed, (re)send every unreplied
+        // frame the connection has not carried, then drain replies; any
+        // connection-class failure burns one retry and restarts the pass
+        'pass: loop {
+            if self.client.stream.is_none() {
+                // a fresh connection carries none of our frames; replies
+                // already collected stay valid (execution is pure and
+                // frames are independent)
+                sent = out.len();
+                if let Err(e) = self.client.ensure_connected() {
+                    if self.client.fatal {
+                        // version or store mismatch: reconnecting walks
+                        // into the same wall — abort now
+                        return Err(e);
+                    }
+                    last = Some(e);
+                    if attempts_left == 0 {
+                        break 'pass;
+                    }
+                    attempts_left -= 1;
+                    self.client.stats.retries.fetch_add(1,
+                                                        Ordering::Relaxed);
+                    continue 'pass;
+                }
             }
-            if !sent {
-                match self.client.ensure_connected().and_then(|()| {
-                    self.client.send_bytes(&frame).map_err(Into::into)
-                }) {
-                    Ok(()) => sent = true,
+            while sent < n {
+                if let Err(e) = self.client.send_bytes(&frames[sent]) {
+                    self.client.disconnect();
+                    last = Some(anyhow::Error::new(e));
+                    if attempts_left == 0 {
+                        break 'pass;
+                    }
+                    attempts_left -= 1;
+                    self.client.stats.retries.fetch_add(1,
+                                                        Ordering::Relaxed);
+                    continue 'pass;
+                }
+                sent += 1;
+            }
+            while out.len() < n {
+                match self.client.recv_msg() {
+                    Ok(WireMsg::Partials { parts, exec_ns }) => {
+                        out.push(FabricReply { parts, exec_ns });
+                    }
+                    Ok(WireMsg::Error(e)) => {
+                        // the node executed and failed — deterministic,
+                        // so retrying would just repeat it; drop the
+                        // connection so replies still queued behind the
+                        // error die with it instead of answering a
+                        // future submission
+                        self.client.disconnect();
+                        bail!("shared node rejected request: {e}");
+                    }
+                    Ok(other) => {
+                        self.client.disconnect();
+                        bail!("protocol error: unexpected {:?} reply",
+                              other.kind());
+                    }
+                    Err(e) if is_connection_error(&e)
+                        || is_timeout_error(&e) =>
+                    {
+                        self.client.disconnect();
+                        last = Some(anyhow::Error::new(e));
+                        if attempts_left == 0 {
+                            break 'pass;
+                        }
+                        attempts_left -= 1;
+                        self.client.stats.retries.fetch_add(
+                            1, Ordering::Relaxed,
+                        );
+                        continue 'pass;
+                    }
                     Err(e) => {
                         self.client.disconnect();
-                        if self.client.fatal {
-                            // version or store mismatch: reconnecting
-                            // walks into the same wall — abort now
-                            return Err(e);
-                        }
-                        last = Some(e);
-                        continue;
+                        return Err(anyhow::Error::new(e)
+                            .context("fabric reply decode failed"));
                     }
                 }
             }
-            match self.client.recv_msg() {
-                Ok(WireMsg::Partials { parts, exec_ns }) => {
-                    return Ok(FabricReply { parts, exec_ns });
-                }
-                Ok(WireMsg::Error(e)) => {
-                    // the node executed and failed — deterministic, so
-                    // retrying would just repeat it
-                    bail!("shared node rejected request: {e}");
-                }
-                Ok(other) => {
-                    bail!("protocol error: unexpected {:?} reply",
-                          other.kind());
-                }
-                Err(e) if is_connection_error(&e) || is_timeout_error(&e) => {
-                    self.client.disconnect();
-                    sent = false;
-                    last = Some(anyhow::Error::new(e));
-                }
-                Err(e) => {
-                    return Err(anyhow::Error::new(e)
-                        .context("fabric reply decode failed"));
-                }
-            }
+            return Ok(out);
         }
         Err(last.unwrap_or_else(|| anyhow::anyhow!("no attempt ran")))
             .with_context(|| {
@@ -441,6 +555,7 @@ impl SharedFabric for RemoteFabric {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::native::Partials;
     use std::net::TcpListener;
 
     fn tiny_cfg() -> TransportCfg {
@@ -512,17 +627,98 @@ mod tests {
     }
 
     #[test]
-    fn check_store_validates_chunk_and_domain() {
+    fn check_store_validates_chunk_domains_and_digest() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         hello_server(listener);
         let mut f =
             RemoteFabric::connect(&addr.to_string(), tiny_cfg()).unwrap();
-        assert!(f.check_store(32, "bench", 42).is_err());
-        assert!(f.check_store(64, "nope", 42).is_err());
-        let err = f.check_store(64, "bench", 43).unwrap_err();
+        let doms = |names: &[&str]| -> Vec<String> {
+            names.iter().map(|s| s.to_string()).collect()
+        };
+        assert!(f.check_store(32, &doms(&["bench"]), 42).is_err());
+        assert!(f.check_store(64, &doms(&["nope"]), 42).is_err());
+        // EVERY expected domain must be resident, not just one
+        assert!(f.check_store(64, &doms(&["bench", "nope"]), 42).is_err());
+        let err = f.check_store(64, &doms(&["bench"]), 43).unwrap_err();
         assert!(format!("{err:#}").contains("digest"), "{err:#}");
         // the passing expectation sticks — and reconnects re-verify it
-        f.check_store(64, "bench", 42).unwrap();
+        f.check_store(64, &doms(&["bench"]), 42).unwrap();
+    }
+
+    /// Regression: the reconnect path must re-validate the *full
+    /// resident-domain set*, not just the digest — a shard restarted
+    /// with fewer domains (here: same digest, 'extra' gone) has to fail
+    /// the retry handshake, not resurface at plan time.
+    #[test]
+    fn reconnect_revalidates_resident_domain_set() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let mut first = true;
+            for stream in listener.incoming() {
+                let Ok(mut s) = stream else { continue };
+                // connection 1 = the original shard; connections 2+ =
+                // the shard "restarted" without the 'extra' domain
+                let domains: Vec<String> = if first {
+                    vec!["bench".into(), "extra".into()]
+                } else {
+                    vec!["bench".into()]
+                };
+                first = false;
+                loop {
+                    match codec::read_frame(&mut s) {
+                        Ok((WireMsg::Hello, _)) => {
+                            let ack = WireMsg::HelloAck(HelloAck {
+                                chunk: 64,
+                                domains: domains.clone(),
+                                digest: 42,
+                            });
+                            if s.write_all(&codec::frame_bytes(&ack))
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                        Ok((WireMsg::ExecShared(_), _)) => {
+                            let reply = WireMsg::Partials {
+                                parts: vec![Partials::identity(1, 4, 16)],
+                                exec_ns: 1,
+                            };
+                            let _ =
+                                s.write_all(&codec::frame_bytes(&reply));
+                            break; // drop the conn → client must retry
+                        }
+                        _ => break,
+                    }
+                }
+            }
+        });
+        let mut f =
+            RemoteFabric::connect(&addr.to_string(), tiny_cfg()).unwrap();
+        f.check_store(
+            64, &["bench".to_string(), "extra".to_string()], 42,
+        )
+        .unwrap();
+        let q = Tensor::f32(&[1, 4, 16], vec![0.5; 64]);
+        let plan = SharedGroupPlan {
+            domain: "extra".into(),
+            rows: vec![0],
+            q_pos: vec![1],
+            sets: vec![vec![]],
+            calls: vec![],
+            pairs: 0,
+            reads: 0,
+        };
+        // round 1 succeeds on the original connection
+        f.submit(0, &[(&q, &plan)]).unwrap();
+        assert_eq!(f.collect().unwrap().len(), 1);
+        // the server dropped the conn; the restarted shard lacks
+        // 'extra' — the reconnect handshake must refuse (fatal) before
+        // the plan is resent
+        f.submit(0, &[(&q, &plan)]).unwrap();
+        let err = f.collect().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("does not serve domain 'extra'"), "{msg}");
     }
 }

@@ -64,12 +64,13 @@ fn remote_decode_bit_identical_to_local() {
 
     let mut fabric =
         RemoteFabric::connect(&addr.to_string(), test_cfg()).unwrap();
+    let doms = vec![SYNTH_DOMAIN.to_string()];
     assert!(
-        fabric.check_store(SYNTH_CHUNK, SYNTH_DOMAIN, 0).is_err(),
+        fabric.check_store(SYNTH_CHUNK, &doms, 0).is_err(),
         "a content-mismatched store must be refused at connect",
     );
     fabric
-        .check_store(SYNTH_CHUNK, SYNTH_DOMAIN, shared.content_digest())
+        .check_store(SYNTH_CHUNK, &doms, shared.content_digest())
         .unwrap();
     let mut remote = DisaggCluster::with_fabric(
         native_be(), Box::new(fabric), synthetic_weights(),
@@ -103,17 +104,20 @@ fn unknown_domain_is_clean_error_and_connection_survives() {
     let mut fabric =
         RemoteFabric::connect(&addr.to_string(), test_cfg()).unwrap();
 
-    fabric.submit(0, &trivial_q(), &trivial_plan("nope")).unwrap();
+    let q = trivial_q();
+    let bad = trivial_plan("nope");
+    fabric.submit(0, &[(&q, &bad)]).unwrap();
     let err = fabric.collect().unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("unknown domain"), "{msg}");
 
-    // same connection keeps serving valid requests
-    fabric.submit(0, &trivial_q(), &trivial_plan(SYNTH_DOMAIN)).unwrap();
-    let reply = fabric.collect().unwrap();
-    assert_eq!(reply.parts.len(), 1);
-    let st = fabric.stats().unwrap();
-    assert_eq!(st.retries.load(std::sync::atomic::Ordering::Relaxed), 0);
+    // the fabric keeps serving valid requests (the errored connection
+    // is dropped defensively; reconnect is transparent)
+    let good = trivial_plan(SYNTH_DOMAIN);
+    fabric.submit(0, &[(&q, &good)]).unwrap();
+    let replies = fabric.collect().unwrap();
+    assert_eq!(replies.len(), 1);
+    assert_eq!(replies[0].parts.len(), 1);
 }
 
 /// A malformed plan (rows out of range) is rejected by validation, not
@@ -135,9 +139,38 @@ fn out_of_range_plan_is_rejected() {
         valid: 64,
         pos_override: None,
     });
-    fabric.submit(0, &trivial_q(), &plan).unwrap();
+    let q = trivial_q();
+    fabric.submit(0, &[(&q, &plan)]).unwrap();
     let msg = format!("{:#}", fabric.collect().unwrap_err());
     assert!(msg.contains("out of range"), "{msg}");
+}
+
+/// The `Sync` handshake ships the node's full planner state: every
+/// resident domain's router embeddings + chunk geometry, bit-identical
+/// to the store the node loaded, plus the store digest.
+#[test]
+fn sync_ships_planner_state_matching_the_store() {
+    let shared = Arc::new(synthetic_store().unwrap());
+    let addr =
+        spawn_shared_node(native_be(), Arc::clone(&shared)).unwrap();
+    let mut fabric =
+        RemoteFabric::connect(&addr.to_string(), test_cfg()).unwrap();
+    let sync = fabric.sync().unwrap();
+    assert_eq!(sync.chunk, SYNTH_CHUNK);
+    assert_eq!(sync.digest, shared.content_digest());
+    assert_eq!(sync.domains.len(), shared.domains.len());
+    let view = moska::kvcache::shared_store::SharedStore::
+        from_planner_states(sync.chunk, sync.domains).unwrap();
+    assert_eq!(view.resident_bytes(), 0, "planner view must be K/V-less");
+    for (name, dom) in &shared.domains {
+        let v = view.domain(name).unwrap();
+        assert_eq!(v.token_len(), dom.token_len());
+        assert_eq!(v.chunk_bases, dom.chunk_bases);
+        for l in 0..dom.layers.len() {
+            assert_eq!(v.embeddings(l).as_f32(), dom.embeddings(l).as_f32(),
+                       "embeddings for '{name}' layer {l} not bit-exact");
+        }
+    }
 }
 
 /// Mini server that serves exactly one ExecShared per connection then
@@ -184,14 +217,15 @@ fn dropped_connection_retries_and_recovers() {
     let mut fabric =
         RemoteFabric::connect(&addr.to_string(), test_cfg()).unwrap();
 
+    let q = trivial_q();
+    let plan = trivial_plan(SYNTH_DOMAIN);
     for round in 0..3 {
-        fabric
-            .submit(0, &trivial_q(), &trivial_plan(SYNTH_DOMAIN))
-            .unwrap();
-        let reply = fabric.collect().unwrap_or_else(|e| {
+        fabric.submit(0, &[(&q, &plan)]).unwrap();
+        let replies = fabric.collect().unwrap_or_else(|e| {
             panic!("round {round} failed: {e:#}")
         });
-        assert_eq!(reply.parts.len(), 1, "round {round}");
+        assert_eq!(replies.len(), 1, "round {round}");
+        assert_eq!(replies[0].parts.len(), 1, "round {round}");
     }
     let st = fabric.stats().unwrap();
     assert!(st.retries.load(std::sync::atomic::Ordering::Relaxed) >= 1,

@@ -1,0 +1,352 @@
+//! Domain-sharded fabric integration tests — all loopback, no
+//! artifacts. Two real `shared-node` servers each hold a *partitioned*
+//! synthetic store (`SharedStore::retain_domains`), the unique node
+//! builds its planner view purely from the `Sync` handshake (never
+//! mapping shared K/V into its process), and the sharded decode must be
+//! bit-identical to both the single-node remote run and the in-process
+//! run.
+
+use std::io::Write;
+use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use moska::config::ModelConfig;
+use moska::disagg::{parse_shard_specs, synthetic_store, synthetic_weights,
+                    DisaggCluster, ShardedFabric, SharedFabric,
+                    SYNTH_CHUNK, SYNTH_DOMAIN, SYNTH_DOMAIN_B};
+use moska::kvcache::shared_store::{DomainPlannerState, SharedStore};
+use moska::plan::SharedGroupPlan;
+use moska::remote::codec::{self, HelloAck, StoreSync, WireMsg};
+use moska::remote::{spawn_shared_node, RemoteFabric, TransportCfg};
+use moska::runtime::native::Partials;
+use moska::runtime::{Backend, NativeBackend};
+use moska::tensor::Tensor;
+
+fn native_be() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::with_threads(ModelConfig::tiny(), SYNTH_CHUNK,
+                                         1))
+}
+
+fn test_cfg() -> TransportCfg {
+    TransportCfg {
+        connect_attempts: 20,
+        connect_backoff: Duration::from_millis(25),
+        request_retries: 2,
+        read_timeout: Duration::from_secs(2),
+    }
+}
+
+fn all_domains() -> Vec<String> {
+    vec![SYNTH_DOMAIN.to_string(), SYNTH_DOMAIN_B.to_string()]
+}
+
+/// One shard's slice of the synthetic store — exactly what a real
+/// `moska shared-node --synthetic --domains <keep>` process serves.
+fn partition(keep: &str) -> Arc<SharedStore> {
+    let mut s = synthetic_store().unwrap();
+    s.retain_domains(&[keep.to_string()]).unwrap();
+    Arc::new(s)
+}
+
+/// The acceptance criterion: a 2-shard run over partitioned stores is
+/// bit-identical to the single-node remote run and the in-process run,
+/// with the unique node holding zero shared K/V on both remote paths.
+#[test]
+fn sharded_decode_bit_identical_to_single_node_and_in_process() {
+    let domains = all_domains();
+    let full = Arc::new(synthetic_store().unwrap());
+
+    // in-process baseline: full store, LocalFabric
+    let mut local = DisaggCluster::with_backends(
+        native_be(), native_be(), synthetic_weights(), Arc::clone(&full),
+        Some(4), 32,
+    );
+    let pl = local.run_point_mixed(3, &domains, 32, 4).unwrap();
+
+    // single remote node holding the full store; the planner view comes
+    // from Sync, not from a local load
+    let addr =
+        spawn_shared_node(native_be(), Arc::clone(&full)).unwrap();
+    let mut f =
+        RemoteFabric::connect(&addr.to_string(), test_cfg()).unwrap();
+    let sync = f.sync().unwrap();
+    assert_eq!(sync.digest, full.content_digest());
+    let view =
+        SharedStore::from_planner_states(sync.chunk, sync.domains)
+            .unwrap();
+    assert_eq!(view.resident_bytes(), 0,
+               "unique node must hold no shared K/V");
+    let mut single = DisaggCluster::with_fabric(
+        native_be(), Box::new(f), synthetic_weights(), Arc::new(view),
+        Some(4), 32,
+    );
+    let ps = single.run_point_mixed(3, &domains, 32, 4).unwrap();
+
+    // two shards over partitioned stores, assignment from residency
+    let a = spawn_shared_node(native_be(), partition(SYNTH_DOMAIN))
+        .unwrap();
+    let b = spawn_shared_node(native_be(), partition(SYNTH_DOMAIN_B))
+        .unwrap();
+    let specs = parse_shard_specs(&format!("{a},{b}")).unwrap();
+    let (fabric, store) =
+        ShardedFabric::connect(&specs, test_cfg()).unwrap();
+    assert_eq!(store.resident_bytes(), 0,
+               "unique node must hold no shared K/V when sharded");
+    assert_eq!(store.domains.len(), 2);
+    assert_eq!(
+        fabric.assignment(),
+        vec![(SYNTH_DOMAIN.to_string(), 0),
+             (SYNTH_DOMAIN_B.to_string(), 1)],
+    );
+    // feed the derived assignment to the step planner: shard-contiguous
+    // group ordering must not change a single output bit
+    let mut asn = moska::plan::ShardAssignment::new();
+    for (d, s) in fabric.assignment() {
+        asn.assign(&d, s).unwrap();
+    }
+    let mut sharded = DisaggCluster::with_fabric(
+        native_be(), Box::new(fabric), synthetic_weights(),
+        Arc::new(store), Some(4), 32,
+    );
+    sharded.shard_assignment = Some(asn);
+    let p2 = sharded.run_point_mixed(3, &domains, 32, 4).unwrap();
+
+    assert_eq!(pl.tokens, ps.tokens,
+               "single-node remote decode diverged from in-process");
+    assert_eq!(pl.tokens, p2.tokens,
+               "sharded decode diverged from in-process");
+
+    // both shards really executed work, and the per-shard counters are
+    // the labeled observability surface
+    let stats = sharded.fabric_shard_stats();
+    assert_eq!(stats.len(), 2);
+    for (id, st) in &stats {
+        assert!(st.frames_sent.load(Ordering::Relaxed) > 0,
+                "shard {id} shipped no frames");
+        assert!(st.bytes_recv.load(Ordering::Relaxed) > 0,
+                "shard {id} returned no bytes");
+    }
+    for (id, _) in &stats {
+        let g = |name: &str| {
+            sharded
+                .metrics
+                .gauge_value(&format!("fabric_{name}_shard{id}"))
+                .unwrap_or(0.0)
+        };
+        assert!(g("frames_sent") > 0.0,
+                "per-shard gauge missing for shard {id}");
+    }
+}
+
+/// A domain resident on several shards without a pin is ambiguous and
+/// refused; an explicit pin resolves it — and the pinned run still
+/// decodes bit-identically.
+#[test]
+fn ambiguous_residency_refused_until_pinned() {
+    let full_a = Arc::new(synthetic_store().unwrap());
+    let full_b = Arc::new(synthetic_store().unwrap());
+    let a = spawn_shared_node(native_be(), full_a).unwrap();
+    let b = spawn_shared_node(native_be(), full_b).unwrap();
+
+    // both shards hold both domains → ambiguous without pins
+    let specs = parse_shard_specs(&format!("{a},{b}")).unwrap();
+    let err = ShardedFabric::connect(&specs, test_cfg()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pin it"), "{msg}");
+
+    // pins split the domains across the shards
+    let specs = parse_shard_specs(&format!(
+        "{}={a},{}={b}", SYNTH_DOMAIN, SYNTH_DOMAIN_B,
+    ))
+    .unwrap();
+    let (fabric, store) =
+        ShardedFabric::connect(&specs, test_cfg()).unwrap();
+    assert_eq!(
+        fabric.assignment(),
+        vec![(SYNTH_DOMAIN.to_string(), 0),
+             (SYNTH_DOMAIN_B.to_string(), 1)],
+    );
+    let mut sharded = DisaggCluster::with_fabric(
+        native_be(), Box::new(fabric), synthetic_weights(),
+        Arc::new(store), Some(4), 32,
+    );
+    let p = sharded.run_point_mixed(2, &all_domains(), 32, 3).unwrap();
+
+    let mut local = DisaggCluster::with_backends(
+        native_be(), native_be(), synthetic_weights(),
+        Arc::new(synthetic_store().unwrap()), Some(4), 32,
+    );
+    let pl = local.run_point_mixed(2, &all_domains(), 32, 3).unwrap();
+    assert_eq!(pl.tokens, p.tokens);
+}
+
+/// A pin naming a domain the shard does not hold is refused at connect.
+#[test]
+fn pin_to_non_resident_shard_refused() {
+    let a = spawn_shared_node(native_be(), partition(SYNTH_DOMAIN))
+        .unwrap();
+    let specs =
+        parse_shard_specs(&format!("{}={a}", SYNTH_DOMAIN_B)).unwrap();
+    let err = ShardedFabric::connect(&specs, test_cfg()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("not resident"), "{msg}");
+}
+
+/// One shard down at connect time fails cleanly (naming the shard),
+/// not with a hang.
+#[test]
+fn shard_down_at_connect_fails_cleanly() {
+    let a = spawn_shared_node(native_be(), partition(SYNTH_DOMAIN))
+        .unwrap();
+    // reserve a port and close it again — nothing listens there
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let dead = probe.local_addr().unwrap();
+    drop(probe);
+    let specs = parse_shard_specs(&format!("{a},{dead}")).unwrap();
+    let cfg = TransportCfg {
+        connect_attempts: 2,
+        connect_backoff: Duration::from_millis(10),
+        ..test_cfg()
+    };
+    let err = ShardedFabric::connect(&specs, cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&dead.to_string()), "{msg}");
+}
+
+/// A flaky shard server: answers Hello/Sync (embeddings filled with
+/// `fill`), serves exactly one ExecShared per connection, then drops it
+/// — the sharded fabric must recover transparently through the
+/// per-shard reconnect + resend path.
+fn flaky_shard_with(domain: &'static str, fill: f32)
+                    -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let state = DomainPlannerState {
+            name: domain.to_string(),
+            n_tokens: SYNTH_CHUNK,
+            chunk_bases: vec![0],
+            embs: vec![Tensor::f32(&[1, 2, 16], vec![fill; 32]); 2],
+        };
+        for stream in listener.incoming() {
+            let Ok(mut s) = stream else { continue };
+            loop {
+                match codec::read_frame(&mut s) {
+                    Ok((WireMsg::Hello, _)) => {
+                        let ack = WireMsg::HelloAck(HelloAck {
+                            chunk: SYNTH_CHUNK,
+                            domains: vec![domain.to_string()],
+                            digest: 7,
+                        });
+                        if s.write_all(&codec::frame_bytes(&ack)).is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Ok((WireMsg::Sync, _)) => {
+                        let reply = WireMsg::SyncState(StoreSync {
+                            chunk: SYNTH_CHUNK,
+                            digest: 7,
+                            domains: vec![state.clone()],
+                        });
+                        if s.write_all(&codec::frame_bytes(&reply))
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Ok((WireMsg::ExecShared(_), _)) => {
+                        let reply = WireMsg::Partials {
+                            parts: vec![Partials::identity(1, 4, 16)],
+                            exec_ns: 1,
+                        };
+                        let _ = s.write_all(&codec::frame_bytes(&reply));
+                        break; // drop the conn after one request
+                    }
+                    _ => break,
+                }
+            }
+        }
+    });
+    addr
+}
+
+fn flaky_shard(domain: &'static str) -> std::net::SocketAddr {
+    flaky_shard_with(domain, 0.1)
+}
+
+/// Two shards advertising the same domain with *different* planner
+/// state are a diverged deployment — refused at connect even when a
+/// pin would pick one of them.
+#[test]
+fn diverged_multi_resident_domain_refused() {
+    let a = flaky_shard_with("doma", 0.1);
+    let b = flaky_shard_with("doma", 0.2);
+    let specs =
+        parse_shard_specs(&format!("doma={a},{b}")).unwrap();
+    let err = ShardedFabric::connect(&specs, test_cfg()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("different planner state"), "{msg}");
+}
+
+/// One shard dropping its connection mid-run surfaces as retry +
+/// recovery inside that shard's fabric; the step as a whole succeeds.
+#[test]
+fn shard_drop_mid_run_retries_and_recovers() {
+    let a = flaky_shard("doma");
+    let b = flaky_shard("domb");
+    let specs = parse_shard_specs(&format!("{a},{b}")).unwrap();
+    let (mut fabric, store) =
+        ShardedFabric::connect(&specs, test_cfg()).unwrap();
+    assert_eq!(store.domains.len(), 2);
+
+    let q = Tensor::f32(&[1, 4, 16], vec![0.25; 64]);
+    let plan = |d: &str| SharedGroupPlan {
+        domain: d.to_string(),
+        rows: vec![0],
+        q_pos: vec![10],
+        sets: vec![vec![]],
+        calls: vec![],
+        pairs: 0,
+        reads: 0,
+    };
+    let (pa, pb) = (plan("doma"), plan("domb"));
+    for round in 0..3 {
+        fabric.submit(0, &[(&q, &pa), (&q, &pb)]).unwrap();
+        let replies = fabric.collect().unwrap_or_else(|e| {
+            panic!("round {round} failed: {e:#}")
+        });
+        assert_eq!(replies.len(), 2, "round {round}");
+    }
+    // rounds 2+ must have hit each shard's reconnect path
+    let retries: u64 = fabric
+        .shard_stats()
+        .iter()
+        .map(|(_, st)| st.retries.load(Ordering::Relaxed))
+        .sum();
+    assert!(retries >= 1, "no shard retried ({retries})");
+}
+
+/// A group for a domain no shard serves is refused at submit, before
+/// anything crosses the wire.
+#[test]
+fn unassigned_domain_refused_at_submit() {
+    let a = flaky_shard("doma");
+    let specs = parse_shard_specs(&a.to_string()).unwrap();
+    let (mut fabric, _store) =
+        ShardedFabric::connect(&specs, test_cfg()).unwrap();
+    let q = Tensor::f32(&[1, 4, 16], vec![0.25; 64]);
+    let plan = SharedGroupPlan {
+        domain: "nowhere".to_string(),
+        rows: vec![0],
+        q_pos: vec![10],
+        sets: vec![vec![]],
+        calls: vec![],
+        pairs: 0,
+        reads: 0,
+    };
+    let err = fabric.submit(0, &[(&q, &plan)]).unwrap_err();
+    assert!(format!("{err:#}").contains("no shard serves"), "{err:#}");
+}

@@ -2,10 +2,12 @@
 //! randomized plans/partials, and corrupted or truncated frames fail
 //! with a typed [`CodecError`] instead of panicking.
 
+use moska::kvcache::shared_store::DomainPlannerState;
 use moska::plan::{plan_gemm_calls, plan_unique_spans, SharedGroupPlan,
                   StepPlan, UniqueRowPlan};
 use moska::remote::codec::{frame_bytes, read_frame, CodecError,
-                           ExecSharedReq, WireMsg};
+                           ExecSharedReq, StoreSync, WireMsg,
+                           CODEC_VERSION};
 use moska::router::ChunkSet;
 use moska::runtime::native::Partials;
 use moska::tensor::Tensor;
@@ -88,8 +90,19 @@ fn rand_step_plan(rng: &mut Rng) -> StepPlan {
     }
 }
 
+fn rand_planner_state(rng: &mut Rng) -> DomainPlannerState {
+    let nc = 1 + rng.below(6) as usize;
+    let layers = 1 + rng.below(3) as usize;
+    DomainPlannerState {
+        name: format!("dom{}", rng.below(100)),
+        n_tokens: nc * 8,
+        chunk_bases: (0..nc).map(|c| (c * 8) as i32).collect(),
+        embs: (0..layers).map(|_| rand_tensor(rng, &[nc, 2, 8])).collect(),
+    }
+}
+
 fn rand_msg(rng: &mut Rng) -> WireMsg {
-    match rng.below(4) {
+    match rng.below(5) {
         0 => WireMsg::ExecShared(ExecSharedReq {
             layer: rng.below(8) as usize,
             q: rand_tensor(rng, &[1 + rng.below(4) as usize, 4, 8]),
@@ -109,6 +122,13 @@ fn rand_msg(rng: &mut Rng) -> WireMsg {
                 exec_ns: rng.next_u64(),
             }
         }
+        3 => WireMsg::SyncState(StoreSync {
+            chunk: 8,
+            digest: rng.next_u64(),
+            domains: (0..rng.below(4))
+                .map(|_| rand_planner_state(rng))
+                .collect(),
+        }),
         _ => WireMsg::Error(format!("error {}", rng.below(1000))),
     }
 }
@@ -221,7 +241,11 @@ fn foreign_version_fails_before_payload() {
         Config { cases: 32, ..Config::default() },
         |rng| {
             let case = gen_case(rng);
-            let v = 2 + rng.below(60_000) as usize;
+            // any version but the real one is foreign
+            let mut v = rng.below(60_000) as usize;
+            if v == CODEC_VERSION as usize {
+                v += 1;
+            }
             MutatedCase { case, at: v, bit: 0 }
         },
         |m| {
@@ -229,7 +253,7 @@ fn foreign_version_fails_before_payload() {
             bytes[4..6].copy_from_slice(&(m.at as u16).to_le_bytes());
             match read_frame(&mut std::io::Cursor::new(&bytes)) {
                 Err(CodecError::VersionMismatch { got, want }) => {
-                    if got as usize == m.at && want == 1 {
+                    if got as usize == m.at && want == CODEC_VERSION {
                         Ok(())
                     } else {
                         Err(format!("wrong fields: got {got} want {want}"))

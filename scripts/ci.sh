@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# CI gate: format, lint, tests, bench smoke — the same four checks every
-# PR must clear, runnable locally and on any runner with a rust
-# toolchain.
+# CI gate: doc-link check, format, lint, tests, bench smoke, and the
+# remote-node + 2-shard loopback smokes — the same checks every PR must
+# clear, runnable locally and on any runner with a rust toolchain.
 #
 #   scripts/ci.sh            # run everything, fail on any problem
 #   scripts/ci.sh --no-bench # skip the bench smoke (fast pre-push)
@@ -30,6 +30,20 @@ if ! command -v cargo >/dev/null 2>&1; then
 fi
 
 FAIL=0
+
+echo "== doc-link check =="
+# every docs/*.md path referenced from module docs / READMEs must exist
+# (paths are repo-root-relative; we're in $WORKDIR, so look one level up
+# when needed)
+DOC_REFS=$(grep -rhoE 'docs/[A-Za-z0-9_.-]+\.md' \
+               src ../README.md ../scripts README.md 2>/dev/null | sort -u)
+for ref in $DOC_REFS; do
+    if [ ! -f "../$ref" ] && [ ! -f "$ref" ]; then
+        echo "error: referenced doc $ref does not exist" >&2
+        FAIL=1
+    fi
+done
+echo "checked $(echo "$DOC_REFS" | grep -c .) referenced doc paths"
 
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
@@ -112,6 +126,63 @@ if [ "$RUN_BENCH" = "1" ]; then
         trap - EXIT
     else
         echo "error: release build for the remote smoke failed" >&2
+        FAIL=1
+    fi
+fi
+
+if [ "$RUN_BENCH" = "1" ]; then
+    echo "== 2-shard loopback smoke =="
+    # two `moska shared-node` processes each serving a PARTITIONED slice
+    # of the synthetic store (--domains), a sharded disagg run against
+    # them (planner state synced over the wire — the unique node holds
+    # no shared K/V), and an in-process run with the same domain mix:
+    # the token JSONs must be bit-identical
+    if cargo build --release --bin moska; then
+        BIN=target/release/moska
+        mkdir -p bench_out
+        "$BIN" shared-node --synthetic --domains bench \
+            --addr 127.0.0.1:0 > bench_out/shard_a.log 2>&1 &
+        SHARD_A_PID=$!
+        "$BIN" shared-node --synthetic --domains bench2 \
+            --addr 127.0.0.1:0 > bench_out/shard_b.log 2>&1 &
+        SHARD_B_PID=$!
+        trap 'kill "$SHARD_A_PID" "$SHARD_B_PID" 2>/dev/null' EXIT
+        ADDR_A=""
+        ADDR_B=""
+        for _ in $(seq 1 100); do
+            ADDR_A=$(sed -n 's/^shared-node listening on \([0-9.:]*\).*/\1/p' \
+                         bench_out/shard_a.log 2>/dev/null | head -1)
+            ADDR_B=$(sed -n 's/^shared-node listening on \([0-9.:]*\).*/\1/p' \
+                         bench_out/shard_b.log 2>/dev/null | head -1)
+            [ -n "$ADDR_A" ] && [ -n "$ADDR_B" ] && break
+            sleep 0.1
+        done
+        if [ -z "$ADDR_A" ] || [ -z "$ADDR_B" ]; then
+            echo "error: shard nodes never reported their addresses" >&2
+            cat bench_out/shard_a.log bench_out/shard_b.log >&2 || true
+            FAIL=1
+        elif "$BIN" disagg --synthetic --batches 2,4 --steps 4 --threads 1 \
+               --domains bench,bench2 --shards "$ADDR_A,$ADDR_B" \
+               --emit-tokens bench_out/sharded_tokens.json \
+           && "$BIN" disagg --synthetic --batches 2,4 --steps 4 --threads 1 \
+               --domains bench,bench2 \
+               --emit-tokens bench_out/local_mixed_tokens.json; then
+            if cmp -s bench_out/sharded_tokens.json \
+                      bench_out/local_mixed_tokens.json; then
+                echo "2-shard smoke: token streams bit-identical"
+            else
+                echo "error: sharded decode diverged from in-process run" >&2
+                FAIL=1
+            fi
+        else
+            echo "error: 2-shard smoke run failed" >&2
+            cat bench_out/shard_a.log bench_out/shard_b.log >&2 || true
+            FAIL=1
+        fi
+        kill "$SHARD_A_PID" "$SHARD_B_PID" 2>/dev/null
+        trap - EXIT
+    else
+        echo "error: release build for the 2-shard smoke failed" >&2
         FAIL=1
     fi
 fi
