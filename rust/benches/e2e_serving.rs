@@ -24,7 +24,7 @@ use moska::model::sampling::Sampler;
 use moska::model::Weights;
 use moska::remote::{spawn_shared_node, RemoteFabric, TransportCfg};
 use moska::runtime::artifact::default_artifacts_dir;
-use moska::runtime::{Backend, NativeBackend};
+use moska::runtime::{kernels_for, Backend, KernelSpec, NativeBackend};
 use moska::util::bench::Table;
 use moska::util::json::Json;
 use moska::util::threadpool::ThreadPool;
@@ -52,15 +52,17 @@ fn bench_model() -> ModelConfig {
 const CHUNK: usize = 64;
 const SHARED_CHUNKS: usize = 16;
 
-fn native_engine(threads: usize) -> Engine {
+fn native_engine(threads: usize, kernel: KernelSpec) -> Engine {
     let cfg = ServingConfig {
         top_k: None,
         max_batch: 32,
         exec_threads: threads,
+        kernel,
         ..Default::default()
     };
     let model = bench_model();
-    let be = NativeBackend::with_threads(model.clone(), CHUNK, threads);
+    let be = NativeBackend::with_threads(model.clone(), CHUNK, threads)
+        .with_kernel_spec(kernel);
     let weights = Weights::synthetic(model, 0xBE11C);
     let mut eng = Engine::new(
         Box::new(be), weights, SharedStore::empty(CHUNK), cfg, 4096,
@@ -87,9 +89,10 @@ struct NativeRun {
     plan_build_mean_ns: f64,
 }
 
-/// Run the decode workload at a thread count.
-fn run_native(threads: usize, n_req: usize, steps: usize) -> NativeRun {
-    let mut eng = native_engine(threads);
+/// Run the decode workload at a thread count and kernel flavor.
+fn run_native(threads: usize, kernel: KernelSpec, n_req: usize,
+              steps: usize) -> NativeRun {
+    let mut eng = native_engine(threads, kernel);
     for i in 0..n_req {
         let p: Vec<i32> = (0..8)
             .map(|j| ((i * 37 + j * 11) % 512) as i32)
@@ -239,15 +242,41 @@ fn fabric_bench() -> Vec<(String, Json)> {
     out
 }
 
+/// Kernel-flavor A/B at the decode level: same workload on the seed
+/// `scalar` flavor vs the detected SIMD flavor (serial, so the delta is
+/// pure kernel arithmetic), asserting identical token streams — the
+/// engine-level acceptance surface of the SIMD layer.
+fn kernel_ab_bench() -> Vec<(&'static str, Json)> {
+    let (n, steps) = (8usize, 8usize);
+    let flavor = kernels_for(KernelSpec::Simd).name;
+    println!("== kernel flavor A/B (serial decode, simd = {flavor}) ==");
+    let scalar = run_native(1, KernelSpec::Scalar, n, steps);
+    let simd = run_native(1, KernelSpec::Simd, n, steps);
+    assert_eq!(scalar.streams, simd.streams,
+               "scalar and simd kernel flavors decoded different tokens");
+    let speedup = simd.tok_per_s / scalar.tok_per_s;
+    println!("kernel=scalar     : {:.1} tok/s", scalar.tok_per_s);
+    println!("kernel={flavor:<10}: {:.1} tok/s  ({speedup:.2}x)",
+             simd.tok_per_s);
+    println!("tokens            : bit-identical across kernel flavors");
+    vec![
+        ("kernel_simd_flavor", Json::str(flavor)),
+        ("kernel_scalar_tok_per_s", Json::num(scalar.tok_per_s)),
+        ("kernel_simd_tok_per_s", Json::num(simd.tok_per_s)),
+        ("kernel_speedup", Json::num(speedup)),
+        ("kernel_tokens_identical", Json::num(1.0)),
+    ]
+}
+
 fn native_bench() {
     let (n, steps) = (16usize, 16usize);
     let auto = ThreadPool::resolve_threads(0);
     println!("== native parallel decode (synthetic {}-layer model, \
               {} shared chunks) ==",
              bench_model().n_layers, SHARED_CHUNKS);
-    let base = run_native(1, n, steps);
+    let base = run_native(1, KernelSpec::Auto, n, steps);
     println!("threads=1        : {:.1} tok/s", base.tok_per_s);
-    let par = run_native(auto, n, steps);
+    let par = run_native(auto, KernelSpec::Auto, n, steps);
     println!("threads={auto:<8} : {:.1} tok/s  ({:.2}x, gemm N {:.2})",
              par.tok_per_s, par.tok_per_s / base.tok_per_s, par.gemm_n);
     assert_eq!(base.streams, par.streams,
@@ -257,6 +286,10 @@ fn native_bench() {
              par.plan_build_mean_ns / 1e3);
     println!("arena high-water  : {} bytes ({} fresh allocs total)",
              par.arena_high_water, par.arena_fresh_allocs);
+
+    // kernel flavor A/B (scalar vs detected SIMD): flavor + speedup
+    // ride along in the trajectory JSON
+    let kernel_entries = kernel_ab_bench();
 
     // fabric loopback section (remote + 2-shard): wire counters ride
     // along in the same perf-trajectory JSON, next to the arena
@@ -281,6 +314,7 @@ fn native_bench() {
         ("plan_build_mean_ns", Json::num(par.plan_build_mean_ns)),
     ];
     let mut entries: Vec<(&str, Json)> = static_entries;
+    entries.extend(kernel_entries);
     entries.extend(
         fabric_entries.iter().map(|(k, v)| (k.as_str(), v.clone())),
     );

@@ -1,0 +1,151 @@
+//! Kernel microbench: the SIMD microkernel flavors head to head at
+//! decode-representative shapes (the `e2e_serving` bench model: d=256,
+//! 8 query heads × dh 32, 4 KV heads, FFN 768, 64-token chunks).
+//!
+//! For each hot kernel (matmul deep/shallow, shared-GEMM chunk
+//! attention, unique-GEMV chunk attention, router scoring) this times
+//! the seed `scalar` flavor, the portable `lanes8` flavor, and the best
+//! runtime-detected SIMD flavor, asserts `lanes8` and the detected
+//! flavor agree bit-for-bit, and emits `bench_out/BENCH_kernels.json`
+//! with per-kernel speedups plus the geomean — the perf-gate artifact
+//! for the SIMD layer (target: ≥ 2x geomean over `scalar`).
+
+use std::time::Duration;
+
+use moska::runtime::native;
+use moska::runtime::{kernels_for, KernelSpec, Kernels};
+use moska::tensor::Tensor;
+use moska::util::bench::{bench, Stats, Table};
+use moska::util::json::Json;
+use moska::util::rng::Rng;
+
+fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let mut d = vec![0f32; shape.iter().product()];
+    rng.fill_normal_f32(&mut d);
+    Tensor::f32(shape, d)
+}
+
+/// One benched kernel: a name plus a runner returning a checksum tensor
+/// so flavor outputs can be bit-compared.
+struct Case {
+    name: &'static str,
+    run: Box<dyn Fn(&'static Kernels) -> Tensor>,
+}
+
+fn cases() -> Vec<Case> {
+    let mut rng = Rng::new(0xBE7C);
+    let mut out: Vec<Case> = Vec::new();
+
+    // matmul, deep batch (decode qkv/ffn shapes)
+    for (name, b, d, n) in [
+        ("matmul_qkv_b16_256x256", 16usize, 256usize, 256usize),
+        ("matmul_ffn_b16_256x768", 16, 256, 768),
+        ("matmul_lm_b4_256x512", 4, 256, 512),
+    ] {
+        let x = rand_t(&mut rng, &[b, d]);
+        let w = rand_t(&mut rng, &[d, n]);
+        out.push(Case {
+            name,
+            run: Box::new(move |kern| {
+                native::matmul_exec_kern(&x, &w, None, kern)
+            }),
+        });
+    }
+
+    // shared-side GEMM: batched queries over a coalesced 4-chunk run
+    let (h, hkv, dh) = (8usize, 4usize, 32usize);
+    for (name, b, c) in [
+        ("chunk_attn_gemm_b16_c256", 16usize, 256usize),
+        ("chunk_attn_gemv_b1_c64", 1, 64),
+    ] {
+        let q = rand_t(&mut rng, &[b, h, dh]);
+        let k = rand_t(&mut rng, &[c, hkv, dh]);
+        let v = rand_t(&mut rng, &[c, hkv, dh]);
+        let q_pos = vec![10_000i32; b];
+        out.push(Case {
+            name,
+            run: Box::new(move |kern| {
+                let p = native::chunk_attn_exec_kern(
+                    &q, &k, &v, &q_pos, 0, c as i32, None, kern,
+                );
+                p.o
+            }),
+        });
+    }
+
+    // router scoring: every live row against a domain's chunk set
+    let q = rand_t(&mut rng, &[16, h, dh]);
+    let embs = rand_t(&mut rng, &[64, hkv, dh]);
+    out.push(Case {
+        name: "router_b16_c64",
+        run: Box::new(move |kern| {
+            native::router_score_exec_kern(&q, &embs, None, kern)
+        }),
+    });
+    out
+}
+
+fn main() {
+    let scalar = kernels_for(KernelSpec::Scalar);
+    let lanes8 = kernels_for(KernelSpec::Lanes8);
+    let simd = kernels_for(KernelSpec::Simd);
+    println!("== kernel flavors: scalar (seed) vs lanes8 vs {} \
+              (detected) ==",
+             simd.name);
+
+    let budget = Duration::from_millis(60);
+    let mut table = Table::new(&[
+        "kernel", "scalar_us", "lanes8_us", "simd_us", "simd_speedup",
+    ]);
+    let mut entries: Vec<Json> = Vec::new();
+    let mut log_sum = 0f64;
+    let mut n_cases = 0usize;
+    for case in cases() {
+        // flavor bit-identity sanity on the benched shapes: the
+        // detected flavor must match the portable 8-lane oracle
+        assert_eq!((case.run)(lanes8), (case.run)(simd),
+                   "{}: {} diverged from lanes8", case.name, simd.name);
+
+        let time = |kern: &'static Kernels| -> Stats {
+            bench(&format!("{:<26} [{}]", case.name, kern.name), budget,
+                  || {
+                      std::hint::black_box((case.run)(kern));
+                  })
+        };
+        let s_scalar = time(scalar).mean_secs();
+        let s_lanes8 = time(lanes8).mean_secs();
+        let s_simd = time(simd).mean_secs();
+        let speedup = s_scalar / s_simd;
+        log_sum += speedup.ln();
+        n_cases += 1;
+        table.row(vec![
+            case.name.to_string(),
+            format!("{:.1}", s_scalar * 1e6),
+            format!("{:.1}", s_lanes8 * 1e6),
+            format!("{:.1}", s_simd * 1e6),
+            format!("{speedup:.2}x"),
+        ]);
+        entries.push(Json::obj(vec![
+            ("name", Json::str(case.name)),
+            ("scalar_ns", Json::num(s_scalar * 1e9)),
+            ("lanes8_ns", Json::num(s_lanes8 * 1e9)),
+            ("simd_ns", Json::num(s_simd * 1e9)),
+            ("simd_speedup", Json::num(speedup)),
+        ]));
+    }
+    let geomean = (log_sum / n_cases as f64).exp();
+    table.print(&format!("kernel flavors (simd = {})", simd.name));
+    println!("\ngeomean simd speedup over scalar: {geomean:.2}x");
+
+    std::fs::create_dir_all("bench_out").expect("bench_out dir");
+    let j = Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        ("simd_flavor", Json::str(simd.name)),
+        ("lanes8_matches_simd", Json::num(1.0)),
+        ("kernels", Json::arr(entries)),
+        ("geomean_simd_speedup", Json::num(geomean)),
+    ]);
+    let path = "bench_out/BENCH_kernels.json";
+    std::fs::write(path, j.to_string()).expect("write BENCH_kernels.json");
+    println!("[json] {path}");
+}

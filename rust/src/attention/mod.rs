@@ -17,6 +17,7 @@ use crate::plan::{exec_gemm_calls, exec_unique_spans, plan_gemm_calls,
 use crate::router::ChunkSet;
 use crate::runtime::arena::TensorArena;
 use crate::runtime::native::{self, Partials};
+use crate::runtime::simd::Kernels;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
@@ -48,18 +49,36 @@ pub fn merge_many(parts: &[Partials]) -> Partials {
 /// three tensors per merge; this one allocates nothing after creation).
 pub struct RowAccumulator {
     acc: Partials,
+    /// Kernel flavor for the merge/finalize tails — callers on a
+    /// backend hot path set it to `backend.kernels()` so one backend =
+    /// one flavor end to end; the default is the process-global flavor.
+    kern: &'static Kernels,
 }
 
 impl RowAccumulator {
     pub fn identity(b: usize, h: usize, dh: usize) -> RowAccumulator {
-        RowAccumulator { acc: Partials::identity(b, h, dh) }
+        RowAccumulator {
+            acc: Partials::identity(b, h, dh),
+            kern: Kernels::global(),
+        }
     }
 
     /// Accumulator whose identity partials come from the step arena
     /// (decode plan-executor path) — same contents, recycled storage.
     pub fn from_arena(arena: &mut TensorArena, b: usize, h: usize,
                       dh: usize) -> RowAccumulator {
-        RowAccumulator { acc: arena.take_partials(b, h, dh) }
+        RowAccumulator {
+            acc: arena.take_partials(b, h, dh),
+            kern: Kernels::global(),
+        }
+    }
+
+    /// Run this accumulator's merge/finalize tails on an explicit
+    /// kernel flavor (builder style).
+    pub fn with_kernel(mut self, kern: &'static Kernels)
+                       -> RowAccumulator {
+        self.kern = kern;
+        self
     }
 
     /// Return the accumulator's storage to the arena.
@@ -71,14 +90,15 @@ impl RowAccumulator {
     pub fn finalize_with(&self, arena: &mut TensorArena) -> Tensor {
         let shape = self.acc.o.shape().to_vec();
         let mut out = arena.take_tensor(&shape);
-        native::finalize_into(&self.acc, out.as_f32_mut());
+        native::finalize_into_kern(self.kern, &self.acc, out.as_f32_mut());
         out
     }
 
     /// Merge batch partials back into their owning rows.
     pub fn scatter(&mut self, batch_rows: &[usize], p: &Partials) {
         for (i, &slot) in batch_rows.iter().enumerate() {
-            native::merge2_row_into(&mut self.acc, slot, p, i);
+            native::merge2_row_into_kern(self.kern, &mut self.acc, slot, p,
+                                         i);
         }
     }
 
@@ -89,13 +109,14 @@ impl RowAccumulator {
 
     /// Merge row 0 of a single-row partial into row `i`.
     pub fn merge_row(&mut self, i: usize, p: &Partials) {
-        native::merge2_row_into(&mut self.acc, i, p, 0);
+        native::merge2_row_into_kern(self.kern, &mut self.acc, i, p, 0);
     }
 
     /// Merge row `src_idx` of `p` into row `i`.
     pub fn merge_row_from(&mut self, i: usize, p: &Partials,
                           src_idx: usize) {
-        native::merge2_row_into(&mut self.acc, i, p, src_idx);
+        native::merge2_row_into_kern(self.kern, &mut self.acc, i, p,
+                                     src_idx);
     }
 
     /// Merge another accumulator's rows in (e.g. unique ∪ shared).
@@ -103,13 +124,17 @@ impl RowAccumulator {
         let b = self.acc.batch();
         assert_eq!(b, other.acc.batch());
         for i in 0..b {
-            native::merge2_row_into(&mut self.acc, i, &other.acc, i);
+            native::merge2_row_into_kern(self.kern, &mut self.acc, i,
+                                         &other.acc, i);
         }
     }
 
     /// Normalize all rows into the final `[B, H, dh]` attention output.
     pub fn finalize(&self) -> Tensor {
-        native::finalize(&self.acc)
+        let shape = self.acc.o.shape().to_vec();
+        let mut out = vec![0f32; shape.iter().product()];
+        native::finalize_into_kern(self.kern, &self.acc, &mut out);
+        Tensor::f32(&shape, out)
     }
 }
 

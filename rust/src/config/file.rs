@@ -7,7 +7,8 @@
 //! ```json
 //! {
 //!   "serving":  {"top_k": 16, "max_batch": 32, "slo_tokens_per_sec": 35,
-//!                "route_every_layer": false, "position_independent": false},
+//!                "route_every_layer": false, "position_independent": false,
+//!                "kernel": "auto", "pin_threads": false},
 //!   "backend":  "xla",
 //!   "artifacts": "artifacts",
 //!   "addr":     "127.0.0.1:8080",
@@ -99,6 +100,12 @@ fn serving_from_json(j: &Json) -> Result<ServingConfig> {
     }
     if let Some(v) = j.opt("exec_threads") {
         c.exec_threads = v.as_usize()?;
+    }
+    if let Some(v) = j.opt("kernel") {
+        c.kernel = crate::runtime::simd::KernelSpec::parse(v.as_str()?)?;
+    }
+    if let Some(v) = j.opt("pin_threads") {
+        c.pin_threads = v.as_bool()?;
     }
     if let Some(v) = j.opt("shards") {
         let pairs: Vec<String> = v
@@ -202,6 +209,20 @@ mod tests {
         assert_eq!(s.shards.n_shards, 2);
         let bad =
             Json::parse(r#"{"serving": {"shards": ["legal"]}}"#).unwrap();
+        assert!(FileConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn kernel_and_pinning_parse() {
+        let j = Json::parse(
+            r#"{"serving": {"kernel": "scalar", "pin_threads": true}}"#,
+        )
+        .unwrap();
+        let s = FileConfig::from_json(&j).unwrap().serving.unwrap();
+        assert_eq!(s.kernel, crate::runtime::simd::KernelSpec::Scalar);
+        assert!(s.pin_threads);
+        let bad =
+            Json::parse(r#"{"serving": {"kernel": "sse9"}}"#).unwrap();
         assert!(FileConfig::from_json(&bad).is_err());
     }
 

@@ -96,6 +96,17 @@ pub struct ServingConfig {
     /// or machine size), `1` = serial (bit-identical either way — see
     /// the determinism contract in `runtime::native`).
     pub exec_threads: usize,
+    /// Native kernel flavor (JSON `serving.kernel`, CLI `--kernel`,
+    /// `MOSKA_KERNEL` env): `auto`/`simd` = runtime-detected SIMD
+    /// microkernels, `scalar` = the seed kernels (bit-exact pre-SIMD
+    /// behavior), `lanes8` = the portable 8-lane flavor. See
+    /// [`runtime::simd`][crate::runtime::simd].
+    pub kernel: crate::runtime::simd::KernelSpec,
+    /// Pin execution-pool workers to cores (`sched_setaffinity`;
+    /// Linux-only, no-op elsewhere). JSON `serving.pin_threads` or
+    /// `MOSKA_PIN=1` — each disagg node's pool then maps onto a stable,
+    /// disjoint core set (first step of the ROADMAP NUMA item).
+    pub pin_threads: bool,
     /// Static domain → shard assignment of a domain-sharded shared
     /// store (JSON: `serving.shards` as `["legal=0", "code=1"]`; empty
     /// = unsharded). The planner orders each step's shared-GEMM groups
@@ -115,6 +126,8 @@ impl Default for ServingConfig {
             route_every_layer: false,
             position_independent: false,
             exec_threads: 0,
+            kernel: crate::runtime::simd::KernelSpec::Auto,
+            pin_threads: false,
             shards: crate::plan::ShardAssignment::default(),
         }
     }

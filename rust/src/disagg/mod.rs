@@ -152,7 +152,8 @@ pub fn execute_shared_plan(backend: &dyn Backend, store: &SharedStore,
     let cfg = backend.model();
     let b = q.shape()[0];
     let mut acc =
-        RowAccumulator::from_arena(arena, b, cfg.n_heads, cfg.head_dim);
+        RowAccumulator::from_arena(arena, b, cfg.n_heads, cfg.head_dim)
+            .with_kernel(backend.kernels());
     exec_gemm_calls(backend, dom, layer, q, &plan.q_pos, &plan.calls,
                     &mut acc, Some(arena))?;
     // per-row partials cross the fabric back (copy boundary)
@@ -607,7 +608,8 @@ impl DisaggCluster {
             // ---- unique node: per-request GEMV attention from its spans
             let mut acc = RowAccumulator::from_arena(
                 &mut self.arena, b, cfg.n_heads, cfg.head_dim,
-            );
+            )
+            .with_kernel(self.backend.kernels());
             for (i, r) in reqs.iter().enumerate() {
                 let qr = gather_rows(&mut self.arena, &q, &[i],
                                      cfg.n_heads, cfg.head_dim);
@@ -849,9 +851,15 @@ pub fn synthetic_weights() -> Weights {
 /// digest.
 pub fn synthetic_store() -> Result<SharedStore> {
     let model = ModelConfig::tiny();
+    // the store is prefilled on the pinned *scalar* kernel flavor no
+    // matter what MOSKA_KERNEL / serving.kernel says: every process of
+    // a remote deployment must rebuild identical bits (the digest
+    // handshake refuses otherwise), even when the nodes themselves
+    // decode on different flavors
     let be = crate::runtime::NativeBackend::with_threads(
         model.clone(), SYNTH_CHUNK, 1,
-    );
+    )
+    .with_kernel_spec(crate::runtime::KernelSpec::Scalar);
     let mut eng = crate::engine::Engine::new(
         Box::new(be),
         synthetic_weights(),
@@ -897,6 +905,14 @@ pub fn run_sim(args: &Args) -> Result<()> {
     let backend_name = args.str("backend")?;
     // native exec threads PER NODE: 0 = auto, 1 = serial
     let threads = args.usize("threads")?;
+    // kernel flavor for BOTH nodes' backends; also pins the
+    // process-global flavor so free-function tails agree
+    let kernel = crate::runtime::KernelSpec::parse(
+        args.get("kernel").unwrap_or("auto"),
+    )?;
+    if kernel != crate::runtime::KernelSpec::Auto {
+        crate::runtime::simd::set_global_spec(kernel)?;
+    }
     let remote = args.get("remote").unwrap_or("").to_string();
     let shards_arg = args.get("shards").unwrap_or("").to_string();
     let synthetic = args.flag("synthetic");
@@ -975,19 +991,33 @@ pub fn run_sim(args: &Args) -> Result<()> {
         match backend_name.as_str() {
             "native" => {
                 let n = ThreadPool::resolve_threads(threads);
-                let mk = || -> Arc<dyn Backend> {
-                    if n <= 1 {
-                        Arc::new(crate::runtime::NativeBackend::with_threads(
+                let pin = ThreadPool::resolve_pin(false);
+                // successive nodes get disjoint core bases when pinned,
+                // so the shared/unique split maps onto stable core sets
+                // (MOSKA_PIN_BASE offsets the whole process for
+                // co-located deployments)
+                let mut next_base = ThreadPool::resolve_pin_base();
+                let mut mk = || -> Arc<dyn Backend> {
+                    let be = if n <= 1 {
+                        crate::runtime::NativeBackend::with_threads(
                             model.clone(), chunk, 1,
-                        ))
+                        )
                     } else {
-                        Arc::new(crate::runtime::NativeBackend::with_pool(
-                            model.clone(), chunk,
-                            Arc::new(ThreadPool::new(n)),
-                        ))
-                    }
+                        let pool = if pin {
+                            let base = next_base;
+                            next_base += n;
+                            ThreadPool::new_pinned(n, base)
+                        } else {
+                            ThreadPool::new(n)
+                        };
+                        crate::runtime::NativeBackend::with_pool(
+                            model.clone(), chunk, Arc::new(pool),
+                        )
+                    };
+                    Arc::new(be.with_kernel_spec(kernel))
                 };
-                (mk(), local_shared.then(mk))
+                let unique = mk();
+                (unique, local_shared.then(|| mk()))
             }
             "xla" => {
                 let dir =

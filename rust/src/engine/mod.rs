@@ -379,7 +379,8 @@ impl Engine {
             // executor recycles — no plain allocation left on this path
             let mut acc = RowAccumulator::from_arena(
                 &mut self.arena, b, model.n_heads, model.head_dim,
-            );
+            )
+            .with_kernel(self.backend.kernels());
             // shared context
             if let Some(d) = &req.domain {
                 let dom = self.shared.domains.get(d).context("domain")?;
@@ -409,7 +410,8 @@ impl Engine {
             )?;
             let mut uacc = RowAccumulator::from_arena(
                 &mut self.arena, b, model.n_heads, model.head_dim,
-            );
+            )
+            .with_kernel(self.backend.kernels());
             for i in 0..b {
                 uacc.merge_row_from(i, &uniq, i);
             }
@@ -693,8 +695,19 @@ pub fn build_engine_from_args(args: &Args)
         Some(_) => args.usize("threads")?,
         None => 0,
     };
-    let cfg =
-        ServingConfig { top_k, max_batch, exec_threads, ..Default::default() };
+    // kernel flavor: commands that declare --kernel default it to
+    // "auto"; pin the process-global flavor too so free-function tails
+    // (and anything else built later in this process) agree with the
+    // engine's backend
+    let kernel = crate::runtime::simd::KernelSpec::parse(
+        args.get("kernel").unwrap_or("auto"),
+    )?;
+    if kernel != crate::runtime::simd::KernelSpec::Auto {
+        crate::runtime::simd::set_global_spec(kernel)?;
+    }
+    let cfg = ServingConfig {
+        top_k, max_batch, exec_threads, kernel, ..Default::default()
+    };
     build_engine(&dir, args.get("backend").unwrap_or("xla"), cfg)
 }
 
@@ -710,9 +723,24 @@ pub fn build_engine(artifacts_dir: &str, backend: &str, cfg: ServingConfig)
     let pool_pages = 4096;
     match backend {
         "native" => {
-            let be = Box::new(crate::runtime::NativeBackend::with_threads(
-                man.model.clone(), man.chunk, cfg.exec_threads,
-            ));
+            use crate::util::threadpool::ThreadPool;
+            let n = ThreadPool::resolve_threads(cfg.exec_threads);
+            let pin = ThreadPool::resolve_pin(cfg.pin_threads);
+            let be = if n <= 1 {
+                crate::runtime::NativeBackend::with_threads(
+                    man.model.clone(), man.chunk, 1,
+                )
+            } else {
+                let pool = if pin {
+                    ThreadPool::new_pinned(n, ThreadPool::resolve_pin_base())
+                } else {
+                    ThreadPool::new(n)
+                };
+                crate::runtime::NativeBackend::with_pool(
+                    man.model.clone(), man.chunk, std::sync::Arc::new(pool),
+                )
+            };
+            let be = Box::new(be.with_kernel_spec(cfg.kernel));
             Ok((Engine::new(be, weights, shared, cfg, pool_pages), None))
         }
         "xla" => {

@@ -59,7 +59,8 @@ impl Engine {
                 )?;
                 let mut acc = RowAccumulator::from_arena(
                     &mut self.arena, e - s, model.n_heads, model.head_dim,
-                );
+                )
+                .with_kernel(self.backend.kernels());
                 for i in 0..e - s {
                     acc.merge_row_from(i, &part, i);
                 }

@@ -69,6 +69,8 @@ fn cmd_serve(argv: &[String]) -> moska::Result<()> {
         .opt("top-k", "0", "router top-k (0 = dense/exact)")
         .opt("backend", "xla", "xla | native")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
+        .opt("kernel", "auto",
+             "kernel flavor: auto | simd | scalar | lanes8 (MOSKA_KERNEL)")
         .opt("max-batch", "32", "max decode batch")
         .opt("config", "", "JSON config file (flags override it)")
         .parse_from(argv)?;
@@ -84,6 +86,8 @@ fn cmd_demo(argv: &[String]) -> moska::Result<()> {
         .opt("top-k", "0", "router top-k (0 = dense/exact)")
         .opt("backend", "xla", "xla | native")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
+        .opt("kernel", "auto",
+             "kernel flavor: auto | simd | scalar | lanes8 (MOSKA_KERNEL)")
         .parse_from(argv)?;
     moska::engine::run_demo(&args)
 }
@@ -102,6 +106,8 @@ fn cmd_disagg(argv: &[String]) -> moska::Result<()> {
         .opt("steps", "8", "decode steps per batch point")
         .opt("backend", "native", "xla | native")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
+        .opt("kernel", "auto",
+             "kernel flavor: auto | simd | scalar | lanes8 (MOSKA_KERNEL)")
         .opt("remote", "",
              "shared-node address (empty = in-process shared node)")
         .opt("shards", "",
@@ -126,6 +132,8 @@ fn cmd_shared_node(argv: &[String]) -> moska::Result<()> {
         .opt("addr", "127.0.0.1:7070", "listen address")
         .opt("artifacts", "", "artifacts dir (default: auto-discover)")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
+        .opt("kernel", "auto",
+             "kernel flavor: auto | simd | scalar | lanes8 (MOSKA_KERNEL)")
         .opt("domains", "",
              "serve only these domains (comma list) — one shard of a \
               domain-sharded deployment")
@@ -143,6 +151,8 @@ fn cmd_replay(argv: &[String]) -> moska::Result<()> {
         .opt("top-k", "16", "router top-k (0 = dense)")
         .opt("backend", "xla", "xla | native")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
+        .opt("kernel", "auto",
+             "kernel flavor: auto | simd | scalar | lanes8 (MOSKA_KERNEL)")
         .opt("max-batch", "32", "max decode batch")
         .opt("trace", "", "replay a recorded trace file instead")
         .parse_from(argv)?;

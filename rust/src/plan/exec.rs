@@ -109,7 +109,8 @@ pub fn execute_plan(backend: &dyn Backend, plan: &StepPlan, x: Tensor,
         }
         phase("phase_append_ns");
 
-        let mut acc = RowAccumulator::from_arena(&mut *ctx.arena, b, h, dh);
+        let mut acc = RowAccumulator::from_arena(&mut *ctx.arena, b, h, dh)
+            .with_kernel(backend.kernels());
 
         // ---- shared path: planned GEMM groups (re-routed live per layer
         // only when the plan says so)
@@ -118,7 +119,8 @@ pub fn execute_plan(backend: &dyn Backend, plan: &StepPlan, x: Tensor,
             let n = group.rows.len();
             let qs = gather_rows(&mut *ctx.arena, &q, &group.rows, h, dh);
             let mut sub =
-                RowAccumulator::from_arena(&mut *ctx.arena, n, h, dh);
+                RowAccumulator::from_arena(&mut *ctx.arena, n, h, dh)
+                    .with_kernel(backend.kernels());
             if plan.route_live && layer > 0 {
                 let sets =
                     ctx.router.route(backend, &qs, dom.embeddings(layer))?;
@@ -358,7 +360,8 @@ pub fn exec_unique_spans(backend: &dyn Backend, pool: &PagePool,
             p
         };
         for row in 0..b {
-            native::merge2_row_into(&mut acc, row, &part, row);
+            native::merge2_row_into_kern(backend.kernels(), &mut acc, row,
+                                         &part, row);
         }
         if let Some(a) = arena.as_deref_mut() {
             a.recycle_partials(part);

@@ -42,6 +42,17 @@ use crate::util::threadpool::ThreadPool;
 pub fn run_shared_node(args: &Args) -> Result<()> {
     let addr = args.str("addr")?;
     let threads = args.usize("threads")?;
+    // kernel flavor for this node's plan execution (`--kernel`, else
+    // MOSKA_KERNEL/auto). Pin the process-global flavor FIRST — the
+    // synthetic-store build below constructs a backend, which would
+    // otherwise resolve the global to the auto-detected flavor and make
+    // a later explicit pin fail as a conflict.
+    let kernel = crate::runtime::KernelSpec::parse(
+        args.get("kernel").unwrap_or("auto"),
+    )?;
+    if kernel != crate::runtime::KernelSpec::Auto {
+        crate::runtime::simd::set_global_spec(kernel)?;
+    }
     let (model, chunk, mut store) = if args.flag("synthetic") {
         let store = crate::disagg::synthetic_store()?;
         (crate::config::ModelConfig::tiny(), crate::disagg::SYNTH_CHUNK,
@@ -59,13 +70,21 @@ pub fn run_shared_node(args: &Args) -> Result<()> {
         store.retain_domains(&keep).context("partitioning store")?;
     }
     let n = ThreadPool::resolve_threads(threads);
-    let backend: Arc<dyn Backend> = if n <= 1 {
-        Arc::new(crate::runtime::NativeBackend::with_threads(model, chunk, 1))
+    let pin = ThreadPool::resolve_pin(false);
+    let backend = if n <= 1 {
+        crate::runtime::NativeBackend::with_threads(model, chunk, 1)
     } else {
-        Arc::new(crate::runtime::NativeBackend::with_pool(
-            model, chunk, Arc::new(ThreadPool::new(n)),
-        ))
+        let pool = if pin {
+            // co-located processes take disjoint sets via MOSKA_PIN_BASE
+            ThreadPool::new_pinned(n, ThreadPool::resolve_pin_base())
+        } else {
+            ThreadPool::new(n)
+        };
+        crate::runtime::NativeBackend::with_pool(model, chunk,
+                                                 Arc::new(pool))
     };
+    let backend: Arc<dyn Backend> =
+        Arc::new(backend.with_kernel_spec(kernel));
     serve_shared_node(addr.parse().context("bad --addr")?, backend,
                       Arc::new(store), None)
 }

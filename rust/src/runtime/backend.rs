@@ -20,6 +20,7 @@ use crate::plan::{PlanExecCtx, PlanExecOut, StepPlan};
 use crate::runtime::arena::TensorArena;
 use crate::runtime::client::RuntimeHandle;
 use crate::runtime::native::{self, Partials};
+use crate::runtime::simd::{kernels_for, KernelSpec, Kernels};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 
@@ -82,6 +83,16 @@ pub trait Backend: Send + Sync {
     /// serial or manages its own parallelism (PJRT).
     fn exec_pool(&self) -> Option<&Arc<ThreadPool>> {
         None
+    }
+
+    /// The kernel-flavor vtable this backend's native math runs on; the
+    /// plan executor also routes its LSE-merge/finalize tails through it
+    /// so one backend = one flavor end to end. Defaults to the
+    /// process-global flavor (`MOSKA_KERNEL`);
+    /// [`NativeBackend::with_kernel`] overrides it per backend for A/B
+    /// benching.
+    fn kernels(&self) -> &'static Kernels {
+        Kernels::global()
     }
 
     /// Dispatch-aware chunk attention whose output partials are staged in
@@ -373,6 +384,9 @@ pub struct NativeBackend {
     chunk: usize,
     pool: Option<Arc<ThreadPool>>,
     rope_freqs: Vec<f64>,
+    /// Kernel-flavor vtable (see [`crate::runtime::simd`]); defaults to
+    /// the process-global flavor.
+    kern: &'static Kernels,
 }
 
 impl NativeBackend {
@@ -382,17 +396,26 @@ impl NativeBackend {
     }
 
     /// Explicit thread count; `0` = auto, `1` = serial (no pool).
+    /// Workers are core-pinned when `MOSKA_PIN=1`
+    /// ([`ThreadPool::resolve_pin`]).
     pub fn with_threads(model: ModelConfig, chunk: usize, threads: usize)
                         -> NativeBackend {
         let n = ThreadPool::resolve_threads(threads);
         let pool = if n <= 1 {
             None
+        } else if ThreadPool::resolve_pin(false) {
+            Some(Arc::new(ThreadPool::new_pinned(
+                n,
+                ThreadPool::resolve_pin_base(),
+            )))
         } else {
             Some(Arc::new(ThreadPool::new(n)))
         };
         let rope_freqs =
             native::rope_inv_freq(model.head_dim, model.rope_theta);
-        NativeBackend { model, chunk, pool, rope_freqs }
+        NativeBackend {
+            model, chunk, pool, rope_freqs, kern: Kernels::global(),
+        }
     }
 
     /// Share an existing pool (e.g. one pool across disagg node twins).
@@ -401,7 +424,22 @@ impl NativeBackend {
         let rope_freqs =
             native::rope_inv_freq(model.head_dim, model.rope_theta);
         let pool = if pool.threads() <= 1 { None } else { Some(pool) };
-        NativeBackend { model, chunk, pool, rope_freqs }
+        NativeBackend {
+            model, chunk, pool, rope_freqs, kern: Kernels::global(),
+        }
+    }
+
+    /// Run this backend's math on an explicit kernel flavor (A/B
+    /// benching, flavor property tests); the default is the
+    /// process-global flavor.
+    pub fn with_kernel(mut self, kern: &'static Kernels) -> NativeBackend {
+        self.kern = kern;
+        self
+    }
+
+    /// [`NativeBackend::with_kernel`] from a [`KernelSpec`].
+    pub fn with_kernel_spec(self, spec: KernelSpec) -> NativeBackend {
+        self.with_kernel(kernels_for(spec))
     }
 
     pub fn tiny() -> NativeBackend {
@@ -445,30 +483,31 @@ impl Backend for NativeBackend {
     fn qkv(&self, x: &Tensor, attn_norm: &Tensor, wq: &Tensor, wk: &Tensor,
            wv: &Tensor, pos: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
         Ok(native::qkv_exec(&self.model, x, attn_norm, wq, wk, wv, pos,
-                            Some(&self.rope_freqs), self.exec()))
+                            Some(&self.rope_freqs), self.exec(),
+                            self.kern))
     }
 
     fn chunk_attn(&self, q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
                   k_base: i32, valid: i32) -> Result<Partials> {
-        Ok(native::chunk_attn_exec(q, k, v, q_pos, k_base, valid,
-                                   self.exec()))
+        Ok(native::chunk_attn_exec_kern(q, k, v, q_pos, k_base, valid,
+                                        self.exec(), self.kern))
     }
 
     fn post(&self, attn_o: &Tensor, x: &Tensor, wo: &Tensor,
             ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor)
             -> Result<Tensor> {
         Ok(native::post_exec(&self.model, attn_o, x, wo, ffn_norm, w1, w3,
-                             w2, self.exec()))
+                             w2, self.exec(), self.kern))
     }
 
     fn lm_head(&self, x: &Tensor, final_norm: &Tensor, w_lm: &Tensor)
                -> Result<Tensor> {
         Ok(native::lm_head_exec(&self.model, x, final_norm, w_lm,
-                                self.exec()))
+                                self.exec(), self.kern))
     }
 
     fn router(&self, q: &Tensor, embs: &Tensor) -> Result<Tensor> {
-        Ok(native::router_score_exec(q, embs, self.exec()))
+        Ok(native::router_score_exec_kern(q, embs, self.exec(), self.kern))
     }
 
     fn merge2(&self, a: &Partials, b: &Partials) -> Result<Partials> {
@@ -479,13 +518,18 @@ impl Backend for NativeBackend {
         self.pool.as_ref()
     }
 
+    fn kernels(&self) -> &'static Kernels {
+        self.kern
+    }
+
     fn chunk_attn_arena(&self, q: &Tensor, k: &Tensor, v: &Tensor,
                         q_pos: &[i32], k_base: i32, valid: i32,
                         arena: &mut TensorArena) -> Result<Partials> {
         let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
         let mut out = arena.take_partials(b, h, dh);
-        native::chunk_attn_exec_into(q, k, v, q_pos, k_base, valid,
-                                     self.exec(), &mut out);
+        native::chunk_attn_exec_into_kern(q, k, v, q_pos, k_base, valid,
+                                          self.exec(), self.kern,
+                                          &mut out);
         Ok(out)
     }
 

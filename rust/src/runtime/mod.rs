@@ -13,6 +13,10 @@
 //! * [`backend`] — the [`Backend`] trait (model ops at any live batch size,
 //!   bucket-padded internally) with [`XlaBackend`] and [`NativeBackend`].
 //! * [`native`] — pure-rust op implementations (fallback + test oracle).
+//! * [`simd`] — the vectorized microkernel layer behind them: the
+//!   [`Kernels`] vtable with runtime-dispatched AVX2 / NEON /
+//!   portable-8-lane flavors plus the seed scalar flavor
+//!   (`MOSKA_KERNEL=scalar|simd|lanes8`, `serving.kernel` config).
 
 pub mod arena;
 pub mod artifact;
@@ -20,8 +24,10 @@ pub mod backend;
 pub mod client;
 pub mod literal;
 pub mod native;
+pub mod simd;
 
 pub use arena::{ArenaStats, TensorArena};
 pub use artifact::{ArtifactMeta, Manifest};
 pub use backend::{Backend, NativeBackend, XlaBackend};
 pub use client::{RuntimeHandle, RuntimeService, XlaRuntime};
+pub use simd::{kernels_for, KernelSpec, Kernels};

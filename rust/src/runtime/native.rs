@@ -30,13 +30,29 @@
 //! as the serial loop — there are no cross-thread reductions — so the
 //! parallel result is bit-identical to the scalar reference for every
 //! shape and thread count (asserted by `parallel_kernels_bit_identical`).
-//! Per-worker scratch (attention score rows) lives in thread-local
-//! buffers, so the steady-state decode step allocates near-zero beyond
-//! the output tensors themselves.
+//! Per-worker scratch (attention score rows, the shallow-matmul column
+//! blocks) lives in thread-local buffers, so the steady-state decode
+//! step allocates near-zero beyond the output tensors themselves.
+//!
+//! ## SIMD microkernel layer
+//!
+//! The primitive inner ops of every hot loop — matmul column updates,
+//! the per-row chunk-attention body (QK^T, online softmax, V
+//! accumulation), router score cells, and the LSE-merge/finalize tails —
+//! dispatch through a [`Kernels`] vtable
+//! ([`runtime::simd`][crate::runtime::simd]): runtime-detected AVX2 /
+//! NEON / portable-8-lane flavors, plus the seed `scalar` flavor which
+//! preserves the pre-SIMD arithmetic bit-for-bit. Tiling, work
+//! splitting, and the parallel contract above are flavor-independent
+//! and live here; only the per-stripe arithmetic is dispatched. The
+//! `*_exec` twins take the vtable explicitly (backends pass their own);
+//! the plain wrappers use the process-global [`Kernels::global`]
+//! flavor (`MOSKA_KERNEL` env).
 
 use std::cell::RefCell;
 
 use crate::config::ModelConfig;
+use crate::runtime::simd::{AttnRowArgs, Kernels};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 
@@ -59,6 +75,11 @@ const MM_K_TILE: usize = 64;
 thread_local! {
     /// Per-worker attention score scratch, reused across kernel calls.
     static ATTN_SCORES: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Caller-side column-block staging for the shallow-batch matmul
+    /// path (one flat `[b, n]` slab split into disjoint per-tile
+    /// chunks), reused across calls so the steady-state decode step
+    /// allocates nothing here either.
+    static MM_COL_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Attention partials (unnormalized): o `[B,H,dh]`, m `[B,H]`, l `[B,H]`.
@@ -92,10 +113,11 @@ pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
 }
 
 /// Dense cache-tiled microkernel: rows `[r0, r0+rows)` of `x @ w` into
-/// `orows` (row-local indexing). `k` ascends per output element, so any
-/// row partitioning reproduces the serial result bit-for-bit.
-fn mm_rows(xs: &[f32], ws: &[f32], orows: &mut [f32], r0: usize, d: usize,
-           n: usize) {
+/// `orows` (row-local indexing). `k` ascends per output element (the
+/// column update itself runs on the flavor's [`Kernels::fma_row`]), so
+/// any row partitioning reproduces the serial result bit-for-bit.
+fn mm_rows(kern: &Kernels, xs: &[f32], ws: &[f32], orows: &mut [f32],
+           r0: usize, d: usize, n: usize) {
     let rows = orows.len() / n;
     let mut k0 = 0;
     while k0 < d {
@@ -106,9 +128,7 @@ fn mm_rows(xs: &[f32], ws: &[f32], orows: &mut [f32], r0: usize, d: usize,
             for kk in k0..k1 {
                 let xv = xrow[kk];
                 let wrow = &ws[kk * n..(kk + 1) * n];
-                for (o, &wv) in orow.iter_mut().zip(wrow) {
-                    *o += xv * wv;
-                }
+                kern.fma_row(orow, wrow, xv);
             }
         }
         k0 = k1;
@@ -117,28 +137,33 @@ fn mm_rows(xs: &[f32], ws: &[f32], orows: &mut [f32], r0: usize, d: usize,
 
 /// Column-block microkernel for shallow batches: columns `[c0, c0+width)`
 /// of every row into `oblock` (`[b, width]`, block-local indexing).
-fn mm_cols(xs: &[f32], ws: &[f32], oblock: &mut [f32], b: usize, d: usize,
-           n: usize, c0: usize) {
+fn mm_cols(kern: &Kernels, xs: &[f32], ws: &[f32], oblock: &mut [f32],
+           b: usize, d: usize, n: usize, c0: usize) {
     let width = oblock.len() / b;
     for i in 0..b {
         let xrow = &xs[i * d..(i + 1) * d];
         let orow = &mut oblock[i * width..(i + 1) * width];
         for (kk, &xv) in xrow.iter().enumerate() {
             let wrow = &ws[kk * n + c0..kk * n + c0 + width];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
+            kern.fma_row(orow, wrow, xv);
         }
     }
+}
+
+/// [`matmul_exec`] with the process-global kernel flavor.
+pub fn matmul_exec(x: &Tensor, w: &Tensor, pool: Option<&ThreadPool>)
+                   -> Tensor {
+    matmul_exec_kern(x, w, pool, Kernels::global())
 }
 
 /// `x[B,d] @ w[d,n] → [B,n]`, fanned out over the pool when one is given
 /// and the call is big enough to amortize dispatch. Deep batches split
 /// into row blocks (zero-copy scatter via `chunks_mut`); shallow ones
-/// split into column blocks assembled after the join. Both keep the
-/// serial per-element reduction order → bit-identical output.
-pub fn matmul_exec(x: &Tensor, w: &Tensor, pool: Option<&ThreadPool>)
-                   -> Tensor {
+/// split into column blocks staged in a thread-local slab (no per-call
+/// allocation) and assembled after the join. Both keep the serial
+/// per-element reduction order → bit-identical output per flavor.
+pub fn matmul_exec_kern(x: &Tensor, w: &Tensor, pool: Option<&ThreadPool>,
+                        kern: &Kernels) -> Tensor {
     let (b, d) = (x.shape()[0], x.shape()[1]);
     let (wd, n) = (w.shape()[0], w.shape()[1]);
     assert_eq!(d, wd, "matmul inner dim: {d} vs {wd}");
@@ -158,39 +183,43 @@ pub fn matmul_exec(x: &Tensor, w: &Tensor, pool: Option<&ThreadPool>)
                 Vec::with_capacity(b.div_ceil(span));
             for (ti, orows) in out.chunks_mut(span * n).enumerate() {
                 jobs.push(Box::new(move || {
-                    mm_rows(xs, ws, orows, ti * span, d, n);
+                    mm_rows(kern, xs, ws, orows, ti * span, d, n);
                 }));
             }
             p.scoped_run(jobs);
         }
         Some(p) => {
-            // shallow batch: column blocks into per-tile buffers
+            // shallow batch: column blocks carved out of one recycled
+            // thread-local slab (workers write disjoint chunks; only
+            // this caller thread touches the RefCell)
             let pieces = (p.threads() * TILES_PER_WORKER).min(n);
             let span = n.div_ceil(pieces);
-            let nblocks = n.div_ceil(span);
-            let mut blocks: Vec<Vec<f32>> = (0..nblocks)
-                .map(|ti| {
-                    let width = span.min(n - ti * span);
-                    vec![0f32; b * width]
-                })
-                .collect();
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                Vec::with_capacity(nblocks);
-            for (ti, oblock) in blocks.iter_mut().enumerate() {
-                jobs.push(Box::new(move || {
-                    mm_cols(xs, ws, oblock, b, d, n, ti * span);
-                }));
-            }
-            p.scoped_run(jobs);
-            for (ti, oblock) in blocks.iter().enumerate() {
-                let (c0, width) = (ti * span, oblock.len() / b);
-                for i in 0..b {
-                    out[i * n + c0..i * n + c0 + width]
-                        .copy_from_slice(&oblock[i * width..(i + 1) * width]);
+            MM_COL_SCRATCH.with(|cell| {
+                let mut scratch = cell.borrow_mut();
+                scratch.clear();
+                scratch.resize(b * n, 0.0);
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(n.div_ceil(span));
+                for (ti, oblock) in
+                    scratch.chunks_mut(b * span).enumerate()
+                {
+                    jobs.push(Box::new(move || {
+                        mm_cols(kern, xs, ws, oblock, b, d, n, ti * span);
+                    }));
                 }
-            }
+                p.scoped_run(jobs);
+                for (ti, oblock) in scratch.chunks(b * span).enumerate() {
+                    let (c0, width) = (ti * span, oblock.len() / b);
+                    for i in 0..b {
+                        out[i * n + c0..i * n + c0 + width]
+                            .copy_from_slice(
+                                &oblock[i * width..(i + 1) * width],
+                            );
+                    }
+                }
+            });
         }
-        None => mm_rows(xs, ws, &mut out, 0, d, n),
+        None => mm_rows(kern, xs, ws, &mut out, 0, d, n),
     }
     Tensor::f32(&[b, n], out)
 }
@@ -272,22 +301,24 @@ pub fn embed(tokens: &Tensor, emb: &Tensor) -> Tensor {
 pub fn qkv(cfg: &ModelConfig, x: &Tensor, attn_norm: &Tensor, wq: &Tensor,
            wk: &Tensor, wv: &Tensor, pos: &[i32])
            -> (Tensor, Tensor, Tensor) {
-    qkv_exec(cfg, x, attn_norm, wq, wk, wv, pos, None, None)
+    qkv_exec(cfg, x, attn_norm, wq, wk, wv, pos, None, None,
+             Kernels::global())
 }
 
-/// [`qkv`] with an optional execution pool and precomputed RoPE table.
+/// [`qkv`] with an optional execution pool, precomputed RoPE table, and
+/// kernel flavor.
 #[allow(clippy::too_many_arguments)]
 pub fn qkv_exec(cfg: &ModelConfig, x: &Tensor, attn_norm: &Tensor,
                 wq: &Tensor, wk: &Tensor, wv: &Tensor, pos: &[i32],
-                freqs: Option<&[f64]>, pool: Option<&ThreadPool>)
-                -> (Tensor, Tensor, Tensor) {
+                freqs: Option<&[f64]>, pool: Option<&ThreadPool>,
+                kern: &Kernels) -> (Tensor, Tensor, Tensor) {
     let b = x.shape()[0];
     let xn = rms_norm(x, attn_norm, cfg.rms_eps);
-    let mut q =
-        matmul_exec(&xn, wq, pool).reshaped(&[b, cfg.n_heads, cfg.head_dim]);
-    let mut k = matmul_exec(&xn, wk, pool)
+    let mut q = matmul_exec_kern(&xn, wq, pool, kern)
+        .reshaped(&[b, cfg.n_heads, cfg.head_dim]);
+    let mut k = matmul_exec_kern(&xn, wk, pool, kern)
         .reshaped(&[b, cfg.n_kv_heads, cfg.head_dim]);
-    let v = matmul_exec(&xn, wv, pool)
+    let v = matmul_exec_kern(&xn, wv, pool, kern)
         .reshaped(&[b, cfg.n_kv_heads, cfg.head_dim]);
     match freqs {
         Some(f) => {
@@ -308,19 +339,21 @@ pub fn qkv_exec(cfg: &ModelConfig, x: &Tensor, attn_norm: &Tensor,
 /// chunk base position, valid length. Returns unnormalized partials.
 pub fn chunk_attn(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
                   k_base: i32, valid: i32) -> Partials {
-    chunk_attn_exec(q, k, v, q_pos, k_base, valid, None)
+    chunk_attn_exec_kern(q, k, v, q_pos, k_base, valid, None,
+                         Kernels::global())
 }
 
 /// Worker for one contiguous span of flattened `(query-row, head)` rows
 /// `[r0, r0+rows)`: `o`/`m`/`l` are the span's disjoint output slices
 /// (span-local indexing), pre-filled with the LSE identity. Score rows
-/// use the per-worker thread-local scratch; the per-row reduction order
-/// is exactly the serial kernel's.
+/// use the per-worker thread-local scratch; the per-row arithmetic runs
+/// on the flavor's [`Kernels::attn_row`] body, so the reduction order
+/// is exactly the serial kernel's for the same flavor.
 #[allow(clippy::too_many_arguments)]
-fn chunk_attn_rows(qs: &[f32], ks: &[f32], vs: &[f32], q_pos: &[i32],
-                   k_base: i32, valid: i32, h: usize, dh: usize,
-                   hkv: usize, c: usize, r0: usize, o: &mut [f32],
-                   m: &mut [f32], l: &mut [f32]) {
+fn chunk_attn_rows(kern: &Kernels, qs: &[f32], ks: &[f32], vs: &[f32],
+                   q_pos: &[i32], k_base: i32, valid: i32, h: usize,
+                   dh: usize, hkv: usize, c: usize, r0: usize,
+                   o: &mut [f32], m: &mut [f32], l: &mut [f32]) {
     let group = h / hkv;
     let scale = 1.0 / (dh as f32).sqrt();
     let rows = m.len();
@@ -341,42 +374,38 @@ fn chunk_attn_rows(qs: &[f32], ks: &[f32], vs: &[f32], q_pos: &[i32],
             }
             let kv = hi / group;
             let qrow = &qs[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
-            let mut mx = f32::NEG_INFINITY;
-            for j in 0..vis {
-                let krow = &ks[(j * hkv + kv) * dh..(j * hkv + kv + 1) * dh];
-                let dot: f32 =
-                    qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
-                let s = dot * scale;
-                scores[j] = s;
-                mx = mx.max(s);
-            }
-            let mut li = 0f32;
+            let args = AttnRowArgs {
+                qrow, ks, vs, kv, hkv, dh, vis, scale,
+            };
             let orow = &mut o[r * dh..(r + 1) * dh];
-            for j in 0..vis {
-                let p = (scores[j] - mx).exp();
-                li += p;
-                let vrow = &vs[(j * hkv + kv) * dh..(j * hkv + kv + 1) * dh];
-                for (oo, &vv) in orow.iter_mut().zip(vrow) {
-                    *oo += p * vv;
-                }
-            }
+            let (mx, li) = kern.attn_row(&args, &mut scores[..], orow);
             m[r] = mx;
             l[r] = li;
         }
     });
 }
 
-/// [`chunk_attn`] fanned out over `(query-row, head)` tile spans when a
-/// pool is given and the call is big enough. Bit-identical to serial.
+/// [`chunk_attn_exec_kern`] with the process-global kernel flavor.
 pub fn chunk_attn_exec(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
                        k_base: i32, valid: i32, pool: Option<&ThreadPool>)
                        -> Partials {
+    chunk_attn_exec_kern(q, k, v, q_pos, k_base, valid, pool,
+                         Kernels::global())
+}
+
+/// [`chunk_attn`] fanned out over `(query-row, head)` tile spans when a
+/// pool is given and the call is big enough. Bit-identical to serial.
+#[allow(clippy::too_many_arguments)]
+pub fn chunk_attn_exec_kern(q: &Tensor, k: &Tensor, v: &Tensor,
+                            q_pos: &[i32], k_base: i32, valid: i32,
+                            pool: Option<&ThreadPool>, kern: &Kernels)
+                            -> Partials {
     let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
     let mut o = vec![0f32; b * h * dh];
     let mut m = vec![f32::NEG_INFINITY; b * h];
     let mut l = vec![0f32; b * h];
-    chunk_attn_slices(q, k, v, q_pos, k_base, valid, pool, &mut o, &mut m,
-                      &mut l);
+    chunk_attn_slices(kern, q, k, v, q_pos, k_base, valid, pool, &mut o,
+                      &mut m, &mut l);
     Partials {
         o: Tensor::f32(&[b, h, dh], o),
         m: Tensor::f32(&[b, h], m),
@@ -384,15 +413,27 @@ pub fn chunk_attn_exec(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
     }
 }
 
-/// [`chunk_attn_exec`] into caller-owned (arena) partials. `out` must be
-/// identity-filled (`o = 0`, `m = -inf`, `l = 0`) — masked rows are left
-/// untouched, exactly like the allocating variant's initial fill.
+/// [`chunk_attn_exec_into_kern`] with the process-global kernel flavor.
+#[allow(clippy::too_many_arguments)]
 pub fn chunk_attn_exec_into(q: &Tensor, k: &Tensor, v: &Tensor,
                             q_pos: &[i32], k_base: i32, valid: i32,
                             pool: Option<&ThreadPool>, out: &mut Partials) {
+    chunk_attn_exec_into_kern(q, k, v, q_pos, k_base, valid, pool,
+                              Kernels::global(), out)
+}
+
+/// [`chunk_attn_exec_kern`] into caller-owned (arena) partials. `out`
+/// must be identity-filled (`o = 0`, `m = -inf`, `l = 0`) — masked rows
+/// are left untouched, exactly like the allocating variant's initial
+/// fill.
+#[allow(clippy::too_many_arguments)]
+pub fn chunk_attn_exec_into_kern(q: &Tensor, k: &Tensor, v: &Tensor,
+                                 q_pos: &[i32], k_base: i32, valid: i32,
+                                 pool: Option<&ThreadPool>, kern: &Kernels,
+                                 out: &mut Partials) {
     let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
     debug_assert_eq!(out.o.shape(), &[b, h, dh]);
-    chunk_attn_slices(q, k, v, q_pos, k_base, valid, pool,
+    chunk_attn_slices(kern, q, k, v, q_pos, k_base, valid, pool,
                       out.o.as_f32_mut(), out.m.as_f32_mut(),
                       out.l.as_f32_mut());
 }
@@ -401,9 +442,10 @@ pub fn chunk_attn_exec_into(q: &Tensor, k: &Tensor, v: &Tensor,
 /// must arrive identity-filled; tiling and reduction order are identical
 /// regardless of where the output storage came from.
 #[allow(clippy::too_many_arguments)]
-fn chunk_attn_slices(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
-                     k_base: i32, valid: i32, pool: Option<&ThreadPool>,
-                     o: &mut [f32], m: &mut [f32], l: &mut [f32]) {
+fn chunk_attn_slices(kern: &Kernels, q: &Tensor, k: &Tensor, v: &Tensor,
+                     q_pos: &[i32], k_base: i32, valid: i32,
+                     pool: Option<&ThreadPool>, o: &mut [f32],
+                     m: &mut [f32], l: &mut [f32]) {
     let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
     let (c, hkv, _) = (k.shape()[0], k.shape()[1], k.shape()[2]);
     let qs = q.as_f32();
@@ -428,14 +470,14 @@ fn chunk_attn_slices(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
                 .zip(m.chunks_mut(span).zip(l.chunks_mut(span)))
             {
                 jobs.push(Box::new(move || {
-                    chunk_attn_rows(qs, ks, vs, q_pos, k_base, valid, h, dh,
-                                    hkv, c, ti * span, oc, mc, lc);
+                    chunk_attn_rows(kern, qs, ks, vs, q_pos, k_base, valid,
+                                    h, dh, hkv, c, ti * span, oc, mc, lc);
                 }));
             }
             p.scoped_run(jobs);
         }
-        None => chunk_attn_rows(qs, ks, vs, q_pos, k_base, valid, h, dh,
-                                hkv, c, 0, o, m, l),
+        None => chunk_attn_rows(kern, qs, ks, vs, q_pos, k_base, valid, h,
+                                dh, hkv, c, 0, o, m, l),
     }
 }
 
@@ -444,32 +486,35 @@ fn chunk_attn_slices(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
 pub fn post(cfg: &ModelConfig, attn_o: &Tensor, x: &Tensor, wo: &Tensor,
             ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor)
             -> Tensor {
-    post_exec(cfg, attn_o, x, wo, ffn_norm, w1, w3, w2, None)
+    post_exec(cfg, attn_o, x, wo, ffn_norm, w1, w3, w2, None,
+              Kernels::global())
 }
 
 /// [`post`] with the projection/FFN matmuls on the pool.
 #[allow(clippy::too_many_arguments)]
 pub fn post_exec(cfg: &ModelConfig, attn_o: &Tensor, x: &Tensor,
                  wo: &Tensor, ffn_norm: &Tensor, w1: &Tensor, w3: &Tensor,
-                 w2: &Tensor, pool: Option<&ThreadPool>) -> Tensor {
+                 w2: &Tensor, pool: Option<&ThreadPool>, kern: &Kernels)
+                 -> Tensor {
     let b = x.shape()[0];
     let flat = attn_o.clone().reshaped(&[b, cfg.q_dim()]);
-    let proj = matmul_exec(&flat, wo, pool);
+    let proj = matmul_exec_kern(&flat, wo, pool, kern);
     let mut h = vec![0f32; b * cfg.d_model];
     for (i, (xv, pv)) in x.as_f32().iter().zip(proj.as_f32()).enumerate() {
         h[i] = xv + pv;
     }
     let h = Tensor::f32(&[b, cfg.d_model], h);
     let hn = rms_norm(&h, ffn_norm, cfg.rms_eps);
-    let a = matmul_exec(&hn, w1, pool);
-    let g = matmul_exec(&hn, w3, pool);
+    let a = matmul_exec_kern(&hn, w1, pool, kern);
+    let g = matmul_exec_kern(&hn, w3, pool, kern);
     let mut act = vec![0f32; b * cfg.ffn_dim];
     for (i, (&av, &gv)) in a.as_f32().iter().zip(g.as_f32()).enumerate() {
         // silu(a) * g
         let s = av / (1.0 + (-av).exp());
         act[i] = s * gv;
     }
-    let ffn = matmul_exec(&Tensor::f32(&[b, cfg.ffn_dim], act), w2, pool);
+    let ffn = matmul_exec_kern(&Tensor::f32(&[b, cfg.ffn_dim], act), w2,
+                               pool, kern);
     let mut out = vec![0f32; b * cfg.d_model];
     for (i, (hv, fv)) in h.as_f32().iter().zip(ffn.as_f32()).enumerate() {
         out[i] = hv + fv;
@@ -480,43 +525,49 @@ pub fn post_exec(cfg: &ModelConfig, attn_o: &Tensor, x: &Tensor,
 /// Final norm + LM head (artifact `lm_head_b*`).
 pub fn lm_head(cfg: &ModelConfig, x: &Tensor, final_norm: &Tensor,
                w_lm: &Tensor) -> Tensor {
-    lm_head_exec(cfg, x, final_norm, w_lm, None)
+    lm_head_exec(cfg, x, final_norm, w_lm, None, Kernels::global())
 }
 
 /// [`lm_head`] with the vocab projection on the pool.
 pub fn lm_head_exec(cfg: &ModelConfig, x: &Tensor, final_norm: &Tensor,
-                    w_lm: &Tensor, pool: Option<&ThreadPool>) -> Tensor {
-    matmul_exec(&rms_norm(x, final_norm, cfg.rms_eps), w_lm, pool)
+                    w_lm: &Tensor, pool: Option<&ThreadPool>,
+                    kern: &Kernels) -> Tensor {
+    matmul_exec_kern(&rms_norm(x, final_norm, cfg.rms_eps), w_lm, pool,
+                     kern)
 }
 
 /// Router scoring (artifact `router_b*_c*`): mean over query heads of
 /// `q_h · emb_{c, kv(h)}`.
 pub fn router_score(q: &Tensor, embs: &Tensor) -> Tensor {
-    router_score_exec(q, embs, None)
+    router_score_exec_kern(q, embs, None, Kernels::global())
 }
 
 /// Worker for one contiguous span of flattened `(row, chunk)` score
 /// cells `[r0, r0+out.len())` (span-local indexing in `out`).
-fn router_cells(qs: &[f32], es: &[f32], h: usize, dh: usize, hkv: usize,
-                c: usize, r0: usize, out: &mut [f32]) {
+#[allow(clippy::too_many_arguments)]
+fn router_cells(kern: &Kernels, qs: &[f32], es: &[f32], h: usize,
+                dh: usize, hkv: usize, c: usize, r0: usize,
+                out: &mut [f32]) {
     let group = h / hkv;
     for (idx, slot) in out.iter_mut().enumerate() {
         let (bi, ci) = ((r0 + idx) / c, (r0 + idx) % c);
-        let mut acc = 0f32;
-        for hi in 0..h {
-            let kv = hi / group;
-            let qrow = &qs[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
-            let erow = &es[(ci * hkv + kv) * dh..(ci * hkv + kv + 1) * dh];
-            acc += qrow.iter().zip(erow).map(|(a, b)| a * b).sum::<f32>();
-        }
-        *slot = acc / h as f32;
+        let qrow = &qs[bi * h * dh..(bi + 1) * h * dh];
+        let erow = &es[ci * hkv * dh..(ci + 1) * hkv * dh];
+        *slot = kern.router_cell(qrow, erow, h, dh, group);
     }
+}
+
+/// [`router_score_exec_kern`] with the process-global kernel flavor.
+pub fn router_score_exec(q: &Tensor, embs: &Tensor,
+                         pool: Option<&ThreadPool>) -> Tensor {
+    router_score_exec_kern(q, embs, pool, Kernels::global())
 }
 
 /// [`router_score`] fanned out over `(row, chunk)` cell spans when a pool
 /// is given and the score matrix is big enough. Bit-identical to serial.
-pub fn router_score_exec(q: &Tensor, embs: &Tensor,
-                         pool: Option<&ThreadPool>) -> Tensor {
+pub fn router_score_exec_kern(q: &Tensor, embs: &Tensor,
+                              pool: Option<&ThreadPool>, kern: &Kernels)
+                              -> Tensor {
     let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
     let (c, hkv, _) = (embs.shape()[0], embs.shape()[1], embs.shape()[2]);
     let qs = q.as_f32();
@@ -535,12 +586,13 @@ pub fn router_score_exec(q: &Tensor, embs: &Tensor,
                 Vec::with_capacity(cells.div_ceil(span));
             for (ti, oc) in out.chunks_mut(span).enumerate() {
                 jobs.push(Box::new(move || {
-                    router_cells(qs, es, h, dh, hkv, c, ti * span, oc);
+                    router_cells(kern, qs, es, h, dh, hkv, c, ti * span,
+                                 oc);
                 }));
             }
             p.scoped_run(jobs);
         }
-        None => router_cells(qs, es, h, dh, hkv, c, 0, &mut out),
+        None => router_cells(kern, qs, es, h, dh, hkv, c, 0, &mut out),
     }
     Tensor::f32(&[b, c], out)
 }
@@ -571,13 +623,21 @@ pub fn merge2(a: &Partials, b: &Partials) -> Partials {
     }
 }
 
+/// [`merge2_row_into_kern`] with the process-global kernel flavor.
+pub fn merge2_row_into(dst: &mut Partials, dst_row: usize, src: &Partials,
+                       src_row: usize) {
+    merge2_row_into_kern(Kernels::global(), dst, dst_row, src, src_row)
+}
+
 /// In-place LSE merge of one row: `dst[dst_row] ⊕= src[src_row]`.
 ///
 /// The scatter path of the Shared-KV batcher runs this once per (query,
 /// chunk-batch) pair per layer per step — it is allocation-free by
-/// design (§Perf opt 1).
-pub fn merge2_row_into(dst: &mut Partials, dst_row: usize, src: &Partials,
-                       src_row: usize) {
+/// design (§Perf opt 1). The per-head scale algebra is shared; the
+/// o-row update runs on the flavor's [`Kernels::scale2_add`].
+pub fn merge2_row_into_kern(kern: &Kernels, dst: &mut Partials,
+                            dst_row: usize, src: &Partials,
+                            src_row: usize) {
     let shape = dst.o.shape();
     let (h, dh) = (shape[1], shape[2]);
     let dm = dst.m.as_f32_mut();
@@ -613,9 +673,7 @@ pub fn merge2_row_into(dst: &mut Partials, dst_row: usize, src: &Partials,
         let (s1, s2) = (scales[i * 2], scales[i * 2 + 1]);
         let db = (d0 + i) * dh;
         let sb = (s0 + i) * dh;
-        for j in 0..dh {
-            do_[db + j] = do_[db + j] * s1 + so[sb + j] * s2;
-        }
+        kern.scale2_add(&mut do_[db..db + dh], s1, &so[sb..sb + dh], s2);
     }
 }
 
@@ -628,9 +686,16 @@ pub fn finalize(p: &Partials) -> Tensor {
     Tensor::f32(&[b, h, dh], out)
 }
 
-/// [`finalize`] into a caller-owned (arena) buffer; every element is
-/// written, so the buffer needs no particular prior contents.
+/// [`finalize_into_kern`] with the process-global kernel flavor.
 pub fn finalize_into(p: &Partials, out: &mut [f32]) {
+    finalize_into_kern(Kernels::global(), p, out)
+}
+
+/// [`finalize`] into a caller-owned (arena) buffer; every element is
+/// written, so the buffer needs no particular prior contents. The row
+/// normalization runs on the flavor's [`Kernels::div_row`] (IEEE
+/// division — identical in every flavor).
+pub fn finalize_into_kern(kern: &Kernels, p: &Partials, out: &mut [f32]) {
     let shape = p.o.shape();
     let (bh, dh) = (shape[0] * shape[1], shape[2]);
     debug_assert_eq!(out.len(), bh * dh);
@@ -638,9 +703,7 @@ pub fn finalize_into(p: &Partials, out: &mut [f32]) {
     for i in 0..bh {
         let row = &mut out[i * dh..(i + 1) * dh];
         if l[i] > 0.0 {
-            for (dst, &src) in row.iter_mut().zip(&o[i * dh..(i + 1) * dh]) {
-                *dst = src / l[i];
-            }
+            kern.div_row(row, &o[i * dh..(i + 1) * dh], l[i]);
         } else {
             row.fill(0.0);
         }

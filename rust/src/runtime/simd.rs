@@ -1,0 +1,923 @@
+//! SIMD microkernel layer: vectorized inner loops for the decode hot
+//! path, behind a runtime-dispatched [`Kernels`] vtable.
+//!
+//! The parallel execution layer (PR 1) tiles work across cores, but each
+//! tile ran the seed scalar loops — a sequential f32 reduction per dot
+//! product and one multiply-add per cycle at best. This module supplies
+//! three interchangeable kernel *flavors* for the five primitive inner
+//! ops everything hot routes through (`mm_rows`/`mm_cols` column
+//! updates, the `chunk_attn_rows` per-row body, `router_cells` score
+//! cells, and the `merge2_row_into`/`finalize_into` tails):
+//!
+//! * **`scalar`** — the seed kernels, bit-for-bit: plain multiply-then-
+//!   add, sequential `k`-ascending reductions. The reference every
+//!   golden/replay artifact was produced with (`MOSKA_KERNEL=scalar`).
+//! * **`lanes8`** — the portable 8-lane flavor: a fixed-width
+//!   lane-striped accumulator (`lanes[i % 8]`) with fused multiply-add
+//!   (`f32::mul_add`) and the pinned [`reduce8`] tree. Pure safe Rust;
+//!   the fallback on hardware without vector units, and the oracle the
+//!   arch-specific flavors are property-tested against.
+//! * **`avx2`** / **`neon`** — `std::arch` intrinsics (x86-64 AVX2+FMA,
+//!   aarch64 NEON), selected once at startup by runtime feature
+//!   detection. Same lane striping, same tail handling, same scalar
+//!   [`reduce8`] — **bit-identical to `lanes8` on every input**.
+//!
+//! ## Determinism contract
+//!
+//! The seed contract ("`k` ascends per output element") pinned a purely
+//! sequential reduction order, which no vector unit can honor. The SIMD
+//! flavors replace it with an equally strict one:
+//!
+//! * **Reductions** (QK^T dots, router scores) accumulate into a fixed
+//!   8-lane stripe — element `i` always lands in lane `i % 8`,
+//!   regardless of vector width — and collapse through the pinned
+//!   [`reduce8`] tree `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` in scalar
+//!   f32 arithmetic. Ragged tails feed lanes `0..n%8` with scalar
+//!   `mul_add`, identically in every flavor.
+//! * **Element-wise updates** (matmul column updates, the V
+//!   accumulation, merge/finalize tails) keep their per-element order;
+//!   each element is one fused multiply-add (or IEEE division), which
+//!   rounds identically everywhere.
+//!
+//! Every flavor still satisfies the parallel-execution contract from
+//! PR 1 — tiles own disjoint output regions and run the same per-element
+//! order as their serial counterpart — so within a flavor, output is
+//! bit-identical across thread counts; and across the three SIMD
+//! flavors, output is bit-identical, period (asserted by
+//! `tests/prop_kernels.rs` and the in-module tests). `scalar` differs
+//! from the SIMD flavors in low-order bits (different reduction order,
+//! no fusion) but decodes the same tokens — `scripts/ci.sh` runs the
+//! tier-1 suite and a synthetic disagg token comparison under both.
+//!
+//! ## Dispatch
+//!
+//! [`Kernels::global()`] resolves once per process from the
+//! `MOSKA_KERNEL` env var (`scalar | simd | lanes8`, default auto =
+//! best available), and [`set_global_spec`] lets the launcher pin it
+//! from `--kernel` / `serving.kernel` config. Each
+//! [`NativeBackend`][crate::runtime::NativeBackend] holds a `&'static
+//! Kernels` (defaulting to the global) so tests and benches can A/B
+//! flavors side by side in one process.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------- flavors
+
+/// Which kernel flavor to run (CLI `--kernel`, `serving.kernel`,
+/// `MOSKA_KERNEL`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelSpec {
+    /// Best available: AVX2+FMA > NEON > `lanes8`.
+    #[default]
+    Auto,
+    /// The seed scalar kernels (pre-SIMD bit behavior).
+    Scalar,
+    /// Explicitly the vectorized path (same resolution as `Auto`).
+    Simd,
+    /// The portable 8-lane flavor, even when AVX2/NEON is available
+    /// (property-test oracle, A/B baseline).
+    Lanes8,
+}
+
+impl KernelSpec {
+    pub fn parse(s: &str) -> Result<KernelSpec> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Ok(KernelSpec::Auto),
+            "scalar" | "seed" => Ok(KernelSpec::Scalar),
+            "simd" => Ok(KernelSpec::Simd),
+            "lanes8" | "fallback" => Ok(KernelSpec::Lanes8),
+            other => bail!(
+                "unknown kernel flavor '{other}' (auto|simd|scalar|lanes8)"
+            ),
+        }
+    }
+}
+
+/// Arguments for one query-row of chunk attention (see
+/// [`Kernels::attn_row`]): `ks`/`vs` are the chunk-major `[C, Hkv, dh]`
+/// K/V payloads, `kv` the GQA KV head this query head reads, `vis` the
+/// causally visible key count (> 0).
+pub struct AttnRowArgs<'a> {
+    pub qrow: &'a [f32],
+    pub ks: &'a [f32],
+    pub vs: &'a [f32],
+    pub kv: usize,
+    pub hkv: usize,
+    pub dh: usize,
+    pub vis: usize,
+    pub scale: f32,
+}
+
+type FmaRowFn = fn(&mut [f32], &[f32], f32);
+type AttnRowFn = for<'a> fn(&AttnRowArgs<'a>, &mut [f32], &mut [f32])
+                            -> (f32, f32);
+type RouterCellFn = fn(&[f32], &[f32], usize, usize, usize) -> f32;
+type Scale2AddFn = fn(&mut [f32], f32, &[f32], f32);
+type DivRowFn = fn(&mut [f32], &[f32], f32);
+
+/// One kernel flavor: the five primitive inner ops the hot loops in
+/// [`native`][crate::runtime::native] dispatch through. Selected once
+/// (per process via [`Kernels::global`], per backend via
+/// [`NativeBackend::with_kernel`][crate::runtime::NativeBackend::with_kernel]);
+/// the fn pointers are called per row/column-strip, so dispatch cost is
+/// amortized over `dh`..`n` elements of work.
+pub struct Kernels {
+    pub name: &'static str,
+    fma_row_fn: FmaRowFn,
+    attn_row_fn: AttnRowFn,
+    router_cell_fn: RouterCellFn,
+    scale2_add_fn: Scale2AddFn,
+    div_row_fn: DivRowFn,
+}
+
+impl Kernels {
+    /// `orow[j] += xv * wrow[j]` — the matmul column update (and the
+    /// attention V accumulation, which is the same op).
+    #[inline]
+    pub fn fma_row(&self, orow: &mut [f32], wrow: &[f32], xv: f32) {
+        (self.fma_row_fn)(orow, wrow, xv)
+    }
+
+    /// One query-row chunk-attention body: QK^T scores into
+    /// `scores[..vis]`, online-softmax probabilities, V accumulation
+    /// into `orow` (must arrive zeroed). Returns `(m, l)`.
+    #[inline]
+    pub fn attn_row(&self, args: &AttnRowArgs<'_>, scores: &mut [f32],
+                    orow: &mut [f32]) -> (f32, f32) {
+        (self.attn_row_fn)(args, scores, orow)
+    }
+
+    /// One router score cell: mean over `h` query heads of `q_h ·
+    /// emb_{kv(h)}`; `qrow` is the row's `[h, dh]` block, `erow` the
+    /// chunk's `[hkv, dh]` embedding block.
+    #[inline]
+    pub fn router_cell(&self, qrow: &[f32], erow: &[f32], h: usize,
+                       dh: usize, group: usize) -> f32 {
+        (self.router_cell_fn)(qrow, erow, h, dh, group)
+    }
+
+    /// `dst[j] = dst[j] * s1 + src[j] * s2` — the LSE-merge o-row tail.
+    #[inline]
+    pub fn scale2_add(&self, dst: &mut [f32], s1: f32, src: &[f32],
+                      s2: f32) {
+        (self.scale2_add_fn)(dst, s1, src, s2)
+    }
+
+    /// `dst[j] = src[j] / l` — the finalize normalization tail.
+    #[inline]
+    pub fn div_row(&self, dst: &mut [f32], src: &[f32], l: f32) {
+        (self.div_row_fn)(dst, src, l)
+    }
+
+    /// The process-wide flavor: `MOSKA_KERNEL` env (or what
+    /// [`set_global_spec`] pinned first), default auto-detect. Resolved
+    /// once; every free-function kernel wrapper and every backend built
+    /// without an explicit flavor uses this.
+    pub fn global() -> &'static Kernels {
+        *GLOBAL.get_or_init(|| {
+            let spec = match std::env::var("MOSKA_KERNEL") {
+                Ok(s) => match KernelSpec::parse(&s) {
+                    Ok(spec) => spec,
+                    Err(e) => panic!("MOSKA_KERNEL: {e}"),
+                },
+                Err(_) => KernelSpec::Auto,
+            };
+            // resolve_explicit, NOT kernels_for: `Auto` maps back to
+            // this global, which would re-enter the OnceLock init
+            resolve_explicit(spec)
+        })
+    }
+}
+
+static GLOBAL: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// Pin the process-wide flavor from launcher config (`--kernel`,
+/// `serving.kernel`). Conflicts are rejected loudly and
+/// deterministically — a set `MOSKA_KERNEL` env that disagrees with the
+/// requested flavor errors here regardless of whether anything resolved
+/// [`Kernels::global`] earlier, and so does a second conflicting pin —
+/// so an A/B misconfiguration can never silently mix flavors.
+pub fn set_global_spec(spec: KernelSpec) -> Result<()> {
+    let want = kernels_for(spec);
+    if let Ok(s) = std::env::var("MOSKA_KERNEL") {
+        let env_spec = KernelSpec::parse(&s)?;
+        if env_spec != KernelSpec::Auto {
+            anyhow::ensure!(
+                std::ptr::eq(kernels_for(env_spec), want),
+                "MOSKA_KERNEL={} conflicts with the requested kernel \
+                 flavor '{}' — drop one of the two",
+                s.trim(), want.name,
+            );
+        }
+    }
+    let got = GLOBAL.get_or_init(|| want);
+    anyhow::ensure!(
+        std::ptr::eq(*got, want),
+        "kernel flavor already pinned to '{}' (requested '{}')",
+        got.name, want.name,
+    );
+    Ok(())
+}
+
+/// Resolve a flavor spec to its vtable. `Auto` means "no explicit
+/// request" and follows the process-global flavor (so `MOSKA_KERNEL`
+/// keeps working when a launcher passes its `--kernel` default
+/// through); `Simd` explicitly picks the best runtime-detected flavor.
+pub fn kernels_for(spec: KernelSpec) -> &'static Kernels {
+    match spec {
+        KernelSpec::Auto => Kernels::global(),
+        explicit => resolve_explicit(explicit),
+    }
+}
+
+/// [`kernels_for`] minus the `Auto` → global indirection (`Auto` here
+/// means auto-*detect*): what the global's own initializer and every
+/// explicit spec resolve through.
+fn resolve_explicit(spec: KernelSpec) -> &'static Kernels {
+    match spec {
+        KernelSpec::Scalar => &SCALAR,
+        KernelSpec::Lanes8 => &LANES8,
+        KernelSpec::Auto | KernelSpec::Simd => best_simd(),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn best_simd() -> &'static Kernels {
+    if std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma")
+    {
+        &AVX2
+    } else {
+        &LANES8
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn best_simd() -> &'static Kernels {
+    &NEON
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn best_simd() -> &'static Kernels {
+    &LANES8
+}
+
+static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    fma_row_fn: scalar::fma_row,
+    attn_row_fn: scalar::attn_row,
+    router_cell_fn: scalar::router_cell,
+    scale2_add_fn: scalar::scale2_add,
+    div_row_fn: scalar::div_row,
+};
+
+static LANES8: Kernels = Kernels {
+    name: "lanes8",
+    fma_row_fn: lanes8::fma_row,
+    attn_row_fn: lanes8::attn_row,
+    router_cell_fn: lanes8::router_cell,
+    scale2_add_fn: lanes8::scale2_add,
+    div_row_fn: scalar::div_row, // IEEE division: identical in any order
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    name: "avx2",
+    fma_row_fn: avx2_fma_row,
+    attn_row_fn: avx2_attn_row,
+    router_cell_fn: avx2_router_cell,
+    scale2_add_fn: avx2_scale2_add,
+    div_row_fn: scalar::div_row,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    name: "neon",
+    fma_row_fn: neon_fma_row,
+    attn_row_fn: neon_attn_row,
+    router_cell_fn: neon_router_cell,
+    scale2_add_fn: neon_scale2_add,
+    div_row_fn: scalar::div_row,
+};
+
+// ------------------------------------------------------- shared helpers
+
+/// The pinned lane-reduction tree every SIMD flavor collapses its
+/// 8-lane accumulator through, in scalar f32 arithmetic: pairwise over
+/// a vector-width-agnostic pattern (`l0+l4` is what splitting a 256-bit
+/// register into 128-bit halves produces naturally; NEON's two 4-lane
+/// accumulators and the portable array reduce the same way).
+#[inline(always)]
+fn reduce8(l: &[f32; 8]) -> f32 {
+    let s0 = l[0] + l[4];
+    let s1 = l[1] + l[5];
+    let s2 = l[2] + l[6];
+    let s3 = l[3] + l[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// Ragged-tail accumulation shared by every SIMD flavor: elements
+/// `[i0, n)` land in lanes `0..n-i0` with scalar fused multiply-add —
+/// the same ops in the same order whether the main loop ran on AVX2,
+/// NEON, or the portable stripe.
+#[inline(always)]
+fn dot_tail(lanes: &mut [f32; 8], a: &[f32], b: &[f32], i0: usize,
+            n: usize) {
+    let mut t = 0;
+    let mut i = i0;
+    while i < n {
+        lanes[t] = a[i].mul_add(b[i], lanes[t]);
+        t += 1;
+        i += 1;
+    }
+}
+
+// ------------------------------------------------------- scalar (seed)
+
+/// The seed kernels, arithmetic preserved bit-for-bit: multiply *then*
+/// add (no fusion), sequential reductions. `MOSKA_KERNEL=scalar`
+/// reproduces pre-SIMD output exactly (regression-tested against
+/// inline references in `tests/prop_kernels.rs`).
+mod scalar {
+    use super::AttnRowArgs;
+
+    pub fn fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
+        for (o, &wv) in orow.iter_mut().zip(wrow) {
+            *o += xv * wv;
+        }
+    }
+
+    pub fn attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
+                    orow: &mut [f32]) -> (f32, f32) {
+        let (hkv, kv, dh) = (a.hkv, a.kv, a.dh);
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..a.vis {
+            let base = (j * hkv + kv) * dh;
+            let krow = &a.ks[base..base + dh];
+            let dot: f32 =
+                a.qrow.iter().zip(krow).map(|(x, y)| x * y).sum();
+            let s = dot * a.scale;
+            scores[j] = s;
+            mx = mx.max(s);
+        }
+        let mut li = 0f32;
+        for j in 0..a.vis {
+            let p = (scores[j] - mx).exp();
+            li += p;
+            let base = (j * hkv + kv) * dh;
+            let vrow = &a.vs[base..base + dh];
+            for (oo, &vv) in orow.iter_mut().zip(vrow) {
+                *oo += p * vv;
+            }
+        }
+        (mx, li)
+    }
+
+    pub fn router_cell(qrow: &[f32], erow: &[f32], h: usize, dh: usize,
+                       group: usize) -> f32 {
+        let mut acc = 0f32;
+        for hi in 0..h {
+            let kv = hi / group;
+            let q = &qrow[hi * dh..(hi + 1) * dh];
+            let e = &erow[kv * dh..(kv + 1) * dh];
+            acc += q.iter().zip(e).map(|(x, y)| x * y).sum::<f32>();
+        }
+        acc / h as f32
+    }
+
+    pub fn scale2_add(dst: &mut [f32], s1: f32, src: &[f32], s2: f32) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = *d * s1 + s * s2;
+        }
+    }
+
+    pub fn div_row(dst: &mut [f32], src: &[f32], l: f32) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s / l;
+        }
+    }
+}
+
+// ---------------------------------------------------- lanes8 (portable)
+
+/// The portable 8-lane flavor: defines the SIMD semantics in safe Rust.
+/// `f32::mul_add` is the IEEE fused op (identical to AVX2 `vfmadd` /
+/// NEON `fmla` bit-for-bit); the stripe + [`super::reduce8`] pin the
+/// reduction order the vector flavors reproduce.
+mod lanes8 {
+    use super::{dot_tail, reduce8, AttnRowArgs};
+
+    #[inline(always)]
+    pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut lanes = [0f32; 8];
+        let mut i = 0;
+        while i + 8 <= n {
+            for j in 0..8 {
+                lanes[j] = a[i + j].mul_add(b[i + j], lanes[j]);
+            }
+            i += 8;
+        }
+        dot_tail(&mut lanes, a, b, i, n);
+        reduce8(&lanes)
+    }
+
+    pub fn fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
+        for (o, &wv) in orow.iter_mut().zip(wrow) {
+            *o = wv.mul_add(xv, *o);
+        }
+    }
+
+    pub fn attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
+                    orow: &mut [f32]) -> (f32, f32) {
+        let (hkv, kv, dh) = (a.hkv, a.kv, a.dh);
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..a.vis {
+            let base = (j * hkv + kv) * dh;
+            let s = dot8(a.qrow, &a.ks[base..base + dh]) * a.scale;
+            scores[j] = s;
+            mx = mx.max(s);
+        }
+        let mut li = 0f32;
+        for j in 0..a.vis {
+            let p = (scores[j] - mx).exp();
+            li += p;
+            let base = (j * hkv + kv) * dh;
+            fma_row(orow, &a.vs[base..base + dh], p);
+        }
+        (mx, li)
+    }
+
+    pub fn router_cell(qrow: &[f32], erow: &[f32], h: usize, dh: usize,
+                       group: usize) -> f32 {
+        let mut acc = 0f32;
+        for hi in 0..h {
+            let kv = hi / group;
+            acc += dot8(&qrow[hi * dh..(hi + 1) * dh],
+                        &erow[kv * dh..(kv + 1) * dh]);
+        }
+        acc / h as f32
+    }
+
+    pub fn scale2_add(dst: &mut [f32], s1: f32, src: &[f32], s2: f32) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s.mul_add(s2, *d * s1);
+        }
+    }
+}
+
+// -------------------------------------------------------- avx2 (x86-64)
+
+/// AVX2+FMA implementations. Every `unsafe fn` here requires AVX2 and
+/// FMA support; the safe wrappers below are only reachable through the
+/// [`AVX2`] table, which [`best_simd`] constructs exclusively behind
+/// `is_x86_feature_detected!` — that detection is the safety proof for
+/// every call site.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{dot_tail, reduce8, AttnRowArgs};
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot8(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut lanes = [0f32; 8];
+        let mut i = 0;
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            while i + 8 <= n {
+                let av = _mm256_loadu_ps(a.as_ptr().add(i));
+                let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+                acc = _mm256_fmadd_ps(av, bv, acc);
+                i += 8;
+            }
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        }
+        dot_tail(&mut lanes, a, b, i, n);
+        reduce8(&lanes)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
+        let n = orow.len().min(wrow.len());
+        let mut i = 0;
+        unsafe {
+            let xvv = _mm256_set1_ps(xv);
+            // 4x unrolled: same per-element fused op, better ILP
+            while i + 32 <= n {
+                for u in [0usize, 8, 16, 24] {
+                    let o = _mm256_loadu_ps(orow.as_ptr().add(i + u));
+                    let w = _mm256_loadu_ps(wrow.as_ptr().add(i + u));
+                    _mm256_storeu_ps(orow.as_mut_ptr().add(i + u),
+                                     _mm256_fmadd_ps(w, xvv, o));
+                }
+                i += 32;
+            }
+            while i + 8 <= n {
+                let o = _mm256_loadu_ps(orow.as_ptr().add(i));
+                let w = _mm256_loadu_ps(wrow.as_ptr().add(i));
+                _mm256_storeu_ps(orow.as_mut_ptr().add(i),
+                                 _mm256_fmadd_ps(w, xvv, o));
+                i += 8;
+            }
+        }
+        while i < n {
+            orow[i] = wrow[i].mul_add(xv, orow[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
+                           orow: &mut [f32]) -> (f32, f32) {
+        let (hkv, kv, dh) = (a.hkv, a.kv, a.dh);
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..a.vis {
+            let base = (j * hkv + kv) * dh;
+            let s = unsafe { dot8(a.qrow, &a.ks[base..base + dh]) }
+                * a.scale;
+            scores[j] = s;
+            mx = mx.max(s);
+        }
+        let mut li = 0f32;
+        for j in 0..a.vis {
+            let p = (scores[j] - mx).exp();
+            li += p;
+            let base = (j * hkv + kv) * dh;
+            unsafe { fma_row(orow, &a.vs[base..base + dh], p) };
+        }
+        (mx, li)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn router_cell(qrow: &[f32], erow: &[f32], h: usize,
+                              dh: usize, group: usize) -> f32 {
+        let mut acc = 0f32;
+        for hi in 0..h {
+            let kv = hi / group;
+            acc += unsafe {
+                dot8(&qrow[hi * dh..(hi + 1) * dh],
+                     &erow[kv * dh..(kv + 1) * dh])
+            };
+        }
+        acc / h as f32
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale2_add(dst: &mut [f32], s1: f32, src: &[f32],
+                             s2: f32) {
+        let n = dst.len().min(src.len());
+        let mut i = 0;
+        unsafe {
+            let s1v = _mm256_set1_ps(s1);
+            let s2v = _mm256_set1_ps(s2);
+            while i + 8 <= n {
+                let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+                let s = _mm256_loadu_ps(src.as_ptr().add(i));
+                let r = _mm256_fmadd_ps(s, s2v, _mm256_mul_ps(d, s1v));
+                _mm256_storeu_ps(dst.as_mut_ptr().add(i), r);
+                i += 8;
+            }
+        }
+        while i < n {
+            dst[i] = src[i].mul_add(s2, dst[i] * s1);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
+    // SAFETY: the AVX2 table is only selectable after feature detection.
+    unsafe { avx2::fma_row(orow, wrow, xv) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
+                 orow: &mut [f32]) -> (f32, f32) {
+    // SAFETY: as above.
+    unsafe { avx2::attn_row(a, scores, orow) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_router_cell(qrow: &[f32], erow: &[f32], h: usize, dh: usize,
+                    group: usize) -> f32 {
+    // SAFETY: as above.
+    unsafe { avx2::router_cell(qrow, erow, h, dh, group) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_scale2_add(dst: &mut [f32], s1: f32, src: &[f32], s2: f32) {
+    // SAFETY: as above.
+    unsafe { avx2::scale2_add(dst, s1, src, s2) }
+}
+
+// ------------------------------------------------------- neon (aarch64)
+
+/// NEON implementations (two 4-lane accumulators = the same 8-lane
+/// stripe). NEON is part of the aarch64 baseline, so detection cannot
+/// fail; the `target_feature` + safe-wrapper structure mirrors AVX2 for
+/// uniformity (and for toolchains predating safe target-feature calls).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use super::{dot_tail, reduce8, AttnRowArgs};
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot8(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut lanes = [0f32; 8];
+        let mut i = 0;
+        unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            while i + 8 <= n {
+                let a0 = vld1q_f32(a.as_ptr().add(i));
+                let b0 = vld1q_f32(b.as_ptr().add(i));
+                let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+                let b1 = vld1q_f32(b.as_ptr().add(i + 4));
+                acc0 = vfmaq_f32(acc0, a0, b0);
+                acc1 = vfmaq_f32(acc1, a1, b1);
+                i += 8;
+            }
+            vst1q_f32(lanes.as_mut_ptr(), acc0);
+            vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        }
+        dot_tail(&mut lanes, a, b, i, n);
+        reduce8(&lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
+        let n = orow.len().min(wrow.len());
+        let mut i = 0;
+        unsafe {
+            let xvv = vdupq_n_f32(xv);
+            while i + 8 <= n {
+                let o0 = vld1q_f32(orow.as_ptr().add(i));
+                let w0 = vld1q_f32(wrow.as_ptr().add(i));
+                let o1 = vld1q_f32(orow.as_ptr().add(i + 4));
+                let w1 = vld1q_f32(wrow.as_ptr().add(i + 4));
+                vst1q_f32(orow.as_mut_ptr().add(i),
+                          vfmaq_f32(o0, w0, xvv));
+                vst1q_f32(orow.as_mut_ptr().add(i + 4),
+                          vfmaq_f32(o1, w1, xvv));
+                i += 8;
+            }
+            while i + 4 <= n {
+                let o = vld1q_f32(orow.as_ptr().add(i));
+                let w = vld1q_f32(wrow.as_ptr().add(i));
+                vst1q_f32(orow.as_mut_ptr().add(i),
+                          vfmaq_f32(o, w, xvv));
+                i += 4;
+            }
+        }
+        while i < n {
+            orow[i] = wrow[i].mul_add(xv, orow[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
+                           orow: &mut [f32]) -> (f32, f32) {
+        let (hkv, kv, dh) = (a.hkv, a.kv, a.dh);
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..a.vis {
+            let base = (j * hkv + kv) * dh;
+            let s = unsafe { dot8(a.qrow, &a.ks[base..base + dh]) }
+                * a.scale;
+            scores[j] = s;
+            mx = mx.max(s);
+        }
+        let mut li = 0f32;
+        for j in 0..a.vis {
+            let p = (scores[j] - mx).exp();
+            li += p;
+            let base = (j * hkv + kv) * dh;
+            unsafe { fma_row(orow, &a.vs[base..base + dh], p) };
+        }
+        (mx, li)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn router_cell(qrow: &[f32], erow: &[f32], h: usize,
+                              dh: usize, group: usize) -> f32 {
+        let mut acc = 0f32;
+        for hi in 0..h {
+            let kv = hi / group;
+            acc += unsafe {
+                dot8(&qrow[hi * dh..(hi + 1) * dh],
+                     &erow[kv * dh..(kv + 1) * dh])
+            };
+        }
+        acc / h as f32
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale2_add(dst: &mut [f32], s1: f32, src: &[f32],
+                             s2: f32) {
+        let n = dst.len().min(src.len());
+        let mut i = 0;
+        unsafe {
+            let s1v = vdupq_n_f32(s1);
+            let s2v = vdupq_n_f32(s2);
+            while i + 4 <= n {
+                let d = vld1q_f32(dst.as_ptr().add(i));
+                let s = vld1q_f32(src.as_ptr().add(i));
+                let r = vfmaq_f32(vmulq_f32(d, s1v), s, s2v);
+                vst1q_f32(dst.as_mut_ptr().add(i), r);
+                i += 4;
+            }
+        }
+        while i < n {
+            dst[i] = src[i].mul_add(s2, dst[i] * s1);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
+    // SAFETY: NEON is mandatory in the aarch64 baseline.
+    unsafe { neon::fma_row(orow, wrow, xv) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
+                 orow: &mut [f32]) -> (f32, f32) {
+    // SAFETY: as above.
+    unsafe { neon::attn_row(a, scores, orow) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_router_cell(qrow: &[f32], erow: &[f32], h: usize, dh: usize,
+                    group: usize) -> f32 {
+    // SAFETY: as above.
+    unsafe { neon::router_cell(qrow, erow, h, dh, group) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_scale2_add(dst: &mut [f32], s1: f32, src: &[f32], s2: f32) {
+    // SAFETY: as above.
+    unsafe { neon::scale2_add(dst, s1, src, s2) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn spec_parses() {
+        assert_eq!(KernelSpec::parse("auto").unwrap(), KernelSpec::Auto);
+        assert_eq!(KernelSpec::parse("").unwrap(), KernelSpec::Auto);
+        assert_eq!(KernelSpec::parse("SIMD").unwrap(), KernelSpec::Simd);
+        assert_eq!(KernelSpec::parse("scalar").unwrap(),
+                   KernelSpec::Scalar);
+        assert_eq!(KernelSpec::parse("lanes8").unwrap(),
+                   KernelSpec::Lanes8);
+        assert!(KernelSpec::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn flavor_tables_resolve() {
+        assert_eq!(kernels_for(KernelSpec::Scalar).name, "scalar");
+        assert_eq!(kernels_for(KernelSpec::Lanes8).name, "lanes8");
+        // Simd = explicit best-detected flavor, independent of env
+        let best = kernels_for(KernelSpec::Simd);
+        assert!(["avx2", "neon", "lanes8"].contains(&best.name));
+        // Auto follows the process-global flavor (MOSKA_KERNEL aware),
+        // so the ci.sh A/B stages reach the backends through it
+        assert!(std::ptr::eq(kernels_for(KernelSpec::Auto),
+                             Kernels::global()));
+    }
+
+    #[test]
+    fn reduce8_order_is_pinned() {
+        // values where reduction order changes the f32 result: the
+        // pinned tree must give exactly ((l0+l4)+(l2+l6))+((l1+l5)+(l3+l7))
+        let l = [1.0e8f32, 1.0, -1.0e8, 3.0, 0.25, -7.0, 2.5e7, 11.0];
+        let s0 = l[0] + l[4];
+        let s1 = l[1] + l[5];
+        let s2 = l[2] + l[6];
+        let s3 = l[3] + l[7];
+        let want = (s0 + s2) + (s1 + s3);
+        assert_eq!(reduce8(&l), want);
+    }
+
+    /// The core contract: the best-detected flavor is bit-identical to
+    /// the portable `lanes8` flavor on every primitive, across ragged
+    /// lengths (tails of every residue mod 8).
+    #[test]
+    fn simd_flavors_bit_identical_to_lanes8() {
+        let a = kernels_for(KernelSpec::Lanes8);
+        let b = kernels_for(KernelSpec::Simd); // may be avx2/neon/lanes8
+        let mut rng = Rng::new(0x51D);
+        for len in [1usize, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100] {
+            let mut x = vec![0f32; len];
+            let mut y = vec![0f32; len];
+            rng.fill_normal_f32(&mut x);
+            rng.fill_normal_f32(&mut y);
+
+            // fma_row
+            let mut oa = x.clone();
+            let mut ob = x.clone();
+            a.fma_row(&mut oa, &y, 0.37);
+            b.fma_row(&mut ob, &y, 0.37);
+            assert_eq!(oa, ob, "fma_row len={len} flavor={}", b.name);
+
+            // scale2_add
+            let mut da = x.clone();
+            let mut db = x.clone();
+            a.scale2_add(&mut da, 0.9, &y, 1.7);
+            b.scale2_add(&mut db, 0.9, &y, 1.7);
+            assert_eq!(da, db, "scale2_add len={len}");
+
+            // div_row
+            let mut va = vec![0f32; len];
+            let mut vb = vec![0f32; len];
+            a.div_row(&mut va, &x, 3.1);
+            b.div_row(&mut vb, &x, 3.1);
+            assert_eq!(va, vb, "div_row len={len}");
+        }
+
+        // attn_row + router_cell over ragged dh and vis
+        for &(hkv, dh, c) in
+            &[(2usize, 12usize, 5usize), (2, 16, 64), (1, 33, 7)]
+        {
+            let mut q = vec![0f32; dh];
+            let mut ks = vec![0f32; c * hkv * dh];
+            let mut vs = vec![0f32; c * hkv * dh];
+            rng.fill_normal_f32(&mut q);
+            rng.fill_normal_f32(&mut ks);
+            rng.fill_normal_f32(&mut vs);
+            for vis in [1usize, c / 2 + 1, c] {
+                let args = AttnRowArgs {
+                    qrow: &q,
+                    ks: &ks,
+                    vs: &vs,
+                    kv: hkv - 1,
+                    hkv,
+                    dh,
+                    vis,
+                    scale: 1.0 / (dh as f32).sqrt(),
+                };
+                let mut sa = vec![0f32; c];
+                let mut sb = vec![0f32; c];
+                let mut oa = vec![0f32; dh];
+                let mut ob = vec![0f32; dh];
+                let ra = a.attn_row(&args, &mut sa, &mut oa);
+                let rb = b.attn_row(&args, &mut sb, &mut ob);
+                assert_eq!(ra, rb, "attn_row m/l dh={dh} vis={vis}");
+                assert_eq!(oa, ob, "attn_row o dh={dh} vis={vis}");
+                assert_eq!(sa[..vis], sb[..vis], "attn_row scores");
+            }
+            let h = hkv * 2;
+            let mut qb = vec![0f32; h * dh];
+            let mut eb = vec![0f32; hkv * dh];
+            rng.fill_normal_f32(&mut qb);
+            rng.fill_normal_f32(&mut eb);
+            assert_eq!(a.router_cell(&qb, &eb, h, dh, 2),
+                       b.router_cell(&qb, &eb, h, dh, 2),
+                       "router_cell dh={dh}");
+        }
+    }
+
+    /// The scalar flavor keeps the seed bit behavior: multiply-then-add,
+    /// sequential reduction.
+    #[test]
+    fn scalar_flavor_matches_seed_arithmetic() {
+        let ks = kernels_for(KernelSpec::Scalar);
+        let mut rng = Rng::new(0x5EED);
+        let mut x = vec![0f32; 37];
+        let mut y = vec![0f32; 37];
+        rng.fill_normal_f32(&mut x);
+        rng.fill_normal_f32(&mut y);
+        let mut got = x.clone();
+        ks.fma_row(&mut got, &y, 0.7);
+        let want: Vec<f32> =
+            x.iter().zip(&y).map(|(o, w)| o + 0.7 * w).collect();
+        assert_eq!(got, want);
+
+        let mut qb = vec![0f32; 4 * 9];
+        let mut eb = vec![0f32; 2 * 9];
+        rng.fill_normal_f32(&mut qb);
+        rng.fill_normal_f32(&mut eb);
+        let got = ks.router_cell(&qb, &eb, 4, 9, 2);
+        let mut acc = 0f32;
+        for hi in 0..4 {
+            let kv = hi / 2;
+            acc += qb[hi * 9..(hi + 1) * 9]
+                .iter()
+                .zip(&eb[kv * 9..(kv + 1) * 9])
+                .map(|(a, b)| a * b)
+                .sum::<f32>();
+        }
+        assert_eq!(got, acc / 4.0);
+    }
+}

@@ -428,6 +428,17 @@ pub fn run_server(args: &Args) -> Result<()> {
         if threads > 0 {
             serving.exec_threads = threads;
         }
+        // CLI --kernel overrides the file value ("auto" is the CLI
+        // default sentinel); pin the process-global flavor to match
+        let kernel = crate::runtime::KernelSpec::parse(
+            args.get("kernel").unwrap_or("auto"),
+        )?;
+        if kernel != crate::runtime::KernelSpec::Auto {
+            serving.kernel = kernel;
+        }
+        if serving.kernel != crate::runtime::KernelSpec::Auto {
+            crate::runtime::simd::set_global_spec(serving.kernel)?;
+        }
         crate::engine::build_engine(&dir, &backend, serving)?
     } else {
         build_engine_from_args(args)?

@@ -1,0 +1,298 @@
+//! Kernel-flavor property tests: the SIMD microkernel determinism
+//! contract (see `runtime/simd.rs`).
+//!
+//! 1. The portable `lanes8` flavor and the best runtime-detected flavor
+//!    (AVX2/NEON where available) are **bit-identical** on every routed
+//!    kernel, across randomized shapes with ragged tails and across
+//!    serial/pooled execution.
+//! 2. The `scalar` flavor reproduces the **seed kernels'** arithmetic
+//!    bit-for-bit (inline naive references, plus real K/V taken from
+//!    the synthetic store).
+//! 3. End to end: decode **tokens** are identical across
+//!    `scalar`/`simd`/`lanes8` backends and across thread counts, on
+//!    both the engine and the disagg cluster.
+
+use std::sync::Arc;
+
+use moska::config::{ModelConfig, ServingConfig};
+use moska::disagg::{synthetic_store, synthetic_weights, DisaggCluster,
+                    SYNTH_CHUNK, SYNTH_DOMAIN, SYNTH_DOMAIN_B};
+use moska::engine::Engine;
+use moska::kvcache::SharedStore;
+use moska::model::sampling::Sampler;
+use moska::model::Weights;
+use moska::runtime::native::{self, Partials};
+use moska::runtime::{kernels_for, Backend, KernelSpec, Kernels,
+                     NativeBackend};
+use moska::tensor::Tensor;
+use moska::util::rng::Rng;
+use moska::util::threadpool::ThreadPool;
+
+fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let mut d = vec![0f32; shape.iter().product()];
+    rng.fill_normal_f32(&mut d);
+    Tensor::f32(shape, d)
+}
+
+/// Flavor A == flavor B, bit for bit, on every routed kernel, for
+/// randomized shapes whose dims are deliberately NOT multiples of the
+/// 8-lane width, serial and pooled.
+#[test]
+fn simd_flavors_bit_identical_across_shapes() {
+    let a = kernels_for(KernelSpec::Lanes8);
+    let b = kernels_for(KernelSpec::Simd);
+    let mut rng = Rng::new(0xFA57);
+    let pool = ThreadPool::new(3);
+    for round in 0..6 {
+        // ragged on purpose: d, n, dh, c, valid hit every residue mod 8
+        let bsz = 1 + rng.below(5) as usize;
+        let d = 33 + rng.below(77) as usize;
+        let n = 47 + rng.below(130) as usize;
+        let x = rand_t(&mut rng, &[bsz, d]);
+        let w = rand_t(&mut rng, &[d, n]);
+        for pool_opt in [None, Some(&pool)] {
+            let ma = native::matmul_exec_kern(&x, &w, pool_opt, a);
+            let mb = native::matmul_exec_kern(&x, &w, pool_opt, b);
+            assert_eq!(ma, mb, "matmul round {round} b={bsz} d={d} n={n}");
+        }
+
+        let hkv = 1 + rng.below(2) as usize;
+        let h = hkv * (1 + rng.below(3) as usize);
+        let dh = 9 + rng.below(40) as usize;
+        let c = 17 + rng.below(90) as usize;
+        let q = rand_t(&mut rng, &[bsz, h, dh]);
+        let k = rand_t(&mut rng, &[c, hkv, dh]);
+        let v = rand_t(&mut rng, &[c, hkv, dh]);
+        let mut q_pos: Vec<i32> =
+            (0..bsz).map(|_| rng.below(2 * c as u64) as i32 - 3).collect();
+        if bsz > 1 {
+            q_pos[0] = -1; // padding row stays identity
+        }
+        let valid = 1 + rng.below(c as u64) as i32;
+        for pool_opt in [None, Some(&pool)] {
+            let pa = native::chunk_attn_exec_kern(&q, &k, &v, &q_pos, 2,
+                                                  valid, pool_opt, a);
+            let pb = native::chunk_attn_exec_kern(&q, &k, &v, &q_pos, 2,
+                                                  valid, pool_opt, b);
+            assert_eq!(pa.o, pb.o, "attn o round {round} dh={dh} c={c}");
+            assert_eq!(pa.m, pb.m, "attn m round {round}");
+            assert_eq!(pa.l, pb.l, "attn l round {round}");
+
+            let embs = rand_t(&mut rng, &[c, hkv, dh]);
+            assert_eq!(
+                native::router_score_exec_kern(&q, &embs, pool_opt, a),
+                native::router_score_exec_kern(&q, &embs, pool_opt, b),
+                "router round {round}"
+            );
+        }
+
+        // merge + finalize tails
+        let p1 = native::chunk_attn_exec_kern(&q, &k, &v, &q_pos, 0,
+                                              c as i32, None, a);
+        let p2 = native::chunk_attn_exec_kern(&q, &k, &v, &q_pos, 7,
+                                              valid, None, a);
+        let merge = |kern: &'static Kernels| -> Partials {
+            let mut acc = p1.clone();
+            for row in 0..bsz {
+                native::merge2_row_into_kern(kern, &mut acc, row, &p2, row);
+            }
+            acc
+        };
+        let (ga, gb) = (merge(a), merge(b));
+        assert_eq!(ga.o, gb.o, "merge round {round}");
+        assert_eq!(ga.l, gb.l, "merge l round {round}");
+        let mut fa = vec![0f32; bsz * h * dh];
+        let mut fb = vec![0f32; bsz * h * dh];
+        native::finalize_into_kern(a, &ga, &mut fa);
+        native::finalize_into_kern(b, &gb, &mut fb);
+        assert_eq!(fa, fb, "finalize round {round}");
+    }
+}
+
+/// The `scalar` flavor preserves the seed kernels bit-for-bit: compare
+/// against naive inline references that replicate the seed arithmetic
+/// (multiply-then-add, sequential `k`-ascending reductions).
+#[test]
+fn scalar_flavor_reproduces_seed_kernels() {
+    let kern = kernels_for(KernelSpec::Scalar);
+    let mut rng = Rng::new(0x5EED2);
+
+    // matmul: plain (i, k, j) triple loop == seed tiled order
+    let (b, d, n) = (3usize, 70usize, 101usize);
+    let x = rand_t(&mut rng, &[b, d]);
+    let w = rand_t(&mut rng, &[d, n]);
+    let got = native::matmul_exec_kern(&x, &w, None, kern);
+    let (xs, ws) = (x.as_f32(), w.as_f32());
+    let mut want = vec![0f32; b * n];
+    for i in 0..b {
+        for k in 0..d {
+            let xv = xs[i * d + k];
+            for j in 0..n {
+                want[i * n + j] += xv * ws[k * n + j];
+            }
+        }
+    }
+    assert_eq!(got.as_f32(), &want[..], "seed matmul arithmetic");
+
+    // chunk attention over REAL K/V from the synthetic store
+    let store = synthetic_store().expect("synthetic store");
+    let dom = store.domain(SYNTH_DOMAIN).expect("domain");
+    let (kc, vc) = dom.chunk_kv(0, 1);
+    let (c, hkv, dh) = (kc.shape()[0], kc.shape()[1], kc.shape()[2]);
+    let h = hkv * 2;
+    let q = rand_t(&mut rng, &[2, h, dh]);
+    let q_pos = [(2 * c) as i32, (c + 3) as i32];
+    let k_base = c as i32; // chunk 1 sits at base c
+    let got = native::chunk_attn_exec_kern(&q, kc, vc, &q_pos, k_base,
+                                           c as i32, None, kern);
+    // inline seed reference
+    let group = h / hkv;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let (qs, ks, vs) = (q.as_f32(), kc.as_f32(), vc.as_f32());
+    let mut wo = vec![0f32; 2 * h * dh];
+    let mut wm = vec![f32::NEG_INFINITY; 2 * h];
+    let mut wl = vec![0f32; 2 * h];
+    for r in 0..2 * h {
+        let (bi, hi) = (r / h, r % h);
+        let vis = ((q_pos[bi] - k_base + 1).clamp(0, c as i32)) as usize;
+        if vis == 0 {
+            continue;
+        }
+        let kv = hi / group;
+        let qrow = &qs[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
+        let mut scores = vec![0f32; vis];
+        let mut mx = f32::NEG_INFINITY;
+        for (j, slot) in scores.iter_mut().enumerate() {
+            let krow = &ks[(j * hkv + kv) * dh..(j * hkv + kv + 1) * dh];
+            let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+            *slot = dot * scale;
+            mx = mx.max(*slot);
+        }
+        let mut li = 0f32;
+        for (j, &s) in scores.iter().enumerate() {
+            let p = (s - mx).exp();
+            li += p;
+            let vrow = &vs[(j * hkv + kv) * dh..(j * hkv + kv + 1) * dh];
+            for (o, &vv) in
+                wo[r * dh..(r + 1) * dh].iter_mut().zip(vrow)
+            {
+                *o += p * vv;
+            }
+        }
+        wm[r] = mx;
+        wl[r] = li;
+    }
+    assert_eq!(got.o.as_f32(), &wo[..], "seed attn o");
+    assert_eq!(got.m.as_f32(), &wm[..], "seed attn m");
+    assert_eq!(got.l.as_f32(), &wl[..], "seed attn l");
+
+    // router scores against the store's layer-0 embeddings
+    let embs = dom.embeddings(0);
+    let got = native::router_score_exec_kern(&q, embs, None, kern);
+    let (cc, ehkv) = (embs.shape()[0], embs.shape()[1]);
+    let es = embs.as_f32();
+    let egroup = h / ehkv;
+    for bi in 0..2 {
+        for ci in 0..cc {
+            let mut acc = 0f32;
+            for hi in 0..h {
+                let kv = hi / egroup;
+                let qrow = &qs[(bi * h + hi) * dh..(bi * h + hi + 1) * dh];
+                let erow =
+                    &es[(ci * ehkv + kv) * dh..(ci * ehkv + kv + 1) * dh];
+                acc +=
+                    qrow.iter().zip(erow).map(|(a, b)| a * b).sum::<f32>();
+            }
+            assert_eq!(got.as_f32()[bi * cc + ci], acc / h as f32,
+                       "seed router cell ({bi},{ci})");
+        }
+    }
+}
+
+/// The synthetic store is built on the pinned scalar flavor regardless
+/// of the ambient kernel selection: two builds in this process (whose
+/// global flavor may be anything — CI sets MOSKA_KERNEL) are
+/// bit-identical, which is what lets remote deployments mix per-node
+/// flavors without tripping the digest handshake.
+#[test]
+fn synthetic_store_flavor_independent() {
+    let s1 = synthetic_store().expect("store 1");
+    let s2 = synthetic_store().expect("store 2");
+    assert_eq!(s1.content_digest(), s2.content_digest());
+}
+
+fn flavor_engine(spec: KernelSpec, threads: usize) -> Engine {
+    let model = ModelConfig::tiny();
+    let cfg = ServingConfig {
+        top_k: Some(4),
+        max_batch: 16,
+        exec_threads: threads,
+        kernel: spec,
+        ..Default::default()
+    };
+    let be = NativeBackend::with_threads(model.clone(), SYNTH_CHUNK,
+                                         threads)
+        .with_kernel_spec(spec);
+    let mut eng = Engine::new(
+        Box::new(be),
+        Weights::synthetic(model, 0xF1A404),
+        SharedStore::empty(SYNTH_CHUNK),
+        cfg,
+        1024,
+    );
+    let tokens: Vec<i32> =
+        (0..4 * SYNTH_CHUNK).map(|i| (i % 251) as i32).collect();
+    eng.register_domain("dom", &tokens).expect("register");
+    eng
+}
+
+fn decode_tokens(spec: KernelSpec, threads: usize) -> Vec<Vec<i32>> {
+    let mut eng = flavor_engine(spec, threads);
+    for i in 0..4 {
+        let p: Vec<i32> =
+            (0..8).map(|j| ((i * 31 + j * 7) % 256) as i32).collect();
+        eng.submit(Some("dom"), p, 6, Sampler::Greedy).unwrap();
+    }
+    let mut results = eng.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    results.into_iter().map(|r| r.tokens).collect()
+}
+
+/// Acceptance surface: decode tokens are identical across kernel
+/// flavors and across thread counts (engine path, routed top-k).
+#[test]
+fn engine_tokens_identical_across_flavors_and_threads() {
+    let base = decode_tokens(KernelSpec::Scalar, 1);
+    assert_eq!(base, decode_tokens(KernelSpec::Simd, 1),
+               "scalar vs simd tokens");
+    assert_eq!(base, decode_tokens(KernelSpec::Lanes8, 1),
+               "scalar vs lanes8 tokens");
+    assert_eq!(base, decode_tokens(KernelSpec::Simd, 3),
+               "simd serial vs pooled tokens");
+}
+
+/// Same property on the disagg cluster (both nodes on one flavor),
+/// over the scalar-pinned synthetic store.
+#[test]
+fn disagg_tokens_identical_across_flavors() {
+    let domains =
+        vec![SYNTH_DOMAIN.to_string(), SYNTH_DOMAIN_B.to_string()];
+    let run = |spec: KernelSpec| {
+        let store = Arc::new(synthetic_store().expect("store"));
+        let mk = || -> Arc<dyn Backend> {
+            Arc::new(
+                NativeBackend::with_threads(ModelConfig::tiny(),
+                                            SYNTH_CHUNK, 1)
+                    .with_kernel_spec(spec),
+            )
+        };
+        let mut cluster = DisaggCluster::with_backends(
+            mk(), mk(), synthetic_weights(), store, Some(4), 32,
+        );
+        cluster.run_point_mixed(4, &domains, 16, 6).expect("run").tokens
+    };
+    let scalar = run(KernelSpec::Scalar);
+    assert_eq!(scalar, run(KernelSpec::Simd), "disagg scalar vs simd");
+    assert_eq!(scalar, run(KernelSpec::Lanes8),
+               "disagg scalar vs lanes8");
+}

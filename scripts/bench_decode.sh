@@ -43,6 +43,20 @@ if [ $LINT_RC -ne 0 ]; then
     [ $STRICT -eq 1 ] && exit 1
 fi
 
+echo "== kernel microbench (scalar vs lanes8 vs detected SIMD) =="
+cargo bench --bench kernels || exit 1
+
+KOUT=bench_out/BENCH_kernels.json
+if [ -f "$KOUT" ]; then
+    cp "$KOUT" ../BENCH_kernels.json 2>/dev/null || cp "$KOUT" BENCH_kernels.json
+    echo "kernel trajectory:"
+    cat "$KOUT"
+    echo
+else
+    echo "error: $KOUT was not produced" >&2
+    exit 1
+fi
+
 echo "== e2e_serving bench (native decode section) =="
 cargo bench --bench e2e_serving || exit 1
 

@@ -63,8 +63,11 @@ else
     echo "cargo clippy not installed — skipping lint"
 fi
 
-echo "== cargo test -q =="
-cargo test -q || FAIL=1
+echo "== cargo test -q (MOSKA_KERNEL=scalar) =="
+MOSKA_KERNEL=scalar cargo test -q || FAIL=1
+
+echo "== cargo test -q (MOSKA_KERNEL=simd) =="
+MOSKA_KERNEL=simd cargo test -q || FAIL=1
 
 if [ "$RUN_BENCH" = "1" ]; then
     echo "== bench smoke: e2e_serving (native decode section) =="
@@ -77,6 +80,43 @@ if [ "$RUN_BENCH" = "1" ]; then
         echo
     else
         echo "error: bench_out/BENCH_decode.json was not produced" >&2
+        FAIL=1
+    fi
+fi
+
+if [ "$RUN_BENCH" = "1" ]; then
+    echo "== kernel flavor A/B smoke =="
+    # the SIMD-layer acceptance surface: bit-identical decode tokens
+    # across MOSKA_KERNEL=scalar|simd|lanes8 AND across thread counts
+    # (the simd run uses 2 threads, the others 1)
+    if cargo build --release --bin moska; then
+        BIN=target/release/moska
+        mkdir -p bench_out
+        if MOSKA_KERNEL=scalar "$BIN" disagg --synthetic --batches 2,4 \
+               --steps 4 --threads 1 \
+               --emit-tokens bench_out/tokens_scalar.json \
+           && MOSKA_KERNEL=simd "$BIN" disagg --synthetic --batches 2,4 \
+               --steps 4 --threads 2 \
+               --emit-tokens bench_out/tokens_simd.json \
+           && MOSKA_KERNEL=lanes8 "$BIN" disagg --synthetic --batches 2,4 \
+               --steps 4 --threads 1 \
+               --emit-tokens bench_out/tokens_lanes8.json; then
+            if cmp -s bench_out/tokens_scalar.json \
+                      bench_out/tokens_simd.json \
+               && cmp -s bench_out/tokens_scalar.json \
+                        bench_out/tokens_lanes8.json; then
+                echo "kernel A/B smoke: tokens bit-identical across \
+scalar|simd|lanes8 and thread counts"
+            else
+                echo "error: decode tokens diverged across kernel flavors" >&2
+                FAIL=1
+            fi
+        else
+            echo "error: kernel A/B smoke run failed" >&2
+            FAIL=1
+        fi
+    else
+        echo "error: release build for the kernel A/B smoke failed" >&2
         FAIL=1
     fi
 fi
