@@ -178,7 +178,8 @@ fn fabric_bench() -> Vec<(String, Json)> {
     let specs =
         parse_shard_specs(&format!("{a1},{a2}")).expect("shard specs");
     let (sharded_fabric, store) =
-        ShardedFabric::connect(&specs, TransportCfg::default())
+        ShardedFabric::connect(&specs, TransportCfg::default(),
+                               moska::disagg::HealthCfg::default())
             .expect("connect shards");
     assert_eq!(store.resident_bytes(), 0,
                "sharded planner view must hold no shared K/V");
@@ -238,6 +239,17 @@ fn fabric_bench() -> Vec<(String, Json)> {
             println!("shard {id} {name:<11}: {v:.0}");
             out.push((key, Json::num(v)));
         }
+        // elastic health gauges (0 healthy / 1 degraded / 2 down /
+        // 3 probing): a clean loopback run must end all-healthy
+        let key = format!("fabric_health_state_shard{id}");
+        let v = g(&sharded, &key);
+        assert_eq!(v, 0.0, "shard {id} not healthy after clean run");
+        out.push((key, Json::num(v)));
+    }
+    for name in ["fabric_failovers", "fabric_resent_frames"] {
+        let v = g(&sharded, name);
+        assert_eq!(v, 0.0, "{name} nonzero in an undisturbed run");
+        out.push((name.to_string(), Json::num(v)));
     }
     out
 }

@@ -107,10 +107,12 @@ pub struct ServingConfig {
     /// `MOSKA_PIN=1` — each disagg node's pool then maps onto a stable,
     /// disjoint core set (first step of the ROADMAP NUMA item).
     pub pin_threads: bool,
-    /// Static domain → shard assignment of a domain-sharded shared
-    /// store (JSON: `serving.shards` as `["legal=0", "code=1"]`; empty
-    /// = unsharded). The planner orders each step's shared-GEMM groups
-    /// shard-contiguously so per-shard batches are single slices — see
+    /// Static domain → replica-set assignment of a domain-sharded
+    /// shared store (JSON: `serving.shards` as `["legal=0", "code=1"]`;
+    /// repeat a domain — `["legal=0", "legal=1"]` — to replicate it;
+    /// empty = unsharded). The planner orders each step's shared-GEMM
+    /// groups shard-contiguously (by primary) so per-shard batches are
+    /// single slices — see
     /// [`ShardAssignment`][crate::plan::ShardAssignment] and
     /// `docs/ARCHITECTURE.md`.
     pub shards: crate::plan::ShardAssignment,

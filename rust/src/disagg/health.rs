@@ -1,0 +1,342 @@
+//! Per-replica health state machine for the elastic sharded fabric.
+//!
+//! Each shard connection of a [`ShardedFabric`][super::ShardedFabric]
+//! gets one [`HealthTracker`], fed by two signal classes:
+//!
+//! * **transport outcomes** — a completed exchange ([`on_ok`]) or a
+//!   connection-class failure ([`on_transport_error`]);
+//! * **load reports** — [`HealthInfo`] frames polled from the node
+//!   ([`observe`]), classified against the [`HealthCfg`] thresholds.
+//!
+//! ```text
+//!            hysteresis overloaded reports
+//!   Healthy ───────────────────────────────▶ Degraded
+//!      ▲  ◀───────────────────────────────     │
+//!      │       hysteresis ok observations      │ transport error
+//!      │ probe ok                              ▼
+//!   Probing ◀───────────────────────────────  Down
+//!      │          probe_interval elapsed       ▲
+//!      └───────────────────────────────────────┘
+//!                     probe failed
+//! ```
+//!
+//! Healthy↔Degraded transitions require `hysteresis` *consecutive*
+//! observations of the opposite class — a single slow step or one good
+//! report cannot flap the route (asserted by the property test below).
+//! A transport error short-circuits to `Down` from any state: the
+//! connection is gone, there is nothing gradual about it. `Down`
+//! replicas leave the routing pool entirely and are re-admitted only
+//! through a successful probe (reconnect + digest-verified handshake),
+//! rate-limited by `probe_interval`.
+//!
+//! Every transition takes an explicit `now: Instant`, so tests drive
+//! the clock deterministically.
+//!
+//! [`on_ok`]: HealthTracker::on_ok
+//! [`on_transport_error`]: HealthTracker::on_transport_error
+//! [`observe`]: HealthTracker::observe
+
+use std::time::{Duration, Instant};
+
+use crate::remote::codec::HealthInfo;
+
+/// Replica states, ordered by how eagerly the router uses them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Full member of the routing pool.
+    Healthy,
+    /// Overloaded per its own reports: steered around while any healthy
+    /// replica exists, but still usable (it answers correctly, just
+    /// slowly) — a domain whose only replicas are degraded keeps
+    /// decoding.
+    Degraded,
+    /// Connection dead; out of the routing pool until a probe succeeds.
+    Down,
+    /// A probe is in flight (or just being issued) for a down replica.
+    Probing,
+}
+
+impl HealthState {
+    /// Gauge encoding (`fabric_health_state_shard<i>`):
+    /// 0 healthy, 1 degraded, 2 down, 3 probing.
+    pub fn as_gauge(self) -> u8 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Degraded => 1,
+            HealthState::Down => 2,
+            HealthState::Probing => 3,
+        }
+    }
+}
+
+/// Thresholds + hysteresis knobs (CLI: `moska disagg --probe-ms`,
+/// `--health-every`).
+#[derive(Debug, Clone, Copy)]
+pub struct HealthCfg {
+    /// A report with more open connections than this counts overloaded.
+    pub degraded_queue: u32,
+    /// A report with a per-plan exec EWMA above this counts overloaded.
+    pub degraded_ewma_ns: u64,
+    /// Consecutive same-class observations required to move between
+    /// Healthy and Degraded (the anti-flap window).
+    pub hysteresis: u32,
+    /// Minimum spacing between probes of a down replica.
+    pub probe_interval: Duration,
+    /// Fabric-side cadence: poll a `Health` report from every routable
+    /// shard once per this many `collect()` calls (0 disables polling;
+    /// transport errors still drive the Down path).
+    pub poll_every: u32,
+}
+
+impl Default for HealthCfg {
+    fn default() -> HealthCfg {
+        HealthCfg {
+            degraded_queue: 8,
+            // the tiny-model plan executes in ~µs; 50ms of EWMA means
+            // the node is drowning (or swapping), not merely busy
+            degraded_ewma_ns: 50_000_000,
+            hysteresis: 3,
+            probe_interval: Duration::from_millis(500),
+            poll_every: 8,
+        }
+    }
+}
+
+/// One replica's health state machine (see module docs).
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    cfg: HealthCfg,
+    state: HealthState,
+    /// Consecutive overloaded observations while Healthy.
+    bad_streak: u32,
+    /// Consecutive ok observations while Degraded.
+    good_streak: u32,
+    /// When the replica entered Down / last failed a probe.
+    down_since: Option<Instant>,
+}
+
+impl HealthTracker {
+    pub fn new(cfg: HealthCfg) -> HealthTracker {
+        HealthTracker {
+            cfg,
+            state: HealthState::Healthy,
+            bad_streak: 0,
+            good_streak: 0,
+            down_since: None,
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    /// Usable for new submissions (not Down / mid-probe).
+    pub fn routable(&self) -> bool {
+        matches!(self.state, HealthState::Healthy | HealthState::Degraded)
+    }
+
+    /// A request/reply exchange completed — the strongest "alive and
+    /// serving" signal. Counts toward the Degraded→Healthy streak.
+    pub fn on_ok(&mut self) {
+        match self.state {
+            HealthState::Healthy => self.bad_streak = 0,
+            HealthState::Degraded => {
+                self.good_streak += 1;
+                if self.good_streak >= self.cfg.hysteresis {
+                    self.state = HealthState::Healthy;
+                    self.bad_streak = 0;
+                    self.good_streak = 0;
+                }
+            }
+            // replies can still drain from a connection we already
+            // classified down/probing; the probe decides re-admission
+            HealthState::Down | HealthState::Probing => {}
+        }
+    }
+
+    /// A connection-class failure (reset, timeout, refused): Down from
+    /// any state, immediately — no hysteresis on a dead socket.
+    pub fn on_transport_error(&mut self, now: Instant) {
+        self.state = HealthState::Down;
+        self.bad_streak = 0;
+        self.good_streak = 0;
+        self.down_since = Some(now);
+    }
+
+    /// Classify a polled load report. Overload needs `hysteresis`
+    /// consecutive reports to degrade; recovery needs the same to
+    /// re-promote.
+    pub fn observe(&mut self, h: &HealthInfo) {
+        let overloaded = h.queue_depth > self.cfg.degraded_queue
+            || h.exec_ns_ewma > self.cfg.degraded_ewma_ns;
+        match (self.state, overloaded) {
+            (HealthState::Healthy, true) => {
+                self.bad_streak += 1;
+                if self.bad_streak >= self.cfg.hysteresis {
+                    self.state = HealthState::Degraded;
+                    self.bad_streak = 0;
+                    self.good_streak = 0;
+                }
+            }
+            (HealthState::Healthy, false) => self.bad_streak = 0,
+            (HealthState::Degraded, false) => {
+                self.good_streak += 1;
+                if self.good_streak >= self.cfg.hysteresis {
+                    self.state = HealthState::Healthy;
+                    self.bad_streak = 0;
+                    self.good_streak = 0;
+                }
+            }
+            (HealthState::Degraded, true) => self.good_streak = 0,
+            (HealthState::Down | HealthState::Probing, _) => {}
+        }
+    }
+
+    /// True when a Down replica is due a probe; flips the state to
+    /// Probing so concurrent callers do not double-probe. The caller
+    /// must follow up with [`Self::on_probe_result`].
+    pub fn should_probe(&mut self, now: Instant) -> bool {
+        if self.state != HealthState::Down {
+            return false;
+        }
+        let due = match self.down_since {
+            Some(t) => now.saturating_duration_since(t)
+                >= self.cfg.probe_interval,
+            None => true,
+        };
+        if due {
+            self.state = HealthState::Probing;
+        }
+        due
+    }
+
+    /// Outcome of the probe issued after [`Self::should_probe`]: success
+    /// re-admits the replica as Healthy, failure returns it to Down and
+    /// restarts the probe clock.
+    pub fn on_probe_result(&mut self, ok: bool, now: Instant) {
+        debug_assert_eq!(self.state, HealthState::Probing,
+                         "probe result without a probe");
+        if ok {
+            self.state = HealthState::Healthy;
+            self.bad_streak = 0;
+            self.good_streak = 0;
+            self.down_since = None;
+        } else {
+            self.state = HealthState::Down;
+            self.down_since = Some(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> HealthCfg {
+        HealthCfg {
+            degraded_queue: 4,
+            degraded_ewma_ns: 1_000_000,
+            hysteresis: 3,
+            probe_interval: Duration::from_millis(100),
+            poll_every: 1,
+        }
+    }
+
+    fn ok_report() -> HealthInfo {
+        HealthInfo { queue_depth: 1, in_flight: 0, exec_ns_ewma: 1000 }
+    }
+
+    fn bad_report() -> HealthInfo {
+        HealthInfo { queue_depth: 9, in_flight: 9, exec_ns_ewma: 1000 }
+    }
+
+    #[test]
+    fn degrade_and_recover_need_hysteresis() {
+        let mut t = HealthTracker::new(cfg());
+        t.observe(&bad_report());
+        t.observe(&bad_report());
+        assert_eq!(t.state(), HealthState::Healthy, "two bads < window");
+        t.observe(&bad_report());
+        assert_eq!(t.state(), HealthState::Degraded);
+        t.on_ok();
+        t.observe(&ok_report());
+        assert_eq!(t.state(), HealthState::Degraded, "two goods < window");
+        t.on_ok();
+        assert_eq!(t.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn interleaved_signals_reset_the_streak() {
+        let mut t = HealthTracker::new(cfg());
+        for _ in 0..10 {
+            t.observe(&bad_report());
+            t.observe(&bad_report());
+            t.observe(&ok_report()); // breaks every 2-long bad streak
+        }
+        assert_eq!(t.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn transport_error_is_immediate_down_and_probe_readmits() {
+        let t0 = Instant::now();
+        let mut t = HealthTracker::new(cfg());
+        t.on_transport_error(t0);
+        assert_eq!(t.state(), HealthState::Down);
+        assert!(!t.routable());
+        // load reports cannot resurrect a dead connection
+        t.observe(&ok_report());
+        t.on_ok();
+        assert_eq!(t.state(), HealthState::Down);
+        // not due before the interval
+        assert!(!t.should_probe(t0 + Duration::from_millis(50)));
+        assert!(t.should_probe(t0 + Duration::from_millis(100)));
+        assert_eq!(t.state(), HealthState::Probing);
+        // a failed probe restarts the clock
+        let t1 = t0 + Duration::from_millis(110);
+        t.on_probe_result(false, t1);
+        assert_eq!(t.state(), HealthState::Down);
+        assert!(!t.should_probe(t1 + Duration::from_millis(99)));
+        assert!(t.should_probe(t1 + Duration::from_millis(100)));
+        t.on_probe_result(true, t1 + Duration::from_millis(101));
+        assert_eq!(t.state(), HealthState::Healthy);
+        assert!(t.routable());
+    }
+
+    /// Property: the Healthy↔Degraded edge NEVER fires without
+    /// `hysteresis` consecutive same-class observations — random
+    /// report/ok streams cannot flap the state faster than the window.
+    #[test]
+    fn prop_no_flapping_inside_hysteresis_window() {
+        let c = cfg();
+        let mut rng = Rng::new(0xFAB_41C);
+        for trial in 0..200 {
+            let mut t = HealthTracker::new(c);
+            let mut streak = 0u32; // consecutive same-class inputs
+            let mut last_bad = false;
+            let mut prev_state = t.state();
+            for step in 0..200 {
+                let bad = rng.below(2) == 0;
+                streak = if step > 0 && bad == last_bad { streak + 1 }
+                         else { 1 };
+                last_bad = bad;
+                if bad {
+                    t.observe(&bad_report());
+                } else if rng.below(2) == 0 {
+                    t.observe(&ok_report());
+                } else {
+                    t.on_ok();
+                }
+                let state = t.state();
+                if state != prev_state {
+                    assert!(
+                        streak >= c.hysteresis,
+                        "trial {trial} step {step}: {prev_state:?} -> \
+                         {state:?} after a streak of only {streak}",
+                    );
+                }
+                prev_state = state;
+            }
+        }
+    }
+}

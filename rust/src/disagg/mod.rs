@@ -66,8 +66,10 @@
 //! analogue of Fig 5: shared-node traffic flat in batch size, unique-node
 //! traffic linear, GEMM batching factor rising with batch.
 
+pub mod health;
 pub mod sharded;
 
+pub use health::{HealthCfg, HealthState, HealthTracker};
 pub use sharded::{parse_shard_specs, ShardSpec, ShardedFabric};
 
 use std::collections::BTreeMap;
@@ -100,6 +102,56 @@ use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
 // ------------------------------------------------------------- the fabric
+
+/// Typed fabric failures, carried inside `anyhow` chains so callers can
+/// downcast and react instead of pattern-matching on message strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FabricError {
+    /// The connection to a shard died and the reconnect budget is
+    /// exhausted. Failover-eligible: plan execution is pure, so the
+    /// unreplied frames can be re-placed on any replica verbatim.
+    /// Fatal handshake failures (version/store mismatch) and node-side
+    /// `Error` replies do NOT carry this marker — those are
+    /// deterministic and would recur on every replica.
+    ShardDown { addr: String },
+    /// Every replica of the domain is down (or fatally mismatched):
+    /// the engine surfaces this as a per-request error for requests
+    /// pinned to the domain and keeps decoding the rest of the batch —
+    /// never a process abort.
+    DomainUnavailable { domain: String },
+}
+
+impl std::fmt::Display for FabricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FabricError::ShardDown { addr } => {
+                write!(f, "shard {addr} is down")
+            }
+            FabricError::DomainUnavailable { domain } => {
+                write!(f, "domain '{domain}' has no surviving replica")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}
+
+/// Elastic-fabric observability snapshot: per-shard health states plus
+/// the failover counters. [`DisaggCluster::run_point`] publishes it as
+/// `fabric_health_state_shard<i>` / `fabric_failovers` /
+/// `fabric_resent_frames` gauges, and the `e2e_serving` bench emits
+/// those into `BENCH_decode.json`.
+#[derive(Debug, Clone, Default)]
+pub struct ElasticSnapshot {
+    /// Per-shard health gauge codes
+    /// ([`HealthState::as_gauge`]: 0 healthy, 1 degraded, 2 down,
+    /// 3 probing), indexed by shard id.
+    pub health: Vec<u8>,
+    /// Submission batches moved to a replica after a shard death.
+    pub failovers: u64,
+    /// Request frames re-placed on replicas by those failovers.
+    pub resent_frames: u64,
+}
 
 /// What comes back across the fabric for one shipped plan.
 #[derive(Debug)]
@@ -138,6 +190,11 @@ pub trait SharedFabric: Send {
             Some(s) => vec![(0, s)],
             None => Vec::new(),
         }
+    }
+    /// Elastic state (health + failover counters) for fabrics that
+    /// replicate; `None` for fabrics with nothing to fail over to.
+    fn elastic(&self) -> Option<ElasticSnapshot> {
+        None
     }
 }
 
@@ -344,6 +401,12 @@ pub struct SimPoint {
     /// Per-request greedy token streams (`[batch][steps]`) — the
     /// bit-comparability surface for local-vs-remote verification.
     pub tokens: Vec<Vec<i32>>,
+    /// Per-request failures `(batch row, error)`: requests whose domain
+    /// lost every replica mid-run ([`FabricError::DomainUnavailable`]).
+    /// Their token rows stop at the failure step; the rest of the batch
+    /// decodes to completion. Empty on a clean run — so clean token
+    /// JSONs stay byte-comparable across fabric configurations.
+    pub errors: Vec<(usize, String)>,
 }
 
 impl DisaggCluster {
@@ -412,6 +475,12 @@ impl DisaggCluster {
     /// remote fabric, empty in-process.
     pub fn fabric_shard_stats(&self) -> Vec<(usize, Arc<FabricStats>)> {
         self.fabric.shard_stats()
+    }
+
+    /// Elastic-fabric snapshot (health states + failover counters);
+    /// `None` for fabrics without replication.
+    pub fn fabric_elastic(&self) -> Option<ElasticSnapshot> {
+        self.fabric.elastic()
     }
 
     /// Seed `b` decode-ready requests over `domain` with `unique_tokens`
@@ -703,11 +772,60 @@ impl DisaggCluster {
         let calls0 = self.sstats.calls;
 
         let mut tokens: Vec<Vec<i32>> = vec![Vec::with_capacity(steps); b];
+        let mut errors: Vec<(usize, String)> = Vec::new();
+        // surviving request → original batch row (failed requests are
+        // dropped mid-run, the rest keep decoding under their own rows)
+        let mut rows: Vec<usize> = (0..b).collect();
         let t0 = Instant::now();
-        for _ in 0..steps {
-            self.step(&mut reqs)?;
-            for (i, r) in reqs.iter().enumerate() {
-                tokens[i].push(r.cur);
+        let mut done = 0usize;
+        while done < steps && !reqs.is_empty() {
+            match self.step(&mut reqs) {
+                Ok(()) => {
+                    for (i, r) in reqs.iter().enumerate() {
+                        tokens[rows[i]].push(r.cur);
+                    }
+                    done += 1;
+                }
+                Err(e) => {
+                    // only a domain losing its last replica degrades to
+                    // per-request errors; anything else stays fatal
+                    let Some(FabricError::DomainUnavailable { domain }) =
+                        e.downcast_ref::<FabricError>().cloned()
+                    else {
+                        for r in reqs.iter_mut() {
+                            r.kv.release(&mut self.pool);
+                        }
+                        return Err(e);
+                    };
+                    // the failed step appended K/V for some layer
+                    // prefix; un-append it everywhere so the retried
+                    // step starts from the committed state
+                    for r in reqs.iter_mut() {
+                        r.kv.rollback_uncommitted();
+                    }
+                    let msg = format!("{e:#}");
+                    let before = reqs.len();
+                    let old_reqs = std::mem::take(&mut reqs);
+                    let old_rows = std::mem::take(&mut rows);
+                    for (mut r, row) in
+                        old_reqs.into_iter().zip(old_rows)
+                    {
+                        if r.domain == domain {
+                            r.kv.release(&mut self.pool);
+                            errors.push((row, msg.clone()));
+                        } else {
+                            reqs.push(r);
+                            rows.push(row);
+                        }
+                    }
+                    // a report naming a domain this batch does not even
+                    // use would otherwise retry the same step forever
+                    anyhow::ensure!(
+                        reqs.len() < before,
+                        "fabric reported unavailable domain '{domain}' \
+                         with no requests on it: {msg}",
+                    );
+                }
             }
         }
         let wall = t0.elapsed();
@@ -747,10 +865,22 @@ impl DisaggCluster {
                 }
             }
         }
+        // elastic fabrics also expose health + failover gauges
+        if let Some(el) = self.fabric.elastic() {
+            for (i, h) in el.health.iter().enumerate() {
+                self.metrics.gauge(
+                    &format!("fabric_health_state_shard{i}"), *h as f64,
+                );
+            }
+            self.metrics.gauge("fabric_failovers", el.failovers as f64);
+            self.metrics
+                .gauge("fabric_resent_frames", el.resent_frames as f64);
+        }
+        let done_steps = done.max(1);
         Ok(SimPoint {
             batch: b,
             steps,
-            mean_step: wall / steps as u32,
+            mean_step: wall / done_steps as u32,
             shared_bytes_per_step: (shared1.1 - shared0.1) as f64
                 / steps as f64,
             unique_bytes_per_step: (unique1.1 - unique0.1) as f64
@@ -763,6 +893,7 @@ impl DisaggCluster {
             shared_busy_frac: (busy1 - busy0) as f64
                 / wall.as_nanos() as f64,
             tokens,
+            errors,
         })
     }
 }
@@ -1042,8 +1173,16 @@ pub fn run_sim(args: &Args) -> Result<()> {
     let (fabric, shared): (Box<dyn SharedFabric>, Arc<SharedStore>) =
         if !shards_arg.is_empty() {
             let specs = parse_shard_specs(&shards_arg)?;
+            // health-routing knobs (replicated fabrics only)
+            let health_cfg = HealthCfg {
+                probe_interval: Duration::from_millis(
+                    args.usize("probe-ms")? as u64,
+                ),
+                poll_every: args.usize("health-every")? as u32,
+                ..HealthCfg::default()
+            };
             let (f, store) = ShardedFabric::connect(
-                &specs, crate::remote::TransportCfg::default(),
+                &specs, crate::remote::TransportCfg::default(), health_cfg,
             )?;
             anyhow::ensure!(
                 store.chunk == chunk,
@@ -1075,9 +1214,15 @@ pub fn run_sim(args: &Args) -> Result<()> {
                 }
             }
             let mut asn = crate::plan::ShardAssignment::new();
-            for (d, s) in f.assignment() {
-                println!("  domain {d:<12} -> shard {s} ({})", addrs[s]);
-                asn.assign(&d, s)?;
+            for (d, replicas) in f.assignment() {
+                let names: Vec<String> = replicas
+                    .iter()
+                    .map(|&s| format!("shard {s} ({})", addrs[s]))
+                    .collect();
+                println!("  domain {d:<12} -> {}", names.join(", "));
+                for &s in &replicas {
+                    asn.assign(&d, s)?;
+                }
             }
             shard_assignment = Some(asn);
             (Box::new(f), Arc::new(store))
@@ -1152,8 +1297,12 @@ pub fn run_sim(args: &Args) -> Result<()> {
         "sh_flops/step", "uq_flops/step", "gemm_N", "sh_busy",
     ]);
     let mut token_points: Vec<Json> = Vec::new();
-    for &b in &batches {
+    for (i, &b) in batches.iter().enumerate() {
         let p = cluster.run_point_mixed(b, &domains, 96, steps)?;
+        // per-point progress on stderr: the CI chaos smoke keys its
+        // mid-run replica kill off the first of these lines
+        crate::info!("disagg", "point done: batch {b} ({}/{})",
+                     i + 1, batches.len());
         table.row(vec![
             b.to_string(),
             format!("{:?}", p.mean_step),
@@ -1164,7 +1313,12 @@ pub fn run_sim(args: &Args) -> Result<()> {
             format!("{:.2}", p.batching_factor),
             format!("{:.1}%", p.shared_busy_frac * 100.0),
         ]);
-        token_points.push(Json::obj(vec![
+        // a domain losing every replica surfaces HERE, per request —
+        // the run itself completes (exit 0) with the survivors' tokens
+        for (row, err) in &p.errors {
+            eprintln!("request error: batch {b} row {row}: {err}");
+        }
+        let mut point = vec![
             ("batch", Json::num(b as f64)),
             ("tokens", Json::arr(
                 p.tokens
@@ -1174,7 +1328,20 @@ pub fn run_sim(args: &Args) -> Result<()> {
                     ))
                     .collect(),
             )),
-        ]));
+        ];
+        // only on failure, so clean token JSONs stay byte-comparable
+        if !p.errors.is_empty() {
+            point.push(("errors", Json::arr(
+                p.errors
+                    .iter()
+                    .map(|(row, err)| Json::obj(vec![
+                        ("row", Json::num(*row as f64)),
+                        ("error", Json::str(err)),
+                    ]))
+                    .collect(),
+            )));
+        }
+        token_points.push(Json::obj(point));
     }
     let title = if !shards_arg.is_empty() {
         format!("disaggregated sharded run ({} shards, {} domains)",
@@ -1202,6 +1369,13 @@ pub fn run_sim(args: &Args) -> Result<()> {
                 e["serialize_ns"] as f64 / 1e6,
             );
         }
+    }
+    if let Some(el) = cluster.fabric_elastic() {
+        // greppable one-liner (the CI chaos smoke asserts failovers>=1)
+        println!(
+            "fabric elastic: failovers={} resent_frames={} health={:?}",
+            el.failovers, el.resent_frames, el.health,
+        );
     }
 
     if !emit_tokens.is_empty() {

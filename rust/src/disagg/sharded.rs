@@ -1,11 +1,12 @@
-//! Domain-sharded remote fabric: horizontal scale-out of the shared-KV
-//! side (paper §III.C carried to its disaggregated conclusion).
+//! Domain-sharded, replicated remote fabric: horizontal scale-out of
+//! the shared-KV side (paper §III.C carried to its disaggregated
+//! conclusion), made elastic.
 //!
 //! A [`ShardedFabric`] owns one [`RemoteFabric`] per shard — each shard
-//! a `moska shared-node` process holding a **disjoint, domain-partitioned
-//! slice** of the Domain Shared KV store (`moska shared-node --domains
-//! a,b`). Per decode layer, every
-//! [`SharedGroupPlan`][crate::plan::SharedGroupPlan] is routed to the
+//! a `moska shared-node` process holding a domain-partitioned slice of
+//! the Domain Shared KV store (`moska shared-node --domains a,b`). Per
+//! decode layer, every
+//! [`SharedGroupPlan`][crate::plan::SharedGroupPlan] is routed to a
 //! shard resident for its domain; the per-shard request batches fan out
 //! eagerly (all shards execute their slices concurrently while the
 //! unique node runs its own attention) and
@@ -14,28 +15,53 @@
 //! in-process run (asserted by `tests/integration_shard.rs` and the
 //! `scripts/ci.sh` two-shard smoke stage).
 //!
-//! The static domain→shard assignment comes from the `--shards` CLI
-//! surface ([`parse_shard_specs`]) and is validated against every node's
-//! `Hello`/`Sync` advertisement: chunk geometry must agree across the
-//! fabric, a pinned domain must be resident on its pinned shard, and an
-//! unpinned domain must be resident on exactly one shard. Each shard's
-//! advertised store (resident-domain set + per-shard digest) becomes
-//! its reconnect expectation, so a shard that restarts with different
-//! content or fewer domains fails the retry handshake. See
-//! `docs/ARCHITECTURE.md` for the data-flow picture and
+//! ## Replication, health, failover
+//!
+//! A domain resident on **several** shards is a *replica set*, not an
+//! error: connect-time validation already requires multi-resident
+//! planner state to be bit-identical (below), so any replica serves the
+//! same plans with the same bits. Routing round-robins each domain's
+//! groups across its **Healthy** replicas, steering away from replicas
+//! a [`HealthTracker`] classifies Degraded (overloaded per their own
+//! [`Health`][crate::remote::codec::WireMsg::Health] reports) and
+//! skipping Down ones entirely. When a shard dies mid-step, its
+//! unreplied frames are re-placed verbatim on surviving replicas (plan
+//! execution is pure — the frames are routed as *bytes*, encoded once);
+//! a domain with no surviving replica fails the step with
+//! [`FabricError::DomainUnavailable`], which the engine converts into
+//! per-request errors, never a process abort. A restarted shard is
+//! re-admitted by the Probing loop: a single reconnect + the
+//! digest-verified handshake, rate-limited by
+//! [`HealthCfg::probe_interval`]. See the failover section of
+//! `docs/ARCHITECTURE.md`.
+//!
+//! The domain→replica-set assignment comes from the `--shards` CLI
+//! surface ([`parse_shard_specs`]: repeated `domain=addr` pins build
+//! the set) and is validated against every node's `Hello`/`Sync`
+//! advertisement: chunk geometry must agree across the fabric, a
+//! pinned domain must be resident on its pinned shard, and a domain
+//! advertised by several shards must be advertised **bit-identically**
+//! by all of them. Each shard's advertised store (resident-domain set
+//! + per-shard digest) becomes its reconnect expectation, so a shard
+//! that restarts with different content or fewer domains fails the
+//! retry handshake — and fails re-admission probes. See
 //! `docs/WIRE_PROTOCOL.md` for the wire-level handshake.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::kvcache::shared_store::{DomainPlannerState, SharedStore};
 use crate::plan::SharedGroupPlan;
+use crate::remote::codec;
 use crate::remote::transport::{FabricStats, RemoteFabric, TransportCfg};
 use crate::tensor::Tensor;
 
-use super::{FabricReply, SharedFabric};
+use super::health::{HealthCfg, HealthState, HealthTracker};
+use super::{ElasticSnapshot, FabricError, FabricReply, SharedFabric};
 
 /// One `--shards` entry: a shard address plus any domains explicitly
 /// pinned to it (`domain=addr` entries naming the same address).
@@ -48,11 +74,14 @@ pub struct ShardSpec {
 
 /// Parse a `--shards` spec: comma-separated entries, each `addr` or
 /// `domain=addr`. Several pins may name the same address (they merge
-/// into one shard); shard order is first appearance.
+/// into one shard); pinning the same domain to several addresses makes
+/// those shards a **replica set** for it; shard order is first
+/// appearance.
 ///
 /// ```text
 /// --shards 10.0.0.1:7070,10.0.0.2:7070          # assignment from residency
 /// --shards legal=10.0.0.1:7070,code=10.0.0.2:7070
+/// --shards legal=10.0.0.1:7070,legal=10.0.0.2:7070   # 2-replica domain
 /// ```
 pub fn parse_shard_specs(spec: &str) -> Result<Vec<ShardSpec>> {
     let mut shards: Vec<ShardSpec> = Vec::new();
@@ -93,28 +122,57 @@ pub fn parse_shard_specs(spec: &str) -> Result<Vec<ShardSpec>> {
     Ok(shards)
 }
 
-/// The domain-sharded implementation of the disagg fabric seam (see the
-/// module docs).
+/// The domain-sharded, replicated implementation of the disagg fabric
+/// seam (see the module docs).
 pub struct ShardedFabric {
     /// `(addr, connection)` per shard, `--shards` order.
     shards: Vec<(String, RemoteFabric)>,
-    /// Static domain → shard-index assignment.
-    route: HashMap<String, usize>,
-    /// In-flight submission: for each group, in submission order, which
-    /// shard it went to (its position within that shard's batch is the
-    /// arrival order, so replies pop front-to-front).
+    /// Domain → replica set (shard indices, `--shards` order). One
+    /// entry = the classic partitioned case; several = replication.
+    route: HashMap<String, Vec<usize>>,
+    /// Per-shard health state machine (same indices as `shards`).
+    health: Vec<HealthTracker>,
+    health_cfg: HealthCfg,
+    /// Per-domain round-robin cursor over the healthy replica pool.
+    cursors: HashMap<String, usize>,
+    /// In-flight submission, in submission order: target shard, the
+    /// encoded request frame (kept for failover re-placement), and the
+    /// group's domain (for re-routing).
     order: Vec<usize>,
+    frames: Vec<Vec<u8>>,
+    group_domain: Vec<String>,
+    /// Groups submitted to each shard this round, in batch order —
+    /// replies zip against this front-to-front.
+    inflight: HashMap<usize, Vec<usize>>,
+    /// collect() calls, for the health-poll cadence.
+    collects: u64,
+    /// Shard deaths that moved work to a replica.
+    failovers: u64,
+    /// Frames re-placed on replicas by those failovers.
+    resent_frames: u64,
 }
 
 impl ShardedFabric {
     /// Connect every shard, `Sync` its planner state, derive and
-    /// validate the static domain→shard assignment, and assemble the
+    /// validate the domain→replica-set assignment, and assemble the
     /// union planner-view [`SharedStore`] (K/V-less:
     /// `resident_bytes() == 0`) the unique node plans against.
-    pub fn connect(specs: &[ShardSpec], cfg: TransportCfg)
+    ///
+    /// The transport config is clamped to a fast-failover profile
+    /// (small reconnect budget and retry count): with replicas — or
+    /// a per-request error path — available, spending the patient
+    /// single-node reconnect budget (~90 s at defaults) re-dialing a
+    /// dead shard would stall every healthy request behind it.
+    pub fn connect(specs: &[ShardSpec], cfg: TransportCfg,
+                   health_cfg: HealthCfg)
                    -> Result<(ShardedFabric, SharedStore)> {
         anyhow::ensure!(!specs.is_empty(),
                         "sharded fabric needs at least one shard");
+        let mut cfg = cfg;
+        cfg.reconnect_attempts = cfg.reconnect_attempts.min(3);
+        cfg.request_retries = cfg.request_retries.min(1);
+        cfg.connect_backoff_cap =
+            cfg.connect_backoff_cap.min(Duration::from_millis(500));
         let mut shards = Vec::with_capacity(specs.len());
         let mut synced = Vec::with_capacity(specs.len());
         for spec in specs {
@@ -148,8 +206,9 @@ impl ShardedFabric {
         }
         // a domain advertised by several shards must be advertised
         // bit-identically by all of them (same embeddings, geometry,
-        // token count) — otherwise the deployments have diverged and
-        // whichever shard the pin selects would silently win
+        // token count) — this is what makes multi-residency a replica
+        // set instead of a diverged deployment where whichever shard
+        // routing selects would silently win
         for (name, holders) in &residency {
             if holders.len() < 2 {
                 continue;
@@ -172,8 +231,10 @@ impl ShardedFabric {
                 );
             }
         }
-        // explicit pins win; each must actually be resident there
-        let mut route: HashMap<String, usize> = HashMap::new();
+        // explicit pins select the replica set: each pinned shard must
+        // actually hold the domain; several pins for one domain = its
+        // replicas
+        let mut route: HashMap<String, Vec<usize>> = HashMap::new();
         for (i, spec) in specs.iter().enumerate() {
             for pin in &spec.pins {
                 anyhow::ensure!(
@@ -187,53 +248,59 @@ impl ShardedFabric {
                         .map(|d| d.name.as_str())
                         .collect::<Vec<_>>(),
                 );
-                if let Some(prev) = route.insert(pin.clone(), i) {
-                    if prev != i {
-                        bail!("domain '{pin}' pinned to two shards \
-                               ({} and {})",
-                              specs[prev].addr, spec.addr);
-                    }
+                let set = route.entry(pin.clone()).or_default();
+                if !set.contains(&i) {
+                    set.push(i);
                 }
             }
         }
-        // unpinned domains: unique residency decides; ambiguity refused
+        // unpinned domains: every resident shard is a replica (a unique
+        // holder degenerates to the classic partitioned assignment)
         for (name, holders) in &residency {
-            if route.contains_key(name) {
-                continue;
-            }
-            match holders.as_slice() {
-                [one] => {
-                    route.insert(name.clone(), *one);
-                }
-                many => bail!(
-                    "domain '{name}' is resident on {} shards ({:?}) — \
-                     pin it with '{name}=<addr>' in --shards",
-                    many.len(),
-                    many.iter()
-                        .map(|&i| specs[i].addr.as_str())
-                        .collect::<Vec<_>>(),
-                ),
-            }
+            route.entry(name.clone()).or_insert_with(|| holders.clone());
         }
-        // planner view: each domain's synced state from its assigned
-        // shard (deterministic order via from_planner_states' BTreeMap)
+        // planner view: each domain's synced state from its primary
+        // (first) replica — multi-resident state is bit-identical, so
+        // the choice is cosmetic (deterministic order via
+        // from_planner_states' BTreeMap)
         let mut states: Vec<DomainPlannerState> = Vec::new();
         for (i, st) in synced.into_iter().enumerate() {
             for d in st.domains {
-                if route.get(&d.name) == Some(&i) {
+                if route.get(&d.name).and_then(|r| r.first()) == Some(&i) {
                     states.push(d);
                 }
             }
         }
         let store = SharedStore::from_planner_states(chunk, states)?;
-        Ok((ShardedFabric { shards, route, order: Vec::new() }, store))
+        let n = shards.len();
+        Ok((
+            ShardedFabric {
+                shards,
+                route,
+                health: vec![HealthTracker::new(health_cfg); n],
+                health_cfg,
+                cursors: HashMap::new(),
+                order: Vec::new(),
+                frames: Vec::new(),
+                group_domain: Vec::new(),
+                inflight: HashMap::new(),
+                collects: 0,
+                failovers: 0,
+                resent_frames: 0,
+            },
+            store,
+        ))
     }
 
-    /// The static domain→shard assignment (domain, shard index), sorted
-    /// by domain.
-    pub fn assignment(&self) -> Vec<(String, usize)> {
-        let mut v: Vec<(String, usize)> =
-            self.route.iter().map(|(d, &s)| (d.clone(), s)).collect();
+    /// The domain→replica-set assignment `(domain, shard indices)`,
+    /// sorted by domain. The first index is the primary (the planner
+    /// view + shard-contiguous group ordering use it).
+    pub fn assignment(&self) -> Vec<(String, Vec<usize>)> {
+        let mut v: Vec<(String, Vec<usize>)> = self
+            .route
+            .iter()
+            .map(|(d, s)| (d.clone(), s.clone()))
+            .collect();
         v.sort();
         v
     }
@@ -250,6 +317,122 @@ impl ShardedFabric {
     pub fn shard_digests(&self) -> Vec<u64> {
         self.shards.iter().map(|(_, f)| f.hello().digest).collect()
     }
+
+    /// Current health state per shard (`--shards` order).
+    pub fn shard_health(&self) -> Vec<HealthState> {
+        self.health.iter().map(|t| t.state()).collect()
+    }
+
+    /// Pick the serving replica for one group: round-robin over the
+    /// domain's Healthy replicas; Degraded replicas only when no
+    /// healthy one is left (slow beats dead); Down/Probing never.
+    /// An empty pool is the typed per-request failure.
+    fn pick(route: &HashMap<String, Vec<usize>>,
+            health: &[HealthTracker],
+            cursors: &mut HashMap<String, usize>, domain: &str)
+            -> Result<usize> {
+        let replicas = route
+            .get(domain)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[]);
+        if replicas.is_empty() {
+            bail!("no shard serves domain '{domain}'");
+        }
+        let healthy: Vec<usize> = replicas
+            .iter()
+            .copied()
+            .filter(|&s| health[s].state() == HealthState::Healthy)
+            .collect();
+        let pool = if healthy.is_empty() {
+            replicas
+                .iter()
+                .copied()
+                .filter(|&s| health[s].routable())
+                .collect()
+        } else {
+            healthy
+        };
+        if pool.is_empty() {
+            return Err(anyhow::Error::new(
+                FabricError::DomainUnavailable {
+                    domain: domain.to_string(),
+                },
+            ));
+        }
+        let cur = cursors.entry(domain.to_string()).or_insert(0);
+        let s = pool[*cur % pool.len()];
+        *cur = cur.wrapping_add(1);
+        Ok(s)
+    }
+
+    /// Probe Down shards whose interval elapsed: one reconnect + the
+    /// digest-verified handshake re-admits a restarted replica without
+    /// restarting the run. Called opportunistically at submit, so
+    /// recovery needs no background thread.
+    fn probe_down_shards(&mut self) {
+        let now = Instant::now();
+        for (s, tracker) in self.health.iter_mut().enumerate() {
+            if tracker.should_probe(now) {
+                let ok = self.shards[s].1.probe().is_ok();
+                tracker.on_probe_result(ok, Instant::now());
+            }
+        }
+    }
+
+    /// Re-place the frames of `moved` groups (after their shard died)
+    /// onto surviving replicas; returns the set of shards that received
+    /// a new batch. `assigned` is updated in place.
+    fn replace_groups(&mut self, moved: &[usize],
+                      assigned: &mut [usize]) -> Result<BTreeSet<usize>> {
+        // route all moved groups BEFORE submitting anything: a
+        // mid-fan-out routing failure must not leave shards holding
+        // half a batch
+        let mut batches: HashMap<usize, Vec<usize>> = HashMap::new();
+        for &g in moved {
+            let s = Self::pick(&self.route, &self.health,
+                               &mut self.cursors,
+                               &self.group_domain[g])?;
+            assigned[g] = s;
+            batches.entry(s).or_default().push(g);
+        }
+        let mut touched = BTreeSet::new();
+        for (s, groups) in batches {
+            let frames: Vec<Vec<u8>> =
+                groups.iter().map(|&g| self.frames[g].clone()).collect();
+            self.resent_frames += frames.len() as u64;
+            self.shards[s]
+                .1
+                .submit_frames(frames)
+                .with_context(|| {
+                    format!("failover resend to shard {s} ({})",
+                            self.shards[s].0)
+                })?;
+            self.inflight.insert(s, groups);
+            touched.insert(s);
+        }
+        Ok(touched)
+    }
+
+    /// Between-steps health poll of every routable shard (cadenced by
+    /// [`HealthCfg::poll_every`]); reports feed the state machines, a
+    /// dead connection discovered here goes Down before the next
+    /// submit routes to it.
+    fn poll_health(&mut self) {
+        if self.health_cfg.poll_every == 0
+            || self.collects % self.health_cfg.poll_every as u64 != 0
+        {
+            return;
+        }
+        for (s, (_addr, fabric)) in self.shards.iter_mut().enumerate() {
+            if !self.health[s].routable() {
+                continue;
+            }
+            match fabric.poll_health() {
+                Ok(h) => self.health[s].observe(&h),
+                Err(_) => self.health[s].on_transport_error(Instant::now()),
+            }
+        }
+    }
 }
 
 impl SharedFabric for ShardedFabric {
@@ -257,29 +440,48 @@ impl SharedFabric for ShardedFabric {
               groups: &[(&Tensor, &SharedGroupPlan)]) -> Result<()> {
         anyhow::ensure!(self.order.is_empty(),
                         "fabric already has an in-flight request");
-        // bucket groups per shard, preserving submission order within
-        // each shard
-        let mut per: Vec<Vec<(&Tensor, &SharedGroupPlan)>> =
-            vec![Vec::new(); self.shards.len()];
+        self.probe_down_shards();
+        // route + encode ALL groups first: a routing failure (domain
+        // with no surviving replica) must surface before any shard
+        // holds a partial batch
         let mut order = Vec::with_capacity(groups.len());
-        for &(q, plan) in groups {
-            let s = *self.route.get(&plan.domain).with_context(|| {
-                format!("no shard serves domain '{}'", plan.domain)
-            })?;
+        let mut frames = Vec::with_capacity(groups.len());
+        let mut domains = Vec::with_capacity(groups.len());
+        let mut batches: HashMap<usize, Vec<usize>> = HashMap::new();
+        for (g, &(q, plan)) in groups.iter().enumerate() {
+            let s = Self::pick(&self.route, &self.health,
+                               &mut self.cursors, &plan.domain)?;
+            let t0 = Instant::now();
+            let frame = codec::frame_exec_shared(layer, q, plan);
+            if let Some(st) = self.shards[s].1.stats() {
+                st.serialize_ns.fetch_add(
+                    t0.elapsed().as_nanos() as u64, Ordering::Relaxed,
+                );
+            }
             order.push(s);
-            per[s].push((q, plan));
+            frames.push(frame);
+            domains.push(plan.domain.clone());
+            batches.entry(s).or_default().push(g);
         }
         // eager fan-out: every shard starts executing its slice now,
         // concurrently with the other shards and with the unique node's
-        // own attention
-        for (s, batch) in per.iter().enumerate() {
-            if !batch.is_empty() {
-                self.shards[s].1.submit(layer, batch).with_context(|| {
+        // own attention. The frames stay here too — failover re-places
+        // the same bytes on a replica.
+        self.inflight.clear();
+        for (s, batch) in batches {
+            let shard_frames: Vec<Vec<u8>> =
+                batch.iter().map(|&g| frames[g].clone()).collect();
+            self.shards[s]
+                .1
+                .submit_frames(shard_frames)
+                .with_context(|| {
                     format!("shard {} ({})", s, self.shards[s].0)
                 })?;
-            }
+            self.inflight.insert(s, batch);
         }
         self.order = order;
+        self.frames = frames;
+        self.group_domain = domains;
         Ok(())
     }
 
@@ -287,40 +489,91 @@ impl SharedFabric for ShardedFabric {
         let order = std::mem::take(&mut self.order);
         anyhow::ensure!(!order.is_empty(),
                         "fabric collect without a submitted request");
-        // drain EVERY participating shard even if one fails — each
-        // underlying fabric clears its in-flight state in collect, so
-        // none is left dangling — then surface the first failure
-        let mut participating = vec![false; self.shards.len()];
-        for &s in &order {
-            participating[s] = true;
-        }
-        let mut per: Vec<VecDeque<FabricReply>> =
-            (0..self.shards.len()).map(|_| VecDeque::new()).collect();
-        let mut first_err: Option<anyhow::Error> = None;
-        for (s, active) in participating.iter().enumerate() {
-            if !active {
-                continue;
+        let mut assigned = order;
+        let mut active: BTreeSet<usize> =
+            self.inflight.keys().copied().collect();
+        let mut replies: Vec<Option<FabricReply>> =
+            (0..assigned.len()).map(|_| None).collect();
+        let mut fatal: Option<anyhow::Error> = None;
+        // round loop: drain every active shard; shards that died get
+        // their groups re-placed on replicas, which become the next
+        // round's active set. Terminates: a failed shard goes Down and
+        // leaves the routing pool, so each round shrinks the usable
+        // shard set (bounded by the shard count).
+        while !active.is_empty() {
+            let mut moved: Vec<usize> = Vec::new();
+            for s in std::mem::take(&mut active) {
+                let groups =
+                    self.inflight.remove(&s).unwrap_or_default();
+                match self.shards[s].1.collect() {
+                    Ok(batch) => {
+                        anyhow::ensure!(
+                            batch.len() == groups.len(),
+                            "shard {s} answered {} replies for {} groups",
+                            batch.len(), groups.len(),
+                        );
+                        for (g, r) in groups.into_iter().zip(batch) {
+                            replies[g] = Some(r);
+                        }
+                        self.health[s].on_ok();
+                    }
+                    Err(e) => {
+                        let down = e
+                            .downcast_ref::<FabricError>()
+                            .is_some_and(|f| matches!(
+                                f, FabricError::ShardDown { .. },
+                            ));
+                        if down {
+                            // transport death: out of the pool, work
+                            // moves to replicas (execution is pure, so
+                            // resending the same frames is correct)
+                            self.health[s]
+                                .on_transport_error(Instant::now());
+                            self.failovers += 1;
+                            moved.extend(groups);
+                        } else if fatal.is_none() {
+                            // deterministic failure (store mismatch,
+                            // node-side Error): a replica would fail
+                            // identically — keep draining the other
+                            // shards so none is left dangling, then
+                            // propagate
+                            fatal = Some(e.context(format!(
+                                "shard {s} ({})", self.shards[s].0,
+                            )));
+                        }
+                    }
+                }
             }
-            match self.shards[s].1.collect() {
-                Ok(replies) => per[s] = replies.into(),
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e.context(format!(
-                            "shard {} ({})", s, self.shards[s].0,
-                        )));
+            if let Some(e) = fatal {
+                self.frames.clear();
+                self.group_domain.clear();
+                self.inflight.clear();
+                return Err(e);
+            }
+            if !moved.is_empty() {
+                moved.sort_unstable();
+                match self.replace_groups(&moved, &mut assigned) {
+                    Ok(touched) => active = touched,
+                    Err(e) => {
+                        // no surviving replica (or a resend invariant
+                        // broke): nothing is in flight at this point —
+                        // every other active shard was drained above
+                        self.frames.clear();
+                        self.group_domain.clear();
+                        self.inflight.clear();
+                        return Err(e);
                     }
                 }
             }
         }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-        // reassemble into submission order: each shard answered its
-        // batch in arrival order, so replies pop front-to-front
-        let mut out = Vec::with_capacity(order.len());
-        for s in order {
-            out.push(per[s].pop_front().with_context(|| {
-                format!("shard {} returned too few replies", s)
+        self.frames.clear();
+        self.group_domain.clear();
+        self.collects += 1;
+        self.poll_health();
+        let mut out = Vec::with_capacity(replies.len());
+        for (g, r) in replies.into_iter().enumerate() {
+            out.push(r.with_context(|| {
+                format!("group {g} was never answered")
             })?);
         }
         Ok(out)
@@ -336,6 +589,18 @@ impl SharedFabric for ShardedFabric {
             .enumerate()
             .filter_map(|(i, (_, f))| f.stats().map(|s| (i, s)))
             .collect()
+    }
+
+    fn elastic(&self) -> Option<ElasticSnapshot> {
+        Some(ElasticSnapshot {
+            health: self
+                .health
+                .iter()
+                .map(|t| t.state().as_gauge())
+                .collect(),
+            failovers: self.failovers,
+            resent_frames: self.resent_frames,
+        })
     }
 }
 
@@ -374,10 +639,86 @@ mod tests {
     }
 
     #[test]
+    fn parse_replica_pins_span_addresses() {
+        // the same domain pinned to two addresses = a 2-replica set
+        let s = parse_shard_specs("legal=h1:7070,legal=h2:7070").unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].pins, vec!["legal"]);
+        assert_eq!(s[1].pins, vec!["legal"]);
+    }
+
+    #[test]
     fn parse_rejects_garbage() {
         assert!(parse_shard_specs("").is_err());
         assert!(parse_shard_specs(" , ").is_err());
         assert!(parse_shard_specs("=h1:7070").is_err());
         assert!(parse_shard_specs("legal=").is_err());
+    }
+
+    #[test]
+    fn pick_round_robins_healthy_and_skips_down() {
+        let cfg = HealthCfg::default();
+        let mut route = HashMap::new();
+        route.insert("d".to_string(), vec![0usize, 1, 2]);
+        let mut health = vec![HealthTracker::new(cfg); 3];
+        let mut cursors = HashMap::new();
+        let seq: Vec<usize> = (0..6)
+            .map(|_| {
+                ShardedFabric::pick(&route, &health, &mut cursors, "d")
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+        // kill shard 1: routing never lands on it
+        health[1].on_transport_error(Instant::now());
+        for _ in 0..8 {
+            let s = ShardedFabric::pick(&route, &health, &mut cursors,
+                                        "d")
+                .unwrap();
+            assert_ne!(s, 1, "routed to a Down shard");
+        }
+        // kill the rest: the typed per-request error, not a panic
+        health[0].on_transport_error(Instant::now());
+        health[2].on_transport_error(Instant::now());
+        let err = ShardedFabric::pick(&route, &health, &mut cursors, "d")
+            .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<FabricError>(),
+            Some(FabricError::DomainUnavailable { domain }) if domain == "d",
+        ));
+    }
+
+    #[test]
+    fn pick_prefers_healthy_over_degraded() {
+        let cfg = HealthCfg {
+            degraded_queue: 1,
+            hysteresis: 1,
+            ..HealthCfg::default()
+        };
+        let mut route = HashMap::new();
+        route.insert("d".to_string(), vec![0usize, 1]);
+        let mut health = vec![HealthTracker::new(cfg); 2];
+        let mut cursors = HashMap::new();
+        // shard 0 reports overloaded → Degraded; all traffic steers to 1
+        health[0].observe(&crate::remote::codec::HealthInfo {
+            queue_depth: 9,
+            in_flight: 9,
+            exec_ns_ewma: 0,
+        });
+        assert_eq!(health[0].state(), HealthState::Degraded);
+        for _ in 0..4 {
+            assert_eq!(
+                ShardedFabric::pick(&route, &health, &mut cursors, "d")
+                    .unwrap(),
+                1,
+            );
+        }
+        // …but a domain whose only replicas are degraded keeps serving
+        health[1].on_transport_error(Instant::now());
+        assert_eq!(
+            ShardedFabric::pick(&route, &health, &mut cursors, "d")
+                .unwrap(),
+            0,
+        );
     }
 }

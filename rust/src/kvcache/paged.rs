@@ -211,6 +211,20 @@ impl RequestKv {
         );
     }
 
+    /// Un-append everything since the last [`commit`][Self::commit]:
+    /// reset every layer cursor to the committed length. A decode step
+    /// that fails mid-layer (e.g. a fabric shard dying with no replica)
+    /// leaves a per-layer prefix of uncommitted rows; rolling back lets
+    /// the engine retry or drop the request from a clean state. Pages
+    /// stay allocated — the row slots are simply overwritten by the
+    /// next append (allocation only triggers when a cursor crosses into
+    /// an unbacked page).
+    pub fn rollback_uncommitted(&mut self) {
+        for l in self.lens.iter_mut() {
+            *l = self.len;
+        }
+    }
+
     /// Pages needed to store `extra` more tokens (admission math).
     pub fn pages_needed(&self, extra: usize, chunk: usize,
                         n_layers: usize) -> usize {
@@ -419,6 +433,48 @@ mod tests {
             ka.commit(1);
             kb.commit(1);
         }
+        assert_eq!(ka.len, kb.len);
+        assert_eq!(ka.page_count(), kb.page_count());
+        for layer in 0..2 {
+            for p in 0..ka.pages[layer].len() {
+                let a = pa.get(ka.pages[layer][p]);
+                let b = pb.get(kb.pages[layer][p]);
+                assert_eq!(a.k, b.k, "layer {layer} page {p} K");
+                assert_eq!(a.v, b.v, "layer {layer} page {p} V");
+                assert_eq!(a.used, b.used);
+            }
+        }
+    }
+
+    #[test]
+    fn rollback_then_reappend_is_bit_identical() {
+        // a step failing mid-layer appends to a layer prefix only;
+        // rollback + full re-append must match a clean append exactly
+        let mut pa = pool();
+        let mut pb = pool();
+        let mut rng = Rng::new(6);
+        let mut ka = RequestKv::new(2, 10);
+        let mut kb = RequestKv::new(2, 10);
+        let rows: Vec<_> = (0..2).map(|_| kv_rows(&mut rng, 1)).collect();
+        // clean request appends both layers and commits
+        for (layer, (k, v)) in rows.iter().enumerate() {
+            ka.append_row_layer(&mut pa, layer, k.as_f32(), v.as_f32())
+                .unwrap();
+        }
+        ka.commit(1);
+        // failed request appends layer 0 only, rolls back, retries
+        let (k0, v0) = &rows[0];
+        kb.append_row_layer(&mut pb, 0, k0.as_f32(), v0.as_f32())
+            .unwrap();
+        assert_eq!(kb.lens, vec![1, 0]);
+        kb.rollback_uncommitted();
+        assert_eq!(kb.lens, vec![0, 0]);
+        assert_eq!(kb.len, 0);
+        for (layer, (k, v)) in rows.iter().enumerate() {
+            kb.append_row_layer(&mut pb, layer, k.as_f32(), v.as_f32())
+                .unwrap();
+        }
+        kb.commit(1);
         assert_eq!(ka.len, kb.len);
         assert_eq!(ka.page_count(), kb.page_count());
         for layer in 0..2 {

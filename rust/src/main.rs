@@ -112,7 +112,13 @@ fn cmd_disagg(argv: &[String]) -> moska::Result<()> {
              "shared-node address (empty = in-process shared node)")
         .opt("shards", "",
              "domain-sharded shared nodes: addr[,addr...] or \
-              domain=addr pins (mutually exclusive with --remote)")
+              domain=addr pins; repeat a domain across addresses to \
+              replicate it (mutually exclusive with --remote)")
+        .opt("probe-ms", "500",
+             "min spacing between reconnect probes of a down shard")
+        .opt("health-every", "8",
+             "poll shard Health reports once per this many collects \
+              (0 = never; transport errors still mark shards down)")
         .opt("domains", "",
              "request domain mix, round-robin (default: one domain)")
         .opt("expect-digest", "",
@@ -137,6 +143,9 @@ fn cmd_shared_node(argv: &[String]) -> moska::Result<()> {
         .opt("domains", "",
              "serve only these domains (comma list) — one shard of a \
               domain-sharded deployment")
+        .opt("drain-ms", "5000",
+             "SIGTERM/SIGINT: max wait for in-flight plans before \
+              force-closing connections (then exit 0)")
         .flag("synthetic",
               "serve the synthetic bench store (no artifacts)")
         .parse_from(argv)?;

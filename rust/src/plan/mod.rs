@@ -44,17 +44,21 @@ use crate::kvcache::paged::page_valid_rows;
 use crate::kvcache::shared_store::SharedStore;
 use crate::router::ChunkSet;
 
-/// Static domain → shard assignment of the domain-sharded fabric, seen
-/// at plan level: shard ids are opaque indices (the fabric maps them to
-/// node addresses). [`plan_step`] uses it to order a step's shared
-/// groups **shard-contiguously**, so each shard's submission batch is
-/// one contiguous slice of the group list — the planner groups
-/// shared-GEMM batches per shard rather than per process. Reordering
-/// whole groups never changes decode output: every batch row belongs to
-/// exactly one group, so no row's floating-point merge order moves.
+/// Static domain → replica-set assignment of the domain-sharded
+/// fabric, seen at plan level: shard ids are opaque indices (the fabric
+/// maps them to node addresses). A domain assigned to several shards is
+/// **replicated** — the first assignment is its *primary*, which
+/// [`plan_step`] uses to order a step's shared groups
+/// **shard-contiguously**, so each shard's submission batch is one
+/// contiguous slice of the group list — the planner groups shared-GEMM
+/// batches per shard rather than per process. Reordering whole groups
+/// never changes decode output: every batch row belongs to exactly one
+/// group, so no row's floating-point merge order moves — and neither
+/// does serving a group from a different replica (replicas are
+/// digest-verified bit-identical).
 #[derive(Debug, Clone, Default)]
 pub struct ShardAssignment {
-    of: std::collections::BTreeMap<String, usize>,
+    of: std::collections::BTreeMap<String, Vec<usize>>,
     /// One past the highest shard index seen.
     pub n_shards: usize,
 }
@@ -64,29 +68,35 @@ impl ShardAssignment {
         ShardAssignment::default()
     }
 
-    /// Record `domain → shard`; a conflicting reassignment errors.
+    /// Record `domain → shard`. Repeats are idempotent; a *different*
+    /// shard for an already-assigned domain appends a replica (first
+    /// assignment stays primary).
     pub fn assign(&mut self, domain: &str, shard: usize) -> Result<()> {
-        if let Some(&prev) = self.of.get(domain) {
-            anyhow::ensure!(
-                prev == shard,
-                "domain '{domain}' already assigned to shard {prev}",
-            );
-            return Ok(());
+        let set = self.of.entry(domain.to_string()).or_default();
+        if !set.contains(&shard) {
+            set.push(shard);
         }
-        self.of.insert(domain.to_string(), shard);
         self.n_shards = self.n_shards.max(shard + 1);
         Ok(())
     }
 
+    /// The domain's primary shard (first assigned).
     pub fn shard_of(&self, domain: &str) -> Option<usize> {
-        self.of.get(domain).copied()
+        self.of.get(domain).and_then(|s| s.first()).copied()
+    }
+
+    /// The domain's full replica set, primary first.
+    pub fn replicas_of(&self, domain: &str) -> &[usize] {
+        self.of.get(domain).map(|s| s.as_slice()).unwrap_or(&[])
     }
 
     pub fn is_empty(&self) -> bool {
         self.of.is_empty()
     }
 
-    /// Parse `domain=shard` pairs — the `serving.shards` config surface.
+    /// Parse `domain=shard` pairs — the `serving.shards` config
+    /// surface. Repeating a domain with different shard indices builds
+    /// its replica set (first pair = primary).
     pub fn parse_pairs(pairs: &[String]) -> Result<ShardAssignment> {
         use anyhow::Context;
         let mut a = ShardAssignment::new();
@@ -440,9 +450,14 @@ mod tests {
         a.assign("code", 0).unwrap();
         a.assign("medical", 1).unwrap();
         assert_eq!(a.n_shards, 2);
-        // re-assign same shard is idempotent; conflicting errors
+        // re-assign same shard is idempotent; a different shard appends
+        // a replica, and the FIRST assignment stays primary
         a.assign("legal", 1).unwrap();
-        assert!(a.assign("legal", 0).is_err());
+        a.assign("legal", 0).unwrap();
+        assert_eq!(a.shard_of("legal"), Some(1));
+        assert_eq!(a.replicas_of("legal"), &[1, 0]);
+        assert_eq!(a.replicas_of("code"), &[0]);
+        assert_eq!(a.replicas_of("nope"), &[] as &[usize]);
 
         let g = |d: &str| SharedGroupPlan {
             domain: d.to_string(),
@@ -486,10 +501,13 @@ mod tests {
         assert!(ShardAssignment::parse_pairs(&["legal".into()]).is_err());
         assert!(ShardAssignment::parse_pairs(&["=1".into()]).is_err());
         assert!(ShardAssignment::parse_pairs(&["legal=x".into()]).is_err());
-        assert!(ShardAssignment::parse_pairs(
+        // the same domain on two shards is a replica set, not an error
+        let r = ShardAssignment::parse_pairs(
             &["legal=0".into(), "legal=1".into()],
         )
-        .is_err());
+        .unwrap();
+        assert_eq!(r.replicas_of("legal"), &[0, 1]);
+        assert_eq!(r.shard_of("legal"), Some(0));
     }
 
     #[test]

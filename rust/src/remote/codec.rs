@@ -44,7 +44,9 @@ use crate::tensor::{DType, Tensor};
 ///
 /// * v1 — Hello/HelloAck/ExecShared/Partials/Error/StepPlan.
 /// * v2 — adds `Sync`/`SyncState` (planner-state sync at connect).
-pub const CODEC_VERSION: u16 = 2;
+/// * v3 — adds `HealthReq`/`Health` (per-node load report feeding the
+///   client's replica health state machine).
+pub const CODEC_VERSION: u16 = 3;
 
 /// Frame magic: `"MoSK"` as a little-endian u32.
 pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"MoSK");
@@ -202,6 +204,8 @@ pub enum MsgKind {
     StepPlan = 6,
     Sync = 7,
     SyncState = 8,
+    HealthReq = 9,
+    Health = 10,
 }
 
 impl MsgKind {
@@ -215,6 +219,8 @@ impl MsgKind {
             6 => MsgKind::StepPlan,
             7 => MsgKind::Sync,
             8 => MsgKind::SyncState,
+            9 => MsgKind::HealthReq,
+            10 => MsgKind::Health,
             t => {
                 return Err(CodecError::BadTag {
                     what: "message kind",
@@ -259,6 +265,23 @@ pub struct StoreSync {
     pub domains: Vec<DomainPlannerState>,
 }
 
+/// A shared node's instantaneous load report, answered to a
+/// [`HealthReq`][WireMsg::HealthReq] (v3). Cheap to produce (three
+/// relaxed atomic loads on the node) and cheap to ship (20-byte
+/// payload), so clients can poll it between decode steps without
+/// perturbing the execution path. Feeds the client-side replica health
+/// state machine ([`crate::disagg::health`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HealthInfo {
+    /// Open connections on the node (a queue-depth proxy: each client
+    /// pipelines one submission batch per connection).
+    pub queue_depth: u32,
+    /// Plans executing right now across all handler threads.
+    pub in_flight: u32,
+    /// EWMA of per-plan execution wall time (ns, ⅛ update weight).
+    pub exec_ns_ewma: u64,
+}
+
 /// Every message the fabric speaks.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
@@ -283,6 +306,10 @@ pub enum WireMsg {
     /// Server → client: router embeddings + chunk geometry for every
     /// resident domain — the planner-state sync at connect.
     SyncState(StoreSync),
+    /// Client → server: request a load report (payload-free, v3).
+    HealthReq,
+    /// Server → client: instantaneous load report (v3).
+    Health(HealthInfo),
 }
 
 impl WireMsg {
@@ -296,6 +323,8 @@ impl WireMsg {
             WireMsg::StepPlan(_) => MsgKind::StepPlan,
             WireMsg::Sync => MsgKind::Sync,
             WireMsg::SyncState(_) => MsgKind::SyncState,
+            WireMsg::HealthReq => MsgKind::HealthReq,
+            WireMsg::Health(_) => MsgKind::Health,
         }
     }
 }
@@ -485,6 +514,12 @@ pub fn encode_payload(msg: &WireMsg) -> Vec<u8> {
             for d in &s.domains {
                 e.domain_planner_state(d);
             }
+        }
+        WireMsg::HealthReq => {}
+        WireMsg::Health(h) => {
+            e.u32(h.queue_depth);
+            e.u32(h.in_flight);
+            e.u64(h.exec_ns_ewma);
         }
     }
     e.buf
@@ -862,6 +897,12 @@ pub fn decode_payload(kind: MsgKind, payload: &[u8])
             }
             WireMsg::SyncState(StoreSync { chunk, digest, domains })
         }
+        MsgKind::HealthReq => WireMsg::HealthReq,
+        MsgKind::Health => WireMsg::Health(HealthInfo {
+            queue_depth: d.u32()?,
+            in_flight: d.u32()?,
+            exec_ns_ewma: d.u64()?,
+        }),
     };
     d.finish()?;
     Ok(msg)
@@ -1026,6 +1067,25 @@ mod tests {
         let (back, _) =
             read_frame(&mut std::io::Cursor::new(&req)).unwrap();
         assert_eq!(back, WireMsg::Sync);
+    }
+
+    #[test]
+    fn health_roundtrip() {
+        let msg = WireMsg::Health(HealthInfo {
+            queue_depth: 3,
+            in_flight: 2,
+            exec_ns_ewma: 1_234_567,
+        });
+        let bytes = frame_bytes(&msg);
+        let (back, n) =
+            read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(n, bytes.len());
+        assert_eq!(back, msg);
+        // and the payload-free request roundtrips too
+        let req = frame_bytes(&WireMsg::HealthReq);
+        let (back, _) =
+            read_frame(&mut std::io::Cursor::new(&req)).unwrap();
+        assert_eq!(back, WireMsg::HealthReq);
     }
 
     #[test]

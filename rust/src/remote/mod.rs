@@ -34,6 +34,8 @@ pub mod codec;
 pub mod server;
 pub mod transport;
 
-pub use codec::{CodecError, HelloAck, StoreSync, WireMsg, CODEC_VERSION};
-pub use server::{serve_shared_node, spawn_shared_node};
+pub use codec::{CodecError, HealthInfo, HelloAck, StoreSync, WireMsg,
+                CODEC_VERSION};
+pub use server::{serve_shared_node, serve_shared_node_ctl,
+                 spawn_shared_node, spawn_shared_node_ctl, NodeCtl};
 pub use transport::{FabricStats, RemoteClient, RemoteFabric, TransportCfg};

@@ -11,21 +11,32 @@
 //! Connection lifecycle: one handler thread per connection, each serving
 //! `Hello → HelloAck` (and optionally `Sync → SyncState`, the
 //! planner-state handshake) then any number of `ExecShared → Partials`
-//! round trips. Request-level failures (unknown domain, malformed plan)
-//! answer with an `Error` frame and keep the connection; protocol-level
-//! failures (bad magic, version mismatch, CRC) answer with an `Error`
-//! frame best-effort and close. The full message-by-message spec lives
-//! in `docs/WIRE_PROTOCOL.md`.
+//! round trips (plus `HealthReq → Health` load probes, v3). Request-level
+//! failures (unknown domain, malformed plan) answer with an `Error` frame
+//! and keep the connection; protocol-level failures (bad magic, version
+//! mismatch, CRC) answer with an `Error` frame best-effort and close. The
+//! full message-by-message spec lives in `docs/WIRE_PROTOCOL.md`.
+//!
+//! Lifecycle control: every serving loop is parameterized by a
+//! [`NodeCtl`] — the CLI wires SIGTERM/SIGINT (via `signalfd`, see
+//! below) to [`NodeCtl::shutdown`], which stops accepting, drains
+//! in-flight plan executions up to `--drain-ms`, force-closes what
+//! remains, and lets the process exit 0. Tests use
+//! [`spawn_shared_node_ctl`] to kill one replica of a fabric mid-decode
+//! without tearing down the whole process (the chaos path).
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::codec::{self, CodecError, ExecSharedReq, HelloAck, WireMsg};
+use super::codec::{self, CodecError, ExecSharedReq, HealthInfo, HelloAck,
+                   WireMsg};
 use crate::disagg::execute_shared_plan;
 use crate::kvcache::shared_store::SharedStore;
 use crate::runtime::arena::TensorArena;
@@ -33,6 +44,181 @@ use crate::runtime::Backend;
 use crate::tensor::DType;
 use crate::util::cli::Args;
 use crate::util::threadpool::ThreadPool;
+
+/// Lifecycle + load-reporting handle shared between the accept loop,
+/// the connection handlers, and whoever initiates shutdown (the CLI's
+/// signal watcher, or a test killing one replica).
+///
+/// The load counters double as the node's [`HealthInfo`] report:
+/// `queue_depth` = open connections, `in_flight` = plans mid-execution,
+/// `exec_ns_ewma` = EWMA (α = 1/8) of per-plan wall time.
+pub struct NodeCtl {
+    stop: AtomicBool,
+    next_conn: AtomicU64,
+    in_flight: AtomicU32,
+    exec_ns_ewma: AtomicU64,
+    /// Bound address, filled in once the listener is up — shutdown
+    /// self-connects here to wake the blocking accept loop.
+    local: Mutex<Option<SocketAddr>>,
+    /// Open connections by id, so the drain deadline can force-close
+    /// stragglers; handlers deregister themselves on exit.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+}
+
+impl NodeCtl {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Arc<NodeCtl> {
+        Arc::new(NodeCtl {
+            stop: AtomicBool::new(false),
+            next_conn: AtomicU64::new(0),
+            in_flight: AtomicU32::new(0),
+            exec_ns_ewma: AtomicU64::new(0),
+            local: Mutex::new(None),
+            conns: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// The load report answered to `HealthReq` probes.
+    pub fn health(&self) -> HealthInfo {
+        HealthInfo {
+            queue_depth: self.conns.lock().unwrap().len() as u32,
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            exec_ns_ewma: self.exec_ns_ewma.load(Ordering::Relaxed),
+        }
+    }
+
+    fn note_exec(&self, ns: u64) {
+        let prev = self.exec_ns_ewma.load(Ordering::Relaxed);
+        let next = if prev == 0 { ns } else { prev - prev / 8 + ns / 8 };
+        self.exec_ns_ewma.store(next, Ordering::Relaxed);
+    }
+
+    /// Graceful stop: no new connections, in-flight plan executions get
+    /// up to `drain` to finish (each completes and writes its reply —
+    /// the client-side resend contract needs no reply to be half-sent),
+    /// then remaining connections are force-closed. Idempotent; blocks
+    /// until the drain completes.
+    pub fn shutdown(&self, drain: Duration) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the accept loop so it observes the stop flag
+        if let Some(addr) = *self.local.lock().unwrap() {
+            let _ = TcpStream::connect_timeout(
+                &addr, Duration::from_millis(250));
+        }
+        let deadline = Instant::now() + drain;
+        while self.in_flight.load(Ordering::Relaxed) > 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // surviving handlers are idle readers (or past-deadline
+        // stragglers): cut their sockets so the threads unwind
+        for (_, s) in self.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Deregisters a connection from the [`NodeCtl`] registry when its
+/// handler thread exits by any path (including panics).
+struct ConnGuard {
+    ctl: Arc<NodeCtl>,
+    id: u64,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.ctl.conns.lock().unwrap().remove(&self.id);
+    }
+}
+
+/// SIGTERM/SIGINT as readable events via `signalfd(2)`, raw syscalls
+/// only (the repo carries no libc binding). The mask must be installed
+/// on the main thread *before any other thread spawns* so every child
+/// inherits it — a signal delivered to a thread with the default
+/// disposition unblocked would kill the process instantly.
+#[cfg(all(target_os = "linux",
+          any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod signalfd {
+    use std::fs::File;
+    use std::os::fd::FromRawFd;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_RT_SIGPROCMASK: i64 = 14;
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SIGNALFD4: i64 = 289;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_RT_SIGPROCMASK: i64 = 135;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_SIGNALFD4: i64 = 74;
+
+    const SIG_BLOCK: i64 = 0;
+    /// Kernel sigset: bit `N-1` = signal `N`; SIGINT = 2, SIGTERM = 15.
+    const MASK: u64 = (1 << 1) | (1 << 14);
+    /// `sizeof(kernel_sigset_t)` the kernel expects (`_NSIG / 8`).
+    const SIGSET_BYTES: i64 = 8;
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall4(nr: i64, a1: i64, a2: i64, a3: i64, a4: i64)
+                       -> i64 {
+        let ret: i64;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") nr => ret,
+            in("rdi") a1, in("rsi") a2, in("rdx") a3, in("r10") a4,
+            lateout("rcx") _, lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall4(nr: i64, a1: i64, a2: i64, a3: i64, a4: i64)
+                       -> i64 {
+        let ret: i64;
+        std::arch::asm!(
+            "svc #0",
+            in("x8") nr,
+            inlateout("x0") a1 => ret,
+            in("x1") a2, in("x2") a3, in("x3") a4,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// Block SIGTERM/SIGINT process-wide and return a [`File`] whose
+    /// reads block until one arrives. `None` = could not install
+    /// (leave default dispositions alone).
+    pub fn install() -> Option<File> {
+        let mask: u64 = MASK;
+        let mp = &mask as *const u64 as i64;
+        unsafe {
+            if syscall4(SYS_RT_SIGPROCMASK, SIG_BLOCK, mp, 0,
+                        SIGSET_BYTES) != 0 {
+                return None;
+            }
+            let fd = syscall4(SYS_SIGNALFD4, -1, mp, SIGSET_BYTES, 0);
+            if fd < 0 {
+                return None;
+            }
+            Some(File::from_raw_fd(fd as i32))
+        }
+    }
+}
+
+#[cfg(not(all(target_os = "linux",
+              any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod signalfd {
+    /// Unsupported platform: no graceful shutdown; default signal
+    /// dispositions terminate the process as usual.
+    pub fn install() -> Option<std::fs::File> {
+        None
+    }
+}
 
 /// `moska shared-node`: load the store, own a backend, serve forever.
 /// `--domains a,b` keeps only the named domains resident — the shard
@@ -42,6 +228,10 @@ use crate::util::threadpool::ThreadPool;
 pub fn run_shared_node(args: &Args) -> Result<()> {
     let addr = args.str("addr")?;
     let threads = args.usize("threads")?;
+    let drain = Duration::from_millis(args.usize("drain-ms")? as u64);
+    // must precede every thread spawn (backend pool included) so the
+    // blocked mask is inherited everywhere
+    let sigfd = signalfd::install();
     // kernel flavor for this node's plan execution (`--kernel`, else
     // MOSKA_KERNEL/auto). Pin the process-global flavor FIRST — the
     // synthetic-store build below constructs a backend, which would
@@ -85,19 +275,51 @@ pub fn run_shared_node(args: &Args) -> Result<()> {
     };
     let backend: Arc<dyn Backend> =
         Arc::new(backend.with_kernel_spec(kernel));
-    serve_shared_node(addr.parse().context("bad --addr")?, backend,
-                      Arc::new(store), None)
+    let ctl = NodeCtl::new();
+    if let Some(mut fd) = sigfd {
+        let ctl = Arc::clone(&ctl);
+        std::thread::Builder::new()
+            .name("moska-shared-node-sig".into())
+            .spawn(move || {
+                // one signalfd_siginfo record (128 bytes) per signal
+                let mut buf = [0u8; 128];
+                if fd.read(&mut buf).is_ok() {
+                    crate::info!("shared-node",
+                                 "signal received, draining (max {drain:?})");
+                    ctl.shutdown(drain);
+                    // only the CLI path exits the process; library
+                    // callers drive NodeCtl::shutdown themselves
+                    std::process::exit(0);
+                }
+            })
+            .context("spawn signal watcher")?;
+    }
+    serve_shared_node_ctl(addr.parse().context("bad --addr")?, backend,
+                          Arc::new(store), None, ctl)
 }
 
 /// Bind and serve plan-execution RPCs; `ready` (if given) receives the
 /// bound address once listening — used by tests and benches to serve on
-/// an ephemeral port.
+/// an ephemeral port. Serves until the process dies (no external
+/// [`NodeCtl`], so nothing ever initiates shutdown).
 pub fn serve_shared_node(addr: SocketAddr, backend: Arc<dyn Backend>,
                          store: Arc<SharedStore>,
                          ready: Option<Sender<SocketAddr>>) -> Result<()> {
+    serve_shared_node_ctl(addr, backend, store, ready, NodeCtl::new())
+}
+
+/// [`serve_shared_node`] with an externally held [`NodeCtl`]: the
+/// holder can observe load ([`NodeCtl::health`]) and stop the node
+/// gracefully ([`NodeCtl::shutdown`]) — the serve loop then returns
+/// `Ok(())` after the accept loop unblocks.
+pub fn serve_shared_node_ctl(addr: SocketAddr, backend: Arc<dyn Backend>,
+                             store: Arc<SharedStore>,
+                             ready: Option<Sender<SocketAddr>>,
+                             ctl: Arc<NodeCtl>) -> Result<()> {
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("binding shared node on {addr}"))?;
     let local = listener.local_addr()?;
+    *ctl.local.lock().unwrap() = Some(local);
     println!("shared-node listening on {local} \
               ({} domains, {} resident MB)",
              store.domains.len(),
@@ -110,17 +332,27 @@ pub fn serve_shared_node(addr: SocketAddr, backend: Arc<dyn Backend>,
     // hash the store once, not per connection
     let digest = store.content_digest();
     for stream in listener.incoming() {
+        if ctl.stopping() {
+            break; // shutdown's self-connect lands here
+        }
         match stream {
             Ok(s) => {
                 let backend = Arc::clone(&backend);
                 let store = Arc::clone(&store);
+                let ctl = Arc::clone(&ctl);
+                let id = ctl.next_conn.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = s.try_clone() {
+                    ctl.conns.lock().unwrap().insert(id, clone);
+                }
                 std::thread::spawn(move || {
-                    handle_conn(s, backend, store, digest)
+                    let _guard = ConnGuard { ctl: Arc::clone(&ctl), id };
+                    handle_conn(s, backend, store, digest, ctl)
                 });
             }
             Err(e) => crate::warnlog!("shared-node", "accept failed: {e}"),
         }
     }
+    crate::info!("shared-node", "{local} stopped accepting, drained");
     Ok(())
 }
 
@@ -128,18 +360,31 @@ pub fn serve_shared_node(addr: SocketAddr, backend: Arc<dyn Backend>,
 /// The serving thread runs for the process lifetime.
 pub fn spawn_shared_node(backend: Arc<dyn Backend>, store: Arc<SharedStore>)
                          -> Result<SocketAddr> {
+    spawn_shared_node_ctl(backend, store).map(|(addr, _)| addr)
+}
+
+/// [`spawn_shared_node`] returning the node's [`NodeCtl`] too, so the
+/// caller can kill this one replica mid-run (failover/chaos tests) or
+/// restart-and-probe without touching the rest of the process.
+pub fn spawn_shared_node_ctl(backend: Arc<dyn Backend>,
+                             store: Arc<SharedStore>)
+                             -> Result<(SocketAddr, Arc<NodeCtl>)> {
+    let ctl = NodeCtl::new();
+    let serve_ctl = Arc::clone(&ctl);
     let (tx, rx) = std::sync::mpsc::channel();
     std::thread::Builder::new()
         .name("moska-shared-node-srv".into())
         .spawn(move || {
-            if let Err(e) = serve_shared_node(
+            if let Err(e) = serve_shared_node_ctl(
                 "127.0.0.1:0".parse().unwrap(), backend, store, Some(tx),
+                serve_ctl,
             ) {
                 crate::errorlog!("shared-node", "server died: {e:#}");
             }
         })
         .context("spawn shared node server")?;
-    rx.recv().context("shared node never became ready")
+    let addr = rx.recv().context("shared node never became ready")?;
+    Ok((addr, ctl))
 }
 
 /// How long an established connection may sit idle before the node
@@ -152,7 +397,7 @@ pub fn spawn_shared_node(backend: Arc<dyn Backend>, store: Arc<SharedStore>)
 const CONN_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
 fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
-               store: Arc<SharedStore>, digest: u64) {
+               store: Arc<SharedStore>, digest: u64, ctl: Arc<NodeCtl>) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(CONN_IDLE_TIMEOUT));
     // a client that stops reading must not pin this thread in write_all
@@ -176,7 +421,13 @@ fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
                 return;
             }
         };
+        // true while an ExecShared occupies the in_flight gauge; held
+        // across the reply write so NodeCtl::shutdown never cuts a
+        // socket between "plan finished" and "reply flushed"
+        let mut executing = false;
         let reply = match msg {
+            // load probe: answered from atomics, never touches the store
+            WireMsg::HealthReq => WireMsg::Health(ctl.health()),
             WireMsg::Hello => WireMsg::HelloAck(HelloAck {
                 chunk: store.chunk,
                 domains: store.domains.keys().cloned().collect(),
@@ -213,6 +464,8 @@ fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
                 continue;
             }
             WireMsg::ExecShared(req) => {
+                ctl.in_flight.fetch_add(1, Ordering::Relaxed);
+                executing = true;
                 let t0 = Instant::now();
                 let result = validate_req(&req, &store, backend.as_ref())
                     .and_then(|()| {
@@ -220,11 +473,10 @@ fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
                                             req.layer, &req.q, &req.plan,
                                             &mut arena)
                     });
+                let exec_ns = t0.elapsed().as_nanos() as u64;
+                ctl.note_exec(exec_ns);
                 match result {
-                    Ok(parts) => WireMsg::Partials {
-                        parts,
-                        exec_ns: t0.elapsed().as_nanos() as u64,
-                    },
+                    Ok(parts) => WireMsg::Partials { parts, exec_ns },
                     // request-level failure: report, keep serving
                     Err(e) => WireMsg::Error(format!("{e:#}")),
                 }
@@ -233,7 +485,11 @@ fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
                 "unexpected {:?} frame on shared node", other.kind(),
             )),
         };
-        if stream.write_all(&codec::frame_bytes(&reply)).is_err() {
+        let wrote = stream.write_all(&codec::frame_bytes(&reply));
+        if executing {
+            ctl.in_flight.fetch_sub(1, Ordering::Relaxed);
+        }
+        if wrote.is_err() {
             return; // peer gone mid-reply
         }
     }

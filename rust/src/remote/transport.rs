@@ -33,11 +33,12 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::codec::{self, is_connection_error, is_timeout_error, CodecError,
-                   HelloAck, StoreSync, WireMsg};
-use crate::disagg::{FabricReply, SharedFabric};
+                   HealthInfo, HelloAck, StoreSync, WireMsg};
+use crate::disagg::{FabricError, FabricReply, SharedFabric};
 use crate::metrics::Metrics;
 use crate::plan::SharedGroupPlan;
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 /// Wire-level counters for one fabric connection (shared via `Arc` so
 /// metrics snapshots outlive the client).
@@ -87,10 +88,20 @@ impl FabricStats {
 /// Connection/retry/deadline knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct TransportCfg {
-    /// Connection attempts before giving up (the node may be starting).
+    /// *Initial* connection attempts before giving up (the node may
+    /// still be starting when the run launches).
     pub connect_attempts: u32,
-    /// Sleep between connection attempts.
+    /// *Reconnect* attempts once a handshake has ever succeeded — a
+    /// fabric with replicas sets this low so a dead shard is detected
+    /// in milliseconds and failed over, instead of patiently re-dialing
+    /// a corpse through the full initial-connect budget.
+    pub reconnect_attempts: u32,
+    /// Base sleep between connection attempts; doubles per attempt.
     pub connect_backoff: Duration,
+    /// Ceiling on the exponential backoff. Each sleep also gets a
+    /// 25%-wide jitter band (±12.5%) so shards reconnecting after a
+    /// node restart do not synchronize into a thundering herd.
+    pub connect_backoff_cap: Duration,
     /// Reconnect-and-resend cycles per request after the first try.
     pub request_retries: u32,
     /// Per-read idle timeout; the whole-reply deadline is this ×
@@ -102,7 +113,9 @@ impl Default for TransportCfg {
     fn default() -> TransportCfg {
         TransportCfg {
             connect_attempts: 50,
+            reconnect_attempts: 50,
             connect_backoff: Duration::from_millis(100),
+            connect_backoff_cap: Duration::from_secs(2),
             request_retries: 2,
             read_timeout: crate::server::READ_TIMEOUT,
         }
@@ -177,12 +190,21 @@ pub struct RemoteClient {
     /// retry loops must abort instead of re-handshaking into the same
     /// wall.
     fatal: bool,
+    /// Backoff-jitter stream, seeded per (addr, process) so concurrent
+    /// clients desynchronize without consulting a clock.
+    rng: Rng,
     pub stats: Arc<FabricStats>,
 }
 
 impl RemoteClient {
     /// Connect (with retry/backoff) and run the version handshake.
     pub fn connect(addr: &str, cfg: TransportCfg) -> Result<RemoteClient> {
+        // FNV-1a over the addr, xor'd with the pid: distinct jitter
+        // streams per client and per process, no clock involved
+        let mut seed: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in addr.bytes() {
+            seed = (seed ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
         let mut c = RemoteClient {
             addr: addr.to_string(),
             cfg,
@@ -190,6 +212,7 @@ impl RemoteClient {
             hello: None,
             expect: None,
             fatal: false,
+            rng: Rng::new(seed ^ std::process::id() as u64),
             stats: Arc::new(FabricStats::default()),
         };
         c.ensure_connected()?;
@@ -205,17 +228,42 @@ impl RemoteClient {
         self.stream = None;
     }
 
+    /// Exponential backoff with a cap and a 25%-wide jitter band
+    /// (±12.5% around the capped exponential): deterministic
+    /// fixed-interval retries synchronize reconnect storms across every
+    /// client of a restarted node; the jitter spreads them out.
+    fn backoff(&mut self, attempt: u32) -> Duration {
+        let exp = self
+            .cfg
+            .connect_backoff
+            .saturating_mul(1u32 << (attempt - 1).min(10))
+            .min(self.cfg.connect_backoff_cap)
+            .max(Duration::from_micros(1));
+        let quarter = (exp.as_nanos() as u64 / 4).max(1);
+        exp - Duration::from_nanos(quarter / 2)
+            + Duration::from_nanos(self.rng.below(quarter))
+    }
+
     /// Connect + handshake if not already connected. Connection refusals
     /// retry with backoff; a codec version mismatch or an explicit server
-    /// rejection fails immediately (retrying cannot fix those).
+    /// rejection fails immediately (retrying cannot fix those). The
+    /// attempt budget is `connect_attempts` for the first-ever connect
+    /// and `reconnect_attempts` once a handshake has succeeded.
     fn ensure_connected(&mut self) -> Result<()> {
         if self.stream.is_some() {
             return Ok(());
         }
+        let budget = if self.hello.is_some() {
+            self.cfg.reconnect_attempts
+        } else {
+            self.cfg.connect_attempts
+        }
+        .max(1);
         let mut last: Option<anyhow::Error> = None;
-        for attempt in 0..self.cfg.connect_attempts.max(1) {
+        for attempt in 0..budget {
             if attempt > 0 {
-                std::thread::sleep(self.cfg.connect_backoff);
+                let sleep = self.backoff(attempt);
+                std::thread::sleep(sleep);
             }
             let stream = match TcpStream::connect(&self.addr) {
                 Ok(s) => s,
@@ -250,7 +298,7 @@ impl RemoteClient {
         .with_context(|| {
             format!(
                 "connecting to shared node at {} failed after {} attempts",
-                self.addr, self.cfg.connect_attempts,
+                self.addr, budget,
             )
         })
     }
@@ -326,6 +374,57 @@ impl RemoteClient {
             digest: state.digest,
         });
         Ok(state)
+    }
+
+    /// One-shot liveness probe for a shard previously classified Down:
+    /// a single connect attempt + full handshake (which re-verifies the
+    /// store expectation — a replica that came back with different bits
+    /// fails here, fatally). No backoff loop: the health state machine
+    /// owns the probing cadence.
+    pub fn probe(&mut self) -> Result<()> {
+        if self.fatal {
+            bail!(
+                "shared node {} failed fatally; not re-probing", self.addr,
+            );
+        }
+        if self.stream.is_some() {
+            return Ok(());
+        }
+        let saved = self.cfg;
+        self.cfg.connect_attempts = 1;
+        self.cfg.reconnect_attempts = 1;
+        let r = self.ensure_connected();
+        self.cfg = saved;
+        r
+    }
+
+    /// Ask the node for its current load ([`HealthInfo`]). Must only be
+    /// called on a reply-quiet connection (no submission in flight) —
+    /// the fabric polls between steps, after `collect` drains.
+    pub fn poll_health(&mut self) -> Result<HealthInfo> {
+        self.ensure_connected()?;
+        let frame = codec::frame_bytes(&WireMsg::HealthReq);
+        if let Err(e) = self.send_bytes(&frame) {
+            self.disconnect();
+            return Err(anyhow::Error::new(e))
+                .with_context(|| format!("health poll to {}", self.addr));
+        }
+        match self.recv_msg() {
+            Ok(WireMsg::Health(h)) => Ok(h),
+            Ok(other) => {
+                self.disconnect();
+                bail!(
+                    "protocol error: {:?} reply to health poll",
+                    other.kind(),
+                );
+            }
+            Err(e) => {
+                self.disconnect();
+                Err(anyhow::Error::new(e)).with_context(|| {
+                    format!("health poll to {} failed", self.addr)
+                })
+            }
+        }
     }
 
     /// Read one reply frame under the deadline.
@@ -419,6 +518,56 @@ impl RemoteFabric {
         self.client.expect = Some(exp);
         Ok(())
     }
+
+    /// The node address this fabric is bound to.
+    pub fn addr(&self) -> &str {
+        &self.client.addr
+    }
+
+    /// True once a handshake failed fatally (version/store mismatch) —
+    /// the replica is unrecoverable for this run and must not be probed.
+    pub fn is_fatal(&self) -> bool {
+        self.client.fatal
+    }
+
+    /// See [`RemoteClient::probe`].
+    pub fn probe(&mut self) -> Result<()> {
+        self.client.probe()
+    }
+
+    /// See [`RemoteClient::poll_health`].
+    pub fn poll_health(&mut self) -> Result<HealthInfo> {
+        self.client.poll_health()
+    }
+
+    /// Install pre-encoded request frames as the in-flight submission
+    /// and send them eagerly. The sharded fabric encodes each group
+    /// once and routes the *bytes*, so a failover re-places the exact
+    /// same frames on a replica — bit-identical by construction.
+    pub fn submit_frames(&mut self, frames: Vec<Vec<u8>>) -> Result<()> {
+        anyhow::ensure!(self.pending.is_empty(),
+                        "fabric already has an in-flight request");
+        self.pending = frames;
+        self.eager_send();
+        Ok(())
+    }
+
+    /// Eagerly push every pending frame (the node executes while the
+    /// unique node runs its own attention); failures are swallowed here
+    /// and handled by collect's reconnect + resend loop.
+    fn eager_send(&mut self) {
+        self.sent = 0;
+        if self.client.ensure_connected().is_ok() {
+            while self.sent < self.pending.len() {
+                if self.client.send_bytes(&self.pending[self.sent]).is_err()
+                {
+                    self.client.disconnect();
+                    break;
+                }
+                self.sent += 1;
+            }
+        }
+    }
 }
 
 impl SharedFabric for RemoteFabric {
@@ -434,19 +583,7 @@ impl SharedFabric for RemoteFabric {
             .stats
             .serialize_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        // eager send: the node executes while we run unique attention;
-        // failures here are retried (reconnect + resend) in collect
-        self.sent = 0;
-        if self.client.ensure_connected().is_ok() {
-            while self.sent < self.pending.len() {
-                if self.client.send_bytes(&self.pending[self.sent]).is_err()
-                {
-                    self.client.disconnect();
-                    break;
-                }
-                self.sent += 1;
-            }
-        }
+        self.eager_send();
         Ok(())
     }
 
@@ -541,7 +678,15 @@ impl SharedFabric for RemoteFabric {
             }
             return Ok(out);
         }
+        // connection-class exhaustion only: carry a typed marker so the
+        // sharded fabric can downcast and fail the shard over to a
+        // replica (fatal/protocol/node-Error paths return above and
+        // must NOT fail over — deterministic failures recur on every
+        // replica)
         Err(last.unwrap_or_else(|| anyhow::anyhow!("no attempt ran")))
+            .context(FabricError::ShardDown {
+                addr: self.client.addr.clone(),
+            })
             .with_context(|| {
                 format!("shared-node request failed after {retries} retries")
             })
@@ -561,7 +706,9 @@ mod tests {
     fn tiny_cfg() -> TransportCfg {
         TransportCfg {
             connect_attempts: 30,
+            reconnect_attempts: 30,
             connect_backoff: Duration::from_millis(20),
+            connect_backoff_cap: Duration::from_millis(40),
             request_retries: 2,
             read_timeout: Duration::from_millis(100),
         }
@@ -582,6 +729,39 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn backoff_is_capped_and_jittered() {
+        let mut c = RemoteClient {
+            addr: "127.0.0.1:1".into(),
+            cfg: TransportCfg {
+                connect_backoff: Duration::from_millis(10),
+                connect_backoff_cap: Duration::from_millis(80),
+                ..tiny_cfg()
+            },
+            stream: None,
+            hello: None,
+            expect: None,
+            fatal: false,
+            rng: Rng::new(7),
+            stats: Arc::new(FabricStats::default()),
+        };
+        let mut seen = std::collections::HashSet::new();
+        for attempt in 1..64u32 {
+            let d = c.backoff(attempt);
+            let exp_ms = (10u64 << (attempt - 1).min(10)).min(80);
+            // ±12.5% jitter band around the capped exponential
+            assert!(d >= Duration::from_micros(exp_ms * 1000 * 7 / 8),
+                    "attempt {attempt}: {d:?} below band");
+            assert!(d <= Duration::from_micros(exp_ms * 1000 * 9 / 8),
+                    "attempt {attempt}: {d:?} above band (cap broken)");
+            if exp_ms == 80 {
+                seen.insert(d);
+            }
+        }
+        // the whole point of jitter: capped sleeps are NOT identical
+        assert!(seen.len() > 10, "backoff is not jittered: {seen:?}");
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Elastic-fabric chaos tests — all loopback, no artifacts. Two real
+//! `shared-node` servers each hold the FULL synthetic store, so every
+//! domain is a 2-replica set. Killing one replica mid-decode must not
+//! change a single output bit (plan execution is pure; unreplied frames
+//! are re-placed on the survivor verbatim), and losing the LAST replica
+//! must degrade to per-request errors — never a process abort.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use moska::config::ModelConfig;
+use moska::disagg::{parse_shard_specs, synthetic_store, synthetic_weights,
+                    DisaggCluster, HealthCfg, ShardedFabric,
+                    SYNTH_CHUNK, SYNTH_DOMAIN, SYNTH_DOMAIN_B};
+use moska::remote::{spawn_shared_node_ctl, TransportCfg};
+use moska::runtime::{Backend, NativeBackend};
+
+fn native_be() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::with_threads(ModelConfig::tiny(), SYNTH_CHUNK,
+                                         1))
+}
+
+fn test_cfg() -> TransportCfg {
+    TransportCfg {
+        connect_attempts: 20,
+        reconnect_attempts: 20,
+        connect_backoff: Duration::from_millis(25),
+        connect_backoff_cap: Duration::from_millis(100),
+        request_retries: 2,
+        read_timeout: Duration::from_secs(2),
+    }
+}
+
+fn all_domains() -> Vec<String> {
+    vec![SYNTH_DOMAIN.to_string(), SYNTH_DOMAIN_B.to_string()]
+}
+
+/// The chaos acceptance criterion: with every domain held by two
+/// replicas, killing one replica between decode points re-routes (and
+/// where needed re-sends) to the survivor, the token streams stay
+/// bit-identical to an uninterrupted in-process run, and the elastic
+/// counters record the failover.
+#[test]
+fn kill_one_replica_mid_decode_stays_bit_identical() {
+    let (a, ctl_a) = spawn_shared_node_ctl(
+        native_be(), Arc::new(synthetic_store().unwrap()),
+    )
+    .unwrap();
+    let (b, _ctl_b) = spawn_shared_node_ctl(
+        native_be(), Arc::new(synthetic_store().unwrap()),
+    )
+    .unwrap();
+
+    // both shards hold both domains → every domain is a 2-replica set
+    let specs = parse_shard_specs(&format!("{a},{b}")).unwrap();
+    let (fabric, store) =
+        ShardedFabric::connect(&specs, test_cfg(), HealthCfg::default())
+            .unwrap();
+    assert_eq!(
+        fabric.assignment(),
+        vec![(SYNTH_DOMAIN.to_string(), vec![0, 1]),
+             (SYNTH_DOMAIN_B.to_string(), vec![0, 1])],
+    );
+    let mut sharded = DisaggCluster::with_fabric(
+        native_be(), Box::new(fabric), synthetic_weights(),
+        Arc::new(store), Some(4), 32,
+    );
+    // point 1: both replicas healthy and round-robin routed
+    let p1 = sharded.run_point_mixed(2, &all_domains(), 32, 3).unwrap();
+    assert!(p1.errors.is_empty(), "{:?}", p1.errors);
+
+    // chaos: kill replica 0. Its listener closes and every open
+    // connection is force-shut, so the fabric's next frames to it die
+    // mid-flight and must be re-placed on replica 1.
+    ctl_a.shutdown(Duration::from_millis(250));
+
+    // point 2: decodes to completion through the survivor
+    let p2 = sharded.run_point_mixed(2, &all_domains(), 32, 3).unwrap();
+    assert!(p2.errors.is_empty(),
+            "survivor should absorb the batch: {:?}", p2.errors);
+
+    let el = sharded.fabric_elastic().expect("sharded fabric is elastic");
+    assert!(el.failovers >= 1, "no failover recorded: {el:?}");
+    assert!(el.resent_frames >= 1, "no frames re-placed: {el:?}");
+    assert_ne!(el.health[0], 0, "killed replica still marked healthy");
+
+    // bit-identity: an uninterrupted in-process run over the same two
+    // points produces the exact same token streams
+    let mut local = DisaggCluster::with_backends(
+        native_be(), native_be(), synthetic_weights(),
+        Arc::new(synthetic_store().unwrap()), Some(4), 32,
+    );
+    let l1 = local.run_point_mixed(2, &all_domains(), 32, 3).unwrap();
+    let l2 = local.run_point_mixed(2, &all_domains(), 32, 3).unwrap();
+    assert_eq!(l1.tokens, p1.tokens,
+               "pre-kill decode diverged from in-process");
+    assert_eq!(l2.tokens, p2.tokens,
+               "post-failover decode diverged from in-process");
+}
+
+/// Losing the ONLY replica of a domain degrades to per-request errors
+/// carried in [`SimPoint::errors`]: every request in the batch is
+/// reported (with its original row) and the point still returns `Ok` —
+/// the engine never aborts the process for a dead shard.
+#[test]
+fn no_surviving_replica_degrades_to_per_request_errors() {
+    let (a, ctl_a) = spawn_shared_node_ctl(
+        native_be(), Arc::new(synthetic_store().unwrap()),
+    )
+    .unwrap();
+    let specs = parse_shard_specs(&a.to_string()).unwrap();
+    let (fabric, store) =
+        ShardedFabric::connect(&specs, test_cfg(), HealthCfg::default())
+            .unwrap();
+    let mut sharded = DisaggCluster::with_fabric(
+        native_be(), Box::new(fabric), synthetic_weights(),
+        Arc::new(store), Some(4), 32,
+    );
+    // a healthy warm-up point, then the only replica dies
+    let p1 = sharded.run_point_mixed(2, &all_domains(), 32, 2).unwrap();
+    assert!(p1.errors.is_empty(), "{:?}", p1.errors);
+    ctl_a.shutdown(Duration::from_millis(250));
+
+    let p2 = sharded.run_point_mixed(4, &all_domains(), 32, 3).unwrap();
+    // every row errors (each domain loses its last replica), nobody
+    // decodes, and the KV pool is left clean for the next batch
+    assert_eq!(p2.errors.len(), 4, "{:?}", p2.errors);
+    let mut rows: Vec<usize> = p2.errors.iter().map(|(r, _)| *r).collect();
+    rows.sort_unstable();
+    assert_eq!(rows, vec![0, 1, 2, 3]);
+    for (_, msg) in &p2.errors {
+        assert!(msg.contains("no surviving replica"), "{msg}");
+    }
+    assert!(p2.tokens.iter().all(|t| t.is_empty()),
+            "dropped requests must not emit tokens: {:?}", p2.tokens);
+    let el = sharded.fabric_elastic().unwrap();
+    assert_ne!(el.health[0], 0, "dead shard still marked healthy");
+}

@@ -26,7 +26,9 @@ fn native_be() -> Arc<dyn Backend> {
 fn test_cfg() -> TransportCfg {
     TransportCfg {
         connect_attempts: 20,
+        reconnect_attempts: 20,
         connect_backoff: Duration::from_millis(25),
+        connect_backoff_cap: Duration::from_millis(100),
         request_retries: 2,
         read_timeout: Duration::from_secs(2),
     }

@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use moska::config::ModelConfig;
 use moska::disagg::{parse_shard_specs, synthetic_store, synthetic_weights,
-                    DisaggCluster, ShardedFabric, SharedFabric,
+                    DisaggCluster, HealthCfg, ShardedFabric, SharedFabric,
                     SYNTH_CHUNK, SYNTH_DOMAIN, SYNTH_DOMAIN_B};
 use moska::kvcache::shared_store::{DomainPlannerState, SharedStore};
 use moska::plan::SharedGroupPlan;
@@ -32,10 +32,16 @@ fn native_be() -> Arc<dyn Backend> {
 fn test_cfg() -> TransportCfg {
     TransportCfg {
         connect_attempts: 20,
+        reconnect_attempts: 20,
         connect_backoff: Duration::from_millis(25),
+        connect_backoff_cap: Duration::from_millis(100),
         request_retries: 2,
         read_timeout: Duration::from_secs(2),
     }
+}
+
+fn health_cfg() -> HealthCfg {
+    HealthCfg::default()
 }
 
 fn all_domains() -> Vec<String> {
@@ -91,20 +97,22 @@ fn sharded_decode_bit_identical_to_single_node_and_in_process() {
         .unwrap();
     let specs = parse_shard_specs(&format!("{a},{b}")).unwrap();
     let (fabric, store) =
-        ShardedFabric::connect(&specs, test_cfg()).unwrap();
+        ShardedFabric::connect(&specs, test_cfg(), health_cfg()).unwrap();
     assert_eq!(store.resident_bytes(), 0,
                "unique node must hold no shared K/V when sharded");
     assert_eq!(store.domains.len(), 2);
     assert_eq!(
         fabric.assignment(),
-        vec![(SYNTH_DOMAIN.to_string(), 0),
-             (SYNTH_DOMAIN_B.to_string(), 1)],
+        vec![(SYNTH_DOMAIN.to_string(), vec![0]),
+             (SYNTH_DOMAIN_B.to_string(), vec![1])],
     );
     // feed the derived assignment to the step planner: shard-contiguous
     // group ordering must not change a single output bit
     let mut asn = moska::plan::ShardAssignment::new();
-    for (d, s) in fabric.assignment() {
-        asn.assign(&d, s).unwrap();
+    for (d, replicas) in fabric.assignment() {
+        for &s in &replicas {
+            asn.assign(&d, s).unwrap();
+        }
     }
     let mut sharded = DisaggCluster::with_fabric(
         native_be(), Box::new(fabric), synthetic_weights(),
@@ -140,46 +148,68 @@ fn sharded_decode_bit_identical_to_single_node_and_in_process() {
     }
 }
 
-/// A domain resident on several shards without a pin is ambiguous and
-/// refused; an explicit pin resolves it — and the pinned run still
-/// decodes bit-identically.
+/// A domain resident on several shards (with bit-identical planner
+/// state) is a **replica set**: unpinned multi-residency connects,
+/// round-robin routing spreads groups across both replicas, and the
+/// replicated decode is still bit-identical to the in-process run.
+/// Explicit pins narrow the set — and the pinned run also decodes
+/// bit-identically.
 #[test]
-fn ambiguous_residency_refused_until_pinned() {
+fn replicated_residency_load_balances_bit_identically() {
     let full_a = Arc::new(synthetic_store().unwrap());
     let full_b = Arc::new(synthetic_store().unwrap());
     let a = spawn_shared_node(native_be(), full_a).unwrap();
     let b = spawn_shared_node(native_be(), full_b).unwrap();
 
-    // both shards hold both domains → ambiguous without pins
+    // both shards hold both domains → every domain is a 2-replica set
     let specs = parse_shard_specs(&format!("{a},{b}")).unwrap();
-    let err = ShardedFabric::connect(&specs, test_cfg()).unwrap_err();
-    let msg = format!("{err:#}");
-    assert!(msg.contains("pin it"), "{msg}");
-
-    // pins split the domains across the shards
-    let specs = parse_shard_specs(&format!(
-        "{}={a},{}={b}", SYNTH_DOMAIN, SYNTH_DOMAIN_B,
-    ))
-    .unwrap();
     let (fabric, store) =
-        ShardedFabric::connect(&specs, test_cfg()).unwrap();
+        ShardedFabric::connect(&specs, test_cfg(), health_cfg()).unwrap();
     assert_eq!(
         fabric.assignment(),
-        vec![(SYNTH_DOMAIN.to_string(), 0),
-             (SYNTH_DOMAIN_B.to_string(), 1)],
+        vec![(SYNTH_DOMAIN.to_string(), vec![0, 1]),
+             (SYNTH_DOMAIN_B.to_string(), vec![0, 1])],
     );
     let mut sharded = DisaggCluster::with_fabric(
         native_be(), Box::new(fabric), synthetic_weights(),
         Arc::new(store), Some(4), 32,
     );
     let p = sharded.run_point_mixed(2, &all_domains(), 32, 3).unwrap();
+    // round-robin over healthy replicas: both shards really served
+    let stats = sharded.fabric_shard_stats();
+    assert_eq!(stats.len(), 2);
+    for (id, st) in &stats {
+        assert!(st.frames_sent.load(Ordering::Relaxed) > 0,
+                "replica {id} was never routed to");
+    }
+
+    // pins narrow the replica sets down to a classic partition
+    let specs = parse_shard_specs(&format!(
+        "{}={a},{}={b}", SYNTH_DOMAIN, SYNTH_DOMAIN_B,
+    ))
+    .unwrap();
+    let (fabric, store) =
+        ShardedFabric::connect(&specs, test_cfg(), health_cfg()).unwrap();
+    assert_eq!(
+        fabric.assignment(),
+        vec![(SYNTH_DOMAIN.to_string(), vec![0]),
+             (SYNTH_DOMAIN_B.to_string(), vec![1])],
+    );
+    let mut pinned = DisaggCluster::with_fabric(
+        native_be(), Box::new(fabric), synthetic_weights(),
+        Arc::new(store), Some(4), 32,
+    );
+    let pp = pinned.run_point_mixed(2, &all_domains(), 32, 3).unwrap();
 
     let mut local = DisaggCluster::with_backends(
         native_be(), native_be(), synthetic_weights(),
         Arc::new(synthetic_store().unwrap()), Some(4), 32,
     );
     let pl = local.run_point_mixed(2, &all_domains(), 32, 3).unwrap();
-    assert_eq!(pl.tokens, p.tokens);
+    assert_eq!(pl.tokens, p.tokens,
+               "replicated decode diverged from in-process");
+    assert_eq!(pl.tokens, pp.tokens,
+               "pinned decode diverged from in-process");
 }
 
 /// A pin naming a domain the shard does not hold is refused at connect.
@@ -189,7 +219,8 @@ fn pin_to_non_resident_shard_refused() {
         .unwrap();
     let specs =
         parse_shard_specs(&format!("{}={a}", SYNTH_DOMAIN_B)).unwrap();
-    let err = ShardedFabric::connect(&specs, test_cfg()).unwrap_err();
+    let err = ShardedFabric::connect(&specs, test_cfg(), health_cfg())
+        .unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("not resident"), "{msg}");
 }
@@ -210,7 +241,8 @@ fn shard_down_at_connect_fails_cleanly() {
         connect_backoff: Duration::from_millis(10),
         ..test_cfg()
     };
-    let err = ShardedFabric::connect(&specs, cfg).unwrap_err();
+    let err =
+        ShardedFabric::connect(&specs, cfg, health_cfg()).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains(&dead.to_string()), "{msg}");
 }
@@ -286,7 +318,8 @@ fn diverged_multi_resident_domain_refused() {
     let b = flaky_shard_with("doma", 0.2);
     let specs =
         parse_shard_specs(&format!("doma={a},{b}")).unwrap();
-    let err = ShardedFabric::connect(&specs, test_cfg()).unwrap_err();
+    let err = ShardedFabric::connect(&specs, test_cfg(), health_cfg())
+        .unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("different planner state"), "{msg}");
 }
@@ -299,7 +332,7 @@ fn shard_drop_mid_run_retries_and_recovers() {
     let b = flaky_shard("domb");
     let specs = parse_shard_specs(&format!("{a},{b}")).unwrap();
     let (mut fabric, store) =
-        ShardedFabric::connect(&specs, test_cfg()).unwrap();
+        ShardedFabric::connect(&specs, test_cfg(), health_cfg()).unwrap();
     assert_eq!(store.domains.len(), 2);
 
     let q = Tensor::f32(&[1, 4, 16], vec![0.25; 64]);
@@ -336,7 +369,7 @@ fn unassigned_domain_refused_at_submit() {
     let a = flaky_shard("doma");
     let specs = parse_shard_specs(&a.to_string()).unwrap();
     let (mut fabric, _store) =
-        ShardedFabric::connect(&specs, test_cfg()).unwrap();
+        ShardedFabric::connect(&specs, test_cfg(), health_cfg()).unwrap();
     let q = Tensor::f32(&[1, 4, 16], vec![0.25; 64]);
     let plan = SharedGroupPlan {
         domain: "nowhere".to_string(),

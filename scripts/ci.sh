@@ -227,6 +227,166 @@ if [ "$RUN_BENCH" = "1" ]; then
     fi
 fi
 
+if [ "$RUN_BENCH" = "1" ]; then
+    echo "== chaos failover smoke =="
+    # two FULL-store replica nodes (no --domains): every domain is a
+    # 2-replica set. SIGTERM one replica mid-run — the sharded run must
+    # fail over to the survivor, exit 0, and stay bit-identical to the
+    # in-process run; the killed node must drain and exit 0. Then kill
+    # the ONLY node of a 1-shard run — per-request errors, still exit 0.
+    if cargo build --release --bin moska; then
+        BIN=target/release/moska
+        mkdir -p bench_out
+        "$BIN" shared-node --synthetic --addr 127.0.0.1:0 \
+            > bench_out/replica_a.log 2>&1 &
+        REP_A_PID=$!
+        "$BIN" shared-node --synthetic --addr 127.0.0.1:0 \
+            > bench_out/replica_b.log 2>&1 &
+        REP_B_PID=$!
+        trap 'kill "$REP_A_PID" "$REP_B_PID" 2>/dev/null' EXIT
+        ADDR_A=""
+        ADDR_B=""
+        for _ in $(seq 1 100); do
+            ADDR_A=$(sed -n 's/^shared-node listening on \([0-9.:]*\).*/\1/p' \
+                         bench_out/replica_a.log 2>/dev/null | head -1)
+            ADDR_B=$(sed -n 's/^shared-node listening on \([0-9.:]*\).*/\1/p' \
+                         bench_out/replica_b.log 2>/dev/null | head -1)
+            [ -n "$ADDR_A" ] && [ -n "$ADDR_B" ] && break
+            sleep 0.1
+        done
+        # many short points: the kill fires after the FIRST finished
+        # point, with 11 more still ahead of the run
+        CHAOS_BATCHES=2,4,2,4,2,4,2,4,2,4,2,4
+        if [ -z "$ADDR_A" ] || [ -z "$ADDR_B" ]; then
+            echo "error: replica nodes never reported their addresses" >&2
+            cat bench_out/replica_a.log bench_out/replica_b.log >&2 || true
+            FAIL=1
+        else
+            "$BIN" disagg --synthetic --batches "$CHAOS_BATCHES" \
+                --steps 8 --threads 1 --domains bench,bench2 \
+                --shards "$ADDR_A,$ADDR_B" \
+                --emit-tokens bench_out/chaos_tokens.json \
+                > bench_out/chaos_run.log 2>&1 &
+            RUN_PID=$!
+            KILLED=0
+            for _ in $(seq 1 1500); do
+                kill -0 "$RUN_PID" 2>/dev/null || break
+                if grep -q "point done: batch" bench_out/chaos_run.log \
+                       2>/dev/null; then
+                    kill -TERM "$REP_A_PID" 2>/dev/null
+                    KILLED=1
+                    break
+                fi
+                sleep 0.02
+            done
+            if [ "$KILLED" -ne 1 ]; then
+                echo "error: chaos run never reported a finished point" >&2
+                cat bench_out/chaos_run.log >&2 || true
+                kill "$RUN_PID" 2>/dev/null
+                FAIL=1
+            elif wait "$RUN_PID"; then
+                if wait "$REP_A_PID"; then
+                    echo "chaos smoke: SIGTERM'd replica drained, exit 0"
+                else
+                    echo "error: SIGTERM'd replica exited non-zero" >&2
+                    cat bench_out/replica_a.log >&2 || true
+                    FAIL=1
+                fi
+                "$BIN" disagg --synthetic --batches "$CHAOS_BATCHES" \
+                    --steps 8 --threads 1 --domains bench,bench2 \
+                    --emit-tokens bench_out/chaos_local_tokens.json \
+                    > /dev/null 2>&1
+                if cmp -s bench_out/chaos_tokens.json \
+                          bench_out/chaos_local_tokens.json; then
+                    echo "chaos smoke: post-failover tokens bit-identical"
+                else
+                    echo "error: decode diverged after replica kill" >&2
+                    FAIL=1
+                fi
+                FO=$(sed -n \
+                         's/.*fabric elastic: failovers=\([0-9]*\).*/\1/p' \
+                         bench_out/chaos_run.log | head -1)
+                if [ -n "$FO" ] && [ "$FO" -ge 1 ]; then
+                    echo "chaos smoke: $FO failover(s) recorded"
+                else
+                    echo "error: no failover recorded (failovers=${FO:-?})" >&2
+                    cat bench_out/chaos_run.log >&2 || true
+                    FAIL=1
+                fi
+            else
+                echo "error: chaos run aborted — killing one of two \
+replicas must not fail the run" >&2
+                cat bench_out/chaos_run.log >&2 || true
+                FAIL=1
+            fi
+        fi
+        kill "$REP_B_PID" 2>/dev/null
+        trap - EXIT
+
+        # --- no-survivor case: the ONLY replica dies → per-request
+        # errors on stderr, run still exits 0 (never a process abort)
+        "$BIN" shared-node --synthetic --addr 127.0.0.1:0 \
+            > bench_out/solo_node.log 2>&1 &
+        SOLO_PID=$!
+        trap 'kill "$SOLO_PID" 2>/dev/null' EXIT
+        ADDR_S=""
+        for _ in $(seq 1 100); do
+            ADDR_S=$(sed -n 's/^shared-node listening on \([0-9.:]*\).*/\1/p' \
+                         bench_out/solo_node.log 2>/dev/null | head -1)
+            [ -n "$ADDR_S" ] && break
+            sleep 0.1
+        done
+        if [ -z "$ADDR_S" ]; then
+            echo "error: solo node never reported its address" >&2
+            FAIL=1
+        else
+            "$BIN" disagg --synthetic --batches "$CHAOS_BATCHES" \
+                --steps 8 --threads 1 --domains bench,bench2 \
+                --shards "$ADDR_S" \
+                > bench_out/chaos_solo.log 2>&1 &
+            RUN_PID=$!
+            KILLED=0
+            for _ in $(seq 1 1500); do
+                kill -0 "$RUN_PID" 2>/dev/null || break
+                if grep -q "point done: batch" bench_out/chaos_solo.log \
+                       2>/dev/null; then
+                    kill -TERM "$SOLO_PID" 2>/dev/null
+                    KILLED=1
+                    break
+                fi
+                sleep 0.02
+            done
+            if [ "$KILLED" -ne 1 ]; then
+                echo "error: solo chaos run never reported a point" >&2
+                cat bench_out/chaos_solo.log >&2 || true
+                kill "$RUN_PID" 2>/dev/null
+                FAIL=1
+            elif wait "$RUN_PID"; then
+                if grep -q "no surviving replica" \
+                        bench_out/chaos_solo.log; then
+                    echo "chaos smoke: lost last replica → per-request \
+errors, exit 0"
+                else
+                    echo "error: no per-request DomainUnavailable \
+reported after losing the last replica" >&2
+                    cat bench_out/chaos_solo.log >&2 || true
+                    FAIL=1
+                fi
+            else
+                echo "error: losing the last replica aborted the run \
+(must degrade to per-request errors)" >&2
+                cat bench_out/chaos_solo.log >&2 || true
+                FAIL=1
+            fi
+        fi
+        kill "$SOLO_PID" 2>/dev/null
+        trap - EXIT
+    else
+        echo "error: release build for the chaos smoke failed" >&2
+        FAIL=1
+    fi
+fi
+
 if [ "$FAIL" -ne 0 ]; then
     echo "CI FAILED" >&2
     exit 1
