@@ -25,6 +25,7 @@ use moska::model::Weights;
 use moska::remote::{spawn_shared_node, RemoteFabric, TransportCfg};
 use moska::runtime::artifact::default_artifacts_dir;
 use moska::runtime::{kernels_for, Backend, KernelSpec, NativeBackend};
+use moska::tensor::KvDtype;
 use moska::util::bench::Table;
 use moska::util::json::Json;
 use moska::util::threadpool::ThreadPool;
@@ -52,12 +53,14 @@ fn bench_model() -> ModelConfig {
 const CHUNK: usize = 64;
 const SHARED_CHUNKS: usize = 16;
 
-fn native_engine(threads: usize, kernel: KernelSpec) -> Engine {
+fn native_engine(threads: usize, kernel: KernelSpec,
+                 kv_dtype: KvDtype) -> Engine {
     let cfg = ServingConfig {
         top_k: None,
         max_batch: 32,
         exec_threads: threads,
         kernel,
+        kv_dtype,
         ..Default::default()
     };
     let model = bench_model();
@@ -87,12 +90,16 @@ struct NativeRun {
     arena_fresh_allocs: u64,
     /// Mean StepPlan build time per decode step (ns).
     plan_build_mean_ns: f64,
+    /// Shared-store resident bytes as stored (the `store_resident_bytes`
+    /// gauge — packed dtypes count their encoded size).
+    store_resident_bytes: f64,
 }
 
-/// Run the decode workload at a thread count and kernel flavor.
+/// Run the decode workload at a thread count, kernel flavor, and K/V
+/// storage dtype.
 fn run_native(threads: usize, kernel: KernelSpec, n_req: usize,
-              steps: usize) -> NativeRun {
-    let mut eng = native_engine(threads, kernel);
+              steps: usize, kv_dtype: KvDtype) -> NativeRun {
+    let mut eng = native_engine(threads, kernel, kv_dtype);
     for i in 0..n_req {
         let p: Vec<i32> = (0..8)
             .map(|j| ((i * 37 + j * 11) % 512) as i32)
@@ -116,7 +123,53 @@ fn run_native(threads: usize, kernel: KernelSpec, n_req: usize,
             .histogram("plan_build_ns")
             .map(|h| h.mean_ns())
             .unwrap_or(0.0),
+        store_resident_bytes: eng
+            .metrics
+            .gauge_value("store_resident_bytes")
+            .unwrap_or(0.0),
     }
+}
+
+/// Packed K/V precision A/B: the same serial decode at every storage
+/// dtype. f32 is the seed numerics; packed dtypes trade precision for
+/// resident bytes (the `store_resident_bytes` gauge must halve at
+/// f16/bf16). Within each dtype, scalar and SIMD flavors must decode
+/// identical tokens — the widening determinism contract at engine level.
+fn precision_bench() -> Vec<(String, Json)> {
+    let (n, steps) = (4usize, 8usize);
+    println!("== packed K/V precision (serial decode, {} shared chunks) \
+              ==", SHARED_CHUNKS);
+    let dtypes =
+        [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::I8];
+    let mut out: Vec<(String, Json)> = Vec::new();
+    let mut resident = Vec::new();
+    for dt in dtypes {
+        let scalar = run_native(1, KernelSpec::Scalar, n, steps, dt);
+        let simd = run_native(1, KernelSpec::Simd, n, steps, dt);
+        assert_eq!(scalar.streams, simd.streams,
+                   "kv={dt}: scalar and simd flavors decoded different \
+                    tokens");
+        println!("kv={:<5}          : {:.1} tok/s, {:.0} resident KB \
+                  (scalar/simd tokens identical)",
+                 dt.as_str(), simd.tok_per_s,
+                 simd.store_resident_bytes / 1024.0);
+        out.push((format!("kvpack_tok_per_s_{dt}"),
+                  Json::num(simd.tok_per_s)));
+        out.push((format!("kvpack_resident_bytes_{dt}"),
+                  Json::num(simd.store_resident_bytes)));
+        resident.push(simd.store_resident_bytes);
+    }
+    // the acceptance gate: f16 (and bf16) store exactly half the bytes
+    let (f32b, f16b, bf16b, i8b) =
+        (resident[0], resident[1], resident[2], resident[3]);
+    assert!(f32b > 0.0, "f32 store reported no resident bytes");
+    assert!(f16b * 2.0 <= f32b + 1.0 && bf16b * 2.0 <= f32b + 1.0,
+            "16-bit packing did not halve store_resident_bytes \
+             (f32 {f32b}, f16 {f16b}, bf16 {bf16b})");
+    assert!(i8b < f16b, "int8 packing not smaller than f16 ({i8b})");
+    out.push(("kvpack_f16_halved".into(), Json::num(1.0)));
+    out.push(("kvpack_flavor_tokens_identical".into(), Json::num(1.0)));
+    out
 }
 
 /// Loopback fabric measurements for BENCH_decode.json: spawn a
@@ -262,8 +315,9 @@ fn kernel_ab_bench() -> Vec<(&'static str, Json)> {
     let (n, steps) = (8usize, 8usize);
     let flavor = kernels_for(KernelSpec::Simd).name;
     println!("== kernel flavor A/B (serial decode, simd = {flavor}) ==");
-    let scalar = run_native(1, KernelSpec::Scalar, n, steps);
-    let simd = run_native(1, KernelSpec::Simd, n, steps);
+    let scalar = run_native(1, KernelSpec::Scalar, n, steps,
+                            KvDtype::F32);
+    let simd = run_native(1, KernelSpec::Simd, n, steps, KvDtype::F32);
     assert_eq!(scalar.streams, simd.streams,
                "scalar and simd kernel flavors decoded different tokens");
     let speedup = simd.tok_per_s / scalar.tok_per_s;
@@ -286,9 +340,9 @@ fn native_bench() {
     println!("== native parallel decode (synthetic {}-layer model, \
               {} shared chunks) ==",
              bench_model().n_layers, SHARED_CHUNKS);
-    let base = run_native(1, KernelSpec::Auto, n, steps);
+    let base = run_native(1, KernelSpec::Auto, n, steps, KvDtype::F32);
     println!("threads=1        : {:.1} tok/s", base.tok_per_s);
-    let par = run_native(auto, KernelSpec::Auto, n, steps);
+    let par = run_native(auto, KernelSpec::Auto, n, steps, KvDtype::F32);
     println!("threads={auto:<8} : {:.1} tok/s  ({:.2}x, gemm N {:.2})",
              par.tok_per_s, par.tok_per_s / base.tok_per_s, par.gemm_n);
     assert_eq!(base.streams, par.streams,
@@ -302,6 +356,10 @@ fn native_bench() {
     // kernel flavor A/B (scalar vs detected SIMD): flavor + speedup
     // ride along in the trajectory JSON
     let kernel_entries = kernel_ab_bench();
+
+    // packed K/V precision A/B (f32/f16/bf16/int8): resident shrinkage
+    // + per-dtype throughput ride along too
+    let precision_entries = precision_bench();
 
     // fabric loopback section (remote + 2-shard): wire counters ride
     // along in the same perf-trajectory JSON, next to the arena
@@ -324,9 +382,15 @@ fn native_bench() {
         ("arena_high_water_bytes", Json::num(par.arena_high_water as f64)),
         ("arena_fresh_allocs", Json::num(par.arena_fresh_allocs as f64)),
         ("plan_build_mean_ns", Json::num(par.plan_build_mean_ns)),
+        // the engine's store gauges at the serving default (f32)
+        ("store_resident_bytes", Json::num(par.store_resident_bytes)),
+        ("store_dtype", Json::str(KvDtype::F32.as_str())),
     ];
     let mut entries: Vec<(&str, Json)> = static_entries;
     entries.extend(kernel_entries);
+    entries.extend(
+        precision_entries.iter().map(|(k, v)| (k.as_str(), v.clone())),
+    );
     entries.extend(
         fabric_entries.iter().map(|(k, v)| (k.as_str(), v.clone())),
     );

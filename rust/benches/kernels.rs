@@ -3,18 +3,30 @@
 //! 8 query heads × dh 32, 4 KV heads, FFN 768, 64-token chunks).
 //!
 //! For each hot kernel (matmul deep/shallow, shared-GEMM chunk
-//! attention, unique-GEMV chunk attention, router scoring) this times
-//! the seed `scalar` flavor, the portable `lanes8` flavor, and the best
-//! runtime-detected SIMD flavor, asserts `lanes8` and the detected
-//! flavor agree bit-for-bit, and emits `bench_out/BENCH_kernels.json`
-//! with per-kernel speedups plus the geomean — the perf-gate artifact
-//! for the SIMD layer (target: ≥ 2x geomean over `scalar`).
+//! attention — at every K/V storage dtype — unique-GEMV chunk
+//! attention, router scoring) this times the seed `scalar` flavor, the
+//! portable `lanes8` flavor, and the best runtime-detected SIMD flavor,
+//! asserts `lanes8` and the detected flavor agree bit-for-bit, and
+//! emits `bench_out/BENCH_kernels.json` with per-kernel speedups, the
+//! geomean, and the memory-traffic columns:
+//!
+//! - `bytes_per_call` / `bytes_per_token`: operand (for attention: K/V)
+//!   bytes read per call / per attended token, **as stored** — packed
+//!   dtypes count their encoded size.
+//! - `encoded_gbps`: stored-byte traffic rate under the detected flavor.
+//! - `effective_gbps`: the widened-f32-equivalent service rate — the
+//!   bandwidth an unpacked f32 kernel would need to attend tokens at
+//!   this rate.
+//! - `effective_bw_gain` (packed attention cases): how much further the
+//!   same stored-K/V bandwidth goes at this dtype, discounted by any
+//!   kernel slowdown vs the f32 case — `(logical/encoded) × (t_f32 /
+//!   t_packed)`. The perf gate asserts ≥ 1.5x for f16 chunk attention.
 
 use std::time::Duration;
 
 use moska::runtime::native;
 use moska::runtime::{kernels_for, KernelSpec, Kernels};
-use moska::tensor::Tensor;
+use moska::tensor::{KvDtype, Tensor};
 use moska::util::bench::{bench, Stats, Table};
 use moska::util::json::Json;
 use moska::util::rng::Rng;
@@ -26,10 +38,16 @@ fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
 }
 
 /// One benched kernel: a name plus a runner returning a checksum tensor
-/// so flavor outputs can be bit-compared.
+/// so flavor outputs can be bit-compared, and its traffic accounting.
 struct Case {
-    name: &'static str,
+    name: String,
     run: Box<dyn Fn(&'static Kernels) -> Tensor>,
+    /// Operand bytes read per call, as stored (encoded size).
+    bytes: usize,
+    /// Widened-f32-equivalent bytes (== `bytes` for f32 cases).
+    logical_bytes: usize,
+    /// K/V tokens attended per call (0 for non-attention kernels).
+    tokens: usize,
 }
 
 fn cases() -> Vec<Case> {
@@ -44,43 +62,70 @@ fn cases() -> Vec<Case> {
     ] {
         let x = rand_t(&mut rng, &[b, d]);
         let w = rand_t(&mut rng, &[d, n]);
+        let bytes = (b * d + d * n) * 4;
         out.push(Case {
-            name,
+            name: name.to_string(),
             run: Box::new(move |kern| {
                 native::matmul_exec_kern(&x, &w, None, kern)
             }),
+            bytes,
+            logical_bytes: bytes,
+            tokens: 0,
         });
     }
 
-    // shared-side GEMM: batched queries over a coalesced 4-chunk run
+    // shared-side GEMM: batched queries over a coalesced 4-chunk run,
+    // at every K/V storage dtype (f32 streams the seed tensors; packed
+    // dtypes widen on the fly inside the kernel)
     let (h, hkv, dh) = (8usize, 4usize, 32usize);
     for (name, b, c) in [
         ("chunk_attn_gemm_b16_c256", 16usize, 256usize),
         ("chunk_attn_gemv_b1_c64", 1, 64),
     ] {
         let q = rand_t(&mut rng, &[b, h, dh]);
-        let k = rand_t(&mut rng, &[c, hkv, dh]);
-        let v = rand_t(&mut rng, &[c, hkv, dh]);
+        let kf = rand_t(&mut rng, &[c, hkv, dh]);
+        let vf = rand_t(&mut rng, &[c, hkv, dh]);
         let q_pos = vec![10_000i32; b];
-        out.push(Case {
-            name,
-            run: Box::new(move |kern| {
-                let p = native::chunk_attn_exec_kern(
-                    &q, &k, &v, &q_pos, 0, c as i32, None, kern,
-                );
-                p.o
-            }),
-        });
+        for dt in
+            [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::I8]
+        {
+            let k = kf.pack_kv(dt);
+            let v = vf.pack_kv(dt);
+            let q = q.clone();
+            let q_pos = q_pos.clone();
+            let case_name = if dt == KvDtype::F32 {
+                name.to_string()
+            } else {
+                format!("{name}_{dt}")
+            };
+            out.push(Case {
+                name: case_name,
+                run: Box::new(move |kern| {
+                    let p = native::chunk_attn_exec_kern(
+                        &q, &k, &v, &q_pos, 0, c as i32, None, kern,
+                    );
+                    p.o
+                }),
+                bytes: 2 * dt.kv_bytes(c, hkv * dh),
+                logical_bytes: 2 * KvDtype::F32.kv_bytes(c, hkv * dh),
+                tokens: c,
+            });
+        }
     }
 
     // router scoring: every live row against a domain's chunk set
+    // (embeddings always stay f32, whatever the K/V dtype)
     let q = rand_t(&mut rng, &[16, h, dh]);
     let embs = rand_t(&mut rng, &[64, hkv, dh]);
+    let bytes = (16 * h * dh + 64 * hkv * dh) * 4;
     out.push(Case {
-        name: "router_b16_c64",
+        name: "router_b16_c64".to_string(),
         run: Box::new(move |kern| {
             native::router_score_exec_kern(&q, &embs, None, kern)
         }),
+        bytes,
+        logical_bytes: bytes,
+        tokens: 0,
     });
     out
 }
@@ -96,18 +141,28 @@ fn main() {
     let budget = Duration::from_millis(60);
     let mut table = Table::new(&[
         "kernel", "scalar_us", "lanes8_us", "simd_us", "simd_speedup",
+        "B/token", "eff_GB/s",
     ]);
     let mut entries: Vec<Json> = Vec::new();
+    // (simd secs, encoded bytes, logical bytes) per case, for the
+    // packed-vs-f32 effective-bandwidth gains
+    let mut timings: Vec<(String, f64, usize, usize)> = Vec::new();
     let mut log_sum = 0f64;
     let mut n_cases = 0usize;
     for case in cases() {
         // flavor bit-identity sanity on the benched shapes: the
-        // detected flavor must match the portable 8-lane oracle
+        // detected flavor must match the portable 8-lane oracle (and,
+        // for packed dtypes, the scalar widening oracle too)
         assert_eq!((case.run)(lanes8), (case.run)(simd),
                    "{}: {} diverged from lanes8", case.name, simd.name);
+        if case.bytes != case.logical_bytes {
+            assert_eq!((case.run)(scalar), (case.run)(simd),
+                       "{}: {} diverged from the scalar widening oracle",
+                       case.name, simd.name);
+        }
 
         let time = |kern: &'static Kernels| -> Stats {
-            bench(&format!("{:<26} [{}]", case.name, kern.name), budget,
+            bench(&format!("{:<30} [{}]", case.name, kern.name), budget,
                   || {
                       std::hint::black_box((case.run)(kern));
                   })
@@ -118,33 +173,84 @@ fn main() {
         let speedup = s_scalar / s_simd;
         log_sum += speedup.ln();
         n_cases += 1;
+        let bytes_per_token = if case.tokens > 0 {
+            case.bytes as f64 / case.tokens as f64
+        } else {
+            0.0
+        };
+        let encoded_gbps = case.bytes as f64 / s_simd / 1e9;
+        let effective_gbps = case.logical_bytes as f64 / s_simd / 1e9;
         table.row(vec![
-            case.name.to_string(),
+            case.name.clone(),
             format!("{:.1}", s_scalar * 1e6),
             format!("{:.1}", s_lanes8 * 1e6),
             format!("{:.1}", s_simd * 1e6),
             format!("{speedup:.2}x"),
+            if case.tokens > 0 {
+                format!("{bytes_per_token:.0}")
+            } else {
+                "-".to_string()
+            },
+            format!("{effective_gbps:.1}"),
         ]);
         entries.push(Json::obj(vec![
-            ("name", Json::str(case.name)),
+            ("name", Json::str(&case.name)),
             ("scalar_ns", Json::num(s_scalar * 1e9)),
             ("lanes8_ns", Json::num(s_lanes8 * 1e9)),
             ("simd_ns", Json::num(s_simd * 1e9)),
             ("simd_speedup", Json::num(speedup)),
+            ("bytes_per_call", Json::num(case.bytes as f64)),
+            ("bytes_per_token", Json::num(bytes_per_token)),
+            ("encoded_gbps", Json::num(encoded_gbps)),
+            ("effective_gbps", Json::num(effective_gbps)),
         ]));
+        timings.push((case.name.clone(), s_simd, case.bytes,
+                      case.logical_bytes));
     }
     let geomean = (log_sum / n_cases as f64).exp();
     table.print(&format!("kernel flavors (simd = {})", simd.name));
     println!("\ngeomean simd speedup over scalar: {geomean:.2}x");
 
+    // packed chunk-attn effective-bandwidth gains over the f32 twin:
+    // (logical/encoded) × (t_f32 / t_packed) — stored-byte traffic
+    // stretches by the element-width ratio, discounted by the widening
+    // kernel's slowdown. The perf gate: f16 GEMM attention ≥ 1.5x.
+    let find = |n: &str| {
+        timings.iter().find(|(name, ..)| name == n)
+            .unwrap_or_else(|| panic!("missing case {n}"))
+    };
+    let mut gain_entries: Vec<(String, Json)> = Vec::new();
+    let mut f16_gemm_gain = 0f64;
+    for base in ["chunk_attn_gemm_b16_c256", "chunk_attn_gemv_b1_c64"] {
+        let &(_, t32, b32, _) = find(base);
+        for dt in [KvDtype::F16, KvDtype::Bf16, KvDtype::I8] {
+            let &(_, tp, bp, lp) = find(&format!("{base}_{dt}"));
+            let gain = (lp as f64 / bp as f64) * (t32 / tp);
+            println!("{base} {dt}: effective-bandwidth gain \
+                      {gain:.2}x over f32 ({} -> {} B/chunk-run)",
+                     b32, bp);
+            gain_entries.push((format!("{base}_{dt}_effective_bw_gain"),
+                               Json::num(gain)));
+            if base == "chunk_attn_gemm_b16_c256" && dt == KvDtype::F16 {
+                f16_gemm_gain = gain;
+            }
+        }
+    }
+    assert!(f16_gemm_gain >= 1.5,
+            "f16 chunk-attn effective-bandwidth gain {f16_gemm_gain:.2}x \
+             below the 1.5x gate");
+
     std::fs::create_dir_all("bench_out").expect("bench_out dir");
-    let j = Json::obj(vec![
+    let mut top: Vec<(&str, Json)> = vec![
         ("bench", Json::str("kernels")),
         ("simd_flavor", Json::str(simd.name)),
         ("lanes8_matches_simd", Json::num(1.0)),
         ("kernels", Json::arr(entries)),
         ("geomean_simd_speedup", Json::num(geomean)),
-    ]);
+        ("f16_chunk_attn_effective_bw_gain", Json::num(f16_gemm_gain)),
+    ];
+    top.extend(gain_entries.iter().map(|(k, v)| (k.as_str(), v.clone())));
+    let j = Json::obj(top);
     let path = "bench_out/BENCH_kernels.json";
     std::fs::write(path, j.to_string()).expect("write BENCH_kernels.json");
     println!("[json] {path}");

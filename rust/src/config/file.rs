@@ -104,6 +104,12 @@ fn serving_from_json(j: &Json) -> Result<ServingConfig> {
     if let Some(v) = j.opt("kernel") {
         c.kernel = crate::runtime::simd::KernelSpec::parse(v.as_str()?)?;
     }
+    if let Some(v) = j.opt("kv_dtype") {
+        let s = v.as_str()?;
+        c.kv_dtype = crate::tensor::KvDtype::from_str(s)
+            .with_context(|| format!(
+                "unknown kv_dtype '{s}' (f32|f16|bf16|int8)"))?;
+    }
     if let Some(v) = j.opt("pin_threads") {
         c.pin_threads = v.as_bool()?;
     }
@@ -223,6 +229,22 @@ mod tests {
         assert!(s.pin_threads);
         let bad =
             Json::parse(r#"{"serving": {"kernel": "sse9"}}"#).unwrap();
+        assert!(FileConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn kv_dtype_parses() {
+        use crate::tensor::KvDtype;
+        let s = FileConfig::from_json(
+            &Json::parse(r#"{"serving": {"kv_dtype": "f16"}}"#).unwrap(),
+        )
+        .unwrap()
+        .serving
+        .unwrap();
+        assert_eq!(s.kv_dtype, KvDtype::F16);
+        assert_eq!(ServingConfig::default().kv_dtype, KvDtype::F32);
+        let bad = Json::parse(r#"{"serving": {"kv_dtype": "fp4"}}"#)
+            .unwrap();
         assert!(FileConfig::from_json(&bad).is_err());
     }
 

@@ -102,6 +102,13 @@ pub struct ServingConfig {
     /// behavior), `lanes8` = the portable 8-lane flavor. See
     /// [`runtime::simd`][crate::runtime::simd].
     pub kernel: crate::runtime::simd::KernelSpec,
+    /// K/V storage dtype for the shared store and paged unique cache
+    /// (JSON `serving.kv_dtype`, CLI `--kv-dtype`, `MOSKA_KV_DTYPE`
+    /// env): `f32` (default, bit-exact seed numerics), `f16`, `bf16`,
+    /// or `int8` (per-token-row symmetric scales). Packed dtypes halve
+    /// (or quarter) resident K/V bytes; the kernels widen on the fly —
+    /// see the precision layer section in `runtime/README.md`.
+    pub kv_dtype: crate::tensor::KvDtype,
     /// Pin execution-pool workers to cores (`sched_setaffinity`;
     /// Linux-only, no-op elsewhere). JSON `serving.pin_threads` or
     /// `MOSKA_PIN=1` — each disagg node's pool then maps onto a stable,
@@ -129,6 +136,7 @@ impl Default for ServingConfig {
             position_independent: false,
             exec_threads: 0,
             kernel: crate::runtime::simd::KernelSpec::Auto,
+            kv_dtype: crate::tensor::KvDtype::F32,
             pin_threads: false,
             shards: crate::plan::ShardAssignment::default(),
         }

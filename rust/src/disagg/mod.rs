@@ -448,6 +448,10 @@ impl DisaggCluster {
         let chunk = unique.chunk_size();
         let shared_util = Arc::new(UtilizationEstimator::default());
         shared_util.set_bytes_resident(shared.resident_bytes() as u64);
+        // the unique-KV pool packs to the same dtype as the shared store
+        // (on remote paths the planner-view store carries the dtype the
+        // node advertised at the `Sync` handshake)
+        let kv_dtype = shared.kv_dtype;
         DisaggCluster {
             backend: unique,
             weights,
@@ -455,7 +459,8 @@ impl DisaggCluster {
             fabric,
             shared_util,
             unique_util: Arc::new(UtilizationEstimator::default()),
-            pool: PagePool::new(8192, chunk, cfg.n_kv_heads, cfg.head_dim),
+            pool: PagePool::new(8192, chunk, cfg.n_kv_heads, cfg.head_dim)
+                .with_dtype(kv_dtype),
             router: Router::new(top_k),
             max_batch,
             shard_assignment: None,
@@ -714,9 +719,12 @@ impl DisaggCluster {
                 // shared-node op census: each GEMM call reads one chunk
                 // of K+V once (that's the whole point) and runs
                 // 2·2·H·dh·chunk flops per routed query row.
+                // bytes as stored (packed dtypes count their encoded
+                // row bytes, not the widened f32 equivalent)
                 let sh_chunk = self.shared.chunk;
-                let kv_bytes_per_chunk =
-                    2 * sh_chunk * cfg.n_kv_heads * cfg.head_dim * 4;
+                let kv_bytes_per_chunk = 2 * self.shared.kv_dtype.kv_bytes(
+                    sh_chunk, cfg.n_kv_heads * cfg.head_dim,
+                );
                 self.shared_util.add_bytes_read(
                     (plan.reads * kv_bytes_per_chunk) as u64,
                 );
@@ -1044,6 +1052,10 @@ pub fn run_sim(args: &Args) -> Result<()> {
     if kernel != crate::runtime::KernelSpec::Auto {
         crate::runtime::simd::set_global_spec(kernel)?;
     }
+    // K/V storage dtype for BOTH sides: in-process runs pack the local
+    // store; remote runs must agree with the node's advertised dtype
+    // (the codec-v4 handshake refuses a mismatch)
+    let kv_dtype = crate::engine::resolve_kv_dtype(args.get("kv-dtype"))?;
     let remote = args.get("remote").unwrap_or("").to_string();
     let shards_arg = args.get("shards").unwrap_or("").to_string();
     let synthetic = args.flag("synthetic");
@@ -1188,6 +1200,12 @@ pub fn run_sim(args: &Args) -> Result<()> {
                 store.chunk == chunk,
                 "fabric chunk {} != local model chunk {chunk}", store.chunk,
             );
+            anyhow::ensure!(
+                store.kv_dtype == kv_dtype,
+                "sharded fabric stores {} K/V, this client resolved {} \
+                 — pass a matching --kv-dtype",
+                store.kv_dtype, kv_dtype,
+            );
             let addrs = f.shard_addrs();
             let digests = f.shard_digests();
             println!("sharded fabric: {} shards, {} domains \
@@ -1250,15 +1268,26 @@ pub fn run_sim(args: &Args) -> Result<()> {
                      --remote",
                 );
             }
-            let store =
+            anyhow::ensure!(
+                sync.kv_dtype == kv_dtype,
+                "shared node at {remote} stores {} K/V, this client \
+                 resolved {} — pass a matching --kv-dtype",
+                sync.kv_dtype, kv_dtype,
+            );
+            let mut store =
                 SharedStore::from_planner_states(sync.chunk, sync.domains)?;
+            store.kv_dtype = sync.kv_dtype;
             println!("planner state synced from {remote}: {} domains, \
-                      digest {:#018x}, 0 shared K/V bytes local",
-                     store.domains.len(), sync.digest);
+                      digest {:#018x}, {} K/V, 0 shared K/V bytes local",
+                     store.domains.len(), sync.digest, store.kv_dtype);
             (Box::new(f), Arc::new(store))
         } else {
-            let store =
-                Arc::new(local_store.expect("local store loaded above"));
+            let mut store = local_store.expect("local store loaded above");
+            // pack AFTER the (f32) build so the prefill numerics — and
+            // therefore which chunks dedup-intern together — never
+            // depend on the serving dtype
+            store.pack_to(kv_dtype);
+            let store = Arc::new(store);
             let be = Arc::clone(
                 shared_be.as_ref().expect("local shared backend built"),
             );

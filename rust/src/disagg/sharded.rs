@@ -197,6 +197,18 @@ impl ShardedFabric {
                 spec.addr, st.chunk, specs[0].addr, chunk,
             );
         }
+        // ... and so must the K/V storage dtype (v4): partials merge
+        // across shards, so a mixed-dtype fabric would mix numerics
+        // within one decode step
+        let kv_dtype = synced[0].kv_dtype;
+        for (spec, st) in specs.iter().zip(&synced) {
+            anyhow::ensure!(
+                st.kv_dtype == kv_dtype,
+                "shard {} stores {} K/V but shard {} stores {} — \
+                 refusing a mixed-dtype fabric",
+                spec.addr, st.kv_dtype, specs[0].addr, kv_dtype,
+            );
+        }
         // residency: which shards hold which domain
         let mut residency: HashMap<String, Vec<usize>> = HashMap::new();
         for (i, st) in synced.iter().enumerate() {
@@ -271,7 +283,8 @@ impl ShardedFabric {
                 }
             }
         }
-        let store = SharedStore::from_planner_states(chunk, states)?;
+        let mut store = SharedStore::from_planner_states(chunk, states)?;
+        store.kv_dtype = kv_dtype;
         let n = shards.len();
         Ok((
             ShardedFabric {

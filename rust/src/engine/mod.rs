@@ -126,12 +126,17 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(backend: Box<dyn Backend>, weights: Weights,
-               shared: SharedStore, cfg: ServingConfig,
+               mut shared: SharedStore, cfg: ServingConfig,
                pool_pages: usize) -> Engine {
         let model = backend.model().clone();
         let chunk = backend.chunk_size();
+        // the precision layer: pack the shared store and allocate unique
+        // pages in the configured storage dtype (f32 default = seed
+        // numerics; the kernels widen packed K/V on the fly)
+        shared.pack_to(cfg.kv_dtype);
         let pool = PagePool::new(pool_pages, chunk, model.n_kv_heads,
-                                 model.head_dim);
+                                 model.head_dim)
+            .with_dtype(cfg.kv_dtype);
         Engine {
             router: Router::new(cfg.top_k),
             sched: StepScheduler::new(cfg.max_batch),
@@ -622,6 +627,12 @@ impl Engine {
                            self.arena.stats().high_water_bytes as f64);
         self.metrics.gauge("arena_fresh_allocs",
                            self.arena.stats().fresh_allocs as f64);
+        // dtype-aware: packed stores report their encoded size, so this
+        // gauge halves when serving f16/bf16 and quarters at int8
+        self.metrics.gauge("store_resident_bytes",
+                           self.shared.resident_bytes() as f64);
+        self.metrics.gauge("store_dtype",
+                           self.shared.kv_dtype.code() as f64);
         Ok(())
     }
 
@@ -705,10 +716,32 @@ pub fn build_engine_from_args(args: &Args)
     if kernel != crate::runtime::simd::KernelSpec::Auto {
         crate::runtime::simd::set_global_spec(kernel)?;
     }
+    let kv_dtype = resolve_kv_dtype(args.get("kv-dtype"))?;
     let cfg = ServingConfig {
-        top_k, max_batch, exec_threads, kernel, ..Default::default()
+        top_k, max_batch, exec_threads, kernel, kv_dtype,
+        ..Default::default()
     };
     build_engine(&dir, args.get("backend").unwrap_or("xla"), cfg)
+}
+
+/// Resolve the K/V storage dtype: explicit CLI value > `MOSKA_KV_DTYPE`
+/// env > `f32`. The CLI default `"auto"` (and a missing flag) defer to
+/// the env, mirroring how `--kernel` resolves.
+pub fn resolve_kv_dtype(cli: Option<&str>)
+    -> Result<crate::tensor::KvDtype> {
+    use crate::tensor::KvDtype;
+    let pick = |s: &str, src: &str| {
+        KvDtype::from_str(s).with_context(|| {
+            format!("unknown kv dtype '{s}' from {src} (f32|f16|bf16|int8)")
+        })
+    };
+    match cli {
+        Some(s) if !s.eq_ignore_ascii_case("auto") => pick(s, "--kv-dtype"),
+        _ => match std::env::var("MOSKA_KV_DTYPE") {
+            Ok(s) if !s.trim().is_empty() => pick(&s, "MOSKA_KV_DTYPE"),
+            _ => Ok(KvDtype::F32),
+        },
+    }
 }
 
 /// Build an engine on the given backend (`"xla"` or `"native"`).

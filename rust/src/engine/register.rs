@@ -89,8 +89,11 @@ impl Engine {
                 let k = page.k.clone();
                 let v = page.v.clone();
                 // router embedding: mean of post-RoPE K over the chunk
+                // (widened when the pool stores a packed dtype — router
+                // embeddings stay f32 whatever the storage dtype)
                 let row = model.n_kv_heads * model.head_dim;
-                let ks = k.as_f32();
+                let kw = k.widen_to_f32();
+                let ks = kw.as_f32();
                 for j in 0..row {
                     let mut acc = 0f32;
                     for t in 0..chunk {

@@ -1,14 +1,18 @@
 //! Paged unique-KV cache (vLLM-style block allocator, one page = one chunk).
 //!
 //! Every page holds `chunk` tokens of K and V for one layer
-//! (`[chunk, Hkv, dh]` each, f32). Pages come from a bounded [`PagePool`];
-//! the scheduler admits a request only if its worst-case page demand fits,
-//! and everything is returned on request completion — the property tests
-//! assert no leak and no double-free across random admit/complete traces.
+//! (`[chunk, Hkv, dh]` each) in the pool's storage dtype — f32 by
+//! default, or packed f16/bf16/int8 when the pool was built
+//! [`PagePool::with_dtype`]. Appends pack rows on the fly
+//! ([`Tensor::write_kv_row`]); the attention kernels widen on read.
+//! Pages come from a bounded [`PagePool`]; the scheduler admits a
+//! request only if its worst-case page demand fits, and everything is
+//! returned on request completion — the property tests assert no leak
+//! and no double-free across random admit/complete traces.
 
 use anyhow::{bail, Result};
 
-use crate::tensor::Tensor;
+use crate::tensor::{KvDtype, Tensor};
 
 /// Handle to a page in the pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -27,6 +31,7 @@ pub struct PagePool {
     chunk: usize,
     kv_heads: usize,
     head_dim: usize,
+    kv_dtype: KvDtype,
     pages: Vec<Option<Page>>,
     free: Vec<PageId>,
     capacity: usize,
@@ -42,12 +47,26 @@ impl PagePool {
             chunk,
             kv_heads,
             head_dim,
+            kv_dtype: KvDtype::F32,
             pages: Vec::new(),
             free: Vec::new(),
             capacity: capacity_pages,
             allocated: 0,
             peak_allocated: 0,
         }
+    }
+
+    /// Store page payloads packed as `dt` (call before any `alloc`).
+    pub fn with_dtype(mut self, dt: KvDtype) -> PagePool {
+        assert!(self.pages.is_empty(),
+                "with_dtype must precede the first alloc");
+        self.kv_dtype = dt;
+        self
+    }
+
+    /// Storage dtype of every page in this pool.
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.kv_dtype
     }
 
     pub fn capacity(&self) -> usize {
@@ -66,9 +85,12 @@ impl PagePool {
         self.peak_allocated
     }
 
-    /// Bytes held by one page (K + V, f32).
+    /// Bytes held by one page (K + V) in the pool's storage dtype
+    /// (`int8` includes its per-row scales).
     pub fn page_bytes(&self) -> usize {
-        2 * self.chunk * self.kv_heads * self.head_dim * 4
+        2 * self
+            .kv_dtype
+            .kv_bytes(self.chunk, self.kv_heads * self.head_dim)
     }
 
     pub fn chunk(&self) -> usize {
@@ -83,8 +105,8 @@ impl PagePool {
         self.peak_allocated = self.peak_allocated.max(self.allocated);
         let shape = [self.chunk, self.kv_heads, self.head_dim];
         let page = Page {
-            k: Tensor::zeros_f32(&shape),
-            v: Tensor::zeros_f32(&shape),
+            k: Tensor::zeros_kv(&shape, self.kv_dtype),
+            v: Tensor::zeros_kv(&shape, self.kv_dtype),
             used: 0,
         };
         if let Some(id) = self.free.pop() {
@@ -147,6 +169,7 @@ impl RequestKv {
         assert_eq!(v_new.shape()[0], n);
         let chunk = pool.chunk;
         let row = pool.kv_heads * pool.head_dim;
+        let pool_dt = pool.kv_dtype;
         let mut written = 0;
         while written < n {
             let off = (self.lens[layer] + written) % chunk;
@@ -161,14 +184,24 @@ impl RequestKv {
             let page_id = self.pages[layer][page_idx];
             let take = (chunk - off).min(n - written);
             let page = pool.get_mut(page_id);
-            let dst_k = page.k.as_f32_mut();
             let src_k = k_new.as_f32();
-            dst_k[off * row..(off + take) * row]
-                .copy_from_slice(&src_k[written * row..(written + take) * row]);
-            let dst_v = page.v.as_f32_mut();
             let src_v = v_new.as_f32();
-            dst_v[off * row..(off + take) * row]
-                .copy_from_slice(&src_v[written * row..(written + take) * row]);
+            if pool_dt == KvDtype::F32 {
+                // seed fast path: one bulk copy per page span
+                page.k.as_f32_mut()[off * row..(off + take) * row]
+                    .copy_from_slice(
+                        &src_k[written * row..(written + take) * row]);
+                page.v.as_f32_mut()[off * row..(off + take) * row]
+                    .copy_from_slice(
+                        &src_v[written * row..(written + take) * row]);
+            } else {
+                // packed pages: pack token rows on the fly
+                for t in 0..take {
+                    let s = (written + t) * row;
+                    page.k.write_kv_row(off + t, &src_k[s..s + row]);
+                    page.v.write_kv_row(off + t, &src_v[s..s + row]);
+                }
+            }
             page.used = off + take;
             written += take;
         }
@@ -193,10 +226,18 @@ impl RequestKv {
         }
         let page_idx = self.lens[layer] / chunk;
         let page = pool.get_mut(self.pages[layer][page_idx]);
-        page.k.as_f32_mut()[off * row..(off + 1) * row]
-            .copy_from_slice(k_row);
-        page.v.as_f32_mut()[off * row..(off + 1) * row]
-            .copy_from_slice(v_row);
+        match &mut page.k {
+            Tensor::F32 { data, .. } => {
+                data[off * row..(off + 1) * row].copy_from_slice(k_row);
+            }
+            k => k.write_kv_row(off, k_row),
+        }
+        match &mut page.v {
+            Tensor::F32 { data, .. } => {
+                data[off * row..(off + 1) * row].copy_from_slice(v_row);
+            }
+            v => v.write_kv_row(off, v_row),
+        }
         page.used = off + 1;
         self.lens[layer] += 1;
         Ok(())
@@ -495,6 +536,49 @@ mod tests {
         assert_eq!(page_valid_rows(9, 0, 8), 8);
         assert_eq!(page_valid_rows(9, 1, 8), 1);
         assert_eq!(page_valid_rows(9, 2, 8), 0);
+    }
+
+    #[test]
+    fn packed_pool_page_bytes_and_append_roundtrip() {
+        let f32_bytes = pool().page_bytes();
+        let mut p16 =
+            PagePool::new(64, 8, 2, 4).with_dtype(KvDtype::F16);
+        assert_eq!(p16.page_bytes() * 2, f32_bytes,
+                   "f16 pages must hold half the f32 bytes");
+        let pi8 = PagePool::new(64, 8, 2, 4).with_dtype(KvDtype::I8);
+        assert!(pi8.page_bytes() < p16.page_bytes());
+
+        // bulk append and row append into packed pages agree bit-for-bit
+        // and stay close to the f32 source
+        let mut rng = Rng::new(7);
+        let mut ka = RequestKv::new(1, 0);
+        let mut kb = RequestKv::new(1, 0);
+        let mut pb =
+            PagePool::new(64, 8, 2, 4).with_dtype(KvDtype::F16);
+        let (k, v) = kv_rows(&mut rng, 13);
+        ka.append(&mut p16, &[(k.clone(), v.clone())]).unwrap();
+        let row = 2 * 4;
+        for t in 0..13 {
+            kb.append_row_layer(&mut pb, 0,
+                                &k.as_f32()[t * row..(t + 1) * row],
+                                &v.as_f32()[t * row..(t + 1) * row])
+                .unwrap();
+        }
+        kb.commit(13);
+        for p in 0..ka.page_count() {
+            let a = p16.get(ka.pages[0][p]);
+            let b = pb.get(kb.pages[0][p]);
+            assert_eq!(a.k.kv_dtype(), KvDtype::F16);
+            assert_eq!(a.k, b.k, "page {p} K");
+            assert_eq!(a.v, b.v, "page {p} V");
+        }
+        // widened page content ≈ source rows
+        let p0 = p16.get(ka.pages[0][0]).k.widen_to_f32();
+        for (w, s) in p0.as_f32()[..8 * row].iter()
+            .zip(&k.as_f32()[..8 * row])
+        {
+            assert!((w - s).abs() < 4e-3, "{w} vs {s}");
+        }
     }
 
     #[test]

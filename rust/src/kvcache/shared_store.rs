@@ -17,7 +17,7 @@ use std::collections::{BTreeMap, HashMap};
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::artifact::Manifest;
-use crate::tensor::Tensor;
+use crate::tensor::{KvDtype, Tensor};
 use crate::util::bin::Store;
 
 /// One layer of a domain: per-chunk K/V tensors + chunk embeddings.
@@ -185,13 +185,28 @@ impl DomainCache {
         &self.layers[layer].embs
     }
 
-    /// Resident bytes of this domain's K/V (all layers).
+    /// Resident bytes of this domain's K/V (all layers), counted in the
+    /// storage dtype (packed f16/bf16 chunks report half the f32 bytes;
+    /// `int8` includes its per-row scales).
     pub fn resident_bytes(&self) -> usize {
         self.layers
             .iter()
             .flat_map(|l| l.chunks.iter())
-            .map(|(k, v)| (k.len() + v.len()) * 4)
+            .map(|(k, v)| k.payload_bytes() + v.payload_bytes())
             .sum()
+    }
+
+    /// Re-pack every chunk's K/V into `dt` storage (router embeddings
+    /// stay f32 — the router scores in full precision either way).
+    /// Packing is applied post-load, so dedup interning already happened
+    /// against the f32 content.
+    pub fn pack_to(&mut self, dt: KvDtype) {
+        for layer in &mut self.layers {
+            for (k, v) in &mut layer.chunks {
+                *k = k.pack_kv(dt);
+                *v = v.pack_kv(dt);
+            }
+        }
     }
 }
 
@@ -235,9 +250,14 @@ impl ChunkRegistry {
     }
 
     fn content_hash(k: &Tensor, v: &Tensor) -> u64 {
-        let kb = k.as_f32().iter().flat_map(|f| f.to_le_bytes());
-        let vb = v.as_f32().iter().flat_map(|f| f.to_le_bytes());
-        fnv1a_update(FNV_OFFSET, kb.chain(vb))
+        // canonical K/V byte stream: for f32 this is exactly the seed's
+        // `as_f32 → to_le_bytes` sequence, so f32 hashes are unchanged;
+        // packed chunks hash the packed payload they actually serve
+        let mut bytes =
+            Vec::with_capacity(k.payload_bytes() + v.payload_bytes());
+        k.kv_le_bytes(&mut bytes);
+        v.kv_le_bytes(&mut bytes);
+        fnv1a_update(FNV_OFFSET, bytes.into_iter())
     }
 
     /// Intern a chunk: identical content → same id, bumped refcount.
@@ -324,6 +344,9 @@ pub struct SharedStore {
     pub domains: BTreeMap<String, DomainCache>,
     pub registry: ChunkRegistry,
     pub chunk: usize,
+    /// Storage dtype of every domain's chunk K/V (f32 unless
+    /// [`SharedStore::pack_to`] re-packed the store).
+    pub kv_dtype: KvDtype,
 }
 
 impl SharedStore {
@@ -345,7 +368,12 @@ impl SharedStore {
                             d.name, dc.n_chunks, d.chunks);
             domains.insert(d.name.clone(), dc);
         }
-        Ok(SharedStore { domains, registry, chunk: man.chunk })
+        Ok(SharedStore {
+            domains,
+            registry,
+            chunk: man.chunk,
+            kv_dtype: KvDtype::F32,
+        })
     }
 
     /// Empty store (engine without shared context).
@@ -354,6 +382,7 @@ impl SharedStore {
             domains: BTreeMap::new(),
             registry: ChunkRegistry::new(),
             chunk,
+            kv_dtype: KvDtype::F32,
         }
     }
 
@@ -405,7 +434,21 @@ impl SharedStore {
             domains,
             registry: ChunkRegistry::new(),
             chunk,
+            kv_dtype: KvDtype::F32,
         })
+    }
+
+    /// Re-pack every resident domain's K/V into `dt` storage (see
+    /// [`DomainCache::pack_to`]). A planner view holds no K/V, but its
+    /// dtype tag still flows into the `Sync` handshake so client and
+    /// node agree on what the wire digests describe.
+    pub fn pack_to(&mut self, dt: KvDtype) {
+        if dt != self.kv_dtype {
+            for d in self.domains.values_mut() {
+                d.pack_to(dt);
+            }
+            self.kv_dtype = dt;
+        }
     }
 
     /// Total resident shared bytes — loaded ONCE no matter the batch size
@@ -425,7 +468,14 @@ impl SharedStore {
     /// per-shard digest (see `docs/WIRE_PROTOCOL.md`).
     pub fn content_digest(&self) -> u64 {
         let mut h = FNV_OFFSET;
+        // the dtype code folds in only for packed stores, so a default
+        // (f32) store digests exactly as it did before the precision
+        // layer existed — old and new builds agree at the handshake
+        if self.kv_dtype != KvDtype::F32 {
+            h = fnv1a_update(h, [self.kv_dtype.code()].into_iter());
+        }
         h = fnv1a_update(h, (self.chunk as u64).to_le_bytes().into_iter());
+        let mut buf = Vec::new();
         for (name, d) in &self.domains {
             h = fnv1a_update(h, name.bytes());
             h = fnv1a_update(h,
@@ -436,12 +486,10 @@ impl SharedStore {
             );
             if let Some(l0) = d.layers.first() {
                 for (k, v) in &l0.chunks {
-                    h = fnv1a_update(
-                        h, k.as_f32().iter().flat_map(|f| f.to_le_bytes()),
-                    );
-                    h = fnv1a_update(
-                        h, v.as_f32().iter().flat_map(|f| f.to_le_bytes()),
-                    );
+                    buf.clear();
+                    k.kv_le_bytes(&mut buf);
+                    v.kv_le_bytes(&mut buf);
+                    h = fnv1a_update(h, buf.iter().copied());
                 }
             }
         }
@@ -599,6 +647,39 @@ mod tests {
                    "per-shard digest must cover only the resident slice");
         // unknown domain refused
         assert!(part.retain_domains(&["nope".to_string()]).is_err());
+    }
+
+    #[test]
+    fn pack_to_halves_bytes_and_separates_digests() {
+        let f32_store = two_domain_store(&mut Rng::new(11));
+        let f32_bytes = f32_store.resident_bytes();
+        let f32_digest = f32_store.content_digest();
+
+        let mut f16_store = two_domain_store(&mut Rng::new(11));
+        f16_store.pack_to(KvDtype::F16);
+        assert_eq!(f16_store.kv_dtype, KvDtype::F16);
+        assert_eq!(f16_store.resident_bytes() * 2, f32_bytes,
+                   "f16 store must hold exactly half the f32 bytes");
+        assert_ne!(f16_store.content_digest(), f32_digest);
+
+        let mut bf16_store = two_domain_store(&mut Rng::new(11));
+        bf16_store.pack_to(KvDtype::Bf16);
+        assert_ne!(bf16_store.content_digest(),
+                   f16_store.content_digest(),
+                   "same payload bits, different dtype → new digest");
+
+        let mut i8_store = two_domain_store(&mut Rng::new(11));
+        i8_store.pack_to(KvDtype::I8);
+        assert!(i8_store.resident_bytes() < f32_bytes / 2,
+                "int8 (+scales) must beat even f16 on bytes");
+
+        // packed chunks stay close to the f32 content they encode
+        let f32_d = f32_store.domain("alpha").unwrap();
+        let f16_d = f16_store.domain("alpha").unwrap();
+        let (k32, _) = f32_d.chunk_kv(0, 0);
+        let (k16, _) = f16_d.chunk_kv(0, 0);
+        assert_eq!(k16.kv_dtype(), KvDtype::F16);
+        assert!(k16.widen_to_f32().max_abs_diff(k32) < 4e-3);
     }
 
     #[test]

@@ -70,7 +70,9 @@ fn cmd_serve(argv: &[String]) -> moska::Result<()> {
         .opt("backend", "xla", "xla | native")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
         .opt("kernel", "auto",
-             "kernel flavor: auto | simd | scalar | lanes8 (MOSKA_KERNEL)")
+             "kernel flavor: auto | simd | scalar | lanes8 | avx512 (MOSKA_KERNEL)")
+        .opt("kv-dtype", "auto",
+             "K/V storage dtype: auto | f32 | f16 | bf16 | int8 (MOSKA_KV_DTYPE)")
         .opt("max-batch", "32", "max decode batch")
         .opt("config", "", "JSON config file (flags override it)")
         .parse_from(argv)?;
@@ -87,7 +89,9 @@ fn cmd_demo(argv: &[String]) -> moska::Result<()> {
         .opt("backend", "xla", "xla | native")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
         .opt("kernel", "auto",
-             "kernel flavor: auto | simd | scalar | lanes8 (MOSKA_KERNEL)")
+             "kernel flavor: auto | simd | scalar | lanes8 | avx512 (MOSKA_KERNEL)")
+        .opt("kv-dtype", "auto",
+             "K/V storage dtype: auto | f32 | f16 | bf16 | int8 (MOSKA_KV_DTYPE)")
         .parse_from(argv)?;
     moska::engine::run_demo(&args)
 }
@@ -107,7 +111,9 @@ fn cmd_disagg(argv: &[String]) -> moska::Result<()> {
         .opt("backend", "native", "xla | native")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
         .opt("kernel", "auto",
-             "kernel flavor: auto | simd | scalar | lanes8 (MOSKA_KERNEL)")
+             "kernel flavor: auto | simd | scalar | lanes8 | avx512 (MOSKA_KERNEL)")
+        .opt("kv-dtype", "auto",
+             "K/V storage dtype: auto | f32 | f16 | bf16 | int8 (MOSKA_KV_DTYPE)")
         .opt("remote", "",
              "shared-node address (empty = in-process shared node)")
         .opt("shards", "",
@@ -139,7 +145,9 @@ fn cmd_shared_node(argv: &[String]) -> moska::Result<()> {
         .opt("artifacts", "", "artifacts dir (default: auto-discover)")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
         .opt("kernel", "auto",
-             "kernel flavor: auto | simd | scalar | lanes8 (MOSKA_KERNEL)")
+             "kernel flavor: auto | simd | scalar | lanes8 | avx512 (MOSKA_KERNEL)")
+        .opt("kv-dtype", "auto",
+             "K/V storage dtype: auto | f32 | f16 | bf16 | int8 (MOSKA_KV_DTYPE)")
         .opt("domains", "",
              "serve only these domains (comma list) — one shard of a \
               domain-sharded deployment")
@@ -161,7 +169,9 @@ fn cmd_replay(argv: &[String]) -> moska::Result<()> {
         .opt("backend", "xla", "xla | native")
         .opt("threads", "0", "native exec threads (0 = auto, 1 = serial)")
         .opt("kernel", "auto",
-             "kernel flavor: auto | simd | scalar | lanes8 (MOSKA_KERNEL)")
+             "kernel flavor: auto | simd | scalar | lanes8 | avx512 (MOSKA_KERNEL)")
+        .opt("kv-dtype", "auto",
+             "K/V storage dtype: auto | f32 | f16 | bf16 | int8 (MOSKA_KV_DTYPE)")
         .opt("max-batch", "32", "max decode batch")
         .opt("trace", "", "replay a recorded trace file instead")
         .parse_from(argv)?;

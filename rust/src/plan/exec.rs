@@ -259,23 +259,41 @@ pub fn exec_gemm_calls(backend: &dyn Backend, dom: &DomainCache,
                 )?,
             }
         } else {
-            // concatenate the run's chunks into staged K/V
-            let shape = dom.chunk_kv(layer, call.chunk_start).0.shape();
-            let (hkv, dhkv) = (shape[1], shape[2]);
-            let total = call.run_len * chunk;
-            let (mut kb, mut vb) = match arena.as_deref_mut() {
-                Some(a) => (a.take_buf(total * hkv * dhkv),
-                            a.take_buf(total * hkv * dhkv)),
-                None => (Vec::with_capacity(total * hkv * dhkv),
-                         Vec::with_capacity(total * hkv * dhkv)),
+            // concatenate the run's chunks into staged K/V. A packed
+            // domain concats the packed payloads (half or a quarter of
+            // the copy bytes — the widening happens inside the attention
+            // kernel); f32 stages through the arena exactly as before.
+            let packed =
+                dom.chunk_kv(layer, call.chunk_start).0.is_packed();
+            let (kb, vb) = if packed {
+                let mut kparts = Vec::with_capacity(call.run_len);
+                let mut vparts = Vec::with_capacity(call.run_len);
+                for r in 0..call.run_len {
+                    let (kc, vc) =
+                        dom.chunk_kv(layer, call.chunk_start + r);
+                    kparts.push(kc);
+                    vparts.push(vc);
+                }
+                (Tensor::concat0_kv(&kparts), Tensor::concat0_kv(&vparts))
+            } else {
+                let shape = dom.chunk_kv(layer, call.chunk_start).0.shape();
+                let (hkv, dhkv) = (shape[1], shape[2]);
+                let total = call.run_len * chunk;
+                let (mut kb, mut vb) = match arena.as_deref_mut() {
+                    Some(a) => (a.take_buf(total * hkv * dhkv),
+                                a.take_buf(total * hkv * dhkv)),
+                    None => (Vec::with_capacity(total * hkv * dhkv),
+                             Vec::with_capacity(total * hkv * dhkv)),
+                };
+                for r in 0..call.run_len {
+                    let (kc, vc) =
+                        dom.chunk_kv(layer, call.chunk_start + r);
+                    kb.extend_from_slice(kc.as_f32());
+                    vb.extend_from_slice(vc.as_f32());
+                }
+                (Tensor::f32(&[total, hkv, dhkv], kb),
+                 Tensor::f32(&[total, hkv, dhkv], vb))
             };
-            for r in 0..call.run_len {
-                let (kc, vc) = dom.chunk_kv(layer, call.chunk_start + r);
-                kb.extend_from_slice(kc.as_f32());
-                vb.extend_from_slice(vc.as_f32());
-            }
-            let kb = Tensor::f32(&[total, hkv, dhkv], kb);
-            let vb = Tensor::f32(&[total, hkv, dhkv], vb);
             let p = match arena.as_deref_mut() {
                 Some(a) => backend.chunk_attn_arena(
                     &qb, &kb, &vb, &pb, call.k_base, call.valid, a,
@@ -284,9 +302,12 @@ pub fn exec_gemm_calls(backend: &dyn Backend, dom: &DomainCache,
                     &qb, &kb, &vb, &pb, call.k_base, call.valid,
                 )?,
             };
+            // packed staging tensors don't fit the arena's f32 recycling
             if let Some(a) = arena.as_deref_mut() {
-                a.recycle(kb);
-                a.recycle(vb);
+                if !packed {
+                    a.recycle(kb);
+                    a.recycle(vb);
+                }
             }
             p
         };
@@ -328,23 +349,39 @@ pub fn exec_unique_spans(backend: &dyn Backend, pool: &PagePool,
                 )?,
             }
         } else {
-            let shape = pool.get(kv.pages[layer][span.page_start]).k.shape();
-            let (hkv, dhkv) = (shape[1], shape[2]);
-            let total = span.pages * chunk;
-            let (mut kb, mut vb) = match arena.as_deref_mut() {
-                Some(a) => (a.take_buf(total * hkv * dhkv),
-                            a.take_buf(total * hkv * dhkv)),
-                None => (Vec::with_capacity(total * hkv * dhkv),
-                         Vec::with_capacity(total * hkv * dhkv)),
+            // multi-page span staging: packed pools concat the packed
+            // payloads, f32 stages through the arena exactly as before
+            let packed = pool.kv_dtype() != crate::tensor::KvDtype::F32;
+            let (kb, vb) = if packed {
+                let mut kparts = Vec::with_capacity(span.pages);
+                let mut vparts = Vec::with_capacity(span.pages);
+                for r in 0..span.pages {
+                    let page =
+                        pool.get(kv.pages[layer][span.page_start + r]);
+                    kparts.push(&page.k);
+                    vparts.push(&page.v);
+                }
+                (Tensor::concat0_kv(&kparts), Tensor::concat0_kv(&vparts))
+            } else {
+                let shape =
+                    pool.get(kv.pages[layer][span.page_start]).k.shape();
+                let (hkv, dhkv) = (shape[1], shape[2]);
+                let total = span.pages * chunk;
+                let (mut kb, mut vb) = match arena.as_deref_mut() {
+                    Some(a) => (a.take_buf(total * hkv * dhkv),
+                                a.take_buf(total * hkv * dhkv)),
+                    None => (Vec::with_capacity(total * hkv * dhkv),
+                             Vec::with_capacity(total * hkv * dhkv)),
+                };
+                for r in 0..span.pages {
+                    let page =
+                        pool.get(kv.pages[layer][span.page_start + r]);
+                    kb.extend_from_slice(page.k.as_f32());
+                    vb.extend_from_slice(page.v.as_f32());
+                }
+                (Tensor::f32(&[total, hkv, dhkv], kb),
+                 Tensor::f32(&[total, hkv, dhkv], vb))
             };
-            for r in 0..span.pages {
-                let page =
-                    pool.get(kv.pages[layer][span.page_start + r]);
-                kb.extend_from_slice(page.k.as_f32());
-                vb.extend_from_slice(page.v.as_f32());
-            }
-            let kb = Tensor::f32(&[total, hkv, dhkv], kb);
-            let vb = Tensor::f32(&[total, hkv, dhkv], vb);
             let p = match arena.as_deref_mut() {
                 Some(a) => backend.chunk_attn_arena(
                     q, &kb, &vb, q_pos, span.k_base, span.valid, a,
@@ -354,8 +391,10 @@ pub fn exec_unique_spans(backend: &dyn Backend, pool: &PagePool,
                 )?,
             };
             if let Some(a) = arena.as_deref_mut() {
-                a.recycle(kb);
-                a.recycle(vb);
+                if !packed {
+                    a.recycle(kb);
+                    a.recycle(vb);
+                }
             }
             p
         };

@@ -35,7 +35,7 @@ use crate::plan::{GemmCall, PageSpan, SharedGroupPlan, StepPlan,
                   UniqueRowPlan};
 use crate::router::ChunkSet;
 use crate::runtime::native::Partials;
-use crate::tensor::{DType, Tensor};
+use crate::tensor::{DType, KvDtype, Tensor};
 
 /// Wire-format version; bump on ANY layout change past the frame header
 /// — including new message kinds (a peer that does not speak a kind
@@ -46,7 +46,10 @@ use crate::tensor::{DType, Tensor};
 /// * v2 — adds `Sync`/`SyncState` (planner-state sync at connect).
 /// * v3 — adds `HealthReq`/`Health` (per-node load report feeding the
 ///   client's replica health state machine).
-pub const CODEC_VERSION: u16 = 3;
+/// * v4 — `HelloAck` and `SyncState` advertise the node's K/V storage
+///   dtype ([`KvDtype`] code byte); mismatched deployments refuse at
+///   connect instead of silently comparing digests across dtypes.
+pub const CODEC_VERSION: u16 = 4;
 
 /// Frame magic: `"MoSK"` as a little-endian u32.
 pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"MoSK");
@@ -241,6 +244,11 @@ pub struct HelloAck {
     pub domains: Vec<String>,
     /// FNV-1a over chunk geometry + layer-0 K/V bit patterns.
     pub digest: u64,
+    /// K/V storage dtype of the node's resident store (v4). The digest
+    /// covers the *encoded* K/V bytes, so two nodes serving the same
+    /// content at different dtypes have different digests — the dtype
+    /// byte names the mismatch instead of leaving an opaque digest diff.
+    pub kv_dtype: KvDtype,
 }
 
 /// One layer's plan-execution request (the fabric's unit of work).
@@ -262,6 +270,9 @@ pub struct StoreSync {
     /// The node's store content digest (same fingerprint the
     /// [`HelloAck`] advertises; per-shard for a partitioned store).
     pub digest: u64,
+    /// K/V storage dtype of the node's resident store (v4) — the
+    /// client's planner view and unique-KV pool adopt it.
+    pub kv_dtype: KvDtype,
     pub domains: Vec<DomainPlannerState>,
 }
 
@@ -489,6 +500,7 @@ pub fn encode_payload(msg: &WireMsg) -> Vec<u8> {
         WireMsg::HelloAck(h) => {
             e.u64(h.chunk as u64);
             e.u64(h.digest);
+            e.u8(h.kv_dtype.code());
             e.u32(h.domains.len() as u32);
             for d in &h.domains {
                 e.str(d);
@@ -510,6 +522,7 @@ pub fn encode_payload(msg: &WireMsg) -> Vec<u8> {
         WireMsg::SyncState(s) => {
             e.u64(s.chunk as u64);
             e.u64(s.digest);
+            e.u8(s.kv_dtype.code());
             e.u32(s.domains.len() as u32);
             for d in &s.domains {
                 e.domain_planner_state(d);
@@ -627,6 +640,12 @@ impl<'a> Dec<'a> {
             1 => Ok(true),
             t => Err(CodecError::BadTag { what: "bool", tag: t as u32 }),
         }
+    }
+
+    fn kv_dtype(&mut self) -> Result<KvDtype, CodecError> {
+        let t = self.u8()?;
+        KvDtype::from_code(t)
+            .ok_or(CodecError::BadTag { what: "kv dtype", tag: t as u32 })
     }
 
     fn str(&mut self) -> Result<String, CodecError> {
@@ -851,6 +870,7 @@ pub fn decode_payload(kind: MsgKind, payload: &[u8])
         MsgKind::HelloAck => {
             let chunk = d.usize64()?;
             let digest = d.u64()?;
+            let kv_dtype = d.kv_dtype()?;
             let n = d.u32()? as usize;
             if n.saturating_mul(4) > payload.len() {
                 return Err(CodecError::Truncated);
@@ -859,7 +879,7 @@ pub fn decode_payload(kind: MsgKind, payload: &[u8])
             for _ in 0..n {
                 domains.push(d.str()?);
             }
-            WireMsg::HelloAck(HelloAck { chunk, domains, digest })
+            WireMsg::HelloAck(HelloAck { chunk, domains, digest, kv_dtype })
         }
         MsgKind::ExecShared => {
             let layer = d.u32()? as usize;
@@ -885,6 +905,7 @@ pub fn decode_payload(kind: MsgKind, payload: &[u8])
         MsgKind::SyncState => {
             let chunk = d.usize64()?;
             let digest = d.u64()?;
+            let kv_dtype = d.kv_dtype()?;
             let n = d.u32()? as usize;
             // each domain payload is ≥ 14 bytes (name len + n_tokens +
             // bases count + layer count)
@@ -895,7 +916,8 @@ pub fn decode_payload(kind: MsgKind, payload: &[u8])
             for _ in 0..n {
                 domains.push(d.domain_planner_state()?);
             }
-            WireMsg::SyncState(StoreSync { chunk, digest, domains })
+            WireMsg::SyncState(StoreSync { chunk, digest, kv_dtype,
+                                           domains })
         }
         MsgKind::HealthReq => WireMsg::HealthReq,
         MsgKind::Health => WireMsg::Health(HealthInfo {
@@ -1030,11 +1052,21 @@ mod tests {
             chunk: 64,
             domains: vec!["legal".into(), "code".into()],
             digest: 0xDEAD_BEEF_CAFE_F00D,
+            kv_dtype: KvDtype::F16,
         });
         let bytes = frame_bytes(&msg);
         let (back, _) =
             read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
         assert_eq!(back, msg);
+        // an unknown dtype code is a typed protocol error
+        let mut payload = encode_payload(&msg);
+        payload[16] = 9; // the dtype byte follows chunk + digest
+        let framed = frame_payload(MsgKind::HelloAck, &payload);
+        let err = read_frame(&mut std::io::Cursor::new(&framed)).unwrap_err();
+        assert!(
+            matches!(err, CodecError::BadTag { what: "kv dtype", tag: 9 }),
+            "{err}"
+        );
     }
 
     #[test]
@@ -1055,6 +1087,7 @@ mod tests {
         let msg = WireMsg::SyncState(StoreSync {
             chunk: 64,
             digest: 0x0123_4567_89AB_CDEF,
+            kv_dtype: KvDtype::Bf16,
             domains: vec![dom("legal", 3), dom("code", 1)],
         });
         let bytes = frame_bytes(&msg);

@@ -259,6 +259,11 @@ pub fn run_shared_node(args: &Args) -> Result<()> {
             domains.split(',').map(|s| s.trim().to_string()).collect();
         store.retain_domains(&keep).context("partitioning store")?;
     }
+    // pack the resident store last (after load + partition): prefill /
+    // dedup always run on f32 bits, so every node of a deployment
+    // packing the same content to the same dtype agrees on the digest
+    let kv_dtype = crate::engine::resolve_kv_dtype(args.get("kv-dtype"))?;
+    store.pack_to(kv_dtype);
     let n = ThreadPool::resolve_threads(threads);
     let pin = ThreadPool::resolve_pin(false);
     let backend = if n <= 1 {
@@ -321,8 +326,8 @@ pub fn serve_shared_node_ctl(addr: SocketAddr, backend: Arc<dyn Backend>,
     let local = listener.local_addr()?;
     *ctl.local.lock().unwrap() = Some(local);
     println!("shared-node listening on {local} \
-              ({} domains, {} resident MB)",
-             store.domains.len(),
+              ({} domains, {} K/V, {} resident MB)",
+             store.domains.len(), store.kv_dtype,
              store.resident_bytes() / (1 << 20));
     crate::info!("shared-node", "listening on {local}");
     if let Some(tx) = ready {
@@ -432,6 +437,7 @@ fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
                 chunk: store.chunk,
                 domains: store.domains.keys().cloned().collect(),
                 digest,
+                kv_dtype: store.kv_dtype,
             }),
             // planner-state sync: router embeddings + chunk geometry for
             // every resident domain, so the unique node can plan without
@@ -444,6 +450,7 @@ fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
                 let state = WireMsg::SyncState(codec::StoreSync {
                     chunk: store.chunk,
                     digest,
+                    kv_dtype: store.kv_dtype,
                     domains: store.planner_states(),
                 });
                 let payload = codec::encode_payload(&state);

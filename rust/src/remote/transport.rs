@@ -37,11 +37,18 @@ use super::codec::{self, is_connection_error, is_timeout_error, CodecError,
 use crate::disagg::{FabricError, FabricReply, SharedFabric};
 use crate::metrics::Metrics;
 use crate::plan::SharedGroupPlan;
-use crate::tensor::Tensor;
+use crate::tensor::{KvDtype, Tensor};
 use crate::util::rng::Rng;
 
 /// Wire-level counters for one fabric connection (shared via `Arc` so
 /// metrics snapshots outlive the client).
+///
+/// Byte counters measure **encoded frame bytes** — the bytes actually
+/// written to / read from the socket, including headers and CRCs — not
+/// the widened-f32 size of the tensors inside. Under a packed K/V dtype
+/// the query/partials traffic stays f32 (only storage is packed), but
+/// the distinction matters for anything that derives bandwidth from
+/// these gauges.
 #[derive(Debug, Default)]
 pub struct FabricStats {
     pub bytes_sent: AtomicU64,
@@ -155,12 +162,23 @@ struct StoreExpectation {
     /// any of them fails the retry path at handshake, not at plan time.
     domains: Vec<String>,
     digest: u64,
+    /// K/V storage dtype the run was planned against (v4): a node
+    /// restarted at a different dtype has a different digest too, but
+    /// the dtype check names the mismatch instead of leaving an opaque
+    /// digest diff.
+    kv_dtype: KvDtype,
 }
 
 fn verify_ack(h: &HelloAck, exp: &StoreExpectation) -> Result<()> {
     anyhow::ensure!(
         h.chunk == exp.chunk,
         "shared node chunk size {} != local {}", h.chunk, exp.chunk,
+    );
+    anyhow::ensure!(
+        h.kv_dtype == exp.kv_dtype,
+        "shared node stores {} K/V, this run was planned against {} \
+         — refusing a mixed-dtype deployment",
+        h.kv_dtype, exp.kv_dtype,
     );
     for want in &exp.domains {
         anyhow::ensure!(
@@ -372,6 +390,7 @@ impl RemoteClient {
             chunk: state.chunk,
             domains: state.domains.iter().map(|d| d.name.clone()).collect(),
             digest: state.digest,
+            kv_dtype: state.kv_dtype,
         });
         Ok(state)
     }
@@ -508,11 +527,12 @@ impl RemoteFabric {
     /// mid-run with a different store — or with any expected domain
     /// missing — fails the retry path at handshake, not at plan time.
     pub fn check_store(&mut self, chunk: usize, domains: &[String],
-                       digest: u64) -> Result<()> {
+                       digest: u64, kv_dtype: KvDtype) -> Result<()> {
         let exp = StoreExpectation {
             chunk,
             domains: domains.to_vec(),
             digest,
+            kv_dtype,
         };
         verify_ack(self.hello(), &exp)?;
         self.client.expect = Some(exp);
@@ -724,6 +744,7 @@ mod tests {
                         chunk: 64,
                         domains: vec!["bench".into()],
                         digest: 42,
+                        kv_dtype: KvDtype::F32,
                     });
                     let _ = s.write_all(&codec::frame_bytes(&ack));
                 }
@@ -816,14 +837,23 @@ mod tests {
         let doms = |names: &[&str]| -> Vec<String> {
             names.iter().map(|s| s.to_string()).collect()
         };
-        assert!(f.check_store(32, &doms(&["bench"]), 42).is_err());
-        assert!(f.check_store(64, &doms(&["nope"]), 42).is_err());
+        let f32d = KvDtype::F32;
+        assert!(f.check_store(32, &doms(&["bench"]), 42, f32d).is_err());
+        assert!(f.check_store(64, &doms(&["nope"]), 42, f32d).is_err());
         // EVERY expected domain must be resident, not just one
-        assert!(f.check_store(64, &doms(&["bench", "nope"]), 42).is_err());
-        let err = f.check_store(64, &doms(&["bench"]), 43).unwrap_err();
+        assert!(f
+            .check_store(64, &doms(&["bench", "nope"]), 42, f32d)
+            .is_err());
+        let err =
+            f.check_store(64, &doms(&["bench"]), 43, f32d).unwrap_err();
         assert!(format!("{err:#}").contains("digest"), "{err:#}");
+        // a dtype mismatch is named, not an opaque digest diff
+        let err = f
+            .check_store(64, &doms(&["bench"]), 42, KvDtype::F16)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("f16"), "{err:#}");
         // the passing expectation sticks — and reconnects re-verify it
-        f.check_store(64, &doms(&["bench"]), 42).unwrap();
+        f.check_store(64, &doms(&["bench"]), 42, f32d).unwrap();
     }
 
     /// Regression: the reconnect path must re-validate the *full
@@ -853,6 +883,7 @@ mod tests {
                                 chunk: 64,
                                 domains: domains.clone(),
                                 digest: 42,
+                                kv_dtype: KvDtype::F32,
                             });
                             if s.write_all(&codec::frame_bytes(&ack))
                                 .is_err()
@@ -878,6 +909,7 @@ mod tests {
             RemoteFabric::connect(&addr.to_string(), tiny_cfg()).unwrap();
         f.check_store(
             64, &["bench".to_string(), "extra".to_string()], 42,
+            KvDtype::F32,
         )
         .unwrap();
         let q = Tensor::f32(&[1, 4, 16], vec![0.5; 64]);

@@ -243,6 +243,17 @@ impl Backend for XlaBackend {
 
     fn chunk_attn(&self, q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
                   k_base: i32, valid: i32) -> Result<Partials> {
+        // PJRT artifacts are compiled for f32 operands; packed (f16/bf16/
+        // int8) K/V is widened through the scalar oracle here, so the XLA
+        // path matches the native flavors bit-for-bit per dtype.
+        let (kw, vw);
+        let (k, v) = if k.is_packed() || v.is_packed() {
+            kw = k.widen_to_f32();
+            vw = v.widen_to_f32();
+            (&kw, &vw)
+        } else {
+            (k, v)
+        };
         let b = q.shape()[0];
         let bb = self.bucket(b)?;
         // K/V length buckets: pad rows beyond `valid` are masked anyway

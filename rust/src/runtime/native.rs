@@ -40,20 +40,29 @@
 //! the per-row chunk-attention body (QK^T, online softmax, V
 //! accumulation), router score cells, and the LSE-merge/finalize tails —
 //! dispatch through a [`Kernels`] vtable
-//! ([`runtime::simd`][crate::runtime::simd]): runtime-detected AVX2 /
-//! NEON / portable-8-lane flavors, plus the seed `scalar` flavor which
-//! preserves the pre-SIMD arithmetic bit-for-bit. Tiling, work
+//! ([`runtime::simd`][crate::runtime::simd]): runtime-detected AVX-512 /
+//! AVX2 / NEON / portable-8-lane flavors, plus the seed `scalar` flavor
+//! which preserves the pre-SIMD arithmetic bit-for-bit. Tiling, work
 //! splitting, and the parallel contract above are flavor-independent
 //! and live here; only the per-stripe arithmetic is dispatched. The
 //! `*_exec` twins take the vtable explicitly (backends pass their own);
 //! the plain wrappers use the process-global [`Kernels::global`]
 //! flavor (`MOSKA_KERNEL` env).
+//!
+//! Chunk-attention K/V arrives as dtype-tagged
+//! [`KvView`][crate::tensor::KvView]s: packed (f16/bf16/int8) shared or
+//! paged K/V is widened to f32 *inside* the flavor's `attn_row` body —
+//! no separate dequant pass — while f32 K/V takes the unchanged seed
+//! paths. The matmul microkernels additionally register-block four
+//! output rows per weight-row load ([`Kernels::fma_row_block`]), which
+//! preserves per-element `k`-order and therefore bit output in every
+//! flavor.
 
 use std::cell::RefCell;
 
 use crate::config::ModelConfig;
 use crate::runtime::simd::{AttnRowArgs, Kernels};
-use crate::tensor::Tensor;
+use crate::tensor::{KvView, Tensor};
 use crate::util::threadpool::ThreadPool;
 
 /// Below this much work (inner-loop MAC count) a kernel stays serial:
@@ -113,16 +122,33 @@ pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
 }
 
 /// Dense cache-tiled microkernel: rows `[r0, r0+rows)` of `x @ w` into
-/// `orows` (row-local indexing). `k` ascends per output element (the
-/// column update itself runs on the flavor's [`Kernels::fma_row`]), so
-/// any row partitioning reproduces the serial result bit-for-bit.
+/// `orows` (row-local indexing). Rows go through the flavor's
+/// register-blocked [`Kernels::fma_row_block`] four at a time (one `w`
+/// row load feeds four output rows); the ragged remainder uses the
+/// per-row [`Kernels::fma_row`]. `k` still ascends per output element
+/// and each element receives exactly one fused update per `k`, so any
+/// row partitioning — and the blocking itself — reproduces the serial
+/// result bit-for-bit in every flavor.
 fn mm_rows(kern: &Kernels, xs: &[f32], ws: &[f32], orows: &mut [f32],
            r0: usize, d: usize, n: usize) {
     let rows = orows.len() / n;
     let mut k0 = 0;
     while k0 < d {
         let k1 = (k0 + MM_K_TILE).min(d);
-        for i in 0..rows {
+        let mut i = 0;
+        while i + 4 <= rows {
+            let oblock = &mut orows[i * n..(i + 4) * n];
+            for kk in k0..k1 {
+                let xv = [xs[(r0 + i) * d + kk],
+                          xs[(r0 + i + 1) * d + kk],
+                          xs[(r0 + i + 2) * d + kk],
+                          xs[(r0 + i + 3) * d + kk]];
+                let wrow = &ws[kk * n..(kk + 1) * n];
+                kern.fma_row_block(oblock, wrow, &xv);
+            }
+            i += 4;
+        }
+        while i < rows {
             let xrow = &xs[(r0 + i) * d..(r0 + i + 1) * d];
             let orow = &mut orows[i * n..(i + 1) * n];
             for kk in k0..k1 {
@@ -130,6 +156,7 @@ fn mm_rows(kern: &Kernels, xs: &[f32], ws: &[f32], orows: &mut [f32],
                 let wrow = &ws[kk * n..(kk + 1) * n];
                 kern.fma_row(orow, wrow, xv);
             }
+            i += 1;
         }
         k0 = k1;
     }
@@ -137,16 +164,30 @@ fn mm_rows(kern: &Kernels, xs: &[f32], ws: &[f32], orows: &mut [f32],
 
 /// Column-block microkernel for shallow batches: columns `[c0, c0+width)`
 /// of every row into `oblock` (`[b, width]`, block-local indexing).
+/// Same 4-row register blocking as [`mm_rows`] (rarely hit: this path
+/// serves shallow batches), same bit-exactness argument.
 fn mm_cols(kern: &Kernels, xs: &[f32], ws: &[f32], oblock: &mut [f32],
            b: usize, d: usize, n: usize, c0: usize) {
     let width = oblock.len() / b;
-    for i in 0..b {
+    let mut i = 0;
+    while i + 4 <= b {
+        let ob = &mut oblock[i * width..(i + 4) * width];
+        for kk in 0..d {
+            let wrow = &ws[kk * n + c0..kk * n + c0 + width];
+            let xv = [xs[i * d + kk], xs[(i + 1) * d + kk],
+                      xs[(i + 2) * d + kk], xs[(i + 3) * d + kk]];
+            kern.fma_row_block(ob, wrow, &xv);
+        }
+        i += 4;
+    }
+    while i < b {
         let xrow = &xs[i * d..(i + 1) * d];
         let orow = &mut oblock[i * width..(i + 1) * width];
         for (kk, &xv) in xrow.iter().enumerate() {
             let wrow = &ws[kk * n + c0..kk * n + c0 + width];
             kern.fma_row(orow, wrow, xv);
         }
+        i += 1;
     }
 }
 
@@ -350,10 +391,11 @@ pub fn chunk_attn(q: &Tensor, k: &Tensor, v: &Tensor, q_pos: &[i32],
 /// on the flavor's [`Kernels::attn_row`] body, so the reduction order
 /// is exactly the serial kernel's for the same flavor.
 #[allow(clippy::too_many_arguments)]
-fn chunk_attn_rows(kern: &Kernels, qs: &[f32], ks: &[f32], vs: &[f32],
-                   q_pos: &[i32], k_base: i32, valid: i32, h: usize,
-                   dh: usize, hkv: usize, c: usize, r0: usize,
-                   o: &mut [f32], m: &mut [f32], l: &mut [f32]) {
+fn chunk_attn_rows(kern: &Kernels, qs: &[f32], ks: KvView<'_>,
+                   vs: KvView<'_>, q_pos: &[i32], k_base: i32,
+                   valid: i32, h: usize, dh: usize, hkv: usize,
+                   c: usize, r0: usize, o: &mut [f32], m: &mut [f32],
+                   l: &mut [f32]) {
     let group = h / hkv;
     let scale = 1.0 / (dh as f32).sqrt();
     let rows = m.len();
@@ -449,8 +491,11 @@ fn chunk_attn_slices(kern: &Kernels, q: &Tensor, k: &Tensor, v: &Tensor,
     let (b, h, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
     let (c, hkv, _) = (k.shape()[0], k.shape()[1], k.shape()[2]);
     let qs = q.as_f32();
-    let ks = k.as_f32();
-    let vs = v.as_f32();
+    // K/V may be packed (f16/bf16/int8): hand the kernels dtype-tagged
+    // views and let each flavor widen rows in-register. `KvView` is
+    // `Copy`, so the fork-join job closures capture it by value.
+    let ks = k.kv_view();
+    let vs = v.kv_view();
 
     let rows = b * h;
     let work = rows * valid.max(0) as usize * dh;

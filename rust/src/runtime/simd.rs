@@ -4,10 +4,10 @@
 //! The parallel execution layer (PR 1) tiles work across cores, but each
 //! tile ran the seed scalar loops — a sequential f32 reduction per dot
 //! product and one multiply-add per cycle at best. This module supplies
-//! three interchangeable kernel *flavors* for the five primitive inner
-//! ops everything hot routes through (`mm_rows`/`mm_cols` column
-//! updates, the `chunk_attn_rows` per-row body, `router_cells` score
-//! cells, and the `merge2_row_into`/`finalize_into` tails):
+//! interchangeable kernel *flavors* for the primitive inner ops
+//! everything hot routes through (`mm_rows`/`mm_cols` column updates,
+//! the `chunk_attn_rows` per-row body, `router_cells` score cells, and
+//! the `merge2_row_into`/`finalize_into` tails):
 //!
 //! * **`scalar`** — the seed kernels, bit-for-bit: plain multiply-then-
 //!   add, sequential `k`-ascending reductions. The reference every
@@ -21,6 +21,35 @@
 //!   aarch64 NEON), selected once at startup by runtime feature
 //!   detection. Same lane striping, same tail handling, same scalar
 //!   [`reduce8`] — **bit-identical to `lanes8` on every input**.
+//! * **`avx512`** — 512-bit element-wise ops (matmul column updates,
+//!   merge tails, register blocks) layered over the AVX2 reductions.
+//!   Reductions keep the 8-lane stripe, and element-wise ops round
+//!   identically at any vector width, so `avx512` is bit-identical to
+//!   `avx2` (hence to `lanes8`) on every input.
+//!
+//! ## Packed K/V widening
+//!
+//! Shared and per-request K/V may be stored packed — `f16`, `bf16`, or
+//! `int8` with a per-token-row scale (see
+//! [`KvDtype`][crate::tensor::KvDtype]). [`AttnRowArgs`] therefore
+//! carries [`KvView`]s rather than `&[f32]`, and every flavor widens
+//! K/V rows to f32 *inside* the attention kernel, in registers or a
+//! small stack buffer — no separate dequant pass, half (or quarter)
+//! the bytes through the memory system. The widening contract:
+//!
+//! * The scalar conversions ([`f16_to_f32`], [`bf16_to_f32`],
+//!   `q as f32 * scale`) are the oracle. The AVX2 widens (F16C
+//!   `vcvtph2ps`, bf16 `<<16`, `vpmovsxbd`+`cvtdq2ps`+`mulps`) are
+//!   exact or per-element-IEEE — bit-identical to the oracle.
+//! * Packed softmax uses [`pexp::exp_pinned`], a pinned-polynomial
+//!   `exp` whose AVX2 8-lane form (`exp8`) mirrors it op for op —
+//!   so packed attention is bit-identical across *all* flavors
+//!   (scalar included; packed rows have no seed bit-history to
+//!   preserve, so even `scalar` routes packed inputs through the
+//!   shared oracle path).
+//! * `f32` K/V keeps the seed semantics unchanged (libm `exp`,
+//!   per-flavor F32 bodies) — `MOSKA_KV_DTYPE=f32` output is
+//!   bit-for-bit the pre-packing behavior in every flavor.
 //!
 //! ## Determinism contract
 //!
@@ -38,23 +67,28 @@
 //!   accumulation, merge/finalize tails) keep their per-element order;
 //!   each element is one fused multiply-add (or IEEE division), which
 //!   rounds identically everywhere.
+//! * **Register blocks** ([`Kernels::fma_row4`],
+//!   [`Kernels::fma_row_block`]) reorder *across* rows, never across
+//!   `k` within one output element, and chain per-element `mul_add`s
+//!   without intermediate stores — f32 results are bit-identical to
+//!   the equivalent sequence of `fma_row` calls in the same flavor.
 //!
 //! Every flavor still satisfies the parallel-execution contract from
 //! PR 1 — tiles own disjoint output regions and run the same per-element
 //! order as their serial counterpart — so within a flavor, output is
-//! bit-identical across thread counts; and across the three SIMD
-//! flavors, output is bit-identical, period (asserted by
-//! `tests/prop_kernels.rs` and the in-module tests). `scalar` differs
-//! from the SIMD flavors in low-order bits (different reduction order,
-//! no fusion) but decodes the same tokens — `scripts/ci.sh` runs the
-//! tier-1 suite and a synthetic disagg token comparison under both.
+//! bit-identical across thread counts; and across the SIMD flavors,
+//! output is bit-identical, period (asserted by `tests/prop_kernels.rs`
+//! and the in-module tests). `scalar` differs from the SIMD flavors in
+//! low-order bits on f32 data (different reduction order, no fusion)
+//! but decodes the same tokens — `scripts/ci.sh` runs the tier-1 suite
+//! and a synthetic disagg token comparison under both.
 //!
 //! ## Dispatch
 //!
 //! [`Kernels::global()`] resolves once per process from the
-//! `MOSKA_KERNEL` env var (`scalar | simd | lanes8`, default auto =
-//! best available), and [`set_global_spec`] lets the launcher pin it
-//! from `--kernel` / `serving.kernel` config. Each
+//! `MOSKA_KERNEL` env var (`scalar | simd | lanes8 | avx512`, default
+//! auto = best available), and [`set_global_spec`] lets the launcher
+//! pin it from `--kernel` / `serving.kernel` config. Each
 //! [`NativeBackend`][crate::runtime::NativeBackend] holds a `&'static
 //! Kernels` (defaulting to the global) so tests and benches can A/B
 //! flavors side by side in one process.
@@ -63,13 +97,15 @@ use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
+use crate::tensor::{bf16_to_f32, f16_to_f32, KvView};
+
 // ---------------------------------------------------------------- flavors
 
 /// Which kernel flavor to run (CLI `--kernel`, `serving.kernel`,
 /// `MOSKA_KERNEL`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum KernelSpec {
-    /// Best available: AVX2+FMA > NEON > `lanes8`.
+    /// Best available: AVX-512F > AVX2+FMA > NEON > `lanes8`.
     #[default]
     Auto,
     /// The seed scalar kernels (pre-SIMD bit behavior).
@@ -79,6 +115,10 @@ pub enum KernelSpec {
     /// The portable 8-lane flavor, even when AVX2/NEON is available
     /// (property-test oracle, A/B baseline).
     Lanes8,
+    /// The AVX-512F flavor: 512-bit element-wise ops over the AVX2
+    /// reductions (bit-identical to `avx2`). Errors loudly when the
+    /// CPU lacks AVX-512F.
+    Avx512,
 }
 
 impl KernelSpec {
@@ -88,21 +128,24 @@ impl KernelSpec {
             "scalar" | "seed" => Ok(KernelSpec::Scalar),
             "simd" => Ok(KernelSpec::Simd),
             "lanes8" | "fallback" => Ok(KernelSpec::Lanes8),
+            "avx512" | "avx-512" => Ok(KernelSpec::Avx512),
             other => bail!(
-                "unknown kernel flavor '{other}' (auto|simd|scalar|lanes8)"
+                "unknown kernel flavor '{other}' \
+                 (auto|simd|scalar|lanes8|avx512)"
             ),
         }
     }
 }
 
 /// Arguments for one query-row of chunk attention (see
-/// [`Kernels::attn_row`]): `ks`/`vs` are the chunk-major `[C, Hkv, dh]`
-/// K/V payloads, `kv` the GQA KV head this query head reads, `vis` the
-/// causally visible key count (> 0).
+/// [`Kernels::attn_row`]): `ks`/`vs` view the chunk-major `[C, Hkv, dh]`
+/// K/V payloads in any [`KvDtype`][crate::tensor::KvDtype] (packed rows
+/// are widened inside the kernel), `kv` the GQA KV head this query head
+/// reads, `vis` the causally visible key count (> 0).
 pub struct AttnRowArgs<'a> {
     pub qrow: &'a [f32],
-    pub ks: &'a [f32],
-    pub vs: &'a [f32],
+    pub ks: KvView<'a>,
+    pub vs: KvView<'a>,
     pub kv: usize,
     pub hkv: usize,
     pub dh: usize,
@@ -111,13 +154,15 @@ pub struct AttnRowArgs<'a> {
 }
 
 type FmaRowFn = fn(&mut [f32], &[f32], f32);
+type FmaRow4Fn = fn(&mut [f32], [&[f32]; 4], [f32; 4]);
+type FmaRowBlockFn = fn(&mut [f32], &[f32], &[f32]);
 type AttnRowFn = for<'a> fn(&AttnRowArgs<'a>, &mut [f32], &mut [f32])
                             -> (f32, f32);
 type RouterCellFn = fn(&[f32], &[f32], usize, usize, usize) -> f32;
 type Scale2AddFn = fn(&mut [f32], f32, &[f32], f32);
 type DivRowFn = fn(&mut [f32], &[f32], f32);
 
-/// One kernel flavor: the five primitive inner ops the hot loops in
+/// One kernel flavor: the primitive inner ops the hot loops in
 /// [`native`][crate::runtime::native] dispatch through. Selected once
 /// (per process via [`Kernels::global`], per backend via
 /// [`NativeBackend::with_kernel`][crate::runtime::NativeBackend::with_kernel]);
@@ -126,6 +171,8 @@ type DivRowFn = fn(&mut [f32], &[f32], f32);
 pub struct Kernels {
     pub name: &'static str,
     fma_row_fn: FmaRowFn,
+    fma_row4_fn: FmaRow4Fn,
+    fma_row_block_fn: FmaRowBlockFn,
     attn_row_fn: AttnRowFn,
     router_cell_fn: RouterCellFn,
     scale2_add_fn: Scale2AddFn,
@@ -140,9 +187,35 @@ impl Kernels {
         (self.fma_row_fn)(orow, wrow, xv)
     }
 
+    /// Register-blocked quad update: `orow[j] += x[r] * wrows[r][j]`
+    /// for `r = 0..4`, chained per element — one `orow` load/store per
+    /// four source rows. Bit-identical (within a flavor) to four
+    /// sequential [`fma_row`][Kernels::fma_row] calls: chaining
+    /// `mul_add`s in registers rounds exactly like storing between
+    /// them.
+    #[inline]
+    pub fn fma_row4(&self, orow: &mut [f32], wrows: [&[f32]; 4],
+                    xs: [f32; 4]) {
+        (self.fma_row4_fn)(orow, wrows, xs)
+    }
+
+    /// Register-blocked row batch: `oblock[r*W + j] += xs[r] * wrow[j]`
+    /// for each row `r < xs.len()` of the contiguous `oblock`
+    /// (`W = wrow.len()`) — one `wrow` load shared across 2–4 query
+    /// rows. Each output element still receives exactly one fused
+    /// multiply-add per call, so per-element `k`-order (and hence bit
+    /// output, in *every* flavor including scalar) is unchanged from
+    /// per-row [`fma_row`][Kernels::fma_row] calls.
+    #[inline]
+    pub fn fma_row_block(&self, oblock: &mut [f32], wrow: &[f32],
+                         xs: &[f32]) {
+        (self.fma_row_block_fn)(oblock, wrow, xs)
+    }
+
     /// One query-row chunk-attention body: QK^T scores into
     /// `scores[..vis]`, online-softmax probabilities, V accumulation
-    /// into `orow` (must arrive zeroed). Returns `(m, l)`.
+    /// into `orow` (must arrive zeroed). Packed K/V rows are widened
+    /// in-kernel. Returns `(m, l)`.
     #[inline]
     pub fn attn_row(&self, args: &AttnRowArgs<'_>, scores: &mut [f32],
                     orow: &mut [f32]) -> (f32, f32) {
@@ -239,13 +312,40 @@ fn resolve_explicit(spec: KernelSpec) -> &'static Kernels {
     match spec {
         KernelSpec::Scalar => &SCALAR,
         KernelSpec::Lanes8 => &LANES8,
+        KernelSpec::Avx512 => avx512_or_panic(),
         KernelSpec::Auto | KernelSpec::Simd => best_simd(),
     }
 }
 
 #[cfg(target_arch = "x86_64")]
+fn avx512_supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+        && std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx512_or_panic() -> &'static Kernels {
+    if avx512_supported() {
+        &AVX512
+    } else {
+        panic!(
+            "kernel flavor 'avx512' requested but AVX-512F (+AVX2/FMA) \
+             is not available on this CPU"
+        )
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx512_or_panic() -> &'static Kernels {
+    panic!("kernel flavor 'avx512' is only available on x86-64")
+}
+
+#[cfg(target_arch = "x86_64")]
 fn best_simd() -> &'static Kernels {
-    if std::arch::is_x86_feature_detected!("avx2")
+    if avx512_supported() {
+        &AVX512
+    } else if std::arch::is_x86_feature_detected!("avx2")
         && std::arch::is_x86_feature_detected!("fma")
     {
         &AVX2
@@ -267,6 +367,8 @@ fn best_simd() -> &'static Kernels {
 static SCALAR: Kernels = Kernels {
     name: "scalar",
     fma_row_fn: scalar::fma_row,
+    fma_row4_fn: scalar::fma_row4,
+    fma_row_block_fn: scalar::fma_row_block,
     attn_row_fn: scalar::attn_row,
     router_cell_fn: scalar::router_cell,
     scale2_add_fn: scalar::scale2_add,
@@ -276,6 +378,8 @@ static SCALAR: Kernels = Kernels {
 static LANES8: Kernels = Kernels {
     name: "lanes8",
     fma_row_fn: lanes8::fma_row,
+    fma_row4_fn: lanes8::fma_row4,
+    fma_row_block_fn: lanes8::fma_row_block,
     attn_row_fn: lanes8::attn_row,
     router_cell_fn: lanes8::router_cell,
     scale2_add_fn: lanes8::scale2_add,
@@ -286,9 +390,27 @@ static LANES8: Kernels = Kernels {
 static AVX2: Kernels = Kernels {
     name: "avx2",
     fma_row_fn: avx2_fma_row,
+    fma_row4_fn: avx2_fma_row4,
+    fma_row_block_fn: avx2_fma_row_block,
     attn_row_fn: avx2_attn_row,
     router_cell_fn: avx2_router_cell,
     scale2_add_fn: avx2_scale2_add,
+    div_row_fn: scalar::div_row,
+};
+
+/// 512-bit element-wise ops; reductions and the attention/router bodies
+/// reuse the AVX2 paths (a 16-lane dot stripe would break the pinned
+/// 8-lane reduction order), so the flavor is bit-identical to `avx2`
+/// by construction.
+#[cfg(target_arch = "x86_64")]
+static AVX512: Kernels = Kernels {
+    name: "avx512",
+    fma_row_fn: avx512_fma_row,
+    fma_row4_fn: avx512_fma_row4,
+    fma_row_block_fn: avx512_fma_row_block,
+    attn_row_fn: avx2_attn_row,
+    router_cell_fn: avx2_router_cell,
+    scale2_add_fn: avx512_scale2_add,
     div_row_fn: scalar::div_row,
 };
 
@@ -296,6 +418,8 @@ static AVX2: Kernels = Kernels {
 static NEON: Kernels = Kernels {
     name: "neon",
     fma_row_fn: neon_fma_row,
+    fma_row4_fn: neon_fma_row4,
+    fma_row_block_fn: neon_fma_row_block,
     attn_row_fn: neon_attn_row,
     router_cell_fn: neon_router_cell,
     scale2_add_fn: neon_scale2_add,
@@ -334,14 +458,143 @@ fn dot_tail(lanes: &mut [f32; 8], a: &[f32], b: &[f32], i0: usize,
     }
 }
 
+// ------------------------------------------------------- pinned exp
+
+/// Pinned-polynomial `exp` for packed-K/V softmax. The f32 path keeps
+/// libm `exp` (seed bit behavior); packed paths use this polynomial in
+/// *every* flavor, so a vectorized 8-lane form (`avx2::exp8`) can
+/// mirror it op for op and stay bit-identical.
+///
+/// Construction (classic Cephes `expf` reduction, order pinned):
+/// clamp → `n = rne(x·log2e)` by the magic-number trick (`1.5·2^23`
+/// forces round-to-nearest-even in f32) → two-part Cody-Waite `ln 2`
+/// reduction `r = x - n·ln2_hi - n·ln2_lo` (each step one `mul_add`) →
+/// degree-5 Horner polynomial (all `mul_add`) → `y = r²·p + r + 1` →
+/// scale by `2^n` built from exponent bits. Every step is an IEEE op
+/// with a fixed order; max relative error ≈ 2 ulp over the clamped
+/// domain, more than enough under an int8/f16 quantization floor.
+mod pexp {
+    pub const EXP_LO: f32 = -87.0;
+    pub const EXP_HI: f32 = 88.0;
+    pub const LOG2E: f32 = 1.442_695_04;
+    /// `1.5 · 2^23`: adding it to `|t| ≤ 128` forces f32
+    /// round-to-nearest-even at integer granularity.
+    pub const MAGIC: f32 = 12_582_912.0;
+    pub const LN2_HI: f32 = 0.693_359_375;
+    pub const LN2_LO: f32 = -2.121_944_4e-4;
+    pub const C5: f32 = 1.987_569_15e-4;
+    pub const C4: f32 = 1.398_199_95e-3;
+    pub const C3: f32 = 8.333_451_9e-3;
+    pub const C2: f32 = 4.166_579_6e-2;
+    pub const C1: f32 = 1.666_666_55e-1;
+    pub const C0: f32 = 5.000_000_1e-1;
+
+    #[inline(always)]
+    pub fn exp_pinned(x: f32) -> f32 {
+        // clamp with min/max *comparison* semantics (mirrors
+        // `_mm256_min_ps`/`_mm256_max_ps`, incl. NaN → HI)
+        let x = if x < EXP_HI { x } else { EXP_HI };
+        let x = if x > EXP_LO { x } else { EXP_LO };
+        let t = x.mul_add(LOG2E, MAGIC);
+        let nf = t - MAGIC; // exactly integral by construction
+        let n = nf as i32; // truncation of an exact integer is exact
+        let r = nf.mul_add(-LN2_HI, x);
+        let r = nf.mul_add(-LN2_LO, r);
+        let mut p = C5;
+        p = p.mul_add(r, C4);
+        p = p.mul_add(r, C3);
+        p = p.mul_add(r, C2);
+        p = p.mul_add(r, C1);
+        p = p.mul_add(r, C0);
+        let y = (r * r).mul_add(p, r) + 1.0;
+        // 2^n for n in [-126, 127]: plain exponent-field construction
+        y * f32::from_bits((((n + 127) as u32) << 23))
+    }
+}
+
+// ------------------------------------------------------- packed oracle
+
+/// The shared packed-K/V attention path: widen one K/V sub-row at a
+/// time into a stack buffer, then run the `lanes8` dot/fma bodies and
+/// [`pexp::exp_pinned`]. This single implementation serves the scalar,
+/// lanes8, and NEON flavors (packed data has no seed bit-history, so
+/// there is nothing for `scalar` to preserve); `avx2::attn_row_packed`
+/// reimplements it with F16C/AVX2 widening and `exp8`, each step
+/// bit-identical, so packed attention output is identical across every
+/// flavor — the property `tests/prop_kernels.rs` pins.
+mod packed {
+    use super::{lanes8, pexp, AttnRowArgs};
+    use crate::tensor::{bf16_to_f32, f16_to_f32, KvView};
+
+    /// Stack-buffer bound for one widened K/V sub-row (`dh` f32s).
+    pub const MAX_DH: usize = 512;
+
+    /// Widen `view[base .. base + buf.len()]` to f32. For `I8` the
+    /// per-token-row scale is `scales[base / row_elems]` — a K/V
+    /// sub-row `(tok*hkv + kv)*dh .. +dh` never crosses a token row,
+    /// so one scale covers the whole slice.
+    #[inline(always)]
+    pub fn widen_row(view: KvView<'_>, base: usize, buf: &mut [f32]) {
+        let dh = buf.len();
+        match view {
+            KvView::F32(d) => buf.copy_from_slice(&d[base..base + dh]),
+            KvView::F16(d) => {
+                for (o, &h) in buf.iter_mut().zip(&d[base..base + dh]) {
+                    *o = f16_to_f32(h);
+                }
+            }
+            KvView::Bf16(d) => {
+                for (o, &h) in buf.iter_mut().zip(&d[base..base + dh]) {
+                    *o = bf16_to_f32(h);
+                }
+            }
+            KvView::I8 { q, scales, row_elems } => {
+                let s = scales[base / row_elems];
+                for (o, &x) in buf.iter_mut().zip(&q[base..base + dh]) {
+                    *o = x as f32 * s;
+                }
+            }
+        }
+    }
+
+    pub fn attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
+                    orow: &mut [f32]) -> (f32, f32) {
+        let (hkv, kv, dh) = (a.hkv, a.kv, a.dh);
+        assert!(dh <= MAX_DH,
+                "head_dim {dh} exceeds packed-widen buffer {MAX_DH}");
+        let mut buf = [0f32; MAX_DH];
+        let buf = &mut buf[..dh];
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..a.vis {
+            let base = (j * hkv + kv) * dh;
+            widen_row(a.ks, base, buf);
+            let s = lanes8::dot8(a.qrow, buf) * a.scale;
+            scores[j] = s;
+            mx = mx.max(s);
+        }
+        let mut li = 0f32;
+        for j in 0..a.vis {
+            let p = pexp::exp_pinned(scores[j] - mx);
+            li += p;
+            let base = (j * hkv + kv) * dh;
+            widen_row(a.vs, base, buf);
+            lanes8::fma_row(orow, buf, p);
+        }
+        (mx, li)
+    }
+}
+
 // ------------------------------------------------------- scalar (seed)
 
-/// The seed kernels, arithmetic preserved bit-for-bit: multiply *then*
-/// add (no fusion), sequential reductions. `MOSKA_KERNEL=scalar`
-/// reproduces pre-SIMD output exactly (regression-tested against
-/// inline references in `tests/prop_kernels.rs`).
+/// The seed kernels, arithmetic preserved bit-for-bit on f32 data:
+/// multiply *then* add (no fusion), sequential reductions.
+/// `MOSKA_KERNEL=scalar` reproduces pre-SIMD output exactly
+/// (regression-tested against inline references in
+/// `tests/prop_kernels.rs`). Packed K/V routes through the shared
+/// [`packed`] oracle — packed rows have no seed history to preserve.
 mod scalar {
     use super::AttnRowArgs;
+    use crate::tensor::KvView;
 
     pub fn fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
         for (o, &wv) in orow.iter_mut().zip(wrow) {
@@ -349,13 +602,32 @@ mod scalar {
         }
     }
 
+    pub fn fma_row4(orow: &mut [f32], wrows: [&[f32]; 4],
+                    xs: [f32; 4]) {
+        // four sequential seed updates — trivially seed-identical
+        for (w, &xv) in wrows.iter().zip(xs.iter()) {
+            fma_row(orow, w, xv);
+        }
+    }
+
+    pub fn fma_row_block(oblock: &mut [f32], wrow: &[f32], xs: &[f32]) {
+        let w = wrow.len();
+        for (r, &xv) in xs.iter().enumerate() {
+            fma_row(&mut oblock[r * w..(r + 1) * w], wrow, xv);
+        }
+    }
+
     pub fn attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
                     orow: &mut [f32]) -> (f32, f32) {
+        let (ks, vs) = match (a.ks, a.vs) {
+            (KvView::F32(k), KvView::F32(v)) => (k, v),
+            _ => return super::packed::attn_row(a, scores, orow),
+        };
         let (hkv, kv, dh) = (a.hkv, a.kv, a.dh);
         let mut mx = f32::NEG_INFINITY;
         for j in 0..a.vis {
             let base = (j * hkv + kv) * dh;
-            let krow = &a.ks[base..base + dh];
+            let krow = &ks[base..base + dh];
             let dot: f32 =
                 a.qrow.iter().zip(krow).map(|(x, y)| x * y).sum();
             let s = dot * a.scale;
@@ -367,7 +639,7 @@ mod scalar {
             let p = (scores[j] - mx).exp();
             li += p;
             let base = (j * hkv + kv) * dh;
-            let vrow = &a.vs[base..base + dh];
+            let vrow = &vs[base..base + dh];
             for (oo, &vv) in orow.iter_mut().zip(vrow) {
                 *oo += p * vv;
             }
@@ -408,6 +680,7 @@ mod scalar {
 /// reduction order the vector flavors reproduce.
 mod lanes8 {
     use super::{dot_tail, reduce8, AttnRowArgs};
+    use crate::tensor::KvView;
 
     #[inline(always)]
     pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
@@ -430,22 +703,64 @@ mod lanes8 {
         }
     }
 
+    pub fn fma_row4(orow: &mut [f32], wrows: [&[f32]; 4],
+                    xs: [f32; 4]) {
+        for (j, o) in orow.iter_mut().enumerate() {
+            let mut acc = *o;
+            acc = wrows[0][j].mul_add(xs[0], acc);
+            acc = wrows[1][j].mul_add(xs[1], acc);
+            acc = wrows[2][j].mul_add(xs[2], acc);
+            acc = wrows[3][j].mul_add(xs[3], acc);
+            *o = acc;
+        }
+    }
+
+    pub fn fma_row_block(oblock: &mut [f32], wrow: &[f32], xs: &[f32]) {
+        let w = wrow.len();
+        for (r, &xv) in xs.iter().enumerate() {
+            fma_row(&mut oblock[r * w..(r + 1) * w], wrow, xv);
+        }
+    }
+
     pub fn attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
                     orow: &mut [f32]) -> (f32, f32) {
+        let (ks, vs) = match (a.ks, a.vs) {
+            (KvView::F32(k), KvView::F32(v)) => (k, v),
+            _ => return super::packed::attn_row(a, scores, orow),
+        };
         let (hkv, kv, dh) = (a.hkv, a.kv, a.dh);
         let mut mx = f32::NEG_INFINITY;
         for j in 0..a.vis {
             let base = (j * hkv + kv) * dh;
-            let s = dot8(a.qrow, &a.ks[base..base + dh]) * a.scale;
+            let s = dot8(a.qrow, &ks[base..base + dh]) * a.scale;
             scores[j] = s;
             mx = mx.max(s);
         }
         let mut li = 0f32;
-        for j in 0..a.vis {
+        let mut j = 0;
+        // V pass register-blocked by 4 rows; p/li order stays j-ascending
+        while j + 4 <= a.vis {
+            let mut ps = [0f32; 4];
+            for (t, p) in ps.iter_mut().enumerate() {
+                *p = (scores[j + t] - mx).exp();
+                li += *p;
+            }
+            let b = [((j) * hkv + kv) * dh,
+                     ((j + 1) * hkv + kv) * dh,
+                     ((j + 2) * hkv + kv) * dh,
+                     ((j + 3) * hkv + kv) * dh];
+            fma_row4(orow,
+                     [&vs[b[0]..b[0] + dh], &vs[b[1]..b[1] + dh],
+                      &vs[b[2]..b[2] + dh], &vs[b[3]..b[3] + dh]],
+                     ps);
+            j += 4;
+        }
+        while j < a.vis {
             let p = (scores[j] - mx).exp();
             li += p;
             let base = (j * hkv + kv) * dh;
-            fma_row(orow, &a.vs[base..base + dh], p);
+            fma_row(orow, &vs[base..base + dh], p);
+            j += 1;
         }
         (mx, li)
     }
@@ -470,16 +785,26 @@ mod lanes8 {
 
 // -------------------------------------------------------- avx2 (x86-64)
 
+/// Cached F16C probe for the AVX2 widening path (`vcvtph2ps`); the
+/// scalar [`f16_to_f32`] fallback is bit-identical, so this only
+/// affects speed.
+#[cfg(target_arch = "x86_64")]
+fn f16c_available() -> bool {
+    std::arch::is_x86_feature_detected!("f16c")
+}
+
 /// AVX2+FMA implementations. Every `unsafe fn` here requires AVX2 and
 /// FMA support; the safe wrappers below are only reachable through the
-/// [`AVX2`] table, which [`best_simd`] constructs exclusively behind
-/// `is_x86_feature_detected!` — that detection is the safety proof for
-/// every call site.
+/// [`AVX2`] / [`AVX512`] tables, which [`best_simd`] constructs
+/// exclusively behind `is_x86_feature_detected!` — that detection is
+/// the safety proof for every call site.
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     use std::arch::x86_64::*;
 
-    use super::{dot_tail, reduce8, AttnRowArgs};
+    use super::packed::MAX_DH;
+    use super::{dot_tail, pexp, reduce8, AttnRowArgs};
+    use crate::tensor::{f16_to_f32, KvView};
 
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn dot8(a: &[f32], b: &[f32]) -> f32 {
@@ -531,23 +856,298 @@ mod avx2 {
     }
 
     #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fma_row4(orow: &mut [f32], wrows: [&[f32]; 4],
+                           xs: [f32; 4]) {
+        let n = orow.len();
+        debug_assert!(wrows.iter().all(|w| w.len() >= n));
+        let mut i = 0;
+        unsafe {
+            let x0 = _mm256_set1_ps(xs[0]);
+            let x1 = _mm256_set1_ps(xs[1]);
+            let x2 = _mm256_set1_ps(xs[2]);
+            let x3 = _mm256_set1_ps(xs[3]);
+            while i + 8 <= n {
+                let mut o = _mm256_loadu_ps(orow.as_ptr().add(i));
+                o = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(wrows[0].as_ptr().add(i)), x0, o);
+                o = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(wrows[1].as_ptr().add(i)), x1, o);
+                o = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(wrows[2].as_ptr().add(i)), x2, o);
+                o = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(wrows[3].as_ptr().add(i)), x3, o);
+                _mm256_storeu_ps(orow.as_mut_ptr().add(i), o);
+                i += 8;
+            }
+        }
+        while i < n {
+            let mut acc = orow[i];
+            acc = wrows[0][i].mul_add(xs[0], acc);
+            acc = wrows[1][i].mul_add(xs[1], acc);
+            acc = wrows[2][i].mul_add(xs[2], acc);
+            acc = wrows[3][i].mul_add(xs[3], acc);
+            orow[i] = acc;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fma_row_block(oblock: &mut [f32], wrow: &[f32],
+                                xs: &[f32]) {
+        let w = wrow.len();
+        let rows = xs.len();
+        debug_assert!(oblock.len() >= rows * w);
+        let mut i = 0;
+        unsafe {
+            while i + 8 <= w {
+                let wv = _mm256_loadu_ps(wrow.as_ptr().add(i));
+                for (r, &xv) in xs.iter().enumerate() {
+                    let op = oblock.as_mut_ptr().add(r * w + i);
+                    let o = _mm256_loadu_ps(op);
+                    _mm256_storeu_ps(
+                        op, _mm256_fmadd_ps(wv, _mm256_set1_ps(xv), o));
+                }
+                i += 8;
+            }
+        }
+        while i < w {
+            for (r, &xv) in xs.iter().enumerate() {
+                oblock[r * w + i] =
+                    wrow[i].mul_add(xv, oblock[r * w + i]);
+            }
+            i += 1;
+        }
+    }
+
+    /// 8-lane mirror of [`pexp::exp_pinned`], op for op: min/max
+    /// clamp, fmadd magic-rounding, truncating cvt (exact on the
+    /// integral `nf`), two fmadd Cody-Waite steps, five fmadd Horner
+    /// steps, `r²·p + r` fmadd, `+1`, exponent-field `2^n`, final mul.
+    /// Every step is the same IEEE op on the same operands as the
+    /// scalar form — bit-identical per lane.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp8(x: __m256) -> __m256 {
+        unsafe {
+            let x = _mm256_max_ps(
+                _mm256_min_ps(x, _mm256_set1_ps(pexp::EXP_HI)),
+                _mm256_set1_ps(pexp::EXP_LO));
+            let magic = _mm256_set1_ps(pexp::MAGIC);
+            let t = _mm256_fmadd_ps(
+                x, _mm256_set1_ps(pexp::LOG2E), magic);
+            let nf = _mm256_sub_ps(t, magic);
+            let n = _mm256_cvttps_epi32(nf);
+            let r = _mm256_fmadd_ps(
+                nf, _mm256_set1_ps(-pexp::LN2_HI), x);
+            let r = _mm256_fmadd_ps(
+                nf, _mm256_set1_ps(-pexp::LN2_LO), r);
+            let mut p = _mm256_set1_ps(pexp::C5);
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(pexp::C4));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(pexp::C3));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(pexp::C2));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(pexp::C1));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(pexp::C0));
+            let y = _mm256_add_ps(
+                _mm256_fmadd_ps(_mm256_mul_ps(r, r), p, r),
+                _mm256_set1_ps(1.0));
+            let sc = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(
+                _mm256_add_epi32(n, _mm256_set1_epi32(127))));
+            _mm256_mul_ps(y, sc)
+        }
+    }
+
+    /// F16C widening (`vcvtph2ps` is an exact conversion — identical
+    /// to scalar [`f16_to_f32`] on every finite input).
+    #[target_feature(enable = "avx2,fma,f16c")]
+    unsafe fn widen_f16(src: &[u16], buf: &mut [f32]) {
+        let n = src.len().min(buf.len());
+        let mut i = 0;
+        unsafe {
+            while i + 8 <= n {
+                let h = _mm_loadu_si128(
+                    src.as_ptr().add(i) as *const __m128i);
+                _mm256_storeu_ps(buf.as_mut_ptr().add(i),
+                                 _mm256_cvtph_ps(h));
+                i += 8;
+            }
+        }
+        while i < n {
+            buf[i] = f16_to_f32(src[i]);
+            i += 1;
+        }
+    }
+
+    /// bf16 widening: zero-extend to 32 bits, shift into the high
+    /// half — exact by definition of bf16.
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_bf16(src: &[u16], buf: &mut [f32]) {
+        let n = src.len().min(buf.len());
+        let mut i = 0;
+        unsafe {
+            while i + 8 <= n {
+                let h = _mm_loadu_si128(
+                    src.as_ptr().add(i) as *const __m128i);
+                let w = _mm256_slli_epi32::<16>(
+                    _mm256_cvtepu16_epi32(h));
+                _mm256_storeu_ps(buf.as_mut_ptr().add(i),
+                                 _mm256_castsi256_ps(w));
+                i += 8;
+            }
+        }
+        while i < n {
+            buf[i] = f32::from_bits((src[i] as u32) << 16);
+            i += 1;
+        }
+    }
+
+    /// int8 widening: sign-extend, exact int→f32 convert, one IEEE
+    /// multiply by the row scale — per-element identical to the scalar
+    /// `q as f32 * scale`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_i8(src: &[i8], scale: f32, buf: &mut [f32]) {
+        let n = src.len().min(buf.len());
+        let mut i = 0;
+        unsafe {
+            let sv = _mm256_set1_ps(scale);
+            while i + 8 <= n {
+                let b = _mm_loadl_epi64(
+                    src.as_ptr().add(i) as *const __m128i);
+                let w = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(b));
+                _mm256_storeu_ps(buf.as_mut_ptr().add(i),
+                                 _mm256_mul_ps(w, sv));
+                i += 8;
+            }
+        }
+        while i < n {
+            buf[i] = src[i] as f32 * scale;
+            i += 1;
+        }
+    }
+
+    /// Vectorized form of [`super::packed::widen_row`]; every branch
+    /// is exact/per-element-IEEE, hence bit-identical to the scalar
+    /// oracle.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn widen_row(view: KvView<'_>, base: usize,
+                        buf: &mut [f32]) {
+        let dh = buf.len();
+        match view {
+            KvView::F32(d) => buf.copy_from_slice(&d[base..base + dh]),
+            KvView::F16(d) => {
+                if super::f16c_available() {
+                    unsafe { widen_f16(&d[base..base + dh], buf) }
+                } else {
+                    for (o, &h) in
+                        buf.iter_mut().zip(&d[base..base + dh])
+                    {
+                        *o = f16_to_f32(h);
+                    }
+                }
+            }
+            KvView::Bf16(d) => unsafe {
+                widen_bf16(&d[base..base + dh], buf)
+            },
+            KvView::I8 { q, scales, row_elems } => {
+                let s = scales[base / row_elems];
+                unsafe { widen_i8(&q[base..base + dh], s, buf) }
+            }
+        }
+    }
+
+    /// Packed-K/V attention: the AVX2 rebuild of
+    /// [`super::packed::attn_row`], step-for-step bit-identical —
+    /// exact widening, the shared `dot8`/`fma_row` bodies, `exp8`
+    /// blocks with a scalar `exp_pinned` tail, `li` accumulated in
+    /// ascending-`j` order.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn attn_row_packed(a: &AttnRowArgs<'_>,
+                                  scores: &mut [f32],
+                                  orow: &mut [f32]) -> (f32, f32) {
+        let (hkv, kv, dh) = (a.hkv, a.kv, a.dh);
+        assert!(dh <= MAX_DH,
+                "head_dim {dh} exceeds packed-widen buffer {MAX_DH}");
+        let mut buf = [0f32; MAX_DH];
+        let buf = &mut buf[..dh];
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..a.vis {
+            let base = (j * hkv + kv) * dh;
+            unsafe { widen_row(a.ks, base, buf) };
+            let s = unsafe { dot8(a.qrow, buf) } * a.scale;
+            scores[j] = s;
+            mx = mx.max(s);
+        }
+        let mut li = 0f32;
+        let mut j = 0;
+        unsafe {
+            let mxv = _mm256_set1_ps(mx);
+            while j + 8 <= a.vis {
+                let sv = _mm256_loadu_ps(scores.as_ptr().add(j));
+                let pv = exp8(_mm256_sub_ps(sv, mxv));
+                let mut ps = [0f32; 8];
+                _mm256_storeu_ps(ps.as_mut_ptr(), pv);
+                for (t, &p) in ps.iter().enumerate() {
+                    li += p;
+                    let base = ((j + t) * hkv + kv) * dh;
+                    widen_row(a.vs, base, buf);
+                    fma_row(orow, buf, p);
+                }
+                j += 8;
+            }
+        }
+        while j < a.vis {
+            let p = pexp::exp_pinned(scores[j] - mx);
+            li += p;
+            let base = (j * hkv + kv) * dh;
+            unsafe { widen_row(a.vs, base, buf) };
+            unsafe { fma_row(orow, buf, p) };
+            j += 1;
+        }
+        (mx, li)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
     pub unsafe fn attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
                            orow: &mut [f32]) -> (f32, f32) {
+        let (ks, vs) = match (a.ks, a.vs) {
+            (KvView::F32(k), KvView::F32(v)) => (k, v),
+            _ => return unsafe { attn_row_packed(a, scores, orow) },
+        };
         let (hkv, kv, dh) = (a.hkv, a.kv, a.dh);
         let mut mx = f32::NEG_INFINITY;
         for j in 0..a.vis {
             let base = (j * hkv + kv) * dh;
-            let s = unsafe { dot8(a.qrow, &a.ks[base..base + dh]) }
+            let s = unsafe { dot8(a.qrow, &ks[base..base + dh]) }
                 * a.scale;
             scores[j] = s;
             mx = mx.max(s);
         }
         let mut li = 0f32;
-        for j in 0..a.vis {
+        let mut j = 0;
+        // V pass register-blocked by 4 rows; p/li order stays
+        // j-ascending, chained fmadds round like the sequential form
+        while j + 4 <= a.vis {
+            let mut ps = [0f32; 4];
+            for (t, p) in ps.iter_mut().enumerate() {
+                *p = (scores[j + t] - mx).exp();
+                li += *p;
+            }
+            let b = [((j) * hkv + kv) * dh,
+                     ((j + 1) * hkv + kv) * dh,
+                     ((j + 2) * hkv + kv) * dh,
+                     ((j + 3) * hkv + kv) * dh];
+            unsafe {
+                fma_row4(orow,
+                         [&vs[b[0]..b[0] + dh], &vs[b[1]..b[1] + dh],
+                          &vs[b[2]..b[2] + dh], &vs[b[3]..b[3] + dh]],
+                         ps)
+            };
+            j += 4;
+        }
+        while j < a.vis {
             let p = (scores[j] - mx).exp();
             li += p;
             let base = (j * hkv + kv) * dh;
-            unsafe { fma_row(orow, &a.vs[base..base + dh], p) };
+            unsafe { fma_row(orow, &vs[base..base + dh], p) };
+            j += 1;
         }
         (mx, li)
     }
@@ -591,8 +1191,21 @@ mod avx2 {
 
 #[cfg(target_arch = "x86_64")]
 fn avx2_fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
-    // SAFETY: the AVX2 table is only selectable after feature detection.
+    // SAFETY: the AVX2/AVX512 tables are only selectable after feature
+    // detection.
     unsafe { avx2::fma_row(orow, wrow, xv) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_fma_row4(orow: &mut [f32], wrows: [&[f32]; 4], xs: [f32; 4]) {
+    // SAFETY: as above.
+    unsafe { avx2::fma_row4(orow, wrows, xs) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_fma_row_block(oblock: &mut [f32], wrow: &[f32], xs: &[f32]) {
+    // SAFETY: as above.
+    unsafe { avx2::fma_row_block(oblock, wrow, xs) }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -615,17 +1228,167 @@ fn avx2_scale2_add(dst: &mut [f32], s1: f32, src: &[f32], s2: f32) {
     unsafe { avx2::scale2_add(dst, s1, src, s2) }
 }
 
+// ------------------------------------------------------ avx512 (x86-64)
+
+/// AVX-512F implementations — *element-wise ops only*. A 16-lane dot
+/// accumulator would break the pinned 8-lane stripe, so reductions
+/// (and the attention/router bodies built on them) stay on the AVX2
+/// paths; here only the ops where any vector width produces identical
+/// per-element IEEE results go 512-bit wide. Consequence: `avx512` is
+/// bit-identical to `avx2` on every input, by construction.
+#[cfg(target_arch = "x86_64")]
+mod avx512 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
+        let n = orow.len().min(wrow.len());
+        let mut i = 0;
+        unsafe {
+            let xvv = _mm512_set1_ps(xv);
+            while i + 16 <= n {
+                let o = _mm512_loadu_ps(orow.as_ptr().add(i));
+                let w = _mm512_loadu_ps(wrow.as_ptr().add(i));
+                _mm512_storeu_ps(orow.as_mut_ptr().add(i),
+                                 _mm512_fmadd_ps(w, xvv, o));
+                i += 16;
+            }
+        }
+        while i < n {
+            orow[i] = wrow[i].mul_add(xv, orow[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn fma_row4(orow: &mut [f32], wrows: [&[f32]; 4],
+                           xs: [f32; 4]) {
+        let n = orow.len();
+        debug_assert!(wrows.iter().all(|w| w.len() >= n));
+        let mut i = 0;
+        unsafe {
+            let x0 = _mm512_set1_ps(xs[0]);
+            let x1 = _mm512_set1_ps(xs[1]);
+            let x2 = _mm512_set1_ps(xs[2]);
+            let x3 = _mm512_set1_ps(xs[3]);
+            while i + 16 <= n {
+                let mut o = _mm512_loadu_ps(orow.as_ptr().add(i));
+                o = _mm512_fmadd_ps(
+                    _mm512_loadu_ps(wrows[0].as_ptr().add(i)), x0, o);
+                o = _mm512_fmadd_ps(
+                    _mm512_loadu_ps(wrows[1].as_ptr().add(i)), x1, o);
+                o = _mm512_fmadd_ps(
+                    _mm512_loadu_ps(wrows[2].as_ptr().add(i)), x2, o);
+                o = _mm512_fmadd_ps(
+                    _mm512_loadu_ps(wrows[3].as_ptr().add(i)), x3, o);
+                _mm512_storeu_ps(orow.as_mut_ptr().add(i), o);
+                i += 16;
+            }
+        }
+        while i < n {
+            let mut acc = orow[i];
+            acc = wrows[0][i].mul_add(xs[0], acc);
+            acc = wrows[1][i].mul_add(xs[1], acc);
+            acc = wrows[2][i].mul_add(xs[2], acc);
+            acc = wrows[3][i].mul_add(xs[3], acc);
+            orow[i] = acc;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn fma_row_block(oblock: &mut [f32], wrow: &[f32],
+                                xs: &[f32]) {
+        let w = wrow.len();
+        let rows = xs.len();
+        debug_assert!(oblock.len() >= rows * w);
+        let mut i = 0;
+        unsafe {
+            while i + 16 <= w {
+                let wv = _mm512_loadu_ps(wrow.as_ptr().add(i));
+                for (r, &xv) in xs.iter().enumerate() {
+                    let op = oblock.as_mut_ptr().add(r * w + i);
+                    let o = _mm512_loadu_ps(op);
+                    _mm512_storeu_ps(
+                        op,
+                        _mm512_fmadd_ps(wv, _mm512_set1_ps(xv), o));
+                }
+                i += 16;
+            }
+        }
+        while i < w {
+            for (r, &xv) in xs.iter().enumerate() {
+                oblock[r * w + i] =
+                    wrow[i].mul_add(xv, oblock[r * w + i]);
+            }
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn scale2_add(dst: &mut [f32], s1: f32, src: &[f32],
+                             s2: f32) {
+        let n = dst.len().min(src.len());
+        let mut i = 0;
+        unsafe {
+            let s1v = _mm512_set1_ps(s1);
+            let s2v = _mm512_set1_ps(s2);
+            while i + 16 <= n {
+                let d = _mm512_loadu_ps(dst.as_ptr().add(i));
+                let s = _mm512_loadu_ps(src.as_ptr().add(i));
+                let r = _mm512_fmadd_ps(s, s2v, _mm512_mul_ps(d, s1v));
+                _mm512_storeu_ps(dst.as_mut_ptr().add(i), r);
+                i += 16;
+            }
+        }
+        while i < n {
+            dst[i] = src[i].mul_add(s2, dst[i] * s1);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx512_fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
+    // SAFETY: the AVX512 table is only selectable after
+    // `avx512_supported()` detection.
+    unsafe { avx512::fma_row(orow, wrow, xv) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx512_fma_row4(orow: &mut [f32], wrows: [&[f32]; 4],
+                   xs: [f32; 4]) {
+    // SAFETY: as above.
+    unsafe { avx512::fma_row4(orow, wrows, xs) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx512_fma_row_block(oblock: &mut [f32], wrow: &[f32], xs: &[f32]) {
+    // SAFETY: as above.
+    unsafe { avx512::fma_row_block(oblock, wrow, xs) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx512_scale2_add(dst: &mut [f32], s1: f32, src: &[f32], s2: f32) {
+    // SAFETY: as above.
+    unsafe { avx512::scale2_add(dst, s1, src, s2) }
+}
+
 // ------------------------------------------------------- neon (aarch64)
 
 /// NEON implementations (two 4-lane accumulators = the same 8-lane
 /// stripe). NEON is part of the aarch64 baseline, so detection cannot
 /// fail; the `target_feature` + safe-wrapper structure mirrors AVX2 for
 /// uniformity (and for toolchains predating safe target-feature calls).
+/// Packed K/V routes through the shared [`packed`] oracle (scalar
+/// widening + `lanes8` bodies) — correct and bit-identical everywhere;
+/// a vectorized NEON widen can follow the AVX2 pattern later.
 #[cfg(target_arch = "aarch64")]
 mod neon {
     use std::arch::aarch64::*;
 
     use super::{dot_tail, reduce8, AttnRowArgs};
+    use crate::tensor::KvView;
 
     #[target_feature(enable = "neon")]
     pub unsafe fn dot8(a: &[f32], b: &[f32]) -> f32 {
@@ -683,23 +1446,112 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
+    pub unsafe fn fma_row4(orow: &mut [f32], wrows: [&[f32]; 4],
+                           xs: [f32; 4]) {
+        let n = orow.len();
+        debug_assert!(wrows.iter().all(|w| w.len() >= n));
+        let mut i = 0;
+        unsafe {
+            let x0 = vdupq_n_f32(xs[0]);
+            let x1 = vdupq_n_f32(xs[1]);
+            let x2 = vdupq_n_f32(xs[2]);
+            let x3 = vdupq_n_f32(xs[3]);
+            while i + 4 <= n {
+                let mut o = vld1q_f32(orow.as_ptr().add(i));
+                o = vfmaq_f32(o, vld1q_f32(wrows[0].as_ptr().add(i)),
+                              x0);
+                o = vfmaq_f32(o, vld1q_f32(wrows[1].as_ptr().add(i)),
+                              x1);
+                o = vfmaq_f32(o, vld1q_f32(wrows[2].as_ptr().add(i)),
+                              x2);
+                o = vfmaq_f32(o, vld1q_f32(wrows[3].as_ptr().add(i)),
+                              x3);
+                vst1q_f32(orow.as_mut_ptr().add(i), o);
+                i += 4;
+            }
+        }
+        while i < n {
+            let mut acc = orow[i];
+            acc = wrows[0][i].mul_add(xs[0], acc);
+            acc = wrows[1][i].mul_add(xs[1], acc);
+            acc = wrows[2][i].mul_add(xs[2], acc);
+            acc = wrows[3][i].mul_add(xs[3], acc);
+            orow[i] = acc;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fma_row_block(oblock: &mut [f32], wrow: &[f32],
+                                xs: &[f32]) {
+        let w = wrow.len();
+        let rows = xs.len();
+        debug_assert!(oblock.len() >= rows * w);
+        let mut i = 0;
+        unsafe {
+            while i + 4 <= w {
+                let wv = vld1q_f32(wrow.as_ptr().add(i));
+                for (r, &xv) in xs.iter().enumerate() {
+                    let op = oblock.as_mut_ptr().add(r * w + i);
+                    let o = vld1q_f32(op);
+                    vst1q_f32(op, vfmaq_f32(o, wv, vdupq_n_f32(xv)));
+                }
+                i += 4;
+            }
+        }
+        while i < w {
+            for (r, &xv) in xs.iter().enumerate() {
+                oblock[r * w + i] =
+                    wrow[i].mul_add(xv, oblock[r * w + i]);
+            }
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
     pub unsafe fn attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
                            orow: &mut [f32]) -> (f32, f32) {
+        let (ks, vs) = match (a.ks, a.vs) {
+            (KvView::F32(k), KvView::F32(v)) => (k, v),
+            _ => return super::packed::attn_row(a, scores, orow),
+        };
         let (hkv, kv, dh) = (a.hkv, a.kv, a.dh);
         let mut mx = f32::NEG_INFINITY;
         for j in 0..a.vis {
             let base = (j * hkv + kv) * dh;
-            let s = unsafe { dot8(a.qrow, &a.ks[base..base + dh]) }
+            let s = unsafe { dot8(a.qrow, &ks[base..base + dh]) }
                 * a.scale;
             scores[j] = s;
             mx = mx.max(s);
         }
         let mut li = 0f32;
-        for j in 0..a.vis {
+        let mut j = 0;
+        // V pass register-blocked by 4 rows; p/li order stays
+        // j-ascending
+        while j + 4 <= a.vis {
+            let mut ps = [0f32; 4];
+            for (t, p) in ps.iter_mut().enumerate() {
+                *p = (scores[j + t] - mx).exp();
+                li += *p;
+            }
+            let b = [((j) * hkv + kv) * dh,
+                     ((j + 1) * hkv + kv) * dh,
+                     ((j + 2) * hkv + kv) * dh,
+                     ((j + 3) * hkv + kv) * dh];
+            unsafe {
+                fma_row4(orow,
+                         [&vs[b[0]..b[0] + dh], &vs[b[1]..b[1] + dh],
+                          &vs[b[2]..b[2] + dh], &vs[b[3]..b[3] + dh]],
+                         ps)
+            };
+            j += 4;
+        }
+        while j < a.vis {
             let p = (scores[j] - mx).exp();
             li += p;
             let base = (j * hkv + kv) * dh;
-            unsafe { fma_row(orow, &a.vs[base..base + dh], p) };
+            unsafe { fma_row(orow, &vs[base..base + dh], p) };
+            j += 1;
         }
         (mx, li)
     }
@@ -748,6 +1600,18 @@ fn neon_fma_row(orow: &mut [f32], wrow: &[f32], xv: f32) {
 }
 
 #[cfg(target_arch = "aarch64")]
+fn neon_fma_row4(orow: &mut [f32], wrows: [&[f32]; 4], xs: [f32; 4]) {
+    // SAFETY: as above.
+    unsafe { neon::fma_row4(orow, wrows, xs) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_fma_row_block(oblock: &mut [f32], wrow: &[f32], xs: &[f32]) {
+    // SAFETY: as above.
+    unsafe { neon::fma_row_block(oblock, wrow, xs) }
+}
+
+#[cfg(target_arch = "aarch64")]
 fn neon_attn_row(a: &AttnRowArgs<'_>, scores: &mut [f32],
                  orow: &mut [f32]) -> (f32, f32) {
     // SAFETY: as above.
@@ -770,6 +1634,7 @@ fn neon_scale2_add(dst: &mut [f32], s1: f32, src: &[f32], s2: f32) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::{KvDtype, Tensor};
     use crate::util::rng::Rng;
 
     #[test]
@@ -781,6 +1646,8 @@ mod tests {
                    KernelSpec::Scalar);
         assert_eq!(KernelSpec::parse("lanes8").unwrap(),
                    KernelSpec::Lanes8);
+        assert_eq!(KernelSpec::parse("avx512").unwrap(),
+                   KernelSpec::Avx512);
         assert!(KernelSpec::parse("sse9").is_err());
     }
 
@@ -790,7 +1657,8 @@ mod tests {
         assert_eq!(kernels_for(KernelSpec::Lanes8).name, "lanes8");
         // Simd = explicit best-detected flavor, independent of env
         let best = kernels_for(KernelSpec::Simd);
-        assert!(["avx2", "neon", "lanes8"].contains(&best.name));
+        assert!(["avx512", "avx2", "neon", "lanes8"]
+            .contains(&best.name));
         // Auto follows the process-global flavor (MOSKA_KERNEL aware),
         // so the ci.sh A/B stages reach the backends through it
         assert!(std::ptr::eq(kernels_for(KernelSpec::Auto),
@@ -812,11 +1680,11 @@ mod tests {
 
     /// The core contract: the best-detected flavor is bit-identical to
     /// the portable `lanes8` flavor on every primitive, across ragged
-    /// lengths (tails of every residue mod 8).
+    /// lengths (tails of every residue mod 8 and mod 16).
     #[test]
     fn simd_flavors_bit_identical_to_lanes8() {
         let a = kernels_for(KernelSpec::Lanes8);
-        let b = kernels_for(KernelSpec::Simd); // may be avx2/neon/lanes8
+        let b = kernels_for(KernelSpec::Simd); // avx512/avx2/neon/lanes8
         let mut rng = Rng::new(0x51D);
         for len in [1usize, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100] {
             let mut x = vec![0f32; len];
@@ -844,6 +1712,28 @@ mod tests {
             a.div_row(&mut va, &x, 3.1);
             b.div_row(&mut vb, &x, 3.1);
             assert_eq!(va, vb, "div_row len={len}");
+
+            // fma_row4
+            let mut w = vec![vec![0f32; len]; 4];
+            for r in w.iter_mut() {
+                rng.fill_normal_f32(r);
+            }
+            let xs = [0.3f32, -1.1, 0.77, 2.5];
+            let wr = [w[0].as_slice(), w[1].as_slice(),
+                      w[2].as_slice(), w[3].as_slice()];
+            let mut qa = x.clone();
+            let mut qb = x.clone();
+            a.fma_row4(&mut qa, wr, xs);
+            b.fma_row4(&mut qb, wr, xs);
+            assert_eq!(qa, qb, "fma_row4 len={len}");
+
+            // fma_row_block (3 rows — ragged row count)
+            let xs3 = [0.5f32, -0.25, 1.5];
+            let mut ba = vec![0.1f32; 3 * len];
+            let mut bb = ba.clone();
+            a.fma_row_block(&mut ba, &y, &xs3);
+            b.fma_row_block(&mut bb, &y, &xs3);
+            assert_eq!(ba, bb, "fma_row_block len={len}");
         }
 
         // attn_row + router_cell over ragged dh and vis
@@ -859,8 +1749,8 @@ mod tests {
             for vis in [1usize, c / 2 + 1, c] {
                 let args = AttnRowArgs {
                     qrow: &q,
-                    ks: &ks,
-                    vs: &vs,
+                    ks: KvView::F32(&ks),
+                    vs: KvView::F32(&vs),
                     kv: hkv - 1,
                     hkv,
                     dh,
@@ -919,5 +1809,239 @@ mod tests {
                 .sum::<f32>();
         }
         assert_eq!(got, acc / 4.0);
+    }
+
+    /// Register blocks are bit-identical (within each flavor) to the
+    /// sequential `fma_row` calls they replace — the proof that
+    /// blocking the V pass / matmul rows never changes output.
+    #[test]
+    fn register_blocks_match_sequential_fma_rows() {
+        let mut rng = Rng::new(0xB10C);
+        for spec in
+            [KernelSpec::Scalar, KernelSpec::Lanes8, KernelSpec::Simd]
+        {
+            let k = kernels_for(spec);
+            for len in [1usize, 7, 16, 33, 64, 100] {
+                let mut o0 = vec![0f32; len];
+                rng.fill_normal_f32(&mut o0);
+                let mut w = vec![vec![0f32; len]; 4];
+                for r in w.iter_mut() {
+                    rng.fill_normal_f32(r);
+                }
+                let xs = [1.3f32, -0.4, 0.09, 2.2];
+                let wr = [w[0].as_slice(), w[1].as_slice(),
+                          w[2].as_slice(), w[3].as_slice()];
+
+                // fma_row4 vs 4 sequential fma_row
+                let mut blocked = o0.clone();
+                k.fma_row4(&mut blocked, wr, xs);
+                let mut seq = o0.clone();
+                for (wrow, &xv) in wr.iter().zip(xs.iter()) {
+                    k.fma_row(&mut seq, wrow, xv);
+                }
+                assert_eq!(blocked, seq,
+                           "fma_row4 flavor={} len={len}", k.name);
+
+                // fma_row_block vs per-row fma_row
+                let xs3 = [0.8f32, -1.6, 0.31];
+                let mut blk = vec![0.05f32; 3 * len];
+                let mut per = blk.clone();
+                k.fma_row_block(&mut blk, &w[0], &xs3);
+                for (r, &xv) in xs3.iter().enumerate() {
+                    k.fma_row(&mut per[r * len..(r + 1) * len], &w[0],
+                              xv);
+                }
+                assert_eq!(blk, per,
+                           "fma_row_block flavor={} len={len}", k.name);
+            }
+        }
+    }
+
+    /// Packed K/V attention is bit-identical across *all* flavors
+    /// (scalar included — packed rows all route through one oracle or
+    /// a provably-identical AVX2 rebuild), per dtype, over ragged
+    /// shapes.
+    #[test]
+    fn packed_attn_bit_identical_across_flavors() {
+        let flavors: Vec<&'static Kernels> =
+            [KernelSpec::Scalar, KernelSpec::Lanes8, KernelSpec::Simd]
+                .iter()
+                .map(|&s| kernels_for(s))
+                .collect();
+        let mut rng = Rng::new(0xFACC);
+        for dt in [KvDtype::F16, KvDtype::Bf16, KvDtype::I8] {
+            for &(hkv, dh, c) in
+                &[(2usize, 12usize, 5usize), (2, 16, 64), (1, 33, 7)]
+            {
+                let mut q = vec![0f32; dh];
+                let mut ks = vec![0f32; c * hkv * dh];
+                let mut vs = vec![0f32; c * hkv * dh];
+                rng.fill_normal_f32(&mut q);
+                rng.fill_normal_f32(&mut ks);
+                rng.fill_normal_f32(&mut vs);
+                let kt = Tensor::f32(&[c, hkv, dh], ks).pack_kv(dt);
+                let vt = Tensor::f32(&[c, hkv, dh], vs).pack_kv(dt);
+                for vis in [1usize, c / 2 + 1, c] {
+                    let args = AttnRowArgs {
+                        qrow: &q,
+                        ks: kt.kv_view(),
+                        vs: vt.kv_view(),
+                        kv: hkv - 1,
+                        hkv,
+                        dh,
+                        vis,
+                        scale: 1.0 / (dh as f32).sqrt(),
+                    };
+                    let mut ref_s = vec![0f32; c];
+                    let mut ref_o = vec![0f32; dh];
+                    let ref_ml = flavors[0]
+                        .attn_row(&args, &mut ref_s, &mut ref_o);
+                    for k in &flavors[1..] {
+                        let mut s = vec![0f32; c];
+                        let mut o = vec![0f32; dh];
+                        let ml = k.attn_row(&args, &mut s, &mut o);
+                        assert_eq!(ml, ref_ml,
+                                   "packed m/l {dt:?} {} vis={vis}",
+                                   k.name);
+                        assert_eq!(o, ref_o,
+                                   "packed o {dt:?} {} vis={vis}",
+                                   k.name);
+                        assert_eq!(s[..vis], ref_s[..vis],
+                                   "packed scores {dt:?} {}", k.name);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Packed attention stays close to the f32 reference — the
+    /// quantization error bound, not bit-identity (f32 uses libm exp,
+    /// packed uses the pinned polynomial).
+    #[test]
+    fn packed_attn_close_to_f32_reference() {
+        let kern = kernels_for(KernelSpec::Lanes8);
+        let mut rng = Rng::new(0xC105E);
+        let (hkv, dh, c, vis) = (2usize, 16usize, 32usize, 32usize);
+        let mut q = vec![0f32; dh];
+        let mut ks = vec![0f32; c * hkv * dh];
+        let mut vs = vec![0f32; c * hkv * dh];
+        rng.fill_normal_f32(&mut q);
+        rng.fill_normal_f32(&mut ks);
+        rng.fill_normal_f32(&mut vs);
+        let kf = Tensor::f32(&[c, hkv, dh], ks);
+        let vf = Tensor::f32(&[c, hkv, dh], vs);
+        let mut s32 = vec![0f32; c];
+        let mut o32 = vec![0f32; dh];
+        let args32 = AttnRowArgs {
+            qrow: &q,
+            ks: kf.kv_view(),
+            vs: vf.kv_view(),
+            kv: 0,
+            hkv,
+            dh,
+            vis,
+            scale: 1.0 / (dh as f32).sqrt(),
+        };
+        let (m32, l32) = kern.attn_row(&args32, &mut s32, &mut o32);
+        for (dt, tol) in [(KvDtype::F16, 2e-3f32),
+                          (KvDtype::Bf16, 2e-2),
+                          (KvDtype::I8, 4e-2)]
+        {
+            let kp = kf.pack_kv(dt);
+            let vp = vf.pack_kv(dt);
+            let argsp = AttnRowArgs {
+                qrow: &q,
+                ks: kp.kv_view(),
+                vs: vp.kv_view(),
+                kv: 0,
+                hkv,
+                dh,
+                vis,
+                scale: 1.0 / (dh as f32).sqrt(),
+            };
+            let mut sp = vec![0f32; c];
+            let mut op = vec![0f32; dh];
+            let (mp, lp) = kern.attn_row(&argsp, &mut sp, &mut op);
+            assert!((mp - m32).abs() <= tol * m32.abs().max(1.0),
+                    "{dt:?} m {mp} vs {m32}");
+            assert!((lp - l32).abs() <= tol * l32.abs().max(1.0),
+                    "{dt:?} l {lp} vs {l32}");
+            for (a, b) in op.iter().zip(&o32) {
+                assert!((a - b).abs() <= tol * b.abs().max(1.0),
+                        "{dt:?} o {a} vs {b}");
+            }
+        }
+    }
+
+    /// The pinned-polynomial exp tracks libm exp to ~2 ulp over the
+    /// softmax domain (arguments ≤ 0).
+    #[test]
+    fn exp_pinned_close_to_libm() {
+        let mut x = -87.0f32;
+        while x <= 0.0 {
+            let got = pexp::exp_pinned(x);
+            let want = x.exp();
+            let rel = (got - want).abs() / want.max(f32::MIN_POSITIVE);
+            assert!(rel <= 1e-6, "exp_pinned({x}) = {got} vs {want}");
+            x += 0.0437;
+        }
+        assert_eq!(pexp::exp_pinned(0.0), 1.0);
+        // clamped tails stay finite and positive
+        assert!(pexp::exp_pinned(-1.0e9) > 0.0);
+        assert!(pexp::exp_pinned(1.0e9).is_finite());
+    }
+
+    /// The AVX2 8-lane exp mirrors the scalar pinned exp bit for bit.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_exp8_bit_identical_to_exp_pinned() {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            return;
+        }
+        use std::arch::x86_64::*;
+        let xs: [f32; 8] =
+            [0.0, -0.5, -1.25, -7.75, -20.0, -86.9, -0.001, -13.37];
+        let mut got = [0f32; 8];
+        // SAFETY: detection checked above.
+        unsafe {
+            let v = _mm256_loadu_ps(xs.as_ptr());
+            _mm256_storeu_ps(got.as_mut_ptr(), avx2::exp8(v));
+        }
+        for (x, g) in xs.iter().zip(&got) {
+            assert_eq!(g.to_bits(), pexp::exp_pinned(*x).to_bits(),
+                       "exp8({x})");
+        }
+    }
+
+    /// The AVX-512 flavor's element-wise ops are bit-identical to
+    /// lanes8 (hence avx2) — the flavor changes vector width only.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_elementwise_bit_identical_to_lanes8() {
+        if !avx512_supported() {
+            return;
+        }
+        let a = kernels_for(KernelSpec::Lanes8);
+        let b = kernels_for(KernelSpec::Avx512);
+        assert_eq!(b.name, "avx512");
+        let mut rng = Rng::new(0x512);
+        for len in [1usize, 7, 15, 16, 17, 31, 32, 33, 100] {
+            let mut x = vec![0f32; len];
+            let mut y = vec![0f32; len];
+            rng.fill_normal_f32(&mut x);
+            rng.fill_normal_f32(&mut y);
+            let mut oa = x.clone();
+            let mut ob = x.clone();
+            a.fma_row(&mut oa, &y, -0.83);
+            b.fma_row(&mut ob, &y, -0.83);
+            assert_eq!(oa, ob, "avx512 fma_row len={len}");
+            let mut da = x.clone();
+            let mut db = x.clone();
+            a.scale2_add(&mut da, 1.1, &y, -0.6);
+            b.scale2_add(&mut db, 1.1, &y, -0.6);
+            assert_eq!(da, db, "avx512 scale2_add len={len}");
+        }
     }
 }

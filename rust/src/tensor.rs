@@ -12,6 +12,9 @@ use std::fmt;
 pub enum DType {
     F32,
     I32,
+    F16,
+    Bf16,
+    I8,
 }
 
 impl DType {
@@ -19,6 +22,9 @@ impl DType {
         match s {
             "f32" => Some(DType::F32),
             "i32" => Some(DType::I32),
+            "f16" => Some(DType::F16),
+            "bf16" => Some(DType::Bf16),
+            "i8" => Some(DType::I8),
             _ => None,
         }
     }
@@ -27,11 +33,235 @@ impl DType {
         match self {
             DType::F32 => "f32",
             DType::I32 => "i32",
+            DType::F16 => "f16",
+            DType::Bf16 => "bf16",
+            DType::I8 => "i8",
         }
     }
 
     pub fn size_bytes(&self) -> usize {
-        4
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 | DType::Bf16 => 2,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// Storage precision for shared / per-request K/V payloads (the
+/// `--kv-dtype` / `serving.kv_dtype` / `MOSKA_KV_DTYPE` knob). `F32` is
+/// the seed behavior and the default; the packed dtypes store K/V at
+/// half (`f16`, `bf16`) or quarter (`int8` + one f32 scale per token
+/// row) the bytes and are widened on the fly inside the kernel flavors
+/// (see [`crate::runtime::simd`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    #[default]
+    F32,
+    F16,
+    Bf16,
+    I8,
+}
+
+impl KvDtype {
+    pub fn from_str(s: &str) -> Option<KvDtype> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" => Some(KvDtype::F32),
+            "f16" | "half" => Some(KvDtype::F16),
+            "bf16" | "bfloat16" => Some(KvDtype::Bf16),
+            "i8" | "int8" => Some(KvDtype::I8),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Bf16 => "bf16",
+            KvDtype::I8 => "int8",
+        }
+    }
+
+    /// Stable one-byte wire/digest code (0 = f32 is the seed value and
+    /// never appears on the wire — see `docs/WIRE_PROTOCOL.md`).
+    pub fn code(&self) -> u8 {
+        match self {
+            KvDtype::F32 => 0,
+            KvDtype::F16 => 1,
+            KvDtype::Bf16 => 2,
+            KvDtype::I8 => 3,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<KvDtype> {
+        match c {
+            0 => Some(KvDtype::F32),
+            1 => Some(KvDtype::F16),
+            2 => Some(KvDtype::Bf16),
+            3 => Some(KvDtype::I8),
+            _ => None,
+        }
+    }
+
+    /// Bytes per stored element (excluding the per-row `int8` scales).
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 | KvDtype::Bf16 => 2,
+            KvDtype::I8 => 1,
+        }
+    }
+
+    /// Resident bytes for a K/V tensor of `rows` leading-index rows of
+    /// `row_elems` elements each, including `int8` per-row scales.
+    pub fn kv_bytes(&self, rows: usize, row_elems: usize) -> usize {
+        let payload = rows * row_elems * self.elem_bytes();
+        match self {
+            KvDtype::I8 => payload + rows * 4,
+            _ => payload,
+        }
+    }
+}
+
+impl fmt::Display for KvDtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+// -------------------------------------------- f16 / bf16 conversions
+
+/// f32 → IEEE binary16, round-to-nearest-even (bit-identical to the
+/// hardware `vcvtps2ph` conversion F16C performs).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf / nan (keep a nan payload bit so nan stays nan)
+        let payload =
+            if frac != 0 { 0x200 | ((frac >> 13) as u16 & 0x3ff) } else { 0 };
+        return sign | 0x7c00 | payload;
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow → signed zero
+        }
+        // subnormal: shift the (implicit-bit) mantissa down with RNE
+        let m = frac | 0x80_0000;
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rem = m & ((1u32 << shift) - 1);
+        let mut q = m >> shift;
+        if rem > half || (rem == half && (q & 1) == 1) {
+            q += 1; // may carry into the smallest normal — correct
+        }
+        return sign | q as u16;
+    }
+    let rem = frac & 0x1fff;
+    let mut q = ((e as u32) << 10) | (frac >> 13);
+    if rem > 0x1000 || (rem == 0x1000 && (q & 1) == 1) {
+        q += 1; // mantissa carry may bump the exponent (→ inf): correct
+    }
+    sign | q as u16
+}
+
+/// IEEE binary16 → f32 (exact; matches F16C `vcvtph2ps` bit-for-bit).
+#[inline(always)]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = (h as u32 & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign // signed zero
+        } else {
+            // subnormal: renormalize into the f32 exponent range
+            let mut e: i32 = 113;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((f & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13)
+    } else {
+        sign | ((exp as u32 + 112) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16, round-to-nearest-even (nan payloads quieted).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x40;
+    }
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// bfloat16 → f32 (exact: the upper half of the f32 bit pattern).
+#[inline(always)]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Borrowed view of a K/V payload in its packed storage dtype. The
+/// kernel flavors match on this to fuse widening into the hot loops
+/// (no separate dequant pass); [`KvView::get`] is the scalar widening
+/// oracle every vectorized widen path must reproduce bit-for-bit.
+#[derive(Clone, Copy)]
+pub enum KvView<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+    Bf16(&'a [u16]),
+    /// `q[i]` dequantizes as `q[i] as f32 * scales[i / row_elems]` —
+    /// one f32 scale per leading-index row (per token for K/V layouts).
+    I8 { q: &'a [i8], scales: &'a [f32], row_elems: usize },
+}
+
+impl KvView<'_> {
+    pub fn kv_dtype(&self) -> KvDtype {
+        match self {
+            KvView::F32(_) => KvDtype::F32,
+            KvView::F16(_) => KvDtype::F16,
+            KvView::Bf16(_) => KvDtype::Bf16,
+            KvView::I8 { .. } => KvDtype::I8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            KvView::F32(d) => d.len(),
+            KvView::F16(d) | KvView::Bf16(d) => d.len(),
+            KvView::I8 { q, .. } => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Widen element `i` to f32 (the scalar oracle).
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> f32 {
+        match self {
+            KvView::F32(d) => d[i],
+            KvView::F16(d) => f16_to_f32(d[i]),
+            KvView::Bf16(d) => bf16_to_f32(d[i]),
+            KvView::I8 { q, scales, row_elems } => {
+                q[i] as f32 * scales[i / row_elems]
+            }
+        }
     }
 }
 
@@ -41,11 +271,20 @@ impl fmt::Display for DType {
     }
 }
 
-/// Dense row-major tensor; payload is either f32 or i32.
+/// Dense row-major tensor; payload is f32, i32, or one of the packed
+/// K/V storage dtypes (f16 / bf16 / int8 + per-row scales). Packed
+/// variants exist only for K/V payloads — activations, weights, and
+/// partials stay f32 everywhere.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
     F32 { shape: Vec<usize>, data: Vec<f32> },
     I32 { shape: Vec<usize>, data: Vec<i32> },
+    F16 { shape: Vec<usize>, data: Vec<u16> },
+    Bf16 { shape: Vec<usize>, data: Vec<u16> },
+    /// `scales.len() == shape[0]`: one f32 scale per leading-index row
+    /// (`x ≈ q as f32 * scale`), so incremental per-token appends never
+    /// requantize earlier rows.
+    I8 { shape: Vec<usize>, data: Vec<i8>, scales: Vec<f32> },
 }
 
 impl Tensor {
@@ -78,12 +317,19 @@ impl Tensor {
         match self {
             Tensor::F32 { .. } => DType::F32,
             Tensor::I32 { .. } => DType::I32,
+            Tensor::F16 { .. } => DType::F16,
+            Tensor::Bf16 { .. } => DType::Bf16,
+            Tensor::I8 { .. } => DType::I8,
         }
     }
 
     pub fn shape(&self) -> &[usize] {
         match self {
-            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+            Tensor::F32 { shape, .. }
+            | Tensor::I32 { shape, .. }
+            | Tensor::F16 { shape, .. }
+            | Tensor::Bf16 { shape, .. }
+            | Tensor::I8 { shape, .. } => shape,
         }
     }
 
@@ -91,6 +337,10 @@ impl Tensor {
         match self {
             Tensor::F32 { data, .. } => data.len(),
             Tensor::I32 { data, .. } => data.len(),
+            Tensor::F16 { data, .. } | Tensor::Bf16 { data, .. } => {
+                data.len()
+            }
+            Tensor::I8 { data, .. } => data.len(),
         }
     }
 
@@ -101,30 +351,39 @@ impl Tensor {
     pub fn as_f32(&self) -> &[f32] {
         match self {
             Tensor::F32 { data, .. } => data,
-            Tensor::I32 { .. } => panic!("tensor is i32, expected f32"),
+            other => panic!("tensor is {}, expected f32", other.dtype()),
         }
     }
 
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         match self {
             Tensor::F32 { data, .. } => data,
-            Tensor::I32 { .. } => panic!("tensor is i32, expected f32"),
+            other => panic!("tensor is {}, expected f32", other.dtype()),
         }
     }
 
     pub fn as_i32(&self) -> &[i32] {
         match self {
             Tensor::I32 { data, .. } => data,
-            Tensor::F32 { .. } => panic!("tensor is f32, expected i32"),
+            other => panic!("tensor is {}, expected i32", other.dtype()),
         }
     }
 
-    /// Reinterpret with a new shape of identical element count.
+    /// Reinterpret with a new shape of identical element count. Packed
+    /// `int8` tensors additionally require an unchanged leading dim
+    /// (the per-row scales are keyed on it).
     pub fn reshaped(mut self, shape: &[usize]) -> Tensor {
         let n: usize = shape.iter().product();
         assert_eq!(n, self.len(), "reshape {:?} -> {:?}", self.shape(), shape);
+        if let Tensor::I8 { shape: s, .. } = &self {
+            assert_eq!(s[0], shape[0], "int8 reshape must keep rows");
+        }
         match &mut self {
-            Tensor::F32 { shape: s, .. } | Tensor::I32 { shape: s, .. } => {
+            Tensor::F32 { shape: s, .. }
+            | Tensor::I32 { shape: s, .. }
+            | Tensor::F16 { shape: s, .. }
+            | Tensor::Bf16 { shape: s, .. }
+            | Tensor::I8 { shape: s, .. } => {
                 *s = shape.to_vec();
             }
         }
@@ -176,7 +435,276 @@ impl Tensor {
     pub fn into_f32(self) -> Vec<f32> {
         match self {
             Tensor::F32 { data, .. } => data,
-            Tensor::I32 { .. } => panic!("tensor is i32, expected f32"),
+            other => panic!("tensor is {}, expected f32", other.dtype()),
+        }
+    }
+
+    // --------------------------------------------- packed K/V payloads
+
+    /// Whether this tensor stores a packed (non-f32) K/V payload.
+    pub fn is_packed(&self) -> bool {
+        matches!(self,
+                 Tensor::F16 { .. } | Tensor::Bf16 { .. }
+                 | Tensor::I8 { .. })
+    }
+
+    /// The K/V storage dtype of this tensor (f32 counts as unpacked).
+    pub fn kv_dtype(&self) -> KvDtype {
+        match self {
+            Tensor::F32 { .. } => KvDtype::F32,
+            Tensor::F16 { .. } => KvDtype::F16,
+            Tensor::Bf16 { .. } => KvDtype::Bf16,
+            Tensor::I8 { .. } => KvDtype::I8,
+            Tensor::I32 { .. } => panic!("i32 tensor has no kv dtype"),
+        }
+    }
+
+    /// Borrowed packed-payload view for the widening kernels.
+    pub fn kv_view(&self) -> KvView<'_> {
+        match self {
+            Tensor::F32 { data, .. } => KvView::F32(data),
+            Tensor::F16 { data, .. } => KvView::F16(data),
+            Tensor::Bf16 { data, .. } => KvView::Bf16(data),
+            Tensor::I8 { shape, data, scales } => KvView::I8 {
+                q: data,
+                scales,
+                row_elems: shape[1..].iter().product(),
+            },
+            Tensor::I32 { .. } => panic!("i32 tensor has no kv view"),
+        }
+    }
+
+    /// Elements per leading-index row (`prod(shape[1..])`).
+    pub fn row_elems(&self) -> usize {
+        self.shape()[1..].iter().product()
+    }
+
+    /// Quantize one f32 row to int8: symmetric per-row max-abs scale.
+    fn quant_row_i8(src: &[f32], out: &mut [i8]) -> f32 {
+        let mx = src.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        if mx == 0.0 || !mx.is_finite() {
+            out.fill(0);
+            return 0.0;
+        }
+        let scale = mx / 127.0;
+        let inv = 127.0 / mx;
+        for (o, &x) in out.iter_mut().zip(src) {
+            *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+        scale
+    }
+
+    /// Pack an f32 K/V tensor into `dt` storage. `F32` returns a clone;
+    /// packing an already-packed tensor is only allowed when the dtype
+    /// matches (also a clone).
+    pub fn pack_kv(&self, dt: KvDtype) -> Tensor {
+        if self.kv_dtype() == dt {
+            return self.clone();
+        }
+        let src = self.as_f32(); // panics if packed with a different dt
+        let shape = self.shape().to_vec();
+        match dt {
+            KvDtype::F32 => self.clone(),
+            KvDtype::F16 => Tensor::F16 {
+                shape,
+                data: src.iter().map(|&x| f32_to_f16(x)).collect(),
+            },
+            KvDtype::Bf16 => Tensor::Bf16 {
+                shape,
+                data: src.iter().map(|&x| f32_to_bf16(x)).collect(),
+            },
+            KvDtype::I8 => {
+                let rows = shape[0];
+                let w: usize = shape[1..].iter().product();
+                let mut data = vec![0i8; rows * w];
+                let mut scales = vec![0f32; rows];
+                for r in 0..rows {
+                    scales[r] = Tensor::quant_row_i8(
+                        &src[r * w..(r + 1) * w],
+                        &mut data[r * w..(r + 1) * w],
+                    );
+                }
+                Tensor::I8 { shape, data, scales }
+            }
+        }
+    }
+
+    /// Widen a packed K/V tensor back to f32 (clone when already f32).
+    /// Element-for-element identical to [`KvView::get`].
+    pub fn widen_to_f32(&self) -> Tensor {
+        match self {
+            Tensor::F32 { .. } => self.clone(),
+            Tensor::F16 { shape, data } => Tensor::F32 {
+                shape: shape.clone(),
+                data: data.iter().map(|&h| f16_to_f32(h)).collect(),
+            },
+            Tensor::Bf16 { shape, data } => Tensor::F32 {
+                shape: shape.clone(),
+                data: data.iter().map(|&h| bf16_to_f32(h)).collect(),
+            },
+            Tensor::I8 { shape, data, scales } => {
+                let w: usize = shape[1..].iter().product();
+                let mut out = vec![0f32; data.len()];
+                for (r, &s) in scales.iter().enumerate() {
+                    for j in 0..w {
+                        out[r * w + j] = data[r * w + j] as f32 * s;
+                    }
+                }
+                Tensor::F32 { shape: shape.clone(), data: out }
+            }
+            Tensor::I32 { .. } => panic!("i32 tensor has no kv widening"),
+        }
+    }
+
+    /// Overwrite leading-index row `row` with f32 data, packing on the
+    /// fly (the paged-KV decode append). For `int8` the row's scale is
+    /// recomputed from this row alone — earlier rows are untouched.
+    pub fn write_kv_row(&mut self, row: usize, src: &[f32]) {
+        let w: usize = self.shape()[1..].iter().product();
+        assert_eq!(src.len(), w, "write_kv_row width");
+        let at = row * w;
+        match self {
+            Tensor::F32 { data, .. } => {
+                data[at..at + w].copy_from_slice(src);
+            }
+            Tensor::F16 { data, .. } => {
+                for (o, &x) in data[at..at + w].iter_mut().zip(src) {
+                    *o = f32_to_f16(x);
+                }
+            }
+            Tensor::Bf16 { data, .. } => {
+                for (o, &x) in data[at..at + w].iter_mut().zip(src) {
+                    *o = f32_to_bf16(x);
+                }
+            }
+            Tensor::I8 { data, scales, .. } => {
+                scales[row] =
+                    Tensor::quant_row_i8(src, &mut data[at..at + w]);
+            }
+            Tensor::I32 { .. } => panic!("write_kv_row on i32"),
+        }
+    }
+
+    /// Zero-filled K/V tensor in `dt` storage (paged-KV page payloads).
+    pub fn zeros_kv(shape: &[usize], dt: KvDtype) -> Tensor {
+        let n: usize = shape.iter().product();
+        match dt {
+            KvDtype::F32 => Tensor::zeros_f32(shape),
+            KvDtype::F16 => {
+                Tensor::F16 { shape: shape.to_vec(), data: vec![0; n] }
+            }
+            KvDtype::Bf16 => {
+                Tensor::Bf16 { shape: shape.to_vec(), data: vec![0; n] }
+            }
+            KvDtype::I8 => Tensor::I8 {
+                shape: shape.to_vec(),
+                data: vec![0; n],
+                scales: vec![0.0; shape[0]],
+            },
+        }
+    }
+
+    /// Dtype-preserving concat along axis 0 (K/V run coalescing). All
+    /// parts must share the storage dtype and tail shape.
+    pub fn concat0_kv(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        if let Tensor::F32 { .. } = parts[0] {
+            return Tensor::concat0(parts);
+        }
+        let tail = &parts[0].shape()[1..];
+        let mut rows = 0;
+        for p in parts {
+            assert_eq!(&p.shape()[1..], tail, "concat0_kv tail mismatch");
+            assert_eq!(p.kv_dtype(), parts[0].kv_dtype(),
+                       "concat0_kv dtype mismatch");
+            rows += p.shape()[0];
+        }
+        let mut shape = vec![rows];
+        shape.extend_from_slice(tail);
+        match parts[0] {
+            Tensor::F16 { .. } => {
+                let mut data = Vec::with_capacity(
+                    rows * tail.iter().product::<usize>());
+                for p in parts {
+                    if let Tensor::F16 { data: d, .. } = p {
+                        data.extend_from_slice(d);
+                    } else {
+                        unreachable!()
+                    }
+                }
+                Tensor::F16 { shape, data }
+            }
+            Tensor::Bf16 { .. } => {
+                let mut data = Vec::with_capacity(
+                    rows * tail.iter().product::<usize>());
+                for p in parts {
+                    if let Tensor::Bf16 { data: d, .. } = p {
+                        data.extend_from_slice(d);
+                    } else {
+                        unreachable!()
+                    }
+                }
+                Tensor::Bf16 { shape, data }
+            }
+            Tensor::I8 { .. } => {
+                let mut data = Vec::with_capacity(
+                    rows * tail.iter().product::<usize>());
+                let mut scales = Vec::with_capacity(rows);
+                for p in parts {
+                    if let Tensor::I8 { data: d, scales: s, .. } = p {
+                        data.extend_from_slice(d);
+                        scales.extend_from_slice(s);
+                    } else {
+                        unreachable!()
+                    }
+                }
+                Tensor::I8 { shape, data, scales }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Resident payload bytes in the storage dtype (incl. i8 scales).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len() * 4,
+            Tensor::I32 { data, .. } => data.len() * 4,
+            Tensor::F16 { data, .. } | Tensor::Bf16 { data, .. } => {
+                data.len() * 2
+            }
+            Tensor::I8 { data, scales, .. } => {
+                data.len() + scales.len() * 4
+            }
+        }
+    }
+
+    /// Append the canonical little-endian byte serialization of the
+    /// K/V payload to `out` (digest / content-hash input). For `F32`
+    /// this is exactly the seed's `as_f32 → to_le_bytes` stream, so
+    /// f32 digests are unchanged; packed dtypes hash the packed
+    /// payload (plus `int8` scales) — the bits the node actually
+    /// serves, not a widened copy.
+    pub fn kv_le_bytes(&self, out: &mut Vec<u8>) {
+        match self {
+            Tensor::F32 { data, .. } => {
+                for &x in data {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Tensor::F16 { data, .. } | Tensor::Bf16 { data, .. } => {
+                for &h in data {
+                    out.extend_from_slice(&h.to_le_bytes());
+                }
+            }
+            Tensor::I8 { data, scales, .. } => {
+                for &q in data {
+                    out.push(q as u8);
+                }
+                for &s in scales {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+            }
+            Tensor::I32 { .. } => panic!("kv_le_bytes on i32"),
         }
     }
 
@@ -239,5 +767,176 @@ mod tests {
         let a = Tensor::f32(&[2], vec![f32::NEG_INFINITY, 1.0]);
         let b = Tensor::f32(&[2], vec![f32::NEG_INFINITY, 1.5]);
         assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn f16_conversion_exact_on_representables() {
+        // values exactly representable in binary16 round-trip bit-exact
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 1.5, 65504.0,
+                    -65504.0, 6.103515625e-5, 5.960464477539063e-8] {
+            let h = f32_to_f16(x);
+            assert_eq!(f16_to_f32(h).to_bits(), x.to_bits(), "x={x}");
+        }
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // overflow saturates to inf
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY);
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1 + 2^-10:
+        // RNE picks the even mantissa (1.0)
+        let x = f32::from_bits(0x3f80_1000); // 1 + 2^-11 exactly
+        assert_eq!(f32_to_f16(x), f32_to_f16(1.0));
+        // just above the midpoint rounds up
+        let y = f32::from_bits(0x3f80_1001);
+        assert_eq!(f16_to_f32(f32_to_f16(y)), 1.0 + 2.0f32.powi(-10));
+    }
+
+    #[test]
+    fn bf16_conversion_truncation_and_rne() {
+        for &x in &[0.0f32, 1.0, -2.5, 3.0e38, 1.0e-38] {
+            let h = f32_to_bf16(x);
+            let w = bf16_to_f32(h);
+            // bf16 keeps the exponent: relative error ≤ 2^-7 (the
+            // subnormal case loses one mantissa bit of headroom)
+            if x != 0.0 {
+                assert!(((w - x) / x).abs() <= 1.0 / 128.0, "x={x} w={w}");
+            } else {
+                assert_eq!(w, 0.0);
+            }
+        }
+        // halfway case: 1 + 2^-8 is midway between 1.0 and 1 + 2^-7
+        let x = f32::from_bits(0x3f80_8000);
+        assert_eq!(f32_to_bf16(x), f32_to_bf16(1.0)); // even
+    }
+
+    #[test]
+    fn pack_widen_roundtrip_bounds() {
+        let data: Vec<f32> =
+            (0..64).map(|i| ((i as f32) - 31.5) * 0.37).collect();
+        let t = Tensor::f32(&[4, 16], data.clone());
+        for dt in [KvDtype::F16, KvDtype::Bf16, KvDtype::I8] {
+            let p = t.pack_kv(dt);
+            assert_eq!(p.kv_dtype(), dt);
+            assert_eq!(p.shape(), t.shape());
+            let w = p.widen_to_f32();
+            let rel = match dt {
+                KvDtype::F16 => 1.0 / 1024.0,
+                KvDtype::Bf16 => 1.0 / 128.0,
+                KvDtype::I8 => 1.0 / 127.0,
+                KvDtype::F32 => 0.0,
+            };
+            for (a, b) in data.iter().zip(w.as_f32()) {
+                let tol = a.abs().max(12.0) * rel; // i8 scale is row-max
+                assert!((a - b).abs() <= tol, "{dt}: {a} vs {b}");
+            }
+        }
+        // f32 pack is the identity
+        assert_eq!(t.pack_kv(KvDtype::F32), t);
+    }
+
+    #[test]
+    fn kv_view_get_matches_widen() {
+        let data: Vec<f32> = (0..24).map(|i| (i as f32) * -0.73).collect();
+        let t = Tensor::f32(&[3, 2, 4], data);
+        for dt in [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::I8]
+        {
+            let p = t.pack_kv(dt);
+            let w = p.widen_to_f32();
+            let view = p.kv_view();
+            assert_eq!(view.kv_dtype(), dt);
+            for i in 0..p.len() {
+                assert_eq!(view.get(i).to_bits(),
+                           w.as_f32()[i].to_bits(),
+                           "{dt} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_kv_row_matches_pack() {
+        let mut rowdata = vec![0f32; 8];
+        for (i, x) in rowdata.iter_mut().enumerate() {
+            *x = (i as f32) * 0.21 - 0.7;
+        }
+        let full = Tensor::f32(&[3, 8],
+                               [&rowdata[..], &rowdata[..], &rowdata[..]]
+                                   .concat());
+        for dt in [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::I8]
+        {
+            let want = full.pack_kv(dt);
+            let mut got = Tensor::zeros_kv(&[3, 8], dt);
+            for r in 0..3 {
+                got.write_kv_row(r, &rowdata);
+            }
+            assert_eq!(got, want, "{dt}");
+        }
+    }
+
+    #[test]
+    fn concat0_kv_preserves_dtype_and_scales() {
+        let a = Tensor::f32(&[2, 4], (0..8).map(|x| x as f32).collect());
+        let b = Tensor::f32(&[1, 4], vec![9., -3., 0.5, 2.0]);
+        for dt in [KvDtype::F16, KvDtype::Bf16, KvDtype::I8] {
+            let pa = a.pack_kv(dt);
+            let pb = b.pack_kv(dt);
+            let cat = Tensor::concat0_kv(&[&pa, &pb]);
+            assert_eq!(cat.kv_dtype(), dt);
+            assert_eq!(cat.shape(), &[3, 4]);
+            let want =
+                Tensor::concat0(&[&pa.widen_to_f32(), &pb.widen_to_f32()]);
+            assert_eq!(cat.widen_to_f32(), want, "{dt}");
+        }
+    }
+
+    #[test]
+    fn i8_zero_row_has_zero_scale() {
+        let t = Tensor::f32(&[2, 4],
+                            vec![0., 0., 0., 0., 1., -2., 3., -4.]);
+        let p = t.pack_kv(KvDtype::I8);
+        if let Tensor::I8 { scales, .. } = &p {
+            assert_eq!(scales[0], 0.0);
+            assert!(scales[1] > 0.0);
+        } else {
+            panic!("not i8");
+        }
+        assert_eq!(p.widen_to_f32().as_f32()[..4], [0.0; 4]);
+    }
+
+    #[test]
+    fn payload_bytes_and_kv_bytes_agree() {
+        let t = Tensor::f32(&[4, 6], vec![1.0; 24]);
+        for dt in [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::I8]
+        {
+            let p = t.pack_kv(dt);
+            assert_eq!(p.payload_bytes(), dt.kv_bytes(4, 6), "{dt}");
+        }
+        assert_eq!(KvDtype::F16.kv_bytes(4, 6), KvDtype::F32.kv_bytes(4, 6) / 2);
+    }
+
+    #[test]
+    fn kv_dtype_codes_roundtrip() {
+        for dt in [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::I8]
+        {
+            assert_eq!(KvDtype::from_code(dt.code()), Some(dt));
+            assert_eq!(KvDtype::from_str(dt.as_str()), Some(dt));
+        }
+        assert_eq!(KvDtype::from_code(9), None);
+        assert_eq!(KvDtype::from_str("fp4"), None);
+    }
+
+    #[test]
+    fn kv_le_bytes_f32_matches_seed_stream() {
+        let t = Tensor::f32(&[2, 2], vec![1.0, -2.0, 0.5, 3.25]);
+        let mut got = Vec::new();
+        t.kv_le_bytes(&mut got);
+        let want: Vec<u8> = t
+            .as_f32()
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect();
+        assert_eq!(got, want);
     }
 }

@@ -68,11 +68,22 @@ fn remote_decode_bit_identical_to_local() {
         RemoteFabric::connect(&addr.to_string(), test_cfg()).unwrap();
     let doms = vec![SYNTH_DOMAIN.to_string()];
     assert!(
-        fabric.check_store(SYNTH_CHUNK, &doms, 0).is_err(),
+        fabric
+            .check_store(SYNTH_CHUNK, &doms, 0,
+                         moska::tensor::KvDtype::F32)
+            .is_err(),
         "a content-mismatched store must be refused at connect",
     );
+    assert!(
+        fabric
+            .check_store(SYNTH_CHUNK, &doms, shared.content_digest(),
+                         moska::tensor::KvDtype::F16)
+            .is_err(),
+        "a dtype-mismatched store must be refused at connect",
+    );
     fabric
-        .check_store(SYNTH_CHUNK, &doms, shared.content_digest())
+        .check_store(SYNTH_CHUNK, &doms, shared.content_digest(),
+                     moska::tensor::KvDtype::F32)
         .unwrap();
     let mut remote = DisaggCluster::with_fabric(
         native_be(), Box::new(fabric), synthetic_weights(),
@@ -190,6 +201,7 @@ fn flaky_one_shot_server() -> std::net::SocketAddr {
                             chunk: SYNTH_CHUNK,
                             domains: vec![SYNTH_DOMAIN.into()],
                             digest: 7,
+                            kv_dtype: moska::tensor::KvDtype::F32,
                         });
                         if s.write_all(&codec::frame_bytes(&ack)).is_err() {
                             break;

@@ -271,6 +271,7 @@ fn flaky_shard_with(domain: &'static str, fill: f32)
                             chunk: SYNTH_CHUNK,
                             domains: vec![domain.to_string()],
                             digest: 7,
+                            kv_dtype: moska::tensor::KvDtype::F32,
                         });
                         if s.write_all(&codec::frame_bytes(&ack)).is_err()
                         {
@@ -281,6 +282,7 @@ fn flaky_shard_with(domain: &'static str, fill: f32)
                         let reply = WireMsg::SyncState(StoreSync {
                             chunk: SYNTH_CHUNK,
                             digest: 7,
+                            kv_dtype: moska::tensor::KvDtype::F32,
                             domains: vec![state.clone()],
                         });
                         if s.write_all(&codec::frame_bytes(&reply))

@@ -24,7 +24,7 @@ use moska::model::Weights;
 use moska::runtime::native::{self, Partials};
 use moska::runtime::{kernels_for, Backend, KernelSpec, Kernels,
                      NativeBackend};
-use moska::tensor::Tensor;
+use moska::tensor::{KvDtype, Tensor};
 use moska::util::rng::Rng;
 use moska::util::threadpool::ThreadPool;
 
@@ -269,6 +269,129 @@ fn engine_tokens_identical_across_flavors_and_threads() {
                "scalar vs lanes8 tokens");
     assert_eq!(base, decode_tokens(KernelSpec::Simd, 3),
                "simd serial vs pooled tokens");
+}
+
+/// Pack→widen roundtrip error is bounded per storage dtype, across
+/// ragged shapes. f32 packing is the identity (bit-for-bit); f16/bf16
+/// obey round-to-nearest-even half-ulp bounds; int8 stays within half
+/// its per-token-row scale.
+#[test]
+fn pack_widen_roundtrip_bounded_per_dtype() {
+    let mut rng = Rng::new(0xBAC0);
+    for round in 0..8 {
+        let rows = 1 + rng.below(40) as usize;
+        let hkv = 1 + rng.below(3) as usize;
+        let dh = 5 + rng.below(40) as usize;
+        let t = rand_t(&mut rng, &[rows, hkv, dh]);
+        let xs = t.as_f32().to_vec();
+
+        let p32 = t.pack_kv(KvDtype::F32);
+        assert!(!p32.is_packed());
+        assert_eq!(p32.widen_to_f32().as_f32(), &xs[..],
+                   "f32 pack round {round} is not the identity");
+
+        // RNE conversions: |err| <= half-ulp (relative) + a tiny
+        // absolute term for the f16 subnormal range
+        for (dt, rel, abs) in [(KvDtype::F16, 4.883e-4f32, 1e-7f32),
+                               (KvDtype::Bf16, 2.5e-3, 1e-30)] {
+            let w = t.pack_kv(dt).widen_to_f32();
+            for (i, (&a, &b)) in
+                xs.iter().zip(w.as_f32()).enumerate()
+            {
+                assert!((a - b).abs() <= a.abs() * rel + abs,
+                        "{dt} round {round} elem {i}: {a} -> {b}");
+            }
+        }
+
+        // int8: q = round(x * 127/rowmax), widened as q * rowmax/127
+        let w = t.pack_kv(KvDtype::I8).widen_to_f32();
+        let ws = w.as_f32();
+        let row = hkv * dh;
+        for r in 0..rows {
+            let rmax = xs[r * row..(r + 1) * row]
+                .iter()
+                .fold(0f32, |m, &v| m.max(v.abs()));
+            let bound = 0.51 * rmax / 127.0;
+            for j in 0..row {
+                let (a, b) = (xs[r * row + j], ws[r * row + j]);
+                assert!((a - b).abs() <= bound,
+                        "int8 round {round} row {r} elem {j}: \
+                         {a} -> {b} (rowmax {rmax})");
+            }
+        }
+    }
+}
+
+/// Packed-K/V chunk attention is bit-identical across every kernel
+/// flavor (the vectorized widen paths must reproduce the scalar
+/// widening oracle exactly), on ragged shapes, serial and pooled.
+#[test]
+fn packed_widening_bit_identical_across_flavors() {
+    let scalar = kernels_for(KernelSpec::Scalar);
+    let lanes8 = kernels_for(KernelSpec::Lanes8);
+    let simd = kernels_for(KernelSpec::Simd);
+    let mut rng = Rng::new(0xFACC2);
+    let pool = ThreadPool::new(3);
+    for round in 0..4 {
+        let bsz = 1 + rng.below(4) as usize;
+        let hkv = 1 + rng.below(2) as usize;
+        let h = hkv * (1 + rng.below(3) as usize);
+        let dh = 9 + rng.below(40) as usize;
+        let c = 17 + rng.below(90) as usize;
+        let q = rand_t(&mut rng, &[bsz, h, dh]);
+        let kf = rand_t(&mut rng, &[c, hkv, dh]);
+        let vf = rand_t(&mut rng, &[c, hkv, dh]);
+        let q_pos: Vec<i32> =
+            (0..bsz).map(|_| rng.below(2 * c as u64) as i32 - 3).collect();
+        let valid = 1 + rng.below(c as u64) as i32;
+        for dt in [KvDtype::F16, KvDtype::Bf16, KvDtype::I8] {
+            let k = kf.pack_kv(dt);
+            let v = vf.pack_kv(dt);
+            for pool_opt in [None, Some(&pool)] {
+                let ps = native::chunk_attn_exec_kern(
+                    &q, &k, &v, &q_pos, 2, valid, pool_opt, scalar,
+                );
+                for flavor in [lanes8, simd] {
+                    let pf = native::chunk_attn_exec_kern(
+                        &q, &k, &v, &q_pos, 2, valid, pool_opt, flavor,
+                    );
+                    assert_eq!(ps.o, pf.o,
+                               "{dt} o round {round} [{}]", flavor.name);
+                    assert_eq!(ps.m, pf.m, "{dt} m round {round}");
+                    assert_eq!(ps.l, pf.l, "{dt} l round {round}");
+                }
+            }
+        }
+    }
+}
+
+/// Store digests are a pure function of (content, storage dtype):
+/// stable across rebuilds, unchanged by f32 packing (wire compat with
+/// pre-dtype deployments), and distinct per packed dtype — the digest
+/// handshake must catch mixed-dtype deployments.
+#[test]
+fn store_digest_stable_per_dtype() {
+    let base = synthetic_store().expect("store");
+    for dt in [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::I8] {
+        let pack = |_: usize| {
+            let mut s = synthetic_store().expect("store");
+            s.pack_to(dt);
+            s
+        };
+        let (a, b) = (pack(0), pack(1));
+        assert_eq!(a.content_digest(), b.content_digest(),
+                   "{dt} digest not stable across rebuilds");
+        assert_eq!(a.kv_dtype, dt);
+        if dt == KvDtype::F32 {
+            assert_eq!(a.content_digest(), base.content_digest(),
+                       "f32 packing must not perturb the seed digest");
+        } else {
+            assert_ne!(a.content_digest(), base.content_digest(),
+                       "{dt} digest must differ from the f32 digest");
+        }
+        assert!(a.resident_bytes() <= base.resident_bytes(),
+                "{dt} packing grew the store");
+    }
 }
 
 /// Same property on the disagg cluster (both nodes on one flavor),

@@ -10,7 +10,7 @@ use moska::remote::codec::{frame_bytes, read_frame, CodecError,
                            CODEC_VERSION};
 use moska::router::ChunkSet;
 use moska::runtime::native::Partials;
-use moska::tensor::Tensor;
+use moska::tensor::{KvDtype, Tensor};
 use moska::util::prop::{check, Case, Config};
 use moska::util::rng::Rng;
 
@@ -125,6 +125,7 @@ fn rand_msg(rng: &mut Rng) -> WireMsg {
         3 => WireMsg::SyncState(StoreSync {
             chunk: 8,
             digest: rng.next_u64(),
+            kv_dtype: KvDtype::from_code(rng.below(4) as u8).unwrap(),
             domains: (0..rng.below(4))
                 .map(|_| rand_planner_state(rng))
                 .collect(),

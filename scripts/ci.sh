@@ -122,6 +122,78 @@ scalar|simd|lanes8 and thread counts"
 fi
 
 if [ "$RUN_BENCH" = "1" ]; then
+    echo "== kv-dtype matrix smoke =="
+    # the precision layer's serving gate: under f32 — default, env
+    # (MOSKA_KV_DTYPE), or CLI (--kv-dtype) — the synthetic disagg
+    # token JSON is bit-identical to the seed run; f16/bf16 may round
+    # differently but must pass the bounded token-divergence gate
+    # (same stream structure, at most half the token positions differ
+    # — greedy flips cascade, so the gate exists to catch crashes,
+    # empty output, and catastrophic widening bugs); int8 must decode.
+    if cargo build --release --bin moska; then
+        BIN=target/release/moska
+        mkdir -p bench_out
+        DT_OK=1
+        "$BIN" disagg --synthetic --batches 2,4 --steps 4 --threads 1 \
+            --emit-tokens bench_out/tokens_dt_seed.json || DT_OK=0
+        MOSKA_KV_DTYPE=f32 "$BIN" disagg --synthetic --batches 2,4 \
+            --steps 4 --threads 1 \
+            --emit-tokens bench_out/tokens_dt_f32env.json || DT_OK=0
+        "$BIN" disagg --synthetic --batches 2,4 --steps 4 --threads 1 \
+            --kv-dtype f32 \
+            --emit-tokens bench_out/tokens_dt_f32cli.json || DT_OK=0
+        if [ "$DT_OK" = "1" ] \
+           && cmp -s bench_out/tokens_dt_seed.json \
+                     bench_out/tokens_dt_f32env.json \
+           && cmp -s bench_out/tokens_dt_seed.json \
+                     bench_out/tokens_dt_f32cli.json; then
+            echo "kv-dtype smoke: f32 (default|env|CLI) bit-identical"
+        else
+            echo "error: f32 kv-dtype run diverged from the seed run" >&2
+            FAIL=1
+        fi
+        for DT in f16 bf16 int8; do
+            if ! "$BIN" disagg --synthetic --batches 2,4 --steps 4 \
+                     --threads 1 --kv-dtype "$DT" \
+                     --emit-tokens "bench_out/tokens_dt_$DT.json"; then
+                echo "error: --kv-dtype $DT run failed" >&2
+                FAIL=1
+                continue
+            fi
+            # int8 quantization may legitimately diverge further; its
+            # gate is decode-completes (plus the tier-1 property tests)
+            [ "$DT" = "int8" ] && continue
+            grep -oE '\-?[0-9]+' bench_out/tokens_dt_seed.json \
+                > bench_out/dt_seed.toks
+            grep -oE '\-?[0-9]+' "bench_out/tokens_dt_$DT.json" \
+                > "bench_out/dt_$DT.toks"
+            N=$(wc -l < bench_out/dt_seed.toks | tr -d ' ')
+            M=$(wc -l < "bench_out/dt_$DT.toks" | tr -d ' ')
+            if [ "$N" != "$M" ] || [ "$N" -eq 0 ]; then
+                echo "error: $DT token stream structure diverged \
+($M vs $N values)" >&2
+                FAIL=1
+                continue
+            fi
+            DIFFS=$(paste bench_out/dt_seed.toks \
+                          "bench_out/dt_$DT.toks" \
+                    | awk '$1 != $2 { d++ } END { print d + 0 }')
+            if [ $((DIFFS * 2)) -le "$N" ]; then
+                echo "kv-dtype smoke: $DT diverged at $DIFFS/$N token \
+positions (within the 50% gate)"
+            else
+                echo "error: $DT diverged at $DIFFS/$N token positions \
+(> 50%)" >&2
+                FAIL=1
+            fi
+        done
+    else
+        echo "error: release build for the kv-dtype smoke failed" >&2
+        FAIL=1
+    fi
+fi
+
+if [ "$RUN_BENCH" = "1" ]; then
     echo "== remote-node loopback smoke =="
     # spawn a real `moska shared-node` process on an ephemeral loopback
     # port, run the same short synthetic disagg decode in-process and
