@@ -93,6 +93,10 @@ struct NativeRun {
     /// Shared-store resident bytes as stored (the `store_resident_bytes`
     /// gauge — packed dtypes count their encoded size).
     store_resident_bytes: f64,
+    /// Completed-request lifecycle means (the engine's tracker):
+    /// time-to-first-token and per-output-token decode time.
+    mean_ttft_s: f64,
+    mean_tpot_s: f64,
 }
 
 /// Run the decode workload at a thread count, kernel flavor, and K/V
@@ -127,6 +131,8 @@ fn run_native(threads: usize, kernel: KernelSpec, n_req: usize,
             .metrics
             .gauge_value("store_resident_bytes")
             .unwrap_or(0.0),
+        mean_ttft_s: eng.lifecycle.mean_ttft_secs(),
+        mean_tpot_s: eng.lifecycle.mean_tpot_secs(),
     }
 }
 
@@ -385,6 +391,10 @@ fn native_bench() {
         // the engine's store gauges at the serving default (f32)
         ("store_resident_bytes", Json::num(par.store_resident_bytes)),
         ("store_dtype", Json::str(KvDtype::F32.as_str())),
+        // request lifecycle (parallel run): TTFT and per-token decode
+        // time, the serving-latency half of the trajectory
+        ("mean_ttft_s", Json::num(par.mean_ttft_s)),
+        ("mean_tpot_s", Json::num(par.mean_tpot_s)),
     ];
     let mut entries: Vec<(&str, Json)> = static_entries;
     entries.extend(kernel_entries);

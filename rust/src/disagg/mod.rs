@@ -544,6 +544,7 @@ impl DisaggCluster {
     pub fn step(&mut self, reqs: &mut [SimRequest]) -> Result<()> {
         let cfg = self.backend.model().clone();
         let b = reqs.len();
+        let _step_g = crate::span!("decode.step", "disagg", "b" => b);
         let tokens = Tensor::i32(&[b], reqs.iter().map(|r| r.cur).collect());
         let pos: Vec<i32> = reqs.iter().map(|r| r.pos).collect();
         let chunk = self.backend.chunk_size();
@@ -591,6 +592,8 @@ impl DisaggCluster {
         };
 
         for layer in 0..cfg.n_layers {
+            let _layer_g = crate::span!("layer", "disagg",
+                                        "layer" => layer);
             let lw = self.weights.layer(layer);
             let (q, k, v) = self.backend.qkv(
                 &x, lw.attn_norm, lw.wq, lw.wk, lw.wv, &pos,
@@ -710,7 +713,11 @@ impl DisaggCluster {
             // (each batch row belongs to exactly one domain group, so
             // its partial merges exactly once — group iteration order
             // does not change any row's floating-point math)
-            let replies = self.fabric.collect()?;
+            let replies = {
+                let _g = crate::span!("fabric.collect", "transport",
+                                      "layer" => layer);
+                self.fabric.collect()?
+            };
             validate_replies(&replies, plans, cfg.n_heads, cfg.head_dim)?;
             for (plan, reply) in plans.iter().zip(&replies) {
                 for (j, &row) in plan.rows.iter().enumerate() {
@@ -1059,6 +1066,13 @@ pub fn run_sim(args: &Args) -> Result<()> {
     let remote = args.get("remote").unwrap_or("").to_string();
     let shards_arg = args.get("shards").unwrap_or("").to_string();
     let synthetic = args.flag("synthetic");
+    // span tracing (`--trace out.json`): recording starts before the
+    // fabric connects so the handshake clock-offset bracketing and
+    // every decode step land in the export
+    let trace_path = args.get("trace").unwrap_or("").to_string();
+    if !trace_path.is_empty() {
+        crate::trace::enable();
+    }
     let emit_tokens = args.get("emit-tokens").unwrap_or("").to_string();
     let domains_arg = args.get("domains").unwrap_or("").to_string();
     // pinned node digests: the client holds no shared K/V on the remote
@@ -1345,7 +1359,8 @@ pub fn run_sim(args: &Args) -> Result<()> {
         // a domain losing every replica surfaces HERE, per request —
         // the run itself completes (exit 0) with the survivors' tokens
         for (row, err) in &p.errors {
-            eprintln!("request error: batch {b} row {row}: {err}");
+            crate::errorlog!("disagg",
+                             "request error: batch {b} row {row}: {err}");
         }
         let mut point = vec![
             ("batch", Json::num(b as f64)),
@@ -1420,6 +1435,10 @@ pub fn run_sim(args: &Args) -> Result<()> {
         }
         std::fs::write(&emit_tokens, j.to_string())?;
         println!("[tokens] wrote {emit_tokens}");
+    }
+    if !trace_path.is_empty() {
+        crate::trace::export_json(&trace_path)?;
+        println!("[trace] wrote {trace_path}");
     }
     Ok(())
 }

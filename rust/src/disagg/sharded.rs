@@ -454,6 +454,19 @@ impl SharedFabric for ShardedFabric {
         anyhow::ensure!(self.order.is_empty(),
                         "fabric already has an in-flight request");
         self.probe_down_shards();
+        let sp = crate::span!("fabric.submit", "transport",
+                              "layer" => layer,
+                              "groups" => groups.len());
+        // one trace context per submission: every shard's frames carry
+        // the same parent, and each replica echoes its exec window back
+        let trace = if crate::trace::enabled() {
+            Some(codec::TraceCtx {
+                trace_id: crate::trace::trace_id(),
+                parent_span: sp.id(),
+            })
+        } else {
+            None
+        };
         // route + encode ALL groups first: a routing failure (domain
         // with no surviving replica) must surface before any shard
         // holds a partial batch
@@ -465,7 +478,8 @@ impl SharedFabric for ShardedFabric {
             let s = Self::pick(&self.route, &self.health,
                                &mut self.cursors, &plan.domain)?;
             let t0 = Instant::now();
-            let frame = codec::frame_exec_shared(layer, q, plan);
+            let frame =
+                codec::frame_exec_shared(layer, q, plan, trace.as_ref());
             if let Some(st) = self.shards[s].1.stats() {
                 st.serialize_ns.fetch_add(
                     t0.elapsed().as_nanos() as u64, Ordering::Relaxed,

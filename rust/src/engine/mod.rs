@@ -42,8 +42,8 @@ use crate::model::Weights;
 use crate::router::{ChunkSet, Router};
 use crate::runtime::arena::{ArenaStats, TensorArena};
 use crate::runtime::Backend;
-use crate::scheduler::{Admit, AdmissionController, Demand, SloTracker,
-                       StepScheduler};
+use crate::scheduler::{Admit, AdmissionController, Demand, Lifecycle,
+                       LifecycleTracker, SloTracker, StepScheduler};
 use crate::tensor::Tensor;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
@@ -105,6 +105,9 @@ pub struct Engine {
     pub sched: StepScheduler,
     pub admission: AdmissionController,
     pub slo: SloTracker,
+    /// Completed-request lifecycle means (queue / TTFT / TPOT) — the
+    /// serving snapshot and bench reports read these directly.
+    pub lifecycle: LifecycleTracker,
     pub cfg: ServingConfig,
     pub metrics: Metrics,
     pub capture_logits: bool,
@@ -142,6 +145,7 @@ impl Engine {
             sched: StepScheduler::new(cfg.max_batch),
             admission: AdmissionController::new(1024),
             slo: SloTracker::new(cfg.slo_tokens_per_sec),
+            lifecycle: LifecycleTracker::new(),
             backend,
             weights,
             shared,
@@ -275,12 +279,23 @@ impl Engine {
                 self.pending.remove(&id).context("pending missing")?;
             let t0 = Instant::now();
             let queue_secs = (t0 - submitted).as_secs_f64();
+            let _g = crate::span!("prefill", "engine", "id" => id,
+                                  "prompt" => req.prompt.len());
             let live = self.prefill(req)?;
             let mut live = live;
             live.queue_secs = queue_secs;
             live.prefill_secs = t0.elapsed().as_secs_f64();
             self.metrics
                 .observe_ns("prefill_ns", t0.elapsed().as_nanos() as u64);
+            // request lifecycle: time spent queued, and time to first
+            // token (prefill samples the first token at its end, so
+            // TTFT = queue + prefill)
+            self.metrics
+                .observe_ns("req_queue_ns", (queue_secs * 1e9) as u64);
+            self.metrics.observe_ns(
+                "req_ttft_ns",
+                ((queue_secs + live.prefill_secs) * 1e9) as u64,
+            );
             self.live.insert(id, live);
         }
         if self.live.is_empty() {
@@ -465,11 +480,23 @@ impl Engine {
         );
         let pos: Vec<i32> = order.iter().map(|id| self.live[id].pos).collect();
 
-        // phase timers: where does the decode step go? (§Perf)
+        let _step_g = crate::span!("decode.step", "engine", "b" => b);
+
+        // phase timers: where does the decode step go? (§Perf) — each
+        // phase boundary also lands a trace span when tracing is on,
+        // timed explicitly so the guard-free closure stays FnMut
         let mut t_phase = Instant::now();
-        let mut phase = |m: &Metrics, name: &str| {
+        let mut t_phase_ns = crate::trace::now_ns();
+        let mut phase = |m: &Metrics, name: &'static str| {
             let now = Instant::now();
-            m.observe_ns(name, (now - t_phase).as_nanos() as u64);
+            let dur = (now - t_phase).as_nanos() as u64;
+            m.observe_ns(name, dur);
+            if crate::trace::enabled() {
+                crate::trace::record(name.trim_end_matches("_ns"),
+                                     "engine", t_phase_ns, dur,
+                                     Vec::new());
+                t_phase_ns = crate::trace::now_ns();
+            }
             t_phase = now;
         };
 
@@ -609,6 +636,21 @@ impl Engine {
                 .decode_t0
                 .map(|t| t.elapsed().as_secs_f64())
                 .unwrap_or(0.0);
+            // lifecycle: decode wall time and mean time-per-output-token
+            // (the first token came from prefill, hence n-1)
+            self.metrics
+                .observe_ns("req_decode_ns", (decode_secs * 1e9) as u64);
+            let lc = Lifecycle {
+                queue_secs: l.queue_secs,
+                prefill_secs: l.prefill_secs,
+                decode_secs,
+                tokens: l.generated.len(),
+            };
+            if let Some(tpot) = lc.tpot_secs() {
+                self.metrics
+                    .observe_ns("req_tpot_ns", (tpot * 1e9) as u64);
+            }
+            self.lifecycle.record(&lc);
             self.results.push(RequestResult {
                 id: *id,
                 tokens: l.generated,

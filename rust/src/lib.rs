@@ -34,6 +34,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

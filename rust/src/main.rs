@@ -75,6 +75,8 @@ fn cmd_serve(argv: &[String]) -> moska::Result<()> {
              "K/V storage dtype: auto | f32 | f16 | bf16 | int8 (MOSKA_KV_DTYPE)")
         .opt("max-batch", "32", "max decode batch")
         .opt("config", "", "JSON config file (flags override it)")
+        .opt("trace", "",
+             "write a Chrome-trace span timeline here (flushed every 5s)")
         .parse_from(argv)?;
     moska::server::run_server(&args)
 }
@@ -132,6 +134,9 @@ fn cmd_disagg(argv: &[String]) -> moska::Result<()> {
               (printed by every remote run; refuses a diverged store)")
         .opt("emit-tokens", "",
              "write greedy token streams to this JSON (bit-compare runs)")
+        .opt("trace", "",
+             "write a Chrome-trace span timeline here at exit (client \
+              spans + echoed shared-node spans, one trace id)")
         .flag("synthetic",
               "synthetic weights + online-registered domains (no artifacts)")
         .parse_from(argv)?;
@@ -154,6 +159,8 @@ fn cmd_shared_node(argv: &[String]) -> moska::Result<()> {
         .opt("drain-ms", "5000",
              "SIGTERM/SIGINT: max wait for in-flight plans before \
               force-closing connections (then exit 0)")
+        .opt("trace", "",
+             "write a Chrome-trace span timeline here on shutdown")
         .flag("synthetic",
               "serve the synthetic bench store (no artifacts)")
         .parse_from(argv)?;

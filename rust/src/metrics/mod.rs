@@ -1,20 +1,39 @@
 //! Runtime metrics: counters, gauges, nanosecond histograms, MFU/BW
 //! utilization estimators for the disaggregated nodes (paper Fig 5).
 //!
-//! Lock-free-ish (one mutex per registry; hot-path increments are cheap
-//! relative to PJRT calls). The HTTP server exposes a JSON snapshot at
-//! `/stats`; the disagg sim samples per-node instances every step.
+//! Two access paths share one registry:
+//!
+//! * **String-keyed** (`count`/`gauge`/`observe_ns`) — ergonomic, pays a
+//!   registry lock + map lookup per call. Fine for once-per-step sites.
+//! * **Handle-based** (`counter_handle`/`gauge_handle`/
+//!   `histogram_handle`) — pre-register once, then every update is a
+//!   single relaxed atomic op on a shared cell. This is the decode
+//!   hot-path contract: no `String` allocation, no `Mutex` in
+//!   steady state.
+//!
+//! The HTTP server exposes a JSON snapshot at `/stats` and a Prometheus
+//! text exposition at `/metrics` ([`Metrics::prometheus_text`]); the
+//! disagg sim samples per-node instances every step.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::util::json::Json;
 
-/// Log-bucketed latency histogram (ns), 64 power-of-two buckets.
+/// Sub-buckets per power of two (log-linear histogram resolution).
+/// 8 sub-buckets bound the relative bucket width to `1/8 = 12.5%`,
+/// and within-bucket interpolation tightens the quantile estimate
+/// further — versus up to 2x error for pure power-of-two edges.
+const HIST_SUB: usize = 8;
+/// Values below `HIST_SUB` get one exact bucket each.
+const HIST_BUCKETS: usize = HIST_SUB + (64 - HIST_SUB.trailing_zeros() as usize) * HIST_SUB;
+
+/// Log-linear latency histogram (ns): exact buckets below 8, then 8
+/// sub-buckets per power of two across the full `u64` range.
 #[derive(Debug)]
 pub struct Histogram {
-    buckets: [AtomicU64; 64],
+    buckets: Box<[AtomicU64; HIST_BUCKETS]>,
     sum_ns: AtomicU64,
     count: AtomicU64,
 }
@@ -22,23 +41,50 @@ pub struct Histogram {
 impl Default for Histogram {
     fn default() -> Histogram {
         Histogram {
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            buckets: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
             sum_ns: AtomicU64::new(0),
             count: AtomicU64::new(0),
         }
     }
 }
 
+/// Bucket index for a value (see [`Histogram`] layout).
+fn bucket_index(ns: u64) -> usize {
+    if ns < HIST_SUB as u64 {
+        return ns as usize;
+    }
+    let e = 63 - ns.leading_zeros() as usize; // floor(log2), >= 3
+    let shift = e - HIST_SUB.trailing_zeros() as usize; // e - 3
+    let sub = ((ns >> shift) as usize) & (HIST_SUB - 1);
+    HIST_SUB + (e - HIST_SUB.trailing_zeros() as usize) * HIST_SUB + sub
+}
+
+/// Inclusive value range `[lo, hi]` a bucket index covers.
+fn bucket_bounds(idx: usize) -> (u64, u64) {
+    if idx < HIST_SUB {
+        return (idx as u64, idx as u64);
+    }
+    let rel = idx - HIST_SUB;
+    let shift = rel / HIST_SUB; // e - log2(HIST_SUB)
+    let sub = (rel % HIST_SUB) as u64;
+    let lo = (HIST_SUB as u64 + sub) << shift;
+    let width = 1u64 << shift;
+    (lo, lo + (width - 1))
+}
+
 impl Histogram {
     pub fn observe_ns(&self, ns: u64) {
-        let b = (64 - ns.max(1).leading_zeros() as usize).min(63);
-        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
     }
 
     pub fn mean_ns(&self) -> f64 {
@@ -50,30 +96,97 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from the log buckets (upper bucket edge).
+    /// Approximate quantile from the log-linear buckets with linear
+    /// interpolation inside the landing bucket. Error is bounded by the
+    /// bucket width (≤ 12.5% of the value).
     pub fn quantile_ns(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
         }
-        let target = ((total as f64) * q).ceil() as u64;
-        let mut seen = 0;
+        let target = ((total as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << i;
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
             }
+            if seen + c >= target {
+                let (lo, hi) = bucket_bounds(i);
+                // interpolate rank position within the bucket
+                let within = (target - seen) as f64 / c as f64;
+                return lo + ((hi - lo) as f64 * within).round() as u64;
+            }
+            seen += c;
         }
         u64::MAX
+    }
+
+    /// Non-empty buckets as `(upper_edge, count)` pairs, ascending —
+    /// the Prometheus `_bucket` rendering source.
+    pub fn bucket_counts(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                (c > 0).then(|| (bucket_bounds(i).1, c))
+            })
+            .collect()
+    }
+}
+
+/// Pre-registered counter: one relaxed `fetch_add` per update.
+#[derive(Debug, Clone)]
+pub struct CounterHandle(Arc<AtomicU64>);
+
+impl CounterHandle {
+    #[inline]
+    pub fn inc(&self, delta: u64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Pre-registered gauge: one relaxed `store` per update (f64 bits).
+#[derive(Debug, Clone)]
+pub struct GaugeHandle(Arc<AtomicU64>);
+
+impl GaugeHandle {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Pre-registered histogram: three relaxed atomic ops per observation.
+#[derive(Debug, Clone)]
+pub struct HistogramHandle(Arc<Histogram>);
+
+impl HistogramHandle {
+    #[inline]
+    pub fn observe_ns(&self, ns: u64) {
+        self.0.observe_ns(ns);
+    }
+
+    pub fn histogram(&self) -> &Histogram {
+        &self.0
     }
 }
 
 /// Named counters + gauges + histograms.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, u64>>,
-    gauges: Mutex<BTreeMap<String, f64>>,
-    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
 impl Metrics {
@@ -81,34 +194,88 @@ impl Metrics {
         Metrics::default()
     }
 
+    fn counter_cell(&self, name: &str) -> Arc<AtomicU64> {
+        let mut cs = self.counters.lock().unwrap();
+        match cs.get(name) {
+            Some(c) => c.clone(),
+            None => {
+                let c = Arc::new(AtomicU64::new(0));
+                cs.insert(name.to_string(), c.clone());
+                c
+            }
+        }
+    }
+
+    fn gauge_cell(&self, name: &str) -> Arc<AtomicU64> {
+        let mut gs = self.gauges.lock().unwrap();
+        match gs.get(name) {
+            Some(g) => g.clone(),
+            None => {
+                let g = Arc::new(AtomicU64::new(0f64.to_bits()));
+                gs.insert(name.to_string(), g.clone());
+                g
+            }
+        }
+    }
+
+    fn histogram_cell(&self, name: &str) -> Arc<Histogram> {
+        let mut hs = self.histograms.lock().unwrap();
+        match hs.get(name) {
+            Some(h) => h.clone(),
+            None => {
+                let h = Arc::new(Histogram::default());
+                hs.insert(name.to_string(), h.clone());
+                h
+            }
+        }
+    }
+
+    /// Pre-register a counter; updates through the handle skip the
+    /// registry entirely.
+    pub fn counter_handle(&self, name: &str) -> CounterHandle {
+        CounterHandle(self.counter_cell(name))
+    }
+
+    /// Pre-register a gauge (atomic f64 bits).
+    pub fn gauge_handle(&self, name: &str) -> GaugeHandle {
+        GaugeHandle(self.gauge_cell(name))
+    }
+
+    /// Pre-register a histogram.
+    pub fn histogram_handle(&self, name: &str) -> HistogramHandle {
+        HistogramHandle(self.histogram_cell(name))
+    }
+
     pub fn count(&self, name: &str, delta: u64) {
-        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) +=
-            delta;
+        self.counter_cell(name).fetch_add(delta, Ordering::Relaxed);
     }
 
     pub fn gauge(&self, name: &str, v: f64) {
-        self.gauges.lock().unwrap().insert(name.to_string(), v);
+        self.gauge_cell(name).store(v.to_bits(), Ordering::Relaxed);
     }
 
     pub fn observe_ns(&self, name: &str, ns: u64) {
-        let h = {
-            let mut hs = self.histograms.lock().unwrap();
-            hs.entry(name.to_string())
-                .or_insert_with(|| std::sync::Arc::new(Histogram::default()))
-                .clone()
-        };
-        h.observe_ns(ns);
+        self.histogram_cell(name).observe_ns(ns);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     pub fn gauge_value(&self, name: &str) -> Option<f64> {
-        self.gauges.lock().unwrap().get(name).copied()
+        self.gauges
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|g| f64::from_bits(g.load(Ordering::Relaxed)))
     }
 
-    pub fn histogram(&self, name: &str) -> Option<std::sync::Arc<Histogram>> {
+    pub fn histogram(&self, name: &str) -> Option<Arc<Histogram>> {
         self.histograms.lock().unwrap().get(name).cloned()
     }
 
@@ -120,12 +287,15 @@ impl Metrics {
         let mut obj = BTreeMap::new();
         let mut cs = BTreeMap::new();
         for (k, v) in counters.iter() {
-            cs.insert(k.clone(), Json::num(*v as f64));
+            cs.insert(k.clone(), Json::num(v.load(Ordering::Relaxed) as f64));
         }
         obj.insert("counters".to_string(), Json::Obj(cs));
         let mut gs = BTreeMap::new();
         for (k, v) in gauges.iter() {
-            gs.insert(k.clone(), Json::num(*v));
+            gs.insert(
+                k.clone(),
+                Json::num(f64::from_bits(v.load(Ordering::Relaxed))),
+            );
         }
         obj.insert("gauges".to_string(), Json::Obj(gs));
         let mut hj = BTreeMap::new();
@@ -142,6 +312,73 @@ impl Metrics {
         }
         obj.insert("histograms".to_string(), Json::Obj(hj));
         Json::Obj(obj)
+    }
+
+    /// Prometheus text exposition (format 0.0.4) of every registered
+    /// metric. Names are sanitized (`[^a-zA-Z0-9_:]` → `_`) and
+    /// prefixed `moska_`; histograms render cumulative `_bucket{le=..}`
+    /// series from the non-empty log-linear buckets plus `_sum`/`_count`.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let counters = self.counters.lock().unwrap();
+        for (k, v) in counters.iter() {
+            let name = prometheus_name(k);
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {}\n", v.load(Ordering::Relaxed)));
+        }
+        drop(counters);
+        let gauges = self.gauges.lock().unwrap();
+        for (k, v) in gauges.iter() {
+            let name = prometheus_name(k);
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!(
+                "{name} {}\n",
+                fmt_f64(f64::from_bits(v.load(Ordering::Relaxed)))
+            ));
+        }
+        drop(gauges);
+        let hs = self.histograms.lock().unwrap();
+        for (k, h) in hs.iter() {
+            let name = prometheus_name(k);
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (edge, c) in h.bucket_counts() {
+                cum += c;
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{edge}\"}} {cum}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"+Inf\"}} {}\n",
+                h.count()
+            ));
+            out.push_str(&format!("{name}_sum {}\n", h.sum_ns()));
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+        }
+        out
+    }
+}
+
+/// Sanitize a metric name for Prometheus: `moska_` prefix and every
+/// character outside `[a-zA-Z0-9_:]` replaced with `_`.
+pub fn prometheus_name(raw: &str) -> String {
+    let mut s = String::with_capacity(raw.len() + 6);
+    s.push_str("moska_");
+    for ch in raw.chars() {
+        if ch.is_ascii_alphanumeric() || ch == '_' || ch == ':' {
+            s.push(ch);
+        } else {
+            s.push('_');
+        }
+    }
+    s
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
     }
 }
 
@@ -201,6 +438,27 @@ mod tests {
     }
 
     #[test]
+    fn handles_share_cells_with_string_api() {
+        let m = Metrics::new();
+        let c = m.counter_handle("hot");
+        c.inc(4);
+        m.count("hot", 1);
+        assert_eq!(m.counter("hot"), 5);
+        assert_eq!(c.get(), 5);
+
+        let g = m.gauge_handle("level");
+        g.set(2.25);
+        assert_eq!(m.gauge_value("level"), Some(2.25));
+        m.gauge("level", 3.5);
+        assert_eq!(g.get(), 3.5);
+
+        let h = m.histogram_handle("lat");
+        h.observe_ns(100);
+        m.observe_ns("lat", 300);
+        assert_eq!(m.histogram("lat").unwrap().count(), 2);
+    }
+
+    #[test]
     fn histogram_quantiles() {
         let h = Histogram::default();
         for i in 0..1000u64 {
@@ -212,6 +470,49 @@ mod tests {
         assert!(p50 >= 256 && p50 <= 1024, "p50 {p50}");
     }
 
+    /// Satellite regression: log-linear sub-buckets + interpolation pin
+    /// the quantile error well under the old power-of-two 2x bound.
+    #[test]
+    fn histogram_quantile_error_bounds() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.observe_ns(i);
+        }
+        let p50 = h.quantile_ns(0.5) as f64;
+        let p99 = h.quantile_ns(0.99) as f64;
+        assert!((p50 - 500.0).abs() / 500.0 < 0.15, "p50 {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.15, "p99 {p99}");
+
+        // exact small-value buckets
+        let h2 = Histogram::default();
+        for _ in 0..10 {
+            h2.observe_ns(5);
+        }
+        assert_eq!(h2.quantile_ns(0.5), 5);
+
+        // single large value lands inside its (narrow) bucket
+        let h3 = Histogram::default();
+        h3.observe_ns(1_000_000);
+        let p = h3.quantile_ns(0.5) as f64;
+        assert!((p - 1_000_000.0).abs() / 1_000_000.0 < 0.13, "p {p}");
+    }
+
+    #[test]
+    fn histogram_bucket_layout_is_sound() {
+        // every value maps into a bucket whose bounds contain it, and
+        // bucket indexes are monotone in the value
+        let mut prev_idx = 0usize;
+        for v in [0u64, 1, 7, 8, 9, 15, 16, 100, 1023, 1024, 1_000_000,
+                  u64::MAX / 2, u64::MAX] {
+            let idx = bucket_index(v);
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(lo <= v && v <= hi, "v={v} idx={idx} lo={lo} hi={hi}");
+            assert!(idx >= prev_idx, "monotone at v={v}");
+            prev_idx = idx;
+        }
+        assert!(bucket_index(u64::MAX) < HIST_BUCKETS);
+    }
+
     #[test]
     fn snapshot_json() {
         let m = Metrics::new();
@@ -220,6 +521,54 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.get("counters").unwrap().get("a").unwrap().as_i64().unwrap(), 1);
         assert!(s.get("histograms").unwrap().get("lat").is_ok());
+    }
+
+    #[test]
+    fn prometheus_exposition_renders_all_kinds() {
+        let m = Metrics::new();
+        m.count("requests_submitted", 3);
+        m.gauge("live_batch", 4.0);
+        m.observe_ns("decode_step_ns", 1000);
+        m.observe_ns("decode_step_ns", 2000);
+        let text = m.prometheus_text();
+        assert!(text.contains("# TYPE moska_requests_submitted counter"));
+        assert!(text.contains("moska_requests_submitted 3"));
+        assert!(text.contains("# TYPE moska_live_batch gauge"));
+        assert!(text.contains("moska_live_batch 4"));
+        assert!(text.contains("# TYPE moska_decode_step_ns histogram"));
+        assert!(text.contains("moska_decode_step_ns_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("moska_decode_step_ns_sum 3000"));
+        assert!(text.contains("moska_decode_step_ns_count 2"));
+    }
+
+    #[test]
+    fn prometheus_name_sanitization() {
+        assert_eq!(prometheus_name("a.b c-d"), "moska_a_b_c_d");
+        assert_eq!(prometheus_name("ok_name:x9"), "moska_ok_name:x9");
+    }
+
+    #[test]
+    fn prometheus_buckets_are_cumulative() {
+        let m = Metrics::new();
+        for v in [10u64, 100, 1000, 10_000] {
+            m.observe_ns("lat", v);
+        }
+        let text = m.prometheus_text();
+        // collect the cumulative counts in order of appearance
+        let mut last = 0u64;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("moska_lat_bucket{le=") {
+                let c: u64 = rest
+                    .rsplit(' ')
+                    .next()
+                    .unwrap()
+                    .parse()
+                    .unwrap();
+                assert!(c >= last, "non-monotone: {line}");
+                last = c;
+            }
+        }
+        assert_eq!(last, 4);
     }
 
     #[test]

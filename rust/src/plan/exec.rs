@@ -84,16 +84,24 @@ pub fn execute_plan(backend: &dyn Backend, plan: &StepPlan, x: Tensor,
 
     let metrics = ctx.metrics;
     let mut t_phase = Instant::now();
-    let mut phase = |name: &str| {
+    let mut t_phase_ns = crate::trace::now_ns();
+    let mut phase = |name: &'static str| {
         let now = Instant::now();
+        let dur = (now - t_phase).as_nanos() as u64;
         if let Some(m) = metrics {
-            m.observe_ns(name, (now - t_phase).as_nanos() as u64);
+            m.observe_ns(name, dur);
+        }
+        if crate::trace::enabled() {
+            crate::trace::record(name.trim_end_matches("_ns"), "exec",
+                                 t_phase_ns, dur, Vec::new());
+            t_phase_ns = crate::trace::now_ns();
         }
         t_phase = now;
     };
 
     let mut layer0 = ctx.layer0_qkv.take();
     for layer in 0..model.n_layers {
+        let _layer_g = crate::span!("layer", "exec", "layer" => layer);
         let lw = ctx.weights.layer(layer);
         let (q, k, v) = match layer0.take() {
             Some(qkv) if layer == 0 => qkv,
@@ -115,6 +123,13 @@ pub fn execute_plan(backend: &dyn Backend, plan: &StepPlan, x: Tensor,
         // ---- shared path: planned GEMM groups (re-routed live per layer
         // only when the plan says so)
         for group in &plan.shared_groups {
+            let _g = crate::span!("shared.group", "exec",
+                "domain" => group.domain.as_str(),
+                "rows" => group.rows.len(),
+                "calls" => group.calls.len(),
+                "pairs" => group.pairs,
+                "kernel" => backend.kernels().name,
+                "dtype" => ctx.shared.kv_dtype.code() as u64);
             let dom = ctx.shared.domain(&group.domain)?;
             let n = group.rows.len();
             let qs = gather_rows(&mut *ctx.arena, &q, &group.rows, h, dh);
@@ -157,6 +172,9 @@ pub fn execute_plan(backend: &dyn Backend, plan: &StepPlan, x: Tensor,
         for i in 0..b {
             qrs.push(gather_rows(&mut *ctx.arena, &q, &[i], h, dh));
         }
+        let uniq_g = crate::span!("unique.attn", "exec", "b" => b,
+                                  "work" => plan.unique_work,
+                                  "kernel" => backend.kernels().name);
         let fanout = backend.exec_pool().filter(|tp| {
             tp.threads() > 1 && b > 1 && plan.unique_work >= PAR_MIN_WORK
         });
@@ -201,6 +219,7 @@ pub fn execute_plan(backend: &dyn Backend, plan: &StepPlan, x: Tensor,
                 }
             }
         }
+        drop(uniq_g);
         for t in qrs {
             ctx.arena.recycle(t);
         }

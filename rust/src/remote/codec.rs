@@ -49,7 +49,14 @@ use crate::tensor::{DType, KvDtype, Tensor};
 /// * v4 — `HelloAck` and `SyncState` advertise the node's K/V storage
 ///   dtype ([`KvDtype`] code byte); mismatched deployments refuse at
 ///   connect instead of silently comparing digests across dtypes.
-pub const CODEC_VERSION: u16 = 4;
+/// * v5 — distributed tracing: `ExecShared` carries an optional trace
+///   context (presence byte + trace id + parent span id), `Partials`
+///   echoes the server's exec span timings (node-monotonic ns) plus the
+///   request's trace id, and `HelloAck` reports the node's monotonic
+///   clock (`server_now_ns`) so the client can compute the NTP-style
+///   handshake clock offset that stitches both timelines into one
+///   Chrome-trace export (see `docs/OBSERVABILITY.md`).
+pub const CODEC_VERSION: u16 = 5;
 
 /// Frame magic: `"MoSK"` as a little-endian u32.
 pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"MoSK");
@@ -249,6 +256,31 @@ pub struct HelloAck {
     /// content at different dtypes have different digests — the dtype
     /// byte names the mismatch instead of leaving an opaque digest diff.
     pub kv_dtype: KvDtype,
+    /// The node's monotonic clock at ack time, ns since its trace epoch
+    /// (v5). The client brackets the handshake on its own clock and
+    /// derives the NTP-style midpoint offset that maps echoed server
+    /// span timestamps onto the client timeline.
+    pub server_now_ns: u64,
+}
+
+/// Trace context riding an `ExecShared` frame (v5): the client's trace
+/// id plus the id of the span that emitted the frame. `None` (a zero
+/// presence byte on the wire) when the client is not tracing — the
+/// untraced frame layout stays one byte longer than v4, nothing more.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub parent_span: u64,
+}
+
+/// One server-side span echoed in a `Partials` reply (v5). Timestamps
+/// are ns on the *server's* monotonic clock; the client offset-corrects
+/// them (see [`HelloAck::server_now_ns`]) before recording.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerSpan {
+    pub name: String,
+    pub start_ns: u64,
+    pub dur_ns: u64,
 }
 
 /// One layer's plan-execution request (the fabric's unit of work).
@@ -257,6 +289,8 @@ pub struct ExecSharedReq {
     pub layer: usize,
     pub q: Tensor,
     pub plan: SharedGroupPlan,
+    /// v5 trace context; execution is bit-identical with or without it.
+    pub trace: Option<TraceCtx>,
 }
 
 /// The shared node's full planner-state snapshot, returned for a
@@ -303,8 +337,15 @@ pub enum WireMsg {
     HelloAck(HelloAck),
     /// Client → server: execute one layer of a [`SharedGroupPlan`].
     ExecShared(ExecSharedReq),
-    /// Server → client: per-row attention partials + node execution ns.
-    Partials { parts: Vec<Partials>, exec_ns: u64 },
+    /// Server → client: per-row attention partials + node execution ns,
+    /// plus (v5) the echoed trace id and server-side span timings for a
+    /// traced request (`trace_id == 0` and empty `spans` otherwise).
+    Partials {
+        parts: Vec<Partials>,
+        exec_ns: u64,
+        trace_id: u64,
+        spans: Vec<ServerSpan>,
+    },
     /// Server → client: request-level failure (connection stays open)
     /// or protocol-level failure (connection closes after this).
     Error(String),
@@ -505,15 +546,24 @@ pub fn encode_payload(msg: &WireMsg) -> Vec<u8> {
             for d in &h.domains {
                 e.str(d);
             }
+            e.u64(h.server_now_ns);
         }
         WireMsg::ExecShared(r) => {
-            exec_shared_payload(&mut e, r.layer, &r.q, &r.plan);
+            exec_shared_payload(&mut e, r.layer, &r.q, &r.plan,
+                                r.trace.as_ref());
         }
-        WireMsg::Partials { parts, exec_ns } => {
+        WireMsg::Partials { parts, exec_ns, trace_id, spans } => {
             e.u64(*exec_ns);
             e.u32(parts.len() as u32);
             for p in parts {
                 e.partials(p);
+            }
+            e.u64(*trace_id);
+            e.u32(spans.len() as u32);
+            for s in spans {
+                e.str(&s.name);
+                e.u64(s.start_ns);
+                e.u64(s.dur_ns);
             }
         }
         WireMsg::Error(s) => e.str(s),
@@ -548,19 +598,27 @@ pub fn frame_bytes(msg: &WireMsg) -> Vec<u8> {
 /// [`encode_payload`] and [`frame_exec_shared`] so the two encoders
 /// cannot drift.
 fn exec_shared_payload(e: &mut Enc, layer: usize, q: &Tensor,
-                       plan: &SharedGroupPlan) {
+                       plan: &SharedGroupPlan, trace: Option<&TraceCtx>) {
     e.u32(layer as u32);
     e.tensor(q);
     e.shared_group_plan(plan);
+    match trace {
+        None => e.u8(0),
+        Some(t) => {
+            e.u8(1);
+            e.u64(t.trace_id);
+            e.u64(t.parent_span);
+        }
+    }
 }
 
 /// Encode an `ExecShared` frame straight from borrowed parts — the hot
 /// per-layer path, avoiding a clone of the query tensor into a
 /// [`WireMsg`].
-pub fn frame_exec_shared(layer: usize, q: &Tensor, plan: &SharedGroupPlan)
-                         -> Vec<u8> {
+pub fn frame_exec_shared(layer: usize, q: &Tensor, plan: &SharedGroupPlan,
+                         trace: Option<&TraceCtx>) -> Vec<u8> {
     let mut e = Enc::new();
-    exec_shared_payload(&mut e, layer, q, plan);
+    exec_shared_payload(&mut e, layer, q, plan, trace);
     frame_payload(MsgKind::ExecShared, &e.buf)
 }
 
@@ -879,13 +937,28 @@ pub fn decode_payload(kind: MsgKind, payload: &[u8])
             for _ in 0..n {
                 domains.push(d.str()?);
             }
-            WireMsg::HelloAck(HelloAck { chunk, domains, digest, kv_dtype })
+            let server_now_ns = d.u64()?;
+            WireMsg::HelloAck(HelloAck { chunk, domains, digest, kv_dtype,
+                                         server_now_ns })
         }
         MsgKind::ExecShared => {
             let layer = d.u32()? as usize;
             let q = d.tensor()?;
             let plan = d.shared_group_plan()?;
-            WireMsg::ExecShared(ExecSharedReq { layer, q, plan })
+            let trace = match d.u8()? {
+                0 => None,
+                1 => Some(TraceCtx {
+                    trace_id: d.u64()?,
+                    parent_span: d.u64()?,
+                }),
+                t => {
+                    return Err(CodecError::BadTag {
+                        what: "trace ctx flag",
+                        tag: t as u32,
+                    })
+                }
+            };
+            WireMsg::ExecShared(ExecSharedReq { layer, q, plan, trace })
         }
         MsgKind::Partials => {
             let exec_ns = d.u64()?;
@@ -897,7 +970,22 @@ pub fn decode_payload(kind: MsgKind, payload: &[u8])
             for _ in 0..n {
                 parts.push(d.partials()?);
             }
-            WireMsg::Partials { parts, exec_ns }
+            let trace_id = d.u64()?;
+            let n_spans = d.u32()? as usize;
+            // each span is ≥ 20 bytes on the wire (name len + two u64s)
+            if n_spans.saturating_mul(20) > payload.len() {
+                return Err(CodecError::Truncated);
+            }
+            let mut spans =
+                Vec::with_capacity(n_spans.min(MAX_EAGER_RESERVE));
+            for _ in 0..n_spans {
+                spans.push(ServerSpan {
+                    name: d.str()?,
+                    start_ns: d.u64()?,
+                    dur_ns: d.u64()?,
+                });
+            }
+            WireMsg::Partials { parts, exec_ns, trace_id, spans }
         }
         MsgKind::Error => WireMsg::Error(d.str()?),
         MsgKind::StepPlan => WireMsg::StepPlan(d.step_plan()?),
@@ -1018,6 +1106,7 @@ mod tests {
             layer: 1,
             q,
             plan: sample_plan(),
+            trace: None,
         });
         let bytes = frame_bytes(&msg);
         let (back, n) =
@@ -1027,15 +1116,48 @@ mod tests {
     }
 
     #[test]
+    fn exec_shared_trace_ctx_roundtrip() {
+        let q = Tensor::f32(&[1, 4, 2], (0..8).map(|x| x as f32).collect());
+        let traced = WireMsg::ExecShared(ExecSharedReq {
+            layer: 0,
+            q: q.clone(),
+            plan: sample_plan(),
+            trace: Some(TraceCtx { trace_id: 0xABCD_EF01_2345_6789,
+                                   parent_span: 42 }),
+        });
+        let bytes = frame_bytes(&traced);
+        let (back, _) =
+            read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(back, traced);
+        // the borrowed-parts encoder agrees with encode_payload
+        let fast = frame_exec_shared(
+            0, &q, &sample_plan(),
+            Some(&TraceCtx { trace_id: 0xABCD_EF01_2345_6789,
+                             parent_span: 42 }),
+        );
+        assert_eq!(fast, bytes);
+        // an untraced frame costs exactly one presence byte
+        let untraced = frame_exec_shared(0, &q, &sample_plan(), None);
+        assert_eq!(bytes.len(), untraced.len() + 16);
+    }
+
+    #[test]
     fn partials_roundtrip_preserves_neg_inf() {
         let parts = vec![Partials::identity(1, 2, 4)];
-        let msg = WireMsg::Partials { parts, exec_ns: 1234 };
+        let msg = WireMsg::Partials {
+            parts,
+            exec_ns: 1234,
+            trace_id: 0,
+            spans: Vec::new(),
+        };
         let bytes = frame_bytes(&msg);
         let (back, _) =
             read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
         match back {
-            WireMsg::Partials { parts, exec_ns } => {
+            WireMsg::Partials { parts, exec_ns, trace_id, spans } => {
                 assert_eq!(exec_ns, 1234);
+                assert_eq!(trace_id, 0);
+                assert!(spans.is_empty());
                 assert!(parts[0]
                     .m
                     .as_f32()
@@ -1047,12 +1169,33 @@ mod tests {
     }
 
     #[test]
+    fn partials_server_spans_roundtrip() {
+        let msg = WireMsg::Partials {
+            parts: vec![Partials::identity(2, 2, 4)],
+            exec_ns: 999,
+            trace_id: 0x1122_3344_5566_7788,
+            spans: vec![
+                ServerSpan { name: "node.exec".into(), start_ns: 10,
+                             dur_ns: 20 },
+                ServerSpan { name: "node.validate".into(), start_ns: 5,
+                             dur_ns: 4 },
+            ],
+        };
+        let bytes = frame_bytes(&msg);
+        let (back, n) =
+            read_frame(&mut std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(n, bytes.len());
+        assert_eq!(back, msg);
+    }
+
+    #[test]
     fn hello_ack_roundtrip() {
         let msg = WireMsg::HelloAck(HelloAck {
             chunk: 64,
             domains: vec!["legal".into(), "code".into()],
             digest: 0xDEAD_BEEF_CAFE_F00D,
             kv_dtype: KvDtype::F16,
+            server_now_ns: 987_654_321,
         });
         let bytes = frame_bytes(&msg);
         let (back, _) =

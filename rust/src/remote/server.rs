@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::codec::{self, CodecError, ExecSharedReq, HealthInfo, HelloAck,
-                   WireMsg};
+                   ServerSpan, WireMsg};
 use crate::disagg::execute_shared_plan;
 use crate::kvcache::shared_store::SharedStore;
 use crate::runtime::arena::TensorArena;
@@ -229,6 +229,12 @@ pub fn run_shared_node(args: &Args) -> Result<()> {
     let addr = args.str("addr")?;
     let threads = args.usize("threads")?;
     let drain = Duration::from_millis(args.usize("drain-ms")? as u64);
+    // span tracing (`--trace out.json`): exported on shutdown — either
+    // the signal path below or a graceful serve-loop return
+    let trace_path = args.get("trace").unwrap_or("").to_string();
+    if !trace_path.is_empty() {
+        crate::trace::enable();
+    }
     // must precede every thread spawn (backend pool included) so the
     // blocked mask is inherited everywhere
     let sigfd = signalfd::install();
@@ -283,6 +289,7 @@ pub fn run_shared_node(args: &Args) -> Result<()> {
     let ctl = NodeCtl::new();
     if let Some(mut fd) = sigfd {
         let ctl = Arc::clone(&ctl);
+        let trace_path = trace_path.clone();
         std::thread::Builder::new()
             .name("moska-shared-node-sig".into())
             .spawn(move || {
@@ -292,6 +299,14 @@ pub fn run_shared_node(args: &Args) -> Result<()> {
                     crate::info!("shared-node",
                                  "signal received, draining (max {drain:?})");
                     ctl.shutdown(drain);
+                    if !trace_path.is_empty() {
+                        if let Err(e) =
+                            crate::trace::export_json(&trace_path)
+                        {
+                            crate::warnlog!("shared-node",
+                                            "trace export failed: {e:#}");
+                        }
+                    }
                     // only the CLI path exits the process; library
                     // callers drive NodeCtl::shutdown themselves
                     std::process::exit(0);
@@ -299,8 +314,14 @@ pub fn run_shared_node(args: &Args) -> Result<()> {
             })
             .context("spawn signal watcher")?;
     }
-    serve_shared_node_ctl(addr.parse().context("bad --addr")?, backend,
-                          Arc::new(store), None, ctl)
+    let r = serve_shared_node_ctl(addr.parse().context("bad --addr")?,
+                                  backend, Arc::new(store), None, ctl);
+    if !trace_path.is_empty() {
+        if let Err(e) = crate::trace::export_json(&trace_path) {
+            crate::warnlog!("shared-node", "trace export failed: {e:#}");
+        }
+    }
+    r
 }
 
 /// Bind and serve plan-execution RPCs; `ready` (if given) receives the
@@ -438,6 +459,9 @@ fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
                 domains: store.domains.keys().cloned().collect(),
                 digest,
                 kv_dtype: store.kv_dtype,
+                // stamped as late as possible so the client's NTP-style
+                // midpoint estimate brackets it tightly
+                server_now_ns: crate::trace::now_ns(),
             }),
             // planner-state sync: router embeddings + chunk geometry for
             // every resident domain, so the unique node can plan without
@@ -473,6 +497,20 @@ fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
             WireMsg::ExecShared(req) => {
                 ctl.in_flight.fetch_add(1, Ordering::Relaxed);
                 executing = true;
+                // node-local span (when this process traces) plus the
+                // raw timestamps echoed to a tracing client
+                let mut g = crate::span!(
+                    "node.exec", "server",
+                    "layer" => req.layer,
+                    "domain" => req.plan.domain.as_str(),
+                    "rows" => req.q.shape()[0],
+                );
+                if let Some(tc) = req.trace {
+                    g.arg("client_trace",
+                          crate::trace::fmt_trace_id(tc.trace_id));
+                    g.arg("parent_span", tc.parent_span);
+                }
+                let start_ns = crate::trace::now_ns();
                 let t0 = Instant::now();
                 let result = validate_req(&req, &store, backend.as_ref())
                     .and_then(|()| {
@@ -483,7 +521,20 @@ fn handle_conn(mut stream: TcpStream, backend: Arc<dyn Backend>,
                 let exec_ns = t0.elapsed().as_nanos() as u64;
                 ctl.note_exec(exec_ns);
                 match result {
-                    Ok(parts) => WireMsg::Partials { parts, exec_ns },
+                    Ok(parts) => {
+                        // echo span timings (server clock) only when the
+                        // client asked by shipping a trace context
+                        let (trace_id, spans) = match req.trace {
+                            Some(tc) => (tc.trace_id, vec![ServerSpan {
+                                name: "node.exec".to_string(),
+                                start_ns,
+                                dur_ns: exec_ns,
+                            }]),
+                            None => (0, Vec::new()),
+                        };
+                        WireMsg::Partials { parts, exec_ns, trace_id,
+                                            spans }
+                    }
                     // request-level failure: report, keep serving
                     Err(e) => WireMsg::Error(format!("{e:#}")),
                 }

@@ -33,7 +33,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::codec::{self, is_connection_error, is_timeout_error, CodecError,
-                   HealthInfo, HelloAck, StoreSync, WireMsg};
+                   HealthInfo, HelloAck, ServerSpan, StoreSync, TraceCtx,
+                   WireMsg};
 use crate::disagg::{FabricError, FabricReply, SharedFabric};
 use crate::metrics::Metrics;
 use crate::plan::SharedGroupPlan;
@@ -211,6 +212,14 @@ pub struct RemoteClient {
     /// Backoff-jitter stream, seeded per (addr, process) so concurrent
     /// clients desynchronize without consulting a clock.
     rng: Rng,
+    /// `server_trace_clock - client_trace_clock` in ns, measured at the
+    /// last handshake (NTP-style midpoint of the Hello round-trip).
+    /// Echoed server span timestamps map onto the client timeline as
+    /// `client_ns = server_ns - clock_offset_ns`.
+    clock_offset_ns: i64,
+    /// Perfetto process id for this node's echoed spans, registered
+    /// lazily on the first traced reply.
+    remote_pid: Option<u32>,
     pub stats: Arc<FabricStats>,
 }
 
@@ -231,6 +240,8 @@ impl RemoteClient {
             expect: None,
             fatal: false,
             rng: Rng::new(seed ^ std::process::id() as u64),
+            clock_offset_ns: 0,
+            remote_pid: None,
             stats: Arc::new(FabricStats::default()),
         };
         c.ensure_connected()?;
@@ -323,15 +334,22 @@ impl RemoteClient {
 
     fn handshake(&mut self) -> std::result::Result<(), HandshakeError> {
         let frame = codec::frame_bytes(&WireMsg::Hello);
+        // bracket the round-trip on the client trace clock: assuming a
+        // symmetric path, the server stamped `server_now_ns` at the
+        // midpoint, so offset = server_now - (t0 + t1)/2
+        let t0 = crate::trace::now_ns();
         self.send_bytes(&frame)
             .map_err(|e| HandshakeError::Retry(anyhow::Error::new(e)))?;
         match self.recv_msg() {
             Ok(WireMsg::HelloAck(h)) => {
+                let t1 = crate::trace::now_ns();
                 // a reconnect may have landed on a restarted node — the
                 // store must still match what the run was planned against
                 if let Some(exp) = &self.expect {
                     verify_ack(&h, exp).map_err(HandshakeError::Fatal)?;
                 }
+                let mid = (t0 + (t1 - t0) / 2) as i64;
+                self.clock_offset_ns = h.server_now_ns as i64 - mid;
                 self.hello = Some(h);
                 Ok(())
             }
@@ -458,12 +476,37 @@ impl RemoteClient {
                 .read_timeout
                 .saturating_mul(crate::server::DEADLINE_FACTOR);
         let mut reader = DeadlineReader { inner: stream, deadline };
+        let mut sp = crate::span!("fabric.recv", "transport");
         let (msg, wire_bytes) = codec::read_frame(&mut reader)?;
+        sp.arg("bytes", wire_bytes);
         self.stats
             .bytes_recv
             .fetch_add(wire_bytes as u64, Ordering::Relaxed);
         self.stats.frames_recv.fetch_add(1, Ordering::Relaxed);
         Ok(msg)
+    }
+
+    /// Record spans echoed by the node under this connection's remote
+    /// Perfetto process, offset-corrected onto the client timeline.
+    fn record_server_spans(&mut self, trace_id: u64, spans: Vec<ServerSpan>) {
+        let addr = &self.addr;
+        let pid = *self.remote_pid.get_or_insert_with(|| {
+            crate::trace::register_remote_process(
+                &format!("shared-node {addr}"),
+            )
+        });
+        for s in spans {
+            let start = s.start_ns as i64 - self.clock_offset_ns;
+            crate::trace::record_remote(
+                pid, s.name, start, s.dur_ns,
+                vec![(
+                    "trace_id",
+                    crate::trace::Arg::from(crate::trace::fmt_trace_id(
+                        trace_id,
+                    )),
+                )],
+            );
+        }
     }
 }
 
@@ -579,6 +622,10 @@ impl RemoteFabric {
         self.sent = 0;
         if self.client.ensure_connected().is_ok() {
             while self.sent < self.pending.len() {
+                let _g = crate::span!("fabric.send", "transport",
+                                      "frame" => self.sent,
+                                      "bytes" => self.pending[self.sent]
+                                          .len());
                 if self.client.send_bytes(&self.pending[self.sent]).is_err()
                 {
                     self.client.disconnect();
@@ -595,9 +642,29 @@ impl SharedFabric for RemoteFabric {
               groups: &[(&Tensor, &SharedGroupPlan)]) -> Result<()> {
         anyhow::ensure!(self.pending.is_empty(),
                         "fabric already has an in-flight request");
+        let mut sp = crate::span!("fabric.submit", "transport",
+                                  "layer" => layer,
+                                  "groups" => groups.len());
+        // the submit span is the wire parent of every frame this batch
+        // ships; the node echoes the trace id back on its reply spans
+        let trace = if crate::trace::enabled() {
+            Some(TraceCtx {
+                trace_id: crate::trace::trace_id(),
+                parent_span: sp.id(),
+            })
+        } else {
+            None
+        };
         let t0 = Instant::now();
         for &(q, plan) in groups {
-            self.pending.push(codec::frame_exec_shared(layer, q, plan));
+            self.pending.push(codec::frame_exec_shared(
+                layer, q, plan, trace.as_ref(),
+            ));
+        }
+        if crate::trace::enabled() {
+            let bytes: usize =
+                self.pending.iter().map(|f| f.len()).sum();
+            sp.arg("bytes", bytes);
         }
         self.client
             .stats
@@ -658,7 +725,13 @@ impl SharedFabric for RemoteFabric {
             }
             while out.len() < n {
                 match self.client.recv_msg() {
-                    Ok(WireMsg::Partials { parts, exec_ns }) => {
+                    Ok(WireMsg::Partials {
+                        parts, exec_ns, trace_id, spans,
+                    }) => {
+                        if !spans.is_empty() && crate::trace::enabled() {
+                            self.client
+                                .record_server_spans(trace_id, spans);
+                        }
                         out.push(FabricReply { parts, exec_ns });
                     }
                     Ok(WireMsg::Error(e)) => {
@@ -745,6 +818,7 @@ mod tests {
                         domains: vec!["bench".into()],
                         digest: 42,
                         kv_dtype: KvDtype::F32,
+                        server_now_ns: 0,
                     });
                     let _ = s.write_all(&codec::frame_bytes(&ack));
                 }
@@ -766,6 +840,8 @@ mod tests {
             expect: None,
             fatal: false,
             rng: Rng::new(7),
+            clock_offset_ns: 0,
+            remote_pid: None,
             stats: Arc::new(FabricStats::default()),
         };
         let mut seen = std::collections::HashSet::new();
@@ -884,6 +960,7 @@ mod tests {
                                 domains: domains.clone(),
                                 digest: 42,
                                 kv_dtype: KvDtype::F32,
+                                server_now_ns: 0,
                             });
                             if s.write_all(&codec::frame_bytes(&ack))
                                 .is_err()
@@ -895,6 +972,8 @@ mod tests {
                             let reply = WireMsg::Partials {
                                 parts: vec![Partials::identity(1, 4, 16)],
                                 exec_ns: 1,
+                                trace_id: 0,
+                                spans: Vec::new(),
                             };
                             let _ =
                                 s.write_all(&codec::frame_bytes(&reply));

@@ -153,6 +153,96 @@ impl SloTracker {
     }
 }
 
+/// One completed request's lifecycle timings, in seconds:
+/// admit → (queue) → prefill → (decode). The first token is sampled at
+/// the end of prefill, so TTFT = queue + prefill; decode produces the
+/// remaining `tokens - 1`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Lifecycle {
+    pub queue_secs: f64,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    /// Tokens generated (the prefill-sampled first token included).
+    pub tokens: usize,
+}
+
+impl Lifecycle {
+    /// Time to first token.
+    pub fn ttft_secs(&self) -> f64 {
+        self.queue_secs + self.prefill_secs
+    }
+
+    /// Mean time per output token over decode; `None` for one-token
+    /// requests (no decode steps happened).
+    pub fn tpot_secs(&self) -> Option<f64> {
+        (self.tokens > 1)
+            .then(|| self.decode_secs / (self.tokens - 1) as f64)
+    }
+}
+
+/// Aggregates completed-request lifecycles for `/stats` and the bench
+/// reports. Histogram-grade quantiles live in
+/// [`Metrics`][crate::metrics::Metrics] (`req_queue_ns`, `req_ttft_ns`,
+/// `req_tpot_ns`); this keeps the cheap running means and extrema the
+/// serving snapshot surfaces directly.
+#[derive(Debug, Default)]
+pub struct LifecycleTracker {
+    completed: u64,
+    sum_queue: f64,
+    sum_ttft: f64,
+    max_ttft: f64,
+    sum_tpot: f64,
+    tpot_n: u64,
+}
+
+impl LifecycleTracker {
+    pub fn new() -> LifecycleTracker {
+        LifecycleTracker::default()
+    }
+
+    pub fn record(&mut self, lc: &Lifecycle) {
+        self.completed += 1;
+        self.sum_queue += lc.queue_secs;
+        let ttft = lc.ttft_secs();
+        self.sum_ttft += ttft;
+        if ttft > self.max_ttft {
+            self.max_ttft = ttft;
+        }
+        if let Some(t) = lc.tpot_secs() {
+            self.sum_tpot += t;
+            self.tpot_n += 1;
+        }
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn mean_queue_secs(&self) -> f64 {
+        mean(self.sum_queue, self.completed)
+    }
+
+    pub fn mean_ttft_secs(&self) -> f64 {
+        mean(self.sum_ttft, self.completed)
+    }
+
+    pub fn max_ttft_secs(&self) -> f64 {
+        self.max_ttft
+    }
+
+    pub fn mean_tpot_secs(&self) -> f64 {
+        mean(self.sum_tpot, self.tpot_n)
+    }
+}
+
+fn mean(sum: f64, n: u64) -> f64 {
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +333,44 @@ mod tests {
         assert_eq!(ac.check(&d, 10, 2), Admit::Ok);
         assert_eq!(ac.check(&d, 10, 3), Admit::QueueFull);
         assert_eq!(ac.check(&d, 0, 3), Admit::QueueFull);
+    }
+
+    /// The lifecycle algebra the serving snapshot reports: TTFT is
+    /// queue + prefill, TPOT divides decode over the n-1 decode tokens,
+    /// and one-token requests contribute no TPOT sample.
+    #[test]
+    fn lifecycle_tracker_means_and_edges() {
+        let mut t = LifecycleTracker::new();
+        assert_eq!(t.completed(), 0);
+        assert_eq!(t.mean_ttft_secs(), 0.0);
+        assert_eq!(t.mean_tpot_secs(), 0.0);
+
+        let a = Lifecycle {
+            queue_secs: 0.1,
+            prefill_secs: 0.4,
+            decode_secs: 0.9,
+            tokens: 10,
+        };
+        assert!((a.ttft_secs() - 0.5).abs() < 1e-12);
+        assert!((a.tpot_secs().unwrap() - 0.1).abs() < 1e-12);
+        t.record(&a);
+
+        // a one-token request: TTFT counts, TPOT must not
+        let b = Lifecycle {
+            queue_secs: 0.2,
+            prefill_secs: 0.3,
+            decode_secs: 0.0,
+            tokens: 1,
+        };
+        assert!(b.tpot_secs().is_none());
+        t.record(&b);
+
+        assert_eq!(t.completed(), 2);
+        assert!((t.mean_queue_secs() - 0.15).abs() < 1e-12);
+        assert!((t.mean_ttft_secs() - 0.5).abs() < 1e-12);
+        assert!((t.max_ttft_secs() - 0.5).abs() < 1e-12);
+        assert!((t.mean_tpot_secs() - 0.1).abs() < 1e-12,
+                "one-token requests must not dilute TPOT");
     }
 
     #[test]

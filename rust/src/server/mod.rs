@@ -6,6 +6,8 @@
 //!              →   {"id": 3, "text": "...", "tokens": [...],
 //!                   "prefill_secs": ..., "decode_secs": ...}
 //! GET  /stats      engine + runtime metrics snapshot (JSON)
+//! GET  /metrics    the same counters/gauges/histograms rendered in
+//!                  Prometheus text exposition format (`moska_` prefix)
 //! GET  /healthz    "ok"
 //! ```
 //!
@@ -240,7 +242,7 @@ struct Job {
 
 /// Engine loop: continuous batching over jobs from the channel.
 fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
-               stats: Arc<Mutex<Json>>) {
+               stats: Arc<Mutex<Json>>, prom: Arc<Mutex<String>>) {
     let mut waiting: HashMap<usize, Sender<Result<Json>>> = HashMap::new();
     loop {
         // drain new jobs (non-blocking if busy; blocking when idle)
@@ -290,6 +292,7 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
             }
         }
         // refresh the stats snapshot
+        let lc = &engine.lifecycle;
         let snap = Json::obj(vec![
             ("engine", engine.metrics.snapshot()),
             ("gemm_batching_factor", Json::num(engine.batching_factor())),
@@ -298,13 +301,24 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
             ("kv_pages_capacity", Json::num(engine.pool.capacity() as f64)),
             ("live", Json::num(engine.sched.live().len() as f64)),
             ("queued", Json::num(engine.sched.queued() as f64)),
+            // completed-request lifecycle: admit → queue → first token
+            // (TTFT) → per-token decode speed (TPOT)
+            ("lifecycle", Json::obj(vec![
+                ("completed", Json::num(lc.completed() as f64)),
+                ("mean_queue_secs", Json::num(lc.mean_queue_secs())),
+                ("mean_ttft_secs", Json::num(lc.mean_ttft_secs())),
+                ("max_ttft_secs", Json::num(lc.max_ttft_secs())),
+                ("mean_tpot_secs", Json::num(lc.mean_tpot_secs())),
+            ])),
         ]);
         *stats.lock().unwrap() = snap;
+        *prom.lock().unwrap() = engine.metrics.prometheus_text();
     }
 }
 
 fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
-               stats: Arc<Mutex<Json>>, limits: ServerLimits) {
+               stats: Arc<Mutex<Json>>, prom: Arc<Mutex<String>>,
+               limits: ServerLimits) {
     let req = match parse_request_limited(&mut stream,
                                           limits.max_body_bytes,
                                           limits.read_timeout) {
@@ -326,6 +340,11 @@ fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
         ("GET", "/stats") => {
             let body = stats.lock().unwrap().to_string();
             let _ = respond(&mut stream, 200, "application/json", &body);
+        }
+        ("GET", "/metrics") => {
+            let body = prom.lock().unwrap().clone();
+            let _ = respond(&mut stream, 200,
+                            "text/plain; version=0.0.4", &body);
         }
         ("POST", "/generate") => {
             let parsed = Json::parse(&req.body).and_then(|j| {
@@ -392,6 +411,23 @@ fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
 /// `moska serve`: spin the engine loop + accept connections forever.
 /// Layering: CLI flags > `--config` file values > defaults.
 pub fn run_server(args: &Args) -> Result<()> {
+    // span tracing (`--trace out.json`): serve runs until killed, so a
+    // flusher thread re-exports the (atomically replaced) file every
+    // few seconds — the trace is loadable at any moment
+    let trace_path = args.get("trace").unwrap_or("").to_string();
+    if !trace_path.is_empty() {
+        crate::trace::enable();
+        let path = trace_path.clone();
+        std::thread::Builder::new()
+            .name("moska-trace-flush".into())
+            .spawn(move || loop {
+                std::thread::sleep(Duration::from_secs(5));
+                if let Err(e) = crate::trace::export_json(&path) {
+                    crate::warnlog!("server", "trace export failed: {e:#}");
+                }
+            })
+            .context("spawn trace flusher")?;
+    }
     let file_cfg = match args.get("config") {
         Some(path) if !path.is_empty() => {
             crate::config::FileConfig::load(path)?
@@ -480,10 +516,12 @@ pub fn serve_on_limited(addr: std::net::SocketAddr, engine: Engine,
 
     let (jobs_tx, jobs_rx) = channel::<Job>();
     let stats = Arc::new(Mutex::new(Json::obj(vec![])));
+    let prom = Arc::new(Mutex::new(String::new()));
     let stats_loop = Arc::clone(&stats);
+    let prom_loop = Arc::clone(&prom);
     std::thread::Builder::new()
         .name("moska-engine-loop".into())
-        .spawn(move || engine_loop(engine, jobs_rx, stats_loop))
+        .spawn(move || engine_loop(engine, jobs_rx, stats_loop, prom_loop))
         .context("spawn engine loop")?;
 
     for stream in listener.incoming() {
@@ -491,8 +529,9 @@ pub fn serve_on_limited(addr: std::net::SocketAddr, engine: Engine,
             Ok(s) => {
                 let jobs = jobs_tx.clone();
                 let stats = Arc::clone(&stats);
+                let prom = Arc::clone(&prom);
                 std::thread::spawn(move || {
-                    handle_conn(s, jobs, stats, limits)
+                    handle_conn(s, jobs, stats, prom, limits)
                 });
             }
             Err(e) => crate::warnlog!("server", "accept failed: {e}"),

@@ -1,0 +1,464 @@
+//! Structured step tracing: lock-cheap per-thread span recorders that
+//! export one Chrome-trace/Perfetto JSON timeline spanning the engine,
+//! the fabric transport, and remote shared nodes.
+//!
+//! Design rules:
+//!
+//! * **Disabled is a no-op.** Every recording site first checks
+//!   [`enabled`] — one relaxed atomic load and a predictable branch.
+//!   The [`span!`][crate::span] macro does not even evaluate its
+//!   argument expressions when tracing is off, so the decode hot path
+//!   pays nothing (and tokens are bit-identical either way: tracing only
+//!   reads clocks, never touches numerics).
+//! * **Lock-cheap when enabled.** Each thread owns an
+//!   `Arc<Mutex<Vec<Event>>>` registered once with the global
+//!   collector; recording locks the thread's *own* uncontended mutex.
+//!   The only cross-thread locking happens at export time.
+//! * **One timeline across machines.** The client allocates a trace id
+//!   ([`trace_id`]) and ships it (plus the emitting span's id) in the
+//!   codec-v5 trace context on each `ExecShared` frame; shared nodes
+//!   echo their exec span timings in the reply, stamped on their own
+//!   monotonic clock. The handshake measures the clock offset
+//!   (NTP-style midpoint, see `RemoteClient::handshake`), and
+//!   [`record_remote`] maps the server timestamps onto the client
+//!   timeline under a distinct Perfetto process id.
+//!
+//! Span taxonomy and the wire rules live in `docs/OBSERVABILITY.md`.
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Perfetto process id used for spans recorded in this process.
+pub const LOCAL_PID: u32 = 1;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static TRACE_ID: AtomicU64 = AtomicU64::new(0);
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+static NEXT_PID: AtomicU32 = AtomicU32::new(LOCAL_PID + 1);
+
+fn collector() -> &'static Mutex<Vec<Arc<Mutex<Vec<Event>>>>> {
+    static C: OnceLock<Mutex<Vec<Arc<Mutex<Vec<Event>>>>>> = OnceLock::new();
+    C.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn process_labels() -> &'static Mutex<Vec<(u32, String)>> {
+    static P: OnceLock<Mutex<Vec<(u32, String)>>> = OnceLock::new();
+    P.get_or_init(|| {
+        Mutex::new(vec![(LOCAL_PID, "moska".to_string())])
+    })
+}
+
+thread_local! {
+    static THREAD_BUF: RefCell<Option<(u32, Arc<Mutex<Vec<Event>>>)>> =
+        const { RefCell::new(None) };
+}
+
+/// A span argument value (rendered into the Chrome-trace `args` object).
+#[derive(Debug, Clone)]
+pub enum Arg {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Str(String),
+}
+
+impl From<u64> for Arg {
+    fn from(v: u64) -> Arg { Arg::U64(v) }
+}
+impl From<u32> for Arg {
+    fn from(v: u32) -> Arg { Arg::U64(v as u64) }
+}
+impl From<usize> for Arg {
+    fn from(v: usize) -> Arg { Arg::U64(v as u64) }
+}
+impl From<i64> for Arg {
+    fn from(v: i64) -> Arg { Arg::I64(v) }
+}
+impl From<i32> for Arg {
+    fn from(v: i32) -> Arg { Arg::I64(v as i64) }
+}
+impl From<f64> for Arg {
+    fn from(v: f64) -> Arg { Arg::F64(v) }
+}
+impl From<&str> for Arg {
+    fn from(v: &str) -> Arg { Arg::Str(v.to_string()) }
+}
+impl From<String> for Arg {
+    fn from(v: String) -> Arg { Arg::Str(v) }
+}
+
+impl Arg {
+    fn to_json(&self) -> Json {
+        match self {
+            Arg::U64(v) => Json::num(*v as f64),
+            Arg::I64(v) => Json::num(*v as f64),
+            Arg::F64(v) => Json::num(*v),
+            Arg::Str(s) => Json::str(s.clone()),
+        }
+    }
+}
+
+/// One completed span (Chrome-trace "X" duration event).
+#[derive(Debug, Clone)]
+struct Event {
+    name: Cow<'static, str>,
+    cat: &'static str,
+    /// Client-timeline start, ns since the trace epoch (remote spans are
+    /// offset-corrected before recording, so this can be negative only
+    /// for pathological clock skew).
+    start_ns: i64,
+    dur_ns: u64,
+    pid: u32,
+    tid: u32,
+    /// Span id (unique within the trace; 0 for remote spans whose
+    /// parent linkage travels through args instead).
+    id: u64,
+    args: Vec<(&'static str, Arg)>,
+}
+
+/// Whether tracing is recording. One relaxed load — callers branch on
+/// this before building any span arguments.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on: anchor the epoch and allocate a nonzero trace id
+/// for this process (idempotent; the first call wins).
+pub fn enable() {
+    let _ = EPOCH.get_or_init(Instant::now);
+    if TRACE_ID.load(Ordering::Relaxed) == 0 {
+        // unique enough across processes without wall-clock access:
+        // pid in the high bits, an ASLR-derived stamp below
+        let aslr = (&ENABLED as *const AtomicBool as usize as u64)
+            & 0xFFFF_FFFF;
+        let id = ((std::process::id() as u64) << 32) | aslr | 1;
+        let _ = TRACE_ID.compare_exchange(0, id, Ordering::Relaxed,
+                                          Ordering::Relaxed);
+    }
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Nanoseconds since the trace epoch (monotonic). Works whether or not
+/// recording is enabled — remote servers use it to stamp echoed spans.
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// This process's trace id (0 until [`enable`] ran).
+pub fn trace_id() -> u64 {
+    TRACE_ID.load(Ordering::Relaxed)
+}
+
+/// Allocate a fresh span id.
+pub fn next_span_id() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Register a remote process row in the exported timeline (one per
+/// shared node); returns its Perfetto pid.
+pub fn register_remote_process(label: &str) -> u32 {
+    let pid = NEXT_PID.fetch_add(1, Ordering::Relaxed);
+    process_labels().lock().unwrap().push((pid, label.to_string()));
+    pid
+}
+
+fn with_thread_buf(f: impl FnOnce(u32, &mut Vec<Event>)) {
+    THREAD_BUF.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let buf = Arc::new(Mutex::new(Vec::new()));
+            collector().lock().unwrap().push(buf.clone());
+            *slot = Some((tid, buf));
+        }
+        let (tid, buf) = slot.as_ref().unwrap();
+        f(*tid, &mut buf.lock().unwrap());
+    });
+}
+
+/// RAII scoped span. Build through the [`span!`][crate::span] macro (or
+/// [`SpanGuard::start`]); the span records on drop.
+pub struct SpanGuard(Option<SpanInner>);
+
+struct SpanInner {
+    name: Cow<'static, str>,
+    cat: &'static str,
+    start_ns: u64,
+    id: u64,
+    args: Vec<(&'static str, Arg)>,
+}
+
+impl SpanGuard {
+    /// Start a recording span (caller checked [`enabled`]).
+    pub fn start(name: impl Into<Cow<'static, str>>, cat: &'static str,
+                 args: Vec<(&'static str, Arg)>) -> SpanGuard {
+        SpanGuard(Some(SpanInner {
+            name: name.into(),
+            cat,
+            start_ns: now_ns(),
+            id: next_span_id(),
+            args,
+        }))
+    }
+
+    /// A guard that records nothing (tracing disabled).
+    pub const fn inert() -> SpanGuard {
+        SpanGuard(None)
+    }
+
+    /// This span's id (0 when inert) — the value shipped as the wire
+    /// trace context's parent span id.
+    pub fn id(&self) -> u64 {
+        self.0.as_ref().map(|s| s.id).unwrap_or(0)
+    }
+
+    /// Append an argument discovered mid-span (no-op when inert).
+    pub fn arg(&mut self, k: &'static str, v: impl Into<Arg>) {
+        if let Some(s) = self.0.as_mut() {
+            s.args.push((k, v.into()));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(s) = self.0.take() else { return };
+        let dur = now_ns().saturating_sub(s.start_ns);
+        with_thread_buf(|tid, buf| {
+            buf.push(Event {
+                name: s.name,
+                cat: s.cat,
+                start_ns: s.start_ns as i64,
+                dur_ns: dur,
+                pid: LOCAL_PID,
+                tid,
+                id: s.id,
+                args: s.args,
+            });
+        });
+    }
+}
+
+/// Scoped span: `let _g = crate::span!("decode.step", "engine");` or with
+/// args `crate::span!("layer", "exec", "layer" => l, "rows" => b)`.
+/// Argument expressions are not evaluated when tracing is disabled.
+#[macro_export]
+macro_rules! span {
+    ($name:expr, $cat:expr $(, $k:literal => $v:expr)* $(,)?) => {
+        if $crate::trace::enabled() {
+            $crate::trace::SpanGuard::start(
+                $name, $cat,
+                vec![$(($k, $crate::trace::Arg::from($v))),*],
+            )
+        } else {
+            $crate::trace::SpanGuard::inert()
+        }
+    };
+}
+
+/// Record a completed span with explicit timing (used where a guard
+/// cannot scope the region, e.g. the engine's phase timers).
+pub fn record(name: impl Into<Cow<'static, str>>, cat: &'static str,
+              start_ns: u64, dur_ns: u64,
+              args: Vec<(&'static str, Arg)>) {
+    if !enabled() {
+        return;
+    }
+    with_thread_buf(|tid, buf| {
+        buf.push(Event {
+            name: name.into(),
+            cat,
+            start_ns: start_ns as i64,
+            dur_ns,
+            pid: LOCAL_PID,
+            tid,
+            id: next_span_id(),
+            args,
+        });
+    });
+}
+
+/// Record a span echoed by a remote shared node, already mapped onto
+/// the client timeline (`start_client_ns = server_ns - clock_offset`).
+/// `pid` comes from [`register_remote_process`]; `args` should carry the
+/// wire trace context (`trace_id`, `parent`) so exported remote spans
+/// are attributable to the client's trace.
+pub fn record_remote(pid: u32, name: String, start_client_ns: i64,
+                     dur_ns: u64, args: Vec<(&'static str, Arg)>) {
+    if !enabled() {
+        return;
+    }
+    with_thread_buf(|_, buf| {
+        buf.push(Event {
+            name: Cow::Owned(name),
+            cat: "remote",
+            start_ns: start_client_ns,
+            dur_ns,
+            pid,
+            // remote spans render on one row per remote process
+            tid: 1,
+            id: 0,
+            args,
+        });
+    });
+}
+
+/// Hex rendering of a trace id as it travels through span args and
+/// exported JSON (`0x…`).
+pub fn fmt_trace_id(id: u64) -> String {
+    format!("{id:#018x}")
+}
+
+/// Number of events recorded so far (test support).
+pub fn event_count() -> usize {
+    collector()
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|b| b.lock().unwrap().len())
+        .sum()
+}
+
+/// Drop every recorded event (test isolation).
+pub fn clear() {
+    for buf in collector().lock().unwrap().iter() {
+        buf.lock().unwrap().clear();
+    }
+}
+
+/// Snapshot all recorded spans as Chrome-trace JSON
+/// (`{"traceEvents": [...]}`; load in Perfetto / `chrome://tracing`).
+/// Buffers are not drained, so periodic exports overwrite the file with
+/// a strictly longer timeline.
+pub fn export_json_string() -> String {
+    let mut events: Vec<Json> = Vec::new();
+    for (pid, label) in process_labels().lock().unwrap().iter() {
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("process_name")),
+            ("pid", Json::num(*pid as f64)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str(label.clone()))])),
+        ]));
+    }
+    let snapshot: Vec<Event> = {
+        let bufs = collector().lock().unwrap();
+        bufs.iter()
+            .flat_map(|b| b.lock().unwrap().clone())
+            .collect()
+    };
+    for e in snapshot {
+        let mut args: Vec<(&str, Json)> = e
+            .args
+            .iter()
+            .map(|(k, v)| (*k, v.to_json()))
+            .collect();
+        if e.id != 0 {
+            args.push(("span_id", Json::num(e.id as f64)));
+        }
+        events.push(Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("name", Json::str(e.name.into_owned())),
+            ("cat", Json::str(e.cat)),
+            ("ts", Json::num(e.start_ns as f64 / 1000.0)),
+            ("dur", Json::num(e.dur_ns as f64 / 1000.0)),
+            ("pid", Json::num(e.pid as f64)),
+            ("tid", Json::num(e.tid as f64)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("otherData", Json::obj(vec![
+            ("trace_id", Json::str(fmt_trace_id(trace_id()))),
+        ])),
+    ])
+    .to_string()
+}
+
+/// Write the Chrome-trace JSON to `path` (atomic: temp file + rename).
+pub fn export_json(path: &str) -> Result<()> {
+    let body = export_json_string();
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, body.as_bytes())
+        .with_context(|| format!("writing trace {tmp}"))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming trace into {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        // tracing starts disabled in this process unless another test
+        // enabled it; either way an inert guard must not record
+        let before = event_count();
+        {
+            let _g = SpanGuard::inert();
+        }
+        assert_eq!(event_count(), before);
+    }
+
+    #[test]
+    fn span_guard_records_on_drop_when_enabled() {
+        enable();
+        let before = event_count();
+        {
+            let mut g = SpanGuard::start("test.span", "test",
+                                         vec![("k", Arg::from(7u64))]);
+            g.arg("later", 1u64);
+            assert!(g.id() > 0);
+        }
+        assert_eq!(event_count(), before + 1);
+        let body = export_json_string();
+        let j = Json::parse(&body).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let span = evs
+            .iter()
+            .find(|e| {
+                e.opt("name").map(|n| n.as_str().unwrap_or(""))
+                    == Some("test.span")
+            })
+            .expect("exported span present");
+        assert!(span.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        let args = span.get("args").unwrap();
+        assert_eq!(args.get("k").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(args.get("later").unwrap().as_usize().unwrap(), 1);
+        assert!(args.get("span_id").unwrap().as_usize().unwrap() > 0);
+        assert!(j.get("otherData").unwrap().get("trace_id").is_ok());
+        assert!(trace_id() != 0);
+    }
+
+    #[test]
+    fn remote_spans_land_under_their_pid() {
+        enable();
+        let pid = register_remote_process("shared-node test");
+        record_remote(pid, "node.exec".into(), 1234, 567,
+                      vec![("trace_id", Arg::Str(fmt_trace_id(trace_id())))]);
+        let body = export_json_string();
+        let j = Json::parse(&body).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.iter().any(|e| {
+            let pid_ok = e.opt("pid").and_then(|p| p.as_usize().ok())
+                == Some(pid as usize);
+            let cat_ok = e.opt("cat").and_then(|c| c.as_str().ok())
+                == Some("remote");
+            pid_ok && cat_ok
+        }));
+    }
+}

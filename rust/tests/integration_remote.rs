@@ -202,6 +202,7 @@ fn flaky_one_shot_server() -> std::net::SocketAddr {
                             domains: vec![SYNTH_DOMAIN.into()],
                             digest: 7,
                             kv_dtype: moska::tensor::KvDtype::F32,
+                            server_now_ns: 0,
                         });
                         if s.write_all(&codec::frame_bytes(&ack)).is_err() {
                             break;
@@ -211,6 +212,8 @@ fn flaky_one_shot_server() -> std::net::SocketAddr {
                         let reply = WireMsg::Partials {
                             parts: vec![Partials::identity(1, 4, 16)],
                             exec_ns: 1,
+                            trace_id: 0,
+                            spans: Vec::new(),
                         };
                         let _ = s.write_all(&codec::frame_bytes(&reply));
                         break; // drop the connection after one request

@@ -272,6 +272,7 @@ fn flaky_shard_with(domain: &'static str, fill: f32)
                             domains: vec![domain.to_string()],
                             digest: 7,
                             kv_dtype: moska::tensor::KvDtype::F32,
+                            server_now_ns: 0,
                         });
                         if s.write_all(&codec::frame_bytes(&ack)).is_err()
                         {
@@ -295,6 +296,8 @@ fn flaky_shard_with(domain: &'static str, fill: f32)
                         let reply = WireMsg::Partials {
                             parts: vec![Partials::identity(1, 4, 16)],
                             exec_ns: 1,
+                            trace_id: 0,
+                            spans: Vec::new(),
                         };
                         let _ = s.write_all(&codec::frame_bytes(&reply));
                         break; // drop the conn after one request

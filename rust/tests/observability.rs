@@ -1,0 +1,321 @@
+//! Observability surface tests: the `/stats` JSON shape (lifecycle
+//! section included), the `/metrics` Prometheus text exposition, and
+//! the exported Chrome-trace span timeline — all against a synthetic
+//! engine, no artifacts needed.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use moska::config::{ModelConfig, ServingConfig};
+use moska::engine::Engine;
+use moska::kvcache::SharedStore;
+use moska::metrics::Metrics;
+use moska::model::Weights;
+use moska::runtime::NativeBackend;
+use moska::trace::{self, Arg, SpanGuard};
+use moska::util::json::Json;
+use moska::util::rng::Rng;
+
+const CHUNK: usize = 64;
+
+fn synthetic_engine() -> Engine {
+    let model = ModelConfig::tiny();
+    let cfg = ServingConfig {
+        top_k: None,
+        max_batch: 8,
+        exec_threads: 1,
+        ..Default::default()
+    };
+    let be = NativeBackend::with_threads(model.clone(), CHUNK, 1);
+    let weights = Weights::synthetic(model, 0x0B5E);
+    let mut eng = Engine::new(
+        Box::new(be), weights, SharedStore::empty(CHUNK), cfg, 1024,
+    );
+    let tokens: Vec<i32> =
+        (0..2 * CHUNK).map(|i| (i % 100) as i32).collect();
+    eng.register_domain("bench", &tokens).expect("register domain");
+    eng
+}
+
+/// One HTTP exchange; returns (header block, body).
+fn http(addr: SocketAddr, req: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(req.as_bytes()).expect("send");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read");
+    match resp.split_once("\r\n\r\n") {
+        Some((h, b)) => (h.to_string(), b.to_string()),
+        None => (resp, String::new()),
+    }
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    http(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+}
+
+/// Poll an endpoint until `ok(body)` or a deadline (the engine loop
+/// refreshes its snapshots between decode steps).
+fn poll_get(addr: SocketAddr, path: &str,
+            ok: impl Fn(&str) -> bool) -> (String, String) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (head, body) = http_get(addr, path);
+        if ok(&body) {
+            return (head, body);
+        }
+        assert!(Instant::now() < deadline,
+                "{path} never reached the expected state; last: {body}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn spawn_server() -> SocketAddr {
+    let engine = synthetic_engine();
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = moska::server::serve_on(
+            "127.0.0.1:0".parse().unwrap(), engine, Some(tx),
+        );
+    });
+    rx.recv().expect("server ready")
+}
+
+/// `/stats` carries the engine snapshot plus the per-request lifecycle
+/// section (completed / queue / TTFT / TPOT means) after a generation,
+/// and `/metrics` serves the same registry as Prometheus text.
+#[test]
+fn stats_and_metrics_endpoints_shape() {
+    let addr = spawn_server();
+
+    let body = r#"{"prompt": "ab", "domain": "bench", "max_tokens": 4}"#;
+    let (head, resp) = http(addr, &format!(
+        "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(), body,
+    ));
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}\n{resp}");
+    let j = Json::parse(&resp).expect("generate reply JSON");
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+
+    // ---- /stats: lifecycle section present and populated
+    let completed = |body: &str| {
+        Json::parse(body)
+            .ok()
+            .and_then(|j| {
+                j.get("lifecycle")
+                    .and_then(|l| l.get("completed"))
+                    .and_then(|c| c.as_f64())
+                    .ok()
+            })
+            .unwrap_or(0.0)
+            >= 1.0
+    };
+    let (_, body) = poll_get(addr, "/stats", completed);
+    let j = Json::parse(&body).unwrap();
+    assert!(j.get("engine").is_ok());
+    let lc = j.get("lifecycle").unwrap();
+    assert!(lc.get("completed").unwrap().as_f64().unwrap() >= 1.0);
+    let ttft = lc.get("mean_ttft_secs").unwrap().as_f64().unwrap();
+    assert!(ttft > 0.0, "TTFT must be positive after a completion");
+    assert!(lc.get("max_ttft_secs").unwrap().as_f64().unwrap()
+            >= ttft - 1e-12);
+    assert!(lc.get("mean_queue_secs").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(lc.get("mean_tpot_secs").unwrap().as_f64().unwrap() >= 0.0);
+    // the histogram twins of the lifecycle means ride in the engine
+    // snapshot (quantile-capable, Prometheus-exported)
+    let h = j.get("engine").unwrap().get("histograms").unwrap();
+    assert!(h.get("req_ttft_ns").unwrap().get("count").unwrap()
+             .as_f64().unwrap() >= 1.0);
+    assert!(h.get("req_tpot_ns").unwrap().get("count").unwrap()
+             .as_f64().unwrap() >= 1.0);
+
+    // ---- /metrics: Prometheus text exposition of the same registry
+    let (head, body) = poll_get(addr, "/metrics", |b| {
+        b.contains("moska_requests_completed")
+    });
+    assert!(head.contains("text/plain; version=0.0.4"), "{head}");
+    assert!(body.contains("# TYPE moska_requests_completed counter"));
+    assert!(body.contains("# TYPE moska_decode_step_ns histogram"));
+    assert!(body.contains("moska_req_ttft_ns_count"));
+    // structural scan: every line is a comment or `name value`, names
+    // carry the moska_ prefix, values parse as numbers
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with("# ") {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let kind = rest.split_whitespace().nth(1).unwrap_or("");
+                assert!(
+                    matches!(kind, "counter" | "gauge" | "histogram"),
+                    "bad TYPE line: {line}",
+                );
+            }
+            continue;
+        }
+        let (name, value) =
+            line.split_once(' ').unwrap_or_else(|| {
+                panic!("unparseable exposition line: {line}")
+            });
+        assert!(name.starts_with("moska_"), "unprefixed metric: {line}");
+        value.parse::<f64>().unwrap_or_else(|_| {
+            panic!("non-numeric sample value: {line}")
+        });
+    }
+
+    // unknown paths still 404
+    let (head, _) = http_get(addr, "/nope");
+    assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+}
+
+/// The Prometheus renderer's contract, registry-level: sanitized
+/// `moska_`-prefixed names, correct TYPE lines, and cumulative
+/// monotonically non-decreasing histogram buckets that sum to `_count`.
+#[test]
+fn prometheus_text_renders_all_metric_kinds() {
+    let m = Metrics::new();
+    m.count("requests_submitted", 3);
+    m.count("weird-name.x", 1);
+    m.gauge("live_batch", 2.5);
+    m.observe_ns("step_ns", 1_000);
+    m.observe_ns("step_ns", 2_000);
+    m.observe_ns("step_ns", 2_000_000);
+    let text = m.prometheus_text();
+
+    assert!(text.contains("# TYPE moska_requests_submitted counter\n\
+                           moska_requests_submitted 3\n"));
+    assert!(text.contains("moska_weird_name_x 1\n"),
+            "name not sanitized: {text}");
+    assert!(text.contains("# TYPE moska_live_batch gauge\n\
+                           moska_live_batch 2.5\n"));
+    assert!(text.contains("# TYPE moska_step_ns histogram"));
+    assert!(text.contains("moska_step_ns_sum 2003000\n"));
+    assert!(text.contains("moska_step_ns_count 3\n"));
+
+    // bucket series: cumulative, non-decreasing, capped by _count
+    let mut last = 0u64;
+    let mut buckets = 0;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("moska_step_ns_bucket{le=") {
+            let v: u64 = rest
+                .split_whitespace()
+                .nth(1)
+                .expect("bucket value")
+                .parse()
+                .expect("bucket count");
+            assert!(v >= last, "bucket series decreased: {line}");
+            last = v;
+            buckets += 1;
+        }
+    }
+    assert!(buckets >= 2, "expected bucket series plus +Inf");
+    assert_eq!(last, 3, "+Inf bucket must equal _count");
+}
+
+/// Exported trace JSON is well-formed Chrome-trace: parses, spans nest,
+/// durations are non-negative, and remote (shared-node) spans land under
+/// their registered pid carrying the client's trace id.
+#[test]
+fn trace_export_wellformed_and_remote_attribution() {
+    trace::enable();
+    assert!(trace::enabled());
+    let tid_str = trace::fmt_trace_id(trace::trace_id());
+    assert!(tid_str.starts_with("0x") && tid_str.len() == 18);
+
+    // a nested scoped pair: the inner span must sit inside the outer
+    let outer_id;
+    let inner_id;
+    {
+        let outer = SpanGuard::start("obs.outer", "test", vec![]);
+        outer_id = outer.id();
+        {
+            let mut inner = SpanGuard::start(
+                "obs.inner", "test", vec![("k", Arg::from(7u64))],
+            );
+            inner.arg("later", "x");
+            inner_id = inner.id();
+        }
+    }
+    assert!(outer_id > 0 && inner_id > outer_id);
+
+    // a randomized bag of explicit-timing records
+    let mut rng = Rng::new(0x0B5E_C0DE);
+    let n = 40 + rng.below(40) as usize;
+    for i in 0..n {
+        trace::record(format!("obs.rand.{i}"), "test", trace::now_ns(),
+                      rng.below(1_000_000), vec![("i", Arg::from(i))]);
+    }
+
+    // remote spans as the wire-echo path records them: mapped onto the
+    // client clock, under a registered remote pid, tagged with the
+    // client's trace id
+    let pid = trace::register_remote_process("obs shared-node");
+    assert!(pid >= 2, "remote pids start after the local process");
+    for i in 0..5i64 {
+        trace::record_remote(
+            pid, format!("obs.remote.{i}"), i * 1_000, 500,
+            vec![("trace_id", Arg::from(tid_str.clone()))],
+        );
+    }
+
+    let body = trace::export_json_string();
+    let j = Json::parse(&body).expect("trace JSON parses");
+    assert_eq!(
+        j.get("otherData").unwrap().get("trace_id").unwrap()
+            .as_str().unwrap(),
+        tid_str,
+    );
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+
+    let (mut outer, mut inner) = (None, None);
+    let (mut rand_seen, mut remote_seen, mut meta_for_pid) = (0, 0, false);
+    for e in evs {
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "M" => {
+                // process-name metadata must label registered pids
+                e.get("args").unwrap().get("name").unwrap()
+                    .as_str().unwrap();
+                if e.get("pid").unwrap().as_f64().unwrap() as u32 == pid {
+                    meta_for_pid = true;
+                }
+            }
+            "X" => {
+                let name = e.get("name").unwrap().as_str().unwrap();
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                let dur = e.get("dur").unwrap().as_f64().unwrap();
+                assert!(dur >= 0.0, "negative duration on {name}");
+                let epid = e.get("pid").unwrap().as_f64().unwrap();
+                assert!(epid >= 1.0);
+                e.get("tid").unwrap().as_f64().unwrap();
+                if name == "obs.outer" {
+                    outer = Some((ts, dur));
+                } else if name == "obs.inner" {
+                    inner = Some((ts, dur));
+                    let sid = e.get("args").unwrap().get("span_id")
+                        .unwrap().as_f64().unwrap();
+                    assert_eq!(sid as u64, inner_id);
+                } else if name.starts_with("obs.rand.") {
+                    rand_seen += 1;
+                } else if name.starts_with("obs.remote.") {
+                    remote_seen += 1;
+                    assert_eq!(epid as u32, pid);
+                    assert_eq!(e.get("cat").unwrap().as_str().unwrap(),
+                               "remote");
+                    assert_eq!(
+                        e.get("args").unwrap().get("trace_id").unwrap()
+                            .as_str().unwrap(),
+                        tid_str,
+                        "remote span lost the client's trace id",
+                    );
+                }
+            }
+            other => panic!("unexpected event phase {other}"),
+        }
+    }
+    assert_eq!(rand_seen, n, "a recorded span went missing");
+    assert_eq!(remote_seen, 5);
+    assert!(meta_for_pid, "remote process has no name metadata");
+    let (ots, odur) = outer.expect("outer span exported");
+    let (its, idur) = inner.expect("inner span exported");
+    // nesting (µs floats; 2ns slack for the division rounding)
+    assert!(its >= ots - 0.002 && its + idur <= ots + odur + 0.002,
+            "inner span [{its}, {}] escapes outer [{ots}, {}]",
+            its + idur, ots + odur);
+}

@@ -6,8 +6,8 @@ use moska::kvcache::shared_store::DomainPlannerState;
 use moska::plan::{plan_gemm_calls, plan_unique_spans, SharedGroupPlan,
                   StepPlan, UniqueRowPlan};
 use moska::remote::codec::{frame_bytes, read_frame, CodecError,
-                           ExecSharedReq, StoreSync, WireMsg,
-                           CODEC_VERSION};
+                           ExecSharedReq, ServerSpan, StoreSync, TraceCtx,
+                           WireMsg, CODEC_VERSION};
 use moska::router::ChunkSet;
 use moska::runtime::native::Partials;
 use moska::tensor::{KvDtype, Tensor};
@@ -107,6 +107,15 @@ fn rand_msg(rng: &mut Rng) -> WireMsg {
             layer: rng.below(8) as usize,
             q: rand_tensor(rng, &[1 + rng.below(4) as usize, 4, 8]),
             plan: rand_group_plan(rng),
+            // v5 trace context is optional — cover both layouts
+            trace: if rng.below(2) == 0 {
+                None
+            } else {
+                Some(TraceCtx {
+                    trace_id: rng.next_u64(),
+                    parent_span: rng.next_u64(),
+                })
+            },
         }),
         1 => WireMsg::StepPlan(rand_step_plan(rng)),
         2 => {
@@ -120,6 +129,14 @@ fn rand_msg(rng: &mut Rng) -> WireMsg {
                     })
                     .collect(),
                 exec_ns: rng.next_u64(),
+                trace_id: rng.next_u64(),
+                spans: (0..rng.below(3))
+                    .map(|i| ServerSpan {
+                        name: format!("span{i}"),
+                        start_ns: rng.next_u64(),
+                        dur_ns: rng.next_u64(),
+                    })
+                    .collect(),
             }
         }
         3 => WireMsg::SyncState(StoreSync {

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI gate: doc-link check, format, lint, tests, bench smoke, and the
-# remote-node + 2-shard loopback smokes — the same checks every PR must
-# clear, runnable locally and on any runner with a rust toolchain.
+# remote-node / tracing / 2-shard loopback smokes — the same checks
+# every PR must clear, runnable locally and on any runner with a rust
+# toolchain.
 #
 #   scripts/ci.sh            # run everything, fail on any problem
 #   scripts/ci.sh --no-bench # skip the bench smoke (fast pre-push)
@@ -238,6 +239,93 @@ if [ "$RUN_BENCH" = "1" ]; then
         trap - EXIT
     else
         echo "error: release build for the remote smoke failed" >&2
+        FAIL=1
+    fi
+fi
+
+if [ "$RUN_BENCH" = "1" ]; then
+    echo "== tracing smoke =="
+    # a traced loopback `disagg --remote` run must (a) decode tokens
+    # bit-identical to the untraced run (tracing is observation only)
+    # and (b) write a Chrome-trace JSON holding the client's spans AND
+    # the shared node's echoed spans under one trace id
+    if cargo build --release --bin moska; then
+        BIN=target/release/moska
+        mkdir -p bench_out
+        "$BIN" shared-node --synthetic --addr 127.0.0.1:0 \
+            > bench_out/trace_node.log 2>&1 &
+        NODE_PID=$!
+        trap 'kill "$NODE_PID" 2>/dev/null' EXIT
+        ADDR=""
+        for _ in $(seq 1 100); do
+            ADDR=$(sed -n 's/^shared-node listening on \([0-9.:]*\).*/\1/p' \
+                       bench_out/trace_node.log 2>/dev/null | head -1)
+            [ -n "$ADDR" ] && break
+            sleep 0.1
+        done
+        if [ -z "$ADDR" ]; then
+            echo "error: trace-smoke node never reported its address" >&2
+            cat bench_out/trace_node.log >&2 || true
+            FAIL=1
+        elif "$BIN" disagg --synthetic --batches 2,4 --steps 4 --threads 1 \
+               --remote "$ADDR" --trace bench_out/trace_remote.json \
+               --emit-tokens bench_out/traced_tokens.json \
+           && "$BIN" disagg --synthetic --batches 2,4 --steps 4 --threads 1 \
+               --remote "$ADDR" \
+               --emit-tokens bench_out/untraced_tokens.json; then
+            if cmp -s bench_out/traced_tokens.json \
+                      bench_out/untraced_tokens.json; then
+                echo "tracing smoke: tokens bit-identical traced/untraced"
+            else
+                echo "error: tracing changed the decoded tokens" >&2
+                FAIL=1
+            fi
+            if command -v python3 >/dev/null 2>&1; then
+                if python3 - bench_out/trace_remote.json <<'PYEOF'
+import json, sys
+t = json.load(open(sys.argv[1]))
+evs = t["traceEvents"]
+tid = t["otherData"]["trace_id"]
+assert tid.startswith("0x") and int(tid, 16) != 0, tid
+xs = [e for e in evs if e.get("ph") == "X"]
+assert xs, "no duration events"
+assert all(e["dur"] >= 0 for e in xs), "negative span duration"
+names = {e["name"] for e in xs}
+assert "decode.step" in names, sorted(names)
+assert "fabric.send" in names, sorted(names)
+remote = [e for e in xs if e.get("cat") == "remote"]
+assert remote, "no echoed shared-node spans"
+assert all(e["pid"] >= 2 for e in remote), "remote span on client pid"
+print("trace ok: %d events (%d remote), trace id %s"
+      % (len(evs), len(remote), tid))
+PYEOF
+                then
+                    echo "tracing smoke: stitched trace validated"
+                else
+                    echo "error: trace JSON failed validation" >&2
+                    FAIL=1
+                fi
+            else
+                # no python3 on the runner: structural spot checks only
+                if grep -q '"traceEvents"' bench_out/trace_remote.json \
+                   && grep -q '"decode.step"' bench_out/trace_remote.json \
+                   && grep -q '"remote"' bench_out/trace_remote.json \
+                   && grep -q '"trace_id"' bench_out/trace_remote.json; then
+                    echo "tracing smoke: trace spot-checked (no python3)"
+                else
+                    echo "error: trace JSON missing expected spans" >&2
+                    FAIL=1
+                fi
+            fi
+        else
+            echo "error: tracing smoke run failed" >&2
+            cat bench_out/trace_node.log >&2 || true
+            FAIL=1
+        fi
+        kill "$NODE_PID" 2>/dev/null
+        trap - EXIT
+    else
+        echo "error: release build for the tracing smoke failed" >&2
         FAIL=1
     fi
 fi
