@@ -121,6 +121,36 @@ fn serving_from_json(j: &Json) -> Result<ServingConfig> {
             .collect::<Result<_>>()?;
         c.shards = crate::plan::ShardAssignment::parse_pairs(&pairs)?;
     }
+    if let Some(v) = j.opt("step_tokens") {
+        c.step_tokens = v.as_usize()?;
+    }
+    if let Some(v) = j.opt("prefill_chunk") {
+        c.prefill_chunk = v.as_usize()?;
+    }
+    if let Some(v) = j.opt("preempt_policy") {
+        let s = v.as_str()?;
+        c.preempt_policy = crate::scheduler::PreemptPolicy::from_str(s)
+            .with_context(|| format!(
+                "unknown preempt_policy '{s}' (hold|recompute)"))?;
+    }
+    if let Some(v) = j.opt("tenant_weights") {
+        c.tenant_weights = v
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let s = p.as_str()?;
+                let (name, w) = s.split_once('=').with_context(|| {
+                    format!("tenant_weights entry '{s}' wants name=weight")
+                })?;
+                let w: f64 = w.parse().with_context(|| {
+                    format!("bad weight in tenant_weights entry '{s}'")
+                })?;
+                anyhow::ensure!(w > 0.0,
+                                "tenant weight must be > 0 in '{s}'");
+                Ok((name.to_string(), w))
+            })
+            .collect::<Result<_>>()?;
+    }
     Ok(c)
 }
 
@@ -246,6 +276,38 @@ mod tests {
         let bad = Json::parse(r#"{"serving": {"kv_dtype": "fp4"}}"#)
             .unwrap();
         assert!(FileConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn serving_loop_knobs_parse() {
+        use crate::scheduler::PreemptPolicy;
+        let j = Json::parse(
+            r#"{"serving": {"step_tokens": 128, "prefill_chunk": 64,
+                            "preempt_policy": "recompute",
+                            "tenant_weights": ["teamA=2", "teamB=0.5"]}}"#,
+        )
+        .unwrap();
+        let s = FileConfig::from_json(&j).unwrap().serving.unwrap();
+        assert_eq!(s.step_tokens, 128);
+        assert_eq!(s.prefill_chunk, 64);
+        assert_eq!(s.preempt_policy, PreemptPolicy::Recompute);
+        assert_eq!(s.tenant_weight("teamA"), 2.0);
+        assert_eq!(s.tenant_weight("teamB"), 0.5);
+        assert_eq!(s.tenant_weight("other"), 1.0);
+        let d = ServingConfig::default();
+        assert_eq!(d.step_tokens, 256);
+        assert_eq!(d.prefill_chunk, 32);
+        assert_eq!(d.preempt_policy, PreemptPolicy::Hold);
+        for bad in [
+            r#"{"serving": {"preempt_policy": "drop"}}"#,
+            r#"{"serving": {"tenant_weights": ["teamA"]}}"#,
+            r#"{"serving": {"tenant_weights": ["teamA=fast"]}}"#,
+            r#"{"serving": {"tenant_weights": ["teamA=0"]}}"#,
+        ] {
+            assert!(FileConfig::from_json(&Json::parse(bad).unwrap())
+                        .is_err(),
+                    "{bad} should be rejected");
+        }
     }
 
     #[test]

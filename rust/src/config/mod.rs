@@ -123,6 +123,25 @@ pub struct ServingConfig {
     /// [`ShardAssignment`][crate::plan::ShardAssignment] and
     /// `docs/ARCHITECTURE.md`.
     pub shards: crate::plan::ShardAssignment,
+    /// Per-tick token budget shared by decode rows (1 token each) and
+    /// prefill chunk tokens (JSON `serving.step_tokens`, CLI
+    /// `--step-tokens`); `0` = unlimited (no budget). Only meaningful
+    /// together with `prefill_chunk`.
+    pub step_tokens: usize,
+    /// Chunked-prefill chunk size in prompt tokens (JSON
+    /// `serving.prefill_chunk`, CLI `--prefill-chunk`); `0` = whole
+    /// prompt at once (the pre-chunking baseline). Keep it a multiple
+    /// of the prefill slab (`max_batch.min(32)`) so chunk boundaries
+    /// land on the same slab cuts as unchunked prefill — that is what
+    /// makes chunked and unchunked runs bit-identical.
+    pub prefill_chunk: usize,
+    /// What preemption does to a displaced request's unique KV (JSON
+    /// `serving.preempt_policy` as `"hold"`/`"recompute"`, CLI
+    /// `--preempt`). Session-bound requests always hold.
+    pub preempt_policy: crate::scheduler::PreemptPolicy,
+    /// Per-tenant fair-share weights (JSON `serving.tenant_weights` as
+    /// `["teamA=2", "teamB=1"]`); unlisted tenants weigh 1.0.
+    pub tenant_weights: Vec<(String, f64)>,
 }
 
 impl Default for ServingConfig {
@@ -139,13 +158,39 @@ impl Default for ServingConfig {
             kv_dtype: crate::tensor::KvDtype::F32,
             pin_threads: false,
             shards: crate::plan::ShardAssignment::default(),
+            step_tokens: 256,
+            prefill_chunk: 32,
+            preempt_policy: crate::scheduler::PreemptPolicy::Hold,
+            tenant_weights: Vec::new(),
         }
+    }
+}
+
+impl ServingConfig {
+    /// Fair-share weight of a tenant (1.0 unless configured).
+    pub fn tenant_weight(&self, tenant: &str) -> f64 {
+        self.tenant_weights
+            .iter()
+            .find(|(t, _)| t == tenant)
+            .map(|&(_, w)| w)
+            .unwrap_or(1.0)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tenant_weight_lookup() {
+        let mut c = ServingConfig::default();
+        assert_eq!(c.tenant_weight("anyone"), 1.0);
+        c.tenant_weights =
+            vec![("a".to_string(), 2.0), ("b".to_string(), 0.5)];
+        assert_eq!(c.tenant_weight("a"), 2.0);
+        assert_eq!(c.tenant_weight("b"), 0.5);
+        assert_eq!(c.tenant_weight("c"), 1.0);
+    }
 
     #[test]
     fn tiny_consistency() {

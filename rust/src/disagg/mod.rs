@@ -1025,6 +1025,33 @@ pub fn synthetic_store() -> Result<SharedStore> {
                          SharedStore::empty(SYNTH_CHUNK)))
 }
 
+/// A complete artifact-free serving engine over the synthetic store:
+/// synthetic weights + [`SYNTH_DOMAIN`]/[`SYNTH_DOMAIN_B`], native
+/// backend per `cfg` (threads/kernel/kv-dtype honored). This is what
+/// `moska serve --synthetic` and the load generator's in-process mode
+/// run against — no artifacts directory needed anywhere.
+pub fn synthetic_engine(cfg: crate::config::ServingConfig)
+                        -> Result<crate::engine::Engine> {
+    use crate::util::threadpool::ThreadPool;
+    let model = ModelConfig::tiny();
+    let store = synthetic_store()?;
+    let n = ThreadPool::resolve_threads(cfg.exec_threads);
+    let be = if n <= 1 {
+        crate::runtime::NativeBackend::with_threads(
+            model.clone(), SYNTH_CHUNK, 1,
+        )
+    } else {
+        crate::runtime::NativeBackend::with_pool(
+            model.clone(), SYNTH_CHUNK,
+            std::sync::Arc::new(ThreadPool::new(n)),
+        )
+    };
+    let be = Box::new(be.with_kernel_spec(cfg.kernel));
+    Ok(crate::engine::Engine::new(
+        be, synthetic_weights(), store, cfg, 4096,
+    ))
+}
+
 // --------------------------------------------------------------- the CLI
 
 /// `moska disagg`: sweep batch sizes and print the per-node profile.

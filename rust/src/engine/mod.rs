@@ -27,7 +27,7 @@
 //! is also the unit of work the disaggregated runtime
 //! ([`disagg`][crate::disagg]) ships between nodes.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -43,7 +43,8 @@ use crate::router::{ChunkSet, Router};
 use crate::runtime::arena::{ArenaStats, TensorArena};
 use crate::runtime::Backend;
 use crate::scheduler::{Admit, AdmissionController, Demand, Lifecycle,
-                       LifecycleTracker, SloTracker, StepScheduler};
+                       LifecycleTracker, PreemptPolicy, PrefillAssign,
+                       Priority, ReqMeta, SloTracker, StepScheduler};
 use crate::tensor::Tensor;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
@@ -83,16 +84,26 @@ pub struct RequestResult {
 struct Live {
     req: Request,
     kv: RequestKv,
-    /// Shared-prefix length (kept for observability/debug dumps).
-    #[allow(dead_code)]
+    /// Shared-prefix length (positions the unique KV after the domain).
     shared_len: usize,
     cur: i32,
     pos: i32,
     generated: Vec<i32>,
+    /// Tokens to replay as forced decode inputs after a `Recompute`
+    /// preemption (already in `generated`; never re-sampled, never
+    /// re-emitted — the bit-identity contract for greedy requests).
+    replay: VecDeque<i32>,
     logits_trace: Vec<Vec<f32>>,
     queue_secs: f64,
+    /// Accumulated across prefill chunks (chunked prefill spreads one
+    /// prompt over several ticks).
     prefill_secs: f64,
     decode_t0: Option<Instant>,
+    /// Decode time banked across preemptions (decode_t0 folds in here
+    /// when the request leaves the batch).
+    decode_accum: f64,
+    /// TTFT observed once — a recompute re-prefill must not re-count.
+    ttft_done: bool,
 }
 
 /// The serving engine (single-node; [`disagg`][crate::disagg] splits it).
@@ -117,6 +128,12 @@ pub struct Engine {
     live: HashMap<usize, Live>,
     pending: HashMap<usize, (Request, Instant)>,
     results: Vec<RequestResult>,
+    /// Tokens sampled since the last [`take_emitted`][Engine::take_emitted]
+    /// drain, in sampling order — the streaming (SSE) feed.
+    emitted: Vec<(usize, i32)>,
+    /// Deterministic work counter: forwarded rows (prefill + decode).
+    /// Clock-free progress measure for the chunking benches.
+    work_units: u64,
     rng: Rng,
     next_id: usize,
     /// Running sum/count for the realized GEMM batching factor.
@@ -142,7 +159,8 @@ impl Engine {
             .with_dtype(cfg.kv_dtype);
         Engine {
             router: Router::new(cfg.top_k),
-            sched: StepScheduler::new(cfg.max_batch),
+            sched: StepScheduler::new(cfg.max_batch)
+                .with_budget(cfg.step_tokens, cfg.prefill_chunk),
             admission: AdmissionController::new(1024),
             slo: SloTracker::new(cfg.slo_tokens_per_sec),
             lifecycle: LifecycleTracker::new(),
@@ -157,6 +175,8 @@ impl Engine {
             live: HashMap::new(),
             pending: HashMap::new(),
             results: Vec::new(),
+            emitted: Vec::new(),
+            work_units: 0,
             rng: Rng::new(0xDEC0DE),
             next_id: 0,
             batch_pairs: 0,
@@ -173,6 +193,16 @@ impl Engine {
     /// Submit a request; returns its id or an admission error.
     pub fn submit(&mut self, domain: Option<&str>, prompt: Vec<i32>,
                   max_new: usize, sampler: Sampler) -> Result<usize> {
+        self.submit_opts(domain, prompt, max_new, sampler, "default",
+                         Priority::Standard)
+    }
+
+    /// Submit with serving-loop options: the tenant charged for
+    /// fair-share accounting (weight from `serving.tenant_weights`) and
+    /// the priority class.
+    pub fn submit_opts(&mut self, domain: Option<&str>, prompt: Vec<i32>,
+                       max_new: usize, sampler: Sampler, tenant: &str,
+                       priority: Priority) -> Result<usize> {
         if let Some(d) = domain {
             self.shared.domain(d)?; // validate early
         }
@@ -195,6 +225,12 @@ impl Engine {
         }
         let id = self.next_id;
         self.next_id += 1;
+        let meta = ReqMeta {
+            tenant: tenant.to_string(),
+            weight: self.cfg.tenant_weight(tenant),
+            priority,
+            prompt_tokens: prompt.len(),
+        };
         let req = Request {
             id,
             domain: domain.map(str::to_string),
@@ -204,7 +240,7 @@ impl Engine {
             session: None,
         };
         self.pending.insert(id, (req, Instant::now()));
-        self.sched.enqueue(id);
+        self.sched.enqueue(id, meta);
         self.metrics.count("requests_submitted", 1);
         Ok(id)
     }
@@ -213,8 +249,12 @@ impl Engine {
     /// caller already did and carries the session id).
     pub(crate) fn submit_request(&mut self, req: Request) -> usize {
         let id = req.id;
+        let meta = ReqMeta {
+            prompt_tokens: req.prompt.len(),
+            ..Default::default()
+        };
         self.pending.insert(id, (req, Instant::now()));
-        self.sched.enqueue(id);
+        self.sched.enqueue(id, meta);
         self.metrics.count("requests_submitted", 1);
         id
     }
@@ -227,6 +267,20 @@ impl Engine {
     /// Take completed results accumulated so far.
     pub fn take_results(&mut self) -> Vec<RequestResult> {
         std::mem::take(&mut self.results)
+    }
+
+    /// Drain tokens sampled since the last call, in sampling order —
+    /// the incremental feed the streaming (SSE) path forwards as each
+    /// step completes. Replayed (post-recompute) tokens never reappear
+    /// here: they were emitted when first sampled.
+    pub fn take_emitted(&mut self) -> Vec<(usize, i32)> {
+        std::mem::take(&mut self.emitted)
+    }
+
+    /// Rows forwarded so far (prefill + decode) — a deterministic,
+    /// clock-free progress measure the chunking benches compare on.
+    pub fn work_units(&self) -> u64 {
+        self.work_units
     }
 
     /// Realized Shared-KV GEMM batching factor since start.
@@ -269,45 +323,133 @@ impl Engine {
             .collect()
     }
 
-    /// Advance the engine by one step (prefill newly admitted requests,
-    /// then one decode step for the live batch). Returns true if any work
+    /// Advance the engine by one scheduler tick: apply preemptions and
+    /// admissions, run the tick's prefill chunk assignments, then one
+    /// decode step for the decode-phase rows. Returns true if any work
     /// remains afterwards.
+    ///
+    /// The scheduler's decisions are pure data ([`Tick`]
+    /// [crate::scheduler::Tick]); the engine only executes them, so a
+    /// fixed decision trace yields bit-identical tokens across kernel
+    /// flavors and thread counts (per-request decode math never depends
+    /// on batch composition).
     pub fn step(&mut self) -> Result<bool> {
-        let newly = self.sched.refill();
-        for id in newly {
+        let tick = self.sched.tick();
+        for id in &tick.preempted {
+            self.apply_preempt(*id);
+        }
+        for id in &tick.admitted {
+            // a Hold-preempted request re-admits with its Live state
+            // (and pages) intact — nothing to construct
+            if self.live.contains_key(id) {
+                continue;
+            }
             let (req, submitted) =
-                self.pending.remove(&id).context("pending missing")?;
-            let t0 = Instant::now();
-            let queue_secs = (t0 - submitted).as_secs_f64();
-            let _g = crate::span!("prefill", "engine", "id" => id,
-                                  "prompt" => req.prompt.len());
-            let live = self.prefill(req)?;
-            let mut live = live;
-            live.queue_secs = queue_secs;
-            live.prefill_secs = t0.elapsed().as_secs_f64();
-            self.metrics
-                .observe_ns("prefill_ns", t0.elapsed().as_nanos() as u64);
-            // request lifecycle: time spent queued, and time to first
-            // token (prefill samples the first token at its end, so
-            // TTFT = queue + prefill)
+                self.pending.remove(id).context("pending missing")?;
+            let queue_secs = submitted.elapsed().as_secs_f64();
+            let shared_len = match &req.domain {
+                Some(d) => self.shared.domain(d)?.token_len(),
+                None => 0,
+            };
+            // session continuation: resume the conversation's unique KV
+            // (prefix reuse, §II.A) instead of starting fresh
+            let kv = match req.session {
+                Some(sid) => self
+                    .sessions
+                    .get_mut(&sid)
+                    .context("unknown session")?
+                    .take_kv()?,
+                None => RequestKv::new(
+                    self.backend.model().n_layers, shared_len),
+            };
             self.metrics
                 .observe_ns("req_queue_ns", (queue_secs * 1e9) as u64);
-            self.metrics.observe_ns(
-                "req_ttft_ns",
-                ((queue_secs + live.prefill_secs) * 1e9) as u64,
-            );
-            self.live.insert(id, live);
+            self.live.insert(*id, Live {
+                req,
+                kv,
+                shared_len,
+                cur: 0,
+                pos: 0,
+                generated: Vec::new(),
+                replay: VecDeque::new(),
+                logits_trace: Vec::new(),
+                queue_secs,
+                prefill_secs: 0.0,
+                decode_t0: None,
+                decode_accum: 0.0,
+                ttft_done: false,
+            });
         }
-        if self.live.is_empty() {
-            return Ok(self.has_work());
+        for pa in &tick.prefill {
+            self.exec_prefill(pa)?;
         }
-        let t0 = Instant::now();
-        self.decode_step()?;
-        let dt = t0.elapsed();
-        self.slo.record_step(dt);
-        self.metrics.observe_ns("decode_step_ns", dt.as_nanos() as u64);
-        self.metrics.count("decode_steps", 1);
+        if !tick.decode.is_empty() {
+            let t0 = Instant::now();
+            self.decode_step(&tick.decode)?;
+            let dt = t0.elapsed();
+            self.slo.record_step(dt);
+            self.metrics.observe_ns("decode_step_ns",
+                                    dt.as_nanos() as u64);
+            self.metrics.count("decode_steps", 1);
+        }
         Ok(self.has_work())
+    }
+
+    /// Preempt a live request out of the batch (ops/test surface; the
+    /// scheduler's own priority preemption takes the same path).
+    /// Returns false when the id is not in the active batch.
+    pub fn preempt(&mut self, id: usize) -> Result<bool> {
+        if !self.sched.force_preempt(id) {
+            return Ok(false);
+        }
+        self.apply_preempt(id);
+        Ok(true)
+    }
+
+    /// Engine-side effect of a preemption, per the configured policy:
+    /// `Hold` keeps the unique KV resident; `Recompute` releases the
+    /// pages and queues the generated tokens for forced replay after
+    /// re-prefill. Session requests always hold (their KV belongs to
+    /// the conversation, not the request).
+    fn apply_preempt(&mut self, id: usize) {
+        self.metrics.count("preemptions", 1);
+        let Some(l) = self.live.get_mut(&id) else { return };
+        if let Some(t0) = l.decode_t0.take() {
+            l.decode_accum += t0.elapsed().as_secs_f64();
+        }
+        let hold = self.cfg.preempt_policy == PreemptPolicy::Hold
+            || l.req.session.is_some();
+        if hold {
+            return;
+        }
+        // recompute: drop the pages now (that is the point of the
+        // policy); the prompt re-prefills and the already-generated
+        // tokens replay as forced decode inputs on re-admission
+        l.kv.rollback_uncommitted();
+        let n_layers = self.backend.model().n_layers;
+        let mut old = std::mem::replace(
+            &mut l.kv, RequestKv::new(n_layers, l.shared_len));
+        old.release(&mut self.pool);
+        l.replay = l.generated.iter().copied().collect();
+        l.cur = 0;
+        l.pos = 0;
+        self.sched.reset_progress(id);
+    }
+
+    /// Drop a request entirely (client disconnect mid-stream): remove
+    /// it from the scheduler and release its pages. Session-turn
+    /// cancellation also releases — the session cannot continue from a
+    /// half-built turn.
+    pub fn cancel(&mut self, id: usize) {
+        let known = self.sched.cancel(id);
+        self.pending.remove(&id);
+        if let Some(mut l) = self.live.remove(&id) {
+            l.kv.rollback_uncommitted();
+            l.kv.release(&mut self.pool);
+        }
+        if known {
+            self.metrics.count("requests_cancelled", 1);
+        }
     }
 
     /// Run until every request completes; returns all results.
@@ -318,65 +460,74 @@ impl Engine {
 
     // ------------------------------------------------------------ prefill
 
-    /// Prefill one request: process prompt tokens in bucket-sized slabs.
-    fn prefill(&mut self, req: Request) -> Result<Live> {
-        let model = self.backend.model().clone();
-        let chunk = self.backend.chunk_size();
-        let shared_len = match &req.domain {
-            Some(d) => self.shared.domain(d)?.token_len(),
-            None => 0,
-        };
-        // session continuation: resume the conversation's unique KV
-        // (prefix reuse, §II.A) instead of starting fresh
-        let mut kv = match req.session {
-            Some(sid) => self
-                .sessions
-                .get_mut(&sid)
-                .context("unknown session")?
-                .take_kv()?,
-            None => RequestKv::new(model.n_layers, shared_len),
-        };
+    /// Run one prefill chunk assignment: forward prompt tokens
+    /// `[start, end)` in slabs cut at absolute slab multiples
+    /// ([`prefill_slabs`][crate::plan::prefill_slabs] — the cuts never
+    /// depend on the chunking, which keeps chunked and unchunked runs
+    /// bit-identical). On the prompt's last chunk the request's first
+    /// token is sampled — or replayed, when resuming from a
+    /// `Recompute` preemption.
+    fn exec_prefill(&mut self, pa: &PrefillAssign) -> Result<()> {
+        let t0 = Instant::now();
+        let mut l = self
+            .live
+            .remove(&pa.id)
+            .context("prefill assignment for unknown request")?;
+        let _g = crate::span!("prefill", "engine", "id" => pa.id,
+                              "start" => pa.start, "end" => pa.end);
+        // kv holds prior turns + previously prefilled chunks, so the
+        // prompt-relative offset i sits at absolute position base + i
+        let base = (l.shared_len + l.kv.len) - pa.start;
         let slab = self.cfg.max_batch.min(32);
         let mut last_logits: Option<Vec<f32>> = None;
-
-        let n = req.prompt.len();
-        let base = shared_len + kv.len; // continue after any prior turns
-        let mut s = 0;
-        while s < n {
-            let e = (s + slab).min(n);
-            let toks = Tensor::i32(&[e - s], req.prompt[s..e].to_vec());
-            let pos: Vec<i32> =
-                (s..e).map(|i| (base + i) as i32).collect();
-            let logits = self.forward_slab(
-                &req, &mut kv, &toks, &pos, e == n,
-            )?;
-            if e == n {
+        for (s, e) in crate::plan::prefill_slabs(pa.start, pa.end, slab) {
+            let toks = Tensor::i32(&[e - s], l.req.prompt[s..e].to_vec());
+            let pos: Vec<i32> = (s..e).map(|i| (base + i) as i32).collect();
+            let want = pa.last && e == pa.end;
+            let logits =
+                self.forward_slab(&l.req, &mut l.kv, &toks, &pos, want)?;
+            if want {
                 last_logits = logits;
             }
-            s = e;
+            self.work_units += (e - s) as u64;
         }
-        let logits = last_logits.context("prefill produced no logits")?;
-        let first = self.sample_row(&req.sampler, &logits);
-        let mut live = Live {
-            pos: (base + n) as i32,
-            kv,
-            shared_len,
-            cur: first,
-            generated: vec![first],
-            logits_trace: Vec::new(),
-            queue_secs: 0.0,
-            prefill_secs: 0.0,
-            decode_t0: None,
-            req,
-        };
-        if self.capture_logits {
-            live.logits_trace.push(logits);
+        self.metrics
+            .count("tokens_prefilled", (pa.end - pa.start) as u64);
+        l.prefill_secs += t0.elapsed().as_secs_f64();
+        if pa.last {
+            let logits =
+                last_logits.context("prefill produced no logits")?;
+            // resuming from Recompute: the first token was already
+            // sampled (and emitted) in a previous life — force it
+            let first = match l.replay.pop_front() {
+                Some(t) => t,
+                None => {
+                    let t = self.sample_row(&l.req.sampler, &logits);
+                    if self.capture_logits {
+                        l.logits_trace.push(logits);
+                    }
+                    l.generated.push(t);
+                    self.emitted.push((pa.id, t));
+                    self.metrics.count("tokens_generated", 1);
+                    t
+                }
+            };
+            l.cur = first;
+            l.pos = (l.shared_len + l.kv.len) as i32;
+            if !l.ttft_done {
+                l.ttft_done = true;
+                // request lifecycle: time to first token = queue +
+                // (possibly chunk-spread) prefill
+                self.metrics.observe_ns(
+                    "prefill_ns", (l.prefill_secs * 1e9) as u64);
+                self.metrics.observe_ns(
+                    "req_ttft_ns",
+                    ((l.queue_secs + l.prefill_secs) * 1e9) as u64,
+                );
+            }
         }
-        self.metrics.count("tokens_prefilled", n as u64);
-        self.metrics.count("tokens_generated", 1);
-        // chunk is unused only when every request lacks a domain
-        let _ = chunk;
-        Ok(live)
+        self.live.insert(pa.id, l);
+        Ok(())
     }
 
     /// Forward a slab of tokens for one request (prefill path).
@@ -459,16 +610,15 @@ impl Engine {
 
     // ------------------------------------------------------------- decode
 
-    /// One decode step for the whole live batch: **plan**, then
+    /// One decode step for the tick's decode rows: **plan**, then
     /// **execute**. This is the hot path (see the module docs).
-    fn decode_step(&mut self) -> Result<()> {
+    fn decode_step(&mut self, order: &[usize]) -> Result<()> {
         let model = self.backend.model().clone();
-        let order: Vec<usize> = self.sched.live().to_vec();
         let b = order.len();
         if b == 0 {
             return Ok(());
         }
-        for id in &order {
+        for id in order {
             let l = self.live.get_mut(id).unwrap();
             if l.decode_t0.is_none() {
                 l.decode_t0 = Some(Instant::now());
@@ -566,7 +716,7 @@ impl Engine {
                 .map(|(id, l)| (*id, l))
                 .collect();
             let mut kvs: Vec<&mut RequestKv> = Vec::with_capacity(b);
-            for id in &order {
+            for id in order {
                 let l: &mut Live = by_id.remove(id).expect("live entry");
                 kvs.push(&mut l.kv);
             }
@@ -588,8 +738,8 @@ impl Engine {
         // the engine-side timer so lm_head is measured alone
         phase(&self.metrics, "phase_exec_total_ns");
 
-        // each live request appended exactly one token's K/V this step
-        for id in &order {
+        // each decode row appended exactly one token's K/V this step
+        for id in order {
             self.live.get_mut(id).unwrap().kv.commit(1);
         }
         let logits = self.backend.lm_head(
@@ -597,26 +747,40 @@ impl Engine {
         )?;
         phase(&self.metrics, "phase_lm_head_ns");
 
-        // sample + bookkeeping
+        // sample + bookkeeping. Replayed tokens (Recompute resume) are
+        // forced: not re-sampled, not re-emitted, not re-counted — and
+        // the rng is not advanced, so the bit-identity contract under
+        // preemption holds for greedy sampling (stochastic samplers
+        // would see a shifted rng stream; documented limitation).
         let mut done_ids = Vec::new();
         for (i, id) in order.iter().enumerate() {
-            let row = logits.row(i).to_vec();
             let l = self.live.get_mut(id).unwrap();
-            let tok = match &l.req.sampler {
-                Sampler::Greedy => crate::model::sampling::argmax(&row),
-                s => s.sample(&row, &mut self.rng),
+            let tok = match l.replay.pop_front() {
+                Some(t) => t,
+                None => {
+                    let row = logits.row(i).to_vec();
+                    let t = match &l.req.sampler {
+                        Sampler::Greedy => {
+                            crate::model::sampling::argmax(&row)
+                        }
+                        s => s.sample(&row, &mut self.rng),
+                    };
+                    if self.capture_logits {
+                        l.logits_trace.push(row);
+                    }
+                    l.generated.push(t);
+                    self.emitted.push((*id, t));
+                    self.metrics.count("tokens_generated", 1);
+                    t
+                }
             };
-            if self.capture_logits {
-                l.logits_trace.push(row);
-            }
             l.cur = tok;
             l.pos += 1;
-            l.generated.push(tok);
-            self.metrics.count("tokens_generated", 1);
-            if l.generated.len() >= l.req.max_new {
+            if l.generated.len() >= l.req.max_new && l.replay.is_empty() {
                 done_ids.push(*id);
             }
         }
+        self.work_units += b as u64;
         for id in done_ids.iter() {
             let mut l = self.live.remove(id).unwrap();
             match l.req.session {
@@ -632,10 +796,10 @@ impl Engine {
                 }
                 None => l.kv.release(&mut self.pool),
             }
-            let decode_secs = l
-                .decode_t0
-                .map(|t| t.elapsed().as_secs_f64())
-                .unwrap_or(0.0);
+            let decode_secs = l.decode_accum
+                + l.decode_t0
+                    .map(|t| t.elapsed().as_secs_f64())
+                    .unwrap_or(0.0);
             // lifecycle: decode wall time and mean time-per-output-token
             // (the first token came from prefill, hence n-1)
             self.metrics
@@ -759,11 +923,43 @@ pub fn build_engine_from_args(args: &Args)
         crate::runtime::simd::set_global_spec(kernel)?;
     }
     let kv_dtype = resolve_kv_dtype(args.get("kv-dtype"))?;
-    let cfg = ServingConfig {
+    let mut cfg = ServingConfig {
         top_k, max_batch, exec_threads, kernel, kv_dtype,
         ..Default::default()
     };
+    apply_serving_flags(&mut cfg, args)?;
     build_engine(&dir, args.get("backend").unwrap_or("xla"), cfg)
+}
+
+/// Apply the serving-loop CLI flags (`--step-tokens`, `--prefill-chunk`,
+/// `--preempt`) onto a config; an empty/missing flag leaves the config
+/// value (file or default) untouched. Commands without these flags pass
+/// through unchanged.
+pub fn apply_serving_flags(cfg: &mut ServingConfig, args: &Args)
+                           -> Result<()> {
+    if let Some(s) = args.get("step-tokens") {
+        if !s.is_empty() {
+            cfg.step_tokens = s
+                .parse()
+                .with_context(|| format!("bad --step-tokens '{s}'"))?;
+        }
+    }
+    if let Some(s) = args.get("prefill-chunk") {
+        if !s.is_empty() {
+            cfg.prefill_chunk = s
+                .parse()
+                .with_context(|| format!("bad --prefill-chunk '{s}'"))?;
+        }
+    }
+    if let Some(s) = args.get("preempt") {
+        if !s.is_empty() {
+            cfg.preempt_policy = crate::scheduler::PreemptPolicy::from_str(s)
+                .with_context(|| {
+                    format!("unknown --preempt '{s}' (hold|recompute)")
+                })?;
+        }
+    }
+    Ok(())
 }
 
 /// Resolve the K/V storage dtype: explicit CLI value > `MOSKA_KV_DTYPE`

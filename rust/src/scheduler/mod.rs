@@ -1,13 +1,29 @@
-//! Scheduling: admission control, continuous batching, SLO tracking.
+//! Scheduling: admission control, token-budgeted continuous batching
+//! with chunked prefill, tenant fairness, priority preemption, and SLO
+//! tracking.
 //!
-//! The paper's workload (§IV) targets 35 tok/s per request; the scheduler
-//! admits requests while KV pages and the batch bucket allow it, keeps the
-//! decode batch full via continuous batching (finished requests release
-//! slots mid-flight), and tracks whether the realized step time still
-//! meets the SLO — the same admission logic the analytical model uses to
-//! derive max batch, so measured and modeled batch limits are comparable.
+//! The paper's workload (§IV) targets 35 tok/s per request; its batched
+//! shared-KV GEMM only pays off when the scheduler keeps concurrent
+//! requests over the same shared corpora in flight together. The
+//! production loop here re-cuts admit→step→retire into token-budgeted
+//! **ticks**: every tick the [`StepScheduler`] decides which queued
+//! requests join the batch (priority order, with preemption of
+//! lower-priority live requests), which live requests decode one row,
+//! and which prefill one **chunk** of their prompt — so a long prompt
+//! no longer stalls decode for everyone else. Fairness across tenants
+//! is weighted: every token a tenant is served charges `1/weight` to
+//! its deficit counter, and prefill bandwidth goes to the least-served
+//! tenant first.
+//!
+//! Determinism contract: [`StepScheduler::tick`] is a pure function of
+//! the scheduler's state — no clocks, no randomness — so a scripted
+//! arrival sequence replays to the identical step-by-step batch
+//! composition (see `tests/integration_scheduler.rs`), and fixed
+//! scheduler decisions yield bit-identical tokens across kernel
+//! flavors and thread counts (the engine's per-row decode math never
+//! depends on batch composition).
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::time::Duration;
 
 /// Admission decision inputs for one request.
@@ -50,55 +66,421 @@ impl AdmissionController {
     }
 }
 
-/// Continuous-batching scheduler over opaque request ids.
+/// Request priority class. Lower sorts first: `Interactive` beats
+/// `Standard` beats `Batch` both for admission order and for
+/// preemption (a strictly higher class may displace a live request of
+/// a lower class when the batch is full).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash,
+         Default)]
+pub enum Priority {
+    Interactive,
+    #[default]
+    Standard,
+    Batch,
+}
+
+impl Priority {
+    pub fn from_str(s: &str) -> Option<Priority> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Some(Priority::Interactive),
+            "standard" | "" => Some(Priority::Standard),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// What happens to a preempted request's unique KV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptPolicy {
+    /// Keep the pages allocated; the request resumes exactly where it
+    /// stopped (fast resume, pages stay reserved while queued).
+    #[default]
+    Hold,
+    /// Release the pages; on re-admission the prompt is re-prefilled
+    /// and already-generated tokens are replayed as forced decode
+    /// inputs (cheap memory, compute paid again).
+    Recompute,
+}
+
+impl PreemptPolicy {
+    pub fn from_str(s: &str) -> Option<PreemptPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "hold" | "" => Some(PreemptPolicy::Hold),
+            "recompute" => Some(PreemptPolicy::Recompute),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PreemptPolicy::Hold => "hold",
+            PreemptPolicy::Recompute => "recompute",
+        }
+    }
+}
+
+/// Scheduling metadata carried per request.
+#[derive(Debug, Clone)]
+pub struct ReqMeta {
+    pub tenant: String,
+    /// Fair-share weight (> 0); every served token charges `1/weight`
+    /// to the tenant's deficit counter.
+    pub weight: f64,
+    pub priority: Priority,
+    /// Prompt length in tokens (drives chunked prefill).
+    pub prompt_tokens: usize,
+}
+
+impl Default for ReqMeta {
+    fn default() -> ReqMeta {
+        ReqMeta {
+            tenant: "default".to_string(),
+            weight: 1.0,
+            priority: Priority::Standard,
+            prompt_tokens: 0,
+        }
+    }
+}
+
+/// Where a request is in its lifecycle, scheduler-side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// `done` prompt tokens prefilled so far.
+    Prefill { done: usize },
+    Decode,
+}
+
+/// One chunk of prefill work assigned by a tick: forward prompt tokens
+/// `[start, end)`. `last` marks the prompt's final chunk — the engine
+/// samples the request's first token there.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefillAssign {
+    pub id: usize,
+    pub start: usize,
+    pub end: usize,
+    pub last: bool,
+}
+
+/// One tick's decisions, in application order: preempt, admit, prefill
+/// chunks, decode rows. Pure data — replayable and comparable in tests.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Tick {
+    /// Requests moved queue → active this tick.
+    pub admitted: Vec<usize>,
+    /// Requests moved active → queue (displaced by higher priority).
+    pub preempted: Vec<usize>,
+    /// Prefill chunk assignments (may hold several chunks per id).
+    pub prefill: Vec<PrefillAssign>,
+    /// Active requests decoding one token this tick, in batch order.
+    pub decode: Vec<usize>,
+}
+
+struct Entry {
+    meta: ReqMeta,
+    phase: Phase,
+    /// Arrival sequence number (admission tiebreak: FIFO within class).
+    seq: u64,
+}
+
+/// Token-budgeted continuous-batching scheduler over opaque request
+/// ids. See the module docs for the tick algorithm; `step_tokens = 0`
+/// disables the budget and `prefill_chunk = 0` disables chunking
+/// (whole prompts at once — the pre-chunking baseline).
 pub struct StepScheduler {
     pub max_batch: usize,
+    /// Per-tick token budget shared by decode rows (1 token each) and
+    /// prefill chunk tokens; 0 = unlimited.
+    pub step_tokens: usize,
+    /// Prefill tokens per chunk assignment; 0 = whole prompt at once.
+    pub prefill_chunk: usize,
     queue: VecDeque<usize>,
-    live: Vec<usize>,
+    active: Vec<usize>,
+    entries: HashMap<usize, Entry>,
+    /// Weighted tokens served per tenant (deficit counters, rebased
+    /// every tick so they stay bounded).
+    served: HashMap<String, f64>,
+    seq: u64,
+    preemptions: u64,
 }
 
 impl StepScheduler {
     pub fn new(max_batch: usize) -> StepScheduler {
-        StepScheduler { max_batch, queue: VecDeque::new(), live: Vec::new() }
+        StepScheduler {
+            max_batch,
+            step_tokens: 0,
+            prefill_chunk: 0,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            entries: HashMap::new(),
+            served: HashMap::new(),
+            seq: 0,
+            preemptions: 0,
+        }
     }
 
-    pub fn enqueue(&mut self, id: usize) {
+    /// Set the per-tick token budget and prefill chunk size.
+    pub fn with_budget(mut self, step_tokens: usize, prefill_chunk: usize)
+                       -> StepScheduler {
+        self.step_tokens = step_tokens;
+        self.prefill_chunk = prefill_chunk;
+        self
+    }
+
+    /// Add a new request to the wait queue with its scheduling
+    /// metadata. A zero-length prompt enters directly in decode phase.
+    pub fn enqueue(&mut self, id: usize, meta: ReqMeta) {
+        let phase = if meta.prompt_tokens == 0 {
+            Phase::Decode
+        } else {
+            Phase::Prefill { done: 0 }
+        };
+        self.entries.insert(id, Entry { meta, phase, seq: self.seq });
+        self.seq += 1;
         self.queue.push_back(id);
     }
 
-    /// Fill free batch slots from the queue; returns newly activated ids.
-    pub fn refill(&mut self) -> Vec<usize> {
-        let mut newly = Vec::new();
-        while self.live.len() < self.max_batch {
-            match self.queue.pop_front() {
-                Some(id) => {
-                    self.live.push(id);
-                    newly.push(id);
-                }
-                None => break,
-            }
-        }
-        newly
+    fn key_of(&self, id: usize) -> (Priority, u64) {
+        let e = &self.entries[&id];
+        (e.meta.priority, e.seq)
     }
 
-    /// Remove finished requests from the live set. Set-membership lookup:
-    /// the old `done.contains` scan was O(live × done) per step, which
-    /// bites exactly when throughput is highest (large live batches with
-    /// many completions per step).
+    /// Fair-share sort key for prefill bandwidth: priority class first,
+    /// then least-served tenant (weighted), then arrival order.
+    fn prefill_key(&self, id: usize) -> (Priority, f64, u64) {
+        let e = &self.entries[&id];
+        let served =
+            self.served.get(&e.meta.tenant).copied().unwrap_or(0.0);
+        (e.meta.priority, served, e.seq)
+    }
+
+    /// Keep the deficit counters bounded and comparable: drop tenants
+    /// with no request present, then subtract the minimum. Both
+    /// operations are per-entry/order-independent, so map iteration
+    /// order cannot leak into the schedule.
+    fn rebase_served(&mut self) {
+        let present: HashSet<String> = self
+            .entries
+            .values()
+            .map(|e| e.meta.tenant.clone())
+            .collect();
+        self.served.retain(|t, _| present.contains(t));
+        // a present tenant that was never charged sits at 0 — it must
+        // anchor the min, or the only-charged tenant's deficit would be
+        // erased each tick and newcomers would starve
+        for t in &present {
+            self.served.entry(t.clone()).or_insert(0.0);
+        }
+        let min = self
+            .served
+            .values()
+            .copied()
+            .fold(f64::INFINITY, f64::min);
+        if min.is_finite() && min > 0.0 {
+            for v in self.served.values_mut() {
+                *v -= min;
+            }
+        }
+    }
+
+    fn charge(&mut self, id: usize, tokens: usize) {
+        let e = &self.entries[&id];
+        let w = e.meta.weight.max(1e-9);
+        let t = e.meta.tenant.clone();
+        *self.served.entry(t).or_insert(0.0) += tokens as f64 / w;
+    }
+
+    /// One scheduler step: preempt/admit, then split the token budget
+    /// between decode rows and prefill chunks. Deterministic — same
+    /// state in, same [`Tick`] out.
+    pub fn tick(&mut self) -> Tick {
+        let mut tick = Tick::default();
+        self.rebase_served();
+
+        // 1. priority preemption: while the batch is full, a strictly
+        // higher-priority queued request displaces the lowest-priority
+        // (latest-admitted) active one. Each swap strictly improves the
+        // active priority multiset, so the loop terminates.
+        while !self.queue.is_empty() && self.active.len() >= self.max_batch
+            && self.max_batch > 0
+        {
+            let cand = *self
+                .queue
+                .iter()
+                .min_by_key(|&&id| self.key_of(id))
+                .unwrap();
+            let (vi, victim) = {
+                let (vi, &victim) = self
+                    .active
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(_, &id)| self.key_of(id))
+                    .unwrap();
+                (vi, victim)
+            };
+            if self.key_of(cand).0 >= self.key_of(victim).0 {
+                break;
+            }
+            self.active.remove(vi);
+            self.queue.retain(|&q| q != cand);
+            self.queue.push_front(victim);
+            self.active.push(cand);
+            self.preemptions += 1;
+            tick.preempted.push(victim);
+            tick.admitted.push(cand);
+        }
+
+        // 2. fill free slots, best (priority, arrival) first
+        while self.active.len() < self.max_batch && !self.queue.is_empty() {
+            let cand = *self
+                .queue
+                .iter()
+                .min_by_key(|&&id| self.key_of(id))
+                .unwrap();
+            self.queue.retain(|&q| q != cand);
+            self.active.push(cand);
+            tick.admitted.push(cand);
+        }
+
+        // 3. decode rows: every active request past prefill decodes one
+        // token, in batch order (decode is never starved by prefill)
+        for &id in &self.active {
+            if self.entries[&id].phase == Phase::Decode {
+                tick.decode.push(id);
+            }
+        }
+        for i in 0..tick.decode.len() {
+            self.charge(tick.decode[i], 1);
+        }
+
+        // 4. prefill chunks under the remaining budget, fairest tenant
+        // first. With chunking off (prefill_chunk == 0) every prefill
+        // candidate gets its whole prompt — the pre-chunking baseline.
+        let budgeted = self.step_tokens != 0 && self.prefill_chunk != 0;
+        let mut budget =
+            self.step_tokens.saturating_sub(tick.decode.len());
+        loop {
+            let cand = self
+                .active
+                .iter()
+                .copied()
+                .filter(|id| {
+                    matches!(self.entries[id].phase, Phase::Prefill { .. })
+                })
+                .min_by(|&a, &b| {
+                    self.prefill_key(a)
+                        .partial_cmp(&self.prefill_key(b))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+            let Some(id) = cand else { break };
+            let Phase::Prefill { done } = self.entries[&id].phase else {
+                unreachable!()
+            };
+            let total = self.entries[&id].meta.prompt_tokens;
+            let remaining = total - done;
+            let chunk = if self.prefill_chunk == 0 {
+                remaining
+            } else {
+                self.prefill_chunk.min(remaining)
+            };
+            if budgeted
+                && chunk > budget
+                && !(tick.prefill.is_empty() && tick.decode.is_empty())
+            {
+                // out of budget — but an otherwise-empty tick still
+                // advances one chunk (progress guarantee)
+                break;
+            }
+            let end = done + chunk;
+            let last = end == total;
+            tick.prefill.push(PrefillAssign { id, start: done, end, last });
+            self.entries.get_mut(&id).unwrap().phase = if last {
+                Phase::Decode
+            } else {
+                Phase::Prefill { done: end }
+            };
+            self.charge(id, chunk);
+            if budgeted {
+                budget = budget.saturating_sub(chunk);
+                if budget == 0 {
+                    break;
+                }
+            }
+        }
+        tick
+    }
+
+    /// Remove finished (or abandoned) requests wherever they are.
     pub fn retire(&mut self, done: &[usize]) {
         match done {
             [] => {}
-            // the common continuous-batching case: one completion
-            [only] => self.live.retain(|id| id != only),
+            [only] => {
+                self.active.retain(|id| id != only);
+                self.queue.retain(|id| id != only);
+                self.entries.remove(only);
+            }
             _ => {
                 let done: HashSet<usize> = done.iter().copied().collect();
-                self.live.retain(|id| !done.contains(id));
+                self.active.retain(|id| !done.contains(id));
+                self.queue.retain(|id| !done.contains(id));
+                for id in &done {
+                    self.entries.remove(id);
+                }
             }
         }
     }
 
+    /// Drop one request entirely (client disconnect / admin abort).
+    /// Returns whether the id was known.
+    pub fn cancel(&mut self, id: usize) -> bool {
+        let known = self.entries.remove(&id).is_some();
+        self.active.retain(|&a| a != id);
+        self.queue.retain(|&q| q != id);
+        known
+    }
+
+    /// Force an active request back into the queue (tests and the
+    /// engine's preemption path drive this directly). The phase is left
+    /// untouched — the caller decides hold vs recompute via
+    /// [`reset_progress`][StepScheduler::reset_progress].
+    pub fn force_preempt(&mut self, id: usize) -> bool {
+        let Some(i) = self.active.iter().position(|&a| a == id) else {
+            return false;
+        };
+        self.active.remove(i);
+        self.queue.push_front(id);
+        self.preemptions += 1;
+        true
+    }
+
+    /// Restart a request's prefill from token 0 (the `Recompute`
+    /// preemption policy).
+    pub fn reset_progress(&mut self, id: usize) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.phase = if e.meta.prompt_tokens == 0 {
+                Phase::Decode
+            } else {
+                Phase::Prefill { done: 0 }
+            };
+        }
+    }
+
+    /// Scheduler-side phase of a known request.
+    pub fn phase(&self, id: usize) -> Option<Phase> {
+        self.entries.get(&id).map(|e| e.phase)
+    }
+
+    /// The active batch, in admission order.
     pub fn live(&self) -> &[usize] {
-        &self.live
+        &self.active
     }
 
     pub fn queued(&self) -> usize {
@@ -106,7 +488,12 @@ impl StepScheduler {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.live.is_empty() && self.queue.is_empty()
+        self.active.is_empty() && self.queue.is_empty()
+    }
+
+    /// Total preemptions since start (forced + priority-driven).
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
     }
 }
 
@@ -247,6 +634,27 @@ fn mean(sum: f64, n: u64) -> f64 {
 mod tests {
     use super::*;
 
+    fn meta(prompt: usize) -> ReqMeta {
+        ReqMeta { prompt_tokens: prompt, ..Default::default() }
+    }
+
+    fn meta_t(tenant: &str, weight: f64, prompt: usize) -> ReqMeta {
+        ReqMeta {
+            tenant: tenant.to_string(),
+            weight,
+            prompt_tokens: prompt,
+            ..Default::default()
+        }
+    }
+
+    fn meta_p(prio: Priority, prompt: usize) -> ReqMeta {
+        ReqMeta {
+            priority: prio,
+            prompt_tokens: prompt,
+            ..Default::default()
+        }
+    }
+
     #[test]
     fn admission_checks_pages_and_queue() {
         let ac = AdmissionController::new(2);
@@ -259,80 +667,247 @@ mod tests {
         assert_eq!(ac.check(&d, 20, 2), Admit::QueueFull);
     }
 
-    #[test]
-    fn continuous_batching_refill_and_retire() {
-        let mut s = StepScheduler::new(2);
-        for id in 0..5 {
-            s.enqueue(id);
-        }
-        assert_eq!(s.refill(), vec![0, 1]);
-        assert_eq!(s.live(), &[0, 1]);
-        assert_eq!(s.queued(), 3);
-        s.retire(&[0]);
-        assert_eq!(s.refill(), vec![2]);
-        assert_eq!(s.live(), &[1, 2]);
-        s.retire(&[1, 2]);
-        assert_eq!(s.refill(), vec![3, 4]);
-        s.retire(&[3, 4]);
-        assert!(s.refill().is_empty());
-        assert!(s.is_idle());
-    }
-
-    /// Interleaved retire/refill over many ids, including retiring ids
-    /// that never went live, duplicates in `done`, and batch retires —
-    /// live order must stay FIFO and nothing may resurrect.
-    #[test]
-    fn retire_refill_interleaving() {
-        let mut s = StepScheduler::new(4);
-        for id in 0..12 {
-            s.enqueue(id);
-        }
-        assert_eq!(s.refill(), vec![0, 1, 2, 3]);
-        // batch retire (HashSet path) of a strict subset, out of order
-        s.retire(&[3, 1]);
-        assert_eq!(s.live(), &[0, 2]);
-        assert_eq!(s.refill(), vec![4, 5]);
-        assert_eq!(s.live(), &[0, 2, 4, 5]);
-        // single-id retire (fast path)
-        s.retire(&[2]);
-        assert_eq!(s.live(), &[0, 4, 5]);
-        // retiring unknown + duplicate ids is a no-op for the rest
-        s.retire(&[99, 3, 3, 1]);
-        assert_eq!(s.live(), &[0, 4, 5]);
-        // empty retire is a no-op
-        s.retire(&[]);
-        assert_eq!(s.live(), &[0, 4, 5]);
-        assert_eq!(s.refill(), vec![6]);
-        // drain everything
-        s.retire(&[0, 4, 5, 6]);
-        assert_eq!(s.refill(), vec![7, 8, 9, 10]);
-        s.retire(&[7, 8, 9, 10]);
-        assert_eq!(s.refill(), vec![11]);
-        s.retire(&[11]);
-        assert!(s.refill().is_empty());
-        assert!(s.is_idle());
-    }
-
     /// Admission edge cases: exact page fit admits; one page short
     /// rejects with the precise deficit; the queue bound is inclusive.
     #[test]
     fn admission_exact_fit_and_queue_boundary() {
         let ac = AdmissionController::new(3);
         let d = Demand { pages: 10 };
-        // exact fit is admitted (the boundary the paper's capacity math
-        // depends on: demand == available must not reject)
         assert_eq!(ac.check(&d, 10, 0), Admit::Ok);
         assert_eq!(
             ac.check(&d, 9, 0),
             Admit::NoPages { need: 10, available: 9 }
         );
-        // zero-page demand always fits the pool check
         assert_eq!(ac.check(&Demand { pages: 0 }, 0, 0), Admit::Ok);
-        // queue boundary: queued == max_queue - 1 admits, == max rejects,
-        // and the queue check wins over the page check
         assert_eq!(ac.check(&d, 10, 2), Admit::Ok);
         assert_eq!(ac.check(&d, 10, 3), Admit::QueueFull);
         assert_eq!(ac.check(&d, 0, 3), Admit::QueueFull);
+    }
+
+    /// Unbudgeted, unchunked scheduling degrades to plain continuous
+    /// batching: admit FIFO, prefill whole prompts, decode every tick.
+    #[test]
+    fn continuous_batching_refill_and_retire() {
+        let mut s = StepScheduler::new(2);
+        for id in 0..5 {
+            s.enqueue(id, meta(4));
+        }
+        let t = s.tick();
+        assert_eq!(t.admitted, vec![0, 1]);
+        assert_eq!(s.live(), &[0, 1]);
+        assert_eq!(s.queued(), 3);
+        // whole prompts assigned at once (prefill_chunk = 0)
+        assert_eq!(t.prefill, vec![
+            PrefillAssign { id: 0, start: 0, end: 4, last: true },
+            PrefillAssign { id: 1, start: 0, end: 4, last: true },
+        ]);
+        assert!(t.decode.is_empty(), "nothing decodes before prefill");
+        let t = s.tick();
+        assert_eq!(t.decode, vec![0, 1]);
+        assert!(t.prefill.is_empty());
+        s.retire(&[0]);
+        let t = s.tick();
+        assert_eq!(t.admitted, vec![2]);
+        assert_eq!(s.live(), &[1, 2]);
+        s.retire(&[1, 2]);
+        let t2 = s.tick();
+        assert_eq!(t2.admitted, vec![3, 4]);
+        s.retire(&[3, 4]);
+        assert!(s.tick().admitted.is_empty());
+        assert!(s.is_idle());
+        let _ = t;
+    }
+
+    /// Chunked prefill interleaves with decode under the token budget:
+    /// one long prompt shares ticks with live decode rows instead of
+    /// monopolizing them.
+    #[test]
+    fn chunked_prefill_interleaves_with_decode() {
+        let mut s = StepScheduler::new(4).with_budget(8, 4);
+        s.enqueue(0, meta(4)); // short — will be decoding
+        let t = s.tick();
+        assert_eq!(t.prefill, vec![
+            PrefillAssign { id: 0, start: 0, end: 4, last: true },
+        ]);
+        s.enqueue(1, meta(12)); // long prompt: 3 chunks of 4
+        let t = s.tick();
+        assert_eq!(t.decode, vec![0], "short request decodes every tick");
+        assert_eq!(t.prefill.len(), 1, "budget 8 - 1 decode = 7 → one \
+                                        4-token chunk, then break");
+        assert_eq!(t.prefill[0],
+                   PrefillAssign { id: 1, start: 0, end: 4, last: false });
+        let t2 = s.tick();
+        assert_eq!(t2.decode, vec![0]);
+        assert_eq!(t2.prefill[0],
+                   PrefillAssign { id: 1, start: 4, end: 8, last: false });
+        let t3 = s.tick();
+        assert_eq!(t3.prefill[0],
+                   PrefillAssign { id: 1, start: 8, end: 12, last: true });
+        assert_eq!(s.phase(1), Some(Phase::Decode));
+        let t4 = s.tick();
+        assert_eq!(t4.decode, vec![0, 1]);
+        let _ = t;
+    }
+
+    /// With budget left over, one id may receive several chunks per
+    /// tick; the progress guarantee advances an over-budget chunk when
+    /// the tick would otherwise do nothing.
+    #[test]
+    fn prefill_budget_multi_chunk_and_progress() {
+        let mut s = StepScheduler::new(2).with_budget(8, 4);
+        s.enqueue(0, meta(12));
+        let t = s.tick();
+        // no decode rows → budget 8 → two 4-token chunks
+        assert_eq!(t.prefill, vec![
+            PrefillAssign { id: 0, start: 0, end: 4, last: false },
+            PrefillAssign { id: 0, start: 4, end: 8, last: false },
+        ]);
+        // a tiny budget still advances one chunk per tick
+        let mut s = StepScheduler::new(2).with_budget(2, 4);
+        s.enqueue(0, meta(8));
+        let t = s.tick();
+        assert_eq!(t.prefill, vec![
+            PrefillAssign { id: 0, start: 0, end: 4, last: false },
+        ]);
+        let t = s.tick();
+        assert_eq!(t.prefill, vec![
+            PrefillAssign { id: 0, start: 4, end: 8, last: true },
+        ]);
+    }
+
+    /// Weighted fairness: prefill bandwidth goes to the least-served
+    /// tenant (weighted), so a weight-2 tenant receives about twice the
+    /// chunk tokens of a weight-1 tenant over a window.
+    #[test]
+    fn weighted_fair_prefill_shares() {
+        let mut s = StepScheduler::new(4).with_budget(4, 4);
+        s.enqueue(0, meta_t("a", 2.0, 64));
+        s.enqueue(1, meta_t("b", 1.0, 64));
+        let mut a_tokens = 0usize;
+        let mut b_tokens = 0usize;
+        for _ in 0..12 {
+            let t = s.tick();
+            for pa in &t.prefill {
+                let n = pa.end - pa.start;
+                if pa.id == 0 {
+                    a_tokens += n;
+                } else {
+                    b_tokens += n;
+                }
+            }
+        }
+        // 12 ticks × 4 tokens = 48 total; 2:1 weights → 32 vs 16,
+        // within ±1 chunk of the ideal split
+        assert_eq!(a_tokens + b_tokens, 48);
+        assert!((a_tokens as i64 - 32).unsigned_abs() as usize <= 4,
+                "a={a_tokens} b={b_tokens}");
+    }
+
+    /// Priority classes order admission, and a strictly
+    /// higher-priority arrival preempts the lowest-priority live
+    /// request when the batch is full.
+    #[test]
+    fn priority_admission_and_preemption() {
+        let mut s = StepScheduler::new(2);
+        s.enqueue(0, meta_p(Priority::Batch, 2));
+        s.enqueue(1, meta_p(Priority::Batch, 2));
+        s.enqueue(2, meta_p(Priority::Standard, 2));
+        // standard(2) admits before the earlier batch arrivals
+        let t = s.tick();
+        assert_eq!(t.admitted, vec![2, 0]);
+        // an interactive arrival displaces the worst live batch-class
+        // request (id 0, latest-admitted of the lowest class)
+        s.enqueue(3, meta_p(Priority::Interactive, 2));
+        let t = s.tick();
+        assert_eq!(t.preempted, vec![0]);
+        assert_eq!(t.admitted, vec![3]);
+        assert_eq!(s.live(), &[2, 3]);
+        assert_eq!(s.preemptions(), 1);
+        // a second interactive arrival displaces the remaining
+        // standard-class live request the same way
+        s.enqueue(4, meta_p(Priority::Interactive, 2));
+        let t = s.tick();
+        assert_eq!(t.preempted, vec![2]);
+        assert_eq!(t.admitted, vec![4]);
+        assert_eq!(s.live(), &[3, 4]);
+        assert_eq!(s.preemptions(), 2);
+        // equal priority never preempts: an all-interactive batch holds
+        s.enqueue(5, meta_p(Priority::Interactive, 2));
+        let t = s.tick();
+        assert!(t.preempted.is_empty());
+        assert!(t.admitted.is_empty());
+        assert_eq!(s.queued(), 4);
+        let _ = t;
+    }
+
+    /// force_preempt keeps the phase (hold) and reset_progress restarts
+    /// prefill (recompute); the preempted id re-admits ahead of later
+    /// arrivals of the same class.
+    #[test]
+    fn force_preempt_and_reset_progress() {
+        let mut s = StepScheduler::new(1).with_budget(4, 4);
+        s.enqueue(0, meta(8));
+        let t = s.tick();
+        assert_eq!(t.prefill[0],
+                   PrefillAssign { id: 0, start: 0, end: 4, last: false });
+        assert!(s.force_preempt(0));
+        assert!(!s.force_preempt(0), "already queued");
+        assert_eq!(s.live(), &[] as &[usize]);
+        assert_eq!(s.queued(), 1);
+        // hold: progress survives re-admission
+        let t = s.tick();
+        assert_eq!(t.admitted, vec![0]);
+        assert_eq!(t.prefill[0],
+                   PrefillAssign { id: 0, start: 4, end: 8, last: true });
+        // recompute: progress restarts
+        assert!(s.force_preempt(0));
+        s.reset_progress(0);
+        let t = s.tick();
+        assert_eq!(t.prefill[0],
+                   PrefillAssign { id: 0, start: 0, end: 4, last: false });
+        assert_eq!(s.preemptions(), 2);
+    }
+
+    /// retire/cancel remove ids wherever they live; unknown and
+    /// duplicate ids are no-ops; nothing resurrects.
+    #[test]
+    fn retire_cancel_interleaving() {
+        let mut s = StepScheduler::new(4);
+        for id in 0..8 {
+            s.enqueue(id, meta(2));
+        }
+        let t = s.tick();
+        assert_eq!(t.admitted, vec![0, 1, 2, 3]);
+        s.retire(&[3, 1]);
+        assert_eq!(s.live(), &[0, 2]);
+        s.retire(&[99, 3, 3, 1]);
+        assert_eq!(s.live(), &[0, 2]);
+        s.retire(&[]);
+        // cancel straight out of the queue
+        assert!(s.cancel(7));
+        assert!(!s.cancel(7));
+        let t = s.tick();
+        assert_eq!(t.admitted, vec![4, 5]);
+        s.retire(&[0, 2, 4, 5, 6]);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn priority_and_policy_parse() {
+        assert_eq!(Priority::from_str("interactive"),
+                   Some(Priority::Interactive));
+        assert_eq!(Priority::from_str("Batch"), Some(Priority::Batch));
+        assert_eq!(Priority::from_str(""), Some(Priority::Standard));
+        assert_eq!(Priority::from_str("nope"), None);
+        assert_eq!(Priority::Interactive.as_str(), "interactive");
+        assert!(Priority::Interactive < Priority::Standard);
+        assert!(Priority::Standard < Priority::Batch);
+        assert_eq!(PreemptPolicy::from_str("hold"),
+                   Some(PreemptPolicy::Hold));
+        assert_eq!(PreemptPolicy::from_str("recompute"),
+                   Some(PreemptPolicy::Recompute));
+        assert_eq!(PreemptPolicy::from_str("x"), None);
+        assert_eq!(PreemptPolicy::Recompute.as_str(), "recompute");
     }
 
     /// The lifecycle algebra the serving snapshot reports: TTFT is
@@ -355,7 +930,6 @@ mod tests {
         assert!((a.tpot_secs().unwrap() - 0.1).abs() < 1e-12);
         t.record(&a);
 
-        // a one-token request: TTFT counts, TPOT must not
         let b = Lifecycle {
             queue_secs: 0.2,
             prefill_secs: 0.3,

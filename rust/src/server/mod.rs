@@ -2,9 +2,14 @@
 //!
 //! ```text
 //! POST /generate   {"prompt": "...", "domain": "legal", "max_tokens": 16,
-//!                   "top_k_sampling": 0}
+//!                   "top_k_sampling": 0, "stream": false,
+//!                   "tenant": "default", "priority": "standard"}
 //!              →   {"id": 3, "text": "...", "tokens": [...],
 //!                   "prefill_secs": ..., "decode_secs": ...}
+//!              or, with "stream": true, an SSE stream:
+//!                  data: {"token": 104}        (one frame per token)
+//!                  event: done
+//!                  data: {"id": 3, ...}        (the non-streaming body)
 //! GET  /stats      engine + runtime metrics snapshot (JSON)
 //! GET  /metrics    the same counters/gauges/histograms rendered in
 //!                  Prometheus text exposition format (`moska_` prefix)
@@ -13,9 +18,13 @@
 //!
 //! Architecture: acceptor threads parse HTTP and push requests into the
 //! engine loop's queue via a channel; the engine thread runs continuous
-//! batching (one decode step per loop over all live requests — new
-//! arrivals join between steps) and posts results back through per-request
-//! channels. Python is nowhere in the path.
+//! batching (one scheduler tick per loop — chunked prefill interleaved
+//! with decode, new arrivals join between ticks) and posts events back
+//! through per-request channels. Streaming requests get one event per
+//! sampled token as each tick completes; when a streaming client
+//! disconnects, the handler thread exits, the channel send fails, and
+//! the engine loop cancels the request (pages released). Python is
+//! nowhere in the path.
 
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
@@ -231,31 +240,53 @@ pub fn respond(stream: &mut TcpStream, status: u16, content_type: &str,
     Ok(())
 }
 
+/// One engine-side event on a request's reply channel.
+enum Event {
+    /// A freshly sampled token (streaming requests only).
+    Token(i32),
+    /// The request completed; carries the response body.
+    Done(Json),
+    /// The request failed (admission or engine error).
+    Err(String),
+}
+
 /// A generation job travelling from HTTP thread to engine loop.
 struct Job {
     domain: Option<String>,
     prompt: Vec<i32>,
     max_new: usize,
     sampler: Sampler,
-    reply: Sender<Result<Json>>,
+    tenant: String,
+    priority: crate::scheduler::Priority,
+    stream: bool,
+    events: Sender<Event>,
+}
+
+struct Waiter {
+    tx: Sender<Event>,
+    stream: bool,
 }
 
 /// Engine loop: continuous batching over jobs from the channel.
 fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
                stats: Arc<Mutex<Json>>, prom: Arc<Mutex<String>>) {
-    let mut waiting: HashMap<usize, Sender<Result<Json>>> = HashMap::new();
+    let mut waiting: HashMap<usize, Waiter> = HashMap::new();
     loop {
         // drain new jobs (non-blocking if busy; blocking when idle)
         let drain = |engine: &mut Engine,
-                     waiting: &mut HashMap<usize, Sender<Result<Json>>>,
+                     waiting: &mut HashMap<usize, Waiter>,
                      job: Job| {
-            match engine.submit(job.domain.as_deref(), job.prompt,
-                                job.max_new, job.sampler) {
+            match engine.submit_opts(job.domain.as_deref(), job.prompt,
+                                     job.max_new, job.sampler,
+                                     &job.tenant, job.priority) {
                 Ok(id) => {
-                    waiting.insert(id, job.reply);
+                    waiting.insert(id, Waiter {
+                        tx: job.events,
+                        stream: job.stream,
+                    });
                 }
                 Err(e) => {
-                    let _ = job.reply.send(Err(e));
+                    let _ = job.events.send(Event::Err(format!("{e:#}")));
                 }
             }
         };
@@ -272,13 +303,28 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
 
         if let Err(e) = engine.step() {
             crate::errorlog!("server", "engine step failed: {e:#}");
-            for (_, tx) in waiting.drain() {
-                let _ = tx.send(Err(anyhow::anyhow!("engine failed")));
+            for (_, w) in waiting.drain() {
+                let _ = w.tx.send(Event::Err("engine failed".to_string()));
             }
             continue;
         }
+        // streaming feed: forward this tick's sampled tokens. A failed
+        // send means the handler thread is gone (client disconnected
+        // mid-stream) — cancel the request so its pages free up.
+        let mut dead: Vec<usize> = Vec::new();
+        for (id, tok) in engine.take_emitted() {
+            if let Some(w) = waiting.get(&id) {
+                if w.stream && w.tx.send(Event::Token(tok)).is_err() {
+                    dead.push(id);
+                }
+            }
+        }
+        for id in dead {
+            waiting.remove(&id);
+            engine.cancel(id);
+        }
         for r in engine.take_results() {
-            if let Some(tx) = waiting.remove(&r.id) {
+            if let Some(w) = waiting.remove(&r.id) {
                 let body = Json::obj(vec![
                     ("id", Json::num(r.id as f64)),
                     ("tokens", Json::arr(
@@ -288,7 +334,7 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
                     ("prefill_secs", Json::num(r.prefill_secs)),
                     ("decode_secs", Json::num(r.decode_secs)),
                 ]);
-                let _ = tx.send(Ok(body));
+                let _ = w.tx.send(Event::Done(body));
             }
         }
         // refresh the stats snapshot
@@ -364,9 +410,29 @@ fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
                     },
                     _ => Sampler::Greedy,
                 };
-                Ok((prompt_text, domain, max_new, sampler))
+                let stream_mode = match j.opt("stream") {
+                    Some(v) => v.as_bool()?,
+                    None => false,
+                };
+                let tenant = match j.opt("tenant") {
+                    Some(v) => v.as_str()?.to_string(),
+                    None => "default".to_string(),
+                };
+                let priority = match j.opt("priority") {
+                    Some(v) => {
+                        let s = v.as_str()?;
+                        crate::scheduler::Priority::from_str(s)
+                            .with_context(|| format!(
+                                "unknown priority '{s}' \
+                                 (interactive|standard|batch)"))?
+                    }
+                    None => crate::scheduler::Priority::Standard,
+                };
+                Ok((prompt_text, domain, max_new, sampler, stream_mode,
+                    tenant, priority))
             });
-            let (prompt_text, domain, max_new, sampler) = match parsed {
+            let (prompt_text, domain, max_new, sampler, stream_mode,
+                 tenant, priority) = match parsed {
                 Ok(p) => p,
                 Err(e) => {
                     let _ = respond(&mut stream, 400, "text/plain",
@@ -374,36 +440,108 @@ fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
                     return;
                 }
             };
-            let (reply, rx) = channel();
+            let (events, rx) = channel();
             let job = Job {
                 domain,
                 prompt: tokenizer::encode(&prompt_text),
                 max_new,
                 sampler,
-                reply,
+                tenant,
+                priority,
+                stream: stream_mode,
+                events,
             };
             if jobs.send(job).is_err() {
                 let _ = respond(&mut stream, 500, "text/plain",
                                 "engine gone");
                 return;
             }
-            match rx.recv() {
-                Ok(Ok(body)) => {
-                    let _ = respond(&mut stream, 200, "application/json",
-                                    &body.to_string());
-                }
-                Ok(Err(e)) => {
-                    let _ = respond(&mut stream, 400, "text/plain",
-                                    &format!("{e:#}"));
-                }
-                Err(_) => {
-                    let _ = respond(&mut stream, 500, "text/plain",
-                                    "engine dropped request");
+            if stream_mode {
+                stream_events(&mut stream, &rx);
+            } else {
+                // non-streaming: the engine sends no Token events for
+                // this request — wait for Done/Err (loop for safety)
+                loop {
+                    match rx.recv() {
+                        Ok(Event::Token(_)) => continue,
+                        Ok(Event::Done(body)) => {
+                            let _ = respond(&mut stream, 200,
+                                            "application/json",
+                                            &body.to_string());
+                            break;
+                        }
+                        Ok(Event::Err(e)) => {
+                            let _ = respond(&mut stream, 400,
+                                            "text/plain", &e);
+                            break;
+                        }
+                        Err(_) => {
+                            let _ = respond(&mut stream, 500, "text/plain",
+                                            "engine dropped request");
+                            break;
+                        }
+                    }
                 }
             }
         }
         _ => {
             let _ = respond(&mut stream, 404, "text/plain", "not found");
+        }
+    }
+}
+
+/// Forward a streaming request's events as Server-Sent Events. Errors
+/// before the first token become a plain 400/500 (headers not sent
+/// yet); after that the stream is committed and simply ends. Any write
+/// failure returns immediately — dropping the receiver is what tells
+/// the engine loop the client is gone.
+fn stream_events(stream: &mut TcpStream, rx: &Receiver<Event>) {
+    let mut first = match rx.recv() {
+        Ok(Event::Err(e)) => {
+            let _ = respond(stream, 400, "text/plain", &e);
+            return;
+        }
+        Ok(ev) => Some(ev),
+        Err(_) => {
+            let _ = respond(stream, 500, "text/plain",
+                            "engine dropped request");
+            return;
+        }
+    };
+    if write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+         Cache-Control: no-cache\r\nConnection: close\r\n\r\n"
+    )
+    .is_err()
+    {
+        return;
+    }
+    loop {
+        let ev = match first.take() {
+            Some(ev) => ev,
+            None => match rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => return, // engine gone mid-stream
+            },
+        };
+        match ev {
+            Event::Token(t) => {
+                if write!(stream, "data: {{\"token\":{t}}}\n\n").is_err()
+                    || stream.flush().is_err()
+                {
+                    return;
+                }
+            }
+            Event::Done(body) => {
+                let _ = write!(stream, "event: done\ndata: {body}\n\n");
+                return;
+            }
+            Event::Err(e) => {
+                let _ = write!(stream,
+                               "event: error\ndata: {{\"error\":{e:?}}}\n\n");
+                return;
+            }
         }
     }
 }
@@ -443,7 +581,29 @@ pub fn run_server(args: &Args) -> Result<()> {
             .unwrap_or_else(|| "127.0.0.1:8080".to_string()),
         Some(a) => a.to_string(),
     };
-    let (engine, _svc) = if let Some(serving) = file_cfg.serving.clone() {
+    let (engine, _svc) = if args.flag("synthetic") {
+        // artifact-free serving over the synthetic bench store — what
+        // the CI serving smoke and `moska loadgen` drive
+        let mut serving = file_cfg.serving.clone().unwrap_or_default();
+        let top_k = args.usize("top-k")?;
+        serving.top_k = if top_k == 0 { None } else { Some(top_k) };
+        serving.max_batch = args.usize("max-batch")?;
+        let threads = args.usize("threads")?;
+        if threads > 0 {
+            serving.exec_threads = threads;
+        }
+        let kernel = crate::runtime::KernelSpec::parse(
+            args.get("kernel").unwrap_or("auto"),
+        )?;
+        if kernel != crate::runtime::KernelSpec::Auto {
+            serving.kernel = kernel;
+            crate::runtime::simd::set_global_spec(kernel)?;
+        }
+        serving.kv_dtype =
+            crate::engine::resolve_kv_dtype(args.get("kv-dtype"))?;
+        crate::engine::apply_serving_flags(&mut serving, args)?;
+        (crate::disagg::synthetic_engine(serving)?, None)
+    } else if let Some(serving) = file_cfg.serving.clone() {
         let mut serving = serving;
         let dir = match args.get("artifacts") {
             Some("") | None => file_cfg.artifacts.clone().unwrap_or_else(
@@ -475,6 +635,7 @@ pub fn run_server(args: &Args) -> Result<()> {
         if serving.kernel != crate::runtime::KernelSpec::Auto {
             crate::runtime::simd::set_global_spec(serving.kernel)?;
         }
+        crate::engine::apply_serving_flags(&mut serving, args)?;
         crate::engine::build_engine(&dir, &backend, serving)?
     } else {
         build_engine_from_args(args)?

@@ -1,0 +1,698 @@
+//! `moska loadgen` — deterministic traffic generator for the serving
+//! loop.
+//!
+//! Scenario mixes model the paper's serving workloads over the
+//! synthetic shared store: RAG fleets over shared corpora
+//! (`rag-shared`), multi-turn chat with shared prompt prefixes
+//! (`chat-prefix`), agent swarms hammering one domain (`agent-swarm`),
+//! a long-prompt/short-prompt interleaving stress (`long-short`), and
+//! a round-robin of all four (`mixed`). Item streams are pure
+//! functions of (scenario, n, seed) — identical across runs and
+//! platforms — so traces can be recorded, diffed, and replayed.
+//!
+//! Two drive modes share the same items:
+//! * **in-process** (`--addr ''`): closed-loop against
+//!   [`synthetic_engine`][crate::disagg::synthetic_engine]; TTFT/TPOT
+//!   come from engine lifecycle timings, token/mix counts are
+//!   seed-deterministic.
+//! * **HTTP** (`--addr host:port`): closed-loop worker threads POST
+//!   `/generate` with `"stream": true` and time the SSE frames off the
+//!   wire — TTFT is the first `data:` frame, TPOT the inter-frame
+//!   mean.
+//!
+//! Reports land in `bench_out/BENCH_serving.json`; `scripts/ci.sh`
+//! gates on zero errors, nonzero streamed tokens, and finite latency
+//! quantiles. `--compare-chunking` adds the chunked-vs-unchunked
+//! short-request TTFT probe measured in deterministic work units.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ServingConfig;
+use crate::disagg::{SYNTH_DOMAIN, SYNTH_DOMAIN_B};
+use crate::model::sampling::Sampler;
+use crate::scheduler::Priority;
+use crate::util::bench::Stats;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::WorkItem;
+
+/// Named traffic mix (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    RagShared,
+    ChatPrefix,
+    AgentSwarm,
+    LongShort,
+    Mixed,
+}
+
+impl Scenario {
+    pub fn from_str(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().as_str() {
+            "rag-shared" => Some(Scenario::RagShared),
+            "chat-prefix" => Some(Scenario::ChatPrefix),
+            "agent-swarm" => Some(Scenario::AgentSwarm),
+            "long-short" => Some(Scenario::LongShort),
+            "mixed" => Some(Scenario::Mixed),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scenario::RagShared => "rag-shared",
+            Scenario::ChatPrefix => "chat-prefix",
+            Scenario::AgentSwarm => "agent-swarm",
+            Scenario::LongShort => "long-short",
+            Scenario::Mixed => "mixed",
+        }
+    }
+
+    pub fn all() -> [Scenario; 5] {
+        [Scenario::RagShared, Scenario::ChatPrefix, Scenario::AgentSwarm,
+         Scenario::LongShort, Scenario::Mixed]
+    }
+}
+
+/// One prompt token: lowercase ASCII so the byte-level tokenizer
+/// round-trips it through the HTTP JSON body unchanged.
+fn tok(rng: &mut Rng) -> i32 {
+    97 + rng.below(26) as i32
+}
+
+fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| tok(rng)).collect()
+}
+
+/// Deterministic item stream: a pure function of (scenario, n, seed).
+pub fn scenario_items(s: Scenario, n: usize, seed: u64) -> Vec<WorkItem> {
+    let mut rng = Rng::new(seed);
+    // chat conversations share fixed per-seed prefixes (drawn up front
+    // so every turn of a conversation reuses the same bytes)
+    let prefixes: Vec<Vec<i32>> =
+        (0..4).map(|_| prompt(&mut rng, 12)).collect();
+    let mut clock = 0.0;
+    (0..n)
+        .map(|i| {
+            let kind = match s {
+                Scenario::Mixed => {
+                    [Scenario::RagShared, Scenario::ChatPrefix,
+                     Scenario::AgentSwarm, Scenario::LongShort][i % 4]
+                }
+                k => k,
+            };
+            let rate = match kind {
+                Scenario::AgentSwarm => 100.0,
+                _ => 20.0,
+            };
+            clock += rng.exponential(rate);
+            let mut w = match kind {
+                Scenario::RagShared => {
+                    // two RAG tenants over the two shared corpora
+                    let domain = if i % 4 == 3 {
+                        SYNTH_DOMAIN_B
+                    } else {
+                        SYNTH_DOMAIN
+                    };
+                    let plen = rng.range(8, 25);
+                    let p = prompt(&mut rng, plen);
+                    let mut w = WorkItem::basic(
+                        clock, Some(domain.into()), p, rng.range(4, 9),
+                    );
+                    w.tenant = if i % 2 == 0 { "rag-a" } else { "rag-b" }
+                        .to_string();
+                    w
+                }
+                Scenario::ChatPrefix => {
+                    // turn = shared conversation prefix + fresh suffix
+                    let conv = rng.range(0, prefixes.len());
+                    let mut p = prefixes[conv].clone();
+                    let extra = rng.range(4, 9);
+                    p.extend((0..extra).map(|_| tok(&mut rng)));
+                    let mut w = WorkItem::basic(
+                        clock, None, p, rng.range(4, 11),
+                    );
+                    w.tenant = format!("chat-{conv}");
+                    w.priority = Priority::Interactive;
+                    w
+                }
+                Scenario::AgentSwarm => {
+                    // one tenant, one corpus, short bursty requests
+                    let p = prompt(&mut rng, rng.range(4, 9));
+                    let mut w = WorkItem::basic(
+                        clock, Some(SYNTH_DOMAIN.into()), p,
+                        rng.range(2, 5),
+                    );
+                    w.tenant = "swarm".to_string();
+                    w.priority = Priority::Batch;
+                    w
+                }
+                Scenario::LongShort => {
+                    // a long batch prompt every 8th item, interactive
+                    // shorts in between — the chunked-prefill stress
+                    if i % 8 == 0 {
+                        let p = prompt(&mut rng, rng.range(96, 129));
+                        let mut w = WorkItem::basic(
+                            clock, Some(SYNTH_DOMAIN.into()), p, 4,
+                        );
+                        w.tenant = "batch".to_string();
+                        w.priority = Priority::Batch;
+                        w
+                    } else {
+                        let p = prompt(&mut rng, rng.range(4, 9));
+                        let mut w = WorkItem::basic(
+                            clock, Some(SYNTH_DOMAIN.into()), p, 4,
+                        );
+                        w.tenant = "chat".to_string();
+                        w.priority = Priority::Interactive;
+                        w
+                    }
+                }
+                Scenario::Mixed => unreachable!(),
+            };
+            w.stream = true;
+            w
+        })
+        .collect()
+}
+
+/// One request's client-side timings.
+struct ReqSample {
+    ttft_secs: f64,
+    tpot_secs: Option<f64>,
+    tokens: usize,
+}
+
+/// Aggregated loadgen run, serialized to `BENCH_serving.json`.
+pub struct Report {
+    pub scenario: &'static str,
+    pub mode: &'static str,
+    pub seed: u64,
+    pub requests: usize,
+    pub errors: usize,
+    pub streamed_tokens: usize,
+    pub generated_tokens: usize,
+    pub elapsed_secs: f64,
+    ttft: Vec<f64>,
+    tpot: Vec<f64>,
+    mix_domains: BTreeMap<String, usize>,
+    mix_tenants: BTreeMap<String, usize>,
+    pub chunking: Option<Json>,
+    pub first_error: Option<String>,
+}
+
+fn quantiles(samples: &[f64]) -> (f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0);
+    }
+    let s = Stats::from_samples(
+        samples.iter().map(|&v| Duration::from_secs_f64(v)).collect(),
+    );
+    (s.p50.as_secs_f64(), s.p99.as_secs_f64())
+}
+
+/// The seed-deterministic request mix of an item stream (what the
+/// determinism tests diff across runs).
+fn mix_of(items: &[WorkItem])
+          -> (BTreeMap<String, usize>, BTreeMap<String, usize>) {
+    let mut domains = BTreeMap::new();
+    let mut tenants = BTreeMap::new();
+    for w in items {
+        let d = w.domain.clone().unwrap_or_else(|| "unique".to_string());
+        *domains.entry(d).or_insert(0) += 1;
+        *tenants.entry(w.tenant.clone()).or_insert(0) += 1;
+    }
+    (domains, tenants)
+}
+
+impl Report {
+    pub fn to_json(&self) -> Json {
+        let (ttft_p50, ttft_p99) = quantiles(&self.ttft);
+        let (tpot_p50, tpot_p99) = quantiles(&self.tpot);
+        let count_map = |m: &BTreeMap<String, usize>| {
+            Json::obj(
+                m.iter()
+                    .map(|(k, v)| (k.as_str(), Json::num(*v as f64)))
+                    .collect(),
+            )
+        };
+        let goodput = if self.elapsed_secs > 0.0 {
+            (self.requests - self.errors) as f64 / self.elapsed_secs
+        } else {
+            0.0
+        };
+        let mut fields = vec![
+            ("scenario", Json::str(self.scenario)),
+            ("mode", Json::str(self.mode)),
+            ("seed", Json::num(self.seed as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("streamed_tokens", Json::num(self.streamed_tokens as f64)),
+            ("generated_tokens", Json::num(self.generated_tokens as f64)),
+            ("elapsed_secs", Json::num(self.elapsed_secs)),
+            ("ttft_p50_ms", Json::num(ttft_p50 * 1e3)),
+            ("ttft_p99_ms", Json::num(ttft_p99 * 1e3)),
+            ("tpot_p50_ms", Json::num(tpot_p50 * 1e3)),
+            ("tpot_p99_ms", Json::num(tpot_p99 * 1e3)),
+            ("goodput_rps", Json::num(goodput)),
+            ("mix", Json::obj(vec![
+                ("domains", count_map(&self.mix_domains)),
+                ("tenants", count_map(&self.mix_tenants)),
+            ])),
+        ];
+        if let Some(c) = &self.chunking {
+            fields.push(("chunking_compare", c.clone()));
+        }
+        if let Some(e) = &self.first_error {
+            fields.push(("first_error", Json::str(e.clone())));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Closed-loop in-process run: submit every item against a fresh
+/// synthetic engine, drain to completion, report lifecycle timings.
+/// Token and mix columns are pure functions of (scenario, seed, n).
+pub fn run_inprocess(scenario: Scenario, items: &[WorkItem], seed: u64)
+                     -> Result<Report> {
+    let mut eng =
+        crate::disagg::synthetic_engine(ServingConfig::default())?;
+    let t0 = Instant::now();
+    for w in items {
+        eng.submit_opts(w.domain.as_deref(), w.prompt.clone(), w.max_new,
+                        Sampler::Greedy, &w.tenant, w.priority)?;
+    }
+    let results = eng.run_to_completion()?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let streamed = eng.take_emitted().len();
+    let mut ttft = Vec::new();
+    let mut tpot = Vec::new();
+    let mut generated = 0usize;
+    for r in &results {
+        ttft.push(r.queue_secs + r.prefill_secs);
+        if r.tokens.len() > 1 {
+            tpot.push(r.decode_secs / (r.tokens.len() - 1) as f64);
+        }
+        generated += r.tokens.len();
+    }
+    let (mix_domains, mix_tenants) = mix_of(items);
+    Ok(Report {
+        scenario: scenario.as_str(),
+        mode: "inprocess",
+        seed,
+        requests: results.len(),
+        errors: items.len() - results.len(),
+        streamed_tokens: streamed,
+        generated_tokens: generated,
+        elapsed_secs: elapsed,
+        ttft,
+        tpot,
+        mix_domains,
+        mix_tenants,
+        chunking: None,
+        first_error: None,
+    })
+}
+
+/// Closed-loop HTTP run: `concurrency` workers each stream one request
+/// at a time over raw sockets until the deadline (or every item once
+/// when `seconds == 0`).
+pub fn run_http(addr: &str, scenario: Scenario, items: &[WorkItem],
+                seed: u64, concurrency: usize, seconds: f64)
+                -> Result<Report> {
+    if items.is_empty() {
+        bail!("no work items");
+    }
+    let next = AtomicUsize::new(0);
+    let deadline = (seconds > 0.0)
+        .then(|| Instant::now() + Duration::from_secs_f64(seconds));
+    let out: Mutex<Vec<Result<ReqSample>>> = Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    std::thread::scope(|sc| {
+        for _ in 0..concurrency.max(1) {
+            sc.spawn(|| {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let stop = match deadline {
+                        Some(d) => Instant::now() >= d,
+                        None => i >= items.len(),
+                    };
+                    if stop {
+                        break;
+                    }
+                    local.push(sse_request(addr, &items[i % items.len()]));
+                }
+                out.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let samples = out.into_inner().unwrap();
+    let mut ttft = Vec::new();
+    let mut tpot = Vec::new();
+    let mut streamed = 0usize;
+    let mut errors = 0usize;
+    let mut first_error = None;
+    let requests = samples.len();
+    for s in samples {
+        match s {
+            Ok(s) => {
+                ttft.push(s.ttft_secs);
+                if let Some(t) = s.tpot_secs {
+                    tpot.push(t);
+                }
+                streamed += s.tokens;
+            }
+            Err(e) => {
+                errors += 1;
+                first_error.get_or_insert_with(|| format!("{e:#}"));
+            }
+        }
+    }
+    let (mix_domains, mix_tenants) = mix_of(items);
+    Ok(Report {
+        scenario: scenario.as_str(),
+        mode: "http",
+        seed,
+        requests,
+        errors,
+        streamed_tokens: streamed,
+        generated_tokens: streamed,
+        elapsed_secs: elapsed,
+        ttft,
+        tpot,
+        mix_domains,
+        mix_tenants,
+        chunking: None,
+        first_error,
+    })
+}
+
+/// Count complete SSE token frames in the bytes received so far.
+fn count_token_frames(buf: &[u8]) -> usize {
+    const PAT: &[u8] = b"data: {\"token\"";
+    if buf.len() < PAT.len() {
+        return 0;
+    }
+    buf.windows(PAT.len()).filter(|w| *w == PAT).count()
+}
+
+/// One streaming request over a raw socket; times SSE frames as they
+/// arrive (TTFT = first token frame, TPOT = inter-frame mean).
+fn sse_request(addr: &str, item: &WorkItem) -> Result<ReqSample> {
+    let text: String =
+        item.prompt.iter().map(|&t| (t as u8) as char).collect();
+    let mut fields = vec![
+        ("prompt", Json::str(text)),
+        ("max_tokens", Json::num(item.max_new as f64)),
+        ("stream", Json::Bool(true)),
+        ("tenant", Json::str(item.tenant.clone())),
+        ("priority", Json::str(item.priority.as_str())),
+    ];
+    if let Some(d) = &item.domain {
+        fields.push(("domain", Json::str(d.clone())));
+    }
+    let body = Json::obj(fields).to_string();
+    let mut s = TcpStream::connect(addr)
+        .with_context(|| format!("connect {addr}"))?;
+    write!(
+        s,
+        "POST /generate HTTP/1.1\r\nHost: loadgen\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    s.flush()?;
+    let t0 = Instant::now();
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let mut tokens = 0usize;
+    let mut first = None;
+    let mut last = Duration::ZERO;
+    loop {
+        let n = s.read(&mut tmp).context("read stream")?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&tmp[..n]);
+        let c = count_token_frames(&buf);
+        if c > tokens {
+            let now = t0.elapsed();
+            first.get_or_insert(now);
+            last = now;
+            tokens = c;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    if !head.starts_with("HTTP/1.1 200") {
+        bail!("non-200 reply: {:?}", head.lines().next().unwrap_or(""));
+    }
+    if !head.contains("event: done") {
+        bail!("stream ended without done frame");
+    }
+    let Some(first) = first else {
+        bail!("no token frames in stream")
+    };
+    let tpot = (tokens > 1)
+        .then(|| (last - first).as_secs_f64() / (tokens - 1) as f64);
+    Ok(ReqSample { ttft_secs: first.as_secs_f64(), tpot_secs: tpot,
+                   tokens })
+}
+
+// ------------------------------------------------- chunking comparison
+
+/// Mean short-request TTFT, in deterministic work units (rows
+/// forwarded before the short request's first token), for one long
+/// prompt contending with four shorts under the given budget knobs.
+fn chunk_probe(step_tokens: usize, prefill_chunk: usize) -> Result<f64> {
+    let cfg = ServingConfig {
+        step_tokens,
+        prefill_chunk,
+        exec_threads: 1,
+        ..Default::default()
+    };
+    let mut eng = crate::disagg::synthetic_engine(cfg)?;
+    let long: Vec<i32> = (0..256).map(|i| 97 + (i % 26) as i32).collect();
+    eng.submit_opts(Some(SYNTH_DOMAIN), long, 2, Sampler::Greedy,
+                    "batch", Priority::Standard)?;
+    let mut shorts = Vec::new();
+    for k in 0..4usize {
+        let p: Vec<i32> =
+            (0..6).map(|j| 97 + ((k * 7 + j) % 26) as i32).collect();
+        shorts.push(eng.submit_opts(Some(SYNTH_DOMAIN), p, 2,
+                                    Sampler::Greedy, "chat",
+                                    Priority::Standard)?);
+    }
+    let mut first_wu = std::collections::HashMap::new();
+    loop {
+        let more = eng.step()?;
+        let wu = eng.work_units();
+        for (id, _) in eng.take_emitted() {
+            first_wu.entry(id).or_insert(wu);
+        }
+        if !more {
+            break;
+        }
+    }
+    let sum: f64 = shorts
+        .iter()
+        .map(|id| first_wu.get(id).copied().unwrap_or(0) as f64)
+        .sum();
+    Ok(sum / shorts.len() as f64)
+}
+
+/// Chunked vs unchunked prefill, measured clock-free: the acceptance
+/// probe behind the `chunking_compare` column of `BENCH_serving.json`.
+pub fn chunking_compare() -> Result<Json> {
+    let chunked = chunk_probe(64, 64)?;
+    let unchunked = chunk_probe(0, 0)?;
+    Ok(Json::obj(vec![
+        ("unchunked_short_ttft_wu", Json::num(unchunked)),
+        ("chunked_short_ttft_wu", Json::num(chunked)),
+        ("short_ttft_speedup", Json::num(unchunked / chunked.max(1.0))),
+    ]))
+}
+
+// ----------------------------------------------------------- the CLI
+
+/// `moska loadgen` entry point (see `main.rs` for the flag set).
+pub fn cmd_loadgen(args: &Args) -> Result<()> {
+    let name = args.str("scenario")?;
+    let scenario = Scenario::from_str(&name)
+        .with_context(|| format!("unknown scenario {name:?} (have: \
+            rag-shared chat-prefix agent-swarm long-short mixed)"))?;
+    let seed = args.usize("seed")? as u64;
+    let requests = args.usize("requests")?;
+    let seconds = args.f64("seconds")?;
+    let concurrency = args.usize("concurrency")?;
+    let addr = args.str("addr")?;
+    // duration-driven runs cycle the item list, so make it deep enough
+    // that the mix stays representative
+    let n_items = if seconds > 0.0 { requests.max(64) } else { requests };
+    let items = scenario_items(scenario, n_items, seed);
+    if let Some(path) = args.get("emit-trace") {
+        if !path.is_empty() {
+            std::fs::write(
+                path, crate::workload::trace_to_json(&items).to_string(),
+            )?;
+            println!("[loadgen] trace → {path}");
+        }
+    }
+    let mut report = if addr.is_empty() {
+        run_inprocess(scenario, &items, seed)?
+    } else {
+        run_http(&addr, scenario, &items, seed, concurrency, seconds)?
+    };
+    if args.flag("compare-chunking") {
+        report.chunking = Some(chunking_compare()?);
+    }
+    let out = args.str("out")?;
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let j = report.to_json();
+    std::fs::write(&out, j.to_string())?;
+    println!("[loadgen] {} ({}): {} requests, {} errors, {} streamed \
+              tokens in {:.2}s",
+             report.scenario, report.mode, report.requests,
+             report.errors, report.streamed_tokens, report.elapsed_secs);
+    println!("[loadgen] report → {out}");
+    if report.errors > 0 {
+        if let Some(e) = &report.first_error {
+            println!("[loadgen] first error: {e}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_parse_roundtrip() {
+        for s in Scenario::all() {
+            assert_eq!(Scenario::from_str(s.as_str()), Some(s));
+        }
+        assert_eq!(Scenario::from_str("RAG-SHARED"),
+                   Some(Scenario::RagShared));
+        assert_eq!(Scenario::from_str("nope"), None);
+    }
+
+    /// Item streams are pure functions of (scenario, n, seed): same
+    /// seed → identical items (and identical trace JSON), different
+    /// seed → different stream.
+    #[test]
+    fn scenario_items_deterministic() {
+        for s in Scenario::all() {
+            let a = scenario_items(s, 40, 7);
+            let b = scenario_items(s, 40, 7);
+            assert_eq!(a, b);
+            let ja = crate::workload::trace_to_json(&a).to_string();
+            let jb = crate::workload::trace_to_json(&b).to_string();
+            assert_eq!(ja, jb);
+            let c = scenario_items(s, 40, 8);
+            assert_ne!(a, c, "{s:?} ignores the seed");
+        }
+    }
+
+    /// Every generated item is servable by the synthetic setup: known
+    /// domains, tokenizer-roundtrippable prompt bytes, streaming on,
+    /// arrivals monotone.
+    #[test]
+    fn scenario_items_valid_for_synthetic_serving() {
+        for s in Scenario::all() {
+            let items = scenario_items(s, 64, 3);
+            assert_eq!(items.len(), 64);
+            let mut prev = 0.0;
+            for w in &items {
+                assert!(w.arrival >= prev);
+                prev = w.arrival;
+                if let Some(d) = &w.domain {
+                    assert!(d == SYNTH_DOMAIN || d == SYNTH_DOMAIN_B,
+                            "{s:?} uses unknown domain {d}");
+                }
+                assert!(!w.prompt.is_empty());
+                for &t in &w.prompt {
+                    assert!((97..123).contains(&t),
+                            "{s:?} token {t} not ascii-lowercase");
+                }
+                assert!(w.max_new >= 1);
+                assert!(w.stream);
+                assert!(!w.tenant.is_empty());
+            }
+        }
+        // the chat scenario actually shares prefixes across turns
+        let items = scenario_items(Scenario::ChatPrefix, 64, 3);
+        let mut by_tenant: std::collections::HashMap<&str, Vec<&WorkItem>> =
+            std::collections::HashMap::new();
+        for w in &items {
+            by_tenant.entry(&w.tenant).or_default().push(w);
+        }
+        let shared = by_tenant.values().any(|ws| {
+            ws.len() >= 2 && ws.windows(2).all(|p| {
+                p[0].prompt[..12] == p[1].prompt[..12]
+            })
+        });
+        assert!(shared, "no shared prefixes in chat scenario");
+    }
+
+    /// SSE frame counting is prefix-safe and ignores non-token frames.
+    #[test]
+    fn token_frame_counting() {
+        assert_eq!(count_token_frames(b""), 0);
+        assert_eq!(count_token_frames(b"data: {\"tok"), 0);
+        let stream = b"HTTP/1.1 200 OK\r\n\r\n\
+                       data: {\"token\":97}\n\n\
+                       data: {\"token\":98}\n\n\
+                       event: done\ndata: {\"tokens\":[97,98]}\n\n";
+        assert_eq!(count_token_frames(stream), 2);
+    }
+
+    /// The acceptance probe: chunked prefill must improve short-request
+    /// TTFT (in deterministic work units) vs the unchunked baseline
+    /// when a long prompt contends for the same engine.
+    #[test]
+    fn chunking_improves_short_ttft() {
+        let chunked = chunk_probe(64, 64).unwrap();
+        let unchunked = chunk_probe(0, 0).unwrap();
+        assert!(chunked > 0.0 && unchunked > 0.0);
+        assert!(
+            chunked * 1.2 < unchunked,
+            "chunked prefill did not improve short TTFT: \
+             chunked={chunked} unchunked={unchunked}"
+        );
+    }
+
+    /// In-process runs are seed-deterministic in every count column.
+    #[test]
+    fn inprocess_run_deterministic_counts() {
+        let items = scenario_items(Scenario::RagShared, 12, 5);
+        let a = run_inprocess(Scenario::RagShared, &items, 5).unwrap();
+        let b = run_inprocess(Scenario::RagShared, &items, 5).unwrap();
+        assert_eq!(a.requests, 12);
+        assert_eq!(a.errors, 0);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.streamed_tokens, b.streamed_tokens);
+        assert_eq!(a.generated_tokens, b.generated_tokens);
+        assert!(a.streamed_tokens > 0);
+        assert_eq!(a.mix_domains, b.mix_domains);
+        assert_eq!(a.mix_tenants, b.mix_tenants);
+        let j = a.to_json();
+        assert_eq!(j.get("errors").unwrap().as_usize().unwrap(), 0);
+        assert!(j.get("ttft_p50_ms").unwrap().as_f64().unwrap()
+                    .is_finite());
+        assert!(j.get("mix").unwrap().get("tenants").is_ok());
+    }
+}

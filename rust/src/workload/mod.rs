@@ -7,10 +7,13 @@
 //! prompt/generation lengths. Traces are deterministic given a seed and
 //! can be recorded/replayed as JSON.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
+use crate::scheduler::Priority;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+pub mod loadgen;
 
 /// One generated request (engine-agnostic description).
 #[derive(Debug, Clone, PartialEq)]
@@ -21,6 +24,27 @@ pub struct WorkItem {
     pub domain: Option<String>,
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    /// Fair-share tenant this request bills to.
+    pub tenant: String,
+    pub priority: Priority,
+    /// Ask the server for SSE token streaming.
+    pub stream: bool,
+}
+
+impl WorkItem {
+    /// The non-scheduling defaults shared by every construction site.
+    pub fn basic(arrival: f64, domain: Option<String>, prompt: Vec<i32>,
+                 max_new: usize) -> WorkItem {
+        WorkItem {
+            arrival,
+            domain,
+            prompt,
+            max_new,
+            tenant: "default".to_string(),
+            priority: Priority::Standard,
+            stream: false,
+        }
+    }
 }
 
 /// Workload shape knobs.
@@ -81,7 +105,7 @@ impl Generator {
         let prompt =
             (0..plen).map(|_| self.rng.below(c.vocab as u64) as i32).collect();
         let max_new = self.rng.range(c.max_new.0, c.max_new.1 + 1);
-        WorkItem { arrival: self.clock, domain, prompt, max_new }
+        WorkItem::basic(self.clock, domain, prompt, max_new)
     }
 
     pub fn take(&mut self, n: usize) -> Vec<WorkItem> {
@@ -95,7 +119,7 @@ pub fn trace_to_json(items: &[WorkItem]) -> Json {
         items
             .iter()
             .map(|w| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("arrival", Json::num(w.arrival)),
                     ("domain", match &w.domain {
                         Some(d) => Json::str(d.clone()),
@@ -105,7 +129,19 @@ pub fn trace_to_json(items: &[WorkItem]) -> Json {
                         w.prompt.iter().map(|&t| Json::num(t as f64)).collect(),
                     )),
                     ("max_new", Json::num(w.max_new as f64)),
-                ])
+                ];
+                // scheduling fields are emitted only when non-default so
+                // pre-existing traces stay byte-stable
+                if w.tenant != "default" {
+                    fields.push(("tenant", Json::str(w.tenant.clone())));
+                }
+                if w.priority != Priority::Standard {
+                    fields.push(("priority", Json::str(w.priority.as_str())));
+                }
+                if w.stream {
+                    fields.push(("stream", Json::Bool(true)));
+                }
+                Json::obj(fields)
             })
             .collect(),
     )
@@ -123,6 +159,22 @@ pub fn trace_from_json(j: &Json) -> Result<Vec<WorkItem>> {
                 },
                 prompt: e.get("prompt")?.as_i32_vec()?,
                 max_new: e.get("max_new")?.as_usize()?,
+                tenant: match e.opt("tenant") {
+                    Some(t) => t.as_str()?.to_string(),
+                    None => "default".to_string(),
+                },
+                priority: match e.opt("priority") {
+                    Some(p) => {
+                        let s = p.as_str()?;
+                        Priority::from_str(s)
+                            .with_context(|| format!("bad priority {s:?}"))?
+                    }
+                    None => Priority::Standard,
+                },
+                stream: match e.opt("stream") {
+                    Some(b) => b.as_bool()?,
+                    None => false,
+                },
             })
         })
         .collect()
@@ -189,5 +241,30 @@ mod tests {
         let j = trace_to_json(&items);
         let back = trace_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(items, back);
+    }
+
+    /// Non-default scheduling fields survive the JSON roundtrip, and
+    /// default ones are omitted from the serialized form entirely.
+    #[test]
+    fn trace_roundtrip_scheduling_fields() {
+        let mut w = WorkItem::basic(0.5, Some("bench".into()),
+                                    vec![97, 98, 99], 4);
+        w.tenant = "rag-a".to_string();
+        w.priority = Priority::Interactive;
+        w.stream = true;
+        let plain = WorkItem::basic(0.75, None, vec![100], 2);
+        let items = vec![w, plain];
+        let s = trace_to_json(&items).to_string();
+        assert!(s.contains("\"tenant\""));
+        assert!(s.contains("\"priority\""));
+        assert!(s.contains("\"stream\""));
+        // the defaulted item contributes none of the optional keys
+        assert_eq!(s.matches("\"tenant\"").count(), 1);
+        let back = trace_from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(items, back);
+        assert!(trace_from_json(
+            &Json::parse("[{\"arrival\":0,\"domain\":null,\"prompt\":[1],\
+                           \"max_new\":1,\"priority\":\"nope\"}]").unwrap()
+        ).is_err());
     }
 }

@@ -1,0 +1,239 @@
+//! Serving-loop HTTP surface tests: SSE streaming framing, streamed
+//! output byte-identical to the non-streaming reply, mid-stream client
+//! disconnect retiring the request and releasing its KV pages, and the
+//! traffic generator's seed-determinism — all against a synthetic
+//! engine over loopback, no artifacts, no sleeps on the happy path.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use moska::config::{ModelConfig, ServingConfig};
+use moska::engine::Engine;
+use moska::kvcache::SharedStore;
+use moska::model::Weights;
+use moska::runtime::NativeBackend;
+use moska::util::json::Json;
+use moska::workload::loadgen::{run_inprocess, scenario_items, Scenario};
+use moska::workload::trace_to_json;
+
+const CHUNK: usize = 64;
+
+fn synthetic_engine() -> Engine {
+    let model = ModelConfig::tiny();
+    let cfg = ServingConfig {
+        top_k: None,
+        max_batch: 8,
+        exec_threads: 1,
+        ..Default::default()
+    };
+    let be = NativeBackend::with_threads(model.clone(), CHUNK, 1);
+    let weights = Weights::synthetic(model, 0x0B5E);
+    let mut eng = Engine::new(
+        Box::new(be), weights, SharedStore::empty(CHUNK), cfg, 1024,
+    );
+    let tokens: Vec<i32> =
+        (0..2 * CHUNK).map(|i| (i % 100) as i32).collect();
+    eng.register_domain("bench", &tokens).expect("register domain");
+    eng
+}
+
+fn spawn_server() -> SocketAddr {
+    let engine = synthetic_engine();
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = moska::server::serve_on(
+            "127.0.0.1:0".parse().unwrap(), engine, Some(tx),
+        );
+    });
+    rx.recv().expect("server ready")
+}
+
+/// One HTTP exchange; returns (header block, body).
+fn http(addr: SocketAddr, req: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(req.as_bytes()).expect("send");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read");
+    match resp.split_once("\r\n\r\n") {
+        Some((h, b)) => (h.to_string(), b.to_string()),
+        None => (resp, String::new()),
+    }
+}
+
+fn post_generate(addr: SocketAddr, body: &str) -> (String, String) {
+    http(addr, &format!(
+        "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(), body,
+    ))
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    http(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+}
+
+/// Poll an endpoint until `ok(body)` or a deadline (the engine loop
+/// refreshes its stats snapshot between decode steps).
+fn poll_get(addr: SocketAddr, path: &str,
+            ok: impl Fn(&str) -> bool) -> (String, String) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (head, body) = http_get(addr, path);
+        if ok(&body) {
+            return (head, body);
+        }
+        assert!(Instant::now() < deadline,
+                "{path} never reached the expected state; last: {body}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Split an SSE body into its token frames and the terminal `done`
+/// payload, rejecting error frames and anything unrecognized.
+fn parse_sse(body: &str) -> (Vec<i32>, Json) {
+    let mut tokens = Vec::new();
+    let mut done = None;
+    for frame in body.split("\n\n").filter(|f| !f.is_empty()) {
+        if let Some(rest) = frame.strip_prefix("data: ") {
+            let j = Json::parse(rest).expect("token frame JSON");
+            let t = j.get("token").expect("token field")
+                .as_f64().expect("token number") as i32;
+            assert!(done.is_none(), "token frame after done: {frame}");
+            tokens.push(t);
+        } else if let Some(rest) = frame.strip_prefix("event: done\ndata: ")
+        {
+            assert!(done.is_none(), "two done frames");
+            done = Some(Json::parse(rest).expect("done frame JSON"));
+        } else {
+            panic!("unexpected SSE frame: {frame:?}");
+        }
+    }
+    (tokens, done.expect("stream ended without a done frame"))
+}
+
+/// SSE framing and the streaming bit-identity contract: every sampled
+/// token arrives as its own `data: {"token":N}` frame, the terminal
+/// `event: done` payload carries the same body a non-streaming request
+/// returns, and the streamed token sequence is byte-identical to the
+/// non-streaming `tokens` array for the same greedy request.
+#[test]
+fn sse_stream_byte_identical_to_nonstream() {
+    let addr = spawn_server();
+    let req = |stream: bool| format!(
+        r#"{{"prompt": "abcdef", "domain": "bench", "max_tokens": 6, "stream": {stream}}}"#,
+    );
+
+    let (head, body) = post_generate(addr, &req(true));
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}\n{body}");
+    assert!(head.contains("text/event-stream"), "{head}");
+    let (streamed, done) = parse_sse(&body);
+    assert_eq!(streamed.len(), 6, "one frame per generated token");
+
+    let (head, plain) = post_generate(addr, &req(false));
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}\n{plain}");
+    assert!(head.contains("application/json"), "{head}");
+    let plain = Json::parse(&plain).expect("non-streaming reply JSON");
+
+    // greedy decode is deterministic, so the two requests generate the
+    // same tokens; compare the serialized fields byte-for-byte
+    assert_eq!(done.get("tokens").unwrap().to_string(),
+               plain.get("tokens").unwrap().to_string(),
+               "done frame vs non-streaming tokens");
+    assert_eq!(done.get("text").unwrap().to_string(),
+               plain.get("text").unwrap().to_string(),
+               "done frame vs non-streaming text");
+    assert_eq!(streamed,
+               plain.get("tokens").unwrap().as_i32_vec().unwrap(),
+               "incremental frames vs final token array");
+}
+
+/// Malformed streaming requests fail before the stream commits: the
+/// client gets a plain HTTP error, not a broken SSE body.
+#[test]
+fn sse_request_errors_are_http_errors() {
+    let addr = spawn_server();
+    let body = r#"{"prompt": "ab", "domain": "nope", "max_tokens": 2, "stream": true}"#;
+    let (head, body) = post_generate(addr, body);
+    assert!(head.starts_with("HTTP/1.1 400"), "{head}\n{body}");
+    assert!(!head.contains("text/event-stream"), "{head}");
+}
+
+/// A client that walks away mid-stream must not leak: the engine
+/// notices the dead connection, cancels the request, and releases its
+/// KV pages — observed through /stats draining to zero.
+#[test]
+fn sse_disconnect_retires_request_and_releases_pages() {
+    let addr = spawn_server();
+    // long enough that generation cannot finish before we disconnect
+    let body = r#"{"prompt": "abcd", "domain": "bench", "max_tokens": 20000, "stream": true}"#;
+    {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(format!(
+            "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(), body,
+        ).as_bytes()).expect("send");
+        // read until a few token frames arrived, then hang up
+        let mut seen = String::new();
+        let mut buf = [0u8; 4096];
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while seen.matches("data: {\"token\"").count() < 3 {
+            assert!(Instant::now() < deadline,
+                    "no token frames before deadline; got: {seen}");
+            let n = s.read(&mut buf).expect("read frames");
+            assert!(n > 0, "stream closed early: {seen}");
+            seen.push_str(&String::from_utf8_lossy(&buf[..n]));
+        }
+        assert!(seen.contains("text/event-stream"), "{seen}");
+    } // socket dropped here — mid-stream disconnect
+
+    // the engine cancels the request on the failed frame send and its
+    // pages return to the pool
+    let drained = |body: &str| {
+        let Ok(j) = Json::parse(body) else { return false };
+        let num = |k: &str| {
+            j.get(k).ok().and_then(|v| v.as_f64().ok()).unwrap_or(-1.0)
+        };
+        num("live") == 0.0 && num("queued") == 0.0
+            && num("kv_pages_allocated") == 0.0
+    };
+    let (_, stats) = poll_get(addr, "/stats", drained);
+    // and nothing was recorded as a completion
+    let j = Json::parse(&stats).unwrap();
+    assert_eq!(
+        j.get("lifecycle").unwrap().get("completed").unwrap()
+            .as_f64().unwrap(),
+        0.0,
+        "cancelled request must not count as completed",
+    );
+}
+
+/// Traffic generator determinism (the BENCH_serving.json contract):
+/// the same (scenario, n, seed) triple yields a byte-identical WorkItem
+/// trace and identical count/mix report columns; a different seed
+/// yields a different trace.
+#[test]
+fn loadgen_same_seed_same_trace_and_report_columns() {
+    for sc in [Scenario::RagShared, Scenario::Mixed] {
+        let a = scenario_items(sc, 24, 42);
+        let b = scenario_items(sc, 24, 42);
+        assert_eq!(trace_to_json(&a).to_string(),
+                   trace_to_json(&b).to_string(),
+                   "{sc:?}: trace JSON not seed-deterministic");
+        let ra = run_inprocess(sc, &a, 42).unwrap().to_json();
+        let rb = run_inprocess(sc, &b, 42).unwrap().to_json();
+        for col in ["scenario", "mode", "seed", "requests", "errors",
+                    "streamed_tokens", "generated_tokens", "mix"] {
+            assert_eq!(ra.get(col).unwrap().to_string(),
+                       rb.get(col).unwrap().to_string(),
+                       "{sc:?}: column {col} differs between runs");
+        }
+        assert_eq!(
+            ra.get("errors").unwrap().as_f64().unwrap(), 0.0,
+            "{sc:?}: scenario items must all pass admission",
+        );
+        let c = scenario_items(sc, 24, 43);
+        assert_ne!(trace_to_json(&a).to_string(),
+                   trace_to_json(&c).to_string(),
+                   "{sc:?}: seed does not influence the trace");
+    }
+}

@@ -334,7 +334,7 @@ fn prop_json_roundtrip() {
 
 #[test]
 fn prop_scheduler_conserves_requests() {
-    use moska::scheduler::StepScheduler;
+    use moska::scheduler::{ReqMeta, StepScheduler};
 
     check(
         "scheduler-conservation",
@@ -343,14 +343,14 @@ fn prop_scheduler_conserves_requests() {
         |&Pair(n, max_batch)| {
             let mut s = StepScheduler::new(max_batch);
             for id in 0..n {
-                s.enqueue(id);
+                s.enqueue(id, ReqMeta::default());
             }
             let mut completed = std::collections::HashSet::new();
             let mut guard = 0;
             while !s.is_idle() {
                 guard += 1;
                 prop_assert!(guard < 10_000, "scheduler livelock");
-                s.refill();
+                s.tick();
                 prop_assert!(s.live().len() <= max_batch, "batch overflow");
                 // complete the first live request each "step"
                 if let Some(&id) = s.live().first() {
@@ -360,6 +360,197 @@ fn prop_scheduler_conserves_requests() {
             }
             prop_assert!(completed.len() == n,
                          "{} completed vs {n}", completed.len());
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug, Clone)]
+struct SchedOps {
+    ops: Vec<(u8, usize)>,
+    max_batch: usize,
+}
+
+impl Case for SchedOps {
+    fn shrink(&self) -> Vec<SchedOps> {
+        if self.ops.len() > 1 {
+            vec![
+                SchedOps {
+                    ops: self.ops[..self.ops.len() / 2].to_vec(),
+                    max_batch: self.max_batch,
+                },
+                SchedOps {
+                    ops: self.ops[1..].to_vec(),
+                    max_batch: self.max_batch,
+                },
+            ]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Mirror the engine's per-tick KV bookkeeping: fresh KV on (first)
+/// admission, one chunk appended per prefill assignment, one token per
+/// decode row.
+fn sched_run_tick(
+    s: &mut moska::scheduler::StepScheduler,
+    pool: &mut PagePool,
+    kvs: &mut std::collections::HashMap<usize, RequestKv>,
+    rng: &mut Rng,
+) -> Result<(), String> {
+    let t = s.tick();
+    for id in &t.admitted {
+        kvs.entry(*id).or_insert_with(|| RequestKv::new(2, 0));
+    }
+    let mut grow = |kvs: &mut std::collections::HashMap<usize, RequestKv>,
+                    pool: &mut PagePool,
+                    rng: &mut Rng,
+                    id: usize,
+                    n: usize|
+     -> Result<(), String> {
+        let kv = kvs.get_mut(&id).ok_or("kv append for unknown id")?;
+        let shape = [n, 2, 4];
+        let mut k = vec![0f32; n * 8];
+        let mut v = vec![0f32; n * 8];
+        rng.fill_normal_f32(&mut k);
+        rng.fill_normal_f32(&mut v);
+        kv.append(
+            pool,
+            &[
+                (Tensor::f32(&shape, k.clone()),
+                 Tensor::f32(&shape, v.clone())),
+                (Tensor::f32(&shape, k), Tensor::f32(&shape, v)),
+            ],
+        )
+        .map_err(|e| e.to_string())
+    };
+    for pa in &t.prefill {
+        grow(kvs, pool, rng, pa.id, pa.end - pa.start)?;
+    }
+    for id in &t.decode {
+        grow(kvs, pool, rng, *id, 1)?;
+    }
+    Ok(())
+}
+
+/// The serving loop's page-conservation invariant under randomized
+/// arrival / retire / preempt (hold and recompute flavors) / cancel:
+/// every page is either free or owned by exactly one live KV, the
+/// active batch never overflows, and a full drain returns the pool to
+/// empty.
+#[test]
+fn prop_scheduler_preempt_page_accounting() {
+    use moska::scheduler::{Phase, ReqMeta, StepScheduler};
+
+    check(
+        "scheduler-preempt-pages",
+        Config { cases: 40, ..Default::default() },
+        |rng| {
+            let n = rng.range(4, 60);
+            SchedOps {
+                ops: (0..n)
+                    .map(|_| (rng.range(0, 4) as u8, rng.range(0, 1000)))
+                    .collect(),
+                max_batch: rng.range(1, 6),
+            }
+        },
+        |case| {
+            let mut pool = PagePool::new(10_000, 8, 2, 4);
+            let mut s = StepScheduler::new(case.max_batch)
+                .with_budget(8, 8);
+            let mut kvs = std::collections::HashMap::new();
+            let mut known: Vec<usize> = Vec::new();
+            let mut next_id = 0usize;
+            let mut rng = Rng::new(7);
+            for &(kind, val) in &case.ops {
+                match kind {
+                    0 => {
+                        let prompt_tokens = rng.range(1, 20);
+                        s.enqueue(next_id, ReqMeta {
+                            prompt_tokens,
+                            ..Default::default()
+                        });
+                        known.push(next_id);
+                        next_id += 1;
+                    }
+                    1 => {
+                        // force-preempt a live request; odd ids take the
+                        // recompute flavor (pages released, prefill
+                        // restarts), even ids hold their pages
+                        let live = s.live();
+                        if let Some(&id) =
+                            live.get(val % live.len().max(1))
+                        {
+                            prop_assert!(s.force_preempt(id),
+                                         "live id not preemptible");
+                            if id % 2 == 1 {
+                                if let Some(mut kv) = kvs.remove(&id) {
+                                    kv.release(&mut pool);
+                                }
+                                s.reset_progress(id);
+                            }
+                        }
+                    }
+                    2 => {
+                        if let Some(&id) = s.live().first() {
+                            s.retire(&[id]);
+                            known.retain(|&k| k != id);
+                            if let Some(mut kv) = kvs.remove(&id) {
+                                kv.release(&mut pool);
+                            }
+                        }
+                    }
+                    _ => {
+                        if !known.is_empty() {
+                            let id = known[val % known.len()];
+                            prop_assert!(s.cancel(id),
+                                         "cancel of known id failed");
+                            known.retain(|&k| k != id);
+                            if let Some(mut kv) = kvs.remove(&id) {
+                                kv.release(&mut pool);
+                            }
+                        }
+                    }
+                }
+                sched_run_tick(&mut s, &mut pool, &mut kvs, &mut rng)?;
+                prop_assert!(s.live().len() <= case.max_batch,
+                             "batch overflow");
+                let want: usize =
+                    kvs.values().map(|kv| kv.page_count()).sum();
+                prop_assert!(pool.allocated() == want,
+                             "pages_live {} != owned {}",
+                             pool.allocated(), want);
+                prop_assert!(
+                    pool.allocated() + pool.available() == pool.capacity(),
+                    "page conservation broken: {} + {} != {}",
+                    pool.allocated(), pool.available(), pool.capacity()
+                );
+            }
+            // drain: finish everything, then the pool must be empty
+            let mut guard = 0;
+            while !s.is_idle() {
+                guard += 1;
+                prop_assert!(guard < 10_000, "drain livelock");
+                sched_run_tick(&mut s, &mut pool, &mut kvs, &mut rng)?;
+                let done: Vec<usize> = s
+                    .live()
+                    .iter()
+                    .copied()
+                    .filter(|&id| s.phase(id) == Some(Phase::Decode))
+                    .collect();
+                for id in done {
+                    s.retire(&[id]);
+                    known.retain(|&k| k != id);
+                    if let Some(mut kv) = kvs.remove(&id) {
+                        kv.release(&mut pool);
+                    }
+                }
+            }
+            prop_assert!(known.is_empty() && kvs.is_empty(),
+                         "requests left behind");
+            prop_assert!(pool.allocated() == 0,
+                         "pages leak after drain: {}", pool.allocated());
             Ok(())
         },
     );

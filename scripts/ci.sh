@@ -547,6 +547,89 @@ reported after losing the last replica" >&2
     fi
 fi
 
+if [ "$RUN_BENCH" = "1" ]; then
+    echo "== serving loop smoke =="
+    # a real `moska serve --synthetic` on an ephemeral loopback port,
+    # driven by `moska loadgen` for a few seconds of SSE traffic; the
+    # gate: zero request errors, nonzero streamed tokens, and finite
+    # TTFT/TPOT percentiles in bench_out/BENCH_serving.json (plus the
+    # chunked-vs-unchunked TTFT probe riding in the same report)
+    if cargo build --release --bin moska; then
+        BIN=target/release/moska
+        mkdir -p bench_out
+        "$BIN" serve --synthetic --addr 127.0.0.1:0 \
+            > bench_out/serve.log 2>&1 &
+        SRV_PID=$!
+        trap 'kill "$SRV_PID" 2>/dev/null' EXIT
+        ADDR=""
+        for _ in $(seq 1 100); do
+            ADDR=$(sed -n 's/.*listening on http:\/\/\([0-9.:]*\).*/\1/p' \
+                       bench_out/serve.log 2>/dev/null | head -1)
+            [ -n "$ADDR" ] && break
+            sleep 0.1
+        done
+        if [ -z "$ADDR" ]; then
+            echo "error: serve never reported its address" >&2
+            cat bench_out/serve.log >&2 || true
+            FAIL=1
+        elif "$BIN" loadgen --addr "$ADDR" --scenario rag-shared \
+                 --seconds 5 --concurrency 4 \
+                 --out bench_out/BENCH_serving.json --compare-chunking; then
+            if command -v python3 >/dev/null 2>&1; then
+                if python3 - bench_out/BENCH_serving.json <<'PYEOF'
+import json, math, sys
+r = json.load(open(sys.argv[1]))
+assert r["errors"] == 0, "request errors: %s" % r.get("first_error", r)
+assert r["requests"] > 0, r
+assert r["streamed_tokens"] > 0, r
+for k in ("ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms", "tpot_p99_ms",
+          "goodput_rps"):
+    v = r[k]
+    assert isinstance(v, (int, float)) and math.isfinite(v) and v >= 0, \
+        (k, v)
+cc = r.get("chunking_compare")
+assert cc, "chunking probe missing from the report"
+assert cc["short_ttft_speedup"] > 0, cc
+print("serving ok: %d req, %d streamed tokens, ttft p50 %.2f ms "
+      "p99 %.2f ms, chunked short-TTFT speedup %.2fx"
+      % (r["requests"], r["streamed_tokens"], r["ttft_p50_ms"],
+         r["ttft_p99_ms"], cc["short_ttft_speedup"]))
+PYEOF
+                then
+                    echo "serving smoke: report gate passed"
+                else
+                    echo "error: BENCH_serving.json failed the gate" >&2
+                    cat bench_out/BENCH_serving.json >&2 || true
+                    FAIL=1
+                fi
+            else
+                # no python3: the compact-JSON spot checks
+                if grep -q '"errors":0,' bench_out/BENCH_serving.json \
+                   && grep -q '"streamed_tokens":' \
+                           bench_out/BENCH_serving.json \
+                   && ! grep -q '"streamed_tokens":0,' \
+                           bench_out/BENCH_serving.json \
+                   && ! grep -qi 'nan\|inf' bench_out/BENCH_serving.json; then
+                    echo "serving smoke: report spot-checked (no python3)"
+                else
+                    echo "error: BENCH_serving.json failed spot checks" >&2
+                    cat bench_out/BENCH_serving.json >&2 || true
+                    FAIL=1
+                fi
+            fi
+        else
+            echo "error: loadgen run against the server failed" >&2
+            cat bench_out/serve.log >&2 || true
+            FAIL=1
+        fi
+        kill "$SRV_PID" 2>/dev/null
+        trap - EXIT
+    else
+        echo "error: release build for the serving smoke failed" >&2
+        FAIL=1
+    fi
+fi
+
 if [ "$FAIL" -ne 0 ]; then
     echo "CI FAILED" >&2
     exit 1
