@@ -151,7 +151,66 @@ fn serving_from_json(j: &Json) -> Result<ServingConfig> {
             })
             .collect::<Result<_>>()?;
     }
+    if let Some(a) = j.opt("admission") {
+        if let Some(v) = a.opt("enabled") {
+            c.admission.enabled = v.as_bool()?;
+        }
+        if let Some(v) = a.opt("max_queue") {
+            c.admission.max_queue = v.as_usize()?;
+        }
+        if let Some(v) = a.opt("max_queued_prefill_tokens") {
+            c.admission.max_queued_prefill_tokens = v.as_usize()?;
+        }
+        if let Some(v) = a.opt("high") {
+            c.admission.high = v.as_f64()?;
+        }
+        if let Some(v) = a.opt("low") {
+            c.admission.low = v.as_f64()?;
+        }
+        if let Some(v) = a.opt("retry_after_ms") {
+            c.admission.retry_after_secs = v.as_f64()? / 1000.0;
+        }
+        anyhow::ensure!(
+            c.admission.low <= c.admission.high
+                && c.admission.high <= 1.0
+                && c.admission.low >= 0.0,
+            "admission watermarks want 0 <= low <= high <= 1, got \
+             low={} high={}",
+            c.admission.low,
+            c.admission.high,
+        );
+    }
+    if let Some(v) = j.opt("deadline_ms") {
+        c.deadline_ms = class_ms_pairs(v, "deadline_ms")?;
+    }
+    if let Some(v) = j.opt("ttft_deadline_ms") {
+        c.ttft_deadline_ms = class_ms_pairs(v, "ttft_deadline_ms")?;
+    }
     Ok(c)
+}
+
+/// Parse `["interactive=2000", "batch=60000"]`-style per-class
+/// millisecond lists (the `tenant_weights` idiom).
+fn class_ms_pairs(v: &Json, what: &str)
+                  -> Result<Vec<(crate::scheduler::Priority, u64)>> {
+    v.as_arr()?
+        .iter()
+        .map(|p| {
+            let s = p.as_str()?;
+            let (name, ms) = s.split_once('=').with_context(|| {
+                format!("{what} entry '{s}' wants class=milliseconds")
+            })?;
+            let class = crate::scheduler::Priority::from_str(name)
+                .with_context(|| format!(
+                    "unknown class in {what} entry '{s}' \
+                     (interactive|standard|batch)"))?;
+            let ms: u64 = ms.parse().with_context(|| {
+                format!("bad milliseconds in {what} entry '{s}'")
+            })?;
+            anyhow::ensure!(ms > 0, "{what} must be > 0 in '{s}'");
+            Ok((class, ms))
+        })
+        .collect()
 }
 
 fn workload_from_json(j: &Json) -> Result<WorkloadConfig> {
@@ -303,6 +362,51 @@ mod tests {
             r#"{"serving": {"tenant_weights": ["teamA"]}}"#,
             r#"{"serving": {"tenant_weights": ["teamA=fast"]}}"#,
             r#"{"serving": {"tenant_weights": ["teamA=0"]}}"#,
+        ] {
+            assert!(FileConfig::from_json(&Json::parse(bad).unwrap())
+                        .is_err(),
+                    "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn admission_and_deadlines_parse() {
+        use crate::scheduler::Priority;
+        let j = Json::parse(
+            r#"{"serving": {
+                  "admission": {"enabled": true, "max_queue": 64,
+                                "max_queued_prefill_tokens": 4096,
+                                "high": 0.7, "low": 0.3,
+                                "retry_after_ms": 250},
+                  "deadline_ms": ["interactive=2000", "batch=60000"],
+                  "ttft_deadline_ms": ["interactive=500"]}}"#,
+        )
+        .unwrap();
+        let s = FileConfig::from_json(&j).unwrap().serving.unwrap();
+        assert!(s.admission.enabled);
+        assert_eq!(s.admission.max_queue, 64);
+        assert_eq!(s.admission.max_queued_prefill_tokens, 4096);
+        assert_eq!(s.admission.high, 0.7);
+        assert_eq!(s.admission.low, 0.3);
+        assert!((s.admission.retry_after_secs - 0.25).abs() < 1e-12);
+        assert_eq!(s.class_deadline(Priority::Interactive),
+                   Some(std::time::Duration::from_millis(2000)));
+        assert_eq!(s.class_deadline(Priority::Batch),
+                   Some(std::time::Duration::from_millis(60000)));
+        assert_eq!(s.class_deadline(Priority::Standard), None);
+        assert_eq!(s.class_ttft_deadline(Priority::Interactive),
+                   Some(std::time::Duration::from_millis(500)));
+        // defaults: watermarks on, no deadlines
+        let d = ServingConfig::default();
+        assert!(d.admission.enabled);
+        assert!(d.deadline_ms.is_empty());
+        for bad in [
+            r#"{"serving": {"admission": {"high": 0.3, "low": 0.6}}}"#,
+            r#"{"serving": {"admission": {"high": 1.5}}}"#,
+            r#"{"serving": {"deadline_ms": ["vip=100"]}}"#,
+            r#"{"serving": {"deadline_ms": ["interactive"]}}"#,
+            r#"{"serving": {"deadline_ms": ["interactive=soon"]}}"#,
+            r#"{"serving": {"ttft_deadline_ms": ["batch=0"]}}"#,
         ] {
             assert!(FileConfig::from_json(&Json::parse(bad).unwrap())
                         .is_err(),

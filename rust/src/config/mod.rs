@@ -142,6 +142,23 @@ pub struct ServingConfig {
     /// Per-tenant fair-share weights (JSON `serving.tenant_weights` as
     /// `["teamA=2", "teamB=1"]`); unlisted tenants weigh 1.0.
     pub tenant_weights: Vec<(String, f64)>,
+    /// SLO-aware admission watermarks (JSON `serving.admission.*`, CLI
+    /// `--admission`). Above the high watermark new `batch` work is
+    /// refused (HTTP 429 + `Retry-After`), then `standard`;
+    /// `interactive` is only refused at hard capacity. See
+    /// [`AdmissionConfig`][crate::scheduler::AdmissionConfig] and the
+    /// overload-control section of `docs/ARCHITECTURE.md`.
+    pub admission: crate::scheduler::AdmissionConfig,
+    /// Default end-to-end deadline per priority class, in ms (JSON
+    /// `serving.deadline_ms` as `["interactive=2000", "batch=60000"]`;
+    /// per-request `deadline_ms` body field overrides). A request past
+    /// its deadline is cancelled between ticks — pages released,
+    /// lifecycle recorded as a timeout. Unlisted classes have none.
+    pub deadline_ms: Vec<(crate::scheduler::Priority, u64)>,
+    /// Default time-to-first-token deadline per class, in ms (JSON
+    /// `serving.ttft_deadline_ms`, body field `ttft_deadline_ms`).
+    /// Expires a request that has not produced its first token in time.
+    pub ttft_deadline_ms: Vec<(crate::scheduler::Priority, u64)>,
 }
 
 impl Default for ServingConfig {
@@ -162,6 +179,9 @@ impl Default for ServingConfig {
             prefill_chunk: 32,
             preempt_policy: crate::scheduler::PreemptPolicy::Hold,
             tenant_weights: Vec::new(),
+            admission: crate::scheduler::AdmissionConfig::default(),
+            deadline_ms: Vec::new(),
+            ttft_deadline_ms: Vec::new(),
         }
     }
 }
@@ -174,6 +194,24 @@ impl ServingConfig {
             .find(|(t, _)| t == tenant)
             .map(|&(_, w)| w)
             .unwrap_or(1.0)
+    }
+
+    /// Configured default end-to-end deadline for a priority class.
+    pub fn class_deadline(&self, p: crate::scheduler::Priority)
+                          -> Option<std::time::Duration> {
+        self.deadline_ms
+            .iter()
+            .find(|&&(c, _)| c == p)
+            .map(|&(_, ms)| std::time::Duration::from_millis(ms))
+    }
+
+    /// Configured default TTFT deadline for a priority class.
+    pub fn class_ttft_deadline(&self, p: crate::scheduler::Priority)
+                               -> Option<std::time::Duration> {
+        self.ttft_deadline_ms
+            .iter()
+            .find(|&&(c, _)| c == p)
+            .map(|&(_, ms)| std::time::Duration::from_millis(ms))
     }
 }
 
@@ -190,6 +228,22 @@ mod tests {
         assert_eq!(c.tenant_weight("a"), 2.0);
         assert_eq!(c.tenant_weight("b"), 0.5);
         assert_eq!(c.tenant_weight("c"), 1.0);
+    }
+
+    #[test]
+    fn class_deadline_lookup() {
+        use crate::scheduler::Priority;
+        use std::time::Duration;
+        let mut c = ServingConfig::default();
+        assert_eq!(c.class_deadline(Priority::Interactive), None);
+        assert_eq!(c.class_ttft_deadline(Priority::Batch), None);
+        c.deadline_ms = vec![(Priority::Interactive, 2000)];
+        c.ttft_deadline_ms = vec![(Priority::Interactive, 500)];
+        assert_eq!(c.class_deadline(Priority::Interactive),
+                   Some(Duration::from_millis(2000)));
+        assert_eq!(c.class_deadline(Priority::Standard), None);
+        assert_eq!(c.class_ttft_deadline(Priority::Interactive),
+                   Some(Duration::from_millis(500)));
     }
 
     #[test]

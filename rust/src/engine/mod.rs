@@ -44,7 +44,8 @@ use crate::runtime::arena::{ArenaStats, TensorArena};
 use crate::runtime::Backend;
 use crate::scheduler::{Admit, AdmissionController, Demand, Lifecycle,
                        LifecycleTracker, PreemptPolicy, PrefillAssign,
-                       Priority, ReqMeta, SloTracker, StepScheduler};
+                       PressureSnapshot, Priority, ReqMeta, SloTracker,
+                       StepScheduler};
 use crate::tensor::Tensor;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
@@ -52,6 +53,88 @@ use crate::util::rng::Rng;
 pub mod register;
 pub mod replay;
 pub mod sessions;
+
+/// Typed admission rejection — the server maps these onto HTTP 429
+/// (+ `Retry-After`) instead of string-matching error text.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmitError {
+    /// Watermark shedding refused this priority class under pressure.
+    Shed {
+        priority: Priority,
+        level: u8,
+        pressure: f64,
+        retry_after_secs: f64,
+    },
+    /// The wait queue is at its hard bound.
+    QueueFull { retry_after_secs: f64 },
+    /// The KV page pool cannot cover the request's worst case.
+    NoPages {
+        need: usize,
+        available: usize,
+        retry_after_secs: f64,
+    },
+}
+
+impl AdmitError {
+    /// The `Retry-After` hint to hand the client, in seconds.
+    pub fn retry_after_secs(&self) -> f64 {
+        match self {
+            AdmitError::Shed { retry_after_secs, .. }
+            | AdmitError::QueueFull { retry_after_secs }
+            | AdmitError::NoPages { retry_after_secs, .. } => {
+                *retry_after_secs
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+           -> std::fmt::Result {
+        match self {
+            AdmitError::Shed { priority, level, pressure, .. } => write!(
+                f,
+                "admission rejected: {} work shed at level {level} \
+                 (pressure {pressure:.2})",
+                priority.as_str(),
+            ),
+            AdmitError::QueueFull { .. } => {
+                write!(f, "admission rejected: queue full")
+            }
+            AdmitError::NoPages { need, available, .. } => write!(
+                f,
+                "admission rejected: need {need} KV pages, \
+                 {available} available",
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// Per-submit serving options beyond the request body itself.
+#[derive(Debug, Clone)]
+pub struct SubmitOpts {
+    /// Tenant charged for fair-share accounting.
+    pub tenant: String,
+    pub priority: Priority,
+    /// End-to-end deadline; `None` falls back to the class default
+    /// (`serving.deadline_ms`), which may also be none.
+    pub deadline: Option<std::time::Duration>,
+    /// Time-to-first-token deadline; same fallback.
+    pub ttft_deadline: Option<std::time::Duration>,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> SubmitOpts {
+        SubmitOpts {
+            tenant: "default".to_string(),
+            priority: Priority::Standard,
+            deadline: None,
+            ttft_deadline: None,
+        }
+    }
+}
 
 /// A submitted generation request.
 #[derive(Debug, Clone)]
@@ -65,6 +148,11 @@ pub struct Request {
     /// Multi-turn conversation this request continues (paper §II.A prefix
     /// reuse); the session's unique KV survives across turns.
     pub session: Option<u64>,
+    /// End-to-end deadline measured from submit; expiry cancels the
+    /// request between ticks (pages released, lifecycle `timeout`).
+    pub deadline: Option<std::time::Duration>,
+    /// Deadline for the first token specifically.
+    pub ttft_deadline: Option<std::time::Duration>,
 }
 
 /// Completed request output.
@@ -104,6 +192,8 @@ struct Live {
     decode_accum: f64,
     /// TTFT observed once — a recompute re-prefill must not re-count.
     ttft_done: bool,
+    /// Submit wall time — deadlines are measured from here.
+    submitted: Instant,
 }
 
 /// The serving engine (single-node; [`disagg`][crate::disagg] splits it).
@@ -131,6 +221,9 @@ pub struct Engine {
     /// Tokens sampled since the last [`take_emitted`][Engine::take_emitted]
     /// drain, in sampling order — the streaming (SSE) feed.
     emitted: Vec<(usize, i32)>,
+    /// Requests retired by deadline expiry since the last
+    /// [`take_expired`][Engine::take_expired] drain: (id, reason).
+    expired: Vec<(usize, String)>,
     /// Deterministic work counter: forwarded rows (prefill + decode).
     /// Clock-free progress measure for the chunking benches.
     work_units: u64,
@@ -161,7 +254,9 @@ impl Engine {
             router: Router::new(cfg.top_k),
             sched: StepScheduler::new(cfg.max_batch)
                 .with_budget(cfg.step_tokens, cfg.prefill_chunk),
-            admission: AdmissionController::new(1024),
+            admission: AdmissionController::with_config(
+                cfg.admission.clone(),
+            ),
             slo: SloTracker::new(cfg.slo_tokens_per_sec),
             lifecycle: LifecycleTracker::new(),
             backend,
@@ -176,6 +271,7 @@ impl Engine {
             pending: HashMap::new(),
             results: Vec::new(),
             emitted: Vec::new(),
+            expired: Vec::new(),
             work_units: 0,
             rng: Rng::new(0xDEC0DE),
             next_id: 0,
@@ -203,6 +299,20 @@ impl Engine {
     pub fn submit_opts(&mut self, domain: Option<&str>, prompt: Vec<i32>,
                        max_new: usize, sampler: Sampler, tenant: &str,
                        priority: Priority) -> Result<usize> {
+        self.submit_with(domain, prompt, max_new, sampler, SubmitOpts {
+            tenant: tenant.to_string(),
+            priority,
+            ..Default::default()
+        })
+    }
+
+    /// Full submit path: validates, runs SLO-aware admission (hard caps
+    /// + watermark shedding — rejections are typed [`AdmitError`]s
+    /// inside the anyhow chain), and applies per-class deadline
+    /// defaults to unset deadlines.
+    pub fn submit_with(&mut self, domain: Option<&str>, prompt: Vec<i32>,
+                       max_new: usize, sampler: Sampler,
+                       opts: SubmitOpts) -> Result<usize> {
         if let Some(d) = domain {
             self.shared.domain(d)?; // validate early
         }
@@ -215,20 +325,43 @@ impl Engine {
             pages: model.n_layers
                 * (prompt.len() + max_new).div_ceil(chunk),
         };
-        match self.admission.check(&demand, self.pool.available(),
-                                   self.sched.queued()) {
+        let snap = self.pressure_snapshot();
+        let verdict = self.admission.admit(&demand, opts.priority, &snap);
+        self.publish_admission_gauges();
+        let retry = self.admission.cfg.retry_after_secs;
+        match verdict {
             Admit::Ok => {}
-            Admit::NoPages { need, available } => {
-                bail!("admission rejected: need {need} KV pages, {available} available")
+            other => {
+                self.metrics.count(
+                    admission_shed_counter(opts.priority), 1);
+                let err = match other {
+                    Admit::Shed { level, pressure } => AdmitError::Shed {
+                        priority: opts.priority,
+                        level,
+                        pressure,
+                        retry_after_secs: retry,
+                    },
+                    Admit::QueueFull => {
+                        AdmitError::QueueFull { retry_after_secs: retry }
+                    }
+                    Admit::NoPages { need, available } => {
+                        AdmitError::NoPages {
+                            need,
+                            available,
+                            retry_after_secs: retry,
+                        }
+                    }
+                    Admit::Ok => unreachable!(),
+                };
+                return Err(err.into());
             }
-            Admit::QueueFull => bail!("admission rejected: queue full"),
         }
         let id = self.next_id;
         self.next_id += 1;
         let meta = ReqMeta {
-            tenant: tenant.to_string(),
-            weight: self.cfg.tenant_weight(tenant),
-            priority,
+            tenant: opts.tenant.clone(),
+            weight: self.cfg.tenant_weight(&opts.tenant),
+            priority: opts.priority,
             prompt_tokens: prompt.len(),
         };
         let req = Request {
@@ -238,11 +371,98 @@ impl Engine {
             max_new,
             sampler,
             session: None,
+            deadline: opts
+                .deadline
+                .or_else(|| self.cfg.class_deadline(opts.priority)),
+            ttft_deadline: opts
+                .ttft_deadline
+                .or_else(|| self.cfg.class_ttft_deadline(opts.priority)),
         };
         self.pending.insert(id, (req, Instant::now()));
         self.sched.enqueue(id, meta);
         self.metrics.count("requests_submitted", 1);
         Ok(id)
+    }
+
+    /// Current admission pressure inputs (queue depth, queued prefill
+    /// tokens, KV page headroom).
+    pub fn pressure_snapshot(&self) -> PressureSnapshot {
+        PressureSnapshot {
+            queued: self.sched.queued(),
+            queued_prefill_tokens: self.sched.queued_prefill_tokens(),
+            pages_free: self.pool.available(),
+            pages_total: self.pool.capacity(),
+        }
+    }
+
+    fn publish_admission_gauges(&self) {
+        let snap = self.pressure_snapshot();
+        self.metrics.gauge("admission_pressure",
+                           self.admission.pressure(&snap));
+        self.metrics.gauge("admission_level",
+                           self.admission.level() as f64);
+    }
+
+    /// Drain requests retired by deadline expiry since the last call:
+    /// (id, human-readable reason). The server loop forwards these to
+    /// waiting clients as terminal errors.
+    pub fn take_expired(&mut self) -> Vec<(usize, String)> {
+        std::mem::take(&mut self.expired)
+    }
+
+    /// Cancel every request past its deadline — run between ticks, so
+    /// an expired request leaves exactly like an SSE disconnect: pages
+    /// released, scheduler entry dropped, lifecycle recorded as a
+    /// timeout (never as a completion).
+    fn expire_deadlines(&mut self) {
+        if self.pending.is_empty() && self.live.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let mut due: Vec<(usize, String)> = Vec::new();
+        for (id, (req, submitted)) in &self.pending {
+            let waited = now.saturating_duration_since(*submitted);
+            let limit = match (req.deadline, req.ttft_deadline) {
+                (Some(d), Some(t)) => Some(d.min(t)),
+                (d, t) => d.or(t),
+            };
+            if let Some(limit) = limit {
+                if waited > limit {
+                    due.push((*id, format!(
+                        "deadline exceeded after {:.0} ms in queue",
+                        waited.as_secs_f64() * 1e3,
+                    )));
+                }
+            }
+        }
+        for (id, l) in &self.live {
+            let age = now.saturating_duration_since(l.submitted);
+            let over_total =
+                l.req.deadline.is_some_and(|d| age > d);
+            let over_ttft = !l.ttft_done
+                && l.req.ttft_deadline.is_some_and(|d| age > d);
+            if over_total || over_ttft {
+                due.push((*id, format!(
+                    "{} deadline exceeded after {:.0} ms",
+                    if over_total { "request" } else { "ttft" },
+                    age.as_secs_f64() * 1e3,
+                )));
+            }
+        }
+        due.sort_by_key(|&(id, _)| id);
+        for (id, why) in due {
+            let known = self.sched.cancel(id);
+            self.pending.remove(&id);
+            if let Some(mut l) = self.live.remove(&id) {
+                l.kv.rollback_uncommitted();
+                l.kv.release(&mut self.pool);
+            }
+            if known {
+                self.metrics.count("req_timeout", 1);
+                self.lifecycle.record_timeout();
+                self.expired.push((id, why));
+            }
+        }
     }
 
     /// Internal submit used by [`sessions`] (skips re-validation the
@@ -334,6 +554,16 @@ impl Engine {
     /// flavors and thread counts (per-request decode math never depends
     /// on batch composition).
     pub fn step(&mut self) -> Result<bool> {
+        // deadlines expire between ticks, exactly like disconnects
+        self.expire_deadlines();
+        // keep the watermark state machine moving when submits are idle
+        // (de-escalation happens on pressure, not on traffic)
+        let snap = self.pressure_snapshot();
+        let pressure = self.admission.pressure(&snap);
+        self.admission.update(pressure);
+        self.metrics.gauge("admission_pressure", pressure);
+        self.metrics.gauge("admission_level",
+                           self.admission.level() as f64);
         let tick = self.sched.tick();
         for id in &tick.preempted {
             self.apply_preempt(*id);
@@ -378,6 +608,7 @@ impl Engine {
                 decode_t0: None,
                 decode_accum: 0.0,
                 ttft_done: false,
+                submitted,
             });
         }
         for pa in &tick.prefill {
@@ -931,10 +1162,20 @@ pub fn build_engine_from_args(args: &Args)
     build_engine(&dir, args.get("backend").unwrap_or("xla"), cfg)
 }
 
+/// Per-class `admission_shed_*` counter name.
+fn admission_shed_counter(p: Priority) -> &'static str {
+    match p {
+        Priority::Interactive => "admission_shed_interactive",
+        Priority::Standard => "admission_shed_standard",
+        Priority::Batch => "admission_shed_batch",
+    }
+}
+
 /// Apply the serving-loop CLI flags (`--step-tokens`, `--prefill-chunk`,
-/// `--preempt`) onto a config; an empty/missing flag leaves the config
-/// value (file or default) untouched. Commands without these flags pass
-/// through unchanged.
+/// `--preempt`, `--admission`, `--deadline-ms`, `--ttft-deadline-ms`)
+/// onto a config; an empty/missing flag leaves the config value (file
+/// or default) untouched. Commands without these flags pass through
+/// unchanged.
 pub fn apply_serving_flags(cfg: &mut ServingConfig, args: &Args)
                            -> Result<()> {
     if let Some(s) = args.get("step-tokens") {
@@ -959,7 +1200,88 @@ pub fn apply_serving_flags(cfg: &mut ServingConfig, args: &Args)
                 })?;
         }
     }
+    if let Some(s) = args.get("admission") {
+        if !s.is_empty() {
+            parse_admission_flag(&mut cfg.admission, s)?;
+        }
+    }
+    if let Some(s) = args.get("deadline-ms") {
+        if !s.is_empty() {
+            cfg.deadline_ms = parse_class_ms_flag(s, "deadline-ms")?;
+        }
+    }
+    if let Some(s) = args.get("ttft-deadline-ms") {
+        if !s.is_empty() {
+            cfg.ttft_deadline_ms =
+                parse_class_ms_flag(s, "ttft-deadline-ms")?;
+        }
+    }
     Ok(())
+}
+
+/// Parse `--admission off | on | HIGH,LOW[,MAX_QUEUE]` onto the config.
+fn parse_admission_flag(a: &mut crate::scheduler::AdmissionConfig,
+                        s: &str) -> Result<()> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => {
+            a.enabled = false;
+            return Ok(());
+        }
+        "on" => {
+            a.enabled = true;
+            return Ok(());
+        }
+        _ => {}
+    }
+    let parts: Vec<&str> = s.split(',').collect();
+    if parts.len() != 2 && parts.len() != 3 {
+        bail!("bad --admission '{s}' \
+               (off | on | HIGH,LOW[,MAX_QUEUE])");
+    }
+    let high: f64 = parts[0]
+        .trim()
+        .parse()
+        .with_context(|| format!("bad high watermark in '{s}'"))?;
+    let low: f64 = parts[1]
+        .trim()
+        .parse()
+        .with_context(|| format!("bad low watermark in '{s}'"))?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&low) && low <= high && high <= 1.0,
+        "--admission wants 0 <= LOW <= HIGH <= 1, got '{s}'",
+    );
+    if let Some(q) = parts.get(2) {
+        a.max_queue = q
+            .trim()
+            .parse()
+            .with_context(|| format!("bad max queue in '{s}'"))?;
+    }
+    a.enabled = true;
+    a.high = high;
+    a.low = low;
+    Ok(())
+}
+
+/// Parse `interactive=2000,batch=60000`-style per-class millisecond
+/// pairs (the CLI twin of the `serving.deadline_ms` JSON list).
+fn parse_class_ms_flag(s: &str, flag: &str)
+    -> Result<Vec<(Priority, u64)>> {
+    s.split(',')
+        .map(|part| {
+            let part = part.trim();
+            let (name, ms) = part.split_once('=').with_context(|| {
+                format!("--{flag} entry '{part}' wants class=ms")
+            })?;
+            let class = Priority::from_str(name).with_context(|| {
+                format!("unknown class in --{flag} entry '{part}'")
+            })?;
+            let ms: u64 = ms.parse().with_context(|| {
+                format!("bad milliseconds in --{flag} entry '{part}'")
+            })?;
+            anyhow::ensure!(ms > 0, "--{flag} must be > 0 in '{part}'");
+            Ok((class, ms))
+        })
+        .collect()
 }
 
 /// Resolve the K/V storage dtype: explicit CLI value > `MOSKA_KV_DTYPE`

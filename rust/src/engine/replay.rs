@@ -3,12 +3,16 @@
 //! (queue wait, TTFT, per-token latency) under offered load.
 //!
 //! `moska replay --rate 8 --requests 40 --top-k 16`
+//!
+//! This is a thin alias over the one arrival-pacing implementation,
+//! [`drive_open_loop`][crate::workload::loadgen::drive_open_loop]
+//! (shared with `moska loadgen --open-loop`); it only reshapes the
+//! run into latency tables.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::model::sampling::Sampler;
 use crate::util::bench::{Stats, Table};
 use crate::util::cli::Args;
 use crate::workload::{Generator, WorkloadConfig};
@@ -33,59 +37,27 @@ pub fn replay(engine: &mut super::Engine, cfg: WorkloadConfig, n: usize,
     replay_items(engine, &items)
 }
 
-/// Replay a concrete trace (recorded or generated).
+/// Replay a concrete trace (recorded or generated). Admission
+/// rejections and deadline expiries, if the engine is configured for
+/// them, are measurements — a shed request simply never completes.
 pub fn replay_items(engine: &mut super::Engine,
                     items: &[crate::workload::WorkItem])
                     -> Result<ReplayOut> {
-    let n = items.len();
-    let t0 = Instant::now();
-    let mut next = 0usize;
-    let mut done = 0usize;
-    let mut queue_s = Vec::new();
-    let mut ttft_s = Vec::new();
-    let mut per_tok = Vec::new();
-
-    while done < n {
-        let now = t0.elapsed().as_secs_f64();
-        while next < items.len() && items[next].arrival <= now {
-            let it = &items[next];
-            engine.submit(it.domain.as_deref(), it.prompt.clone(),
-                          it.max_new, Sampler::Greedy)?;
-            next += 1;
-        }
-        if engine.has_work() {
-            engine.step()?;
-        } else if next < items.len() {
-            // idle until the next arrival
-            let wait = items[next].arrival - t0.elapsed().as_secs_f64();
-            if wait > 0.0 {
-                std::thread::sleep(Duration::from_secs_f64(
-                    wait.min(0.010),
-                ));
-            }
-        }
-        for r in engine.take_results() {
-            queue_s.push(Duration::from_secs_f64(r.queue_secs));
-            ttft_s.push(Duration::from_secs_f64(
-                r.queue_secs + r.prefill_secs,
-            ));
-            if !r.tokens.is_empty() {
-                per_tok.push(Duration::from_secs_f64(
-                    r.decode_secs / r.tokens.len() as f64,
-                ));
-            }
-            done += 1;
-        }
-    }
-    let wall = t0.elapsed().as_secs_f64();
+    let run = crate::workload::loadgen::drive_open_loop(
+        engine, items, 1.0)?;
+    let durs = |v: &[f64]| {
+        Stats::from_samples(
+            v.iter().map(|&s| Duration::from_secs_f64(s)).collect(),
+        )
+    };
     let total_tokens: usize = items.iter().map(|i| i.max_new).sum();
     Ok(ReplayOut {
-        completed: done,
-        wall,
-        throughput: total_tokens as f64 / wall,
-        queue: Stats::from_samples(queue_s),
-        ttft: Stats::from_samples(ttft_s),
-        per_token: Stats::from_samples(per_tok),
+        completed: run.completed,
+        wall: run.elapsed_secs,
+        throughput: total_tokens as f64 / run.elapsed_secs.max(1e-9),
+        queue: durs(&run.queue_secs),
+        ttft: durs(&run.ttft_secs),
+        per_token: durs(&run.per_token_secs),
     })
 }
 

@@ -112,6 +112,10 @@ impl Engine {
             max_new,
             sampler,
             session: Some(sid),
+            // session turns carry no deadlines: an expiring turn would
+            // orphan the conversation's parked KV
+            deadline: None,
+            ttft_deadline: None,
         };
         Ok(self.submit_request(req))
     }

@@ -85,6 +85,14 @@ fn cmd_serve(argv: &[String]) -> moska::Result<()> {
              "prefill tokens per chunk (0 = whole prompts; default \
               from config, 32)")
         .opt("preempt", "", "preemption policy: hold | recompute")
+        .opt("admission", "",
+             "SLO-aware admission: off | on | HIGH,LOW[,MAX_QUEUE] \
+              watermarks (default from config)")
+        .opt("deadline-ms", "",
+             "per-class end-to-end deadline defaults, e.g. \
+              'interactive=2000,batch=60000'")
+        .opt("ttft-deadline-ms", "",
+             "per-class time-to-first-token deadline defaults")
         .opt("trace", "",
              "write a Chrome-trace span timeline here (flushed every 5s)")
         .flag("synthetic",
@@ -109,6 +117,18 @@ fn cmd_loadgen(argv: &[String]) -> moska::Result<()> {
         .opt("out", "bench_out/BENCH_serving.json", "report path")
         .opt("emit-trace", "",
              "also write the WorkItem trace JSON here")
+        .opt("rate", "0",
+             "open-loop: re-time arrivals as one Poisson process at \
+              this rate (req/s; 0 = keep scenario arrivals)")
+        .opt("rate-scale", "1.0",
+             "open-loop: compress arrival timestamps by this factor \
+              (2.0 = offer twice as fast)")
+        .flag("open-loop",
+              "honor arrival timestamps; sheds/timeouts are measured, \
+               not retried")
+        .flag("sweep",
+              "in-process overload sweep (0.5x/1x/2x capacity + \
+               no-admission baseline) → open_loop_sweep")
         .flag("compare-chunking",
               "add the chunked-vs-unchunked short-TTFT probe to the report")
         .parse_from(argv)?;

@@ -34,26 +34,89 @@ pub struct Demand {
 }
 
 /// Why a request was (not) admitted.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Admit {
     Ok,
     NoPages { need: usize, available: usize },
     QueueFull,
+    /// Watermark shedding: pressure reached the class's shed level
+    /// before any hard cap did.
+    Shed { level: u8, pressure: f64 },
 }
 
-/// Admission controller: KV-page budget + wait-queue bound.
-pub struct AdmissionController {
+/// Watermark configuration for SLO-aware admission. Pressure is the
+/// max of three saturation fractions (wait-queue depth, queued prefill
+/// tokens, allocated KV pages); crossing `high` starts shedding
+/// `batch`, crossing halfway between `high` and 1.0 also sheds
+/// `standard`, and only dropping back under `low` stops shedding
+/// (hysteresis — no flapping at the watermark).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    /// Watermark shedding on/off; hard caps always apply.
+    pub enabled: bool,
+    /// Wait-queue bound (hard cap for every class).
     pub max_queue: usize,
+    /// Queued-prefill-token scale for the pressure signal.
+    pub max_queued_prefill_tokens: usize,
+    /// Pressure at or above which `batch` work is shed.
+    pub high: f64,
+    /// Pressure below which shedding stops.
+    pub low: f64,
+    /// `Retry-After` hint handed to shed clients, in seconds.
+    pub retry_after_secs: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            enabled: true,
+            max_queue: 1024,
+            max_queued_prefill_tokens: 32768,
+            high: 0.85,
+            low: 0.5,
+            retry_after_secs: 0.5,
+        }
+    }
+}
+
+/// Instantaneous load the admission controller prices.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PressureSnapshot {
+    pub queued: usize,
+    pub queued_prefill_tokens: usize,
+    pub pages_free: usize,
+    pub pages_total: usize,
+}
+
+/// Admission controller: hard caps (KV-page budget, wait-queue bound)
+/// plus a watermark state machine that sheds the cheap classes first.
+///
+/// Levels: 0 = admit everything, 1 = shed `batch`, 2 = shed `batch`
+/// and `standard`. `interactive` is only ever refused by the hard caps
+/// (queue full / no pages). Escalation is immediate; de-escalation
+/// waits for pressure to fall below the low watermark.
+pub struct AdmissionController {
+    pub cfg: AdmissionConfig,
+    level: u8,
+    shed: [u64; 3],
 }
 
 impl AdmissionController {
     pub fn new(max_queue: usize) -> AdmissionController {
-        AdmissionController { max_queue }
+        AdmissionController::with_config(AdmissionConfig {
+            max_queue,
+            ..Default::default()
+        })
     }
 
+    pub fn with_config(cfg: AdmissionConfig) -> AdmissionController {
+        AdmissionController { cfg, level: 0, shed: [0; 3] }
+    }
+
+    /// Hard-cap check only (queue bound + page budget).
     pub fn check(&self, demand: &Demand, pages_available: usize,
                  queued: usize) -> Admit {
-        if queued >= self.max_queue {
+        if queued >= self.cfg.max_queue {
             return Admit::QueueFull;
         }
         if demand.pages > pages_available {
@@ -63,6 +126,85 @@ impl AdmissionController {
             };
         }
         Admit::Ok
+    }
+
+    /// Saturation fraction in `[0, ∞)`: the max of queue depth, queued
+    /// prefill tokens, and allocated KV pages, each over its scale.
+    pub fn pressure(&self, s: &PressureSnapshot) -> f64 {
+        let q = s.queued as f64 / self.cfg.max_queue.max(1) as f64;
+        let p = s.queued_prefill_tokens as f64
+            / self.cfg.max_queued_prefill_tokens.max(1) as f64;
+        let kv = if s.pages_total == 0 {
+            0.0
+        } else {
+            (s.pages_total - s.pages_free.min(s.pages_total)) as f64
+                / s.pages_total as f64
+        };
+        q.max(p).max(kv)
+    }
+
+    fn standard_high(&self) -> f64 {
+        self.cfg.high + (1.0 - self.cfg.high) / 2.0
+    }
+
+    /// Advance the level state machine for the given pressure and
+    /// return the new level. Escalates immediately; de-escalates to 0
+    /// only once pressure drops under the low watermark.
+    pub fn update(&mut self, pressure: f64) -> u8 {
+        let target = if pressure >= self.standard_high() {
+            2
+        } else if pressure >= self.cfg.high {
+            1
+        } else {
+            0
+        };
+        if target > self.level {
+            self.level = target;
+        } else if pressure < self.cfg.low {
+            self.level = 0;
+        }
+        self.level
+    }
+
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Full admission decision: hard caps first, then watermark
+    /// shedding by class. Updates the level state machine.
+    pub fn admit(&mut self, demand: &Demand, priority: Priority,
+                 snap: &PressureSnapshot) -> Admit {
+        let hard = self.check(demand, snap.pages_free, snap.queued);
+        if hard != Admit::Ok {
+            self.record_shed(priority);
+            return hard;
+        }
+        if !self.cfg.enabled {
+            return Admit::Ok;
+        }
+        let pressure = self.pressure(snap);
+        let level = self.update(pressure);
+        let shed = match priority {
+            Priority::Batch => level >= 1,
+            Priority::Standard => level >= 2,
+            // interactive holds until a hard cap refuses it
+            Priority::Interactive => false,
+        };
+        if shed {
+            self.record_shed(priority);
+            Admit::Shed { level, pressure }
+        } else {
+            Admit::Ok
+        }
+    }
+
+    fn record_shed(&mut self, p: Priority) {
+        self.shed[p as usize] += 1;
+    }
+
+    /// Rejections (watermark sheds + hard-cap refusals) per class.
+    pub fn shed_count(&self, p: Priority) -> u64 {
+        self.shed[p as usize]
     }
 }
 
@@ -253,9 +395,10 @@ impl StepScheduler {
         (e.meta.priority, e.seq)
     }
 
-    /// Fair-share sort key for prefill bandwidth: priority class first,
-    /// then least-served tenant (weighted), then arrival order.
-    fn prefill_key(&self, id: usize) -> (Priority, f64, u64) {
+    /// Fair-share sort key for token bandwidth (prefill chunks and
+    /// budgeted decode rows): priority class first, then least-served
+    /// tenant (weighted), then arrival order.
+    fn fair_key(&self, id: usize) -> (Priority, f64, u64) {
         let e = &self.entries[&id];
         let served =
             self.served.get(&e.meta.tenant).copied().unwrap_or(0.0);
@@ -350,15 +493,52 @@ impl StepScheduler {
             tick.admitted.push(cand);
         }
 
-        // 3. decode rows: every active request past prefill decodes one
-        // token, in batch order (decode is never starved by prefill)
-        for &id in &self.active {
-            if self.entries[&id].phase == Phase::Decode {
-                tick.decode.push(id);
+        // 3. decode rows: active requests past prefill decode one
+        // token each, in batch order. When there are more decode rows
+        // than the token budget covers, rows are picked one at a time
+        // by the weighted-deficit key — a tenant streaming with a huge
+        // max_tokens cannot starve the others; unpicked rows just skip
+        // the tick. (With the default config max_batch < step_tokens,
+        // so every row fits and this is the plain unbudgeted path.)
+        let decode_cand: Vec<usize> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|id| self.entries[id].phase == Phase::Decode)
+            .collect();
+        if self.step_tokens == 0 || decode_cand.len() <= self.step_tokens
+        {
+            tick.decode = decode_cand;
+            for i in 0..tick.decode.len() {
+                self.charge(tick.decode[i], 1);
             }
-        }
-        for i in 0..tick.decode.len() {
-            self.charge(tick.decode[i], 1);
+        } else {
+            let mut rest = decode_cand;
+            let mut chosen = HashSet::with_capacity(self.step_tokens);
+            for _ in 0..self.step_tokens {
+                let (bi, _) = rest
+                    .iter()
+                    .enumerate()
+                    .min_by(|&(_, &a), &(_, &b)| {
+                        self.fair_key(a)
+                            .partial_cmp(&self.fair_key(b))
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                    .unwrap();
+                let id = rest.swap_remove(bi);
+                // charge as we pick so the deficit steers the split
+                // within this very tick
+                self.charge(id, 1);
+                chosen.insert(id);
+            }
+            // emit in batch order — row layout stays stable for the
+            // engine's per-row decode math
+            tick.decode = self
+                .active
+                .iter()
+                .copied()
+                .filter(|id| chosen.contains(id))
+                .collect();
         }
 
         // 4. prefill chunks under the remaining budget, fairest tenant
@@ -376,8 +556,8 @@ impl StepScheduler {
                     matches!(self.entries[id].phase, Phase::Prefill { .. })
                 })
                 .min_by(|&a, &b| {
-                    self.prefill_key(a)
-                        .partial_cmp(&self.prefill_key(b))
+                    self.fair_key(a)
+                        .partial_cmp(&self.fair_key(b))
                         .unwrap_or(std::cmp::Ordering::Equal)
                 });
             let Some(id) = cand else { break };
@@ -487,6 +667,23 @@ impl StepScheduler {
         self.queue.len()
     }
 
+    /// Prompt tokens still waiting to be prefilled across the wait
+    /// queue — the "work debt" input to the admission pressure signal.
+    pub fn queued_prefill_tokens(&self) -> usize {
+        self.queue
+            .iter()
+            .map(|id| {
+                let e = &self.entries[id];
+                match e.phase {
+                    Phase::Prefill { done } => {
+                        e.meta.prompt_tokens - done
+                    }
+                    Phase::Decode => 0,
+                }
+            })
+            .sum()
+    }
+
     pub fn is_idle(&self) -> bool {
         self.active.is_empty() && self.queue.is_empty()
     }
@@ -575,6 +772,7 @@ impl Lifecycle {
 #[derive(Debug, Default)]
 pub struct LifecycleTracker {
     completed: u64,
+    timeouts: u64,
     sum_queue: f64,
     sum_ttft: f64,
     max_ttft: f64,
@@ -601,8 +799,18 @@ impl LifecycleTracker {
         }
     }
 
+    /// A request retired by deadline expiry. It never completes, so it
+    /// contributes nothing to the latency means — only this count.
+    pub fn record_timeout(&mut self) {
+        self.timeouts += 1;
+    }
+
     pub fn completed(&self) -> u64 {
         self.completed
+    }
+
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts
     }
 
     pub fn mean_queue_secs(&self) -> f64 {
@@ -945,6 +1153,172 @@ mod tests {
         assert!((t.max_ttft_secs() - 0.5).abs() < 1e-12);
         assert!((t.mean_tpot_secs() - 0.1).abs() < 1e-12,
                 "one-token requests must not dilute TPOT");
+    }
+
+    /// Watermark state machine: batch sheds at the high watermark,
+    /// standard at the halfway-to-saturation mark, interactive never
+    /// (short of hard caps); de-escalation waits for the low watermark.
+    #[test]
+    fn admission_watermarks_shed_order_and_hysteresis() {
+        let mut ac = AdmissionController::with_config(AdmissionConfig {
+            max_queue: 100,
+            max_queued_prefill_tokens: 1000,
+            high: 0.8,
+            low: 0.4,
+            ..Default::default()
+        });
+        let d = Demand { pages: 1 };
+        let snap = |queued: usize| PressureSnapshot {
+            queued,
+            queued_prefill_tokens: 0,
+            pages_free: 50,
+            pages_total: 100,
+        };
+        // below high: everything admits
+        assert_eq!(ac.admit(&d, Priority::Batch, &snap(50)), Admit::Ok);
+        assert_eq!(ac.level(), 0);
+        // at high (0.8 → queued 80): batch sheds, standard holds
+        assert!(matches!(ac.admit(&d, Priority::Batch, &snap(80)),
+                         Admit::Shed { level: 1, .. }));
+        assert_eq!(ac.admit(&d, Priority::Standard, &snap(80)),
+                   Admit::Ok);
+        // at standard_high (0.9 → queued 90): standard sheds too,
+        // interactive still admits
+        assert!(matches!(ac.admit(&d, Priority::Standard, &snap(90)),
+                         Admit::Shed { level: 2, .. }));
+        assert_eq!(ac.admit(&d, Priority::Interactive, &snap(90)),
+                   Admit::Ok);
+        // hysteresis: pressure between low and high holds the level
+        assert!(matches!(ac.admit(&d, Priority::Batch, &snap(60)),
+                         Admit::Shed { level: 2, .. }));
+        // below low: level resets, batch admits again
+        assert_eq!(ac.admit(&d, Priority::Batch, &snap(30)), Admit::Ok);
+        assert_eq!(ac.level(), 0);
+        // hard caps outrank everything, interactive included
+        assert_eq!(ac.admit(&d, Priority::Interactive, &snap(100)),
+                   Admit::QueueFull);
+        assert_eq!(
+            ac.admit(&Demand { pages: 99 }, Priority::Interactive,
+                     &snap(0)),
+            Admit::NoPages { need: 99, available: 50 },
+        );
+        // every rejection above was counted against its class
+        assert_eq!(ac.shed_count(Priority::Batch), 2);
+        assert_eq!(ac.shed_count(Priority::Standard), 1);
+        assert_eq!(ac.shed_count(Priority::Interactive), 2);
+    }
+
+    /// The pressure signal is the max of its three components, and
+    /// queued prefill tokens feed it from scheduler state.
+    #[test]
+    fn pressure_components_and_queued_prefill_tokens() {
+        let ac = AdmissionController::with_config(AdmissionConfig {
+            max_queue: 10,
+            max_queued_prefill_tokens: 100,
+            ..Default::default()
+        });
+        let p = ac.pressure(&PressureSnapshot {
+            queued: 2,                   // 0.2
+            queued_prefill_tokens: 90,   // 0.9 ← max
+            pages_free: 60,
+            pages_total: 100,            // 0.4 allocated
+        });
+        assert!((p - 0.9).abs() < 1e-12, "pressure {p}");
+
+        let mut s = StepScheduler::new(1).with_budget(4, 4);
+        s.enqueue(0, meta(8));
+        s.enqueue(1, meta(6));
+        s.enqueue(2, meta(0)); // decode-phase arrival owes no prefill
+        assert_eq!(s.queued_prefill_tokens(), 14);
+        let _ = s.tick(); // admits 0, prefills one chunk of it
+        assert_eq!(s.queued_prefill_tokens(), 6, "only queued ids count");
+    }
+
+    /// Decode-side token budget: with more decode rows than budget,
+    /// each tick serves exactly `step_tokens` rows, picked by weighted
+    /// deficit — so over a window tenants split decode bandwidth by
+    /// weight, and identical runs replay identically.
+    #[test]
+    fn decode_budget_weighted_fairness_and_determinism() {
+        let run = || {
+            let mut s = StepScheduler::new(8).with_budget(4, 4);
+            for i in 0..4 {
+                s.enqueue(i, meta_t("a", 3.0, 0));
+                s.enqueue(4 + i, meta_t("b", 1.0, 0));
+            }
+            let mut ticks = Vec::new();
+            let mut a = 0usize;
+            let mut b = 0usize;
+            for _ in 0..16 {
+                let t = s.tick();
+                assert_eq!(t.decode.len(), 4,
+                           "budget caps decode rows per tick");
+                for &id in &t.decode {
+                    if id < 4 { a += 1 } else { b += 1 }
+                }
+                ticks.push(t);
+            }
+            (a, b, ticks)
+        };
+        let (a, b, ticks) = run();
+        // 16 ticks × 4 rows = 64 tokens; 3:1 weights → 48 vs 16
+        assert_eq!(a + b, 64);
+        assert!((a as i64 - 48).unsigned_abs() <= 4, "a={a} b={b}");
+        // pure function of state: same arrivals, same tick sequence
+        let (_, _, replay) = run();
+        assert_eq!(ticks, replay, "decode budget must replay exactly");
+        // rows come out in batch (admission) order within each tick
+        let order = s_admission_order();
+        for t in &ticks {
+            let pos: Vec<usize> = t
+                .decode
+                .iter()
+                .map(|id| order.iter().position(|o| o == id).unwrap())
+                .collect();
+            assert!(pos.windows(2).all(|w| w[0] < w[1]),
+                    "decode not in batch order: {:?}", t.decode);
+        }
+    }
+
+    /// Admission order of the `decode_budget_weighted_fairness` batch:
+    /// FIFO within the single (standard) class, i.e. enqueue order.
+    fn s_admission_order() -> Vec<usize> {
+        vec![0, 4, 1, 5, 2, 6, 3, 7]
+    }
+
+    /// step_tokens covers decode rows with priority first: interactive
+    /// rows are never the ones skipped.
+    #[test]
+    fn decode_budget_prefers_interactive() {
+        let mut s = StepScheduler::new(6).with_budget(2, 4);
+        for i in 0..3 {
+            s.enqueue(i, meta_p(Priority::Interactive, 0));
+            s.enqueue(3 + i, meta_p(Priority::Batch, 0));
+        }
+        let mut batch_rows = 0usize;
+        let mut interactive_rows = 0usize;
+        for _ in 0..6 {
+            let t = s.tick();
+            assert_eq!(t.decode.len(), 2);
+            for &id in &t.decode {
+                if id < 3 { interactive_rows += 1 } else { batch_rows += 1 }
+            }
+        }
+        assert_eq!(interactive_rows, 12,
+                   "all decode bandwidth goes to interactive first");
+        assert_eq!(batch_rows, 0);
+    }
+
+    /// Timeout accounting: timeouts count without touching the
+    /// completion means.
+    #[test]
+    fn lifecycle_tracker_timeouts() {
+        let mut t = LifecycleTracker::new();
+        t.record_timeout();
+        t.record_timeout();
+        assert_eq!(t.timeouts(), 2);
+        assert_eq!(t.completed(), 0);
+        assert_eq!(t.mean_ttft_secs(), 0.0);
     }
 
     #[test]

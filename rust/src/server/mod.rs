@@ -10,6 +10,9 @@
 //!                  data: {"token": 104}        (one frame per token)
 //!                  event: done
 //!                  data: {"id": 3, ...}        (the non-streaming body)
+//!              a request that dies after the stream started ends with
+//!                  event: error
+//!                  data: {"error": "...", "kind": "timeout"}
 //! GET  /stats      engine + runtime metrics snapshot (JSON)
 //! GET  /metrics    the same counters/gauges/histograms rendered in
 //!                  Prometheus text exposition format (`moska_` prefix)
@@ -35,8 +38,9 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::engine::{build_engine_from_args, Engine};
+use crate::engine::{build_engine_from_args, AdmitError, Engine, SubmitOpts};
 use crate::model::sampling::Sampler;
+use crate::scheduler::Priority;
 use crate::model::tokenizer;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -222,22 +226,82 @@ pub fn parse_request_limited(stream: &mut TcpStream, max_body: usize,
 /// Write an HTTP response.
 pub fn respond(stream: &mut TcpStream, status: u16, content_type: &str,
                body: &str) -> Result<()> {
+    respond_with(stream, status, content_type, body, &[])
+}
+
+/// [`respond`] with extra response headers (e.g. `Retry-After` on 429).
+pub fn respond_with(stream: &mut TcpStream, status: u16,
+                    content_type: &str, body: &str,
+                    extra_headers: &[(&str, String)]) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
         408 => "Request Timeout",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "",
     };
+    let mut extra = String::new();
+    for (k, v) in extra_headers {
+        extra.push_str(k);
+        extra.push_str(": ");
+        extra.push_str(v);
+        extra.push_str("\r\n");
+    }
     write!(
         stream,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+         Content-Length: {}\r\n{extra}Connection: close\r\n\r\n{body}",
         body.len()
     )?;
     Ok(())
+}
+
+/// A terminal request failure travelling the reply channel. Before the
+/// stream starts it becomes a plain HTTP error (`status`, plus
+/// `Retry-After` when set); after the stream is committed it becomes a
+/// terminal `event: error` SSE frame carrying `kind`.
+struct Failure {
+    status: u16,
+    /// Machine-readable class for the SSE error frame: `"shed"`,
+    /// `"timeout"`, `"bad_request"`, `"engine"`, `"engine_gone"`.
+    kind: &'static str,
+    message: String,
+    /// `Retry-After` hint in seconds (admission rejections).
+    retry_after: Option<f64>,
+}
+
+impl Failure {
+    fn headers(&self) -> Vec<(&'static str, String)> {
+        match self.retry_after {
+            // integer seconds per RFC 9110, rounded up so "retry after
+            // 0.5s" never degenerates to an immediate retry storm
+            Some(s) => vec![(
+                "Retry-After",
+                format!("{}", s.ceil().max(1.0) as u64),
+            )],
+            None => Vec::new(),
+        }
+    }
+
+    /// The JSON error body: `{"error": ..., "kind": ...}` — the same
+    /// shape whether it travels as an HTTP body or an SSE data line.
+    fn json_body(&self) -> String {
+        Json::obj(vec![
+            ("error", Json::str(self.message.as_str())),
+            ("kind", Json::str(self.kind)),
+        ])
+        .to_string()
+    }
+
+    /// The terminal SSE frame: `event: error` + one JSON data line.
+    fn sse_frame(&self) -> String {
+        format!("event: error\ndata: {}\n\n", self.json_body())
+    }
 }
 
 /// One engine-side event on a request's reply channel.
@@ -246,8 +310,8 @@ enum Event {
     Token(i32),
     /// The request completed; carries the response body.
     Done(Json),
-    /// The request failed (admission or engine error).
-    Err(String),
+    /// The request failed (admission, deadline, or engine error).
+    Fail(Failure),
 }
 
 /// A generation job travelling from HTTP thread to engine loop.
@@ -258,6 +322,8 @@ struct Job {
     sampler: Sampler,
     tenant: String,
     priority: crate::scheduler::Priority,
+    deadline: Option<Duration>,
+    ttft_deadline: Option<Duration>,
     stream: bool,
     events: Sender<Event>,
 }
@@ -276,17 +342,38 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
         let drain = |engine: &mut Engine,
                      waiting: &mut HashMap<usize, Waiter>,
                      job: Job| {
-            match engine.submit_opts(job.domain.as_deref(), job.prompt,
-                                     job.max_new, job.sampler,
-                                     &job.tenant, job.priority) {
+            let opts = SubmitOpts {
+                tenant: job.tenant,
+                priority: job.priority,
+                deadline: job.deadline,
+                ttft_deadline: job.ttft_deadline,
+            };
+            match engine.submit_with(job.domain.as_deref(), job.prompt,
+                                     job.max_new, job.sampler, opts) {
                 Ok(id) => {
                     waiting.insert(id, Waiter {
                         tx: job.events,
                         stream: job.stream,
                     });
                 }
+                // admission rejections are typed: 429 + Retry-After so
+                // well-behaved clients back off instead of hammering
                 Err(e) => {
-                    let _ = job.events.send(Event::Err(format!("{e:#}")));
+                    let fail = match e.downcast_ref::<AdmitError>() {
+                        Some(a) => Failure {
+                            status: 429,
+                            kind: "shed",
+                            message: format!("{a}"),
+                            retry_after: Some(a.retry_after_secs()),
+                        },
+                        None => Failure {
+                            status: 400,
+                            kind: "bad_request",
+                            message: format!("{e:#}"),
+                            retry_after: None,
+                        },
+                    };
+                    let _ = job.events.send(Event::Fail(fail));
                 }
             }
         };
@@ -304,9 +391,27 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
         if let Err(e) = engine.step() {
             crate::errorlog!("server", "engine step failed: {e:#}");
             for (_, w) in waiting.drain() {
-                let _ = w.tx.send(Event::Err("engine failed".to_string()));
+                let _ = w.tx.send(Event::Fail(Failure {
+                    status: 500,
+                    kind: "engine",
+                    message: "engine failed".to_string(),
+                    retry_after: None,
+                }));
             }
             continue;
+        }
+        // deadline expiries: the engine already retired the request
+        // (pages released, lifecycle timeout); tell the waiting client
+        // instead of leaving it to stall forever
+        for (id, why) in engine.take_expired() {
+            if let Some(w) = waiting.remove(&id) {
+                let _ = w.tx.send(Event::Fail(Failure {
+                    status: 504,
+                    kind: "timeout",
+                    message: why,
+                    retry_after: None,
+                }));
+            }
         }
         // streaming feed: forward this tick's sampled tokens. A failed
         // send means the handler thread is gone (client disconnected
@@ -339,6 +444,18 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
         }
         // refresh the stats snapshot
         let lc = &engine.lifecycle;
+        let pressure_snap = engine.pressure_snapshot();
+        let adm = &engine.admission;
+        let admission = Json::obj(vec![
+            ("pressure", Json::num(adm.pressure(&pressure_snap))),
+            ("level", Json::num(adm.level() as f64)),
+            ("shed_interactive",
+             Json::num(adm.shed_count(Priority::Interactive) as f64)),
+            ("shed_standard",
+             Json::num(adm.shed_count(Priority::Standard) as f64)),
+            ("shed_batch",
+             Json::num(adm.shed_count(Priority::Batch) as f64)),
+        ]);
         let snap = Json::obj(vec![
             ("engine", engine.metrics.snapshot()),
             ("gemm_batching_factor", Json::num(engine.batching_factor())),
@@ -347,10 +464,12 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>,
             ("kv_pages_capacity", Json::num(engine.pool.capacity() as f64)),
             ("live", Json::num(engine.sched.live().len() as f64)),
             ("queued", Json::num(engine.sched.queued() as f64)),
+            ("admission", admission),
             // completed-request lifecycle: admit → queue → first token
             // (TTFT) → per-token decode speed (TPOT)
             ("lifecycle", Json::obj(vec![
                 ("completed", Json::num(lc.completed() as f64)),
+                ("timeouts", Json::num(lc.timeouts() as f64)),
                 ("mean_queue_secs", Json::num(lc.mean_queue_secs())),
                 ("mean_ttft_secs", Json::num(lc.mean_ttft_secs())),
                 ("max_ttft_secs", Json::num(lc.max_ttft_secs())),
@@ -428,11 +547,13 @@ fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
                     }
                     None => crate::scheduler::Priority::Standard,
                 };
+                let deadline = body_deadline(&j, "deadline_ms")?;
+                let ttft_deadline = body_deadline(&j, "ttft_deadline_ms")?;
                 Ok((prompt_text, domain, max_new, sampler, stream_mode,
-                    tenant, priority))
+                    tenant, priority, deadline, ttft_deadline))
             });
             let (prompt_text, domain, max_new, sampler, stream_mode,
-                 tenant, priority) = match parsed {
+                 tenant, priority, deadline, ttft_deadline) = match parsed {
                 Ok(p) => p,
                 Err(e) => {
                     let _ = respond(&mut stream, 400, "text/plain",
@@ -448,6 +569,8 @@ fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
                 sampler,
                 tenant,
                 priority,
+                deadline,
+                ttft_deadline,
                 stream: stream_mode,
                 events,
             };
@@ -460,7 +583,7 @@ fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
                 stream_events(&mut stream, &rx);
             } else {
                 // non-streaming: the engine sends no Token events for
-                // this request — wait for Done/Err (loop for safety)
+                // this request — wait for Done/Fail (loop for safety)
                 loop {
                     match rx.recv() {
                         Ok(Event::Token(_)) => continue,
@@ -470,9 +593,11 @@ fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
                                             &body.to_string());
                             break;
                         }
-                        Ok(Event::Err(e)) => {
-                            let _ = respond(&mut stream, 400,
-                                            "text/plain", &e);
+                        Ok(Event::Fail(f)) => {
+                            let _ = respond_with(&mut stream, f.status,
+                                                 "application/json",
+                                                 &f.json_body(),
+                                                 &f.headers());
                             break;
                         }
                         Err(_) => {
@@ -490,15 +615,32 @@ fn handle_conn(mut stream: TcpStream, jobs: Sender<Job>,
     }
 }
 
-/// Forward a streaming request's events as Server-Sent Events. Errors
-/// before the first token become a plain 400/500 (headers not sent
-/// yet); after that the stream is committed and simply ends. Any write
-/// failure returns immediately — dropping the receiver is what tells
-/// the engine loop the client is gone.
+/// Optional per-request deadline body field (`deadline_ms` /
+/// `ttft_deadline_ms`): absent or `null` means "class default".
+fn body_deadline(j: &Json, key: &str) -> Result<Option<Duration>> {
+    match j.opt(key) {
+        Some(Json::Null) | None => Ok(None),
+        Some(v) => {
+            let ms = v.as_usize()?;
+            anyhow::ensure!(ms > 0, "{key} must be > 0");
+            Ok(Some(Duration::from_millis(ms as u64)))
+        }
+    }
+}
+
+/// Forward a streaming request's events as Server-Sent Events. A
+/// failure before the first event becomes a plain HTTP error (headers
+/// not sent yet, `Retry-After` preserved); once the stream is
+/// committed, EVERY fatal end — deadline expiry, engine failure, even
+/// the engine loop vanishing — emits a terminal `event: error` frame
+/// so clients never see a silent stall. Any socket-write failure
+/// returns immediately — dropping the receiver is what tells the
+/// engine loop the client is gone.
 fn stream_events(stream: &mut TcpStream, rx: &Receiver<Event>) {
     let mut first = match rx.recv() {
-        Ok(Event::Err(e)) => {
-            let _ = respond(stream, 400, "text/plain", &e);
+        Ok(Event::Fail(f)) => {
+            let _ = respond_with(stream, f.status, "application/json",
+                                 &f.json_body(), &f.headers());
             return;
         }
         Ok(ev) => Some(ev),
@@ -522,7 +664,18 @@ fn stream_events(stream: &mut TcpStream, rx: &Receiver<Event>) {
             Some(ev) => ev,
             None => match rx.recv() {
                 Ok(ev) => ev,
-                Err(_) => return, // engine gone mid-stream
+                Err(_) => {
+                    // engine loop gone mid-stream: still a terminal
+                    // error frame, not a silent EOF
+                    let f = Failure {
+                        status: 500,
+                        kind: "engine_gone",
+                        message: "engine dropped request".to_string(),
+                        retry_after: None,
+                    };
+                    let _ = stream.write_all(f.sse_frame().as_bytes());
+                    return;
+                }
             },
         };
         match ev {
@@ -537,9 +690,8 @@ fn stream_events(stream: &mut TcpStream, rx: &Receiver<Event>) {
                 let _ = write!(stream, "event: done\ndata: {body}\n\n");
                 return;
             }
-            Event::Err(e) => {
-                let _ = write!(stream,
-                               "event: error\ndata: {{\"error\":{e:?}}}\n\n");
+            Event::Fail(f) => {
+                let _ = stream.write_all(f.sse_frame().as_bytes());
                 return;
             }
         }
@@ -861,6 +1013,60 @@ mod tests {
             assert!(got.starts_with(&format!("HTTP/1.1 {status} {reason}")),
                     "{got}");
         }
+    }
+
+    #[test]
+    fn failure_sse_frame_is_parseable_json_with_kind() {
+        // pins the terminal-frame shape every post-stream-start fatal
+        // path emits: `event: error` + one JSON data line with both
+        // "error" and "kind"
+        let f = Failure {
+            status: 504,
+            kind: "timeout",
+            message: "ttft deadline exceeded after 300 ms \"quoted\""
+                .to_string(),
+            retry_after: None,
+        };
+        let frame = f.sse_frame();
+        assert!(frame.starts_with("event: error\ndata: "), "{frame}");
+        assert!(frame.ends_with("\n\n"), "{frame}");
+        let payload = frame
+            .strip_prefix("event: error\ndata: ")
+            .unwrap()
+            .trim_end();
+        let j = Json::parse(payload).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "timeout");
+        assert!(j.get("error").unwrap().as_str().unwrap()
+            .contains("\"quoted\""));
+    }
+
+    #[test]
+    fn respond_with_sets_retry_after_and_429_reason() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            buf
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let f = Failure {
+            status: 429,
+            kind: "shed",
+            message: "admission rejected".to_string(),
+            retry_after: Some(0.5),
+        };
+        respond_with(&mut stream, f.status, "text/plain", &f.message,
+                     &f.headers())
+            .unwrap();
+        drop(stream);
+        let got = client.join().unwrap();
+        assert!(got.starts_with("HTTP/1.1 429 Too Many Requests\r\n"),
+                "{got}");
+        // sub-second hints round UP to a whole second, never to 0
+        assert!(got.contains("Retry-After: 1\r\n"), "{got}");
+        assert!(got.ends_with("admission rejected"));
     }
 
     #[test]

@@ -10,22 +10,33 @@
 //! functions of (scenario, n, seed) — identical across runs and
 //! platforms — so traces can be recorded, diffed, and replayed.
 //!
-//! Two drive modes share the same items:
-//! * **in-process** (`--addr ''`): closed-loop against
+//! Drive modes share the same items:
+//! * **in-process closed-loop** (`--addr ''`): every item submitted up
+//!   front against a fresh
 //!   [`synthetic_engine`][crate::disagg::synthetic_engine]; TTFT/TPOT
 //!   come from engine lifecycle timings, token/mix counts are
-//!   seed-deterministic.
-//! * **HTTP** (`--addr host:port`): closed-loop worker threads POST
+//!   seed-deterministic. The `chat-prefix` scenario routes through the
+//!   sessions API (real per-conversation KV reuse).
+//! * **HTTP closed-loop** (`--addr host:port`): worker threads POST
 //!   `/generate` with `"stream": true` and time the SSE frames off the
 //!   wire — TTFT is the first `data:` frame, TPOT the inter-frame
 //!   mean.
+//! * **open-loop** (`--open-loop`, both in-process and HTTP): arrival
+//!   timestamps are *honored*, not waited on — a refused or expired
+//!   request is a shed/timeout measurement, never a retry. This is the
+//!   one arrival-pacing implementation in the tree
+//!   ([`drive_open_loop`]); `moska replay` is a thin alias over it.
+//!   `--sweep` adds the overload sweep (offered rate × capacity, with
+//!   admission on, plus a no-admission collapse baseline) to the
+//!   report as `open_loop_sweep`.
 //!
-//! Reports land in `bench_out/BENCH_serving.json`; `scripts/ci.sh`
+//! Reports land in `bench_out/BENCH_serving.json` (keys merged over an
+//! existing report so independent smokes compose); `scripts/ci.sh`
 //! gates on zero errors, nonzero streamed tokens, and finite latency
 //! quantiles. `--compare-chunking` adds the chunked-vs-unchunked
 //! short-request TTFT probe measured in deterministic work units.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -36,13 +47,19 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::ServingConfig;
 use crate::disagg::{SYNTH_DOMAIN, SYNTH_DOMAIN_B};
+use crate::engine::{AdmitError, Engine, SubmitOpts};
 use crate::model::sampling::Sampler;
-use crate::scheduler::Priority;
+use crate::scheduler::{AdmissionConfig, Priority};
 use crate::util::bench::Stats;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::WorkItem;
+
+/// Shared conversation-prefix length (tokens) in the `chat-prefix`
+/// scenario; the sessions driver resends only the post-prefix suffix
+/// on later turns of a conversation.
+pub const CHAT_PREFIX_TOKENS: usize = 12;
 
 /// Named traffic mix (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -207,6 +224,10 @@ pub struct Report {
     mix_tenants: BTreeMap<String, usize>,
     pub chunking: Option<Json>,
     pub first_error: Option<String>,
+    /// Session-reuse accounting (`chat-prefix` in-process runs).
+    pub sessions: Option<Json>,
+    /// Open-loop columns (shed/timeout counts, per-class percentiles).
+    pub open_loop: Option<Json>,
 }
 
 fn quantiles(samples: &[f64]) -> (f64, f64) {
@@ -271,6 +292,12 @@ impl Report {
         if let Some(c) = &self.chunking {
             fields.push(("chunking_compare", c.clone()));
         }
+        if let Some(s) = &self.sessions {
+            fields.push(("sessions", s.clone()));
+        }
+        if let Some(o) = &self.open_loop {
+            fields.push(("open_loop", o.clone()));
+        }
         if let Some(e) = &self.first_error {
             fields.push(("first_error", Json::str(e.clone())));
         }
@@ -281,8 +308,13 @@ impl Report {
 /// Closed-loop in-process run: submit every item against a fresh
 /// synthetic engine, drain to completion, report lifecycle timings.
 /// Token and mix columns are pure functions of (scenario, seed, n).
+/// `chat-prefix` routes through the sessions API so conversation
+/// prefixes are *actually* reused from session KV, not re-prefilled.
 pub fn run_inprocess(scenario: Scenario, items: &[WorkItem], seed: u64)
                      -> Result<Report> {
+    if scenario == Scenario::ChatPrefix {
+        return run_inprocess_sessions(items, seed);
+    }
     let mut eng =
         crate::disagg::synthetic_engine(ServingConfig::default())?;
     let t0 = Instant::now();
@@ -319,6 +351,94 @@ pub fn run_inprocess(scenario: Scenario, items: &[WorkItem], seed: u64)
         mix_tenants,
         chunking: None,
         first_error: None,
+        sessions: None,
+        open_loop: None,
+    })
+}
+
+/// The sessions-routed `chat-prefix` driver: one engine session per
+/// conversation tenant; turns run in item order, and every turn after
+/// the first resends only the fresh suffix — the shared prefix (and
+/// all prior turns) comes from the parked session KV.
+fn run_inprocess_sessions(items: &[WorkItem], seed: u64)
+                          -> Result<Report> {
+    let mut eng =
+        crate::disagg::synthetic_engine(ServingConfig::default())?;
+    // group item indices by conversation, preserving turn order
+    let mut convs: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (i, w) in items.iter().enumerate() {
+        convs.entry(w.tenant.clone()).or_default().push(i);
+    }
+    let t0 = Instant::now();
+    let mut ttft = Vec::new();
+    let mut tpot = Vec::new();
+    let mut generated = 0usize;
+    let mut streamed = 0usize;
+    let mut completed = 0usize;
+    let mut turns = 0usize;
+    let mut reuse_hits = 0usize;
+    let mut reused_context_tokens = 0usize;
+    for idxs in convs.values() {
+        let sid = eng.open_session(None)?;
+        for (k, &i) in idxs.iter().enumerate() {
+            let w = &items[i];
+            let prompt = if k == 0
+                || w.prompt.len() <= CHAT_PREFIX_TOKENS
+            {
+                w.prompt.clone()
+            } else {
+                // prefix KV already lives in the session
+                let ctx = eng
+                    .session(sid)
+                    .map(|s| s.context_tokens())
+                    .unwrap_or(0);
+                if ctx > 0 {
+                    reuse_hits += 1;
+                    reused_context_tokens += ctx;
+                }
+                w.prompt[CHAT_PREFIX_TOKENS..].to_vec()
+            };
+            eng.submit_turn(sid, prompt, w.max_new, Sampler::Greedy)?;
+            // a session allows one turn in flight: drain before the next
+            for r in eng.run_to_completion()? {
+                ttft.push(r.queue_secs + r.prefill_secs);
+                if r.tokens.len() > 1 {
+                    tpot.push(
+                        r.decode_secs / (r.tokens.len() - 1) as f64);
+                }
+                generated += r.tokens.len();
+                completed += 1;
+            }
+            streamed += eng.take_emitted().len();
+            turns += 1;
+        }
+        eng.close_session(sid)?;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let (mix_domains, mix_tenants) = mix_of(items);
+    Ok(Report {
+        scenario: Scenario::ChatPrefix.as_str(),
+        mode: "inprocess",
+        seed,
+        requests: completed,
+        errors: items.len() - completed,
+        streamed_tokens: streamed,
+        generated_tokens: generated,
+        elapsed_secs: elapsed,
+        ttft,
+        tpot,
+        mix_domains,
+        mix_tenants,
+        chunking: None,
+        first_error: None,
+        sessions: Some(Json::obj(vec![
+            ("conversations", Json::num(convs.len() as f64)),
+            ("turns", Json::num(turns as f64)),
+            ("reuse_hits", Json::num(reuse_hits as f64)),
+            ("reused_context_tokens",
+             Json::num(reused_context_tokens as f64)),
+        ])),
+        open_loop: None,
     })
 }
 
@@ -394,6 +514,323 @@ pub fn run_http(addr: &str, scenario: Scenario, items: &[WorkItem],
         mix_tenants,
         chunking: None,
         first_error,
+        sessions: None,
+        open_loop: None,
+    })
+}
+
+// ------------------------------------------------------ open-loop drive
+
+/// Per-priority-class aggregate of one open-loop run.
+#[derive(Debug, Clone, Default)]
+pub struct ClassAgg {
+    pub offered: usize,
+    pub completed: usize,
+    /// Refused by admission (watermark shed or hard cap).
+    pub shed: usize,
+    /// Cancelled by deadline expiry.
+    pub timeout: usize,
+    pub errors: usize,
+    pub tokens: usize,
+    pub ttft: Vec<f64>,
+    pub queue: Vec<f64>,
+}
+
+/// One open-loop drive: what was offered vs what survived.
+#[derive(Debug, Default)]
+pub struct OpenLoopRun {
+    pub offered: usize,
+    pub completed: usize,
+    pub streamed_tokens: usize,
+    pub generated_tokens: usize,
+    pub elapsed_secs: f64,
+    pub per_class: BTreeMap<&'static str, ClassAgg>,
+    pub queue_secs: Vec<f64>,
+    /// Completion-order TTFTs (order matters: the collapse baseline's
+    /// trend statistic compares the run's halves).
+    pub ttft_secs: Vec<f64>,
+    pub per_token_secs: Vec<f64>,
+}
+
+impl OpenLoopRun {
+    fn class(&mut self, cls: &'static str) -> &mut ClassAgg {
+        self.per_class.entry(cls).or_default()
+    }
+
+    pub fn shed(&self) -> usize {
+        self.per_class.values().map(|c| c.shed).sum()
+    }
+
+    pub fn timeouts(&self) -> usize {
+        self.per_class.values().map(|c| c.timeout).sum()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.per_class.values().map(|c| c.errors).sum()
+    }
+}
+
+/// THE arrival-pacing implementation (in-process): submit each item
+/// when its (scale-compressed) arrival timestamp comes due, step the
+/// engine continuously, and *measure* what the engine refuses —
+/// admission rejections count as sheds and deadline expiries as
+/// timeouts; arrivals are never dropped or retried. `moska replay`
+/// and the loadgen open-loop/sweep modes all drive through here.
+pub fn drive_open_loop(engine: &mut Engine, items: &[WorkItem],
+                       scale: f64) -> Result<OpenLoopRun> {
+    let scale = if scale > 0.0 { scale } else { 1.0 };
+    let mut run = OpenLoopRun { offered: items.len(), ..Default::default() };
+    let mut class_of: HashMap<usize, &'static str> = HashMap::new();
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        while next < items.len() && items[next].arrival / scale <= now {
+            let it = &items[next];
+            next += 1;
+            let cls = it.priority.as_str();
+            run.class(cls).offered += 1;
+            let opts = SubmitOpts {
+                tenant: it.tenant.clone(),
+                priority: it.priority,
+                deadline: it.deadline_ms.map(Duration::from_millis),
+                ttft_deadline: None,
+            };
+            match engine.submit_with(it.domain.as_deref(),
+                                     it.prompt.clone(), it.max_new,
+                                     Sampler::Greedy, opts) {
+                Ok(id) => {
+                    class_of.insert(id, cls);
+                }
+                Err(e) if e.downcast_ref::<AdmitError>().is_some() => {
+                    run.class(cls).shed += 1;
+                }
+                Err(_) => run.class(cls).errors += 1,
+            }
+        }
+        if engine.has_work() {
+            engine.step()?;
+        } else if next < items.len() {
+            // idle until the next arrival
+            let wait =
+                items[next].arrival / scale - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(
+                    wait.min(0.010),
+                ));
+            }
+        }
+        run.streamed_tokens += engine.take_emitted().len();
+        for (id, _why) in engine.take_expired() {
+            if let Some(cls) = class_of.remove(&id) {
+                run.class(cls).timeout += 1;
+            }
+        }
+        for r in engine.take_results() {
+            let cls = class_of.remove(&r.id).unwrap_or("standard");
+            run.completed += 1;
+            run.generated_tokens += r.tokens.len();
+            let ttft = r.queue_secs + r.prefill_secs;
+            run.queue_secs.push(r.queue_secs);
+            run.ttft_secs.push(ttft);
+            if !r.tokens.is_empty() {
+                run.per_token_secs
+                    .push(r.decode_secs / r.tokens.len() as f64);
+            }
+            let c = run.class(cls);
+            c.completed += 1;
+            c.tokens += r.tokens.len();
+            c.ttft.push(ttft);
+            c.queue.push(r.queue_secs);
+        }
+        if next >= items.len() && !engine.has_work() {
+            break;
+        }
+    }
+    run.elapsed_secs = t0.elapsed().as_secs_f64();
+    Ok(run)
+}
+
+/// Deterministically re-time a trace as a single Poisson arrival
+/// process at `rate` req/s — the sweep's controlled variable.
+pub fn retime_poisson(items: &[WorkItem], rate: f64, seed: u64)
+                      -> Vec<WorkItem> {
+    let mut rng =
+        Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(0xA5));
+    let mut clock = 0.0;
+    items
+        .iter()
+        .map(|w| {
+            let mut w = w.clone();
+            clock += rng.exponential(rate);
+            w.arrival = clock;
+            w
+        })
+        .collect()
+}
+
+fn class_agg_json(c: &ClassAgg) -> Json {
+    let (tp50, tp99) = quantiles(&c.ttft);
+    let (qp50, qp99) = quantiles(&c.queue);
+    Json::obj(vec![
+        ("offered", Json::num(c.offered as f64)),
+        ("completed", Json::num(c.completed as f64)),
+        ("shed", Json::num(c.shed as f64)),
+        ("timeout", Json::num(c.timeout as f64)),
+        ("errors", Json::num(c.errors as f64)),
+        ("tokens", Json::num(c.tokens as f64)),
+        ("ttft_p50_ms", Json::num(tp50 * 1e3)),
+        ("ttft_p99_ms", Json::num(tp99 * 1e3)),
+        ("queue_p50_ms", Json::num(qp50 * 1e3)),
+        ("queue_p99_ms", Json::num(qp99 * 1e3)),
+    ])
+}
+
+/// The open-loop report columns shared by report and sweep points.
+fn open_loop_fields(run: &OpenLoopRun) -> Vec<(&'static str, Json)> {
+    let goodput = if run.elapsed_secs > 0.0 {
+        run.completed as f64 / run.elapsed_secs
+    } else {
+        0.0
+    };
+    let (tp50, tp99) = quantiles(&run.ttft_secs);
+    let (qp50, qp99) = quantiles(&run.queue_secs);
+    vec![
+        ("offered", Json::num(run.offered as f64)),
+        ("completed", Json::num(run.completed as f64)),
+        ("shed", Json::num(run.shed() as f64)),
+        ("timeouts", Json::num(run.timeouts() as f64)),
+        ("errors", Json::num(run.errors() as f64)),
+        ("elapsed_secs", Json::num(run.elapsed_secs)),
+        ("goodput_rps", Json::num(goodput)),
+        ("ttft_p50_ms", Json::num(tp50 * 1e3)),
+        ("ttft_p99_ms", Json::num(tp99 * 1e3)),
+        ("queue_p50_ms", Json::num(qp50 * 1e3)),
+        ("queue_p99_ms", Json::num(qp99 * 1e3)),
+        ("per_class", Json::obj(
+            run.per_class
+                .iter()
+                .map(|(k, c)| (*k, class_agg_json(c)))
+                .collect(),
+        )),
+    ]
+}
+
+/// Second-half / first-half mean TTFT in completion order: ≈ 1 for a
+/// stable queue, growing past 1 when the queue diverges (the
+/// queueing-collapse signature).
+fn ttft_trend(ttft: &[f64]) -> f64 {
+    if ttft.len() < 4 {
+        return 1.0;
+    }
+    let mid = ttft.len() / 2;
+    let mean = |s: &[f64]| s.iter().sum::<f64>() / s.len() as f64;
+    mean(&ttft[mid..]) / mean(&ttft[..mid]).max(1e-9)
+}
+
+/// Sweep serving config. With admission on, the watermarks are tuned
+/// so batch sheds early under overload while interactive never hits
+/// the hard queue cap at this scale; standard work additionally gets a
+/// deadline so the timeout path is exercised. With admission off, the
+/// hard caps are pushed out of reach — the queue grows without bound.
+fn sweep_config(admission_on: bool) -> ServingConfig {
+    let mut cfg = ServingConfig::default();
+    cfg.admission = if admission_on {
+        AdmissionConfig {
+            enabled: true,
+            max_queue: 128,
+            max_queued_prefill_tokens: 4096,
+            high: 0.10,
+            low: 0.05,
+            retry_after_secs: 0.25,
+        }
+    } else {
+        AdmissionConfig {
+            enabled: false,
+            max_queue: 1_000_000,
+            max_queued_prefill_tokens: 1_000_000_000,
+            ..Default::default()
+        }
+    };
+    if admission_on {
+        cfg.deadline_ms = vec![(Priority::Standard, 2000)];
+    }
+    cfg
+}
+
+/// The open-loop overload sweep behind `--sweep`: calibrate peak
+/// service rate closed-loop (admission off), then offer Poisson
+/// arrivals at 0.5×/1×/2× capacity with admission on — goodput should
+/// hold near capacity through the 2× point while batch sheds absorb
+/// the overload — plus a no-admission baseline at 2× whose
+/// `ttft_trend` > 1 shows the queue diverging.
+pub fn overload_sweep(n: usize, seed: u64) -> Result<Json> {
+    let items = scenario_items(Scenario::Mixed, n, seed);
+    // closed-loop calibration: peak completions/sec
+    let mut eng = crate::disagg::synthetic_engine(sweep_config(false))?;
+    let t0 = Instant::now();
+    for w in &items {
+        eng.submit_opts(w.domain.as_deref(), w.prompt.clone(), w.max_new,
+                        Sampler::Greedy, &w.tenant, w.priority)?;
+    }
+    let done = eng.run_to_completion()?.len();
+    let capacity_rps = done as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    let mut points = Vec::new();
+    for scale in [0.5, 1.0, 2.0] {
+        let rate = capacity_rps * scale;
+        let timed = retime_poisson(&items, rate, seed);
+        let mut eng =
+            crate::disagg::synthetic_engine(sweep_config(true))?;
+        let run = drive_open_loop(&mut eng, &timed, 1.0)?;
+        let mut point = vec![
+            ("rate_scale", Json::num(scale)),
+            ("offered_rps", Json::num(rate)),
+        ];
+        point.extend(open_loop_fields(&run));
+        points.push(Json::obj(point));
+    }
+    let rate = capacity_rps * 2.0;
+    let timed = retime_poisson(&items, rate, seed);
+    let mut eng = crate::disagg::synthetic_engine(sweep_config(false))?;
+    let run = drive_open_loop(&mut eng, &timed, 1.0)?;
+    let mut baseline = vec![
+        ("rate_scale", Json::num(2.0)),
+        ("offered_rps", Json::num(rate)),
+        ("ttft_trend", Json::num(ttft_trend(&run.ttft_secs))),
+    ];
+    baseline.extend(open_loop_fields(&run));
+    Ok(Json::obj(vec![
+        ("capacity_rps", Json::num(capacity_rps)),
+        ("points", Json::arr(points)),
+        ("baseline_no_admission", Json::obj(baseline)),
+    ]))
+}
+
+/// In-process open-loop run (`--open-loop`, empty `--addr`).
+pub fn run_inprocess_open(scenario: Scenario, items: &[WorkItem],
+                          seed: u64, scale: f64) -> Result<Report> {
+    let mut eng =
+        crate::disagg::synthetic_engine(ServingConfig::default())?;
+    let run = drive_open_loop(&mut eng, items, scale)?;
+    let (mix_domains, mix_tenants) = mix_of(items);
+    Ok(Report {
+        scenario: scenario.as_str(),
+        mode: "inprocess-open",
+        seed,
+        requests: run.offered,
+        errors: run.errors(),
+        streamed_tokens: run.streamed_tokens,
+        generated_tokens: run.generated_tokens,
+        elapsed_secs: run.elapsed_secs,
+        ttft: run.ttft_secs.clone(),
+        tpot: run.per_token_secs.clone(),
+        mix_domains,
+        mix_tenants,
+        chunking: None,
+        first_error: None,
+        sessions: None,
+        open_loop: Some(Json::obj(open_loop_fields(&run))),
     })
 }
 
@@ -406,9 +843,21 @@ fn count_token_frames(buf: &[u8]) -> usize {
     buf.windows(PAT.len()).filter(|w| *w == PAT).count()
 }
 
+/// How one HTTP request ended, for per-class open-loop accounting.
+enum Outcome {
+    Done(ReqSample),
+    /// 429 — admission refused it; records whether the reply carried
+    /// the `Retry-After` header it is required to.
+    Shed { retry_after: bool },
+    /// 504 pre-stream or a terminal `kind: "timeout"` error frame.
+    Timeout,
+    Failed(String),
+}
+
 /// One streaming request over a raw socket; times SSE frames as they
-/// arrive (TTFT = first token frame, TPOT = inter-frame mean).
-fn sse_request(addr: &str, item: &WorkItem) -> Result<ReqSample> {
+/// arrive (TTFT = first token frame, TPOT = inter-frame mean) and
+/// classifies the ending (done / shed / timeout).
+fn sse_request_raw(addr: &str, item: &WorkItem) -> Result<Outcome> {
     let text: String =
         item.prompt.iter().map(|&t| (t as u8) as char).collect();
     let mut fields = vec![
@@ -420,6 +869,9 @@ fn sse_request(addr: &str, item: &WorkItem) -> Result<ReqSample> {
     ];
     if let Some(d) = &item.domain {
         fields.push(("domain", Json::str(d.clone())));
+    }
+    if let Some(ms) = item.deadline_ms {
+        fields.push(("deadline_ms", Json::num(ms as f64)));
     }
     let body = Json::obj(fields).to_string();
     let mut s = TcpStream::connect(addr)
@@ -453,8 +905,24 @@ fn sse_request(addr: &str, item: &WorkItem) -> Result<ReqSample> {
         }
     }
     let head = String::from_utf8_lossy(&buf);
-    if !head.starts_with("HTTP/1.1 200") {
-        bail!("non-200 reply: {:?}", head.lines().next().unwrap_or(""));
+    let status = head.lines().next().unwrap_or("");
+    if status.starts_with("HTTP/1.1 429") {
+        return Ok(Outcome::Shed {
+            retry_after:
+                head.to_ascii_lowercase().contains("retry-after:"),
+        });
+    }
+    if status.starts_with("HTTP/1.1 504") {
+        return Ok(Outcome::Timeout);
+    }
+    if !status.starts_with("HTTP/1.1 200") {
+        bail!("non-200 reply: {status:?}");
+    }
+    if head.contains("\nevent: error\n") {
+        if head.contains("\"kind\":\"timeout\"") {
+            return Ok(Outcome::Timeout);
+        }
+        bail!("stream ended with error frame");
     }
     if !head.contains("event: done") {
         bail!("stream ended without done frame");
@@ -464,8 +932,127 @@ fn sse_request(addr: &str, item: &WorkItem) -> Result<ReqSample> {
     };
     let tpot = (tokens > 1)
         .then(|| (last - first).as_secs_f64() / (tokens - 1) as f64);
-    Ok(ReqSample { ttft_secs: first.as_secs_f64(), tpot_secs: tpot,
-                   tokens })
+    Ok(Outcome::Done(ReqSample {
+        ttft_secs: first.as_secs_f64(),
+        tpot_secs: tpot,
+        tokens,
+    }))
+}
+
+/// Closed-loop view of [`sse_request_raw`]: anything but a completed
+/// stream is an error.
+fn sse_request(addr: &str, item: &WorkItem) -> Result<ReqSample> {
+    match sse_request_raw(addr, item)? {
+        Outcome::Done(s) => Ok(s),
+        Outcome::Shed { .. } => bail!("request shed (429)"),
+        Outcome::Timeout => bail!("request timed out (deadline)"),
+        Outcome::Failed(e) => bail!("{e}"),
+    }
+}
+
+/// HTTP open-loop run: every item fires exactly once at its
+/// (scale-compressed) arrival timestamp. A worker that falls behind
+/// fires immediately — the lateness shows up as server queue delay;
+/// dropping arrivals is not an option. Sheds/timeouts are
+/// measurements, not errors.
+pub fn run_http_open_loop(addr: &str, scenario: Scenario,
+                          items: &[WorkItem], seed: u64,
+                          concurrency: usize, scale: f64)
+                          -> Result<Report> {
+    if items.is_empty() {
+        bail!("no work items");
+    }
+    let scale = if scale > 0.0 { scale } else { 1.0 };
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<(&'static str, Outcome)>> = Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    // enough workers that one slow stream cannot stall later arrivals
+    let workers = concurrency.max(16).min(items.len());
+    std::thread::scope(|sc| {
+        for _ in 0..workers {
+            sc.spawn(|| {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let item = &items[i];
+                    let due =
+                        Duration::from_secs_f64(item.arrival / scale);
+                    let elapsed = t0.elapsed();
+                    if due > elapsed {
+                        std::thread::sleep(due - elapsed);
+                    }
+                    let o = match sse_request_raw(addr, item) {
+                        Ok(o) => o,
+                        Err(e) => Outcome::Failed(format!("{e:#}")),
+                    };
+                    local.push((item.priority.as_str(), o));
+                }
+                out.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut run = OpenLoopRun {
+        offered: items.len(),
+        elapsed_secs: elapsed,
+        ..Default::default()
+    };
+    let mut first_error = None;
+    let mut sheds_missing_retry_after = 0usize;
+    for (cls, o) in out.into_inner().unwrap() {
+        run.class(cls).offered += 1;
+        match o {
+            Outcome::Done(s) => {
+                run.completed += 1;
+                run.streamed_tokens += s.tokens;
+                run.generated_tokens += s.tokens;
+                run.ttft_secs.push(s.ttft_secs);
+                if let Some(t) = s.tpot_secs {
+                    run.per_token_secs.push(t);
+                }
+                let c = run.class(cls);
+                c.completed += 1;
+                c.tokens += s.tokens;
+                c.ttft.push(s.ttft_secs);
+            }
+            Outcome::Shed { retry_after } => {
+                run.class(cls).shed += 1;
+                if !retry_after {
+                    sheds_missing_retry_after += 1;
+                }
+            }
+            Outcome::Timeout => run.class(cls).timeout += 1,
+            Outcome::Failed(e) => {
+                run.class(cls).errors += 1;
+                first_error.get_or_insert(e);
+            }
+        }
+    }
+    let mut ol = open_loop_fields(&run);
+    ol.push(("sheds_missing_retry_after",
+             Json::num(sheds_missing_retry_after as f64)));
+    let (mix_domains, mix_tenants) = mix_of(items);
+    Ok(Report {
+        scenario: scenario.as_str(),
+        mode: "http-open",
+        seed,
+        requests: run.offered,
+        errors: run.errors(),
+        streamed_tokens: run.streamed_tokens,
+        generated_tokens: run.generated_tokens,
+        elapsed_secs: elapsed,
+        ttft: run.ttft_secs.clone(),
+        tpot: run.per_token_secs.clone(),
+        mix_domains,
+        mix_tenants,
+        chunking: None,
+        first_error,
+        sessions: None,
+        open_loop: Some(Json::obj(ol)),
+    })
 }
 
 // ------------------------------------------------- chunking comparison
@@ -535,10 +1122,22 @@ pub fn cmd_loadgen(args: &Args) -> Result<()> {
     let seconds = args.f64("seconds")?;
     let concurrency = args.usize("concurrency")?;
     let addr = args.str("addr")?;
+    let open_loop = args.flag("open-loop");
+    let rate = args.f64("rate")?;
+    let rate_scale = args.f64("rate-scale")?;
     // duration-driven runs cycle the item list, so make it deep enough
     // that the mix stays representative
-    let n_items = if seconds > 0.0 { requests.max(64) } else { requests };
-    let items = scenario_items(scenario, n_items, seed);
+    let n_items = if seconds > 0.0 && !open_loop {
+        requests.max(64)
+    } else {
+        requests
+    };
+    let mut items = scenario_items(scenario, n_items, seed);
+    if open_loop && rate > 0.0 {
+        // --rate overrides the scenario's native arrival clock with a
+        // single Poisson process (what the overload smoke sweeps)
+        items = retime_poisson(&items, rate, seed);
+    }
     if let Some(path) = args.get("emit-trace") {
         if !path.is_empty() {
             std::fs::write(
@@ -547,22 +1146,57 @@ pub fn cmd_loadgen(args: &Args) -> Result<()> {
             println!("[loadgen] trace → {path}");
         }
     }
-    let mut report = if addr.is_empty() {
-        run_inprocess(scenario, &items, seed)?
-    } else {
-        run_http(&addr, scenario, &items, seed, concurrency, seconds)?
+    let mut report = match (addr.is_empty(), open_loop) {
+        (true, false) => run_inprocess(scenario, &items, seed)?,
+        (true, true) => {
+            run_inprocess_open(scenario, &items, seed, rate_scale)?
+        }
+        (false, false) => {
+            run_http(&addr, scenario, &items, seed, concurrency,
+                     seconds)?
+        }
+        (false, true) => {
+            run_http_open_loop(&addr, scenario, &items, seed,
+                               concurrency, rate_scale)?
+        }
     };
     if args.flag("compare-chunking") {
         report.chunking = Some(chunking_compare()?);
     }
+    let sweep = if args.flag("sweep") {
+        if !addr.is_empty() {
+            bail!("--sweep is in-process only (drop --addr)");
+        }
+        println!("[loadgen] running overload sweep \
+                  (calibrate, 0.5x/1x/2x, no-admission baseline)...");
+        Some(overload_sweep(requests.max(96), seed)?)
+    } else {
+        None
+    };
     let out = args.str("out")?;
     if let Some(dir) = std::path::Path::new(&out).parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
         }
     }
-    let j = report.to_json();
-    std::fs::write(&out, j.to_string())?;
+    // merge over an existing report so independent smokes writing the
+    // same file (serving smoke, overload smoke) compose key-wise
+    let mut merged = match std::fs::read_to_string(&out)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+    {
+        Some(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    if let Json::Obj(new) = report.to_json() {
+        for (k, v) in new {
+            merged.insert(k, v);
+        }
+    }
+    if let Some(s) = sweep {
+        merged.insert("open_loop_sweep".to_string(), s);
+    }
+    std::fs::write(&out, Json::Obj(merged).to_string())?;
     println!("[loadgen] {} ({}): {} requests, {} errors, {} streamed \
               tokens in {:.2}s",
              report.scenario, report.mode, report.requests,
@@ -673,6 +1307,83 @@ mod tests {
             "chunked prefill did not improve short TTFT: \
              chunked={chunked} unchunked={unchunked}"
         );
+    }
+
+    /// The chat scenario routes through the sessions API: zero errors,
+    /// every non-first turn a reuse hit, and the report carries the
+    /// session columns.
+    #[test]
+    fn chat_prefix_routes_through_sessions() {
+        let items = scenario_items(Scenario::ChatPrefix, 16, 5);
+        let r = run_inprocess(Scenario::ChatPrefix, &items, 5).unwrap();
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.requests, 16);
+        assert!(r.generated_tokens > 0);
+        let s = r.sessions.as_ref().expect("sessions column");
+        let conv = s.get("conversations").unwrap().as_usize().unwrap();
+        let turns = s.get("turns").unwrap().as_usize().unwrap();
+        let hits = s.get("reuse_hits").unwrap().as_usize().unwrap();
+        assert!(conv >= 1 && conv <= 4);
+        assert_eq!(turns, 16);
+        // every turn after a conversation's first reuses parked KV
+        assert_eq!(hits, turns - conv);
+        assert!(s.get("reused_context_tokens").unwrap()
+                    .as_usize().unwrap() > 0);
+    }
+
+    /// Open-loop drive completes an uncontended trace with no sheds,
+    /// timeouts, or errors, and accounts every arrival per class.
+    #[test]
+    fn open_loop_drive_uncontended_completes_everything() {
+        let mut items = scenario_items(Scenario::Mixed, 12, 9);
+        // compress arrivals so the test is fast but still paced
+        for w in &mut items {
+            w.arrival = w.arrival.min(0.2);
+        }
+        let mut eng = crate::disagg::synthetic_engine(
+            ServingConfig::default()).unwrap();
+        let run = drive_open_loop(&mut eng, &items, 1.0).unwrap();
+        assert_eq!(run.offered, 12);
+        assert_eq!(run.completed, 12);
+        assert_eq!(run.shed(), 0);
+        assert_eq!(run.timeouts(), 0);
+        assert_eq!(run.errors(), 0);
+        let per_class_offered: usize =
+            run.per_class.values().map(|c| c.offered).sum();
+        assert_eq!(per_class_offered, 12);
+        assert_eq!(run.ttft_secs.len(), 12);
+        assert!(run.generated_tokens > 0);
+    }
+
+    /// Poisson retiming is deterministic and strictly rate-scaled.
+    #[test]
+    fn retime_poisson_deterministic_and_monotone() {
+        let items = scenario_items(Scenario::Mixed, 32, 3);
+        let a = retime_poisson(&items, 50.0, 3);
+        let b = retime_poisson(&items, 50.0, 3);
+        assert_eq!(a, b);
+        for w in a.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+        // only arrivals change
+        for (orig, new) in items.iter().zip(&a) {
+            assert_eq!(orig.prompt, new.prompt);
+            assert_eq!(orig.tenant, new.tenant);
+        }
+        let span = a.last().unwrap().arrival;
+        let rate = 32.0 / span;
+        assert!(rate > 20.0 && rate < 120.0, "rate {rate}");
+    }
+
+    /// ttft_trend flags a diverging queue and clears a stable one.
+    #[test]
+    fn ttft_trend_statistic() {
+        let stable = vec![0.1; 20];
+        assert!((ttft_trend(&stable) - 1.0).abs() < 1e-9);
+        let diverging: Vec<f64> =
+            (0..20).map(|i| 0.1 + i as f64 * 0.05).collect();
+        assert!(ttft_trend(&diverging) > 1.5);
+        assert_eq!(ttft_trend(&[0.1, 0.2]), 1.0); // too few samples
     }
 
     /// In-process runs are seed-deterministic in every count column.

@@ -29,6 +29,10 @@ pub struct WorkItem {
     pub priority: Priority,
     /// Ask the server for SSE token streaming.
     pub stream: bool,
+    /// Optional per-request end-to-end deadline (engine cancels the
+    /// request past it, lifecycle records a timeout). `None` = the
+    /// serving config's class default, if any.
+    pub deadline_ms: Option<u64>,
 }
 
 impl WorkItem {
@@ -43,6 +47,7 @@ impl WorkItem {
             tenant: "default".to_string(),
             priority: Priority::Standard,
             stream: false,
+            deadline_ms: None,
         }
     }
 }
@@ -141,6 +146,9 @@ pub fn trace_to_json(items: &[WorkItem]) -> Json {
                 if w.stream {
                     fields.push(("stream", Json::Bool(true)));
                 }
+                if let Some(ms) = w.deadline_ms {
+                    fields.push(("deadline_ms", Json::num(ms as f64)));
+                }
                 Json::obj(fields)
             })
             .collect(),
@@ -174,6 +182,10 @@ pub fn trace_from_json(j: &Json) -> Result<Vec<WorkItem>> {
                 stream: match e.opt("stream") {
                     Some(b) => b.as_bool()?,
                     None => false,
+                },
+                deadline_ms: match e.opt("deadline_ms") {
+                    Some(v) => Some(v.as_usize()? as u64),
+                    None => None,
                 },
             })
         })
@@ -252,14 +264,17 @@ mod tests {
         w.tenant = "rag-a".to_string();
         w.priority = Priority::Interactive;
         w.stream = true;
+        w.deadline_ms = Some(1500);
         let plain = WorkItem::basic(0.75, None, vec![100], 2);
         let items = vec![w, plain];
         let s = trace_to_json(&items).to_string();
         assert!(s.contains("\"tenant\""));
         assert!(s.contains("\"priority\""));
         assert!(s.contains("\"stream\""));
+        assert!(s.contains("\"deadline_ms\""));
         // the defaulted item contributes none of the optional keys
         assert_eq!(s.matches("\"tenant\"").count(), 1);
+        assert_eq!(s.matches("\"deadline_ms\"").count(), 1);
         let back = trace_from_json(&Json::parse(&s).unwrap()).unwrap();
         assert_eq!(items, back);
         assert!(trace_from_json(

@@ -1,0 +1,363 @@
+//! Overload-control tests: SLO-aware admission shedding under a flood
+//! (batch 429s strictly before interactive, every 429 carrying a
+//! `Retry-After` hint), deadline expiry releasing KV pages and counting
+//! as a lifecycle timeout, the mid-stream `event: error` timeout frame,
+//! and a property that admission/expiry/cancel never strand pool pages.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use moska::config::{ModelConfig, ServingConfig};
+use moska::engine::{Engine, SubmitOpts};
+use moska::kvcache::SharedStore;
+use moska::model::sampling::Sampler;
+use moska::model::Weights;
+use moska::prop_assert;
+use moska::runtime::NativeBackend;
+use moska::scheduler::{AdmissionConfig, Priority};
+use moska::util::json::Json;
+use moska::util::prop::{check, Case, Config};
+
+const CHUNK: usize = 64;
+
+/// The integration_serving synthetic engine, with the serving config
+/// (admission watermarks, deadlines) chosen by the caller.
+fn engine_with(tune: impl FnOnce(&mut ServingConfig)) -> Engine {
+    let model = ModelConfig::tiny();
+    let mut cfg = ServingConfig {
+        top_k: None,
+        max_batch: 8,
+        exec_threads: 1,
+        ..Default::default()
+    };
+    tune(&mut cfg);
+    let be = NativeBackend::with_threads(model.clone(), CHUNK, 1);
+    let weights = Weights::synthetic(model, 0x0B5E);
+    let mut eng = Engine::new(
+        Box::new(be), weights, SharedStore::empty(CHUNK), cfg, 1024,
+    );
+    let tokens: Vec<i32> =
+        (0..2 * CHUNK).map(|i| (i % 100) as i32).collect();
+    eng.register_domain("bench", &tokens).expect("register domain");
+    eng
+}
+
+fn spawn_server(engine: Engine) -> SocketAddr {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = moska::server::serve_on(
+            "127.0.0.1:0".parse().unwrap(), engine, Some(tx),
+        );
+    });
+    rx.recv().expect("server ready")
+}
+
+/// One HTTP exchange; returns (header block, body).
+fn http(addr: SocketAddr, req: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(req.as_bytes()).expect("send");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read");
+    match resp.split_once("\r\n\r\n") {
+        Some((h, b)) => (h.to_string(), b.to_string()),
+        None => (resp, String::new()),
+    }
+}
+
+fn post_generate(addr: SocketAddr, body: &str) -> (String, String) {
+    http(addr, &format!(
+        "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(), body,
+    ))
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    http(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+}
+
+/// Poll an endpoint until `ok(body)` or a deadline.
+fn poll_get(addr: SocketAddr, path: &str,
+            ok: impl Fn(&str) -> bool) -> (String, String) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (head, body) = http_get(addr, path);
+        if ok(&body) {
+            return (head, body);
+        }
+        assert!(Instant::now() < deadline,
+                "{path} never reached the expected state; last: {body}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn stat(j: &Json, k: &str) -> f64 {
+    j.get(k).ok().and_then(|v| v.as_f64().ok()).unwrap_or(-1.0)
+}
+
+/// Flood a tight-watermark server with batch work plus a handful of
+/// interactive requests: batch is shed (429 + Retry-After) strictly
+/// before interactive (zero interactive rejections), the shed counters
+/// show up on /stats, and the server drains cleanly afterwards.
+#[test]
+fn flood_sheds_batch_before_interactive_with_retry_after() {
+    // watermarks low enough that ~7 queued requests escalate to level 1
+    let engine = engine_with(|cfg| {
+        cfg.admission = AdmissionConfig {
+            enabled: true,
+            max_queue: 64,
+            max_queued_prefill_tokens: 1_000_000,
+            high: 0.10,
+            low: 0.05,
+            retry_after_secs: 0.5,
+        };
+    });
+    let addr = spawn_server(engine);
+
+    let fire = |priority: &'static str| {
+        std::thread::spawn(move || {
+            let body = format!(
+                r#"{{"prompt": "abcdef", "domain": "bench", "max_tokens": 24, "priority": "{priority}"}}"#,
+            );
+            post_generate(addr, &body)
+        })
+    };
+    // 48 batch clients first (queue depth crosses the high watermark
+    // while they are still arriving), then 8 interactive clients
+    let batch: Vec<_> = (0..48).map(|_| fire("batch")).collect();
+    let interactive: Vec<_> = (0..8).map(|_| fire("interactive")).collect();
+
+    let mut batch_shed = 0usize;
+    for h in batch {
+        let (head, body) = h.join().expect("batch client");
+        if head.starts_with("HTTP/1.1 429") {
+            batch_shed += 1;
+            assert!(head.contains("Retry-After:"),
+                    "429 without Retry-After: {head}");
+            let j = Json::parse(&body).expect("429 body JSON");
+            assert!(j.get("error").is_ok(), "429 body lacks error: {body}");
+        } else {
+            assert!(head.starts_with("HTTP/1.1 200"), "{head}\n{body}");
+        }
+    }
+    for h in interactive {
+        let (head, body) = h.join().expect("interactive client");
+        assert!(head.starts_with("HTTP/1.1 200"),
+                "interactive request rejected under batch flood: \
+                 {head}\n{body}");
+    }
+    assert!(batch_shed > 0,
+            "flood never tripped the batch watermark");
+
+    // server drains: nothing live/queued, all pages back
+    let (_, stats) = poll_get(addr, "/stats", |body| {
+        let Ok(j) = Json::parse(body) else { return false };
+        stat(&j, "live") == 0.0 && stat(&j, "queued") == 0.0
+            && stat(&j, "kv_pages_allocated") == 0.0
+    });
+    let j = Json::parse(&stats).unwrap();
+    let adm = j.get("admission").expect("admission stats");
+    assert_eq!(stat(adm, "shed_batch") as usize, batch_shed,
+               "/stats shed_batch disagrees with observed 429s");
+    assert_eq!(stat(adm, "shed_interactive"), 0.0, "{adm:?}");
+}
+
+/// Deadline expiry is a clean retirement: a queued request past its
+/// deadline never runs, a mid-flight request past its deadline releases
+/// every KV page it held, both count as lifecycle timeouts and neither
+/// as a completion.
+#[test]
+fn deadline_expiry_releases_pages_and_counts_timeouts() {
+    let mut eng = engine_with(|_| {});
+
+    // (1) expires while still queued: a zero deadline is already past
+    // by the first step's expiry sweep
+    let id = eng
+        .submit_with(Some("bench"), vec![1, 2, 3], 8, Sampler::Greedy,
+                     SubmitOpts {
+                         deadline: Some(Duration::ZERO),
+                         ..Default::default()
+                     })
+        .expect("submit");
+    eng.step().expect("step");
+    let expired = eng.take_expired();
+    assert_eq!(expired.len(), 1, "{expired:?}");
+    assert_eq!(expired[0].0, id);
+    assert!(expired[0].1.contains("deadline"), "{}", expired[0].1);
+    assert!(eng.take_results().is_empty(), "expired request completed");
+    assert!(!eng.has_work());
+    assert_eq!(eng.pool.allocated(), 0);
+
+    // (2) expires mid-flight: long generation, short deadline — step
+    // until the expiry sweep cancels it, then its pages must be back
+    let id = eng
+        .submit_with(Some("bench"), vec![4, 5, 6, 7], 20_000,
+                     Sampler::Greedy,
+                     SubmitOpts {
+                         deadline: Some(Duration::from_millis(30)),
+                         ..Default::default()
+                     })
+        .expect("submit");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let expired = loop {
+        eng.step().expect("step");
+        let e = eng.take_expired();
+        if !e.is_empty() {
+            break e;
+        }
+        assert!(Instant::now() < deadline, "request never expired");
+    };
+    assert_eq!(expired[0].0, id);
+    assert!(eng.take_results().is_empty(), "expired request completed");
+    assert_eq!(eng.pool.allocated(), 0,
+               "mid-flight expiry stranded KV pages");
+    assert_eq!(eng.lifecycle.timeouts(), 2);
+    assert_eq!(eng.lifecycle.completed(), 0);
+}
+
+/// A request that times out after streaming began gets a terminal
+/// `event: error` SSE frame whose JSON body says `"kind": "timeout"` —
+/// not a silently closed socket.
+#[test]
+fn midstream_timeout_emits_error_frame() {
+    let addr = spawn_server(engine_with(|_| {}));
+    // generation far longer than the deadline, so the first tokens
+    // stream and then the expiry sweep cancels the request mid-stream
+    let body = r#"{"prompt": "abcd", "domain": "bench", "max_tokens": 20000, "stream": true, "deadline_ms": 400}"#;
+    let (head, body) = post_generate(addr, body);
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}\n{body}");
+    assert!(head.contains("text/event-stream"), "{head}");
+    assert!(body.contains("data: {\"token\""),
+            "no tokens streamed before the timeout: {body}");
+    let frame = body
+        .split("\n\n")
+        .find_map(|f| f.strip_prefix("event: error\ndata: "))
+        .unwrap_or_else(|| panic!("no error frame in: {body}"));
+    let j = Json::parse(frame).expect("error frame JSON");
+    assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "timeout",
+               "{frame}");
+    assert!(!j.get("error").unwrap().as_str().unwrap().is_empty());
+    assert!(!body.contains("event: done"),
+            "timed-out stream also claimed completion: {body}");
+
+    // the cancelled request releases its pages and counts as a timeout
+    let (_, stats) = poll_get(addr, "/stats", |body| {
+        let Ok(j) = Json::parse(body) else { return false };
+        stat(&j, "live") == 0.0 && stat(&j, "queued") == 0.0
+            && stat(&j, "kv_pages_allocated") == 0.0
+    });
+    let j = Json::parse(&stats).unwrap();
+    let lc = j.get("lifecycle").unwrap();
+    assert_eq!(stat(lc, "timeouts"), 1.0, "{lc:?}");
+    assert_eq!(stat(lc, "completed"), 0.0, "{lc:?}");
+}
+
+// ---------------------------------------------------------------- property
+
+/// One randomized overload episode: watermarks, a small page pool, and
+/// a submit/step/cancel/instant-deadline mix.
+#[derive(Debug, Clone)]
+struct OverloadCase {
+    high: f64,
+    low: f64,
+    max_queue: usize,
+    /// (prompt len, max_new, class 0..3, instant deadline, cancel)
+    reqs: Vec<(usize, usize, u8, bool, bool)>,
+    steps_between: usize,
+}
+
+impl Case for OverloadCase {
+    fn shrink(&self) -> Vec<OverloadCase> {
+        let mut out = Vec::new();
+        if self.reqs.len() > 1 {
+            out.push(OverloadCase {
+                reqs: self.reqs[..self.reqs.len() / 2].to_vec(),
+                ..self.clone()
+            });
+            out.push(OverloadCase {
+                reqs: self.reqs[1..].to_vec(),
+                ..self.clone()
+            });
+        }
+        out
+    }
+}
+
+fn gen_overload(rng: &mut moska::util::rng::Rng) -> OverloadCase {
+    let high = 0.05 + rng.f64() * 0.9;
+    let low = high * rng.f64();
+    let n = rng.range(1, 25);
+    let reqs = (0..n)
+        .map(|_| {
+            (rng.range(1, 9), rng.range(1, 9),
+             rng.range(0, 3) as u8, rng.f64() < 0.2, rng.f64() < 0.15)
+        })
+        .collect();
+    OverloadCase {
+        high,
+        low,
+        max_queue: rng.range(2, 17),
+        reqs,
+        steps_between: rng.range(0, 4),
+    }
+}
+
+/// Whatever the admission verdicts, deadline expiries, and client
+/// cancels along the way, a drained engine owes the pool every page:
+/// rejections must not reserve, expiries and cancels must release.
+#[test]
+fn prop_admission_never_strands_pages() {
+    let cfg = Config { cases: 16, ..Default::default() };
+    check("admission-pages-conserved", cfg, gen_overload, |case| {
+        let mut eng = engine_with(|cfg| {
+            cfg.max_batch = 4;
+            cfg.admission = AdmissionConfig {
+                enabled: true,
+                max_queue: case.max_queue,
+                max_queued_prefill_tokens: 64,
+                high: case.high,
+                low: case.low,
+                retry_after_secs: 0.1,
+            };
+        });
+        let capacity = eng.pool.capacity();
+        for &(plen, max_new, class, instant, cancel) in &case.reqs {
+            let priority = match class {
+                0 => Priority::Interactive,
+                1 => Priority::Standard,
+                _ => Priority::Batch,
+            };
+            let sub = eng.submit_with(
+                None, vec![7; plen], max_new, Sampler::Greedy,
+                SubmitOpts {
+                    priority,
+                    deadline: instant.then_some(Duration::ZERO),
+                    ..Default::default()
+                },
+            );
+            if let Ok(id) = sub {
+                if cancel {
+                    eng.cancel(id);
+                }
+            }
+            for _ in 0..case.steps_between {
+                eng.step().map_err(|e| e.to_string())?;
+            }
+        }
+        for _ in 0..50_000 {
+            if !eng.step().map_err(|e| e.to_string())? {
+                break;
+            }
+        }
+        eng.take_expired();
+        eng.take_results();
+        prop_assert!(!eng.has_work(), "engine never drained: {case:?}");
+        prop_assert!(
+            eng.pool.allocated() == 0
+                && eng.pool.available() == capacity,
+            "pages stranded: {} allocated, {}/{} available",
+            eng.pool.allocated(), eng.pool.available(), capacity
+        );
+        Ok(())
+    });
+}

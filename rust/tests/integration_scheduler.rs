@@ -86,6 +86,83 @@ fn scripted_replay_is_deterministic() {
             "no tick mixed prefill with decode or batched chunks");
 }
 
+/// Scripted decode-budget run: eight decode-phase requests (zero-length
+/// prompts owe no prefill) over a 4-token step budget, one tenant per
+/// request — four heavy (weight 3) and four light (weight 1) — each
+/// request retiring after 12 decoded tokens. Per-request tenants make
+/// the deficit key rotate over every row (within one tenant the seq
+/// tie-break is intentionally FIFO instead).
+fn drive_decode_budget() -> (Vec<Tick>, Vec<usize>) {
+    let mut s = StepScheduler::new(8).with_budget(4, 4);
+    for id in 0..8usize {
+        let (tenant, weight) = if id < 4 {
+            (format!("h{id}"), 3.0)
+        } else {
+            (format!("l{id}"), 1.0)
+        };
+        s.enqueue(id, meta(&tenant, weight, Priority::Standard, 0));
+    }
+    let mut decoded = [0usize; 8];
+    let mut ticks = Vec::new();
+    let mut retired = Vec::new();
+    for _ in 0..64 {
+        let t = s.tick();
+        let done: Vec<usize> = t
+            .decode
+            .iter()
+            .copied()
+            .filter(|&id| {
+                decoded[id] += 1;
+                decoded[id] == 12
+            })
+            .collect();
+        s.retire(&done);
+        retired.extend(done);
+        ticks.push(t);
+        if retired.len() == 8 {
+            break;
+        }
+    }
+    (ticks, retired)
+}
+
+/// Decode-side token budget at the harness level: with twice as many
+/// live decode rows as the budget covers, replays are tick-identical,
+/// no tick exceeds the budget, bandwidth splits by tenant weight, no
+/// row starves, and the heavy tenant's requests all finish first.
+#[test]
+fn decode_budget_replays_deterministically_and_respects_weights() {
+    let (a, done_a) = drive_decode_budget();
+    let (b, done_b) = drive_decode_budget();
+    assert_eq!(a, b, "decode-budget tick streams diverged");
+    assert_eq!(done_a, done_b, "retirement order diverged");
+    assert_eq!(done_a.len(), 8, "not every request finished: {done_a:?}");
+    assert!(a.iter().all(|t| t.decode.len() <= 4),
+            "a tick decoded past the 4-token budget");
+    assert!(a.iter().take(8).all(|t| t.decode.len() == 4),
+            "eight live decoders over a 4-token budget must saturate it");
+    // pre-retirement window: heavy (weight 3) out-decodes light
+    // (weight 1) and every live row still gets slots
+    let (mut heavy, mut light) = (0usize, 0usize);
+    let mut seen = std::collections::HashSet::new();
+    for t in a.iter().take(8) {
+        for &id in &t.decode {
+            seen.insert(id);
+            if id < 4 {
+                heavy += 1;
+            } else {
+                light += 1;
+            }
+        }
+    }
+    assert!(heavy >= 2 * light && light > 0,
+            "3:1 weights not honored: heavy={heavy} light={light}");
+    assert_eq!(seen.len(), 8, "a live decode row starved: {seen:?}");
+    // 3x the bandwidth at the same token count → heavy retires first
+    assert!(done_a[..4].iter().all(|&id| id < 4),
+            "a light request finished before the heavy ones: {done_a:?}");
+}
+
 /// A long prompt shares every tick with live decode rows instead of
 /// monopolizing the loop: decode appears in each tick of the long
 /// prefill window, and the long prompt needs several ticks to finish.

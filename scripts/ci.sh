@@ -630,6 +630,123 @@ PYEOF
     fi
 fi
 
+if [ "$RUN_BENCH" = "1" ]; then
+    echo "== overload smoke (open-loop at 2x capacity) =="
+    # a live `serve --synthetic` with tight admission watermarks, hit
+    # with open-loop Poisson traffic at ~2x its measured closed-loop
+    # goodput; the gate: batch work sheds, interactive work never
+    # errors and keeps a finite p99 TTFT, the run exits cleanly, and
+    # /stats drains back to zero afterwards
+    if cargo build --release --bin moska; then
+        BIN=target/release/moska
+        mkdir -p bench_out
+        "$BIN" serve --synthetic --addr 127.0.0.1:0 \
+            --admission 0.1,0.05,128 \
+            > bench_out/serve_overload.log 2>&1 &
+        OSRV_PID=$!
+        trap 'kill "$OSRV_PID" 2>/dev/null' EXIT
+        ADDR_O=""
+        for _ in $(seq 1 100); do
+            ADDR_O=$(sed -n 's/.*listening on http:\/\/\([0-9.:]*\).*/\1/p' \
+                         bench_out/serve_overload.log 2>/dev/null | head -1)
+            [ -n "$ADDR_O" ] && break
+            sleep 0.1
+        done
+        if [ -z "$ADDR_O" ]; then
+            echo "error: overload server never reported its address" >&2
+            cat bench_out/serve_overload.log >&2 || true
+            FAIL=1
+        # calibrate: closed-loop goodput under light concurrency ≈
+        # server capacity (admission stays quiet at this depth)
+        elif "$BIN" loadgen --addr "$ADDR_O" --scenario mixed \
+                 --seconds 3 --concurrency 4 \
+                 --out bench_out/BENCH_overload_cal.json; then
+            GOODPUT=$(awk -F'"goodput_rps":' 'NF>1{split($2,a,/[,}]/);
+                          print a[1]; exit}' \
+                          bench_out/BENCH_overload_cal.json)
+            RATE=$(awk "BEGIN{r=(${GOODPUT:-0})*2; if (r<4) r=4;
+                        printf \"%.2f\", r}")
+            echo "overload smoke: capacity ~${GOODPUT:-?} rps, \
+open-loop at $RATE rps"
+            if "$BIN" loadgen --addr "$ADDR_O" --scenario mixed \
+                   --open-loop --rate "$RATE" --requests 80 \
+                   --concurrency 16 \
+                   --out bench_out/BENCH_overload.json; then
+                if command -v python3 >/dev/null 2>&1; then
+                    if python3 - bench_out/BENCH_overload.json \
+                           "$ADDR_O" <<'PYEOF'
+import json, math, sys, time, urllib.request
+r = json.load(open(sys.argv[1]))
+ol = r["open_loop"]
+assert ol["offered"] == 80, ol
+pc = ol["per_class"]
+b, i = pc["batch"], pc["interactive"]
+assert b["offered"] > 0 and i["offered"] > 0, pc
+assert b["shed"] > 0, "no batch sheds at 2x capacity: %s" % b
+assert i["errors"] == 0 and i["shed"] == 0, \
+    "interactive work rejected/failed under overload: %s" % i
+p99 = i["ttft_p99_ms"]
+assert isinstance(p99, (int, float)) and math.isfinite(p99) and p99 >= 0, p99
+assert ol.get("sheds_missing_retry_after", 0) == 0, ol
+# post-run: the server must drain back to zero
+deadline = time.time() + 15
+while True:
+    s = json.load(urllib.request.urlopen(
+        "http://%s/stats" % sys.argv[2], timeout=5))
+    if (s["live"] == 0 and s["queued"] == 0
+            and s["kv_pages_allocated"] == 0):
+        break
+    assert time.time() < deadline, "server never drained: %s" % s
+    time.sleep(0.2)
+assert s["admission"]["shed_batch"] > 0, s["admission"]
+print("overload ok: %d/%d completed, %d shed (%d batch), %d timeouts, "
+      "interactive ttft p99 %.1f ms, server drained"
+      % (ol["completed"], ol["offered"], ol["shed"], b["shed"],
+         ol["timeouts"], p99))
+PYEOF
+                    then
+                        echo "overload smoke: gate passed"
+                    else
+                        echo "error: BENCH_overload.json failed the gate" >&2
+                        cat bench_out/BENCH_overload.json >&2 || true
+                        FAIL=1
+                    fi
+                else
+                    # no python3: compact-JSON spot checks (sheds
+                    # happened, nothing errored, percentiles finite)
+                    if grep -q '"open_loop":' bench_out/BENCH_overload.json \
+                       && grep -q '"errors":0' \
+                               bench_out/BENCH_overload.json \
+                       && ! grep -q '"shed":0,"timeouts"' \
+                               bench_out/BENCH_overload.json \
+                       && ! grep -qi 'nan\|inf' \
+                               bench_out/BENCH_overload.json; then
+                        echo "overload smoke: spot-checked (no python3)"
+                    else
+                        echo "error: BENCH_overload.json failed spot \
+checks" >&2
+                        cat bench_out/BENCH_overload.json >&2 || true
+                        FAIL=1
+                    fi
+                fi
+            else
+                echo "error: open-loop loadgen run failed" >&2
+                cat bench_out/serve_overload.log >&2 || true
+                FAIL=1
+            fi
+        else
+            echo "error: calibration loadgen run failed" >&2
+            cat bench_out/serve_overload.log >&2 || true
+            FAIL=1
+        fi
+        kill "$OSRV_PID" 2>/dev/null
+        trap - EXIT
+    else
+        echo "error: release build for the overload smoke failed" >&2
+        FAIL=1
+    fi
+fi
+
 if [ "$FAIL" -ne 0 ]; then
     echo "CI FAILED" >&2
     exit 1
